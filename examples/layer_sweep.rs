@@ -1,0 +1,103 @@
+//! Mixed-precision layer sweep: the run-time reconfigurability story
+//! (Section I: "adapting to the robustness of different layers").
+//!
+//! For each layer of a CNN-like stack, sweeps the Soft SIMD sub-word
+//! width, measuring (a) the quantization SQNR the width sustains and
+//! (b) the energy per multiply — then picks the cheapest width meeting
+//! a 20 dB target and shows the Stage-2 repack plan that stitches the
+//! chosen formats together at run time.
+//!
+//! Run: `cargo run --release --example layer_sweep`
+
+use softsimd::bits::format::{SimdFormat, FORMATS};
+use softsimd::energy::model::SynthesizedSoftPipeline;
+use softsimd::pipeline::stage2::{conversion_chain, repack_cycles};
+use softsimd::quant::sqnr_db;
+use softsimd::workload::synth::XorShift64;
+
+struct Layer {
+    name: &'static str,
+    mults: u64,
+    /// Activation distribution spread (σ of a clipped gaussian-ish mix).
+    spread: f64,
+}
+
+fn main() {
+    let layers = [
+        Layer { name: "conv1 (robust)", mults: 4096, spread: 0.6 },
+        Layer { name: "conv2", mults: 8192, spread: 0.35 },
+        Layer { name: "conv3", mults: 8192, spread: 0.2 },
+        Layer { name: "fc (sensitive)", mults: 1024, spread: 0.08 },
+    ];
+    let target_db = 20.0;
+    let mut pipe = SynthesizedSoftPipeline::new(1000.0);
+    let mut rng = XorShift64::new(0x5EEE);
+
+    // Characterize energy per width once.
+    let mut width_pj = vec![];
+    for &b in &FORMATS {
+        let pj = pipe.subword_mult_energy_pj(b, b, 150, &mut rng).unwrap();
+        width_pj.push((b, pj));
+    }
+    println!("energy per mult @1GHz: {width_pj:?}\n");
+
+    let mut chosen: Vec<u32> = vec![];
+    let mut total_pj = 0.0;
+    let mut uniform16_pj = 0.0;
+    println!(
+        "{:<16} {:>7} {:>9} {:>9} {:>10}",
+        "layer", "width", "SQNR dB", "pJ/mult", "layer nJ"
+    );
+    for layer in &layers {
+        // Synthesize an activation sample with the layer's spread.
+        let sample: Vec<f64> = (0..4000)
+            .map(|_| {
+                let u = rng.uniform() * 2.0 - 1.0;
+                (u * layer.spread * 3.0).clamp(-0.99, 0.99)
+            })
+            .collect();
+        let mut pick = 16u32;
+        for &b in &FORMATS {
+            if sqnr_db(&sample, b) >= target_db {
+                pick = b;
+                break;
+            }
+        }
+        let snr = sqnr_db(&sample, pick);
+        let pj = width_pj.iter().find(|&&(b, _)| b == pick).unwrap().1;
+        let pj16 = width_pj.iter().find(|&&(b, _)| b == 16).unwrap().1;
+        total_pj += pj * layer.mults as f64;
+        uniform16_pj += pj16 * layer.mults as f64;
+        println!(
+            "{:<16} {:>7} {:>9.1} {:>9.3} {:>10.2}",
+            layer.name,
+            format!("{pick}b"),
+            snr,
+            pj,
+            pj * layer.mults as f64 / 1000.0
+        );
+        chosen.push(pick);
+    }
+    println!(
+        "\nmixed-precision total: {:.2} nJ vs uniform-16b {:.2} nJ  ({:.1}% saved)",
+        total_pj / 1000.0,
+        uniform16_pj / 1000.0,
+        (1.0 - total_pj / uniform16_pj) * 100.0
+    );
+
+    // Show the Stage-2 plumbing between consecutive layers.
+    println!("\nStage-2 repack plan between layers (48 words of activations):");
+    for w in chosen.windows(2) {
+        let (a, b) = (SimdFormat::new(w[0]), SimdFormat::new(w[1]));
+        let chain = conversion_chain(a, b);
+        let cycles = repack_cycles(48, a, b);
+        println!(
+            "  {a} -> {b}: {} hop(s) {:?}, {cycles} crossbar cycles",
+            chain.len(),
+            chain
+                .iter()
+                .map(|(f, t)| format!("{}→{}", f.bits, t.bits))
+                .collect::<Vec<_>>(),
+        );
+    }
+}

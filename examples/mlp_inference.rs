@@ -1,0 +1,154 @@
+//! End-to-end driver (DESIGN.md §5): quantized MLP inference on the
+//! synthetic-digits workload, executed on the coordinator's PE array,
+//! cross-checked bit-exactly against the AOT JAX/Pallas artifact through
+//! PJRT, and priced against the Hard SIMD baselines.
+//!
+//! This is the "all layers compose" proof: L1 Pallas kernel → L2 JAX
+//! model → HLO text → PJRT execution (golden) vs L3 packed pipeline
+//! execution (system under test), on the same real workload.
+//!
+//! Run: `make artifacts && cargo run --release --example mlp_inference`
+
+use std::time::Instant;
+
+use softsimd::coordinator::cost::CostTable;
+use softsimd::coordinator::server::{Coordinator, Request};
+use softsimd::energy::model::SynthesizedSoftPipeline;
+use softsimd::hardsimd::pipeline::{HardSimdPipeline, HARD_FLEX, HARD_TWO};
+use softsimd::nn::exec::argmax_class;
+use softsimd::nn::weights::load_weight_file;
+use softsimd::runtime::Engine;
+use softsimd::workload::synth::{Digits, XorShift64};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Engine::default_dir();
+    anyhow::ensure!(
+        dir.join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    // ---- golden model via PJRT ------------------------------------
+    println!("[1/4] loading AOT artifacts via PJRT…");
+    let engine = Engine::load(&dir)?;
+    println!("      platform: {}", engine.platform());
+    let layers = load_weight_file(dir.join("mlp_weights.txt"))?;
+
+    let digits = Digits::standard();
+    let b = engine.manifest.mlp_batch;
+    let (xs, _ys) = digits.sample(b, 0.3, 0xBA7C4); // the golden batch
+    let flat: Vec<i32> = xs.iter().flatten().map(|&v| v as i32).collect();
+    let golden = engine.mlp_forward(&flat)?;
+
+    // ---- system under test: coordinator over packed pipelines -----
+    println!("[2/4] running the same batch on the packed PE array…");
+    let cost = CostTable::characterize(1000.0);
+    let mut coord = Coordinator::start(layers.clone(), 8, 16, 2, b, cost);
+    for (id, row) in xs.iter().enumerate() {
+        coord.submit(Request { id: id as u64, rows: vec![row.clone()] });
+    }
+    let responses = coord.drain();
+
+    let out_n = engine.manifest.mlp_out;
+    let mut mismatches = 0;
+    for resp in &responses {
+        let id = resp.id as usize;
+        let want: Vec<i64> = golden[id * out_n..(id + 1) * out_n]
+            .iter()
+            .map(|&v| v as i64)
+            .collect();
+        if resp.logits[0] != want {
+            mismatches += 1;
+            eprintln!("row {id}: rust {:?} != pjrt {:?}", resp.logits[0], want);
+        }
+    }
+    println!(
+        "      PJRT-vs-pipeline cross-check: {}",
+        if mismatches == 0 { "BIT-EXACT across all rows" } else { "MISMATCH" }
+    );
+    anyhow::ensure!(mismatches == 0, "{mismatches} rows diverged from the artifact");
+
+    // ---- a larger accuracy run ------------------------------------
+    println!("[3/4] serving a 512-image accuracy run…");
+    let (xl, yl) = digits.sample(512, 0.3, 0xACC);
+    let t0 = Instant::now();
+    for (id, row) in xl.iter().enumerate() {
+        coord.submit(Request { id: (1000 + id) as u64, rows: vec![row.clone()] });
+    }
+    let rs = coord.drain();
+    let wall = t0.elapsed();
+    let correct = rs
+        .iter()
+        .filter(|r| argmax_class(&r.logits[0], 10) == yl[(r.id - 1000) as usize])
+        .count();
+    println!(
+        "      quantized accuracy {:.1}% over 512 images ({:.0} req/s host)",
+        correct as f64 / 512.0 * 100.0,
+        512.0 / wall.as_secs_f64()
+    );
+    // Float matched-filter reference for the accuracy delta.
+    let float_correct = {
+        let w1: Vec<Vec<f64>> = layers[0]
+            .w_raw
+            .iter()
+            .map(|r| r.iter().map(|&v| v as f64 / 128.0).collect())
+            .collect();
+        let w2: Vec<Vec<f64>> = layers[1]
+            .w_raw
+            .iter()
+            .map(|r| r.iter().map(|&v| v as f64 / 128.0).collect())
+            .collect();
+        xl.iter()
+            .zip(&yl)
+            .filter(|(row, &y)| {
+                let x: Vec<f64> = row.iter().map(|&v| v as f64 / 128.0).collect();
+                let mut h = vec![0.0f64; layers[0].n];
+                for (k, &xv) in x.iter().enumerate() {
+                    for (j, hj) in h.iter_mut().enumerate() {
+                        *hj += xv * w1[k][j];
+                    }
+                }
+                let mut logits = vec![0.0f64; layers[1].n];
+                for (k, &hv) in h.iter().enumerate() {
+                    let hv = hv.max(0.0);
+                    for (j, lj) in logits.iter_mut().enumerate() {
+                        *lj += hv * w2[k][j];
+                    }
+                }
+                let pred = logits[..10]
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                pred == y
+            })
+            .count()
+    };
+    println!(
+        "      float reference accuracy {:.1}% (quantization delta {:.1} points)",
+        float_correct as f64 / 512.0 * 100.0,
+        (float_correct as f64 - correct as f64) / 512.0 * 100.0
+    );
+    println!("      {}", coord.metrics.report());
+
+    // ---- price the model on all three designs ---------------------
+    println!("[4/4] pricing one forward pass on the 28nm cost model @1GHz…");
+    let mut soft = SynthesizedSoftPipeline::new(1000.0);
+    let mut flex = HardSimdPipeline::new(HARD_FLEX, 1000.0);
+    let mut two = HardSimdPipeline::new(HARD_TWO, 1000.0);
+    let mut rng = XorShift64::new(7);
+    let mults_per_pass: u64 = layers.iter().map(|l| (l.k * l.n) as u64).sum();
+    let es = soft.subword_mult_energy_pj(8, 8, 200, &mut rng).unwrap();
+    let ef = flex.subword_mult_energy_pj(8, 8, 200, &mut rng).unwrap();
+    let e2 = two.subword_mult_energy_pj(8, 8, 200, &mut rng).unwrap();
+    println!(
+        "      {} mults/pass → Soft {:.2} nJ | Hard(4..16) {:.2} nJ | Hard(8,16) {:.2} nJ",
+        mults_per_pass,
+        es * mults_per_pass as f64 / 1000.0,
+        ef * mults_per_pass as f64 / 1000.0,
+        e2 * mults_per_pass as f64 / 1000.0,
+    );
+    coord.shutdown();
+    println!("OK");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Quickstart: the Soft SIMD pipeline in five minutes.
+//!
+//! Packs Q1.7 values into a 48-bit word, multiplies them all by one
+//! CSD-coded multiplier through the two-stage pipeline, repacks the
+//! products to 16-bit sub-words, and prices the whole thing with the
+//! 28nm cost model.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use softsimd::bits::{from_q, to_q, SimdFormat};
+use softsimd::csd::encode::{csd_encode, csd_string};
+use softsimd::csd::schedule::schedule;
+use softsimd::energy::model::SynthesizedSoftPipeline;
+use softsimd::isa::{assemble_mul_repack, Instr, Reg};
+use softsimd::pipeline::{PipelineSim, RunResult};
+use softsimd::workload::synth::XorShift64;
+
+fn main() {
+    // 1. Quantize six values to Q1.7 and pack them (8-bit sub-words).
+    let fmt = SimdFormat::new(8);
+    let values = [0.5f64, -0.25, 0.9, -0.75, 0.1, -0.05];
+    let raws: Vec<i64> = values.iter().map(|&v| to_q(v, 8)).collect();
+    let word = softsimd::bits::pack(&raws, fmt);
+    println!("packed {values:?}\n  -> raws {raws:?}\n  -> word {word:#014x}");
+
+    // 2. CSD-encode a multiplier and look at its cycle schedule.
+    let m = to_q(0.8984375, 8); // 115/128, the Fig. 3 multiplier
+    let digits = csd_encode(m, 8);
+    let plan = schedule(m, 8);
+    println!(
+        "multiplier {m} (binary {:08b}) -> CSD {} -> {} cycles ({} adds)",
+        m,
+        csd_string(&digits),
+        plan.cycles(),
+        plan.adds()
+    );
+
+    // 3. Run multiply-then-repack(8→16) as a micro-op program on the
+    //    cycle-accurate pipeline.
+    let mut prog = assemble_mul_repack(m, 8, fmt, SimdFormat::new(16), 3);
+    prog.instrs.insert(1, Instr::Load(Reg::X, word));
+    println!("\nprogram:\n{}", prog.disasm());
+    let mut sim = PipelineSim::new(fmt);
+    let mut res = RunResult::default();
+    sim.run(&prog, &mut res);
+    println!(
+        "elapsed {} cycles (stage1 {} / stage2 {})",
+        res.elapsed_cycles, res.s1_busy, res.s2_busy
+    );
+    for (i, out) in res.outputs.iter().enumerate() {
+        let lanes = softsimd::bits::unpack(*out, SimdFormat::new(16));
+        let vals: Vec<f64> = lanes.iter().map(|&l| from_q(l, 16)).collect();
+        println!("out[{i}] = {out:#014x} -> {vals:?}");
+    }
+    println!(
+        "expected  -> {:?}",
+        values.iter().map(|v| v * from_q(m, 8)).collect::<Vec<_>>()
+    );
+
+    // 4. Price it: synthesize the pipeline at 1 GHz and measure energy.
+    let mut pipe = SynthesizedSoftPipeline::new(1000.0);
+    let area = pipe.area();
+    println!(
+        "\n28nm @1GHz: area {:.0} µm² (stage1 {:.0} + stage2 {:.0} + regs {:.0})",
+        area.total(),
+        area.stage1_um2,
+        area.stage2_um2,
+        area.regs_um2
+    );
+    let mut rng = XorShift64::new(42);
+    let pj = pipe.subword_mult_energy_pj(8, 8, 200, &mut rng).unwrap();
+    println!("energy: {pj:.3} pJ per 8×8 sub-word multiplication");
+}

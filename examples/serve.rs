@@ -1,0 +1,75 @@
+//! Batched serving demo: drives the coordinator with a bursty open-loop
+//! request stream and reports latency percentiles and throughput — the
+//! serving-system view of the near-memory accelerator.
+//!
+//! Run: `make artifacts && cargo run --release --example serve [n_requests]`
+
+use std::time::Instant;
+
+use softsimd::coordinator::cost::CostTable;
+use softsimd::coordinator::server::{Coordinator, Request};
+use softsimd::nn::weights::load_weight_file;
+use softsimd::workload::synth::{Digits, XorShift64};
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1024);
+    let weights = std::path::Path::new("artifacts/mlp_weights.txt");
+    anyhow::ensure!(weights.exists(), "run `make artifacts` first");
+    let layers = load_weight_file(weights)?;
+    let cost = CostTable::characterize(1000.0);
+
+    println!("request stream: {n} requests, bursty arrivals, 4 PEs, batch target 12 rows");
+    let digits = Digits::standard();
+    let mut rng = XorShift64::new(0x5E2E);
+
+    let mut coord = Coordinator::start(layers, 8, 16, 4, 12, cost);
+    let mut latencies_us: Vec<f64> = Vec::with_capacity(n);
+    let t_start = Instant::now();
+    let mut submitted = 0u64;
+    let mut submit_times: Vec<Instant> = Vec::with_capacity(n);
+    while (submitted as usize) < n {
+        // Bursts of 1..8 requests.
+        let burst = 1 + (rng.next_u64() % 8) as usize;
+        for _ in 0..burst.min(n - submitted as usize) {
+            let (xs, _) = digits.sample(1, 0.3, 1 + submitted * 7919);
+            submit_times.push(Instant::now());
+            coord.submit(Request { id: submitted, rows: vec![xs[0].clone()] });
+            submitted += 1;
+        }
+        // Periodically drain to measure per-request latency.
+        if submitted % 64 == 0 || submitted as usize >= n {
+            for resp in coord.drain() {
+                let lat = submit_times[resp.id as usize].elapsed();
+                latencies_us.push(lat.as_secs_f64() * 1e6);
+            }
+        }
+    }
+    for resp in coord.drain() {
+        let lat = submit_times[resp.id as usize].elapsed();
+        latencies_us.push(lat.as_secs_f64() * 1e6);
+    }
+    let wall = t_start.elapsed();
+
+    latencies_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| latencies_us[(latencies_us.len() as f64 * p) as usize];
+    println!(
+        "served {} responses in {:.1} ms → {:.0} req/s",
+        latencies_us.len(),
+        wall.as_secs_f64() * 1e3,
+        latencies_us.len() as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency µs: p50={:.0} p90={:.0} p99={:.0} max={:.0}",
+        pct(0.50),
+        pct(0.90),
+        pct(0.99),
+        latencies_us.last().unwrap()
+    );
+    println!("{}", coord.metrics.report());
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,219 @@
+"""AOT compilation: lower the L2/L1 JAX graphs to HLO **text** and emit
+the cross-language golden vectors.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (all under `artifacts/`):
+  mul.hlo.txt      packed Soft SIMD multiply (Pallas kernel), u64[256]
+                   words × runtime digit plan × runtime format masks
+  mlp.hlo.txt      quantized MLP forward (Pallas layer kernels),
+                   int32[16, 64] → int32[16, 16]
+  golden.txt       cross-language golden vectors (swar / mul / repack / mlp)
+  mlp_weights.txt  per-layer raw Q1.7 weights for the Rust coordinator
+  manifest.txt     artifact shapes and metadata
+
+Run: `python -m compile.aot --out-dir ../artifacts` (from `python/`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import defs, model
+from .kernels import ref, softsimd
+
+MUL_WORDS = 256  # one MUL_BLOCK
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: default printing elides big literals as `constant({...})`,
+    # which the text parser silently reads back as zeros — the MLP's baked
+    # digit-plan tensors would vanish. Print full constants.
+    mod = xc._xla.HloModule.from_serialized_hlo_module_proto(
+        comp.as_serialized_hlo_module_proto()
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax 0.8 metadata carries attributes (source_end_line, …) the 0.5.1
+    # text parser rejects; strip it.
+    opts.print_metadata = False
+    return mod.to_string(opts)
+
+
+# --------------------------------------------------------------------------
+# Artifact 1: packed multiply
+# --------------------------------------------------------------------------
+
+
+def lower_mul() -> str:
+    def fn(x_words, shifts, signs, h_mask, l_mask):
+        return (softsimd.mul_packed_pallas(x_words, shifts, signs, h_mask, l_mask),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((MUL_WORDS,), jnp.uint64),
+        jax.ShapeDtypeStruct((defs.OPS_MAX,), jnp.int32),
+        jax.ShapeDtypeStruct((defs.OPS_MAX,), jnp.int32),
+        jax.ShapeDtypeStruct((1,), jnp.uint64),
+        jax.ShapeDtypeStruct((1,), jnp.uint64),
+    )
+    return to_hlo_text(lowered)
+
+
+# --------------------------------------------------------------------------
+# Artifact 2: MLP forward
+# --------------------------------------------------------------------------
+
+
+def lower_mlp(layers) -> str:
+    def fn(x_q):
+        return (model.mlp_forward_pallas(x_q, layers),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((model.BATCH, model.IN_DIM), jnp.int32)
+    )
+    return to_hlo_text(lowered)
+
+
+# --------------------------------------------------------------------------
+# Golden vectors
+# --------------------------------------------------------------------------
+
+
+def emit_golden(layers, path: str) -> None:
+    rng = model.XorShift(0x601D_E27A)
+    lines = []
+
+    def word(fmt: defs.SimdFormat) -> int:
+        return rng.next_u64() & defs.WORD_MASK
+
+    # SWAR primitive vectors (plain-int semantics from defs → rust must match).
+    import_ref_np = lambda w: jnp.asarray(np.uint64(w))
+    for fmt_bits in defs.FORMATS:
+        fmt = defs.SimdFormat(fmt_bits)
+        h, l = fmt.msb_mask, fmt.lsb_mask
+        for _ in range(20):
+            a, c = word(fmt), word(fmt)
+            add = int(ref.swar_add(import_ref_np(a), import_ref_np(c), jnp.uint64(h)))
+            sub = int(ref.swar_sub(import_ref_np(a), import_ref_np(c), jnp.uint64(h), jnp.uint64(l)))
+            lines.append(f"swar add {fmt_bits} {a:#x} {c:#x} 0 {add:#x}")
+            lines.append(f"swar sub {fmt_bits} {a:#x} {c:#x} 0 {sub:#x}")
+            for k in (1, 2, 3):
+                sar = int(ref.swar_sar(import_ref_np(a), k, jnp.uint64(h)))
+                asar = int(ref.swar_add_sar(import_ref_np(a), import_ref_np(c), k, jnp.uint64(h)))
+                ssar = int(ref.swar_sub_sar(import_ref_np(a), import_ref_np(c), k, jnp.uint64(h), jnp.uint64(l)))
+                lines.append(f"swar sar {fmt_bits} {a:#x} 0x0 {k} {sar:#x}")
+                lines.append(f"swar addsar {fmt_bits} {a:#x} {c:#x} {k} {asar:#x}")
+                lines.append(f"swar subsar {fmt_bits} {a:#x} {c:#x} {k} {ssar:#x}")
+
+    # Packed multiply vectors (per format × multiplier width).
+    for fmt_bits in defs.FORMATS:
+        fmt = defs.SimdFormat(fmt_bits)
+        for y_bits in (4, 8, fmt_bits):
+            half = 1 << (y_bits - 1)
+            for _ in range(30):
+                x = word(fmt)
+                m = defs.sign_extend(rng.next_u64(), y_bits)
+                out_lanes = [
+                    defs.mul_scalar(v, m, fmt_bits, y_bits) for v in defs.unpack(x, fmt)
+                ]
+                out = defs.pack(out_lanes, fmt)
+                lines.append(f"mul {fmt_bits} {y_bits} {m} {x:#x} {out:#x}")
+
+    # Repack vectors (all ordered format pairs).
+    for fb in defs.FORMATS:
+        for tb in defs.FORMATS:
+            if fb == tb:
+                continue
+            fmt = defs.SimdFormat(fb)
+            count = fmt.lanes * 2
+            vals = [defs.sign_extend(rng.next_u64(), fb) for _ in range(count)]
+            words = defs.pack_stream(vals, fmt)
+            out = defs.repack_stream(words, fb, tb, count)
+            iw = ",".join(f"{w:#x}" for w in words)
+            ow = ",".join(f"{w:#x}" for w in out)
+            lines.append(f"repack {fb} {tb} {count} {iw} {ow}")
+
+    # MLP vectors: the batch the artifact will be checked with.
+    templates = model.class_templates()
+    xs, ys = model.sample_batch(templates, model.BATCH)
+    x_q = model.quantize_inputs(xs)
+    logits = model.mlp_forward_int(x_q, layers)
+    for b in range(model.BATCH):
+        row_in = ",".join(str(int(v)) for v in x_q[b])
+        row_out = ",".join(str(int(v)) for v in logits[b])
+        lines.append(f"mlp_in {b} {row_in}")
+        lines.append(f"mlp_out {b} {row_out}")
+        lines.append(f"mlp_label {b} {int(ys[b])}")
+
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def emit_weights(layers, path: str) -> None:
+    with open(path, "w") as f:
+        for idx, layer in enumerate(layers):
+            k, n = layer.w_raw.shape
+            f.write(f"layer {idx} {k} {n}\n")
+            for i in range(k):
+                f.write(",".join(str(int(v)) for v in layer.w_raw[i]) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    layers = model.build_layers()
+
+    mul_hlo = lower_mul()
+    with open(os.path.join(args.out_dir, "mul.hlo.txt"), "w") as f:
+        f.write(mul_hlo)
+    print(f"mul.hlo.txt: {len(mul_hlo)} chars")
+
+    mlp_hlo = lower_mlp(layers)
+    with open(os.path.join(args.out_dir, "mlp.hlo.txt"), "w") as f:
+        f.write(mlp_hlo)
+    print(f"mlp.hlo.txt: {len(mlp_hlo)} chars")
+
+    emit_golden(layers, os.path.join(args.out_dir, "golden.txt"))
+    emit_weights(layers, os.path.join(args.out_dir, "mlp_weights.txt"))
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write(
+            "\n".join(
+                [
+                    f"mul_words={MUL_WORDS}",
+                    f"ops_max={defs.OPS_MAX}",
+                    f"mlp_batch={model.BATCH}",
+                    f"mlp_in={model.IN_DIM}",
+                    f"mlp_hidden={model.HIDDEN}",
+                    f"mlp_out={model.OUT_PAD}",
+                    f"mlp_classes={model.CLASSES}",
+                    f"in_bits={model.IN_BITS}",
+                    f"acc_bits={model.ACC_BITS}",
+                    "",
+                ]
+            )
+        )
+    print("golden.txt, mlp_weights.txt, manifest.txt written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,246 @@
+"""Pinned Soft SIMD semantics — Python mirror of `rust/src/{bits,csd}`.
+
+Every constant and algorithm here is bit-identical to the Rust side
+(DESIGN.md §4); the cross-language golden vectors emitted by `aot.py`
+hold both sides to it. Plain-int implementations only (host/build time).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+DATAPATH_BITS = 48
+WORD_MASK = (1 << DATAPATH_BITS) - 1
+FORMATS = (4, 6, 8, 12, 16)
+MAX_SHIFT = 3
+# Maximum multiply-plan length: a 16-bit multiplier retires ≤16 positions,
+# one op each in the worst (max_shift=1-equivalent) CSD layout, +1 slack.
+OPS_MAX = 17
+
+
+# --------------------------------------------------------------------------
+# Formats and masks
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SimdFormat:
+    bits: int
+
+    def __post_init__(self):
+        if self.bits not in FORMATS:
+            raise ValueError(f"unsupported sub-word width {self.bits}")
+
+    @property
+    def lanes(self) -> int:
+        return DATAPATH_BITS // self.bits
+
+    def repeat(self, pattern: int) -> int:
+        out = 0
+        for i in range(0, DATAPATH_BITS, self.bits):
+            out |= pattern << i
+        return out & WORD_MASK
+
+    @property
+    def msb_mask(self) -> int:
+        return self.repeat(1 << (self.bits - 1))
+
+    @property
+    def lsb_mask(self) -> int:
+        return self.repeat(1)
+
+    def keep_mask(self, k: int) -> int:
+        assert 1 <= k <= MAX_SHIFT < self.bits
+        return self.repeat((1 << (self.bits - k)) - 1)
+
+
+def sign_extend(x: int, bits: int) -> int:
+    x &= (1 << bits) - 1
+    if x & (1 << (bits - 1)):
+        x -= 1 << bits
+    return x
+
+
+def truncate(x: int, bits: int) -> int:
+    return x & ((1 << bits) - 1)
+
+
+def to_q(v: float, bits: int) -> int:
+    """Round-to-nearest (ties away from zero, matching Rust `f64::round`)
+    quantization to Q1.(bits-1), saturating."""
+    import math
+
+    half = 1 << (bits - 1)
+    s = v * half
+    q = int(math.floor(s + 0.5)) if s >= 0 else int(math.ceil(s - 0.5))
+    return max(-half, min(half - 1, q))
+
+
+def from_q(raw: int, bits: int) -> float:
+    return raw / (1 << (bits - 1))
+
+
+# --------------------------------------------------------------------------
+# Packing
+# --------------------------------------------------------------------------
+
+
+def pack(vals: List[int], fmt: SimdFormat) -> int:
+    assert len(vals) == fmt.lanes
+    w = 0
+    half = 1 << (fmt.bits - 1)
+    for i, v in enumerate(vals):
+        assert -half <= v < half, f"lane {i} value {v} out of range"
+        w |= truncate(v, fmt.bits) << (i * fmt.bits)
+    return w
+
+
+def unpack(word: int, fmt: SimdFormat) -> List[int]:
+    mask = (1 << fmt.bits) - 1
+    return [sign_extend((word >> (i * fmt.bits)) & mask, fmt.bits) for i in range(fmt.lanes)]
+
+
+def pack_stream(vals: List[int], fmt: SimdFormat) -> List[int]:
+    lanes = fmt.lanes
+    out = []
+    for i in range(0, len(vals), lanes):
+        chunk = list(vals[i : i + lanes])
+        chunk += [0] * (lanes - len(chunk))
+        out.append(pack(chunk, fmt))
+    return out
+
+
+def unpack_stream(words: List[int], fmt: SimdFormat, count: int) -> List[int]:
+    out: List[int] = []
+    for w in words:
+        out.extend(unpack(w, fmt))
+    return out[:count]
+
+
+# --------------------------------------------------------------------------
+# CSD encoding and multiply scheduling (mirror of rust/src/csd)
+# --------------------------------------------------------------------------
+
+
+def csd_encode(m_raw: int, y_bits: int) -> List[int]:
+    """MSB-first digits in {-1, 0, +1}; digits[j] has weight 2^-j."""
+    half = 1 << (y_bits - 1)
+    assert -half <= m_raw < half, f"multiplier {m_raw} out of Q1.{y_bits-1}"
+    m = m_raw
+    digits_lsb: List[int] = []
+    for _ in range(y_bits):
+        if m & 1 == 0:
+            digits_lsb.append(0)
+        else:
+            d = 1 if (m & 3) == 1 else -1
+            digits_lsb.append(d)
+            m -= d
+        m >>= 1
+    assert m == 0, f"CSD residual for {m_raw} @ {y_bits}"
+    return digits_lsb[::-1]
+
+
+def csd_decode(digits: List[int]) -> int:
+    n = len(digits)
+    return sum(d << (n - 1 - j) for j, d in enumerate(digits))
+
+
+def schedule(m_raw: int, y_bits: int, max_shift: int = MAX_SHIFT) -> List[Tuple[int, int]]:
+    """Cycle ops as (shift, sign) pairs, issue order.
+
+    sign ∈ {+1,-1}: fused `acc ← (acc ± X) >> shift` (shift=0 only for the
+    final weight-2^0 digit); sign = 0: pure `acc ← acc >> shift`.
+    """
+    digits = csd_encode(m_raw, y_bits)
+    nz = [(j, digits[j]) for j in range(y_bits - 1, -1, -1) if digits[j] != 0]
+    ops: List[Tuple[int, int]] = []
+    for idx, (j, sign) in enumerate(nz):
+        if j == 0:
+            ops.append((0, sign))
+            continue
+        t = nz[idx + 1][0] if idx + 1 < len(nz) else 0
+        dist = j - t
+        k = min(dist, max_shift)
+        ops.append((k, sign))
+        rem = dist - k
+        while rem > 0:
+            s = min(rem, max_shift)
+            ops.append((s, 0))
+            rem -= s
+    return ops
+
+
+def plan_arrays(m_raw: int, y_bits: int, ops_max: int = OPS_MAX) -> Tuple[List[int], List[int]]:
+    """Pad the schedule to fixed length for kernel consumption.
+
+    Padding entries are (0, 0) which the uniform op formula treats as
+    no-ops: `acc ← (acc + 0·X) >> 0`.
+    """
+    ops = schedule(m_raw, y_bits)
+    assert len(ops) <= ops_max, f"plan for {m_raw}@{y_bits} exceeds OPS_MAX"
+    shifts = [s for s, _ in ops] + [0] * (ops_max - len(ops))
+    signs = [g for _, g in ops] + [0] * (ops_max - len(ops))
+    return shifts, signs
+
+
+# --------------------------------------------------------------------------
+# Scalar multiply oracle (mirror of rust pipeline::stage1::mul_scalar)
+# --------------------------------------------------------------------------
+
+
+def mul_scalar(x_raw: int, m_raw: int, x_bits: int, y_bits: int) -> int:
+    acc = 0
+    for shift, sign in schedule(m_raw, y_bits):
+        acc = acc + sign * x_raw
+        acc >>= shift  # python ints: arithmetic shift, truncation toward −∞
+        acc = sign_extend(acc, x_bits)  # wrap (identity except final-add corner)
+    return acc
+
+
+# --------------------------------------------------------------------------
+# Repack semantics (mirror of rust pipeline::stage2)
+# --------------------------------------------------------------------------
+
+
+def convert_subword(v: int, from_bits: int, to_bits: int) -> int:
+    if to_bits >= from_bits:
+        return v << (to_bits - from_bits)
+    return v >> (from_bits - to_bits)
+
+
+def is_direct(from_bits: int, to_bits: int) -> bool:
+    return from_bits <= 2 * to_bits
+
+
+def conversion_chain(from_bits: int, to_bits: int) -> List[Tuple[int, int]]:
+    if from_bits == to_bits:
+        return []
+    if is_direct(from_bits, to_bits):
+        return [(from_bits, to_bits)]
+    # BFS over the supported widths (mirrors rust conversion_chain).
+    from collections import deque
+
+    prev = {from_bits: from_bits}
+    q = deque([from_bits])
+    while q:
+        b = q.popleft()
+        if b == to_bits:
+            break
+        for nb in FORMATS:
+            if nb != b and is_direct(b, nb) and nb not in prev:
+                prev[nb] = b
+                q.append(nb)
+    chain = []
+    cur = to_bits
+    while cur != from_bits:
+        chain.append((prev[cur], cur))
+        cur = prev[cur]
+    return chain[::-1]
+
+
+def repack_stream(words: List[int], from_bits: int, to_bits: int, count: int) -> List[int]:
+    vals = unpack_stream(words, SimdFormat(from_bits), count)
+    for f, t in conversion_chain(from_bits, to_bits):
+        vals = [convert_subword(v, f, t) for v in vals]
+    return pack_stream(vals, SimdFormat(to_bits))

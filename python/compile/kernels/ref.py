@@ -1,0 +1,209 @@
+"""Pure-jnp correctness oracle for the Soft SIMD kernels.
+
+Vectorized (non-Pallas) implementation of the packed Stage-1 datapath and
+of the scalar-semantics quantized layer. The Pallas kernels in
+`softsimd.py` must agree bit-exactly with these functions, which in turn
+mirror the plain-int semantics of `..defs` (hypothesis tests sweep both
+pivots).
+
+All packed words are `uint64` confined to the low 48 bits.
+"""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from .. import defs
+
+_WORD_MASK = defs.WORD_MASK  # python int: inlined at trace time (pallas cannot capture outer arrays)
+
+
+def _u64(x: int) -> jnp.ndarray:
+    return jnp.uint64(x)
+
+
+# --------------------------------------------------------------------------
+# SWAR primitives over uint64 words (vectorized over any leading shape)
+# --------------------------------------------------------------------------
+
+
+def swar_add(a, c, h):
+    """Per-sub-word add with carry kill at MSB-mask positions `h`."""
+    nh = (~h) & _WORD_MASK
+    return (((a & nh) + (c & nh)) ^ ((a ^ c) & h)) & _WORD_MASK
+
+
+def swar_neg(c, h, l):
+    """Per-sub-word negation: complement + LSB-mask injection."""
+    return swar_add((~c) & _WORD_MASK, l, h)
+
+
+def swar_sub(a, c, h, l):
+    return swar_add(a, swar_neg(c, h, l), h)
+
+
+def _keep_mask(h, k: int):
+    """keep_k = ~OR_{j<k}(h >> j), confined to the datapath."""
+    excl = jnp.zeros_like(h)
+    for j in range(k):
+        excl = excl | (h >> j)
+    return (~excl) & _WORD_MASK
+
+
+def swar_sar(a, k: int, h):
+    """Per-sub-word arithmetic shift right by static k ∈ {1..3}."""
+    assert 1 <= k <= defs.MAX_SHIFT
+    signs = a & h
+    fill = jnp.zeros_like(a)
+    for j in range(k):
+        fill = fill | (signs >> j)
+    return ((a >> k) & _keep_mask(h, k)) | fill
+
+
+def _fused_core(w, true_sign_bits, k: int, h):
+    if k == 0:
+        return w
+    fill = jnp.zeros_like(w)
+    for j in range(k):
+        fill = fill | (true_sign_bits >> j)
+    return ((w >> k) & _keep_mask(h, k)) | fill
+
+
+def swar_add_sar(a, c, k: int, h):
+    """Fused `(a + c) >>_arith k` with (b+1)-bit intermediate (static k)."""
+    w = swar_add(a, c, h)
+    ovf = (~(a ^ c)) & (a ^ w) & h
+    return _fused_core(w, (w & h) ^ ovf, k, h)
+
+
+def swar_sub_sar(a, c, k: int, h, l):
+    w = swar_sub(a, c, h, l)
+    ovf = (a ^ c) & (a ^ w) & h
+    return _fused_core(w, (w & h) ^ ovf, k, h)
+
+
+# --------------------------------------------------------------------------
+# Packed multiply: reference with *static* plan (host loop over ops)
+# --------------------------------------------------------------------------
+
+
+def mul_packed_ref(x_words, m_raw: int, y_bits: int, fmt_bits: int):
+    """Multiply every sub-word of each packed word by the scalar
+    multiplier `m_raw` — host-unrolled plan, static shifts."""
+    fmt = defs.SimdFormat(fmt_bits)
+    h = _u64(fmt.msb_mask)
+    l = _u64(fmt.lsb_mask)
+    acc = jnp.zeros_like(x_words)
+    for shift, sign in defs.schedule(m_raw, y_bits):
+        if sign > 0:
+            acc = swar_add_sar(acc, x_words, shift, h)
+        elif sign < 0:
+            acc = swar_sub_sar(acc, x_words, shift, h, l)
+        else:
+            acc = swar_sar(acc, shift, h)
+    return acc
+
+
+# --------------------------------------------------------------------------
+# Packed multiply: reference with *runtime* plan tensors — the exact
+# computation the AOT mul artifact performs (dynamic shift/sign selection).
+# --------------------------------------------------------------------------
+
+
+def dynamic_mul_step(acc, x_words, shift, sign, h, l):
+    """One uniform multiply cycle `acc ← (acc + sign·X) >>_wide shift`
+    with runtime `shift` ∈ 0..3 and `sign` ∈ {−1,0,+1} (branchless)."""
+    w_add = swar_add(acc, x_words, h)
+    ovf_a = (~(acc ^ x_words)) & (acc ^ w_add) & h
+    s_add = (w_add & h) ^ ovf_a
+    w_sub = swar_sub(acc, x_words, h, l)
+    ovf_s = (acc ^ x_words) & (acc ^ w_sub) & h
+    s_sub = (w_sub & h) ^ ovf_s
+    w = jnp.where(sign > 0, w_add, jnp.where(sign < 0, w_sub, acc))
+    sb = jnp.where(sign > 0, s_add, jnp.where(sign < 0, s_sub, acc & h))
+    out = w
+    for k in (1, 2, 3):
+        out = jnp.where(shift == k, _fused_core(w, sb, k, h), out)
+    return out
+
+
+def mul_packed_dynamic_ref(x_words, shifts, signs, h, l):
+    """`x_words: u64[N]`, `shifts: i32[OPS]` ∈ 0..3, `signs: i32[OPS]` ∈
+    {-1,0,1}; `h`, `l`: u64 scalar masks. Returns u64[N] products.
+
+    Padding entries (0, 0) are no-ops. This is the computation the AOT
+    `mul` artifact performs; the Pallas kernel must match it bit-exactly.
+    """
+
+    def step(acc, op):
+        shift, sign = op
+        return dynamic_mul_step(acc, x_words, shift, sign, h, l), None
+
+    acc0 = jnp.zeros_like(x_words)
+    acc, _ = jax.lax.scan(step, acc0, (shifts, signs))
+    return acc
+
+
+# --------------------------------------------------------------------------
+# Quantized layer (scalar semantics, vectorized): reference for the MLP
+# --------------------------------------------------------------------------
+
+
+def wrap_to(acc, bits: int):
+    """Two's-complement wrap of int32 values to `bits` bits."""
+    mask = jnp.int32((1 << bits) - 1)
+    half = jnp.int32(1 << (bits - 1))
+    w = acc & mask
+    return w - ((w & half) << 1)
+
+
+def layer_ref(x_q, shifts, signs, in_bits: int = 8, acc_bits: int = 16):
+    """One quantized linear layer with Soft SIMD multiply semantics.
+
+    x_q:    int32[M, K]    activations, Q1.(in_bits-1) raws
+    shifts: int32[K, N, O] per-weight plan shift amounts
+    signs:  int32[K, N, O] per-weight plan signs (−1/0/+1)
+    Returns int32[M, N] pre-activation accumulators, Q1.(acc_bits-1) raws.
+
+    Products are computed at `in_bits`, repacked (widened) to `acc_bits`
+    (exact: `<< (acc_bits − in_bits)`), and accumulated with wrapping
+    `acc_bits`-bit adds — the Stage-2 8→16 conversion of DESIGN.md §4.
+    """
+    O = shifts.shape[-1]
+    x = x_q[:, :, None].astype(jnp.int32)  # [M, K, 1]
+    acc0 = jnp.zeros(x_q.shape + (shifts.shape[1],), dtype=jnp.int32)  # [M,K,N]
+
+    def step(acc, o):
+        s = shifts[:, :, o][None, :, :]
+        g = signs[:, :, o][None, :, :]
+        a = acc + g * x
+        a = jnp.right_shift(a, s)
+        return wrap_to(a, in_bits), None
+
+    acc, _ = jax.lax.scan(step, acc0, jnp.arange(O))
+    prod_wide = acc << (acc_bits - in_bits)  # widen repack (exact)
+    total = jnp.sum(prod_wide, axis=1, dtype=jnp.int32)  # [M, N]
+    return wrap_to(total, acc_bits)
+
+
+def relu_requant_ref(acc16, out_bits: int = 8, acc_bits: int = 16):
+    """ReLU then narrow-repack (truncate) `acc_bits → out_bits`."""
+    r = jnp.maximum(acc16, 0)
+    return jnp.right_shift(r, acc_bits - out_bits)
+
+
+def mlp_ref(x_q, layer_plans):
+    """Full MLP forward; `layer_plans` = [(shifts, signs), ...]. Returns
+    int32[M, N_last] Q1.15 logits (no activation on the last layer)."""
+    h = x_q
+    for i, (shifts, signs) in enumerate(layer_plans):
+        acc = layer_ref(h, shifts, signs)
+        if i + 1 < len(layer_plans):
+            h = relu_requant_ref(acc)
+        else:
+            return acc
+    return h

@@ -1,0 +1,132 @@
+"""Pallas kernels — the Soft SIMD compute hot-spots (L1).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's ASIC
+bit-slice muxes and carry-kill gates become per-format *mask vectors*
+applied with lane-parallel bitwise ops; `BlockSpec` expresses the
+HBM↔VMEM schedule over blocks of packed words (multiples of 128 lanes
+for the VPU), and the digit plan — tiny and scalar — rides along in
+VMEM. `interpret=True` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU lowering is compile-only (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import defs
+from . import ref
+
+# Block of packed words processed per grid step: 2 VPU sublane-rows of
+# 128 lanes. The mul artifact's word count must be a multiple of this.
+MUL_BLOCK = 256
+
+
+def _mul_kernel(x_ref, shifts_ref, signs_ref, h_ref, l_ref, o_ref):
+    """Packed Soft SIMD multiply over one block of words.
+
+    x_ref: u64[B]  packed multiplicands        (VMEM block)
+    shifts_ref, signs_ref: i32[OPS]            (whole, VMEM)
+    h_ref, l_ref: u64[1]                       MSB / LSB masks (the V_x vector)
+    o_ref: u64[B] packed products
+    """
+    x = x_ref[...]
+    h = h_ref[0]
+    l = l_ref[0]
+    ops = shifts_ref.shape[0]
+
+    def body(o, acc):
+        return ref.dynamic_mul_step(acc, x, shifts_ref[o], signs_ref[o], h, l)
+
+    acc = jax.lax.fori_loop(0, ops, body, jnp.zeros_like(x))
+    o_ref[...] = acc
+
+
+def mul_packed_pallas(x_words, shifts, signs, h_mask, l_mask, block: int = MUL_BLOCK):
+    """Packed multiply of `x_words: u64[N]` (N a multiple of `block`) by
+    the runtime digit plan; `h_mask`/`l_mask` are u64[1] format masks."""
+    n = x_words.shape[0]
+    assert n % block == 0, f"word count {n} not a multiple of block {block}"
+    grid = (n // block,)
+    return pl.pallas_call(
+        _mul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(shifts.shape, lambda i: (0,)),
+            pl.BlockSpec(signs.shape, lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint64),
+        interpret=True,
+    )(x_words, shifts, signs, h_mask, l_mask)
+
+
+# --------------------------------------------------------------------------
+# Quantized layer kernel (scalar semantics, tiled over output neurons)
+# --------------------------------------------------------------------------
+
+LAYER_TILE_N = 8  # output-neuron tile per grid step
+
+
+def _layer_kernel(x_ref, shifts_ref, signs_ref, o_ref, *, in_bits: int, acc_bits: int):
+    """One tile of a quantized linear layer.
+
+    x_ref:      int32[M, K]        activations (whole, VMEM)
+    shifts_ref: int32[K, Tn, O]    plan tile
+    signs_ref:  int32[K, Tn, O]
+    o_ref:      int32[M, Tn]       pre-activation accumulators
+    """
+    x = x_ref[...][:, :, None]  # [M, K, 1]
+    ops = shifts_ref.shape[-1]
+    m, k = x_ref.shape
+    tn = shifts_ref.shape[1]
+    mask = jnp.int32((1 << in_bits) - 1)
+    half = jnp.int32(1 << (in_bits - 1))
+
+    def body(o, acc):
+        s = shifts_ref[:, :, o][None, :, :]
+        g = signs_ref[:, :, o][None, :, :]
+        a = acc + g * x
+        a = jnp.right_shift(a, s)
+        w = a & mask
+        return w - ((w & half) << 1)
+
+    acc = jax.lax.fori_loop(0, ops, body, jnp.zeros((m, k, tn), jnp.int32))
+    prod_wide = acc << (acc_bits - in_bits)
+    total = jnp.sum(prod_wide, axis=1, dtype=jnp.int32)
+    wmask = jnp.int32((1 << acc_bits) - 1)
+    whalf = jnp.int32(1 << (acc_bits - 1))
+    tw = total & wmask
+    o_ref[...] = tw - ((tw & whalf) << 1)
+
+
+def layer_pallas(x_q, shifts, signs, in_bits: int = 8, acc_bits: int = 16,
+                 tile_n: int = LAYER_TILE_N):
+    """Quantized linear layer on the Soft SIMD multiply semantics,
+    tiled over output neurons. Must match `ref.layer_ref` bit-exactly."""
+    m, k = x_q.shape
+    k2, n, ops = shifts.shape
+    assert k == k2 and signs.shape == shifts.shape
+    assert n % tile_n == 0, f"N={n} not a multiple of tile {tile_n}"
+    kern = functools.partial(_layer_kernel, in_bits=in_bits, acc_bits=acc_bits)
+    return pl.pallas_call(
+        kern,
+        grid=(n // tile_n,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, tile_n, ops), lambda i: (0, i, 0)),
+            pl.BlockSpec((k, tile_n, ops), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, tile_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(x_q, shifts, signs)

@@ -1,0 +1,155 @@
+"""Property tests for the pinned plain-int semantics (`compile.defs`)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import defs
+
+FORMATS = list(defs.FORMATS)
+
+
+def q_range(bits):
+    half = 1 << (bits - 1)
+    return st.integers(min_value=-half, max_value=half - 1)
+
+
+class TestCsd:
+    @given(st.sampled_from([4, 6, 8, 12, 16]), st.data())
+    @settings(max_examples=300)
+    def test_roundtrip(self, y, data):
+        m = data.draw(q_range(y))
+        d = defs.csd_encode(m, y)
+        assert len(d) == y
+        assert defs.csd_decode(d) == m
+
+    @given(st.sampled_from([4, 6, 8, 12, 16]), st.data())
+    @settings(max_examples=300)
+    def test_no_adjacent_nonzeros(self, y, data):
+        m = data.draw(q_range(y))
+        d = defs.csd_encode(m, y)
+        for a, b in zip(d, d[1:]):
+            assert a == 0 or b == 0
+
+    def test_paper_example(self):
+        # "0-01" = −4 + 1 = −3.
+        assert defs.csd_encode(-3, 4) == [0, -1, 0, 1]
+
+    @given(st.sampled_from([4, 8, 16]), st.data())
+    @settings(max_examples=300)
+    def test_zero_density_reasonable(self, y, data):
+        m = data.draw(q_range(y))
+        d = defs.csd_encode(m, y)
+        nz = sum(1 for x in d if x != 0)
+        assert nz <= math.ceil((y + 1) / 2)
+
+
+class TestSchedule:
+    @given(st.sampled_from([4, 6, 8, 12, 16]), st.data())
+    @settings(max_examples=400)
+    def test_exact_product_with_headroom(self, y, data):
+        """Replaying the plan on a multiplicand with enough trailing
+        zero bits must compute x·m exactly."""
+        m = data.draw(q_range(y))
+        x = 7919 << 32
+        acc = 0
+        for shift, sign in defs.schedule(m, y):
+            acc = (acc + sign * x) >> shift
+        assert acc == (x * m) >> (y - 1)
+
+    @given(st.sampled_from([4, 8, 16]), st.data())
+    @settings(max_examples=300)
+    def test_plan_shape_constraints(self, y, data):
+        m = data.draw(q_range(y))
+        ops = defs.schedule(m, y)
+        assert len(ops) <= defs.OPS_MAX
+        for i, (shift, sign) in enumerate(ops):
+            assert 0 <= shift <= defs.MAX_SHIFT
+            assert sign in (-1, 0, 1)
+            if shift == 0:
+                assert sign != 0 and i == len(ops) - 1
+            if sign == 0:
+                assert shift >= 1
+
+    def test_zero_multiplier_free(self):
+        assert defs.schedule(0, 8) == []
+
+    def test_minus_one_single_add(self):
+        assert defs.schedule(-128, 8) == [(0, -1)]
+
+
+class TestMulScalar:
+    @given(st.sampled_from(FORMATS), st.data())
+    @settings(max_examples=500)
+    def test_accuracy_bound(self, bits, data):
+        """Truncation error ≤ (#ops) ULPs; paper cites ~1% at 8 bits."""
+        x = data.draw(q_range(bits))
+        m = data.draw(q_range(bits))
+        if x == -(1 << (bits - 1)) and m == -(1 << (bits - 1)):
+            return  # −1 × −1 wrap corner
+        got = defs.mul_scalar(x, m, bits, bits)
+        truth = defs.from_q(x, bits) * defs.from_q(m, bits)
+        nops = max(1, len(defs.schedule(m, bits)))
+        assert abs(defs.from_q(got, bits) - truth) <= (nops + 1) * 2 ** -(bits - 1)
+
+    def test_known_values(self):
+        # 0.5 × 0.5 = 0.25 exactly at 8 bits.
+        assert defs.mul_scalar(64, 64, 8, 8) == 32
+        # x × −1 = −x (away from the wrap corner).
+        assert defs.mul_scalar(100, -128, 8, 8) == -100
+        # x × 0 = 0 (empty plan).
+        assert defs.mul_scalar(-77, 0, 8, 8) == 0
+
+
+class TestPack:
+    @given(st.sampled_from(FORMATS), st.data())
+    @settings(max_examples=200)
+    def test_roundtrip(self, bits, data):
+        fmt = defs.SimdFormat(bits)
+        vals = [data.draw(q_range(bits)) for _ in range(fmt.lanes)]
+        assert defs.unpack(defs.pack(vals, fmt), fmt) == vals
+
+    @given(st.sampled_from(FORMATS), st.integers(1, 40), st.data())
+    @settings(max_examples=100)
+    def test_stream_roundtrip(self, bits, count, data):
+        fmt = defs.SimdFormat(bits)
+        vals = [data.draw(q_range(bits)) for _ in range(count)]
+        words = defs.pack_stream(vals, fmt)
+        assert defs.unpack_stream(words, fmt, count) == vals
+
+
+class TestRepack:
+    @given(st.sampled_from(FORMATS), st.sampled_from(FORMATS), st.data())
+    @settings(max_examples=150)
+    def test_widen_narrow_roundtrip(self, a, b, data):
+        if a >= b:
+            return
+        fa = defs.SimdFormat(a)
+        count = fa.lanes
+        vals = [data.draw(q_range(a)) for _ in range(count)]
+        words = defs.pack_stream(vals, fa)
+        wide = defs.repack_stream(words, a, b, count)
+        back = defs.repack_stream(wide, b, a, count)
+        assert defs.unpack_stream(back, fa, count) == vals
+
+    def test_chain_for_16_to_4(self):
+        assert defs.conversion_chain(16, 4) == [(16, 8), (8, 4)]
+
+    @given(st.sampled_from(FORMATS), st.sampled_from(FORMATS))
+    def test_chain_hops_direct(self, a, b):
+        for f, t in defs.conversion_chain(a, b):
+            assert defs.is_direct(f, t)
+
+
+class TestQuant:
+    @given(st.floats(min_value=-0.999, max_value=0.93), st.sampled_from(FORMATS))
+    @settings(max_examples=300)
+    def test_roundtrip_error_half_ulp(self, v, bits):
+        q = defs.to_q(v, bits)
+        assert abs(defs.from_q(q, bits) - v) <= 2 ** -(bits - 1) / 2 + 1e-12
+
+    def test_saturation(self):
+        assert defs.to_q(1.5, 8) == 127
+        assert defs.to_q(-7.0, 8) == -128

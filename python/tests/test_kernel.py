@@ -1,0 +1,104 @@
+"""Pallas kernels vs the pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps formats, multiplier widths, word counts and layer
+shapes; every comparison is bit-exact (`array_equal`, not allclose:
+the semantics are integer).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import defs
+from compile.kernels import ref, softsimd
+
+FORMATS = list(defs.FORMATS)
+words = st.integers(min_value=0, max_value=defs.WORD_MASK)
+
+
+def u64s(x):
+    return jnp.asarray(np.asarray(x, dtype=np.uint64))
+
+
+class TestMulKernel:
+    @given(st.sampled_from(FORMATS), st.data())
+    @settings(max_examples=25, deadline=None)
+    def test_matches_dynamic_ref(self, bits, data):
+        fmt = defs.SimdFormat(bits)
+        y = data.draw(st.sampled_from([4, 8, bits]))
+        half = 1 << (y - 1)
+        m = data.draw(st.integers(-half, half - 1))
+        n_words = softsimd.MUL_BLOCK * data.draw(st.sampled_from([1, 2]))
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+        ws = rng.integers(0, defs.WORD_MASK, size=n_words, dtype=np.uint64)
+        shifts, signs = defs.plan_arrays(m, y)
+        shifts = jnp.asarray(np.array(shifts, dtype=np.int32))
+        signs = jnp.asarray(np.array(signs, dtype=np.int32))
+        h = u64s([fmt.msb_mask])
+        l = u64s([fmt.lsb_mask])
+        got = softsimd.mul_packed_pallas(u64s(ws), shifts, signs, h, l)
+        want = ref.mul_packed_dynamic_ref(u64s(ws), shifts, signs, h[0], l[0])
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+    def test_scalar_pivot_once(self):
+        """One direct kernel-vs-plain-int check (end of the pivot chain)."""
+        fmt = defs.SimdFormat(8)
+        m, y = 115, 8
+        vals = list(range(-128, 128)) + [0] * (softsimd.MUL_BLOCK * 6 - 256)
+        ws = defs.pack_stream(vals, fmt)
+        shifts, signs = defs.plan_arrays(m, y)
+        got = softsimd.mul_packed_pallas(
+            u64s(ws),
+            jnp.asarray(np.array(shifts, dtype=np.int32)),
+            jnp.asarray(np.array(signs, dtype=np.int32)),
+            u64s([fmt.msb_mask]),
+            u64s([fmt.lsb_mask]),
+        )
+        got_lanes = defs.unpack_stream([int(w) for w in np.asarray(got)], fmt, len(vals))
+        for v, g in zip(vals, got_lanes):
+            assert g == defs.mul_scalar(v, m, 8, y), v
+
+
+class TestLayerKernel:
+    @given(st.data())
+    @settings(max_examples=15, deadline=None)
+    def test_matches_layer_ref(self, data):
+        M = data.draw(st.sampled_from([1, 4, 16]))
+        K = data.draw(st.sampled_from([8, 64]))
+        N = data.draw(st.sampled_from([8, 16, 32]))
+        seed = data.draw(st.integers(0, 2**31))
+        rng = np.random.default_rng(seed)
+        x = rng.integers(-128, 128, size=(M, K), dtype=np.int64).astype(np.int32)
+        w = rng.integers(-128, 128, size=(K, N), dtype=np.int64)
+        shifts = np.zeros((K, N, defs.OPS_MAX), dtype=np.int32)
+        signs = np.zeros((K, N, defs.OPS_MAX), dtype=np.int32)
+        for i in range(K):
+            for j in range(N):
+                s, g = defs.plan_arrays(int(w[i, j]), 8)
+                shifts[i, j], signs[i, j] = s, g
+        got = softsimd.layer_pallas(jnp.asarray(x), jnp.asarray(shifts), jnp.asarray(signs))
+        want = ref.layer_ref(jnp.asarray(x), jnp.asarray(shifts), jnp.asarray(signs))
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+    def test_tile_boundaries_exact(self):
+        """Neuron tiles must not bleed into each other."""
+        M, K, N = 2, 4, 16
+        x = np.full((M, K), 100, dtype=np.int32)
+        w = np.zeros((K, N), dtype=np.int64)
+        w[:, 0] = 127
+        w[:, N - 1] = -128
+        shifts = np.zeros((K, N, defs.OPS_MAX), dtype=np.int32)
+        signs = np.zeros((K, N, defs.OPS_MAX), dtype=np.int32)
+        for i in range(K):
+            for j in range(N):
+                s, g = defs.plan_arrays(int(w[i, j]), 8)
+                shifts[i, j], signs[i, j] = s, g
+        got = np.asarray(
+            softsimd.layer_pallas(jnp.asarray(x), jnp.asarray(shifts), jnp.asarray(signs))
+        )
+        want = np.asarray(
+            ref.layer_ref(jnp.asarray(x), jnp.asarray(shifts), jnp.asarray(signs))
+        )
+        assert np.array_equal(got, want)
+        assert (got[:, 1 : N - 1] == 0).all()

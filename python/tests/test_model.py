@@ -1,0 +1,85 @@
+"""MLP golden model: pivot chain pallas == jnp ref == plain-int, plus
+task accuracy and float-agreement sanity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import defs, model
+
+
+@pytest.fixture(scope="module")
+def layers():
+    return model.build_layers()
+
+
+@pytest.fixture(scope="module")
+def batch():
+    templates = model.class_templates()
+    xs, ys = model.sample_batch(templates, model.BATCH)
+    return model.quantize_inputs(xs), ys, xs
+
+
+class TestPivotChain:
+    def test_ref_matches_int(self, layers, batch):
+        x_q, _, _ = batch
+        got = np.asarray(model.mlp_forward_ref(jnp.asarray(x_q), layers))
+        want = model.mlp_forward_int(x_q, layers)
+        assert np.array_equal(got, want.astype(np.int32))
+
+    def test_pallas_matches_ref(self, layers, batch):
+        x_q, _, _ = batch
+        got = np.asarray(model.mlp_forward_pallas(jnp.asarray(x_q), layers))
+        want = np.asarray(model.mlp_forward_ref(jnp.asarray(x_q), layers))
+        assert np.array_equal(got, want)
+
+
+class TestTask:
+    def test_classifier_beats_chance(self, layers):
+        templates = model.class_templates()
+        xs, ys = model.sample_batch(templates, 64, seed=0xFEED5)
+        x_q = model.quantize_inputs(xs)
+        logits = np.asarray(model.mlp_forward_ref(jnp.asarray(x_q), layers))
+        pred = logits[:, : model.CLASSES].argmax(axis=1)
+        acc = (pred == ys).mean()
+        assert acc >= 0.5, f"matched-filter accuracy {acc} (chance = 0.1)"
+
+    def test_padded_outputs_are_zero_weighted(self, layers):
+        w2 = layers[1].w_raw
+        assert (w2[:, model.CLASSES :] == 0).all()
+
+    def test_quantized_tracks_float(self, layers, batch):
+        """Quantized logits correlate with the float matched filter."""
+        x_q, _, xs = batch
+        logits = np.asarray(model.mlp_forward_ref(jnp.asarray(x_q), layers)).astype(
+            np.float64
+        ) / (1 << 15)
+        # Float model with the same (dequantized) weights.
+        w1 = layers[0].w_raw.astype(np.float64) / 128.0
+        w2 = layers[1].w_raw.astype(np.float64) / 128.0
+        h = np.maximum(xs @ w1, 0.0)
+        ref_logits = h @ w2
+        # Compare rankings on the real classes.
+        a = logits[:, : model.CLASSES]
+        b = ref_logits[:, : model.CLASSES]
+        corr = np.corrcoef(a.ravel(), b.ravel())[0, 1]
+        assert corr > 0.9, f"quantized/float correlation {corr}"
+
+
+class TestWeights:
+    def test_plans_reconstruct_weights(self, layers):
+        """Digit plans must decode back to the quantized weights."""
+        for layer in layers:
+            k, n = layer.w_raw.shape
+            for i in range(0, k, 7):
+                for j in range(n):
+                    ops = [
+                        (int(s), int(g))
+                        for s, g in zip(layer.shifts[i, j], layer.signs[i, j])
+                    ]
+                    # Replay on a headroom multiplicand: exact product.
+                    x = 1 << 32
+                    acc = 0
+                    for shift, sign in ops:
+                        acc = (acc + sign * x) >> shift
+                    assert acc == (x * int(layer.w_raw[i, j])) >> 7

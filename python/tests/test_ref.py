@@ -1,0 +1,150 @@
+"""jnp SWAR reference vs the plain-int pinned semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import defs
+from compile.kernels import ref
+
+FORMATS = list(defs.FORMATS)
+words = st.integers(min_value=0, max_value=defs.WORD_MASK)
+
+
+def u64(x):
+    return jnp.asarray(np.uint64(x))
+
+
+def lanes(word, bits):
+    return defs.unpack(word, defs.SimdFormat(bits))
+
+
+def wrap(v, bits):
+    return defs.sign_extend(v, bits)
+
+
+class TestSwarVsInt:
+    @given(st.sampled_from(FORMATS), words, words)
+    @settings(max_examples=300, deadline=None)
+    def test_add(self, bits, a, c):
+        fmt = defs.SimdFormat(bits)
+        got = int(ref.swar_add(u64(a), u64(c), u64(fmt.msb_mask)))
+        want = defs.pack(
+            [wrap(x + y, bits) for x, y in zip(lanes(a, bits), lanes(c, bits))], fmt
+        )
+        assert got == want
+
+    @given(st.sampled_from(FORMATS), words, words)
+    @settings(max_examples=300, deadline=None)
+    def test_sub(self, bits, a, c):
+        fmt = defs.SimdFormat(bits)
+        got = int(ref.swar_sub(u64(a), u64(c), u64(fmt.msb_mask), u64(fmt.lsb_mask)))
+        want = defs.pack(
+            [wrap(x - y, bits) for x, y in zip(lanes(a, bits), lanes(c, bits))], fmt
+        )
+        assert got == want
+
+    @given(st.sampled_from(FORMATS), words, st.integers(1, 3))
+    @settings(max_examples=300, deadline=None)
+    def test_sar(self, bits, a, k):
+        fmt = defs.SimdFormat(bits)
+        got = int(ref.swar_sar(u64(a), k, u64(fmt.msb_mask)))
+        want = defs.pack([x >> k for x in lanes(a, bits)], fmt)
+        assert got == want
+
+    @given(st.sampled_from(FORMATS), words, words, st.integers(0, 3))
+    @settings(max_examples=400, deadline=None)
+    def test_fused_add_sar(self, bits, a, c, k):
+        fmt = defs.SimdFormat(bits)
+        got = int(ref.swar_add_sar(u64(a), u64(c), k, u64(fmt.msb_mask)))
+        if k == 0:
+            want = defs.pack(
+                [wrap(x + y, bits) for x, y in zip(lanes(a, bits), lanes(c, bits))], fmt
+            )
+        else:
+            # (b+1)-bit sum, then arithmetic shift — exact in python ints.
+            want = defs.pack(
+                [(x + y) >> k for x, y in zip(lanes(a, bits), lanes(c, bits))], fmt
+            )
+        assert got == want
+
+    @given(st.sampled_from(FORMATS), words, words, st.integers(0, 3))
+    @settings(max_examples=400, deadline=None)
+    def test_fused_sub_sar(self, bits, a, c, k):
+        fmt = defs.SimdFormat(bits)
+        got = int(
+            ref.swar_sub_sar(u64(a), u64(c), k, u64(fmt.msb_mask), u64(fmt.lsb_mask))
+        )
+        if k == 0:
+            want = defs.pack(
+                [wrap(x - y, bits) for x, y in zip(lanes(a, bits), lanes(c, bits))], fmt
+            )
+        else:
+            want = defs.pack(
+                [(x - y) >> k for x, y in zip(lanes(a, bits), lanes(c, bits))], fmt
+            )
+        assert got == want
+
+
+class TestMulPackedRef:
+    @given(st.sampled_from(FORMATS), st.data())
+    @settings(max_examples=150, deadline=None)
+    def test_static_matches_scalar_oracle(self, bits, data):
+        fmt = defs.SimdFormat(bits)
+        y = data.draw(st.sampled_from([4, 8, bits]))
+        half = 1 << (y - 1)
+        m = data.draw(st.integers(-half, half - 1))
+        ws = [data.draw(words) for _ in range(4)]
+        got = ref.mul_packed_ref(jnp.asarray(np.array(ws, dtype=np.uint64)), m, y, bits)
+        for wi, w in enumerate(ws):
+            want = [defs.mul_scalar(v, m, bits, y) for v in lanes(w, bits)]
+            assert lanes(int(got[wi]), bits) == want
+
+    @given(st.sampled_from(FORMATS), st.data())
+    @settings(max_examples=150, deadline=None)
+    def test_dynamic_matches_static(self, bits, data):
+        fmt = defs.SimdFormat(bits)
+        y = data.draw(st.sampled_from([4, 8, bits]))
+        half = 1 << (y - 1)
+        m = data.draw(st.integers(-half, half - 1))
+        ws = np.array([data.draw(words) for _ in range(4)], dtype=np.uint64)
+        shifts, signs = defs.plan_arrays(m, y)
+        got = ref.mul_packed_dynamic_ref(
+            jnp.asarray(ws),
+            jnp.asarray(np.array(shifts, dtype=np.int32)),
+            jnp.asarray(np.array(signs, dtype=np.int32)),
+            u64(fmt.msb_mask),
+            u64(fmt.lsb_mask),
+        )
+        want = ref.mul_packed_ref(jnp.asarray(ws), m, y, bits)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestLayerRef:
+    @given(st.data())
+    @settings(max_examples=40, deadline=None)
+    def test_layer_matches_scalar_semantics(self, data):
+        M, K, N = 3, 5, 4
+        x = np.array(
+            [[data.draw(st.integers(-128, 127)) for _ in range(K)] for _ in range(M)],
+            dtype=np.int32,
+        )
+        w = np.array(
+            [[data.draw(st.integers(-128, 127)) for _ in range(N)] for _ in range(K)],
+            dtype=np.int64,
+        )
+        shifts = np.zeros((K, N, defs.OPS_MAX), dtype=np.int32)
+        signs = np.zeros((K, N, defs.OPS_MAX), dtype=np.int32)
+        for i in range(K):
+            for j in range(N):
+                s, g = defs.plan_arrays(int(w[i, j]), 8)
+                shifts[i, j], signs[i, j] = s, g
+        got = np.asarray(ref.layer_ref(jnp.asarray(x), jnp.asarray(shifts), jnp.asarray(signs)))
+        for b in range(M):
+            for j in range(N):
+                acc = 0
+                for i in range(K):
+                    p = defs.mul_scalar(int(x[b, i]), int(w[i, j]), 8, 8)
+                    acc += p << 8
+                assert got[b, j] == defs.sign_extend(acc, 16), (b, j)

@@ -1,0 +1,47 @@
+//! Minimal benchmark harness (criterion is unavailable offline; see
+//! Cargo.toml). Measures median-of-runs wall time with warmup, reports
+//! ns/iter and derived throughput.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub ns_per_iter: f64,
+    pub iters: u64,
+}
+
+/// Time `f` adaptively: warm up, then pick an iteration count that runs
+/// ≥ `min_ms` per sample, take the median of 5 samples.
+pub fn bench<F: FnMut()>(name: &str, min_ms: u64, mut f: F) -> BenchResult {
+    // Warmup.
+    for _ in 0..3 {
+        f();
+    }
+    // Calibrate.
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().as_nanos().max(1) as u64;
+    let iters = ((min_ms * 1_000_000) / one).clamp(1, 1_000_000);
+    let mut samples = vec![];
+    for _ in 0..5 {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let ns = samples[2];
+    println!("{name:<48} {ns:>12.1} ns/iter   ({iters} iters/sample)");
+    BenchResult { name: name.to_string(), ns_per_iter: ns, iters }
+}
+
+/// Report a throughput line derived from a result.
+pub fn throughput(r: &BenchResult, units_per_iter: f64, unit: &str) {
+    let per_sec = units_per_iter / (r.ns_per_iter * 1e-9);
+    println!(
+        "{:<48} {:>12.2} M{unit}/s",
+        format!("  -> {}", r.name),
+        per_sec / 1e6
+    );
+}

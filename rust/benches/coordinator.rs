@@ -1,0 +1,59 @@
+//! Coordinator serving benchmarks: packed-engine layer throughput and
+//! the full submit→batch→PE→drain loop.
+
+#[path = "benchkit.rs"]
+mod benchkit;
+use benchkit::{bench, throughput};
+
+use softsimd::coordinator::cost::CostTable;
+use softsimd::coordinator::engine::PackedMlpEngine;
+use softsimd::coordinator::server::{Coordinator, Request};
+use softsimd::nn::weights::QuantLayer;
+use softsimd::workload::synth::XorShift64;
+
+fn model(rng: &mut XorShift64) -> Vec<QuantLayer> {
+    let mk = |k: usize, n: usize, rng: &mut XorShift64| {
+        QuantLayer::new(
+            (0..k).map(|_| (0..n).map(|_| rng.q_raw(8)).collect()).collect(),
+            8,
+        )
+    };
+    vec![mk(64, 32, rng), mk(32, 16, rng)]
+}
+
+fn main() {
+    println!("== coordinator: packed NN serving ==");
+    let mut rng = XorShift64::new(0xC0BE);
+    let layers = model(&mut rng);
+    let mults_per_row: u64 = layers.iter().map(|l| (l.k * l.n) as u64).sum();
+
+    // Engine-only: packed forward of a 12-row batch.
+    let engine = PackedMlpEngine::new(layers.clone(), 8, 16);
+    let batch: Vec<Vec<i64>> = (0..12)
+        .map(|_| (0..64).map(|_| rng.q_raw(8)).collect())
+        .collect();
+    let r = bench("PackedMlpEngine forward (12-row batch)", 60, || {
+        std::hint::black_box(engine.forward_batch(&batch));
+    });
+    throughput(&r, (12 * mults_per_row) as f64, "subword-mults");
+
+    // Full coordinator loop, 2 PEs.
+    let cost = CostTable {
+        mhz: 1000.0,
+        s1_cycle_pj: softsimd::bits::format::FORMATS.iter().map(|&b| (b, 1.0)).collect(),
+        s2_pass_pj: 0.5,
+        area_um2: 4600.0,
+    };
+    let rows: Vec<Vec<i64>> = (0..96)
+        .map(|_| (0..64).map(|_| rng.q_raw(8)).collect())
+        .collect();
+    let r = bench("coordinator submit+drain (96 requests, 2 PEs)", 120, || {
+        let mut coord = Coordinator::start(layers.clone(), 8, 16, 2, 12, cost.clone());
+        for (id, row) in rows.iter().enumerate() {
+            coord.submit(Request { id: id as u64, rows: vec![row.clone()] });
+        }
+        std::hint::black_box(coord.drain());
+        coord.shutdown();
+    });
+    throughput(&r, (96 * mults_per_row) as f64, "subword-mults");
+}

@@ -1,0 +1,30 @@
+//! End-to-end benchmark per paper table/figure: times each harness so
+//! regressions in the evaluation path are visible, then prints the
+//! figure output itself (captured in bench_output.txt at release time).
+
+#[path = "benchkit.rs"]
+mod benchkit;
+use benchkit::bench;
+
+fn main() {
+    println!("== figures: one end-to-end benchmark per paper figure ==");
+    // Area harnesses build netlists; energy harnesses run gate-level
+    // workloads. min_ms=1 → effectively time one full regeneration.
+    bench("fig6 (area vs timing constraint)", 1, || {
+        std::hint::black_box(softsimd::eval::fig6::areas());
+    });
+    bench("fig8 (energy, 3 configs × 3 constraints)", 1, || {
+        std::hint::black_box(softsimd::eval::fig8::points());
+    });
+    bench("fig9 (gain grids, 13×4 sweep × 2 baselines)", 1, || {
+        std::hint::black_box(softsimd::eval::fig9::grids());
+    });
+    bench("fig10 (scenario averages)", 1, || {
+        std::hint::black_box(softsimd::eval::fig10::rows());
+    });
+    bench("summary (headline numbers)", 1, || {
+        std::hint::black_box(softsimd::eval::summary::headlines());
+    });
+    println!("\n-- regenerated figure output --\n");
+    softsimd::eval::run("all").expect("eval all");
+}

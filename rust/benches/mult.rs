@@ -1,0 +1,69 @@
+//! Hot-path microbenchmarks: the packed multiply (the L3 request path's
+//! inner loop), CSD scheduling, SWAR primitives, and repacking.
+
+#[path = "benchkit.rs"]
+mod benchkit;
+use benchkit::{bench, throughput};
+
+use softsimd::bits::format::SimdFormat;
+use softsimd::bits::swar::{swar_add, swar_add_sar};
+use softsimd::csd::schedule::schedule;
+use softsimd::pipeline::stage1::{mul_packed, mul_scalar_plan, Stage1};
+use softsimd::pipeline::stage2::repack_stream;
+use softsimd::workload::synth::XorShift64;
+
+fn main() {
+    println!("== mult: packed-arithmetic hot paths ==");
+    let fmt = SimdFormat::new(8);
+    let mut rng = XorShift64::new(0xBE4C);
+    let words: Vec<u64> = (0..1024).map(|_| rng.word()).collect();
+
+    let mut acc = 0u64;
+    let r = bench("swar_add 8b (1024 words)", 20, || {
+        for &w in &words {
+            acc = swar_add(acc, w, fmt);
+        }
+    });
+    throughput(&r, 1024.0 * 6.0, "lane-adds");
+
+    let r = bench("swar_add_sar k=3 (1024 words)", 20, || {
+        for &w in &words {
+            acc = swar_add_sar(acc, w, 3, fmt);
+        }
+    });
+    throughput(&r, 1024.0 * 6.0, "lane-ops");
+
+    let r = bench("csd schedule (256 multipliers, 8-bit)", 20, || {
+        for m in -128i64..128 {
+            std::hint::black_box(schedule(m, 8));
+        }
+    });
+    throughput(&r, 256.0, "plans");
+
+    // The inner loop of the coordinator: plan reuse + packed multiply.
+    let plan = schedule(115, 8);
+    let mut s1 = Stage1::new(fmt);
+    let r = bench("packed mul via precompiled plan (1024 words)", 50, || {
+        for &w in &words {
+            s1.load_x(w);
+            std::hint::black_box(s1.run_plan(&plan));
+        }
+    });
+    throughput(&r, 1024.0 * 6.0, "subword-mults");
+
+    let r = bench("mul_packed incl. scheduling (per word)", 20, || {
+        std::hint::black_box(mul_packed(words[0], 115, 8, fmt));
+    });
+    throughput(&r, 6.0, "subword-mults");
+
+    let r = bench("scalar oracle (per value)", 20, || {
+        std::hint::black_box(mul_scalar_plan(100, &plan, 8));
+    });
+    throughput(&r, 1.0, "mults");
+
+    let r = bench("repack_stream 8->16 (64 words)", 20, || {
+        std::hint::black_box(repack_stream(&words[..64], fmt, SimdFormat::new(16), 384));
+    });
+    throughput(&r, 384.0, "subword-converts");
+    std::hint::black_box(acc);
+}

@@ -1,0 +1,87 @@
+//! Gate-level substrate benchmarks: netlist evaluation throughput (the
+//! figure harness's cost driver) and pipeline program execution.
+
+#[path = "benchkit.rs"]
+mod benchkit;
+use benchkit::{bench, throughput};
+
+use softsimd::bits::format::SimdFormat;
+use softsimd::isa::assemble_mul_repack;
+use softsimd::pipeline::PipelineSim;
+use softsimd::rtl::multiplier::divisible_array;
+use softsimd::rtl::shifter::{drive_stage1, stage1_datapath};
+use softsimd::rtl::Simulator;
+use softsimd::workload::synth::XorShift64;
+
+fn main() {
+    println!("== pipeline: cycle model + gate-level simulation ==");
+    let fmt = SimdFormat::new(8);
+    let mut rng = XorShift64::new(0xBEC2);
+
+    // Cycle-accurate micro-op programs (trace recording on/off).
+    for tracing in [true, false] {
+        let progs: Vec<_> = (0..64)
+            .map(|i| {
+                let mut p = assemble_mul_repack(
+                    (i * 37 % 255) - 127,
+                    8,
+                    fmt,
+                    SimdFormat::new(16),
+                    3,
+                );
+                p.instrs
+                    .insert(1, softsimd::isa::Instr::Load(softsimd::isa::Reg::X, rng.word()));
+                p
+            })
+            .collect();
+        let r = bench(
+            &format!("PipelineSim 64 mul+repack programs (tracing={tracing})"),
+            30,
+            || {
+                let mut sim = PipelineSim::new(fmt);
+                sim.tracing = tracing;
+                std::hint::black_box(sim.run_batch(&progs));
+            },
+        );
+        throughput(&r, 64.0 * 6.0, "subword-mults");
+    }
+
+    // Gate-level stage-1 evaluation (the energy model's inner loop).
+    let net = stage1_datapath(true);
+    println!(
+        "stage1 netlist: {} cells, depth {}",
+        net.logic_cells(),
+        softsimd::rtl::timing::depth(&net)
+    );
+    let mut sim = Simulator::new(&net);
+    let mut acc = 0u64;
+    let r = bench("gate-level stage1 eval (1 cycle)", 30, || {
+        acc = drive_stage1(&mut sim, &net, acc, rng.word(), 2, 1, fmt);
+    });
+    throughput(&r, net.logic_cells() as f64, "gate-evals");
+
+    // The big divisible array.
+    let bank = divisible_array(&[4, 6, 8, 12, 16]);
+    println!(
+        "divisible array: {} cells, depth {}",
+        bank.logic_cells(),
+        softsimd::rtl::timing::depth(&bank)
+    );
+    let mut bsim = Simulator::new(&bank);
+    let r = bench("gate-level divisible-array eval (1 cycle)", 30, || {
+        let mut ins = Vec::with_capacity(101);
+        let a = rng.word();
+        let m = rng.word();
+        for i in 0..48 {
+            ins.push((a >> i) & 1 != 0);
+        }
+        for i in 0..48 {
+            ins.push((m >> i) & 1 != 0);
+        }
+        ins.extend_from_slice(&[false, false, true, false, false]);
+        bsim.set_inputs(&ins);
+        std::hint::black_box(bsim.eval(&bank));
+    });
+    throughput(&r, bank.logic_cells() as f64, "gate-evals");
+    std::hint::black_box(acc);
+}

@@ -1,0 +1,103 @@
+//! Fixed-point `Q1.X` helpers.
+//!
+//! A `Q1.X` value has one integer (sign) bit and `X` fractional bits,
+//! stored two's-complement in `X+1` bits; the representable range is
+//! `[-1, 1)` with resolution `2^-X` (Section III-B).
+
+/// A signed fixed-point value together with its total bitwidth.
+///
+/// `raw` is the two's-complement integer confined to `bits` bits,
+/// sign-extended into the `i64`. `value = raw / 2^(bits-1)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Q {
+    pub raw: i64,
+    pub bits: u32,
+}
+
+impl Q {
+    /// Quantize a real value to `Q1.(bits-1)` by round-to-nearest,
+    /// saturating to the representable range.
+    pub fn from_f64(v: f64, bits: u32) -> Q {
+        Q { raw: to_q(v, bits), bits }
+    }
+
+    /// The real value represented.
+    pub fn to_f64(self) -> f64 {
+        from_q(self.raw, self.bits)
+    }
+
+    /// Resolution (one ULP) of this format.
+    pub fn ulp(self) -> f64 {
+        (-( (self.bits - 1) as f64 )).exp2()
+    }
+}
+
+/// Quantize `v` ∈ ℝ to the two's-complement raw integer of `Q1.(bits-1)`,
+/// rounding to nearest (ties away from zero) and saturating to
+/// `[-2^(bits-1), 2^(bits-1) - 1]`.
+pub fn to_q(v: f64, bits: u32) -> i64 {
+    debug_assert!(bits >= 2 && bits <= 32);
+    let scale = (1i64 << (bits - 1)) as f64;
+    let q = (v * scale).round() as i64;
+    q.clamp(-(1i64 << (bits - 1)), (1i64 << (bits - 1)) - 1)
+}
+
+/// The real value of the raw `Q1.(bits-1)` integer `raw`.
+pub fn from_q(raw: i64, bits: u32) -> f64 {
+    raw as f64 / (1i64 << (bits - 1)) as f64
+}
+
+/// Sign-extend the low `bits` bits of `x` into an `i64`.
+#[inline]
+pub fn sign_extend(x: u64, bits: u32) -> i64 {
+    debug_assert!(bits >= 1 && bits <= 63);
+    let shift = 64 - bits;
+    ((x << shift) as i64) >> shift
+}
+
+/// Confine `x` (possibly negative) to its low `bits` bits (two's complement).
+#[inline]
+pub fn truncate(x: i64, bits: u32) -> u64 {
+    (x as u64) & ((1u64 << bits) - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_grid() {
+        for bits in [4u32, 6, 8, 12, 16] {
+            let n = 1i64 << (bits - 1);
+            for raw in -n..n {
+                let v = from_q(raw, bits);
+                assert_eq!(to_q(v, bits), raw, "bits={bits} raw={raw}");
+            }
+        }
+    }
+
+    #[test]
+    fn saturates_out_of_range() {
+        assert_eq!(to_q(1.5, 8), 127);
+        assert_eq!(to_q(-2.0, 8), -128);
+        assert_eq!(to_q(0.999999, 4), 7);
+    }
+
+    #[test]
+    fn sign_extend_truncate_roundtrip() {
+        for bits in [4u32, 6, 8, 12, 16] {
+            let n = 1i64 << (bits - 1);
+            for raw in [-n, -1, 0, 1, n - 1] {
+                let t = truncate(raw, bits);
+                assert_eq!(sign_extend(t, bits), raw);
+            }
+        }
+    }
+
+    #[test]
+    fn q_struct_value() {
+        let q = Q::from_f64(0.5, 8);
+        assert_eq!(q.raw, 64);
+        assert!((q.to_f64() - 0.5).abs() < 1e-12);
+    }
+}

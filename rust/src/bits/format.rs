@@ -1,0 +1,220 @@
+//! Soft SIMD formats over the 48-bit datapath.
+//!
+//! A format is a sub-word bitwidth `b` dividing 48. Sub-word `i` occupies
+//! bits `[i*b, (i+1)*b)` of the word and holds a two's-complement
+//! `Q1.(b-1)` value. The per-format mask constants here are the software
+//! image of the paper's `V_x` control vector (Fig. 4): `msb_mask` marks
+//! the positions where carry propagation is killed and where the shifter's
+//! sign-replication muxes sit; `lsb_mask` marks where the `+1` of a
+//! subtraction is injected.
+
+
+
+/// Width of the datapath evaluated in the paper (Section IV-A).
+pub const DATAPATH_BITS: u32 = 48;
+
+/// Mask selecting the 48 datapath bits inside the `u64` carrier.
+pub const WORD_MASK: u64 = (1u64 << DATAPATH_BITS) - 1;
+
+/// The sub-word widths supported by the design under study (Section III-C).
+pub const FORMATS: [u32; 5] = [4, 6, 8, 12, 16];
+
+/// Maximum coalesced shift distance per cycle (Section III-B: "up to
+/// 3-bit patterns").
+pub const MAX_SHIFT: u32 = 3;
+
+/// A Soft SIMD format: the datapath partitioned into `lanes` sub-words of
+/// `bits` bits each.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SimdFormat {
+    /// Sub-word width in bits.
+    pub bits: u32,
+}
+
+/// Precomputed per-format mask tables, indexed by sub-word width.
+/// Computed at compile time — the SWAR hot path must not rebuild masks
+/// (EXPERIMENTS.md §Perf).
+const fn tile(pattern: u64, bits: u32) -> u64 {
+    let mut out = 0u64;
+    let mut i = 0;
+    while i < DATAPATH_BITS {
+        out |= pattern << i;
+        i += bits;
+    }
+    out & WORD_MASK
+}
+
+const MSB_MASKS: [u64; 17] = {
+    let mut t = [0u64; 17];
+    let mut i = 0;
+    while i < FORMATS.len() {
+        let b = FORMATS[i];
+        t[b as usize] = tile(1u64 << (b - 1), b);
+        i += 1;
+    }
+    t
+};
+
+const LSB_MASKS: [u64; 17] = {
+    let mut t = [0u64; 17];
+    let mut i = 0;
+    while i < FORMATS.len() {
+        let b = FORMATS[i];
+        t[b as usize] = tile(1, b);
+        i += 1;
+    }
+    t
+};
+
+/// KEEP_MASKS[k][bits]: low `bits - k` bits of each slot, k ∈ 1..=3.
+const KEEP_MASKS: [[u64; 17]; 4] = {
+    let mut t = [[0u64; 17]; 4];
+    let mut k = 1;
+    while k <= 3 {
+        let mut i = 0;
+        while i < FORMATS.len() {
+            let b = FORMATS[i];
+            t[k][b as usize] = tile((1u64 << (b - k as u32)) - 1, b);
+            i += 1;
+        }
+        k += 1;
+    }
+    t
+};
+
+impl SimdFormat {
+    /// Create a format; panics unless `bits` divides 48 and is supported.
+    pub fn new(bits: u32) -> Self {
+        assert!(
+            FORMATS.contains(&bits),
+            "unsupported Soft SIMD sub-word width {bits} (supported: {FORMATS:?})"
+        );
+        SimdFormat { bits }
+    }
+
+    /// All supported formats.
+    pub fn all() -> impl Iterator<Item = SimdFormat> {
+        FORMATS.iter().map(|&b| SimdFormat::new(b))
+    }
+
+    /// Number of sub-words per 48-bit word.
+    #[inline]
+    pub fn lanes(self) -> u32 {
+        DATAPATH_BITS / self.bits
+    }
+
+    /// Mask with the MSB of every sub-word set (carry-kill / sign-mux
+    /// positions; `V_x = 0` positions in Fig. 4).
+    #[inline(always)]
+    pub fn msb_mask(self) -> u64 {
+        MSB_MASKS[self.bits as usize]
+    }
+
+    /// Mask with the LSB of every sub-word set (`+1` injection positions
+    /// for subtraction).
+    #[inline(always)]
+    pub fn lsb_mask(self) -> u64 {
+        LSB_MASKS[self.bits as usize]
+    }
+
+    /// Mask with all bits of every sub-word set (always `WORD_MASK` for
+    /// exact divisors; kept for clarity/extensibility).
+    #[inline]
+    pub fn full_mask(self) -> u64 {
+        WORD_MASK
+    }
+
+    /// Mask keeping, in each sub-word slot, the low `bits - k` bits:
+    /// the positions a `k`-bit right shift may legitimately fill from the
+    /// same sub-word. The excluded top-`k` positions are re-filled by
+    /// sign replication.
+    #[inline(always)]
+    pub fn keep_mask(self, k: u32) -> u64 {
+        debug_assert!(k >= 1 && k <= MAX_SHIFT && k < self.bits);
+        KEEP_MASKS[k as usize][self.bits as usize]
+    }
+
+    /// Mask of one sub-word slot `i`.
+    #[inline]
+    pub fn lane_mask(self, i: u32) -> u64 {
+        debug_assert!(i < self.lanes());
+        ((1u64 << self.bits) - 1) << (i * self.bits)
+    }
+
+    /// Tile `pattern` (confined to the low `bits` bits) across all lanes.
+    #[inline]
+    pub fn repeat(self, pattern: u64) -> u64 {
+        debug_assert_eq!(pattern & !((1u64 << self.bits) - 1), 0);
+        let mut out = 0u64;
+        let mut i = 0;
+        while i < DATAPATH_BITS {
+            out |= pattern << i;
+            i += self.bits;
+        }
+        out & WORD_MASK
+    }
+}
+
+impl std::fmt::Display for SimdFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}b", self.lanes(), self.bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_cover_datapath() {
+        for f in SimdFormat::all() {
+            assert_eq!(f.lanes() * f.bits, DATAPATH_BITS);
+        }
+    }
+
+    #[test]
+    fn msb_mask_has_one_bit_per_lane() {
+        for f in SimdFormat::all() {
+            assert_eq!(f.msb_mask().count_ones(), f.lanes());
+            assert_eq!(f.lsb_mask().count_ones(), f.lanes());
+            // MSB of lane i is at bit (i+1)*b - 1.
+            for i in 0..f.lanes() {
+                assert!(f.msb_mask() & (1u64 << ((i + 1) * f.bits - 1)) != 0);
+                assert!(f.lsb_mask() & (1u64 << (i * f.bits)) != 0);
+            }
+        }
+    }
+
+    #[test]
+    fn keep_mask_excludes_top_k_bits() {
+        for f in SimdFormat::all() {
+            for k in 1..=MAX_SHIFT {
+                let keep = f.keep_mask(k);
+                for i in 0..f.lanes() {
+                    let lane = f.lane_mask(i);
+                    let kept = (keep & lane).count_ones();
+                    assert_eq!(kept, f.bits - k, "fmt {f} k {k} lane {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_masks_partition_word() {
+        for f in SimdFormat::all() {
+            let mut acc = 0u64;
+            for i in 0..f.lanes() {
+                let m = f.lane_mask(i);
+                assert_eq!(acc & m, 0, "lanes overlap");
+                acc |= m;
+            }
+            assert_eq!(acc, WORD_MASK);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_unsupported_width() {
+        SimdFormat::new(5);
+    }
+}

@@ -1,0 +1,16 @@
+//! Bit-level foundations of the Soft SIMD datapath.
+//!
+//! Everything in this module is *semantics-pinned*: the exact same bit
+//! behaviour is implemented by the pure-jnp reference (`python/compile/
+//! kernels/ref.py`) and the Pallas kernel, and is cross-checked through
+//! golden vectors emitted at AOT time (see `runtime::golden`).
+
+pub mod fixed;
+pub mod format;
+pub mod pack;
+pub mod swar;
+
+pub use fixed::{from_q, to_q, Q};
+pub use format::{SimdFormat, DATAPATH_BITS, FORMATS, WORD_MASK};
+pub use pack::{pack, unpack, PackedWord};
+pub use swar::{swar_add, swar_add_sar, swar_neg, swar_sar, swar_sub, swar_sub_sar};

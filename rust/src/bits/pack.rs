@@ -1,0 +1,151 @@
+//! Packing / unpacking sub-words into 48-bit datapath words.
+
+use super::fixed::{sign_extend, truncate};
+use super::format::{SimdFormat, WORD_MASK};
+
+/// A 48-bit datapath word tagged with its Soft SIMD format.
+///
+/// The carrier is a `u64`; bits 48..64 are always zero (an invariant
+/// every SWAR op preserves and `debug_assert`s).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PackedWord {
+    pub bits: u64,
+    pub fmt: SimdFormat,
+}
+
+impl PackedWord {
+    pub fn new(bits: u64, fmt: SimdFormat) -> Self {
+        debug_assert_eq!(bits & !WORD_MASK, 0, "bits above the 48-bit datapath");
+        PackedWord { bits, fmt }
+    }
+
+    pub fn zero(fmt: SimdFormat) -> Self {
+        PackedWord { bits: 0, fmt }
+    }
+
+    /// Pack lane values (two's-complement `Q1.(b-1)` raw integers,
+    /// sign-extended `i64`s). Panics if a value does not fit.
+    pub fn from_lanes(vals: &[i64], fmt: SimdFormat) -> Self {
+        PackedWord::new(pack(vals, fmt), fmt)
+    }
+
+    /// Unpack into per-lane sign-extended raw values.
+    pub fn lanes(self) -> Vec<i64> {
+        unpack(self.bits, self.fmt)
+    }
+
+    /// Single lane `i`, sign-extended.
+    #[inline]
+    pub fn lane(self, i: u32) -> i64 {
+        sign_extend((self.bits >> (i * self.fmt.bits)) & ((1u64 << self.fmt.bits) - 1), self.fmt.bits)
+    }
+}
+
+/// Pack `vals` (one per lane, lane 0 at the least-significant end) into a
+/// raw 48-bit word. Panics if `vals.len() != lanes` or a value exceeds
+/// the lane's two's-complement range.
+pub fn pack(vals: &[i64], fmt: SimdFormat) -> u64 {
+    assert_eq!(
+        vals.len(),
+        fmt.lanes() as usize,
+        "expected {} lane values for {fmt}",
+        fmt.lanes()
+    );
+    let half = 1i64 << (fmt.bits - 1);
+    let mut w = 0u64;
+    for (i, &v) in vals.iter().enumerate() {
+        assert!(
+            v >= -half && v < half,
+            "lane {i} value {v} out of Q1.{} range [{}, {})",
+            fmt.bits - 1,
+            -half,
+            half
+        );
+        w |= truncate(v, fmt.bits) << (i as u32 * fmt.bits);
+    }
+    w
+}
+
+/// Unpack a raw 48-bit word into sign-extended lane values (lane 0 first).
+pub fn unpack(word: u64, fmt: SimdFormat) -> Vec<i64> {
+    debug_assert_eq!(word & !WORD_MASK, 0);
+    let mask = (1u64 << fmt.bits) - 1;
+    (0..fmt.lanes())
+        .map(|i| sign_extend((word >> (i * fmt.bits)) & mask, fmt.bits))
+        .collect()
+}
+
+/// Pack a slice of raw values into as many words as needed, zero-padding
+/// the final partial word. Returns (words, count) where `count` is the
+/// original element count.
+pub fn pack_stream(vals: &[i64], fmt: SimdFormat) -> Vec<u64> {
+    let lanes = fmt.lanes() as usize;
+    vals.chunks(lanes)
+        .map(|chunk| {
+            let mut padded = chunk.to_vec();
+            padded.resize(lanes, 0);
+            pack(&padded, fmt)
+        })
+        .collect()
+}
+
+/// Unpack a stream of words, truncating to `count` elements.
+pub fn unpack_stream(words: &[u64], fmt: SimdFormat, count: usize) -> Vec<i64> {
+    let mut out: Vec<i64> = words.iter().flat_map(|&w| unpack(w, fmt)).collect();
+    out.truncate(count);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for fmt in SimdFormat::all() {
+            let half = 1i64 << (fmt.bits - 1);
+            let vals: Vec<i64> = (0..fmt.lanes() as i64)
+                .map(|i| ((i * 37 + 5) % (2 * half)) - half)
+                .collect();
+            let w = pack(&vals, fmt);
+            assert_eq!(unpack(w, fmt), vals, "fmt {fmt}");
+        }
+    }
+
+    #[test]
+    fn lane_order_is_lsb_first() {
+        let fmt = SimdFormat::new(8);
+        let mut vals = vec![0i64; 6];
+        vals[0] = 1;
+        assert_eq!(pack(&vals, fmt), 1);
+        vals[0] = 0;
+        vals[5] = -1;
+        assert_eq!(pack(&vals, fmt), 0xFF_0000_0000_00);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pack_rejects_overflow() {
+        let fmt = SimdFormat::new(4);
+        pack(&[8, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0], fmt); // 8 > Q1.3 max 7
+    }
+
+    #[test]
+    fn stream_roundtrip_with_padding() {
+        let fmt = SimdFormat::new(12);
+        let vals: Vec<i64> = vec![-2048, 2047, 5, -1, 100, 0, -7];
+        let words = pack_stream(&vals, fmt);
+        assert_eq!(words.len(), 2);
+        assert_eq!(unpack_stream(&words, fmt, vals.len()), vals);
+    }
+
+    #[test]
+    fn packed_word_lane_access() {
+        let fmt = SimdFormat::new(6);
+        let vals: Vec<i64> = vec![-32, 31, 0, -1, 15, -16, 7, -8];
+        let p = PackedWord::from_lanes(&vals, fmt);
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(p.lane(i as u32), v);
+        }
+    }
+}

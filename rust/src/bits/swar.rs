@@ -1,0 +1,307 @@
+//! SWAR (SIMD-within-a-register) primitives implementing the Soft SIMD
+//! datapath semantics of Section III-B / Fig. 4.
+//!
+//! The hardware enforces sub-word isolation with the `V_x` control
+//! vector: carry-kill gates at sub-word MSBs (adder, Fig. 4a), `+1`
+//! injection at sub-word LSBs (subtraction), and sign-replication muxes
+//! at sub-word MSBs (shifter, Fig. 4b). In software these become the
+//! classical SWAR identities below; the per-format masks *are* `V_x`.
+//!
+//! All functions preserve the invariant `result & !WORD_MASK == 0`.
+
+use super::format::{SimdFormat, MAX_SHIFT, WORD_MASK};
+
+/// Per-sub-word add, modulo `2^b` in each lane (carry killed at
+/// boundaries — an overflowing lane wraps, it never disturbs its
+/// neighbour).
+///
+/// Identity: with `H` the MSB mask, `(a&~H) + (c&~H)` can never carry
+/// *out* of a lane (the MSBs are zeroed), and the true MSB sum is
+/// restored by `^ ((a^c) & H)`.
+#[inline]
+pub fn swar_add(a: u64, c: u64, fmt: SimdFormat) -> u64 {
+    debug_assert_eq!(a & !WORD_MASK, 0);
+    debug_assert_eq!(c & !WORD_MASK, 0);
+    let h = fmt.msb_mask();
+    (((a & !h).wrapping_add(c & !h)) ^ ((a ^ c) & h)) & WORD_MASK
+}
+
+/// Per-sub-word two's-complement negation: bitwise complement then `+1`
+/// injected at every lane LSB — exactly the subtraction path of the
+/// configurable adder ("provide +1 for the next sub-word in
+/// subtractions", Section III-B).
+#[inline]
+pub fn swar_neg(c: u64, fmt: SimdFormat) -> u64 {
+    swar_add(!c & WORD_MASK, fmt.lsb_mask(), fmt)
+}
+
+/// Per-sub-word subtract `a - c` (mod `2^b` per lane).
+#[inline]
+pub fn swar_sub(a: u64, c: u64, fmt: SimdFormat) -> u64 {
+    swar_add(a, swar_neg(c, fmt), fmt)
+}
+
+/// Per-sub-word *arithmetic* right shift by `k ∈ {1..=3}` — the
+/// configurable shifter of Fig. 4b. Each lane's top `k` bits are refilled
+/// with its own sign bit (MSB replication through the `V_x` muxes);
+/// bits shifted out of the lane bottom are truncated (toward −∞).
+///
+/// `fill` is built by OR-ing `k` down-shifted copies of the MSB bits;
+/// copies cannot collide across lanes because `k < b` for every format.
+#[inline]
+pub fn swar_sar(a: u64, k: u32, fmt: SimdFormat) -> u64 {
+    debug_assert_eq!(a & !WORD_MASK, 0);
+    debug_assert!(k >= 1 && k <= MAX_SHIFT, "shifter supports 1..=3 positions/cycle");
+    let signs = a & fmt.msb_mask();
+    let mut fill = 0u64;
+    for j in 0..k {
+        fill |= signs >> j;
+    }
+    ((a >> k) & fmt.keep_mask(k)) | fill
+}
+
+/// Fused per-sub-word add-then-arithmetic-shift with a `(b+1)`-bit
+/// intermediate — the multiply-cycle datapath (DESIGN.md §4).
+///
+/// In hardware the configurable adder's per-sub-word carry-out feeds the
+/// shifter's sign-replication mux, so the sum is effectively `b+1` bits
+/// wide until the shift drops it back to `b`. In SWAR form: the wrapped
+/// sum's low bits are already correct; only the *sign* used for
+/// replication must be corrected on overflow. Overflow in lane `i`
+/// happened iff the operands agree in sign but the wrapped sum does not:
+/// `V = ~(a^c) & (a^w)` at the MSB; the true wide sign is then the
+/// wrapped MSB flipped: `(w & H) ^ V`.
+///
+/// `k = 0` is allowed (plain wrapped add — the multiply's final
+/// position-0 digit).
+#[inline]
+pub fn swar_add_sar(a: u64, c: u64, k: u32, fmt: SimdFormat) -> u64 {
+    let h = fmt.msb_mask();
+    let w = swar_add(a, c, fmt);
+    if k == 0 {
+        return w;
+    }
+    let ovf = !(a ^ c) & (a ^ w) & h;
+    sar_with_sign(w, (w & h) ^ ovf, k, fmt)
+}
+
+/// Fused per-sub-word subtract-then-arithmetic-shift; see
+/// [`swar_add_sar`]. Subtraction overflow: operands *disagree* in sign
+/// and the result disagrees with `a`: `V = (a^c) & (a^w)` at the MSB.
+#[inline]
+pub fn swar_sub_sar(a: u64, c: u64, k: u32, fmt: SimdFormat) -> u64 {
+    let h = fmt.msb_mask();
+    let w = swar_sub(a, c, fmt);
+    if k == 0 {
+        return w;
+    }
+    let ovf = (a ^ c) & (a ^ w) & h;
+    sar_with_sign(w, (w & h) ^ ovf, k, fmt)
+}
+
+/// Shift `w` right by `k` per sub-word, replicating the supplied sign
+/// bits (at MSB positions) into the vacated top bits.
+#[inline]
+fn sar_with_sign(w: u64, signs: u64, k: u32, fmt: SimdFormat) -> u64 {
+    debug_assert!(k >= 1 && k <= MAX_SHIFT);
+    debug_assert_eq!(signs & !fmt.msb_mask(), 0);
+    let mut fill = 0u64;
+    for j in 0..k {
+        fill |= signs >> j;
+    }
+    ((w >> k) & fmt.keep_mask(k)) | fill
+}
+
+/// Per-sub-word logical left shift by one (used by the repack datapath
+/// tests and format-alignment helpers; not part of the multiply loop).
+#[inline]
+pub fn swar_shl1(a: u64, fmt: SimdFormat) -> u64 {
+    debug_assert_eq!(a & !WORD_MASK, 0);
+    ((a << 1) & WORD_MASK) & !fmt.lsb_mask()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::fixed::{sign_extend, truncate};
+    use crate::bits::pack::{pack, unpack};
+
+    /// Tiny deterministic PRNG so tests need no external crate.
+    pub(crate) struct XorShift(pub u64);
+    impl XorShift {
+        pub fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            self.0 = x;
+            x
+        }
+        pub fn word(&mut self) -> u64 {
+            self.next() & WORD_MASK
+        }
+    }
+
+    fn lanes_of(w: u64, fmt: SimdFormat) -> Vec<i64> {
+        unpack(w, fmt)
+    }
+
+    #[test]
+    fn add_matches_per_lane_wrapping() {
+        let mut rng = XorShift(0x5EED_0001);
+        for fmt in SimdFormat::all() {
+            for _ in 0..500 {
+                let (a, c) = (rng.word(), rng.word());
+                let got = lanes_of(swar_add(a, c, fmt), fmt);
+                let want: Vec<i64> = lanes_of(a, fmt)
+                    .iter()
+                    .zip(lanes_of(c, fmt))
+                    .map(|(&x, y)| sign_extend(truncate(x.wrapping_add(y), fmt.bits), fmt.bits))
+                    .collect();
+                assert_eq!(got, want, "fmt {fmt} a={a:#x} c={c:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn sub_matches_per_lane_wrapping() {
+        let mut rng = XorShift(0x5EED_0002);
+        for fmt in SimdFormat::all() {
+            for _ in 0..500 {
+                let (a, c) = (rng.word(), rng.word());
+                let got = lanes_of(swar_sub(a, c, fmt), fmt);
+                let want: Vec<i64> = lanes_of(a, fmt)
+                    .iter()
+                    .zip(lanes_of(c, fmt))
+                    .map(|(&x, y)| sign_extend(truncate(x.wrapping_sub(y), fmt.bits), fmt.bits))
+                    .collect();
+                assert_eq!(got, want, "fmt {fmt} a={a:#x} c={c:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn neg_matches_per_lane() {
+        let mut rng = XorShift(0x5EED_0003);
+        for fmt in SimdFormat::all() {
+            for _ in 0..300 {
+                let a = rng.word();
+                let got = lanes_of(swar_neg(a, fmt), fmt);
+                let want: Vec<i64> = lanes_of(a, fmt)
+                    .iter()
+                    .map(|&x| sign_extend(truncate(x.wrapping_neg(), fmt.bits), fmt.bits))
+                    .collect();
+                assert_eq!(got, want);
+            }
+        }
+    }
+
+    #[test]
+    fn sar_matches_per_lane_floor_shift() {
+        let mut rng = XorShift(0x5EED_0004);
+        for fmt in SimdFormat::all() {
+            for k in 1..=MAX_SHIFT {
+                for _ in 0..300 {
+                    let a = rng.word();
+                    let got = lanes_of(swar_sar(a, k, fmt), fmt);
+                    // i64 >> is arithmetic: truncation toward −∞, same as HW.
+                    let want: Vec<i64> = lanes_of(a, fmt).iter().map(|&x| x >> k).collect();
+                    assert_eq!(got, want, "fmt {fmt} k {k} a={a:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_cross_lane_interference_on_overflow() {
+        // Lane 0 at max + 1 overflows (wraps) without touching lane 1.
+        for fmt in SimdFormat::all() {
+            let half = 1i64 << (fmt.bits - 1);
+            let mut a = vec![0i64; fmt.lanes() as usize];
+            let mut c = vec![0i64; fmt.lanes() as usize];
+            a[0] = half - 1;
+            c[0] = 1;
+            a[1] = 3;
+            c[1] = 4;
+            let s = swar_add(pack(&a, fmt), pack(&c, fmt), fmt);
+            let lanes = lanes_of(s, fmt);
+            assert_eq!(lanes[0], -half, "wrap in lane 0");
+            assert_eq!(lanes[1], 7, "lane 1 undisturbed");
+        }
+    }
+
+    #[test]
+    fn fused_add_sar_matches_wide_reference() {
+        // (a + c) computed at full precision, then arithmetically shifted:
+        // the fused SWAR op must agree even when the b-bit sum overflows.
+        let mut rng = XorShift(0x5EED_0006);
+        for fmt in SimdFormat::all() {
+            for k in 0..=MAX_SHIFT {
+                for _ in 0..400 {
+                    let (a, c) = (rng.word(), rng.word());
+                    let got = lanes_of(swar_add_sar(a, c, k, fmt), fmt);
+                    let want: Vec<i64> = lanes_of(a, fmt)
+                        .iter()
+                        .zip(lanes_of(c, fmt))
+                        .map(|(&x, y)| {
+                            if k == 0 {
+                                sign_extend(truncate(x.wrapping_add(y), fmt.bits), fmt.bits)
+                            } else {
+                                (x + y) >> k // exact in i64: no wrap possible
+                            }
+                        })
+                        .collect();
+                    assert_eq!(got, want, "fmt {fmt} k {k} a={a:#x} c={c:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_sub_sar_matches_wide_reference() {
+        let mut rng = XorShift(0x5EED_0007);
+        for fmt in SimdFormat::all() {
+            for k in 0..=MAX_SHIFT {
+                for _ in 0..400 {
+                    let (a, c) = (rng.word(), rng.word());
+                    let got = lanes_of(swar_sub_sar(a, c, k, fmt), fmt);
+                    let want: Vec<i64> = lanes_of(a, fmt)
+                        .iter()
+                        .zip(lanes_of(c, fmt))
+                        .map(|(&x, y)| {
+                            if k == 0 {
+                                sign_extend(truncate(x.wrapping_sub(y), fmt.bits), fmt.bits)
+                            } else {
+                                (x - y) >> k
+                            }
+                        })
+                        .collect();
+                    assert_eq!(got, want, "fmt {fmt} k {k} a={a:#x} c={c:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_ops_overflow_corner() {
+        // max + max at 8 bits: wide sum 254, >>1 = 127 (not the wrapped −1).
+        let fmt = SimdFormat::new(8);
+        let a = pack(&[127, -128, 127, -128, 0, 1], fmt);
+        let c = pack(&[127, -128, -128, 127, 0, 1], fmt);
+        let got = unpack(swar_add_sar(a, c, 1, fmt), fmt);
+        assert_eq!(got, vec![127, -128, -1, -1, 0, 1]);
+    }
+
+    #[test]
+    fn results_stay_in_datapath() {
+        let mut rng = XorShift(0x5EED_0005);
+        for fmt in SimdFormat::all() {
+            for _ in 0..200 {
+                let (a, c) = (rng.word(), rng.word());
+                assert_eq!(swar_add(a, c, fmt) & !WORD_MASK, 0);
+                assert_eq!(swar_sub(a, c, fmt) & !WORD_MASK, 0);
+                assert_eq!(swar_sar(a, 3, fmt) & !WORD_MASK, 0);
+            }
+        }
+    }
+}

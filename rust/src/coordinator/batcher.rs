@@ -1,0 +1,122 @@
+//! Dynamic batching: group inference requests into packed batches.
+//!
+//! Soft SIMD packs the batch dimension into sub-words, so the natural
+//! batch quantum is a multiple of the lane count (6 at 8-bit). The
+//! batcher accumulates requests until it can fill `target_rows` rows or
+//! a flush is forced (deadline/queue drain) — the classic
+//! latency/throughput dial of serving systems.
+
+use super::server::Request;
+
+/// A formed batch: requests plus the row span each owns.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    pub rows: usize,
+}
+
+/// Row-count batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    pending: Vec<Request>,
+    pending_rows: usize,
+    pub target_rows: usize,
+    pub max_wait_polls: u32,
+    idle_polls: u32,
+}
+
+impl Batcher {
+    pub fn new(target_rows: usize, max_wait_polls: u32) -> Self {
+        Batcher {
+            pending: vec![],
+            pending_rows: 0,
+            target_rows,
+            max_wait_polls,
+            idle_polls: 0,
+        }
+    }
+
+    pub fn pending_rows(&self) -> usize {
+        self.pending_rows
+    }
+
+    /// Offer a request; returns a formed batch when the target fills.
+    pub fn push(&mut self, req: Request) -> Option<Batch> {
+        self.pending_rows += req.rows.len();
+        self.pending.push(req);
+        self.idle_polls = 0;
+        if self.pending_rows >= self.target_rows {
+            return self.flush();
+        }
+        None
+    }
+
+    /// Poll tick with no arrivals; flushes after `max_wait_polls` idle
+    /// ticks so stragglers are not starved.
+    pub fn tick(&mut self) -> Option<Batch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        self.idle_polls += 1;
+        if self.idle_polls >= self.max_wait_polls {
+            self.flush()
+        } else {
+            None
+        }
+    }
+
+    /// Force out whatever is queued.
+    pub fn flush(&mut self) -> Option<Batch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        self.idle_polls = 0;
+        let requests = std::mem::take(&mut self.pending);
+        let rows = std::mem::take(&mut self.pending_rows);
+        Some(Batch { requests, rows })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, rows: usize) -> Request {
+        Request { id, rows: vec![vec![0i64; 4]; rows] }
+    }
+
+    #[test]
+    fn fills_to_target() {
+        let mut b = Batcher::new(6, 4);
+        assert!(b.push(req(1, 2)).is_none());
+        assert!(b.push(req(2, 2)).is_none());
+        let batch = b.push(req(3, 2)).expect("target reached");
+        assert_eq!(batch.rows, 6);
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(b.pending_rows(), 0);
+    }
+
+    #[test]
+    fn deadline_flush_prevents_starvation() {
+        let mut b = Batcher::new(6, 3);
+        assert!(b.push(req(1, 1)).is_none());
+        assert!(b.tick().is_none());
+        assert!(b.tick().is_none());
+        let batch = b.tick().expect("deadline flush");
+        assert_eq!(batch.rows, 1);
+    }
+
+    #[test]
+    fn oversized_request_flushes_immediately() {
+        let mut b = Batcher::new(4, 3);
+        let batch = b.push(req(1, 9)).expect("flush");
+        assert_eq!(batch.rows, 9);
+    }
+
+    #[test]
+    fn empty_tick_is_noop() {
+        let mut b = Batcher::new(4, 1);
+        assert!(b.tick().is_none());
+        assert!(b.flush().is_none());
+    }
+}

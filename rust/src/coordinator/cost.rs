@@ -1,0 +1,81 @@
+//! Pre-characterized energy costs for the request path.
+//!
+//! Driving the gate-level simulator inside the serving loop would put
+//! the cost model on the hot path; instead the coordinator characterizes
+//! each pipeline block once at startup (random-operand runs at the
+//! deployment frequency) and charges per-cycle averages thereafter.
+
+use crate::bits::format::SimdFormat;
+use crate::energy::model::SynthesizedSoftPipeline;
+use crate::rtl::crossbar::config_table;
+use crate::workload::synth::XorShift64;
+
+/// Per-format average energies (pJ) at a fixed clock.
+#[derive(Debug, Clone)]
+pub struct CostTable {
+    pub mhz: f64,
+    /// pJ per Stage-1 multiply cycle, indexed by format bits.
+    pub s1_cycle_pj: Vec<(u32, f64)>,
+    /// pJ per Stage-2 crossbar pass (averaged over conversions).
+    pub s2_pass_pj: f64,
+    /// Pipeline area (µm²) for reporting.
+    pub area_um2: f64,
+}
+
+impl CostTable {
+    /// Characterize at `mhz` (a few hundred random words per format).
+    pub fn characterize(mhz: f64) -> CostTable {
+        let mut pipe = SynthesizedSoftPipeline::new(mhz);
+        let mut rng = XorShift64::new(0xC057);
+        let mut s1 = vec![];
+        for fmt in SimdFormat::all() {
+            let n = 60;
+            let (pj, cycles) = pipe.word_mult_energy_pj(fmt.bits, fmt.bits, fmt.bits, n, &mut rng);
+            s1.push((fmt.bits, pj / cycles.max(1) as f64));
+        }
+        // Average crossbar pass cost across a few conversions.
+        let cfgs = config_table();
+        let mut total = 0.0;
+        let mut count = 0;
+        for cfg in cfgs.iter().take(6) {
+            total += pipe.repack_energy_pj(cfg, 40, &mut rng);
+            count += 40;
+        }
+        let area = pipe.area().total();
+        CostTable {
+            mhz,
+            s1_cycle_pj: s1,
+            s2_pass_pj: total / count as f64,
+            area_um2: area,
+        }
+    }
+
+    pub fn s1_pj(&self, fmt: SimdFormat) -> f64 {
+        self.s1_cycle_pj
+            .iter()
+            .find(|&&(b, _)| b == fmt.bits)
+            .map(|&(_, v)| v)
+            .unwrap_or(1.0)
+    }
+
+    /// Energy of a workload expressed in cycles.
+    pub fn energy_pj(&self, s1_cycles: u64, fmt: SimdFormat, s2_passes: u64) -> f64 {
+        s1_cycles as f64 * self.s1_pj(fmt) + s2_passes as f64 * self.s2_pass_pj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn characterization_produces_positive_costs() {
+        let t = CostTable::characterize(1000.0);
+        for &(b, pj) in &t.s1_cycle_pj {
+            assert!(pj > 0.0, "format {b}");
+            assert!(pj < 10.0, "format {b}: {pj} pJ/cycle implausible");
+        }
+        assert!(t.s2_pass_pj > 0.0);
+        assert!(t.area_um2 > 100.0);
+    }
+}

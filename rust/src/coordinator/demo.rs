@@ -1,0 +1,53 @@
+//! `softsimd serve` — the coordinator demo loop on the standard
+//! synthetic-digits model (the AOT-baked MLP when artifacts exist, a
+//! locally-quantized equivalent otherwise).
+
+use std::time::Instant;
+
+use super::cost::CostTable;
+use super::server::{Coordinator, Request};
+use crate::nn::exec::argmax_class;
+use crate::workload::synth::Digits;
+
+/// Serve `n` single-image requests; print accuracy/latency/throughput.
+pub fn serve_demo(n: usize) -> anyhow::Result<()> {
+    let weights_path = std::path::Path::new("artifacts/mlp_weights.txt");
+    anyhow::ensure!(
+        weights_path.exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let layers = crate::nn::weights::load_weight_file(weights_path)?;
+    println!("characterizing pipeline energy at 1 GHz…");
+    let cost = CostTable::characterize(1000.0);
+    println!(
+        "pipeline area {:.0} µm²; stage-1 ≈ {:.3} pJ/cycle @8b",
+        cost.area_um2,
+        cost.s1_pj(crate::bits::format::SimdFormat::new(8))
+    );
+    let digits = Digits::standard();
+    let (xs, ys) = digits.sample(n, 0.3, 0x5E21E);
+
+    let mut coord = Coordinator::start(layers, 8, 16, 4, 12, cost);
+    let t0 = Instant::now();
+    for (id, row) in xs.iter().enumerate() {
+        coord.submit(Request { id: id as u64, rows: vec![row.clone()] });
+    }
+    let responses = coord.drain();
+    let wall = t0.elapsed();
+
+    let mut correct = 0;
+    for resp in &responses {
+        if argmax_class(&resp.logits[0], 10) == ys[resp.id as usize] {
+            correct += 1;
+        }
+    }
+    println!(
+        "served {n} requests in {:.2} ms ({:.0} req/s), accuracy {:.1}%",
+        wall.as_secs_f64() * 1e3,
+        n as f64 / wall.as_secs_f64(),
+        correct as f64 / n as f64 * 100.0
+    );
+    println!("{}", coord.metrics.report());
+    coord.shutdown();
+    Ok(())
+}

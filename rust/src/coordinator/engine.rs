@@ -1,0 +1,198 @@
+//! Packed MLP execution on a simulated PE.
+//!
+//! Layer semantics are pinned in DESIGN.md §4 and must match
+//! `nn::exec::mlp_forward_row` bit-exactly — the integration tests
+//! enforce it. The engine packs the *batch* dimension into sub-words:
+//! every sample's activation `x[m][k]` for a fixed `k` shares the same
+//! weight multiplier `w[k][n]`, which is exactly the "one multiplier,
+//! several multiplicands" pattern of Section III-B.
+
+use crate::bits::format::SimdFormat;
+use crate::bits::pack::{pack_stream, unpack_stream};
+use crate::bits::swar::swar_add;
+use crate::csd::schedule::MulPlan;
+use crate::nn::weights::QuantLayer;
+use crate::pipeline::stage1::Stage1;
+use crate::pipeline::stage2::{repack_cycles, repack_stream};
+
+/// Cycle/energy tallies of one engine run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    pub s1_cycles: u64,
+    pub s2_passes: u64,
+    pub acc_adds: u64,
+    pub subword_mults: u64,
+}
+
+/// A packed-execution engine bound to one PE.
+pub struct PackedMlpEngine {
+    pub in_bits: u32,
+    pub acc_bits: u32,
+    /// Per-layer, per-(k,n) multiply plans, precompiled.
+    plans: Vec<Vec<Vec<MulPlan>>>,
+    layers: Vec<QuantLayer>,
+}
+
+impl PackedMlpEngine {
+    pub fn new(layers: Vec<QuantLayer>, in_bits: u32, acc_bits: u32) -> Self {
+        let plans = crate::nn::exec::precompute_plans(&layers);
+        PackedMlpEngine { in_bits, acc_bits, plans, layers }
+    }
+
+    pub fn layers(&self) -> &[QuantLayer] {
+        &self.layers
+    }
+
+    /// Forward a batch (rows of `Q1.(in_bits-1)` raws) through all
+    /// layers using packed arithmetic; returns final accumulators
+    /// (`Q1.(acc_bits-1)`) per row, plus tallies.
+    pub fn forward_batch(&self, batch: &[Vec<i64>]) -> (Vec<Vec<i64>>, EngineStats) {
+        let m = batch.len();
+        let in_fmt = SimdFormat::new(self.in_bits);
+        let acc_fmt = SimdFormat::new(self.acc_bits);
+        let mut stats = EngineStats::default();
+        // h[k][m] activations, column-major for packing across batch.
+        let mut h: Vec<Vec<i64>> = (0..batch[0].len())
+            .map(|k| batch.iter().map(|row| row[k]).collect())
+            .collect();
+        let mut s1 = Stage1::new(in_fmt);
+        for (li, layer) in self.layers.iter().enumerate() {
+            assert_eq!(h.len(), layer.k, "layer {li} input width");
+            // Pack each activation column across the batch.
+            let packed_cols: Vec<Vec<u64>> =
+                h.iter().map(|col| pack_stream(col, in_fmt)).collect();
+            let acc_words_per_n = (m * self.acc_bits as usize).div_ceil(48);
+            // Fast path: the accumulate format is exactly double the
+            // input format (8→16 here) — use the SWAR widen instead of
+            // the generic stream repack (EXPERIMENTS.md §Perf).
+            let doubling = self.acc_bits == 2 * self.in_bits;
+            let mut out_cols: Vec<Vec<i64>> = Vec::with_capacity(layer.n);
+            let mut acc16 = vec![0u64; acc_words_per_n];
+            for n in 0..layer.n {
+                acc16.iter_mut().for_each(|w| *w = 0);
+                for k in 0..layer.k {
+                    let plan = &self.plans[li][k][n];
+                    if plan.ops.is_empty() {
+                        continue; // zero weight: zero-skipped entirely
+                    }
+                    s1.set_fmt(in_fmt);
+                    if doubling {
+                        for (wi, &word) in packed_cols[k].iter().enumerate() {
+                            s1.load_x(word);
+                            let prod = s1.run_plan(plan);
+                            let (lo, hi) = crate::pipeline::stage2::widen_double(prod, in_fmt);
+                            acc16[2 * wi] = swar_add(acc16[2 * wi], lo, acc_fmt);
+                            if 2 * wi + 1 < acc16.len() {
+                                acc16[2 * wi + 1] =
+                                    swar_add(acc16[2 * wi + 1], hi, acc_fmt);
+                            }
+                            stats.acc_adds += 2;
+                        }
+                    } else {
+                        // Generic path through the canonical stream repack.
+                        let mut products = Vec::with_capacity(packed_cols[k].len());
+                        for &word in &packed_cols[k] {
+                            s1.load_x(word);
+                            products.push(s1.run_plan(plan));
+                        }
+                        let wide = repack_stream(&products, in_fmt, acc_fmt, m);
+                        for (w, &p) in acc16.iter_mut().zip(wide.iter()) {
+                            *w = swar_add(*w, p, acc_fmt);
+                            stats.acc_adds += 1;
+                        }
+                    }
+                    stats.s1_cycles +=
+                        plan.cycles() as u64 * packed_cols[k].len() as u64;
+                    stats.subword_mults +=
+                        in_fmt.lanes() as u64 * packed_cols[k].len() as u64;
+                    stats.s2_passes += repack_cycles(packed_cols[k].len(), in_fmt, acc_fmt);
+                }
+                out_cols.push(unpack_stream(&acc16, acc_fmt, m));
+            }
+            if li + 1 < self.layers.len() {
+                // ReLU + requantize (activation unit, scalar glue).
+                h = out_cols
+                    .iter()
+                    .map(|col| {
+                        col.iter()
+                            .map(|&v| v.max(0) >> (self.acc_bits - self.in_bits))
+                            .collect()
+                    })
+                    .collect();
+            } else {
+                // Transpose back to row-major.
+                let out: Vec<Vec<i64>> = (0..m)
+                    .map(|b| out_cols.iter().map(|col| col[b]).collect())
+                    .collect();
+                return (out, stats);
+            }
+        }
+        unreachable!("empty layer stack")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::exec::mlp_forward_row;
+    use crate::workload::synth::XorShift64;
+
+    fn random_layers(rng: &mut XorShift64) -> Vec<QuantLayer> {
+        let mk = |k: usize, n: usize, rng: &mut XorShift64| {
+            QuantLayer::new(
+                (0..k)
+                    .map(|_| (0..n).map(|_| rng.q_raw(8)).collect())
+                    .collect(),
+                8,
+            )
+        };
+        vec![mk(10, 6, rng), mk(6, 4, rng)]
+    }
+
+    #[test]
+    fn packed_engine_matches_scalar_reference() {
+        let mut rng = XorShift64::new(0xE8E8);
+        let layers = random_layers(&mut rng);
+        let engine = PackedMlpEngine::new(layers.clone(), 8, 16);
+        for batch_size in [1usize, 3, 6, 16, 17] {
+            let batch: Vec<Vec<i64>> = (0..batch_size)
+                .map(|_| (0..10).map(|_| rng.q_raw(8)).collect())
+                .collect();
+            let (got, stats) = engine.forward_batch(&batch);
+            for (b, row) in batch.iter().enumerate() {
+                let want = mlp_forward_row(row, &layers, 8, 16);
+                assert_eq!(got[b], want, "batch row {b} (size {batch_size})");
+            }
+            assert!(stats.s1_cycles > 0);
+            assert!(stats.s2_passes > 0);
+        }
+    }
+
+    #[test]
+    fn zero_weights_cost_nothing() {
+        let layers = vec![QuantLayer::new(vec![vec![0, 64], vec![0, -32]], 8)];
+        let engine = PackedMlpEngine::new(layers, 8, 16);
+        let batch = vec![vec![100i64, -50], vec![25, 77]];
+        let (_, stats) = engine.forward_batch(&batch);
+        // Column n=0 is all-zero weights: only n=1's two weights run.
+        let plan_cycles: u64 = [64i64, -32]
+            .iter()
+            .map(|&w| crate::csd::schedule::schedule(w, 8).cycles() as u64)
+            .sum();
+        assert_eq!(stats.s1_cycles, plan_cycles); // one packed word per column
+    }
+
+    #[test]
+    fn stats_scale_with_batch_words() {
+        let mut rng = XorShift64::new(0x57A7);
+        let layers = random_layers(&mut rng);
+        let engine = PackedMlpEngine::new(layers, 8, 16);
+        let mk_batch = |n: usize, rng: &mut XorShift64| -> Vec<Vec<i64>> {
+            (0..n).map(|_| (0..10).map(|_| rng.q_raw(8)).collect()).collect()
+        };
+        let (_, s6) = engine.forward_batch(&mk_batch(6, &mut rng));
+        let (_, s12) = engine.forward_batch(&mk_batch(12, &mut rng));
+        // 6 rows = 1 packed word per column; 12 rows = 2 words.
+        assert_eq!(s12.s1_cycles, 2 * s6.s1_cycles);
+    }
+}

@@ -1,0 +1,73 @@
+//! Serving metrics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared counters (lock-free; updated by PE workers).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub rows: AtomicU64,
+    pub subword_mults: AtomicU64,
+    pub s1_cycles: AtomicU64,
+    pub s2_passes: AtomicU64,
+    /// Simulated energy, femto-joules (integer for atomic accumulation).
+    pub energy_fj: AtomicU64,
+    /// Wall time spent in PE compute, nanoseconds.
+    pub compute_ns: AtomicU64,
+}
+
+impl Metrics {
+    pub fn add_batch(&self, rows: u64, stats: crate::coordinator::engine::EngineStats, pj: f64, ns: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(rows, Ordering::Relaxed);
+        self.subword_mults.fetch_add(stats.subword_mults, Ordering::Relaxed);
+        self.s1_cycles.fetch_add(stats.s1_cycles, Ordering::Relaxed);
+        self.s2_passes.fetch_add(stats.s2_passes, Ordering::Relaxed);
+        self.energy_fj.fetch_add((pj * 1000.0) as u64, Ordering::Relaxed);
+        self.compute_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn report(&self) -> String {
+        let rows = self.rows.load(Ordering::Relaxed);
+        let mults = self.subword_mults.load(Ordering::Relaxed);
+        let cycles = self.s1_cycles.load(Ordering::Relaxed);
+        let pj = self.energy_fj.load(Ordering::Relaxed) as f64 / 1000.0;
+        let ns = self.compute_ns.load(Ordering::Relaxed).max(1);
+        format!(
+            "requests={} batches={} rows={} subword_mults={} s1_cycles={} \
+             s2_passes={} sim_energy={:.2} nJ mean_pJ/mult={:.3} \
+             host_throughput={:.1} Mmult/s",
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            rows,
+            mults,
+            cycles,
+            self.s2_passes.load(Ordering::Relaxed),
+            pj / 1000.0,
+            if mults > 0 { pj / mults as f64 } else { 0.0 },
+            mults as f64 / (ns as f64 / 1000.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let m = Metrics::default();
+        let stats = crate::coordinator::engine::EngineStats {
+            s1_cycles: 10,
+            s2_passes: 2,
+            acc_adds: 5,
+            subword_mults: 60,
+        };
+        m.add_batch(6, stats, 1.5, 100);
+        m.add_batch(6, stats, 1.5, 100);
+        assert_eq!(m.rows.load(Ordering::Relaxed), 12);
+        assert_eq!(m.subword_mults.load(Ordering::Relaxed), 120);
+        assert!(m.report().contains("rows=12"));
+    }
+}

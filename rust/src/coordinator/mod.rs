@@ -1,0 +1,26 @@
+//! The near-memory coordinator (L3): the runtime that turns the
+//! simulated Soft SIMD pipelines into a deployable accelerator.
+//!
+//! Shape: a request router + dynamic batcher in front of a pool of
+//! worker threads, each owning one simulated processing element (a
+//! [`crate::pipeline::PipelineSim`] bank-attached pipeline). Quantized
+//! NN layers execute *packed*: activations are packed across the batch
+//! dimension (the sub-words sharing one CSD multiplier — the paper's
+//! "multiplier value with several multiplicands"), products are
+//! Stage-2-repacked 8→16 and accumulated with boundary-killed adds.
+//!
+//! Offline-image note: the std thread + channel fabric stands in for
+//! tokio (DESIGN.md §2); the public API is synchronous `submit`/`join`.
+
+pub mod batcher;
+pub mod cost;
+pub mod demo;
+pub mod engine;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{Batch, Batcher};
+pub use cost::CostTable;
+pub use engine::PackedMlpEngine;
+pub use metrics::Metrics;
+pub use server::{Coordinator, Request, Response};

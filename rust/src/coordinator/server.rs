@@ -1,0 +1,239 @@
+//! The coordinator: request intake → dynamic batcher → PE worker pool.
+//!
+//! Leader thread owns the batcher; worker threads own one
+//! [`PackedMlpEngine`] each (the near-memory PEs). Channels carry formed
+//! batches out and scattered responses back — the same leader/worker
+//! shape a vLLM-style router uses, scaled to this paper's accelerator.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::batcher::{Batch, Batcher};
+use super::cost::CostTable;
+use super::engine::PackedMlpEngine;
+use super::metrics::Metrics;
+use crate::bits::format::SimdFormat;
+use crate::nn::weights::QuantLayer;
+
+/// An inference request: rows of quantized activations.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub rows: Vec<Vec<i64>>,
+}
+
+/// Its response: per-row `Q1.(acc_bits-1)` logits.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<Vec<i64>>,
+}
+
+enum WorkerMsg {
+    Work(Batch),
+    Stop,
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    batcher: Batcher,
+    tx_work: Vec<Sender<WorkerMsg>>,
+    rx_done: Receiver<Vec<Response>>,
+    workers: Vec<JoinHandle<()>>,
+    next_worker: usize,
+    pub metrics: Arc<Metrics>,
+    in_flight: usize,
+}
+
+impl Coordinator {
+    /// Spawn `n_pes` worker PEs serving the given model.
+    pub fn start(
+        layers: Vec<QuantLayer>,
+        in_bits: u32,
+        acc_bits: u32,
+        n_pes: usize,
+        target_rows: usize,
+        cost: CostTable,
+    ) -> Coordinator {
+        let metrics = Arc::new(Metrics::default());
+        let (tx_done, rx_done) = channel::<Vec<Response>>();
+        let mut tx_work = vec![];
+        let mut workers = vec![];
+        let cost = Arc::new(cost);
+        for _ in 0..n_pes {
+            let (tx, rx) = channel::<WorkerMsg>();
+            tx_work.push(tx);
+            let done = tx_done.clone();
+            let m = Arc::clone(&metrics);
+            let c = Arc::clone(&cost);
+            let engine = PackedMlpEngine::new(layers.clone(), in_bits, acc_bits);
+            workers.push(std::thread::spawn(move || {
+                worker_loop(engine, rx, done, m, c);
+            }));
+        }
+        Coordinator {
+            batcher: Batcher::new(target_rows, 4),
+            tx_work,
+            rx_done,
+            workers,
+            next_worker: 0,
+            metrics,
+            in_flight: 0,
+        }
+    }
+
+    fn dispatch(&mut self, batch: Batch) {
+        let w = self.next_worker % self.tx_work.len();
+        self.next_worker += 1;
+        self.in_flight += 1;
+        self.tx_work[w]
+            .send(WorkerMsg::Work(batch))
+            .expect("worker alive");
+    }
+
+    /// Submit a request (may trigger a batch dispatch).
+    pub fn submit(&mut self, req: Request) {
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        if let Some(batch) = self.batcher.push(req) {
+            self.dispatch(batch);
+        }
+    }
+
+    /// Flush stragglers and wait for every response.
+    pub fn drain(&mut self) -> Vec<Response> {
+        if let Some(batch) = self.batcher.flush() {
+            self.dispatch(batch);
+        }
+        let mut out = vec![];
+        while self.in_flight > 0 {
+            let mut rs = self.rx_done.recv().expect("worker response");
+            out.append(&mut rs);
+            self.in_flight -= 1;
+        }
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    /// Stop workers and join.
+    pub fn shutdown(mut self) {
+        for tx in &self.tx_work {
+            let _ = tx.send(WorkerMsg::Stop);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    engine: PackedMlpEngine,
+    rx: Receiver<WorkerMsg>,
+    done: Sender<Vec<Response>>,
+    metrics: Arc<Metrics>,
+    cost: Arc<CostTable>,
+) {
+    let in_fmt = SimdFormat::new(engine.in_bits);
+    while let Ok(WorkerMsg::Work(batch)) = rx.recv() {
+        let t0 = Instant::now();
+        // Gather rows, run packed, scatter back per request.
+        let rows: Vec<Vec<i64>> = batch
+            .requests
+            .iter()
+            .flat_map(|r| r.rows.iter().cloned())
+            .collect();
+        let (logits, stats) = engine.forward_batch(&rows);
+        let ns = t0.elapsed().as_nanos() as u64;
+        let pj = cost.energy_pj(stats.s1_cycles, in_fmt, stats.s2_passes);
+        metrics.add_batch(rows.len() as u64, stats, pj, ns);
+        let mut responses = vec![];
+        let mut offset = 0;
+        for req in &batch.requests {
+            let n = req.rows.len();
+            responses.push(Response {
+                id: req.id,
+                logits: logits[offset..offset + n].to_vec(),
+            });
+            offset += n;
+        }
+        done.send(responses).expect("leader alive");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::exec::mlp_forward_row;
+    use crate::workload::synth::XorShift64;
+
+    fn layers(rng: &mut XorShift64) -> Vec<QuantLayer> {
+        vec![
+            QuantLayer::new(
+                (0..8).map(|_| (0..5).map(|_| rng.q_raw(8)).collect()).collect(),
+                8,
+            ),
+            QuantLayer::new(
+                (0..5).map(|_| (0..3).map(|_| rng.q_raw(8)).collect()).collect(),
+                8,
+            ),
+        ]
+    }
+
+    fn tiny_cost() -> CostTable {
+        CostTable {
+            mhz: 1000.0,
+            s1_cycle_pj: crate::bits::format::FORMATS.iter().map(|&b| (b, 1.0)).collect(),
+            s2_pass_pj: 0.5,
+            area_um2: 1000.0,
+        }
+    }
+
+    #[test]
+    fn coordinator_round_trip_matches_reference() {
+        let mut rng = XorShift64::new(0xC00D);
+        let ls = layers(&mut rng);
+        let mut coord = Coordinator::start(ls.clone(), 8, 16, 2, 6, tiny_cost());
+        let reqs: Vec<Request> = (0..9u64)
+            .map(|id| Request {
+                id,
+                rows: (0..(1 + (id as usize % 3)))
+                    .map(|_| (0..8).map(|_| rng.q_raw(8)).collect())
+                    .collect(),
+            })
+            .collect();
+        let expected: Vec<Vec<Vec<i64>>> = reqs
+            .iter()
+            .map(|r| r.rows.iter().map(|row| mlp_forward_row(row, &ls, 8, 16)).collect())
+            .collect();
+        for r in reqs {
+            coord.submit(r);
+        }
+        let responses = coord.drain();
+        assert_eq!(responses.len(), 9);
+        for resp in &responses {
+            assert_eq!(resp.logits, expected[resp.id as usize], "request {}", resp.id);
+        }
+        assert!(coord.metrics.subword_mults.load(Ordering::Relaxed) > 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batching_groups_requests() {
+        let mut rng = XorShift64::new(0xBA7);
+        let ls = layers(&mut rng);
+        let mut coord = Coordinator::start(ls, 8, 16, 1, 12, tiny_cost());
+        for id in 0..12u64 {
+            coord.submit(Request {
+                id,
+                rows: vec![(0..8).map(|_| rng.q_raw(8)).collect()],
+            });
+        }
+        let responses = coord.drain();
+        assert_eq!(responses.len(), 12);
+        let batches = coord.metrics.batches.load(Ordering::Relaxed);
+        assert!(batches <= 2, "expected ≤2 batches, got {batches}");
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,190 @@
+//! Canonical Signed Digit recoding.
+//!
+//! A multiplier is a `Q1.Y` value, i.e. a `(Y+1)`-bit two's-complement
+//! integer `M` representing `M / 2^Y ∈ [-1, 1)`. Its CSD form is the
+//! unique radix-2 signed-digit string `d_0 .. d_Y` (digit `d_j` has
+//! weight `2^-j`; `d_0` is the integer-position digit) with
+//! `M/2^Y = Σ d_j 2^-j`, digits in {-1, 0, +1} and **no two adjacent
+//! nonzero digits**. CSD strings average ~2/3 zero digits, which is what
+//! the shift-coalescing pipeline exploits (Section II-B).
+
+/// One signed digit. `P` = +1, `Z` = 0, `N` = −1 (printed `1`, `0`, `-`
+/// as in the paper's example "0-01").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Digit {
+    P,
+    Z,
+    N,
+}
+
+impl Digit {
+    #[inline]
+    pub fn value(self) -> i64 {
+        match self {
+            Digit::P => 1,
+            Digit::Z => 0,
+            Digit::N => -1,
+        }
+    }
+
+    pub fn from_value(v: i64) -> Digit {
+        match v {
+            1 => Digit::P,
+            0 => Digit::Z,
+            -1 => Digit::N,
+            _ => panic!("not a signed digit: {v}"),
+        }
+    }
+
+    pub fn symbol(self) -> char {
+        match self {
+            Digit::P => '1',
+            Digit::Z => '0',
+            Digit::N => '-',
+        }
+    }
+}
+
+/// CSD-encode the `(y_bits)`-bit two's-complement raw multiplier `m_raw`
+/// (a `Q1.(y_bits-1)` value). Returns digits **most-significant first**:
+/// `out[0]` has weight `2^0` (the integer position), `out[j]` weight
+/// `2^-j`, `out.len() == y_bits`.
+///
+/// Classic recoding: scan LSB→MSB over `M`; when a run of ones is found,
+/// replace `0111..1` by `1000..0-1`. Implemented arithmetically: digit at
+/// position i (LSB-indexed) is nonzero iff bit i of `M' = M + (M<<1)`'s
+/// carry structure flips — we use the standard `(m + lsb) ...` loop form
+/// for clarity instead.
+pub fn csd_encode(m_raw: i64, y_bits: u32) -> Vec<Digit> {
+    assert!(y_bits >= 2 && y_bits <= 48);
+    let half = 1i64 << (y_bits - 1);
+    assert!(
+        m_raw >= -half && m_raw < half,
+        "multiplier raw {m_raw} out of Q1.{} range",
+        y_bits - 1
+    );
+    // Work LSB-first on a widening copy; CSD of an n-bit two's-complement
+    // number never needs a digit above weight 2^(n-1) *for values in
+    // [-2^(n-1), 2^(n-1))*: the borrow absorbed by the sign position keeps
+    // the string within n digits.
+    let mut m = m_raw;
+    let mut digits_lsb: Vec<Digit> = Vec::with_capacity(y_bits as usize);
+    for _ in 0..y_bits {
+        if m & 1 == 0 {
+            digits_lsb.push(Digit::Z);
+        } else {
+            // Choose d = ±1 so that (m − d) is divisible by 4 when
+            // possible, i.e. d = 2 − (m mod 4) mapped to {+1, −1}:
+            // m ≡ 1 (mod 4) → d = +1 ; m ≡ 3 (mod 4) → d = −1.
+            let d = if m & 3 == 1 { Digit::P } else { Digit::N };
+            digits_lsb.push(d);
+            m -= d.value();
+        }
+        m >>= 1; // arithmetic
+    }
+    debug_assert_eq!(m, 0, "CSD residual for {m_raw} @ {y_bits} bits");
+    digits_lsb.reverse(); // MSB-first
+    digits_lsb
+}
+
+/// Decode a MSB-first digit string back to the raw `Q1.(len-1)` integer:
+/// `raw = Σ_j d_j · 2^(len-1-j)`.
+pub fn csd_decode(digits: &[Digit]) -> i64 {
+    let n = digits.len();
+    digits
+        .iter()
+        .enumerate()
+        .map(|(j, d)| d.value() << (n - 1 - j))
+        .sum()
+}
+
+/// Render as the paper's notation, e.g. `0-01` for −3/2^3... (MSB first).
+pub fn csd_string(digits: &[Digit]) -> String {
+    digits.iter().map(|d| d.symbol()).collect()
+}
+
+/// Number of nonzero digits (= number of add/sub operations a
+/// shift-add multiplier must perform).
+pub fn nonzero_count(digits: &[Digit]) -> usize {
+    digits.iter().filter(|d| !matches!(d, Digit::Z)).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encodes_paper_example() {
+        // Paper: "0-01" equals (−4) + 1 = −3 (4 digits, MSB first).
+        let d = csd_encode(-3, 4);
+        assert_eq!(csd_string(&d), "0-01");
+        assert_eq!(csd_decode(&d), -3);
+    }
+
+    #[test]
+    fn roundtrip_all_values_small_widths() {
+        for bits in [4u32, 6, 8, 12] {
+            let half = 1i64 << (bits - 1);
+            for m in -half..half {
+                let d = csd_encode(m, bits);
+                assert_eq!(d.len(), bits as usize);
+                assert_eq!(csd_decode(&d), m, "bits={bits} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_sampled_16bit() {
+        let half = 1i64 << 15;
+        let mut m = -half;
+        while m < half {
+            let d = csd_encode(m, 16);
+            assert_eq!(csd_decode(&d), m);
+            m += 37;
+        }
+    }
+
+    #[test]
+    fn no_adjacent_nonzero_digits() {
+        for bits in [4u32, 6, 8] {
+            let half = 1i64 << (bits - 1);
+            for m in -half..half {
+                let d = csd_encode(m, bits);
+                for w in d.windows(2) {
+                    assert!(
+                        matches!(w[0], Digit::Z) || matches!(w[1], Digit::Z),
+                        "adjacent nonzeros in {} for m={m}",
+                        csd_string(&d)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn minimality_vs_binary() {
+        // CSD has ≤ as many nonzero digits as plain binary for all values.
+        for m in -128i64..128 {
+            let d = csd_encode(m, 8);
+            let bin_ones = (m as u64 & 0xFF).count_ones() as usize;
+            // For negative m, binary two's complement nonzero count is a fair proxy.
+            assert!(nonzero_count(&d) <= bin_ones.max(1) + 1);
+        }
+    }
+
+    #[test]
+    fn minus_one_is_single_digit() {
+        // Q1.7 value −1.0 is raw −128 → CSD "-0000000".
+        let d = csd_encode(-128, 8);
+        assert_eq!(csd_string(&d), "-0000000");
+    }
+
+    #[test]
+    fn near_one_uses_top_digit() {
+        // 0.1111111 (raw 127) → 1.000000-1 needs weight 2^0 and 2^-7:
+        // MSB-first digits: P at j=0, N at j=7.
+        let d = csd_encode(127, 8);
+        assert_eq!(csd_string(&d), "1000000-");
+        assert_eq!(csd_decode(&d), 127);
+    }
+}

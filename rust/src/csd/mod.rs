@@ -1,0 +1,10 @@
+//! Canonical Signed Digit (CSD) encoding and the digit→cycle scheduler
+//! (Section II-B, III-B).
+
+pub mod encode;
+pub mod schedule;
+pub mod stats;
+
+pub use encode::{csd_decode, csd_encode, Digit};
+pub use schedule::{schedule, MulOp, MulPlan};
+pub use stats::{density, DensityStats};

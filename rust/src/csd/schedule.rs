@@ -1,0 +1,237 @@
+//! Digit → cycle scheduling for the sequential Soft SIMD multiplier
+//! (Section III-B, Fig. 3).
+//!
+//! Digits are processed least-significant first (descending position
+//! `j`, weight `2^-j`). Each clock cycle retires one nonzero digit plus
+//! up to `MAX_SHIFT − 1` zero positions above it as a fused
+//! add-then-shift (`acc ← (acc ± X) >> k`, the "10"/"100" patterns of
+//! Section III-B); zero runs longer than the shifter's reach become
+//! pure-shift cycles. The digit at position 0 (weight `2^0`) is retired
+//! with no trailing shift (`k = 0`).
+//!
+//! Zero-skipping: digit positions *below* the least-significant nonzero
+//! digit would shift an all-zero accumulator, so the controller skips
+//! them outright — they cost no cycles at all. A zero multiplier costs
+//! zero cycles.
+
+use super::encode::{csd_encode, Digit};
+use crate::bits::format::MAX_SHIFT;
+
+/// One Stage-1 cycle of a multiplication.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MulOp {
+    /// `acc ← (acc + X·sign) >>_arith shift`. `shift = 0` only for the
+    /// final position-0 digit (plain add, no shift).
+    AddShift { shift: u32, sign: i8 },
+    /// `acc ← acc >>_arith shift` (zero-run cycle), `shift ∈ 1..=MAX`.
+    Shift { shift: u32 },
+}
+
+impl MulOp {
+    pub fn shift(self) -> u32 {
+        match self {
+            MulOp::AddShift { shift, .. } | MulOp::Shift { shift } => shift,
+        }
+    }
+    pub fn is_add(self) -> bool {
+        matches!(self, MulOp::AddShift { .. })
+    }
+}
+
+/// A complete cycle-schedule for one multiplier value.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MulPlan {
+    /// Raw two's-complement multiplier the plan was derived from.
+    pub m_raw: i64,
+    /// Multiplier bitwidth (`Q1.(y_bits-1)`).
+    pub y_bits: u32,
+    /// Cycle operations, in issue order.
+    pub ops: Vec<MulOp>,
+}
+
+impl MulPlan {
+    /// Number of Stage-1 cycles the multiplication takes.
+    pub fn cycles(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Number of add/sub cycles (the rest are pure shifts).
+    pub fn adds(&self) -> usize {
+        self.ops.iter().filter(|o| o.is_add()).count()
+    }
+
+    /// Total shift distance — equals the position (weight `2^-j`) of the
+    /// least-significant nonzero digit: every processed position below
+    /// the top is crossed by exactly one shift unit.
+    pub fn total_shift(&self) -> u32 {
+        self.ops.iter().map(|o| o.shift()).sum()
+    }
+}
+
+/// Build the cycle schedule for multiplier `m_raw` at width `y_bits`,
+/// with per-cycle shifter reach `max_shift` (the paper's design point is
+/// 3; the ablation harness sweeps it).
+pub fn schedule_with(m_raw: i64, y_bits: u32, max_shift: u32) -> MulPlan {
+    assert!(max_shift >= 1);
+    let digits = csd_encode(m_raw, y_bits); // MSB-first: digits[j] has weight 2^-j
+    // Nonzero positions, processed in descending order (LSB side first).
+    let nz: Vec<(u32, i8)> = (0..y_bits)
+        .rev()
+        .filter_map(|j| match digits[j as usize] {
+            Digit::Z => None,
+            Digit::P => Some((j, 1i8)),
+            Digit::N => Some((j, -1i8)),
+        })
+        .collect();
+    let mut ops = Vec::with_capacity(nz.len() + 2);
+    for (idx, &(j, sign)) in nz.iter().enumerate() {
+        if j == 0 {
+            // Weight-2^0 digit: plain add, no trailing shift.
+            ops.push(MulOp::AddShift { shift: 0, sign });
+            continue;
+        }
+        // After this add the accumulator must move down j − t positions
+        // before the next retired digit (or the final resting position 0).
+        let t = nz.get(idx + 1).map(|&(tj, _)| tj).unwrap_or(0);
+        let dist = j - t;
+        let k = dist.min(max_shift);
+        ops.push(MulOp::AddShift { shift: k, sign });
+        let mut rem = dist - k;
+        while rem > 0 {
+            let s = rem.min(max_shift);
+            ops.push(MulOp::Shift { shift: s });
+            rem -= s;
+        }
+    }
+    MulPlan { m_raw, y_bits, ops }
+}
+
+/// Build the cycle schedule at the paper's design point (`max_shift = 3`).
+pub fn schedule(m_raw: i64, y_bits: u32) -> MulPlan {
+    schedule_with(m_raw, y_bits, MAX_SHIFT)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Exact (unbounded-precision) replay of a plan: with the multiplicand
+    /// scaled so shifts never truncate, the plan must compute exactly
+    /// `x · m / 2^(y-1)`.
+    fn exact_eval(plan: &MulPlan, x: i128) -> i128 {
+        let mut acc: i128 = 0;
+        for op in &plan.ops {
+            match *op {
+                MulOp::Shift { shift } => acc >>= shift,
+                MulOp::AddShift { shift, sign } => {
+                    acc += sign as i128 * x;
+                    acc >>= shift;
+                }
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn plans_compute_exact_products() {
+        for y in [4u32, 6, 8] {
+            let half = 1i64 << (y - 1);
+            for m in -half..half {
+                let plan = schedule(m, y);
+                let x: i128 = 12345i128 << 32; // headroom: shifts stay exact
+                assert_eq!(
+                    exact_eval(&plan, x),
+                    (x * m as i128) >> (y - 1),
+                    "m={m} y={y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn total_shift_is_lowest_nonzero_position() {
+        for y in [4u32, 8, 16] {
+            let half = 1i64 << (y - 1);
+            let mut m = -half;
+            while m < half {
+                let plan = schedule(m, y);
+                if m == 0 {
+                    assert_eq!(plan.cycles(), 0, "0 multiplier costs nothing");
+                } else {
+                    let digits = csd_encode(m, y);
+                    let lowest_nz = (0..y)
+                        .rev()
+                        .find(|&j| !matches!(digits[j as usize], Digit::Z))
+                        .unwrap();
+                    assert_eq!(plan.total_shift(), lowest_nz, "m={m} y={y}");
+                }
+                m += if y == 16 { 37 } else { 1 };
+            }
+        }
+    }
+
+    #[test]
+    fn shifts_bounded_and_zero_only_on_final_add() {
+        for m in -128i64..128 {
+            let plan = schedule(m, 8);
+            for (i, op) in plan.ops.iter().enumerate() {
+                match *op {
+                    MulOp::Shift { shift } => assert!(shift >= 1 && shift <= 3),
+                    MulOp::AddShift { shift, .. } => {
+                        assert!(shift <= 3);
+                        if shift == 0 {
+                            assert_eq!(i, plan.ops.len() - 1, "k=0 only final, m={m}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn add_count_equals_nonzero_digits() {
+        for m in -128i64..128 {
+            let plan = schedule(m, 8);
+            let digits = csd_encode(m, 8);
+            let nz = digits.iter().filter(|d| !matches!(d, Digit::Z)).count();
+            assert_eq!(plan.adds(), nz, "m={m}");
+        }
+    }
+
+    #[test]
+    fn paper_example_few_adds() {
+        // Fig. 3's multiplier 0.1110011 (raw 115 @ Q1.7, "01110011 before
+        // CSD"): plain binary needs 5 add cycles; CSD needs ≤4 and the
+        // whole multiplication fits in ≤5 cycles thanks to coalescing.
+        let plan = schedule(115, 8);
+        assert!(plan.adds() <= 4, "adds = {}", plan.adds());
+        assert!(plan.cycles() <= 5, "cycles = {}", plan.cycles());
+    }
+
+    #[test]
+    fn cycles_monotone_in_max_shift() {
+        for m in -128i64..128 {
+            let c1 = schedule_with(m, 8, 1).cycles();
+            let c2 = schedule_with(m, 8, 2).cycles();
+            let c3 = schedule_with(m, 8, 3).cycles();
+            let c4 = schedule_with(m, 8, 4).cycles();
+            assert!(c1 >= c2 && c2 >= c3 && c3 >= c4, "m={m}");
+        }
+    }
+
+    #[test]
+    fn minus_one_is_single_add_cycle() {
+        // m = −1.0: CSD "-0000000" → one AddShift{0, −} cycle: acc = −X.
+        let plan = schedule(-128, 8);
+        assert_eq!(plan.ops, vec![MulOp::AddShift { shift: 0, sign: -1 }]);
+    }
+
+    #[test]
+    fn max_shift_one_still_exact() {
+        for m in [-128i64, -37, -1, 1, 64, 115, 127] {
+            let plan = schedule_with(m, 8, 1);
+            let x: i128 = 999i128 << 32;
+            assert_eq!(exact_eval(&plan, x), (x * m as i128) >> 7);
+        }
+    }
+}

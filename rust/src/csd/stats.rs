@@ -1,0 +1,103 @@
+//! Digit-density statistics backing the paper's claim that ~2/3 of CSD
+//! digits are zero (Section II-B), and the expected cycle counts the
+//! energy model consumes.
+
+use super::encode::{csd_encode, nonzero_count};
+use super::schedule::schedule_with;
+
+
+/// Aggregate CSD statistics over all multipliers of a given width.
+#[derive(Debug, Clone, Copy)]
+pub struct DensityStats {
+    pub y_bits: u32,
+    /// Fraction of zero digits over all values of the width.
+    pub zero_fraction: f64,
+    /// Mean nonzero digits (= add/sub cycles) per multiplier.
+    pub mean_adds: f64,
+    /// Mean Stage-1 cycles per multiplication at max_shift = 3.
+    pub mean_cycles: f64,
+    /// Worst-case cycles.
+    pub max_cycles: usize,
+}
+
+/// Exhaustive statistics over every `y_bits`-wide multiplier (cheap up
+/// to 16 bits: 65536 values).
+pub fn density(y_bits: u32) -> DensityStats {
+    density_with(y_bits, crate::bits::format::MAX_SHIFT)
+}
+
+/// Same, with a configurable per-cycle shifter reach (ablation support).
+pub fn density_with(y_bits: u32, max_shift: u32) -> DensityStats {
+    let half = 1i64 << (y_bits - 1);
+    let total_values = (2 * half) as f64;
+    let mut zeros = 0usize;
+    let mut adds = 0usize;
+    let mut cycles = 0usize;
+    let mut max_cycles = 0usize;
+    for m in -half..half {
+        let d = csd_encode(m, y_bits);
+        let nz = nonzero_count(&d);
+        zeros += d.len() - nz;
+        adds += nz;
+        let c = schedule_with(m, y_bits, max_shift).cycles();
+        cycles += c;
+        max_cycles = max_cycles.max(c);
+    }
+    DensityStats {
+        y_bits,
+        zero_fraction: zeros as f64 / (total_values * y_bits as f64),
+        mean_adds: adds as f64 / total_values,
+        mean_cycles: cycles as f64 / total_values,
+        max_cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_thirds_zero_density() {
+        // Section II-B: ~2/3 of CSD digits are zeros. Asymptotically the
+        // density of nonzeros is 1/3; at small widths it is slightly
+        // below. Accept [0.60, 0.75].
+        for y in [8u32, 12, 16] {
+            let s = density(y);
+            assert!(
+                s.zero_fraction > 0.60 && s.zero_fraction < 0.75,
+                "y={y} zero fraction {}",
+                s.zero_fraction
+            );
+        }
+    }
+
+    #[test]
+    fn mean_cycles_well_below_width() {
+        // Shift coalescing must beat one-cycle-per-bit substantially.
+        for y in [8u32, 16] {
+            let s = density(y);
+            assert!(
+                s.mean_cycles < 0.62 * y as f64,
+                "y={y} mean cycles {}",
+                s.mean_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn max_cycles_bounded_by_width() {
+        for y in [4u32, 8, 16] {
+            let s = density(y);
+            assert!(s.max_cycles <= y as usize);
+        }
+    }
+
+    #[test]
+    fn wider_shifter_reduces_mean_cycles() {
+        let s1 = density_with(8, 1);
+        let s2 = density_with(8, 2);
+        let s3 = density_with(8, 3);
+        assert!(s1.mean_cycles > s2.mean_cycles);
+        assert!(s2.mean_cycles > s3.mean_cycles);
+    }
+}

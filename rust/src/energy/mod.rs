@@ -1,0 +1,10 @@
+//! The 28nm cost model: cells → µm², toggles → pJ, and the
+//! synthesis-pressure model that makes area and energy functions of the
+//! timing constraint (DESIGN.md §2, §6).
+
+pub mod model;
+pub mod report;
+pub mod tech;
+
+pub use model::{PipelineArea, SynthBlock, SynthesizedSoftPipeline};
+pub use tech::{CellCosts, TechParams, MHZ_POINTS};

@@ -1,0 +1,319 @@
+//! Synthesized-block and pipeline cost models.
+//!
+//! A [`SynthBlock`] wraps a netlist with: structural depth, NAND2-eq
+//! area, a weighted-toggle simulator, and a glitch class. Area and
+//! energy are functions of the synthesis timing constraint through the
+//! sizing model in [`super::tech`]. Register banks are costed
+//! analytically (clock + write energy per bit) from the activity the
+//! architecture model reports.
+
+use crate::rtl::gate::Netlist;
+use crate::rtl::sim::Simulator;
+use crate::rtl::timing::depth;
+
+use super::tech::{cell_costs, energy_factor, sizing, GlitchClass, TechParams, TECH28};
+
+/// A synthesized combinational block.
+pub struct SynthBlock {
+    pub net: Netlist,
+    pub glitch: GlitchClass,
+    pub depth_levels: u32,
+    pub area_eq: f64,
+    pub sim: Simulator,
+    pub tech: TechParams,
+}
+
+impl SynthBlock {
+    pub fn new(net: Netlist, glitch: GlitchClass) -> Self {
+        let depth_levels = depth(&net);
+        let area_eq: f64 = net.cells.iter().map(|c| cell_costs(c.kind).area_eq).sum();
+        let weights: Vec<f32> = net
+            .cells
+            .iter()
+            .map(|c| cell_costs(c.kind).toggle_fj as f32)
+            .collect();
+        let sim = Simulator::with_weights(&net, weights);
+        SynthBlock { net, glitch, depth_levels, area_eq, sim, tech: TECH28 }
+    }
+
+    /// Synthesis up-sizing factor at `mhz`.
+    pub fn sigma(&self, mhz: f64) -> f64 {
+        sizing(self.depth_levels, mhz, &self.tech)
+    }
+
+    /// Block area (µm²) under the timing constraint.
+    pub fn area_um2(&self, mhz: f64) -> f64 {
+        self.area_eq * self.sigma(mhz) * self.tech.nand2_um2
+    }
+
+    /// Nominal (unsized) critical path, ps.
+    pub fn path_ps(&self) -> f64 {
+        self.depth_levels as f64 * self.tech.gate_delay_ps
+    }
+
+    /// Drain the simulator's accumulated weighted energy into pJ at the
+    /// given constraint (applies glitch + sizing energy factors).
+    pub fn take_energy_pj(&mut self, mhz: f64) -> f64 {
+        let fj = self.sim.energy_fj;
+        self.sim.reset_counters();
+        fj * self.glitch.factor() * energy_factor(self.sigma(mhz)) * self.tech.energy_scale
+            / 1000.0
+    }
+
+    /// Leakage energy per cycle at `mhz`, pJ.
+    pub fn leak_pj_per_cycle(&self, mhz: f64) -> f64 {
+        // nW × ns = 1e-18 J = 1e-6 pJ
+        let period_ns = 1000.0 / mhz;
+        self.area_eq * self.sigma(mhz) * self.tech.leak_nw_per_eq * period_ns * 1e-6
+    }
+}
+
+/// Analytic register-bank cost.
+#[derive(Debug, Clone, Copy)]
+pub struct RegBank {
+    pub bits: u32,
+}
+
+impl RegBank {
+    pub fn area_um2(&self, _mhz: f64) -> f64 {
+        // Registers are sized for hold/clock, not logic depth.
+        self.bits as f64 * TECH28.dff_area_eq * TECH28.nand2_um2
+    }
+
+    /// Energy for one clocked cycle with `written` toggled bits, pJ.
+    pub fn cycle_pj(&self, written: u32) -> f64 {
+        (self.bits as f64 * TECH28.dff_clk_fj + written as f64 * TECH28.dff_write_fj) / 1000.0
+    }
+
+    pub fn leak_pj_per_cycle(&self, mhz: f64) -> f64 {
+        let period_ns = 1000.0 / mhz;
+        self.bits as f64 * TECH28.dff_area_eq * TECH28.leak_nw_per_eq * period_ns * 1e-6
+    }
+}
+
+/// Area breakdown of a pipeline (the Fig. 6 / Fig. 7 rows).
+#[derive(Debug, Clone)]
+pub struct PipelineArea {
+    pub name: String,
+    pub mhz: f64,
+    pub stage1_um2: f64,
+    pub stage2_um2: f64,
+    pub regs_um2: f64,
+}
+
+impl PipelineArea {
+    pub fn total(&self) -> f64 {
+        self.stage1_um2 + self.stage2_um2 + self.regs_um2
+    }
+}
+
+/// The Soft SIMD pipeline, synthesized at a timing constraint:
+/// Stage-1 datapath (adder variant picked by timing), Stage-2 crossbar,
+/// and the architectural registers of Fig. 2.
+pub struct SynthesizedSoftPipeline {
+    pub mhz: f64,
+    pub stage1: SynthBlock,
+    pub stage2: SynthBlock,
+    /// Stage-1 registers: Acc(48) + X(48) + V_x/ctrl(20).
+    pub s1_regs: RegBank,
+    /// Stage-2 registers: R2/R3/R4 (144) + config (8).
+    pub s2_regs: RegBank,
+    /// True when timing forced the carry-select adder.
+    pub restructured: bool,
+}
+
+impl SynthesizedSoftPipeline {
+    pub fn new(mhz: f64) -> Self {
+        // Synthesis decision: ripple if it fits in ~90% of the period
+        // after up-sizing headroom, else restructure to carry-select.
+        let ripple = crate::rtl::shifter::stage1_datapath(false);
+        let period_ps = 1.0e6 / mhz;
+        let ripple_path = depth(&ripple) as f64 * TECH28.gate_delay_ps;
+        // Up-sizing can close ~35% of negative slack; past that the flow
+        // restructures the carry (carry-select), trading area for depth.
+        let restructured = ripple_path > 1.35 * period_ps;
+        let stage1 = if restructured {
+            SynthBlock::new(
+                crate::rtl::shifter::stage1_datapath(true),
+                GlitchClass::AdderChain,
+            )
+        } else {
+            SynthBlock::new(ripple, GlitchClass::AdderChain)
+        };
+        let (xbar, _) = crate::rtl::crossbar::crossbar_netlist();
+        let stage2 = SynthBlock::new(xbar, GlitchClass::MuxNetwork);
+        SynthesizedSoftPipeline {
+            mhz,
+            stage1,
+            stage2,
+            s1_regs: RegBank { bits: 48 + 48 + 20 },
+            s2_regs: RegBank { bits: 144 + 8 },
+            restructured,
+        }
+    }
+
+    pub fn area(&self) -> PipelineArea {
+        PipelineArea {
+            name: "Soft SIMD".into(),
+            mhz: self.mhz,
+            stage1_um2: self.stage1.area_um2(self.mhz),
+            stage2_um2: self.stage2.area_um2(self.mhz),
+            regs_um2: self.s1_regs.area_um2(self.mhz) + self.s2_regs.area_um2(self.mhz),
+        }
+    }
+
+    /// Smallest Soft SIMD format holding `x_bits`-wide multiplicands.
+    pub fn fit_width(x_bits: u32) -> Option<u32> {
+        crate::bits::format::FORMATS
+            .iter()
+            .copied()
+            .filter(|&b| b >= x_bits)
+            .min()
+    }
+
+    /// Run `n_words` packed multiplications (random multiplicand words,
+    /// random `y_bits` multipliers) through the gate-level Stage-1
+    /// datapath; returns total pJ (datapath + registers + leakage).
+    ///
+    /// Stage-2 is bypassed/idle during multiplication: its registers are
+    /// clock-gated (leakage only) — the pipeline's sequential-multiply
+    /// energy story of Section IV-C.
+    pub fn word_mult_energy_pj(
+        &mut self,
+        b: u32,
+        x_bits: u32,
+        y_bits: u32,
+        n_words: usize,
+        rng: &mut crate::workload::synth::XorShift64,
+    ) -> (f64, u64) {
+        use crate::csd::schedule::{schedule, MulOp};
+        use crate::rtl::shifter::drive_stage1;
+        let fmt = crate::bits::format::SimdFormat::new(b);
+        self.stage1.sim.reset_counters();
+        let mut reg_pj = 0.0;
+        let mut cycles = 0u64;
+        let mut prev_x = 0u64;
+        let mut prev_acc = 0u64;
+        for _ in 0..n_words {
+            // Multiplicands: x_bits of information, value-aligned (Q1
+            // widening) inside the fitted b-bit lanes.
+            let lanes: Vec<i64> = (0..fmt.lanes())
+                .map(|_| rng.q_raw(x_bits) << (b - x_bits))
+                .collect();
+            let x = crate::bits::pack::pack(&lanes, fmt);
+            let m = rng.q_raw(y_bits);
+            let plan = schedule(m, y_bits);
+            // Loading X: one write into the X register.
+            let mut x_written = (x ^ prev_x).count_ones();
+            prev_x = x;
+            let mut acc = 0u64;
+            for op in &plan.ops {
+                let (k, sign) = match *op {
+                    MulOp::AddShift { shift, sign } => (shift, sign),
+                    MulOp::Shift { shift } => (shift, 0),
+                };
+                let out = drive_stage1(&mut self.stage1.sim, &self.stage1.net, acc, x, k, sign, fmt);
+                let written = (out ^ prev_acc).count_ones() + x_written;
+                x_written = 0; // X loads once per multiplication
+                reg_pj += self.s1_regs.cycle_pj(written);
+                prev_acc = out;
+                acc = out;
+                cycles += 1;
+            }
+        }
+        let dyn_pj = self.stage1.take_energy_pj(self.mhz);
+        let leak_pj = (self.stage1.leak_pj_per_cycle(self.mhz)
+            + self.stage2.leak_pj_per_cycle(self.mhz)
+            + self.s1_regs.leak_pj_per_cycle(self.mhz)
+            + self.s2_regs.leak_pj_per_cycle(self.mhz))
+            * cycles as f64;
+        (dyn_pj + reg_pj + leak_pj, cycles)
+    }
+
+    /// Energy per sub-word multiplication at operand widths
+    /// (x_bits × y_bits); picks the smallest fitting format.
+    pub fn subword_mult_energy_pj(
+        &mut self,
+        x_bits: u32,
+        y_bits: u32,
+        n_words: usize,
+        rng: &mut crate::workload::synth::XorShift64,
+    ) -> Option<f64> {
+        let b = Self::fit_width(x_bits)?;
+        let fmt = crate::bits::format::SimdFormat::new(b);
+        let (total, _) = self.word_mult_energy_pj(b, x_bits, y_bits, n_words, rng);
+        Some(total / (n_words as f64 * fmt.lanes() as f64))
+    }
+
+    /// Run `n_words` Stage-2 repack cycles (random windows) and return
+    /// total pJ — the Fig. 5 conversion cost model.
+    pub fn repack_energy_pj(
+        &mut self,
+        cfg: &crate::rtl::crossbar::XbarConfig,
+        n_words: usize,
+        rng: &mut crate::workload::synth::XorShift64,
+    ) -> f64 {
+        use crate::rtl::crossbar::drive_crossbar;
+        let cfgs = crate::rtl::crossbar::config_table();
+        self.stage2.sim.reset_counters();
+        let mut reg_pj = 0.0;
+        let mut prev_out = 0u64;
+        for _ in 0..n_words {
+            let window = (rng.word() as u128) | ((rng.word() as u128) << 48);
+            let out = drive_crossbar(&mut self.stage2.sim, &self.stage2.net, &cfgs, window, cfg);
+            let written = 96 + (out ^ prev_out).count_ones(); // R2:R3 refill + R4
+            reg_pj += self.s2_regs.cycle_pj(written);
+            prev_out = out;
+        }
+        let dyn_pj = self.stage2.take_energy_pj(self.mhz);
+        let leak = (self.stage2.leak_pj_per_cycle(self.mhz)
+            + self.s2_regs.leak_pj_per_cycle(self.mhz))
+            * n_words as f64;
+        dyn_pj + reg_pj + leak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtl::crossbar::crossbar_netlist;
+
+    #[test]
+    fn crossbar_area_flat_across_frequency() {
+        // Fig. 6 discussion: stage 2 is shallow — its area must not grow
+        // between 200 MHz and 1 GHz.
+        let (net, _) = crossbar_netlist();
+        let blk = SynthBlock::new(net, GlitchClass::MuxNetwork);
+        let a200 = blk.area_um2(200.0);
+        let a1000 = blk.area_um2(1000.0);
+        assert!((a1000 / a200 - 1.0).abs() < 0.05, "{a200} vs {a1000}");
+    }
+
+    #[test]
+    fn stage1_grows_with_frequency() {
+        let p200 = SynthesizedSoftPipeline::new(200.0);
+        let p1000 = SynthesizedSoftPipeline::new(1000.0);
+        let a200 = p200.area();
+        let a1000 = p1000.area();
+        assert!(
+            a1000.stage1_um2 > a200.stage1_um2 * 1.05,
+            "{} vs {}",
+            a200.stage1_um2,
+            a1000.stage1_um2
+        );
+    }
+
+    #[test]
+    fn restructuring_kicks_in_at_high_frequency() {
+        assert!(!SynthesizedSoftPipeline::new(200.0).restructured);
+        assert!(SynthesizedSoftPipeline::new(1000.0).restructured);
+    }
+
+    #[test]
+    fn regbank_costs_scale_with_bits() {
+        let small = RegBank { bits: 48 };
+        let big = RegBank { bits: 144 };
+        assert!(big.area_um2(500.0) > 2.9 * small.area_um2(500.0));
+        assert!(big.cycle_pj(10) > small.cycle_pj(10));
+    }
+}

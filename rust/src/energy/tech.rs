@@ -1,0 +1,140 @@
+//! 28nm-LP-class standard-cell characterization.
+//!
+//! Values are public-domain-plausible figures for a 28nm low-power
+//! process at 0.9 V, nominal corner (DESIGN.md §6): they set the
+//! *absolute* scale (so pJ numbers land in the paper's Fig. 8 range);
+//! every comparison in the evaluation depends only on ratios that come
+//! from real netlist structure and real switching activity.
+
+use crate::rtl::gate::CellKind;
+
+/// Per-kind standard-cell costs.
+#[derive(Debug, Clone, Copy)]
+pub struct CellCosts {
+    /// Area in NAND2 equivalents.
+    pub area_eq: f64,
+    /// Dynamic energy per output toggle, fJ (incl. local interconnect).
+    pub toggle_fj: f64,
+}
+
+/// Technology parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TechParams {
+    /// NAND2 footprint, µm².
+    pub nand2_um2: f64,
+    /// Nominal per-level delay, ps (FO4-ish at nominal drive).
+    pub gate_delay_ps: f64,
+    /// DFF area, NAND2-eq.
+    pub dff_area_eq: f64,
+    /// DFF clock (internal) energy per clocked cycle, fJ.
+    pub dff_clk_fj: f64,
+    /// DFF extra energy per *written* (toggled) bit, fJ.
+    pub dff_write_fj: f64,
+    /// Leakage per NAND2-eq, nW.
+    pub leak_nw_per_eq: f64,
+    /// Supply-referenced scale factor applied to all toggle energies.
+    pub energy_scale: f64,
+}
+
+pub const TECH28: TechParams = TechParams {
+    nand2_um2: 0.49,
+    gate_delay_ps: 32.0,
+    dff_area_eq: 4.5,
+    dff_clk_fj: 1.1,
+    dff_write_fj: 2.6,
+    leak_nw_per_eq: 0.35,
+    energy_scale: 1.0,
+};
+
+/// Costs per cell kind.
+pub fn cell_costs(kind: CellKind) -> CellCosts {
+    match kind {
+        CellKind::Input | CellKind::Const0 | CellKind::Const1 => {
+            CellCosts { area_eq: 0.0, toggle_fj: 0.0 }
+        }
+        CellKind::Inv => CellCosts { area_eq: 0.67, toggle_fj: 0.55 },
+        CellKind::Buf => CellCosts { area_eq: 1.0, toggle_fj: 0.75 },
+        CellKind::And2 | CellKind::Or2 => CellCosts { area_eq: 1.33, toggle_fj: 1.0 },
+        CellKind::Nand2 | CellKind::Nor2 => CellCosts { area_eq: 1.0, toggle_fj: 0.9 },
+        CellKind::Xor2 | CellKind::Xnor2 => CellCosts { area_eq: 2.33, toggle_fj: 1.9 },
+        CellKind::Mux2 => CellCosts { area_eq: 2.33, toggle_fj: 1.7 },
+    }
+}
+
+/// Zero-delay simulation sees no glitches; these block-class factors
+/// restore the energy glitching adds in real silicon (array multipliers
+/// glitch notoriously — 2–3× is the published range; short reconvergent
+/// mux networks barely glitch).
+#[derive(Debug, Clone, Copy)]
+pub enum GlitchClass {
+    MultiplierArray,
+    AdderChain,
+    MuxNetwork,
+}
+
+impl GlitchClass {
+    pub fn factor(self) -> f64 {
+        match self {
+            GlitchClass::MultiplierArray => 2.4,
+            GlitchClass::AdderChain => 1.30,
+            GlitchClass::MuxNetwork => 1.08,
+        }
+    }
+}
+
+/// The synthesis-pressure model (DESIGN.md §6): a block of structural
+/// depth `levels` synthesized at period `T = 1/f` is up-sized by
+///
+///   σ = 1                          for c ≤ 0.65
+///   σ = 1 + 1.35·(c − 0.65)^1.6    otherwise,  c = levels·d₀ / T
+///
+/// capped at σ ≤ 3.5 (beyond that a real flow restructures — modeled
+/// explicitly by the adder-variant switch in `model.rs`). Dynamic energy
+/// follows partially (bigger drivers, more wire): factor
+/// `1 + 0.55·(σ − 1)`; leakage follows σ fully.
+pub fn sizing(levels: u32, mhz: f64, p: &TechParams) -> f64 {
+    let period_ps = 1.0e6 / mhz;
+    let c = levels as f64 * p.gate_delay_ps / period_ps;
+    let sigma = if c <= 0.65 { 1.0 } else { 1.0 + 1.35 * (c - 0.65).powf(1.6) };
+    sigma.min(3.5)
+}
+
+pub fn energy_factor(sigma: f64) -> f64 {
+    1.0 + 0.55 * (sigma - 1.0)
+}
+
+/// The timing constraints evaluated in the paper (Fig. 6 uses 200 MHz
+/// and 1 GHz; Fig. 8 adds intermediate points).
+pub const MHZ_POINTS: [f64; 3] = [200.0, 500.0, 1000.0];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizing_is_monotone_in_frequency() {
+        for levels in [10u32, 30, 60] {
+            let s200 = sizing(levels, 200.0, &TECH28);
+            let s500 = sizing(levels, 500.0, &TECH28);
+            let s1000 = sizing(levels, 1000.0, &TECH28);
+            assert!(s200 <= s500 && s500 <= s1000, "{s200} {s500} {s1000}");
+        }
+    }
+
+    #[test]
+    fn shallow_blocks_do_not_grow() {
+        // A 8-level block at 1 GHz: c = 8·32/1000 = 0.26 → σ = 1.
+        assert_eq!(sizing(8, 1000.0, &TECH28), 1.0);
+    }
+
+    #[test]
+    fn deep_blocks_grow_hard_at_1ghz() {
+        let s = sizing(40, 1000.0, &TECH28);
+        assert!(s > 1.3, "{s}");
+    }
+
+    #[test]
+    fn sizing_caps() {
+        assert!(sizing(300, 1000.0, &TECH28) <= 3.5);
+    }
+}

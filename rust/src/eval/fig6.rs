@@ -1,0 +1,92 @@
+//! Fig. 6 — area of the Soft SIMD and Hard SIMD pipelines at 200 MHz
+//! and 1 GHz timing constraints, with the stage-level split the paper
+//! discusses (Stage-2 ~flat across frequency; Stage-1/registers grow).
+
+use crate::energy::model::{PipelineArea, SynthesizedSoftPipeline};
+use crate::energy::report::{table, um2};
+use crate::hardsimd::pipeline::{HardSimdPipeline, HARD_FLEX, HARD_TWO};
+
+pub fn areas() -> Vec<PipelineArea> {
+    let mut rows = vec![];
+    for &mhz in &[200.0, 1000.0] {
+        rows.push(SynthesizedSoftPipeline::new(mhz).area());
+        rows.push(HardSimdPipeline::new(HARD_FLEX, mhz).area());
+        rows.push(HardSimdPipeline::new(HARD_TWO, mhz).area());
+    }
+    rows
+}
+
+pub fn run() -> anyhow::Result<()> {
+    println!("== Fig. 6: pipeline area vs timing constraint (µm², 28nm model) ==");
+    let rows = areas();
+    let trows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|a| {
+            vec![
+                a.name.clone(),
+                format!("{} MHz", a.mhz),
+                um2(a.stage1_um2),
+                um2(a.stage2_um2),
+                um2(a.regs_um2),
+                um2(a.total()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        table(
+            &["design", "constraint", "stage1/mult", "stage2(pack)", "registers", "total"],
+            &trows
+        )
+    );
+    // The paper's observations, checked numerically:
+    let soft200 = &rows[0];
+    let flex200 = &rows[1];
+    let soft1000 = &rows[3];
+    let flex1000 = &rows[4];
+    let two1000 = &rows[5];
+    println!(
+        "soft vs Hard(4,6,8,12,16): {:.1}% smaller @200MHz, {:.1}% smaller @1GHz",
+        (1.0 - soft200.total() / flex200.total()) * 100.0,
+        (1.0 - soft1000.total() / flex1000.total()) * 100.0,
+    );
+    println!(
+        "Hard(8,16) vs soft: {:.1}% larger @1GHz (paper: >10% in all cases)",
+        (two1000.total() / soft1000.total() - 1.0) * 100.0
+    );
+    println!(
+        "stage2 growth 200MHz→1GHz: {:.1}% (paper: ~constant) | stage1: {:.1}%\n",
+        (soft1000.stage2_um2 / soft200.stage2_um2 - 1.0) * 100.0,
+        (soft1000.stage1_um2 / soft200.stage1_um2 - 1.0) * 100.0,
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_paper_shape_holds() {
+        let rows = areas();
+        // Row order: [soft, flex, two] × [200, 1000].
+        for chunk in rows.chunks(3) {
+            let (soft, flex, two) = (&chunk[0], &chunk[1], &chunk[2]);
+            assert!(
+                soft.total() < 0.5 * flex.total(),
+                "soft must be <half of flexible hard @{} MHz",
+                soft.mhz
+            );
+            assert!(
+                two.total() > 1.1 * soft.total(),
+                "Hard(8,16) must be >10% larger than soft @{} MHz",
+                soft.mhz
+            );
+            assert!(flex.total() > two.total(), "flex must exceed two-format");
+        }
+        // Stage 2 flat, stage 1 grows.
+        let (s200, s1000) = (&rows[0], &rows[3]);
+        assert!((s1000.stage2_um2 / s200.stage2_um2 - 1.0).abs() < 0.05);
+        assert!(s1000.stage1_um2 > 1.05 * s200.stage1_um2);
+    }
+}

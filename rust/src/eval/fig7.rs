@@ -1,0 +1,60 @@
+//! Fig. 7 — the paper shows the post-P&R layout; its quantitative
+//! content is the per-block area split, which we report as a
+//! floorplan-style breakdown (DESIGN.md §2 substitution).
+
+use crate::energy::model::SynthesizedSoftPipeline;
+use crate::energy::report::{pct, table, um2};
+
+pub fn run() -> anyhow::Result<()> {
+    println!("== Fig. 7: Soft SIMD floorplan proxy (per-block area @1GHz) ==");
+    let p = SynthesizedSoftPipeline::new(1000.0);
+    let a = p.area();
+    let total = a.total();
+    let rows = vec![
+        (
+            "stage1: configurable adder+shifter",
+            a.stage1_um2,
+            format!(
+                "{} cells, depth {} lvls{}",
+                p.stage1.net.logic_cells(),
+                p.stage1.depth_levels,
+                if p.restructured { " (carry-select)" } else { " (ripple)" }
+            ),
+        ),
+        (
+            "stage2: repacking crossbar",
+            a.stage2_um2,
+            format!(
+                "{} cells, depth {} lvls",
+                p.stage2.net.logic_cells(),
+                p.stage2.depth_levels
+            ),
+        ),
+        (
+            "registers (X, Acc, R2-R4, ctrl)",
+            a.regs_um2,
+            format!("{} flip-flops", p.s1_regs.bits + p.s2_regs.bits),
+        ),
+    ];
+    let trows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(n, v, d)| vec![n.to_string(), um2(*v), pct(v / total), d.clone()])
+        .collect();
+    println!("{}", table(&["block", "µm²", "share", "detail"], &trows));
+    // ASCII floorplan sketch scaled by area share.
+    println!("floorplan sketch (area-proportional):");
+    let bar = |v: f64| "#".repeat((v / total * 60.0).round() as usize);
+    for (n, v, _) in &rows {
+        println!("  {:<36} |{}", n, bar(*v));
+    }
+    println!();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig7_runs() {
+        super::run().unwrap();
+    }
+}

@@ -1,0 +1,117 @@
+//! Fig. 9 — energy gain (%) of Soft SIMD over (a) Hard SIMD
+//! (4,6,8,12,16) and (b) Hard SIMD (8,16), sweeping the multiplicand
+//! width 4..16 for multiplier widths {4, 8, 12, 16}, at 1 GHz.
+//!
+//! The paper highlights the discontinuities where the multiplicand
+//! width crosses a Hard SIMD sub-word boundary (8→9 bits in panel b).
+
+use crate::energy::model::SynthesizedSoftPipeline;
+use crate::energy::report::table;
+use crate::hardsimd::pipeline::{HardSimdPipeline, HARD_FLEX, HARD_TWO};
+use crate::workload::synth::XorShift64;
+
+pub const MHZ: f64 = 1000.0;
+pub const N_WORDS: usize = 200;
+pub const Y_SERIES: [u32; 4] = [4, 8, 12, 16];
+
+/// gain[y][x-4] = 1 − soft/hard, or None when the baseline can't fit.
+pub struct GainGrid {
+    pub baseline: String,
+    pub gains: Vec<Vec<Option<f64>>>,
+}
+
+pub fn grids() -> (GainGrid, GainGrid) {
+    let mut soft = SynthesizedSoftPipeline::new(MHZ);
+    let mut flex = HardSimdPipeline::new(HARD_FLEX, MHZ);
+    let mut two = HardSimdPipeline::new(HARD_TWO, MHZ);
+    let mut rng = XorShift64::new(0xF16_9);
+    let mut g_flex = vec![];
+    let mut g_two = vec![];
+    for &y in &Y_SERIES {
+        let mut row_f = vec![];
+        let mut row_t = vec![];
+        for x in 4..=16u32 {
+            let s = soft.subword_mult_energy_pj(x, y, N_WORDS, &mut rng).unwrap();
+            row_f.push(
+                flex.subword_mult_energy_pj(x, y, N_WORDS, &mut rng)
+                    .map(|h| 1.0 - s / h),
+            );
+            row_t.push(
+                two.subword_mult_energy_pj(x, y, N_WORDS, &mut rng)
+                    .map(|h| 1.0 - s / h),
+            );
+        }
+        g_flex.push(row_f);
+        g_two.push(row_t);
+    }
+    (
+        GainGrid { baseline: "Hard SIMD (4,6,8,12,16)".into(), gains: g_flex },
+        GainGrid { baseline: "Hard SIMD (8,16)".into(), gains: g_two },
+    )
+}
+
+fn print_grid(g: &GainGrid) {
+    println!("-- energy gain of Soft SIMD vs {} @1GHz --", g.baseline);
+    let mut rows = vec![];
+    for (yi, &y) in Y_SERIES.iter().enumerate() {
+        let mut row = vec![format!("y={y}b")];
+        for xi in 0..13 {
+            row.push(match g.gains[yi][xi] {
+                Some(v) => format!("{:.1}", v * 100.0),
+                None => "-".into(),
+            });
+        }
+        rows.push(row);
+    }
+    let mut headers: Vec<String> = vec!["mult\\x".into()];
+    headers.extend((4..=16).map(|x| format!("{x}")));
+    let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    println!("{}", table(&hdr_refs, &rows));
+}
+
+pub fn run() -> anyhow::Result<()> {
+    println!("== Fig. 9: Soft SIMD energy gain (%) vs multiplicand width ==");
+    let (a, b) = grids();
+    print_grid(&a);
+    print_grid(&b);
+    // Quantify the 8→9 discontinuity on panel (b).
+    let y8 = &b.gains[1];
+    if let (Some(g8), Some(g9)) = (y8[4], y8[5]) {
+        println!(
+            "panel (b) discontinuity at multiplicand 8→9 (y=8): gain {:.1}% → {:.1}%\n",
+            g8 * 100.0,
+            g9 * 100.0
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_shape() {
+        let (a, b) = grids();
+        // Gains are large at small multiplicand widths...
+        assert!(a.gains[0][0].unwrap() > 0.6, "4×4 vs flex");
+        assert!(b.gains[0][0].unwrap() > 0.6, "4×4 vs two");
+        // ...and positive-but-smaller at 16 (documented deviation:
+        // the paper's crossover at 16×16 is not reproduced, see
+        // EXPERIMENTS.md).
+        let g16 = a.gains[3][12].unwrap();
+        assert!(g16 < a.gains[0][0].unwrap());
+        // Discontinuity: on panel (b), y=8 series jumps upward at x=9
+        // (hard must switch from 8-bit to 16-bit lanes).
+        let y8 = &b.gains[1];
+        assert!(
+            y8[5].unwrap() > y8[4].unwrap() + 0.02,
+            "8→9 jump: {:?} -> {:?}",
+            y8[4],
+            y8[5]
+        );
+        // Flexible baseline loses by more than the lean one at the
+        // smallest widths (its gating overhead dominates there).
+        assert!(a.gains[0][0].unwrap() > b.gains[0][0].unwrap());
+    }
+}

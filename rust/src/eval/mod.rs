@@ -1,0 +1,37 @@
+//! Evaluation harness — regenerates every table/figure of Section IV
+//! from the gate-level cost substrate (DESIGN.md §5).
+//!
+//! Each sub-module prints the same rows/series the paper reports.
+//! `summary` derives the two headline numbers (53.1% area, 88.8%
+//! energy); `ablation` covers the design choices the paper fixes
+//! (CSD vs binary recoding, max coalesced shift, Stage-2 bypass).
+
+pub mod ablation;
+pub mod fig10;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod summary;
+
+pub fn run(target: &str) -> anyhow::Result<()> {
+    match target {
+        "fig6" | "6" => fig6::run(),
+        "fig7" | "7" => fig7::run(),
+        "fig8" | "8" => fig8::run(),
+        "fig9" | "9" => fig9::run(),
+        "fig10" | "10" => fig10::run(),
+        "summary" => summary::run(),
+        "ablation" => ablation::run(),
+        "all" => {
+            fig6::run()?;
+            fig7::run()?;
+            fig8::run()?;
+            fig9::run()?;
+            fig10::run()?;
+            summary::run()?;
+            ablation::run()
+        }
+        other => anyhow::bail!("unknown eval target `{other}` (fig6..fig10, summary, ablation, all)"),
+    }
+}

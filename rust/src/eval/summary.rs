@@ -1,0 +1,67 @@
+//! Headline numbers (abstract / Section IV summary): maximum area
+//! saving vs the equivalent Hard SIMD (paper: 53.1%) and maximum
+//! per-multiplication energy saving (paper: 88.8%).
+
+use super::{fig6, fig9};
+
+pub struct Headlines {
+    pub max_area_saving: f64,
+    pub max_energy_saving: f64,
+    pub hard_two_overhead_min: f64,
+}
+
+pub fn headlines() -> Headlines {
+    let areas = fig6::areas();
+    let mut max_area_saving: f64 = 0.0;
+    let mut hard_two_overhead_min = f64::INFINITY;
+    for chunk in areas.chunks(3) {
+        let (soft, flex, two) = (&chunk[0], &chunk[1], &chunk[2]);
+        max_area_saving = max_area_saving.max(1.0 - soft.total() / flex.total());
+        hard_two_overhead_min = hard_two_overhead_min.min(two.total() / soft.total() - 1.0);
+    }
+    let (a, b) = fig9::grids();
+    let mut max_energy_saving: f64 = 0.0;
+    for grid in [&a, &b] {
+        for row in &grid.gains {
+            for g in row.iter().flatten() {
+                max_energy_saving = max_energy_saving.max(*g);
+            }
+        }
+    }
+    Headlines { max_area_saving, max_energy_saving, hard_two_overhead_min }
+}
+
+pub fn run() -> anyhow::Result<()> {
+    println!("== Headline numbers (paper: 53.1% area, 88.8% energy) ==");
+    let h = headlines();
+    println!(
+        "max area saving vs Hard SIMD (4,6,8,12,16): {:.1}%  (paper: up to 53.1%)",
+        h.max_area_saving * 100.0
+    );
+    println!(
+        "max energy saving per multiplication:       {:.1}%  (paper: up to 88.8%)",
+        h.max_energy_saving * 100.0
+    );
+    println!(
+        "Hard SIMD (8,16) area overhead vs soft:     {:.1}%  (paper: >10% in all cases)\n",
+        h.hard_two_overhead_min * 100.0
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headlines_in_paper_ballpark() {
+        let h = headlines();
+        assert!(h.max_area_saving > 0.5, "area saving {}", h.max_area_saving);
+        assert!(
+            h.max_energy_saving > 0.7,
+            "energy saving {}",
+            h.max_energy_saving
+        );
+        assert!(h.hard_two_overhead_min > 0.1);
+    }
+}

@@ -1,0 +1,7 @@
+//! The Hard SIMD baseline pipelines of Section IV-A: combinational SIMD
+//! multiplier datapaths supporting fixed sub-word sets — one with
+//! {4, 6, 8, 12, 16} and one with {8, 16}.
+
+pub mod pipeline;
+
+pub use pipeline::{HardSimdPipeline, HARD_FLEX, HARD_TWO};

@@ -1,0 +1,179 @@
+//! Hard SIMD pipeline cost model.
+//!
+//! One pipeline stage: operand registers A/B (48b each) feed the
+//! combinational SIMD multiplier bank; the packed product lands in OUT
+//! (48b). One multiplication of a full word per cycle, whatever the
+//! sub-word width — flexibility is paid in silicon, not cycles.
+
+use crate::bits::format::SimdFormat;
+use crate::energy::model::{PipelineArea, RegBank, SynthBlock};
+use crate::energy::tech::GlitchClass;
+use crate::rtl::multiplier::{divisible_array, drive_bank};
+use crate::workload::synth::XorShift64;
+
+/// The flexible baseline's format set.
+pub const HARD_FLEX: &[u32] = &[4, 6, 8, 12, 16];
+/// The lean baseline's format set.
+pub const HARD_TWO: &[u32] = &[8, 16];
+
+/// A synthesized Hard SIMD pipeline.
+pub struct HardSimdPipeline {
+    pub name: String,
+    pub fmts: Vec<u32>,
+    pub mhz: f64,
+    pub bank: SynthBlock,
+    pub regs: RegBank,
+    prev_a: u64,
+    prev_b: u64,
+    prev_out: u64,
+}
+
+impl HardSimdPipeline {
+    pub fn new(fmts: &[u32], mhz: f64) -> Self {
+        // Cost carrier: the shared divisible array (see rtl::multiplier).
+        let bank = SynthBlock::new(divisible_array(fmts), GlitchClass::MultiplierArray);
+        HardSimdPipeline {
+            name: format!("Hard SIMD {fmts:?}"),
+            fmts: fmts.to_vec(),
+            mhz,
+            bank,
+            // A(48) + B(48) + OUT(48) + fmt-config(8).
+            regs: RegBank { bits: 48 * 3 + 8 },
+            prev_a: 0,
+            prev_b: 0,
+            prev_out: 0,
+        }
+    }
+
+    /// Smallest supported sub-word width fitting both operand widths —
+    /// the allocation rule that produces the Fig. 9 discontinuities.
+    pub fn fit_width(&self, x_bits: u32, y_bits: u32) -> Option<u32> {
+        let need = x_bits.max(y_bits);
+        self.fmts.iter().copied().filter(|&b| b >= need).min()
+    }
+
+    /// Effective array activity at sub-word width `b`.
+    ///
+    /// The divisible array's partition gating confines *useful* partial
+    /// products to a fraction `frac(b) = b/16` of each 16-bit grid, but
+    /// gating in a shared array is imperfect — gating signals race the
+    /// data and reconvergent paths glitch through — so a share of the
+    /// nominally-idle region still switches:
+    /// `eff = frac + λ·(1 − frac)`, with the glitch-through share λ
+    /// growing with the number of supported partitions (each extra
+    /// boundary adds gating reconvergence): `λ = 0.25·(#formats − 1)`, capped at 1.
+    /// Zero-delay simulation cannot see either effect; calibration note
+    /// in DESIGN.md §6.
+    fn activity(&self, b: u32) -> f64 {
+        let frac = b as f64 / 16.0;
+        let lambda = (0.25 * (self.fmts.len() as f64 - 1.0)).min(1.0);
+        frac + lambda * (1.0 - frac)
+    }
+
+    pub fn area(&self) -> PipelineArea {
+        PipelineArea {
+            name: self.name.clone(),
+            mhz: self.mhz,
+            stage1_um2: self.bank.area_um2(self.mhz),
+            stage2_um2: 0.0,
+            regs_um2: self.regs.area_um2(self.mhz),
+        }
+    }
+
+    /// Run `n_words` packed multiplications at sub-word width `b` with
+    /// operands carrying `x_bits`/`y_bits` of information (Q1
+    /// value-aligned inside the lane); returns total pJ (dynamic +
+    /// registers + leakage).
+    pub fn word_mult_energy_pj(
+        &mut self,
+        b: u32,
+        x_bits: u32,
+        y_bits: u32,
+        n_words: usize,
+        rng: &mut XorShift64,
+    ) -> f64 {
+        let fmt = SimdFormat::new(b);
+        self.bank.sim.reset_counters();
+        let mut reg_pj = 0.0;
+        for _ in 0..n_words {
+            // Hard SIMD lanes are integer lanes (NEON/AVX-style): narrow
+            // operands sit right-aligned and *sign-extend* through the
+            // lane — unlike Soft SIMD's Q1 value alignment. The sign
+            // copies are data-dependent, so they switch the array.
+            let xl: Vec<i64> = (0..fmt.lanes()).map(|_| rng.q_raw(x_bits)).collect();
+            let ml: Vec<i64> = (0..fmt.lanes()).map(|_| rng.q_raw(y_bits)).collect();
+            let a = crate::bits::pack::pack(&xl, fmt);
+            let m = crate::bits::pack::pack(&ml, fmt);
+            let out = drive_bank(&mut self.bank.sim, &self.bank.net, &self.fmts, a, m, fmt);
+            let written = (a ^ self.prev_a).count_ones()
+                + (m ^ self.prev_b).count_ones()
+                + (out ^ self.prev_out).count_ones();
+            reg_pj += self.regs.cycle_pj(written);
+            self.prev_a = a;
+            self.prev_b = m;
+            self.prev_out = out;
+        }
+        let dyn_pj = self.bank.take_energy_pj(self.mhz) * self.activity(b);
+        let leak_pj = (self.bank.leak_pj_per_cycle(self.mhz)
+            + self.regs.leak_pj_per_cycle(self.mhz))
+            * n_words as f64;
+        dyn_pj + reg_pj + leak_pj
+    }
+
+    /// Energy per *sub-word* multiplication at operand widths
+    /// (x_bits × y_bits); `None` if unsupported. Uses the fit rule +
+    /// lane amortization.
+    pub fn subword_mult_energy_pj(
+        &mut self,
+        x_bits: u32,
+        y_bits: u32,
+        n_words: usize,
+        rng: &mut XorShift64,
+    ) -> Option<f64> {
+        let b = self.fit_width(x_bits, y_bits)?;
+        let fmt = SimdFormat::new(b);
+        let total = self.word_mult_energy_pj(b, x_bits, y_bits, n_words, rng);
+        Some(total / (n_words as f64 * fmt.lanes() as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_width_rule() {
+        let two = HardSimdPipeline::new(HARD_TWO, 200.0);
+        assert_eq!(two.fit_width(8, 8), Some(8));
+        assert_eq!(two.fit_width(9, 4), Some(16)); // the Fig. 9 jump
+        assert_eq!(two.fit_width(17, 8), None);
+        let flex = HardSimdPipeline::new(HARD_FLEX, 200.0);
+        assert_eq!(flex.fit_width(9, 4), Some(12));
+        assert_eq!(flex.fit_width(5, 5), Some(6));
+    }
+
+    #[test]
+    fn flexible_bank_larger_area() {
+        let two = HardSimdPipeline::new(HARD_TWO, 200.0);
+        let flex = HardSimdPipeline::new(HARD_FLEX, 200.0);
+        assert!(flex.area().total() > 1.15 * two.area().total());
+    }
+
+    #[test]
+    fn wider_subwords_cost_more_energy() {
+        let mut p = HardSimdPipeline::new(HARD_TWO, 1000.0);
+        let mut rng = XorShift64::new(0xE7E7);
+        let e8 = p.subword_mult_energy_pj(8, 8, 64, &mut rng).unwrap();
+        let e16 = p.subword_mult_energy_pj(16, 16, 64, &mut rng).unwrap();
+        assert!(e16 > 1.5 * e8, "e8={e8} e16={e16}");
+    }
+
+    #[test]
+    fn nine_bit_jump_on_two_format_pipeline() {
+        let mut p = HardSimdPipeline::new(HARD_TWO, 1000.0);
+        let mut rng = XorShift64::new(0x9B17);
+        let e8 = p.subword_mult_energy_pj(8, 8, 64, &mut rng).unwrap();
+        let e9 = p.subword_mult_energy_pj(9, 8, 64, &mut rng).unwrap();
+        assert!(e9 > 1.05 * e8, "discontinuity missing: e8={e8} e9={e9}");
+    }
+}

@@ -1,0 +1,108 @@
+//! Micro-op definitions.
+
+use crate::bits::format::SimdFormat;
+
+
+/// Architectural registers of the pipeline (Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reg {
+    /// Multiplicand operand register feeding Stage 1.
+    X,
+    /// Stage-1 accumulator.
+    Acc,
+    /// Stage-2 input pair (96-bit window R2:R3).
+    R2,
+    R3,
+    /// Stage-2 output register.
+    R4,
+}
+
+/// One micro-instruction. The controller issues one per cycle to each
+/// stage; `Stage1*` and `Stage2*` ops of independent programs can be
+/// co-issued by the pipeline model (the two stages are pipelined).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    /// Set the Stage-1 Soft SIMD format (reprograms the V_x vector).
+    SetFmt(SimdFormat),
+    /// Load an immediate packed word into a register.
+    Load(Reg, u64),
+    /// Clear the accumulator.
+    ClearAcc,
+    /// Stage-1 cycle: `Acc ← sar(Acc, k)` then `Acc ← Acc ± X`.
+    AddShift { k: u32, sign: i8 },
+    /// Stage-1 cycle: `Acc ← sar(Acc, k)` only.
+    Shift { k: u32 },
+    /// Register move (e.g. Acc → R2 to hand a result to Stage 2).
+    Mov(Reg, Reg),
+    /// Stage-2 cycle: produce output word `out_idx` of the direct
+    /// conversion `from → to`, reading sub-words from the R2:R3 window;
+    /// `in_skip` sub-words of the window are consumed by earlier output
+    /// words of the same conversion.
+    Pack {
+        from: SimdFormat,
+        to: SimdFormat,
+        in_skip: u32,
+    },
+    /// Stage-2 cycle: R4 ← R2 unchanged (format bypass, Section III-A).
+    Bypass,
+    /// Emit R4 to the output stream (write-back to memory in the real
+    /// design).
+    Store,
+    /// End of program.
+    Halt,
+}
+
+impl Instr {
+    /// Does this op occupy Stage 1 for a cycle?
+    pub fn uses_stage1(self) -> bool {
+        matches!(self, Instr::AddShift { .. } | Instr::Shift { .. })
+    }
+
+    /// Does this op occupy Stage 2 for a cycle?
+    pub fn uses_stage2(self) -> bool {
+        matches!(self, Instr::Pack { .. } | Instr::Bypass)
+    }
+
+    /// Human-readable disassembly.
+    pub fn disasm(self) -> String {
+        match self {
+            Instr::SetFmt(f) => format!("setfmt   {f}"),
+            Instr::Load(r, w) => format!("load     {r:?}, {w:#014x}"),
+            Instr::ClearAcc => "clracc".to_string(),
+            Instr::AddShift { k, sign } => {
+                format!("sar{k}{}x", if sign > 0 { "+" } else { "-" })
+            }
+            Instr::Shift { k } => format!("sar{k}"),
+            Instr::Mov(d, s) => format!("mov      {d:?}, {s:?}"),
+            Instr::Pack { from, to, in_skip } => {
+                format!("pack     {from} -> {to} (skip {in_skip})")
+            }
+            Instr::Bypass => "bypass".to_string(),
+            Instr::Store => "store".to_string(),
+            Instr::Halt => "halt".to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_occupancy() {
+        assert!(Instr::AddShift { k: 2, sign: 1 }.uses_stage1());
+        assert!(Instr::Shift { k: 3 }.uses_stage1());
+        assert!(!Instr::Shift { k: 3 }.uses_stage2());
+        let f = SimdFormat::new(8);
+        let t = SimdFormat::new(16);
+        assert!(Instr::Pack { from: f, to: t, in_skip: 0 }.uses_stage2());
+        assert!(Instr::Bypass.uses_stage2());
+        assert!(!Instr::Bypass.uses_stage1());
+    }
+
+    #[test]
+    fn disasm_is_stable() {
+        assert_eq!(Instr::AddShift { k: 3, sign: -1 }.disasm(), "sar3-x");
+        assert_eq!(Instr::Shift { k: 1 }.disasm(), "sar1");
+    }
+}

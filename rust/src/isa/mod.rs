@@ -1,0 +1,12 @@
+//! Micro-instruction set of the two-stage Soft SIMD pipeline.
+//!
+//! "Soft" SIMD means the *software* decides sub-word geometry and the
+//! multiplication schedule; this module is that software layer: a tiny
+//! micro-op ISA, an assembler that compiles (multiplier, formats) into
+//! programs, and a disassembler for debugging.
+
+pub mod instr;
+pub mod program;
+
+pub use instr::{Instr, Reg};
+pub use program::{assemble_mul, assemble_mul_repack, Program};

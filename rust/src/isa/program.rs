@@ -1,0 +1,126 @@
+//! The assembler: compiles multiplier values and format changes into
+//! micro-op programs — the "software" half of Soft SIMD.
+
+use super::instr::{Instr, Reg};
+use crate::bits::format::SimdFormat;
+use crate::csd::schedule::{schedule_with, MulOp};
+
+
+/// A compiled micro-op program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+}
+
+impl Program {
+    pub fn new(instrs: Vec<Instr>) -> Self {
+        Program { instrs }
+    }
+
+    /// Stage-1 busy cycles.
+    pub fn stage1_cycles(&self) -> usize {
+        self.instrs.iter().filter(|i| i.uses_stage1()).count()
+    }
+
+    /// Stage-2 busy cycles.
+    pub fn stage2_cycles(&self) -> usize {
+        self.instrs.iter().filter(|i| i.uses_stage2()).count()
+    }
+
+    pub fn disasm(&self) -> String {
+        self.instrs
+            .iter()
+            .enumerate()
+            .map(|(pc, i)| format!("{pc:4}: {}", i.disasm()))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Compile `acc ← X * m` for a packed multiplicand already in `X`:
+/// clear, then the CSD shift-add schedule.
+pub fn assemble_mul(m_raw: i64, y_bits: u32, fmt: SimdFormat, max_shift: u32) -> Program {
+    let plan = schedule_with(m_raw, y_bits, max_shift);
+    let mut instrs = vec![Instr::SetFmt(fmt), Instr::ClearAcc];
+    for op in plan.ops {
+        instrs.push(match op {
+            MulOp::AddShift { shift, sign } => Instr::AddShift { k: shift, sign },
+            MulOp::Shift { shift } => Instr::Shift { k: shift },
+        });
+    }
+    instrs.push(Instr::Halt);
+    Program::new(instrs)
+}
+
+/// Compile a full multiply-then-repack sequence: multiply in `fmt`, move
+/// the product into the Stage-2 window, emit the conversion cycles to
+/// `out_fmt` (one `Pack` per output word of each direct hop — see
+/// `pipeline::stage2` for hop legality), or a `Bypass` when formats match.
+pub fn assemble_mul_repack(
+    m_raw: i64,
+    y_bits: u32,
+    fmt: SimdFormat,
+    out_fmt: SimdFormat,
+    max_shift: u32,
+) -> Program {
+    let mut p = assemble_mul(m_raw, y_bits, fmt, max_shift);
+    p.instrs.pop(); // drop Halt
+    p.instrs.push(Instr::Mov(Reg::R2, Reg::Acc));
+    if fmt == out_fmt {
+        p.instrs.push(Instr::Bypass);
+        p.instrs.push(Instr::Store);
+    } else {
+        for hop in crate::pipeline::stage2::conversion_chain(fmt, out_fmt) {
+            let words_out = crate::pipeline::stage2::output_words_per_input(hop.0, hop.1);
+            for w in 0..words_out {
+                p.instrs.push(Instr::Pack {
+                    from: hop.0,
+                    to: hop.1,
+                    in_skip: w * (48 / hop.1.bits),
+                });
+                p.instrs.push(Instr::Store);
+            }
+        }
+    }
+    p.instrs.push(Instr::Halt);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mul_program_shape() {
+        let fmt = SimdFormat::new(8);
+        let p = assemble_mul(115, 8, fmt, 3);
+        assert!(matches!(p.instrs[0], Instr::SetFmt(_)));
+        assert!(matches!(p.instrs[1], Instr::ClearAcc));
+        assert!(matches!(*p.instrs.last().unwrap(), Instr::Halt));
+        // Stage-1 cycles == CSD schedule length.
+        let plan = crate::csd::schedule::schedule(115, 8);
+        assert_eq!(p.stage1_cycles(), plan.cycles());
+    }
+
+    #[test]
+    fn zero_multiplier_is_free() {
+        let fmt = SimdFormat::new(8);
+        let p = assemble_mul(0, 8, fmt, 3);
+        assert_eq!(p.stage1_cycles(), 0);
+    }
+
+    #[test]
+    fn bypass_when_formats_match() {
+        let fmt = SimdFormat::new(8);
+        let p = assemble_mul_repack(37, 8, fmt, fmt, 3);
+        assert!(p.instrs.iter().any(|i| matches!(i, Instr::Bypass)));
+        assert_eq!(p.stage2_cycles(), 1);
+    }
+
+    #[test]
+    fn widen_emits_multiple_pack_cycles() {
+        let p = assemble_mul_repack(37, 8, SimdFormat::new(8), SimdFormat::new(16), 3);
+        // 8→16 widening: one input word → 2 output words → 2 Pack cycles.
+        assert_eq!(p.stage2_cycles(), 2);
+    }
+}

@@ -1,0 +1,37 @@
+//! # softsimd — A Soft SIMD Based Energy Efficient Computing Microarchitecture
+//!
+//! Reproduction of Yu et al., *"A Soft SIMD Based Energy Efficient
+//! Computing Microarchitecture"* (cs.AR 2022): a bit-accurate and
+//! cycle-accurate model of the paper's two-stage pipeline (Soft SIMD
+//! shift-add arithmetic with CSD-coded multipliers + a repacking
+//! crossbar), a gate-level 28nm cost substrate replacing the paper's
+//! synthesis flow, the two Hard SIMD baselines, the complete evaluation
+//! harness for Figs. 6–10, and a near-memory coordinator that runs
+//! quantized NN workloads on arrays of simulated pipelines.
+//!
+//! The functional golden model of the arithmetic is authored in JAX +
+//! Pallas (`python/compile/`), AOT-lowered to HLO text at build time and
+//! executed from Rust through PJRT (`runtime`) — Python is never on the
+//! request path.
+//!
+//! ## Layer map
+//! * [`bits`], [`csd`], [`isa`], [`pipeline`] — the architecture model.
+//! * [`rtl`], [`energy`], [`hardsimd`] — the synthesis/cost substrate.
+//! * [`eval`] — regenerates every figure of the paper's evaluation.
+//! * [`coordinator`], [`nn`], [`quant`], [`workload`] — the near-memory
+//!   accelerator runtime and its ML workloads.
+//! * [`runtime`] — PJRT loader for the AOT JAX/Pallas artifacts.
+
+pub mod bits;
+pub mod coordinator;
+pub mod csd;
+pub mod energy;
+pub mod eval;
+pub mod hardsimd;
+pub mod isa;
+pub mod nn;
+pub mod pipeline;
+pub mod quant;
+pub mod rtl;
+pub mod runtime;
+pub mod workload;

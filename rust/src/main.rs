@@ -1,0 +1,78 @@
+//! `softsimd` CLI — evaluation harness, demos and the serving entrypoint.
+//!
+//! Hand-rolled argument parsing (the build is offline; see Cargo.toml).
+
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+softsimd — Soft SIMD microarchitecture reproduction (Yu et al., 2022)
+
+USAGE:
+    softsimd <COMMAND> [ARGS]
+
+COMMANDS:
+    eval <target>        Regenerate a paper figure: fig6 | fig7 | fig8 |
+                         fig9 | fig10 | summary | ablation | all
+    csd [bits]           CSD digit-density statistics (default 8)
+    disasm <m> [bits]    Disassemble the multiply program for multiplier m
+    serve [requests]     Run the near-memory coordinator demo loop
+    golden <path>        Validate the simulator against golden vectors
+    help                 Show this message
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "eval" => {
+            let target = args.get(1).map(String::as_str).unwrap_or("all");
+            softsimd::eval::run(target)?;
+        }
+        "csd" => {
+            let bits: u32 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(8);
+            let s = softsimd::csd::density(bits);
+            println!(
+                "CSD @ {bits} bits: zero digit fraction {:.3}, mean adds {:.2}, \
+                 mean cycles {:.2}, max cycles {}",
+                s.zero_fraction, s.mean_adds, s.mean_cycles, s.max_cycles
+            );
+        }
+        "disasm" => {
+            let m: i64 = args
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("disasm needs a multiplier value"))?
+                .parse()?;
+            let bits: u32 = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(8);
+            let fmt = softsimd::bits::SimdFormat::new(8);
+            let p = softsimd::isa::assemble_mul(m, bits, fmt, 3);
+            println!("{}", p.disasm());
+        }
+        "serve" => {
+            let n: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(256);
+            softsimd::coordinator::demo::serve_demo(n)?;
+        }
+        "golden" => {
+            let path = args
+                .get(1)
+                .map(String::as_str)
+                .unwrap_or("artifacts/golden.jsonl");
+            let report = softsimd::runtime::golden::check_file(path)?;
+            println!("{report}");
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            anyhow::bail!("unknown command `{other}`\n\n{USAGE}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Quantized MLP forward passes.
+//!
+//! Layer semantics (DESIGN.md §4, mirrored by
+//! `python/compile/kernels/ref.py::layer_ref`): products at `in_bits`
+//! via the Soft SIMD shift-add multiply, widened (`<< acc−in`) to the
+//! accumulator format — the Stage-2 8→16 conversion — summed with
+//! wrapping `acc_bits` adds; hidden layers apply ReLU then truncate back
+//! to `in_bits`.
+
+use crate::bits::fixed::sign_extend;
+use crate::pipeline::stage1::{mul_scalar_plan, mul_scalar};
+
+use super::weights::QuantLayer;
+
+/// Forward one input row through all layers; returns the final
+/// pre-activation accumulators (`Q1.(acc_bits-1)` raws).
+pub fn mlp_forward_row(x_q: &[i64], layers: &[QuantLayer], in_bits: u32, acc_bits: u32) -> Vec<i64> {
+    let mut h: Vec<i64> = x_q.to_vec();
+    for (li, layer) in layers.iter().enumerate() {
+        assert_eq!(h.len(), layer.k, "layer {li} input width");
+        let mut out = vec![0i64; layer.n];
+        for j in 0..layer.n {
+            let mut acc = 0i64;
+            for i in 0..layer.k {
+                let p = mul_scalar(h[i], layer.w_raw[i][j], in_bits, layer.bits);
+                acc += p << (acc_bits - in_bits);
+            }
+            out[j] = sign_extend(acc as u64 & ((1u64 << acc_bits) - 1), acc_bits);
+        }
+        if li + 1 < layers.len() {
+            h = out
+                .iter()
+                .map(|&v| v.max(0) >> (acc_bits - in_bits))
+                .collect();
+        } else {
+            return out;
+        }
+    }
+    h
+}
+
+/// Batched forward; `x` is row-major `[batch][k]`.
+pub fn mlp_forward_batch(
+    x: &[Vec<i64>],
+    layers: &[QuantLayer],
+    in_bits: u32,
+    acc_bits: u32,
+) -> Vec<Vec<i64>> {
+    x.iter()
+        .map(|row| mlp_forward_row(row, layers, in_bits, acc_bits))
+        .collect()
+}
+
+/// Forward with *precomputed plans* (the hot path used by the
+/// coordinator for repeated batches; avoids re-encoding CSD per call).
+pub fn mlp_forward_row_planned(
+    x_q: &[i64],
+    layers: &[QuantLayer],
+    plans: &[Vec<Vec<crate::csd::schedule::MulPlan>>],
+    in_bits: u32,
+    acc_bits: u32,
+) -> Vec<i64> {
+    let mut h: Vec<i64> = x_q.to_vec();
+    for (li, layer) in layers.iter().enumerate() {
+        let mut out = vec![0i64; layer.n];
+        for j in 0..layer.n {
+            let mut acc = 0i64;
+            for i in 0..layer.k {
+                let p = mul_scalar_plan(h[i], &plans[li][i][j], in_bits);
+                acc += p << (acc_bits - in_bits);
+            }
+            out[j] = sign_extend(acc as u64 & ((1u64 << acc_bits) - 1), acc_bits);
+        }
+        if li + 1 < layers.len() {
+            h = out
+                .iter()
+                .map(|&v| v.max(0) >> (acc_bits - in_bits))
+                .collect();
+        } else {
+            return out;
+        }
+    }
+    h
+}
+
+/// Precompute all layer plans for [`mlp_forward_row_planned`].
+pub fn precompute_plans(
+    layers: &[QuantLayer],
+) -> Vec<Vec<Vec<crate::csd::schedule::MulPlan>>> {
+    layers
+        .iter()
+        .map(|l| {
+            (0..l.k)
+                .map(|i| (0..l.n).map(|j| l.plan(i, j)).collect())
+                .collect()
+        })
+        .collect()
+}
+
+/// Argmax over the first `classes` outputs (logit decision; first-max
+/// wins ties, matching `numpy.argmax`).
+pub fn argmax_class(logits: &[i64], classes: usize) -> usize {
+    let mut best = 0usize;
+    for i in 1..classes.min(logits.len()) {
+        if logits[i] > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_layers() -> Vec<QuantLayer> {
+        // 2 → 2 → 2 with simple weights.
+        vec![
+            QuantLayer::new(vec![vec![64, -64], vec![32, 32]], 8), // 0.5/-0.5; 0.25/0.25
+            QuantLayer::new(vec![vec![127, 0], vec![0, 127]], 8),
+        ]
+    }
+
+    #[test]
+    fn forward_matches_hand_computation() {
+        let layers = tiny_layers();
+        let x = vec![64i64, 64]; // 0.5, 0.5
+        // Layer 0: n0 = 0.5·0.5 + 0.5·0.25 = 0.375 → raw16 (64·64>>7=32,
+        // 64·32>>7=16 → (32+16)<<8 = 12288). n1 = −0.25+0.125 → ((−32)+16)<<8 = −4096.
+        // ReLU+requant: h = [12288>>8, 0] = [48, 0].
+        // Layer 1 (≈identity·0.992): n0 = mul(48,127)<<8, n1 = 0.
+        let out = mlp_forward_row(&x, &layers, 8, 16);
+        let p = mul_scalar(48, 127, 8, 8);
+        assert_eq!(out, vec![p << 8, 0]);
+    }
+
+    #[test]
+    fn planned_path_matches_unplanned() {
+        let layers = tiny_layers();
+        let plans = precompute_plans(&layers);
+        for x0 in [-128i64, -5, 0, 99, 127] {
+            for x1 in [-77i64, 0, 127] {
+                let x = vec![x0, x1];
+                assert_eq!(
+                    mlp_forward_row(&x, &layers, 8, 16),
+                    mlp_forward_row_planned(&x, &layers, &plans, 8, 16)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn argmax_first_wins_ties_deterministically() {
+        assert_eq!(argmax_class(&[5, 5, 1], 3), 0);
+        assert_eq!(argmax_class(&[1, 9, 9], 3), 1);
+    }
+}

@@ -1,0 +1,13 @@
+//! Quantized neural-network execution on the Soft SIMD semantics.
+//!
+//! `weights` loads the AOT-baked model; `exec` provides the scalar-int
+//! reference forward pass (the semantic pivot shared with
+//! `python/compile/model.py::mlp_forward_int`) and the packed execution
+//! path that runs layers on the simulated pipeline through the
+//! coordinator.
+
+pub mod exec;
+pub mod weights;
+
+pub use exec::{mlp_forward_batch, mlp_forward_row};
+pub use weights::{load_weight_file, QuantLayer};

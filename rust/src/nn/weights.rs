@@ -1,0 +1,121 @@
+//! Quantized weight storage and the `mlp_weights.txt` loader.
+
+use std::path::Path;
+
+use crate::csd::schedule::{schedule, MulPlan};
+
+/// One layer's quantized weights (`Q1.(bits-1)` raws) with cached CSD
+/// multiply plans (one per distinct weight value — plans are shared).
+#[derive(Debug, Clone)]
+pub struct QuantLayer {
+    /// `[k][n]` raw weights.
+    pub w_raw: Vec<Vec<i64>>,
+    pub k: usize,
+    pub n: usize,
+    /// Weight bitwidth.
+    pub bits: u32,
+}
+
+impl QuantLayer {
+    pub fn new(w_raw: Vec<Vec<i64>>, bits: u32) -> Self {
+        let k = w_raw.len();
+        let n = if k > 0 { w_raw[0].len() } else { 0 };
+        for row in &w_raw {
+            assert_eq!(row.len(), n, "ragged weight matrix");
+        }
+        QuantLayer { w_raw, k, n, bits }
+    }
+
+    /// Build the layer from float weights.
+    pub fn quantize(w: &[Vec<f64>], bits: u32) -> Self {
+        let raw = w
+            .iter()
+            .map(|row| row.iter().map(|&v| crate::bits::fixed::to_q(v, bits)).collect())
+            .collect();
+        QuantLayer::new(raw, bits)
+    }
+
+    /// The multiply plan for weight `(i, j)`.
+    pub fn plan(&self, i: usize, j: usize) -> MulPlan {
+        schedule(self.w_raw[i][j], self.bits)
+    }
+
+    /// Mean Stage-1 cycles per weight (workload statistics for the
+    /// energy model).
+    pub fn mean_cycles(&self) -> f64 {
+        let mut total = 0usize;
+        for row in &self.w_raw {
+            for &w in row {
+                total += schedule(w, self.bits).cycles();
+            }
+        }
+        total as f64 / (self.k * self.n) as f64
+    }
+}
+
+/// Parse `artifacts/mlp_weights.txt`:
+/// `layer <idx> <K> <N>` followed by `K` comma-separated rows.
+pub fn load_weight_file(path: impl AsRef<Path>) -> anyhow::Result<Vec<QuantLayer>> {
+    let text = std::fs::read_to_string(path.as_ref())?;
+    let mut layers = vec![];
+    let mut lines = text.lines().peekable();
+    while let Some(header) = lines.next() {
+        let header = header.trim();
+        if header.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = header.split_whitespace().collect();
+        anyhow::ensure!(
+            parts.len() == 4 && parts[0] == "layer",
+            "bad layer header: {header}"
+        );
+        let k: usize = parts[2].parse()?;
+        let n: usize = parts[3].parse()?;
+        let mut rows = Vec::with_capacity(k);
+        for _ in 0..k {
+            let row_line = lines
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("truncated weight file"))?;
+            let row: Vec<i64> = row_line
+                .trim()
+                .split(',')
+                .map(|v| v.parse::<i64>())
+                .collect::<Result<_, _>>()?;
+            anyhow::ensure!(row.len() == n, "row width {} != {n}", row.len());
+            rows.push(row);
+        }
+        layers.push(QuantLayer::new(rows, 8));
+    }
+    Ok(layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_weight_text() {
+        let text = "layer 0 2 3\n1,-2,3\n-4,5,-6\nlayer 1 1 2\n7,-8\n";
+        let tmp = std::env::temp_dir().join("softsimd_wtest.txt");
+        std::fs::write(&tmp, text).unwrap();
+        let layers = load_weight_file(&tmp).unwrap();
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[0].k, 2);
+        assert_eq!(layers[0].n, 3);
+        assert_eq!(layers[0].w_raw[1], vec![-4, 5, -6]);
+        assert_eq!(layers[1].w_raw[0], vec![7, -8]);
+    }
+
+    #[test]
+    fn quantize_roundtrip() {
+        let l = QuantLayer::quantize(&[vec![0.5, -0.25], vec![0.0, 0.99]], 8);
+        assert_eq!(l.w_raw, vec![vec![64, -32], vec![0, 127]]);
+    }
+
+    #[test]
+    fn mean_cycles_sane() {
+        let l = QuantLayer::quantize(&[vec![0.5, -0.5, 0.0, 0.93]], 8);
+        let mc = l.mean_cycles();
+        assert!(mc > 0.0 && mc < 8.0, "{mc}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Cycle-accurate functional model of the two-stage Soft SIMD pipeline
+//! (Fig. 2): Stage 1 — shift-add arithmetic; Stage 2 — data repacking.
+
+pub mod core;
+pub mod stage1;
+pub mod stage2;
+pub mod trace;
+
+pub use core::{PipelineSim, RunResult};
+pub use stage1::{mul_packed, mul_scalar, Stage1};
+pub use stage2::{conversion_chain, repack_stream, repack_word, Stage2};
+pub use trace::{CycleEvent, Trace};

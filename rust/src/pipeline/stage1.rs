@@ -1,0 +1,255 @@
+//! Stage 1 — the Soft SIMD shift-add arithmetic unit (Section III-B,
+//! Figs. 3–4).
+//!
+//! One cycle = one configurable-adder pass (carry-kill at boundaries;
+//! `+1`-injected subtraction) fused with a configurable-shifter pass
+//! (1..=3 positions, per-sub-word sign replication fed by the adder's
+//! carry-out — the overflow-free `(b+1)`-bit intermediate of DESIGN.md
+//! §4). The functional semantics live in [`crate::bits::swar`]; this
+//! module sequences them into whole multiplications and records
+//! per-cycle operand activity for the gate-level energy replay.
+
+use crate::bits::fixed::sign_extend;
+use crate::bits::format::SimdFormat;
+use crate::bits::swar::{swar_add_sar, swar_sar, swar_sub_sar};
+use crate::csd::schedule::{schedule_with, MulOp, MulPlan};
+
+/// Stage-1 datapath state: the accumulator and the multiplicand operand
+/// register, plus cycle counters.
+#[derive(Debug, Clone)]
+pub struct Stage1 {
+    pub acc: u64,
+    pub x: u64,
+    pub fmt: SimdFormat,
+    pub cycles: u64,
+    pub add_cycles: u64,
+}
+
+impl Stage1 {
+    pub fn new(fmt: SimdFormat) -> Self {
+        Stage1 { acc: 0, x: 0, fmt, cycles: 0, add_cycles: 0 }
+    }
+
+    pub fn set_fmt(&mut self, fmt: SimdFormat) {
+        self.fmt = fmt;
+    }
+
+    pub fn load_x(&mut self, x: u64) {
+        self.x = x;
+    }
+
+    pub fn clear_acc(&mut self) {
+        self.acc = 0;
+    }
+
+    /// One pure-shift cycle.
+    pub fn shift(&mut self, k: u32) -> u64 {
+        self.acc = swar_sar(self.acc, k, self.fmt);
+        self.cycles += 1;
+        self.acc
+    }
+
+    /// One fused add-then-shift cycle: `acc ← (acc ± X) >> k`, with the
+    /// `(b+1)`-bit intermediate of DESIGN.md §4 (`k = 0` = final add).
+    pub fn shift_add(&mut self, k: u32, sign: i8) -> u64 {
+        self.acc = if sign >= 0 {
+            swar_add_sar(self.acc, self.x, k, self.fmt)
+        } else {
+            swar_sub_sar(self.acc, self.x, k, self.fmt)
+        };
+        self.cycles += 1;
+        self.add_cycles += 1;
+        self.acc
+    }
+
+    /// Execute a full multiplication plan; returns the packed product.
+    pub fn run_plan(&mut self, plan: &MulPlan) -> u64 {
+        self.clear_acc();
+        for op in &plan.ops {
+            match *op {
+                MulOp::Shift { shift } => self.shift(shift),
+                MulOp::AddShift { shift, sign } => self.shift_add(shift, sign),
+            };
+        }
+        self.acc
+    }
+}
+
+/// Multiply every sub-word of `x_packed` (format `fmt`, `Q1.(b-1)`) by
+/// the scalar multiplier `m_raw` (`Q1.(y_bits-1)`), with the paper's
+/// `max_shift = 3` coalescing. Pure function used throughout the library
+/// and cross-checked against the Pallas kernel.
+pub fn mul_packed(x_packed: u64, m_raw: i64, y_bits: u32, fmt: SimdFormat) -> u64 {
+    mul_packed_with(x_packed, m_raw, y_bits, fmt, crate::bits::format::MAX_SHIFT)
+}
+
+/// As [`mul_packed`] with configurable shifter reach (ablations).
+pub fn mul_packed_with(x_packed: u64, m_raw: i64, y_bits: u32, fmt: SimdFormat, max_shift: u32) -> u64 {
+    let plan = schedule_with(m_raw, y_bits, max_shift);
+    let mut s1 = Stage1::new(fmt);
+    s1.load_x(x_packed);
+    s1.run_plan(&plan)
+}
+
+/// Scalar oracle: the same truncating shift-add algorithm on one
+/// sign-extended sub-word value. The packed implementation must agree
+/// lane-by-lane with this function — this is the semantic pivot between
+/// Rust, the jnp reference and the Pallas kernel.
+pub fn mul_scalar(x_raw: i64, m_raw: i64, x_bits: u32, y_bits: u32) -> i64 {
+    let plan = schedule_with(m_raw, y_bits, crate::bits::format::MAX_SHIFT);
+    mul_scalar_plan(x_raw, &plan, x_bits)
+}
+
+/// Scalar oracle over an explicit plan.
+///
+/// Computed in `i64` (no wrap possible mid-plan: the `(b+1)`-bit sum is
+/// shifted back into range every cycle); only the final `k = 0` add may
+/// legitimately wrap (the `−1 × −1` corner), matching the hardware.
+pub fn mul_scalar_plan(x_raw: i64, plan: &MulPlan, x_bits: u32) -> i64 {
+    let mask = (1u64 << x_bits) - 1;
+    let mut acc: i64 = 0;
+    for op in &plan.ops {
+        match *op {
+            MulOp::Shift { shift } => {
+                acc >>= shift; // arithmetic, truncate toward −∞
+            }
+            MulOp::AddShift { shift, sign } => {
+                acc = if sign >= 0 { acc + x_raw } else { acc - x_raw };
+                acc >>= shift;
+                // Wrap to the sub-word width exactly as the hardware does
+                // (identity except for the final-add overflow corner).
+                acc = sign_extend(acc as u64 & mask, x_bits);
+            }
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::fixed::from_q;
+    use crate::bits::pack::{pack, unpack};
+
+    struct XorShift(u64);
+    impl XorShift {
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            self.0 = x;
+            x
+        }
+        fn lane(&mut self, bits: u32) -> i64 {
+            sign_extend(self.next() & ((1u64 << bits) - 1), bits)
+        }
+    }
+
+    #[test]
+    fn packed_matches_scalar_oracle_everywhere() {
+        let mut rng = XorShift(0xC0FFEE);
+        for fmt in SimdFormat::all() {
+            for ybits in [4u32, 8, fmt.bits] {
+                for _ in 0..200 {
+                    let lanes: Vec<i64> =
+                        (0..fmt.lanes()).map(|_| rng.lane(fmt.bits)).collect();
+                    let m = rng.lane(ybits);
+                    let x = pack(&lanes, fmt);
+                    let prod = mul_packed(x, m, ybits, fmt);
+                    let got = unpack(prod, fmt);
+                    let want: Vec<i64> = lanes
+                        .iter()
+                        .map(|&l| mul_scalar(l, m, fmt.bits, ybits))
+                        .collect();
+                    assert_eq!(got, want, "fmt {fmt} y {ybits} m {m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multiply_accuracy_about_one_percent_at_8bit() {
+        // Section III-B: truncation error ≈ 1% in the 8-bit example.
+        // Measure mean relative error over products with |true| ≥ 0.1.
+        let _fmt = SimdFormat::new(8);
+        let mut rng = XorShift(0xACC0_4ACE);
+        let mut total = 0.0f64;
+        let mut n = 0usize;
+        for _ in 0..4000 {
+            let xr = rng.lane(8);
+            let mr = rng.lane(8);
+            let truth = from_q(xr, 8) * from_q(mr, 8);
+            if truth.abs() < 0.1 {
+                continue;
+            }
+            let got = from_q(mul_scalar(xr, mr, 8, 8), 8);
+            total += ((got - truth) / truth).abs();
+            n += 1;
+        }
+        let mean_rel = total / n as f64;
+        assert!(
+            mean_rel < 0.03,
+            "mean relative truncation error too large: {mean_rel}"
+        );
+    }
+
+    #[test]
+    fn identity_and_zero_multipliers() {
+        let fmt = SimdFormat::new(8);
+        let lanes: Vec<i64> = vec![-128, 127, 64, -64, 1, -1];
+        let x = pack(&lanes, fmt);
+        // m = 0 → 0.
+        assert_eq!(mul_packed(x, 0, 8, fmt), 0);
+        // m = −1.0 (raw −128 @ Q1.7) → negation (with −128 wrapping to −128).
+        let neg = unpack(mul_packed(x, -128, 8, fmt), fmt);
+        assert_eq!(neg, vec![-128, -127, -64, 64, -1, 1]);
+    }
+
+    #[test]
+    fn positive_halving() {
+        // m = +0.5 (raw 64 @ Q1.7): product = x/2 truncated toward −∞.
+        let fmt = SimdFormat::new(8);
+        let lanes: Vec<i64> = vec![100, -100, 3, -3, 127, -128];
+        let x = pack(&lanes, fmt);
+        let got = unpack(mul_packed(x, 64, 8, fmt), fmt);
+        let want: Vec<i64> = lanes.iter().map(|&l| l >> 1).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn cycle_counters_track_plan() {
+        let fmt = SimdFormat::new(8);
+        let plan = schedule_with(115, 8, 3);
+        let mut s1 = Stage1::new(fmt);
+        s1.load_x(0x0102_0304_0506);
+        s1.run_plan(&plan);
+        assert_eq!(s1.cycles as usize, plan.cycles());
+        assert_eq!(s1.add_cycles as usize, plan.adds());
+    }
+
+    #[test]
+    fn small_width_products_against_float() {
+        // 4-bit lanes: exhaustive x × m check that |error| ≤ 2 ULP + exactness
+        // of the wide cases where no truncation can occur.
+        let _fmt = SimdFormat::new(4);
+        for xr in -8i64..8 {
+            for mr in -8i64..8 {
+                if xr == -8 && mr == -8 {
+                    // −1 × −1 = +1 is unrepresentable in Q1.3 and wraps —
+                    // the documented two's-complement corner.
+                    continue;
+                }
+                let got = mul_scalar(xr, mr, 4, 4);
+                let truth = from_q(xr, 4) * from_q(mr, 4);
+                let err = (from_q(got, 4) - truth).abs();
+                // Truncation bound: processed positions each lose <1 ULP;
+                // CSD has ≤2 nonzero digits at 4 bits ⇒ ≤ 4 ULP slack.
+                assert!(
+                    err <= 4.0 * 0.125,
+                    "x={xr} m={mr} got={got} truth={truth} err={err}"
+                );
+            }
+        }
+    }
+}

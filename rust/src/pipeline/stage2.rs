@@ -1,0 +1,340 @@
+//! Stage 2 — the data packing unit (Section III-C, Fig. 5).
+//!
+//! A crossbar reads sub-words from the 96-bit `R2:R3` input window and
+//! writes one 48-bit output word per cycle, converting between Soft SIMD
+//! formats. Conversions preserve the `Q1.(b-1)` *value* alignment:
+//! widening appends fractional zero bits (exact), narrowing truncates the
+//! lowest fractional bits (toward −∞), i.e. sub-word `s` maps to
+//! `s << (b2-b1)` or `s >> (b1-b2)`.
+//!
+//! **Direct hop legality.** One output word needs `S2 = 48/b2`
+//! consecutive input sub-words, spanning `S2·b1` input bits; these must
+//! fit the 96-bit window, so a conversion is a single crossbar pass iff
+//! `48·b1/b2 ≤ 96`, i.e. `b1 ≤ 2·b2`. All widenings qualify; narrowing
+//! by more than 2× (e.g. 16→4) is compiled into a chain of direct hops
+//! (16→8→4) by [`conversion_chain`]. Fig. 5's legible content is the
+//! conversion *set* over {4,6,8,12,16}; the chaining rule is our
+//! documented reading of the crossbar's 2-word input port (DESIGN.md §4).
+
+use crate::bits::fixed::{sign_extend, truncate};
+use crate::bits::format::{SimdFormat, FORMATS, WORD_MASK};
+
+/// Is `from → to` a single crossbar pass?
+pub fn is_direct(from: SimdFormat, to: SimdFormat) -> bool {
+    from.bits <= 2 * to.bits
+}
+
+/// Number of 48-bit output words produced per *input word* of a direct
+/// widening hop (ceiling: the last word of a lone input word may be
+/// partially filled). For narrowing hops one output word consumes
+/// multiple input words instead; see [`input_words_per_output`].
+pub fn output_words_per_input(from: SimdFormat, to: SimdFormat) -> u32 {
+    let bits_out = from.lanes() * to.bits; // each input sub-word becomes one output sub-word
+    bits_out.div_ceil(48)
+}
+
+/// Number of input words needed to fill one output word of a direct
+/// narrowing hop (ceiling).
+pub fn input_words_per_output(from: SimdFormat, to: SimdFormat) -> u32 {
+    let bits_in = to.lanes() * from.bits;
+    bits_in.div_ceil(48)
+}
+
+/// Convert one sub-word value between formats (raw, sign-extended).
+#[inline]
+pub fn convert_subword(v: i64, from: SimdFormat, to: SimdFormat) -> i64 {
+    if to.bits >= from.bits {
+        v << (to.bits - from.bits)
+    } else {
+        v >> (from.bits - to.bits) // arithmetic: truncate toward −∞
+    }
+}
+
+/// Shortest chain of direct hops realizing `from → to`. Returns an empty
+/// chain when `from == to`. BFS over the supported format set; every
+/// pair among {4,6,8,12,16} is reachable in ≤2 hops.
+pub fn conversion_chain(from: SimdFormat, to: SimdFormat) -> Vec<(SimdFormat, SimdFormat)> {
+    if from == to {
+        return vec![];
+    }
+    if is_direct(from, to) {
+        return vec![(from, to)];
+    }
+    // BFS.
+    let mut queue = std::collections::VecDeque::new();
+    let mut prev: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    queue.push_back(from.bits);
+    prev.insert(from.bits, from.bits);
+    while let Some(b) = queue.pop_front() {
+        if b == to.bits {
+            break;
+        }
+        for &nb in FORMATS.iter() {
+            if nb != b
+                && is_direct(SimdFormat::new(b), SimdFormat::new(nb))
+                && !prev.contains_key(&nb)
+            {
+                prev.insert(nb, b);
+                queue.push_back(nb);
+            }
+        }
+    }
+    let mut chain = vec![];
+    let mut cur = to.bits;
+    while cur != from.bits {
+        let p = prev[&cur];
+        chain.push((SimdFormat::new(p), SimdFormat::new(cur)));
+        cur = p;
+    }
+    chain.reverse();
+    chain
+}
+
+/// Crossbar pass over a 96-bit window: produce the output word whose
+/// sub-words come from `S2` consecutive input sub-words starting at
+/// window sub-word index `in_skip`. `window` holds R2 in bits 0..48 and
+/// R3 in bits 48..96 (u128 carrier).
+pub fn crossbar_pass(window: u128, from: SimdFormat, to: SimdFormat, in_skip: u32) -> u64 {
+    assert!(is_direct(from, to), "{from}->{to} is not a direct crossbar hop");
+    let span_bits = to.lanes() * from.bits;
+    assert!(
+        in_skip * from.bits + span_bits <= 96,
+        "crossbar sources exceed the R2:R3 window"
+    );
+    let in_mask = (1u128 << from.bits) - 1;
+    let mut out = 0u64;
+    for lane in 0..to.lanes() {
+        let src = (in_skip + lane) * from.bits;
+        let s = sign_extend(((window >> src) & in_mask) as u64, from.bits);
+        let c = convert_subword(s, from, to);
+        out |= truncate(c, to.bits) << (lane * to.bits);
+    }
+    out & WORD_MASK
+}
+
+/// Canonical stream semantics: repack `count` valid sub-words held in
+/// `words` (format `from`) into format `to`, chaining hops as required.
+/// Output is densely packed; the final word is zero-padded.
+pub fn repack_stream(words: &[u64], from: SimdFormat, to: SimdFormat, count: usize) -> Vec<u64> {
+    let mut vals = crate::bits::pack::unpack_stream(words, from, count);
+    let mut cur = from;
+    for (f, t) in conversion_chain(from, to) {
+        debug_assert_eq!(f, cur);
+        vals = vals.iter().map(|&v| convert_subword(v, f, t)).collect();
+        cur = t;
+    }
+    debug_assert_eq!(cur, to);
+    crate::bits::pack::pack_stream(&vals, to)
+}
+
+/// Repack a single word (lanes beyond the word are zero-padded).
+pub fn repack_word(word: u64, from: SimdFormat, to: SimdFormat) -> Vec<u64> {
+    repack_stream(&[word], from, to, from.lanes() as usize)
+}
+
+/// Fast path for the doubling widen `b → 2b` (the multiply→accumulate
+/// conversion on the NN hot path): one input word expands into exactly
+/// two output words, each sub-word value-aligned (`<< b`) in its slot.
+/// Bit-identical to [`repack_word`] for `to = 2·from` (tested below);
+/// pure shifts/masks, no per-lane unpacking (EXPERIMENTS.md §Perf).
+#[inline]
+pub fn widen_double(word: u64, from: SimdFormat) -> (u64, u64) {
+    let b = from.bits;
+    debug_assert!(FORMATS.contains(&(2 * b)));
+    let half = from.lanes() / 2;
+    let mask = (1u64 << b) - 1;
+    let mut lo = 0u64;
+    let mut hi = 0u64;
+    for i in 0..half {
+        lo |= ((word >> (i * b)) & mask) << (2 * b * i + b);
+        hi |= ((word >> ((half + i) * b)) & mask) << (2 * b * i + b);
+    }
+    (lo, hi)
+}
+
+/// Cycle/bookkeeping view of Stage 2 used by the pipeline core: executes
+/// crossbar passes and counts them.
+#[derive(Debug, Default, Clone)]
+pub struct Stage2 {
+    pub passes: u64,
+    pub bypasses: u64,
+}
+
+impl Stage2 {
+    /// One crossbar cycle.
+    pub fn pass(&mut self, window: u128, from: SimdFormat, to: SimdFormat, in_skip: u32) -> u64 {
+        self.passes += 1;
+        crossbar_pass(window, from, to, in_skip)
+    }
+
+    /// One bypass cycle (R4 ← R2).
+    pub fn bypass(&mut self, r2: u64) -> u64 {
+        self.bypasses += 1;
+        r2
+    }
+
+    /// Total cycles (a bypass still occupies the stage for a cycle).
+    pub fn cycles(&self) -> u64 {
+        self.passes + self.bypasses
+    }
+}
+
+/// Number of Stage-2 cycles to repack `n_words` stream words from → to
+/// (the cost model's view; chains multiply the cost).
+pub fn repack_cycles(n_words: usize, from: SimdFormat, to: SimdFormat) -> u64 {
+    if from == to {
+        return n_words as u64; // bypass cycles
+    }
+    let mut cycles = 0u64;
+    // Sub-word count is conserved by conversion.
+    let count = n_words * from.lanes() as usize;
+    for (_f, t) in conversion_chain(from, to) {
+        // One cycle per produced output word of this hop.
+        cycles += (count * t.bits as usize).div_ceil(48) as u64;
+    }
+    cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::pack::{pack_stream, unpack_stream};
+
+    fn fmt(b: u32) -> SimdFormat {
+        SimdFormat::new(b)
+    }
+
+    #[test]
+    fn direct_hop_rule() {
+        assert!(is_direct(fmt(8), fmt(16)));
+        assert!(is_direct(fmt(8), fmt(4))); // 8 ≤ 2·4
+        assert!(is_direct(fmt(12), fmt(6))); // 12 ≤ 2·6 (exactly the window)
+        assert!(!is_direct(fmt(16), fmt(4)));
+        assert!(!is_direct(fmt(12), fmt(4)));
+        assert!(!is_direct(fmt(16), fmt(6)));
+    }
+
+    #[test]
+    fn chains_cover_all_pairs() {
+        for a in SimdFormat::all() {
+            for b in SimdFormat::all() {
+                let chain = conversion_chain(a, b);
+                if a == b {
+                    assert!(chain.is_empty());
+                    continue;
+                }
+                assert!(!chain.is_empty(), "{a}->{b}");
+                assert!(chain.len() <= 2, "{a}->{b} needs {} hops", chain.len());
+                assert_eq!(chain[0].0, a);
+                assert_eq!(chain.last().unwrap().1, b);
+                for hop in &chain {
+                    assert!(is_direct(hop.0, hop.1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn widen_is_exact_in_value() {
+        // Widening must preserve the represented Q1 value exactly.
+        let from = fmt(4);
+        let to = fmt(12);
+        for v in -8i64..8 {
+            let c = convert_subword(v, from, to);
+            let val_from = v as f64 / 8.0;
+            let val_to = c as f64 / 2048.0;
+            assert_eq!(val_from, val_to, "v={v}");
+        }
+    }
+
+    #[test]
+    fn narrow_truncates_toward_neg_inf() {
+        let from = fmt(8);
+        let to = fmt(4);
+        assert_eq!(convert_subword(0b0111_1111, from, to), 0b0111); // 127→7
+        assert_eq!(convert_subword(-1, from, to), -1); // −1/128 → −1/8? truncation −∞
+        assert_eq!(convert_subword(-128, from, to), -8);
+        assert_eq!(convert_subword(17, from, to), 1);
+    }
+
+    #[test]
+    fn stream_roundtrip_widen_then_narrow_is_identity() {
+        // widen b→B then narrow B→b restores the original sub-words.
+        let vals: Vec<i64> = (0..24).map(|i| ((i * 29 + 3) % 16) - 8).collect();
+        for (a, b) in [(4u32, 8u32), (4, 16), (6, 12), (8, 16), (6, 8), (12, 16)] {
+            let (fa, fb) = (fmt(a), fmt(b));
+            let w = pack_stream(&vals, fa);
+            let wide = repack_stream(&w, fa, fb, vals.len());
+            let back = repack_stream(&wide, fb, fa, vals.len());
+            assert_eq!(unpack_stream(&back, fa, vals.len()), vals, "{fa}<->{fb}");
+        }
+    }
+
+    #[test]
+    fn crossbar_pass_matches_stream_semantics() {
+        // Single-window passes agree with the canonical stream function.
+        let from = fmt(8);
+        let to = fmt(16);
+        let vals: Vec<i64> = vec![-128, 127, -1, 64, -64, 5];
+        let w = pack_stream(&vals, from)[0];
+        let window = w as u128; // R3 empty
+        let out0 = crossbar_pass(window, from, to, 0);
+        let out1 = crossbar_pass(window, from, to, 3);
+        let stream = repack_stream(&[w], from, to, 6);
+        assert_eq!(vec![out0, out1], stream);
+    }
+
+    #[test]
+    fn narrowing_pass_uses_both_window_words() {
+        let from = fmt(8);
+        let to = fmt(4);
+        let vals: Vec<i64> = (0..12).map(|i| (i * 21 % 256) - 128).collect();
+        let ws = pack_stream(&vals, from);
+        let window = ws[0] as u128 | ((ws[1] as u128) << 48);
+        let out = crossbar_pass(window, from, to, 0);
+        let stream = repack_stream(&ws, from, to, 12);
+        assert_eq!(out, stream[0]);
+    }
+
+    #[test]
+    fn sixteen_to_four_chains_through_eight() {
+        let chain = conversion_chain(fmt(16), fmt(4));
+        assert_eq!(chain.len(), 2);
+        assert_eq!(chain[0].0.bits, 16);
+        assert_eq!(chain[1].1.bits, 4);
+        // And the value semantics still hold.
+        let vals: Vec<i64> = vec![0x7FFF, -0x8000, 0x1234];
+        let w = pack_stream(&vals, fmt(16));
+        let out = repack_stream(&w, fmt(16), fmt(4), 3);
+        let got = unpack_stream(&out, fmt(4), 3);
+        assert_eq!(got, vec![7, -8, 1]); // top-4-bit truncation
+    }
+
+    #[test]
+    fn widen_double_matches_repack_word() {
+        let mut state = 0x1234_5678_9ABCu64;
+        for (a, b) in [(4u32, 8u32), (6, 12), (8, 16)] {
+            let (fa, fb) = (fmt(a), fmt(b));
+            for _ in 0..200 {
+                // xorshift-ish scramble
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                let w = state & crate::bits::format::WORD_MASK;
+                let (lo, hi) = widen_double(w, fa);
+                let want = repack_word(w, fa, fb);
+                assert_eq!(vec![lo, hi], want, "{fa}->{fb} w={w:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn repack_cycles_counts_hops() {
+        // 8→16 on one word: 6 sub-words → 2 output words → 2 cycles.
+        assert_eq!(repack_cycles(1, fmt(8), fmt(16)), 2);
+        // bypass: 1 cycle per word.
+        assert_eq!(repack_cycles(3, fmt(8), fmt(8)), 3);
+        // 16→4 via 8: 3 sub-words: hop1 out = ceil(3·8/48)=1, hop2 out = ceil(3·4/48)=1 → 2.
+        assert_eq!(repack_cycles(1, fmt(16), fmt(4)), 2);
+    }
+}

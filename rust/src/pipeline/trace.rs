@@ -1,0 +1,78 @@
+//! Per-cycle activity traces.
+//!
+//! The functional pipeline records, for every datapath cycle, the operand
+//! values each stage saw. The energy model (`energy::model`) replays
+//! these traces through the gate-level netlists (`rtl`) to obtain real
+//! switching activity instead of fixed activity factors.
+
+use crate::bits::format::SimdFormat;
+
+
+/// One Stage-1 cycle worth of operand activity.
+#[derive(Debug, Clone, Copy)]
+pub struct S1Event {
+    pub fmt: SimdFormat,
+    /// Accumulator value entering the cycle.
+    pub acc_in: u64,
+    /// Multiplicand operand register.
+    pub x: u64,
+    /// Shift distance (1..=3).
+    pub k: u32,
+    /// +1 add, −1 subtract, 0 shift-only.
+    pub sign: i8,
+    /// Accumulator value leaving the cycle.
+    pub acc_out: u64,
+}
+
+/// One Stage-2 cycle worth of operand activity.
+#[derive(Debug, Clone, Copy)]
+pub struct S2Event {
+    pub from: SimdFormat,
+    pub to: SimdFormat,
+    /// 96-bit R2:R3 window contents.
+    pub window: u128,
+    pub in_skip: u32,
+    pub out: u64,
+    /// True for bypass cycles (crossbar idle, window forwarded).
+    pub bypass: bool,
+}
+
+/// A cycle event: at most one op per stage (the stages are pipelined, so
+/// one `CycleEvent` may carry both).
+#[derive(Debug, Clone, Copy)]
+pub enum CycleEvent {
+    S1(S1Event),
+    S2(S2Event),
+}
+
+/// An execution trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<CycleEvent>,
+    /// Total elapsed cycles under two-stage overlap (≤ events.len()).
+    pub elapsed_cycles: u64,
+}
+
+impl Trace {
+    pub fn s1_events(&self) -> impl Iterator<Item = &S1Event> {
+        self.events.iter().filter_map(|e| match e {
+            CycleEvent::S1(ev) => Some(ev),
+            _ => None,
+        })
+    }
+
+    pub fn s2_events(&self) -> impl Iterator<Item = &S2Event> {
+        self.events.iter().filter_map(|e| match e {
+            CycleEvent::S2(ev) => Some(ev),
+            _ => None,
+        })
+    }
+
+    pub fn s1_cycles(&self) -> u64 {
+        self.s1_events().count() as u64
+    }
+
+    pub fn s2_cycles(&self) -> u64 {
+        self.s2_events().count() as u64
+    }
+}

@@ -1,0 +1,64 @@
+//! Quantization helpers: float ↔ Q1.X conversion for tensors, per-layer
+//! bitwidth selection, and truncation-error analysis (the paper's ~1%
+//! claim, Section III-B).
+
+pub mod error;
+
+pub use error::{mul_error_stats, ErrorStats};
+
+use crate::bits::fixed::{from_q, to_q};
+
+/// Quantize a float slice to Q1.(bits-1) raws.
+pub fn quantize(vals: &[f64], bits: u32) -> Vec<i64> {
+    vals.iter().map(|&v| to_q(v, bits)).collect()
+}
+
+/// Dequantize raws back to floats.
+pub fn dequantize(raws: &[i64], bits: u32) -> Vec<f64> {
+    raws.iter().map(|&r| from_q(r, bits)).collect()
+}
+
+/// Signal-to-quantization-noise ratio (dB) of representing `vals` at
+/// `bits` — used by the layer-sweep example to pick per-layer widths.
+pub fn sqnr_db(vals: &[f64], bits: u32) -> f64 {
+    let mut sig = 0.0f64;
+    let mut noise = 0.0f64;
+    for &v in vals {
+        let q = from_q(to_q(v, bits), bits);
+        sig += v * v;
+        noise += (v - q) * (v - q);
+    }
+    if noise == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (sig / noise).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_dequantize_roundtrip_error() {
+        let vals: Vec<f64> = (0..100).map(|i| (i as f64 / 100.0) * 1.9 - 0.95).collect();
+        for bits in [4u32, 8, 16] {
+            let q = quantize(&vals, bits);
+            let d = dequantize(&q, bits);
+            let ulp = 2f64.powi(-(bits as i32 - 1));
+            for (v, r) in vals.iter().zip(&d) {
+                assert!((v - r).abs() <= ulp / 2.0 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn sqnr_improves_with_bits() {
+        let vals: Vec<f64> = (0..500).map(|i| ((i * 37 % 199) as f64 / 100.0) - 0.99).collect();
+        let s4 = sqnr_db(&vals, 4);
+        let s8 = sqnr_db(&vals, 8);
+        let s16 = sqnr_db(&vals, 16);
+        assert!(s4 < s8 && s8 < s16, "{s4} {s8} {s16}");
+        // ~6 dB per bit.
+        assert!((s8 - s4) > 15.0 && (s8 - s4) < 33.0);
+    }
+}

@@ -1,0 +1,274 @@
+//! The configurable adder of Fig. 4a: a 48-bit adder whose carry chain
+//! is killed at sub-word MSB positions (`V_x = 0`) and which injects the
+//! `+1` of two's-complement subtraction at every sub-word LSB.
+//!
+//! Two structural variants:
+//! * `ripple` — one FA slice per bit with the boundary gating of
+//!   Fig. 4a; minimal area, depth ∝ 48.
+//! * `carry_select` — 4-bit blocks computed for both carry-in values and
+//!   selected by a short mux chain (what synthesis produces under a
+//!   tight clock); ~1.8× the area, ~¼ the depth. The synthesis model
+//!   (`energy::model`) picks the variant per timing constraint.
+//!
+//! Netlist interface (input order):
+//!   a[48], c[48], add_en, sub, m[48] (sub-word MSB mask = ¬V_x), l[48]
+//!   (sub-word LSB mask)
+//! Outputs: sum[48], ovf[48] (carry-in ⊕ carry-out per bit; consumed by
+//! the fused shifter's sign-correction muxes at MSB positions).
+
+use super::build::NetBuilder;
+use super::gate::{Netlist, NodeId};
+
+pub struct AdderIo {
+    pub a: Vec<NodeId>,
+    pub c: Vec<NodeId>,
+    pub add_en: NodeId,
+    pub sub: NodeId,
+    pub m: Vec<NodeId>,
+    pub l: Vec<NodeId>,
+}
+
+/// Declare the standard adder inputs on `b`.
+pub fn declare_inputs(b: &mut NetBuilder, width: usize) -> AdderIo {
+    AdderIo {
+        a: b.inputs(width),
+        c: b.inputs(width),
+        add_en: b.input(),
+        sub: b.input(),
+        m: b.inputs(width),
+        l: b.inputs(width),
+    }
+}
+
+/// Emit the ripple slices; returns (sum, ovf) nets.
+///
+/// Per bit `i`:
+///   c_eff  = (c_i & add_en) ⊕ sub          (operand gate + complement)
+///   cin_i  = (carry_{i-1} & ¬m_{i-1}) | (sub & add_en & l_i)
+///   sum_i, carry_i = FA(a_i, c_eff, cin_i)
+///   ovf_i  = cin_i ⊕ carry_i ... at the MSB of a lane the true
+///            (b+1)-bit sign is sum_i ⊕ ovf_i.
+pub fn build_ripple(b: &mut NetBuilder, io: &AdderIo) -> (Vec<NodeId>, Vec<NodeId>) {
+    let width = io.a.len();
+    let sub_gated = b.and2(io.sub, io.add_en);
+    let mut sums = Vec::with_capacity(width);
+    let mut ovfs = Vec::with_capacity(width);
+    let mut carry: Option<NodeId> = None;
+    let mut prev_m: Option<NodeId> = None;
+    for i in 0..width {
+        let c_gated = b.and2(io.c[i], io.add_en);
+        let c_eff = b.xor2(c_gated, sub_gated);
+        let inject = b.and2(sub_gated, io.l[i]);
+        let cin = match (carry, prev_m) {
+            (Some(cy), Some(pm)) => {
+                let v = b.not(pm); // V_x: propagate unless previous bit is a lane MSB
+                let kept = b.and2(cy, v);
+                b.or2(kept, inject)
+            }
+            _ => inject,
+        };
+        let (sum, cout) = b.full_adder(io.a[i], c_eff, cin);
+        let ovf = b.xor2(cin, cout);
+        sums.push(sum);
+        ovfs.push(ovf);
+        carry = Some(cout);
+        prev_m = Some(io.m[i]);
+    }
+    (sums, ovfs)
+}
+
+/// Complete ripple netlist.
+pub fn configurable_adder_ripple(width: usize) -> Netlist {
+    let mut b = NetBuilder::new("softsimd_adder_ripple");
+    let io = declare_inputs(&mut b, width);
+    let (sums, ovfs) = build_ripple(&mut b, &io);
+    b.outputs(&sums);
+    b.outputs(&ovfs);
+    b.finish()
+}
+
+/// Emit carry-select blocks of `block` bits; returns (sum, ovf).
+///
+/// Each block instantiates the ripple slice twice (block-carry-in 0/1)
+/// and muxes sums/ovfs/carry-out — the duplicated chains keep the exact
+/// kill/inject behaviour of Fig. 4a inside the block.
+pub fn build_carry_select(
+    b: &mut NetBuilder,
+    io: &AdderIo,
+    block: usize,
+) -> (Vec<NodeId>, Vec<NodeId>) {
+    let width = io.a.len();
+    assert_eq!(width % block, 0);
+    let sub_gated = b.and2(io.sub, io.add_en);
+    let mut sums = vec![];
+    let mut ovfs = vec![];
+    // Selected carry into the current block (None = constant 0 for block 0).
+    let mut blk_cin: Option<NodeId> = None;
+
+    for blk_start in (0..width).step_by(block) {
+        // Two ripple chains with assumed carry-in 0 / 1.
+        let mut variants: Vec<(Vec<NodeId>, Vec<NodeId>, NodeId)> = vec![];
+        for assumed in 0..2u8 {
+            let mut sums_v = vec![];
+            let mut ovfs_v = vec![];
+            let mut carry: Option<NodeId> = if assumed == 0 { None } else { Some(b.one()) };
+            for i in blk_start..blk_start + block {
+                let c_gated = b.and2(io.c[i], io.add_en);
+                let c_eff = b.xor2(c_gated, sub_gated);
+                let inject = b.and2(sub_gated, io.l[i]);
+                // Propagate-enable from the previous bit (kill at lane MSB).
+                let cin = if i == blk_start {
+                    match carry {
+                        None => inject,
+                        Some(cy) => {
+                            // Block boundary: the incoming carry must still
+                            // respect a lane boundary at bit blk_start-1.
+                            if blk_start == 0 {
+                                inject
+                            } else {
+                                let v = b.not(io.m[i - 1]);
+                                let kept = b.and2(cy, v);
+                                b.or2(kept, inject)
+                            }
+                        }
+                    }
+                } else {
+                    let cy = carry.expect("mid-block carry");
+                    let v = b.not(io.m[i - 1]);
+                    let kept = b.and2(cy, v);
+                    b.or2(kept, inject)
+                };
+                let (sum, cout) = b.full_adder(io.a[i], c_eff, cin);
+                let ovf = b.xor2(cin, cout);
+                sums_v.push(sum);
+                ovfs_v.push(ovf);
+                carry = Some(cout);
+            }
+            variants.push((sums_v, ovfs_v, carry.unwrap()));
+        }
+        let (s0, o0, c0) = variants.swap_remove(0);
+        let (s1, o1, c1) = variants.swap_remove(0);
+        match blk_cin {
+            None => {
+                // Block 0: carry-in is exactly 0 — use variant 0 directly.
+                sums.extend_from_slice(&s0);
+                ovfs.extend_from_slice(&o0);
+                blk_cin = Some(c0);
+            }
+            Some(sel) => {
+                for i in 0..block {
+                    sums.push(b.mux2(sel, s0[i], s1[i]));
+                    ovfs.push(b.mux2(sel, o0[i], o1[i]));
+                }
+                blk_cin = Some(b.mux2(sel, c0, c1));
+            }
+        }
+    }
+    (sums, ovfs)
+}
+
+/// Complete carry-select netlist.
+pub fn configurable_adder_select(width: usize, block: usize) -> Netlist {
+    let mut b = NetBuilder::new("softsimd_adder_select");
+    let io = declare_inputs(&mut b, width);
+    let (sums, ovfs) = build_carry_select(&mut b, &io, block);
+    b.outputs(&sums);
+    b.outputs(&ovfs);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::format::SimdFormat;
+    use crate::bits::swar::{swar_add, swar_sub};
+    use crate::rtl::sim::Simulator;
+    use crate::rtl::timing::depth;
+    use crate::workload::synth::XorShift64;
+
+    fn drive(
+        sim: &mut Simulator,
+        net: &Netlist,
+        a: u64,
+        c: u64,
+        add_en: bool,
+        sub: bool,
+        fmt: SimdFormat,
+    ) -> u64 {
+        let mut ins = vec![];
+        for i in 0..48 {
+            ins.push((a >> i) & 1 != 0);
+        }
+        for i in 0..48 {
+            ins.push((c >> i) & 1 != 0);
+        }
+        ins.push(add_en);
+        ins.push(sub);
+        let m = fmt.msb_mask();
+        let l = fmt.lsb_mask();
+        for i in 0..48 {
+            ins.push((m >> i) & 1 != 0);
+        }
+        for i in 0..48 {
+            ins.push((l >> i) & 1 != 0);
+        }
+        sim.set_inputs(&ins);
+        sim.eval(net);
+        sim.output_u64(net, 0, 48)
+    }
+
+    fn check_against_swar(net: &Netlist) {
+        let mut sim = Simulator::new(net);
+        let mut rng = XorShift64::new(0xADDE5);
+        for fmt in SimdFormat::all() {
+            for _ in 0..120 {
+                let a = rng.word();
+                let c = rng.word();
+                assert_eq!(
+                    drive(&mut sim, net, a, c, true, false, fmt),
+                    swar_add(a, c, fmt),
+                    "add fmt {fmt}"
+                );
+                assert_eq!(
+                    drive(&mut sim, net, a, c, true, true, fmt),
+                    swar_sub(a, c, fmt),
+                    "sub fmt {fmt}"
+                );
+                // add_en = 0: passthrough of a.
+                assert_eq!(drive(&mut sim, net, a, c, false, false, fmt), a);
+            }
+        }
+    }
+
+    #[test]
+    fn ripple_matches_swar_semantics() {
+        check_against_swar(&configurable_adder_ripple(48));
+    }
+
+    #[test]
+    fn carry_select_matches_swar_semantics() {
+        check_against_swar(&configurable_adder_select(48, 4));
+    }
+
+    #[test]
+    fn select_is_faster_but_bigger() {
+        let r = configurable_adder_ripple(48);
+        let s = configurable_adder_select(48, 4);
+        assert!(depth(&s) < depth(&r) / 2, "{} vs {}", depth(&s), depth(&r));
+        assert!(s.logic_cells() > r.logic_cells());
+        assert!(s.logic_cells() < 3 * r.logic_cells());
+    }
+
+    #[test]
+    fn overflow_flag_detects_wrap() {
+        // 8-bit lanes: 127 + 1 overflows lane 0; ovf bit at lane MSB (bit 7).
+        let net = configurable_adder_ripple(48);
+        let mut sim = Simulator::new(&net);
+        let fmt = SimdFormat::new(8);
+        let a = crate::bits::pack::pack(&[127, 0, 0, 0, 0, 0], fmt);
+        let c = crate::bits::pack::pack(&[1, 0, 0, 0, 0, 0], fmt);
+        drive(&mut sim, &net, a, c, true, false, fmt);
+        let ovf = sim.output_u64(&net, 48, 48);
+        assert_ne!(ovf & (1 << 7), 0, "ovf at lane-0 MSB");
+    }
+}

@@ -1,0 +1,202 @@
+//! Netlist construction helpers.
+
+use super::gate::{Cell, CellKind, Netlist, NodeId, NO_NET};
+
+/// Builder enforcing topological order (cells only reference existing
+/// nets).
+pub struct NetBuilder {
+    net: Netlist,
+}
+
+impl NetBuilder {
+    pub fn new(name: &str) -> Self {
+        NetBuilder {
+            net: Netlist { name: name.to_string(), ..Default::default() },
+        }
+    }
+
+    fn push(&mut self, kind: CellKind, a: NodeId, b: NodeId, sel: NodeId) -> NodeId {
+        let id = self.net.cells.len() as NodeId;
+        debug_assert!(a == NO_NET || a < id);
+        debug_assert!(b == NO_NET || b < id);
+        debug_assert!(sel == NO_NET || sel < id);
+        self.net.cells.push(Cell { kind, a, b, sel });
+        id
+    }
+
+    pub fn input(&mut self) -> NodeId {
+        let id = self.push(CellKind::Input, NO_NET, NO_NET, NO_NET);
+        self.net.inputs.push(id);
+        id
+    }
+
+    /// Declare `n` inputs (LSB-first buses).
+    pub fn inputs(&mut self, n: usize) -> Vec<NodeId> {
+        (0..n).map(|_| self.input()).collect()
+    }
+
+    pub fn zero(&mut self) -> NodeId {
+        self.push(CellKind::Const0, NO_NET, NO_NET, NO_NET)
+    }
+
+    pub fn one(&mut self) -> NodeId {
+        self.push(CellKind::Const1, NO_NET, NO_NET, NO_NET)
+    }
+
+    pub fn not(&mut self, a: NodeId) -> NodeId {
+        self.push(CellKind::Inv, a, NO_NET, NO_NET)
+    }
+
+    pub fn buf(&mut self, a: NodeId) -> NodeId {
+        self.push(CellKind::Buf, a, NO_NET, NO_NET)
+    }
+
+    pub fn and2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(CellKind::And2, a, b, NO_NET)
+    }
+
+    pub fn or2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(CellKind::Or2, a, b, NO_NET)
+    }
+
+    pub fn nand2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(CellKind::Nand2, a, b, NO_NET)
+    }
+
+    pub fn nor2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(CellKind::Nor2, a, b, NO_NET)
+    }
+
+    pub fn xor2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(CellKind::Xor2, a, b, NO_NET)
+    }
+
+    pub fn xnor2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(CellKind::Xnor2, a, b, NO_NET)
+    }
+
+    /// `sel ? b : a`.
+    pub fn mux2(&mut self, sel: NodeId, a: NodeId, b: NodeId) -> NodeId {
+        self.push(CellKind::Mux2, a, b, sel)
+    }
+
+    /// Full adder: returns (sum, carry).
+    pub fn full_adder(&mut self, a: NodeId, b: NodeId, cin: NodeId) -> (NodeId, NodeId) {
+        let axb = self.xor2(a, b);
+        let sum = self.xor2(axb, cin);
+        let t1 = self.and2(a, b);
+        let t2 = self.and2(axb, cin);
+        let carry = self.or2(t1, t2);
+        (sum, carry)
+    }
+
+    /// Wide OR of a slice (balanced tree).
+    pub fn or_tree(&mut self, nets: &[NodeId]) -> NodeId {
+        assert!(!nets.is_empty());
+        let mut layer = nets.to_vec();
+        while layer.len() > 1 {
+            let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+            for pair in layer.chunks(2) {
+                next.push(if pair.len() == 2 {
+                    self.or2(pair[0], pair[1])
+                } else {
+                    pair[0]
+                });
+            }
+            layer = next;
+        }
+        layer[0]
+    }
+
+    /// Wide AND of a slice (balanced tree).
+    pub fn and_tree(&mut self, nets: &[NodeId]) -> NodeId {
+        assert!(!nets.is_empty());
+        let mut layer = nets.to_vec();
+        while layer.len() > 1 {
+            let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+            for pair in layer.chunks(2) {
+                next.push(if pair.len() == 2 {
+                    self.and2(pair[0], pair[1])
+                } else {
+                    pair[0]
+                });
+            }
+            layer = next;
+        }
+        layer[0]
+    }
+
+    /// One-hot select: `Σ sel_i · val_i` (OR of ANDs). Exactly one
+    /// `sel_i` must be high in operation.
+    pub fn onehot_mux(&mut self, sels: &[NodeId], vals: &[NodeId]) -> NodeId {
+        assert_eq!(sels.len(), vals.len());
+        let terms: Vec<NodeId> = sels
+            .iter()
+            .zip(vals)
+            .map(|(&s, &v)| self.and2(s, v))
+            .collect();
+        self.or_tree(&terms)
+    }
+
+    pub fn output(&mut self, net: NodeId) {
+        self.net.outputs.push(net);
+    }
+
+    pub fn outputs(&mut self, nets: &[NodeId]) {
+        self.net.outputs.extend_from_slice(nets);
+    }
+
+    pub fn finish(self) -> Netlist {
+        self.net
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtl::sim::Simulator;
+
+    #[test]
+    fn full_adder_truth_table() {
+        let mut b = NetBuilder::new("fa");
+        let x = b.input();
+        let y = b.input();
+        let c = b.input();
+        let (s, co) = b.full_adder(x, y, c);
+        b.output(s);
+        b.output(co);
+        let net = b.finish();
+        let mut sim = Simulator::new(&net);
+        for bits in 0..8u8 {
+            let ins = [bits & 1 != 0, bits & 2 != 0, bits & 4 != 0];
+            sim.set_inputs(&ins);
+            sim.eval(&net);
+            let total = ins.iter().filter(|&&v| v).count();
+            assert_eq!(sim.output(&net, 0), total & 1 == 1, "sum for {bits:03b}");
+            assert_eq!(sim.output(&net, 1), total >= 2, "carry for {bits:03b}");
+        }
+    }
+
+    #[test]
+    fn onehot_mux_selects() {
+        let mut b = NetBuilder::new("ohm");
+        let sels = b.inputs(3);
+        let vals = b.inputs(3);
+        let o = b.onehot_mux(&sels, &vals);
+        b.output(o);
+        let net = b.finish();
+        let mut sim = Simulator::new(&net);
+        for pick in 0..3 {
+            for pattern in 0..8u8 {
+                let mut ins = vec![false; 6];
+                ins[pick] = true;
+                for v in 0..3 {
+                    ins[3 + v] = pattern & (1 << v) != 0;
+                }
+                sim.set_inputs(&ins);
+                sim.eval(&net);
+                assert_eq!(sim.output(&net, 0), ins[3 + pick]);
+            }
+        }
+    }
+}

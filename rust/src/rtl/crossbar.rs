@@ -1,0 +1,180 @@
+//! The Stage-2 repacking crossbar (Section III-C, Fig. 5) as a netlist.
+//!
+//! For every supported configuration — each direct conversion hop ×
+//! output-word index, plus bypass — each of the 48 output bits has a
+//! fixed source bit in the 96-bit `R2:R3` window (or constant 0 for
+//! widening zero-fill). The netlist is a per-output one-hot mux over
+//! the configuration set; its depth is logarithmic in the config count,
+//! which is why Stage-2 area stays flat across timing constraints
+//! (Fig. 6 discussion).
+
+use super::build::NetBuilder;
+use super::gate::{Netlist, NodeId};
+use crate::bits::format::SimdFormat;
+use crate::pipeline::stage2::{is_direct, output_words_per_input};
+
+/// One crossbar configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct XbarConfig {
+    pub from: SimdFormat,
+    pub to: SimdFormat,
+    pub in_skip: u32,
+    pub bypass: bool,
+}
+
+/// Enumerate every configuration the Stage-2 instruction set can issue:
+/// bypass first, then each direct hop with every in-window skip.
+pub fn config_table() -> Vec<XbarConfig> {
+    let mut cfgs = vec![XbarConfig {
+        from: SimdFormat::new(8),
+        to: SimdFormat::new(8),
+        in_skip: 0,
+        bypass: true,
+    }];
+    for from in SimdFormat::all() {
+        for to in SimdFormat::all() {
+            if from == to || !is_direct(from, to) {
+                continue;
+            }
+            let skips = if to.bits > from.bits {
+                output_words_per_input(from, to)
+            } else {
+                1
+            };
+            for w in 0..skips {
+                cfgs.push(XbarConfig {
+                    from,
+                    to,
+                    in_skip: w * to.lanes(),
+                    bypass: false,
+                });
+            }
+        }
+    }
+    cfgs
+}
+
+/// Source window bit for output bit `j` under `cfg`; `None` = constant 0
+/// (widening zero-fill).
+pub fn source_bit(cfg: &XbarConfig, j: u32) -> Option<u32> {
+    if cfg.bypass {
+        return Some(j);
+    }
+    let (b1, b2) = (cfg.from.bits, cfg.to.bits);
+    let lane = j / b2;
+    let off = j % b2;
+    let src_sub = cfg.in_skip + lane;
+    if b2 > b1 {
+        // Widening: value goes to the top b1 bits of the wider slot.
+        let pad = b2 - b1;
+        if off < pad {
+            None
+        } else {
+            Some(src_sub * b1 + (off - pad))
+        }
+    } else {
+        // Narrowing: keep the top b2 bits.
+        Some(src_sub * b1 + (off + (b1 - b2)))
+    }
+}
+
+/// Build the crossbar netlist.
+/// Inputs: window[96], cfg_onehot[#configs]. Outputs: out[48].
+pub fn crossbar_netlist() -> (Netlist, Vec<XbarConfig>) {
+    let cfgs = config_table();
+    let mut b = NetBuilder::new("softsimd_crossbar");
+    let window = b.inputs(96);
+    let sel = b.inputs(cfgs.len());
+    for j in 0..48u32 {
+        // Share mux terms between configurations reading the same source
+        // bit (what synthesis does): OR the selects per unique source,
+        // then one AND per source. Constant-0 sources need no gate.
+        let mut by_source: std::collections::BTreeMap<u32, Vec<NodeId>> =
+            std::collections::BTreeMap::new();
+        for (ci, cfg) in cfgs.iter().enumerate() {
+            if let Some(src) = source_bit(cfg, j) {
+                debug_assert!(src < 96, "source beyond window for {cfg:?} bit {j}");
+                by_source.entry(src).or_default().push(sel[ci]);
+            }
+        }
+        let terms: Vec<NodeId> = by_source
+            .into_iter()
+            .map(|(src, sels)| {
+                let s = b.or_tree(&sels);
+                b.and2(s, window[src as usize])
+            })
+            .collect();
+        let out = b.or_tree(&terms);
+        b.output(out);
+    }
+    (b.finish(), cfgs)
+}
+
+/// Drive the crossbar for one cycle.
+pub fn drive_crossbar(
+    sim: &mut super::sim::Simulator,
+    net: &Netlist,
+    cfgs: &[XbarConfig],
+    window: u128,
+    want: &XbarConfig,
+) -> u64 {
+    let mut ins = Vec::with_capacity(96 + cfgs.len());
+    for i in 0..96 {
+        ins.push((window >> i) & 1 != 0);
+    }
+    for cfg in cfgs {
+        ins.push(cfg == want);
+    }
+    sim.set_inputs(&ins);
+    sim.eval(net);
+    sim.output_u64(net, 0, 48)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::stage2::crossbar_pass;
+    use crate::rtl::sim::Simulator;
+    use crate::rtl::timing::depth;
+    use crate::workload::synth::XorShift64;
+
+    #[test]
+    fn config_table_is_complete_and_windowed() {
+        let cfgs = config_table();
+        assert!(cfgs.len() >= 20, "found {} configs", cfgs.len());
+        for cfg in &cfgs {
+            for j in 0..48 {
+                if let Some(src) = source_bit(cfg, j) {
+                    assert!(src < 96, "{cfg:?} bit {j} reads bit {src}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn netlist_matches_functional_crossbar() {
+        let (net, cfgs) = crossbar_netlist();
+        let mut sim = Simulator::new(&net);
+        let mut rng = XorShift64::new(0xCB0B);
+        for cfg in &cfgs {
+            for _ in 0..25 {
+                let window =
+                    (rng.word() as u128) | ((rng.word() as u128) << 48);
+                let got = drive_crossbar(&mut sim, &net, &cfgs, window, cfg);
+                let want = if cfg.bypass {
+                    (window & ((1u128 << 48) - 1)) as u64
+                } else {
+                    crossbar_pass(window, cfg.from, cfg.to, cfg.in_skip)
+                };
+                assert_eq!(got, want, "{cfg:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn crossbar_is_shallow() {
+        let (net, _) = crossbar_netlist();
+        // Logarithmic in config count: well under 20 levels.
+        assert!(depth(&net) < 20, "depth {}", depth(&net));
+    }
+}

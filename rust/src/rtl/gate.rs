@@ -1,0 +1,113 @@
+//! Cells and netlists.
+
+/// Index of a net (one driver per net — the output of a cell).
+pub type NodeId = u32;
+
+/// Standard-cell kinds. Two-input cells use `a`, `b`; `Mux2` selects
+/// `a` when `sel = 0`, `b` when `sel = 1`; `Inv`/`Buf` use `a` only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CellKind {
+    /// Primary input (value supplied by the simulator).
+    Input,
+    Const0,
+    Const1,
+    Inv,
+    Buf,
+    And2,
+    Or2,
+    Nand2,
+    Nor2,
+    Xor2,
+    Xnor2,
+    /// out = sel ? b : a
+    Mux2,
+}
+
+impl CellKind {
+    /// Propagation levels contributed (FO4-normalized; see
+    /// `energy::tech::GATE_DELAY_PS`).
+    pub fn levels(self) -> u32 {
+        match self {
+            CellKind::Input | CellKind::Const0 | CellKind::Const1 => 0,
+            CellKind::Inv | CellKind::Buf => 1,
+            CellKind::And2 | CellKind::Or2 | CellKind::Nand2 | CellKind::Nor2 => 1,
+            CellKind::Xor2 | CellKind::Xnor2 => 2,
+            CellKind::Mux2 => 2,
+        }
+    }
+}
+
+/// One cell instance.
+#[derive(Debug, Clone, Copy)]
+pub struct Cell {
+    pub kind: CellKind,
+    /// Operand nets; unused slots are `u32::MAX`.
+    pub a: NodeId,
+    pub b: NodeId,
+    pub sel: NodeId,
+}
+
+pub const NO_NET: NodeId = u32::MAX;
+
+/// A combinational netlist. Cells are stored in topological order by
+/// construction (a cell may only reference earlier cells), so a single
+/// forward pass evaluates the whole network.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    pub cells: Vec<Cell>,
+    /// Primary inputs, in declaration order.
+    pub inputs: Vec<NodeId>,
+    /// Primary outputs (nets).
+    pub outputs: Vec<NodeId>,
+    /// Human-readable block name.
+    pub name: String,
+}
+
+impl Netlist {
+    pub fn num_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Count of *logic* cells (excluding inputs/constants) — the area
+    /// carrier.
+    pub fn logic_cells(&self) -> usize {
+        self.cells
+            .iter()
+            .filter(|c| {
+                !matches!(c.kind, CellKind::Input | CellKind::Const0 | CellKind::Const1)
+            })
+            .count()
+    }
+
+    /// Per-kind logic cell histogram.
+    pub fn cell_histogram(&self) -> Vec<(CellKind, usize)> {
+        use std::collections::HashMap;
+        let mut h: HashMap<CellKind, usize> = HashMap::new();
+        for c in &self.cells {
+            if !matches!(c.kind, CellKind::Input | CellKind::Const0 | CellKind::Const1) {
+                *h.entry(c.kind).or_default() += 1;
+            }
+        }
+        let mut v: Vec<_> = h.into_iter().collect();
+        v.sort_by_key(|&(k, _)| format!("{k:?}"));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rtl::build::NetBuilder;
+
+    #[test]
+    fn histogram_counts_logic_only() {
+        let mut b = NetBuilder::new("t");
+        let x = b.input();
+        let y = b.input();
+        let g = b.and2(x, y);
+        let h = b.xor2(g, x);
+        b.output(h);
+        let n = b.finish();
+        assert_eq!(n.logic_cells(), 2);
+        assert_eq!(n.num_cells(), 4);
+    }
+}

@@ -1,0 +1,21 @@
+//! Gate-level structural substrate — the stand-in for the paper's RTL +
+//! 28nm synthesis flow (DESIGN.md §2).
+//!
+//! Every datapath block of both the Soft SIMD pipeline and the Hard SIMD
+//! baselines is built as an explicit gate netlist (`build`), evaluated
+//! with a levelized zero-delay simulator that counts per-cell output
+//! toggles (`sim`), and characterized for depth (`timing`). The `energy`
+//! module turns cell counts into µm² and toggle counts into pJ.
+
+pub mod adder;
+pub mod build;
+pub mod crossbar;
+pub mod gate;
+pub mod multiplier;
+pub mod shifter;
+pub mod sim;
+pub mod timing;
+
+pub use build::NetBuilder;
+pub use gate::{Cell, CellKind, Netlist, NodeId};
+pub use sim::Simulator;

@@ -1,0 +1,418 @@
+//! Combinational multipliers — the heart of the Hard SIMD baselines
+//! (Section IV-A).
+//!
+//! * `build_signed_mul` — a two's-complement `b×b` multiplier: partial
+//!   products with Baugh-Wooley-style sign rows, Wallace (column 3:2)
+//!   reduction, and a carry-select final adder — the structure synthesis
+//!   produces for a combinational multiplier under a tight clock.
+//! * `simd_multiplier_bank(fmts, isolate)` — the Hard SIMD datapath: one
+//!   lane-multiplier bank per supported sub-word width behind a shared
+//!   operand bus, with a one-hot product select.
+//!
+//!   **Operand isolation** (`isolate`): the {8,16} baseline gates each
+//!   bank's operands with its format select, so inactive banks are
+//!   quiet. The 5-format flexible baseline shares the operand bus
+//!   *without* isolation — with five banks the isolation AND + format
+//!   decode lands on the multiplier critical path and its area/routing
+//!   overhead defeats the purpose; the result is that every bank
+//!   switches on every cycle, which is precisely why the paper finds
+//!   the flexible Hard SIMD consistently *worse* than the lean one
+//!   (Fig. 10) and why Soft SIMD's advantage peaks at small sub-words
+//!   (Fig. 9). Documented in DESIGN.md §2.
+//!
+//! Products are returned in the multiplicand's `Q1.(b-1)` format: the
+//! `2b`-bit product `x·m` truncated to bits `(b-1)..(2b-1)`.
+
+use super::build::NetBuilder;
+use super::gate::{Netlist, NodeId};
+use crate::bits::format::SimdFormat;
+
+/// Carry-select adder over two equal-width operands (no sub-word
+/// boundaries — used as a multiplier's final CPA).
+fn carry_select_add(b: &mut NetBuilder, x: &[NodeId], y: &[NodeId], block: usize) -> Vec<NodeId> {
+    let n = x.len();
+    assert_eq!(y.len(), n);
+    let mut out = Vec::with_capacity(n);
+    let mut blk_cin: Option<NodeId> = None;
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + block).min(n);
+        let mut variants: Vec<(Vec<NodeId>, NodeId)> = vec![];
+        for assumed in 0..2u8 {
+            let mut sums = vec![];
+            let mut carry = if assumed == 0 { b.zero() } else { b.one() };
+            for i in start..end {
+                let (s, c) = b.full_adder(x[i], y[i], carry);
+                sums.push(s);
+                carry = c;
+            }
+            variants.push((sums, carry));
+        }
+        let (s0, c0) = variants.swap_remove(0);
+        let (s1, c1) = variants.swap_remove(0);
+        match blk_cin {
+            None => {
+                out.extend_from_slice(&s0);
+                blk_cin = Some(c0);
+            }
+            Some(sel) => {
+                for i in 0..s0.len() {
+                    out.push(b.mux2(sel, s0[i], s1[i]));
+                }
+                blk_cin = Some(b.mux2(sel, c0, c1));
+            }
+        }
+        start = end;
+    }
+    out
+}
+
+/// Emit a signed `b×b` multiplier; returns the `2b`-bit product nets.
+///
+/// Rows: `P = Σ_{j<b-1} m_j·A·2^j − m_{b-1}·A·2^{b-1}` with `A`
+/// sign-extended; the subtracted row enters as complement + carry bit.
+/// All partial-product bits are dropped into per-column stacks and
+/// reduced 3:2 (Wallace); the remaining two rows go through a
+/// carry-select adder.
+pub fn build_signed_mul(b: &mut NetBuilder, a: &[NodeId], m: &[NodeId]) -> Vec<NodeId> {
+    let n = a.len();
+    assert_eq!(m.len(), n);
+    let width = 2 * n;
+    // Per-column bit stacks.
+    let mut cols: Vec<Vec<NodeId>> = vec![vec![]; width];
+    // Sign-extend A to `width` bits.
+    let a_ext: Vec<NodeId> = (0..width).map(|i| a[i.min(n - 1)]).collect();
+    for j in 0..n {
+        let is_sign_row = j == n - 1;
+        if is_sign_row {
+            // Subtract row: complement (gated) + carry-in 1 (gated by m_j).
+            for i in j..width {
+                let bit = a_ext[i - j];
+                let nb = b.not(bit);
+                let pp = b.and2(m[j], nb);
+                cols[i].push(pp);
+            }
+            // +1 of the two's complement, only when the row is active.
+            let inj = b.buf(m[j]);
+            cols[j].push(inj);
+        } else {
+            for i in j..width {
+                let bit = a_ext[i - j];
+                let pp = b.and2(bit, m[j]);
+                cols[i].push(pp);
+            }
+        }
+    }
+    // Wallace 3:2 reduction until every column holds ≤ 2 bits.
+    loop {
+        let max_h = cols.iter().map(Vec::len).max().unwrap();
+        if max_h <= 2 {
+            break;
+        }
+        let mut next: Vec<Vec<NodeId>> = vec![vec![]; width];
+        for (i, stack) in cols.iter().enumerate() {
+            let mut k = 0;
+            while stack.len() - k >= 3 {
+                let (s, c) = b.full_adder(stack[k], stack[k + 1], stack[k + 2]);
+                next[i].push(s);
+                if i + 1 < width {
+                    next[i + 1].push(c);
+                }
+                k += 3;
+            }
+            for &bit in &stack[k..] {
+                next[i].push(bit);
+            }
+        }
+        cols = next;
+    }
+    // Final CPA over the two remaining rows.
+    let zero = b.zero();
+    let row0: Vec<NodeId> = cols.iter().map(|s| s.first().copied().unwrap_or(zero)).collect();
+    let row1: Vec<NodeId> = cols.iter().map(|s| s.get(1).copied().unwrap_or(zero)).collect();
+    carry_select_add(b, &row0, &row1, 4)
+}
+
+/// Standalone `b×b` signed multiplier netlist.
+/// Inputs: a[b], m[b]; outputs: p[2b].
+pub fn signed_multiplier(bits: u32) -> Netlist {
+    let mut nb = NetBuilder::new(&format!("mul{bits}x{bits}"));
+    let a = nb.inputs(bits as usize);
+    let m = nb.inputs(bits as usize);
+    let p = build_signed_mul(&mut nb, &a, &m);
+    nb.outputs(&p);
+    nb.finish()
+}
+
+/// The Hard SIMD multiplier datapath for a format set.
+///
+/// Inputs: a[48] (packed multiplicands), mvec[48] (packed multipliers,
+/// same format), fmt_onehot[#fmts]. Outputs: p[48] (packed `Q1.(b-1)`
+/// products). See the module docs for the `isolate` design decision.
+pub fn simd_multiplier_bank(fmts: &[u32], isolate: bool) -> Netlist {
+    let mut nb = NetBuilder::new(&format!("hardsimd_mul_{fmts:?}"));
+    let a = nb.inputs(48);
+    let m = nb.inputs(48);
+    let sel = nb.inputs(fmts.len());
+    let mut per_bank_out: Vec<Vec<NodeId>> = vec![];
+    for (fi, &bits) in fmts.iter().enumerate() {
+        let fmt = SimdFormat::new(bits);
+        let mut bank_out: Vec<NodeId> = Vec::with_capacity(48);
+        for lane in 0..fmt.lanes() {
+            let base = (lane * bits) as usize;
+            let (ga, gm): (Vec<NodeId>, Vec<NodeId>) = if isolate {
+                (
+                    (0..bits as usize).map(|i| nb.and2(a[base + i], sel[fi])).collect(),
+                    (0..bits as usize).map(|i| nb.and2(m[base + i], sel[fi])).collect(),
+                )
+            } else {
+                (
+                    (0..bits as usize).map(|i| a[base + i]).collect(),
+                    (0..bits as usize).map(|i| m[base + i]).collect(),
+                )
+            };
+            let p = build_signed_mul(&mut nb, &ga, &gm);
+            // Q1 truncation: product bits (b-1)..(2b-1).
+            bank_out.extend_from_slice(&p[(bits - 1) as usize..(2 * bits - 1) as usize]);
+        }
+        per_bank_out.push(bank_out);
+    }
+    for j in 0..48 {
+        let vals: Vec<NodeId> = per_bank_out.iter().map(|o| o[j]).collect();
+        let sels: Vec<NodeId> = (0..fmts.len()).map(|fi| sel[fi]).collect();
+        let out = nb.onehot_mux(&sels, &vals);
+        nb.output(out);
+    }
+    nb.finish()
+}
+
+/// The shared **divisible array** — the Hard SIMD *cost* netlist
+/// (DESIGN.md §2).
+///
+/// A real flexible SIMD multiplier is not five parallel banks: it is one
+/// array, dimensioned for the widest format (3 lanes of 16×16 here),
+/// whose partial-product/carry network is partitioned at runtime.
+/// Consequences this netlist models structurally:
+///
+/// * **No operand isolation is possible** — every multiplication swings
+///   the whole array, whatever the sub-word width. (This is why Soft
+///   SIMD's advantage peaks at small widths, Fig. 9.)
+/// * **Each supported partition adds gating/realignment cells** that
+///   both occupy area and toggle with the data. Power-of-two partitions
+///   (8, 4) gate only boundary diagonals; widths that do not divide the
+///   16-bit grid (6, and 12 spanning lane pairs) need per-cell masking
+///   and operand realignment muxes — far more hardware. (This is why the
+///   flexible Hard SIMD is consistently *worse* than the {8,16} one,
+///   Fig. 10.)
+///
+/// The 16-bit mode's product outputs are functionally exact (verified in
+/// tests); narrower modes' *values* are produced by [`hard_product`] in
+/// the architecture model — this netlist is the area/energy carrier.
+/// Gating-cell populations per partition are structural approximations
+/// (fractions of the PP-cell count) documented inline.
+pub fn divisible_array(fmts: &[u32]) -> Netlist {
+    let mut nb = NetBuilder::new(&format!("hardsimd_divisible_{fmts:?}"));
+    let a = nb.inputs(48);
+    let m = nb.inputs(48);
+    let sel = nb.inputs(fmts.len());
+    // Base: 3 lanes of 16×16.
+    let mut outs = vec![];
+    for lane in 0..3usize {
+        let base = lane * 16;
+        let al: Vec<NodeId> = (0..16).map(|i| a[base + i]).collect();
+        let ml: Vec<NodeId> = (0..16).map(|i| m[base + i]).collect();
+        let p = build_signed_mul(&mut nb, &al, &ml);
+        outs.extend_from_slice(&p[15..31]); // Q1 truncation at b = 16
+    }
+    // Partition overhead per supported format (fraction of the ~256
+    // PP positions per lane that need gating/realignment):
+    //   8: boundary diagonals only                     → 0.25
+    //   4: three boundaries per lane                   → 0.50
+    //   6: does not divide the 16-grid — per-cell mask
+    //      + operand realignment muxes                 → 1.20
+    //  12: spans lane pairs — cross-lane carry gating
+    //      + realignment                               → 1.10
+    for (fi, &f) in fmts.iter().enumerate() {
+        let frac = match f {
+            16 => 0.0,
+            8 => 0.25,
+            4 => 0.50,
+            6 => 1.20,
+            12 => 1.10,
+            _ => 0.5,
+        };
+        let n_gates = (3.0 * 256.0 * frac) as usize;
+        for g in 0..n_gates {
+            // Real cells wired to real data so they toggle: a PP-like
+            // term gated by the format select.
+            let x = a[(g * 7 + fi) % 48];
+            let y = m[(g * 13 + fi * 5) % 48];
+            let pp = nb.and2(x, y);
+            let _gated = nb.and2(pp, sel[fi]);
+        }
+        // Realignment muxes for non-dividing widths (operand + product
+        // renormalization networks).
+        if f == 6 || f == 12 {
+            for i in 0..96 {
+                let _mx = nb.mux2(sel[fi], a[i % 48], a[(i + f as usize) % 48]);
+            }
+        }
+    }
+    nb.outputs(&outs);
+    nb.finish()
+}
+
+/// Reference semantics of the Hard SIMD product (single truncation).
+pub fn hard_product(x_raw: i64, m_raw: i64, bits: u32) -> i64 {
+    let full = x_raw * m_raw; // exact in i64 for ≤16-bit operands
+    crate::bits::fixed::sign_extend(
+        ((full >> (bits - 1)) as u64) & ((1u64 << bits) - 1),
+        bits,
+    )
+}
+
+/// Drive the bank for one cycle.
+pub fn drive_bank(
+    sim: &mut super::sim::Simulator,
+    net: &Netlist,
+    fmts: &[u32],
+    a: u64,
+    m: u64,
+    fmt: SimdFormat,
+) -> u64 {
+    let mut ins = Vec::with_capacity(96 + fmts.len());
+    for i in 0..48 {
+        ins.push((a >> i) & 1 != 0);
+    }
+    for i in 0..48 {
+        ins.push((m >> i) & 1 != 0);
+    }
+    for &f in fmts {
+        ins.push(f == fmt.bits);
+    }
+    sim.set_inputs(&ins);
+    sim.eval(net);
+    sim.output_u64(net, 0, 48)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::fixed::sign_extend;
+    use crate::bits::pack::{pack, unpack};
+    use crate::rtl::sim::Simulator;
+    use crate::rtl::timing::depth;
+    use crate::workload::synth::XorShift64;
+
+    #[test]
+    fn four_by_four_exhaustive() {
+        let net = signed_multiplier(4);
+        let mut sim = Simulator::new(&net);
+        for x in -8i64..8 {
+            for m in -8i64..8 {
+                let mut ins = vec![];
+                for i in 0..4 {
+                    ins.push((x >> i) & 1 != 0);
+                }
+                for i in 0..4 {
+                    ins.push((m >> i) & 1 != 0);
+                }
+                sim.set_inputs(&ins);
+                sim.eval(&net);
+                let p = sign_extend(sim.output_u64(&net, 0, 8), 8);
+                assert_eq!(p, x * m, "{x} × {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn eight_by_eight_sampled() {
+        let net = signed_multiplier(8);
+        let mut sim = Simulator::new(&net);
+        let mut rng = XorShift64::new(0x4A11);
+        for _ in 0..500 {
+            let x = rng.q_raw(8);
+            let m = rng.q_raw(8);
+            let mut ins = vec![];
+            for i in 0..8 {
+                ins.push((x >> i) & 1 != 0);
+            }
+            for i in 0..8 {
+                ins.push((m >> i) & 1 != 0);
+            }
+            sim.set_inputs(&ins);
+            sim.eval(&net);
+            let p = sign_extend(sim.output_u64(&net, 0, 16), 16);
+            assert_eq!(p, x * m, "{x} × {m}");
+        }
+    }
+
+    #[test]
+    fn wallace_structure_is_shallow() {
+        let net = signed_multiplier(16);
+        // Wallace + carry-select CPA: far shallower than a linear array.
+        assert!(depth(&net) < 80, "depth {}", depth(&net));
+    }
+
+    #[test]
+    fn bank_matches_hard_product_semantics() {
+        for (fmts, isolate) in [(vec![8u32, 16], true), (vec![4, 6, 8, 12, 16], false)] {
+            let net = simd_multiplier_bank(&fmts, isolate);
+            let mut sim = Simulator::new(&net);
+            let mut rng = XorShift64::new(0xBA4C);
+            for &bits in &fmts {
+                let fmt = SimdFormat::new(bits);
+                for _ in 0..40 {
+                    let xs: Vec<i64> = (0..fmt.lanes()).map(|_| rng.q_raw(bits)).collect();
+                    let ms: Vec<i64> = (0..fmt.lanes()).map(|_| rng.q_raw(bits)).collect();
+                    let got =
+                        drive_bank(&mut sim, &net, &fmts, pack(&xs, fmt), pack(&ms, fmt), fmt);
+                    let want: Vec<i64> = xs
+                        .iter()
+                        .zip(&ms)
+                        .map(|(&x, &m)| hard_product(x, m, bits))
+                        .collect();
+                    assert_eq!(unpack(got, fmt), want, "fmt {fmt}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flexible_bank_is_bigger_than_two_format_bank() {
+        let flex = simd_multiplier_bank(&[4, 6, 8, 12, 16], false);
+        let two = simd_multiplier_bank(&[8, 16], true);
+        assert!(flex.logic_cells() > two.logic_cells());
+        let ratio = flex.logic_cells() as f64 / two.logic_cells() as f64;
+        assert!((1.3..3.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn unisolated_bank_switches_in_narrow_modes() {
+        // Flexible bank at 4-bit: all five banks toggle (shared bus).
+        let fmts = [4u32, 6, 8, 12, 16];
+        let net = simd_multiplier_bank(&fmts, false);
+        let mut sim = Simulator::new(&net);
+        let mut rng = XorShift64::new(0x616C);
+        let fmt4 = SimdFormat::new(4);
+        // warm up
+        drive_bank(&mut sim, &net, &fmts, rng.word(), rng.word(), fmt4);
+        sim.reset_counters();
+        for _ in 0..20 {
+            drive_bank(&mut sim, &net, &fmts, rng.word(), rng.word(), fmt4);
+        }
+        let toggles_4bit = sim.toggles;
+        // Isolated two-format bank at 8-bit for comparison.
+        let fmts2 = [8u32, 16];
+        let net2 = simd_multiplier_bank(&fmts2, true);
+        let mut sim2 = Simulator::new(&net2);
+        let fmt8 = SimdFormat::new(8);
+        drive_bank(&mut sim2, &net2, &fmts2, rng.word(), rng.word(), fmt8);
+        sim2.reset_counters();
+        for _ in 0..20 {
+            drive_bank(&mut sim2, &net2, &fmts2, rng.word(), rng.word(), fmt8);
+        }
+        // The flexible bank burns more switching on an *easier* job.
+        assert!(toggles_4bit > sim2.toggles, "{toggles_4bit} vs {}", sim2.toggles);
+    }
+}

@@ -1,0 +1,205 @@
+//! The configurable shifter of Fig. 4b and the fused Stage-1 datapath.
+//!
+//! The shifter is three cascaded shift-by-1 stages ("further
+//! combinatorial stages of 1-bit muxes", Section III-B); a thermometer
+//! enable `en[0..3]` selects the distance `k = en0+en1+en2`. At sub-word
+//! MSB positions a `V_x` mux holds the sign instead of taking the next
+//! bit; only bit positions that can be a sub-word MSB in *some*
+//! supported format carry that mux ("muxes can be employed selectively",
+//! Section III-B) — others hard-wire the shift path.
+//!
+//! The first stage's sign source is the *carry-corrected* sum
+//! (`sum ⊕ ovf`) from the adder — the (b+1)-bit intermediate of
+//! DESIGN.md §4; later stages replicate the already-correct MSB.
+
+use super::adder::{self, AdderIo};
+use super::build::NetBuilder;
+use super::gate::{Netlist, NodeId};
+use crate::bits::format::{SimdFormat, DATAPATH_BITS};
+
+/// Bit positions that are a sub-word MSB in at least one supported
+/// format — the only positions needing a sign-hold mux.
+pub fn msb_capable_positions() -> Vec<usize> {
+    let mut set = vec![false; DATAPATH_BITS as usize];
+    for fmt in SimdFormat::all() {
+        for i in 0..fmt.lanes() {
+            set[((i + 1) * fmt.bits - 1) as usize] = true;
+        }
+    }
+    (0..DATAPATH_BITS as usize).filter(|&i| set[i]).collect()
+}
+
+/// One shift-by-1 stage. `sign_src[i]` supplies the replicated value at
+/// MSB-capable positions (the `V_x` mux input of Fig. 4b).
+fn shift_stage(
+    b: &mut NetBuilder,
+    data: &[NodeId],
+    sign_src: &[NodeId],
+    m: &[NodeId],
+    en: NodeId,
+    capable: &[bool],
+) -> Vec<NodeId> {
+    let w = data.len();
+    let mut out = Vec::with_capacity(w);
+    for i in 0..w {
+        let shifted = if i + 1 < w {
+            if capable[i] {
+                // At a potential MSB: hold sign when m_i=1, else take bit i+1.
+                b.mux2(m[i], data[i + 1], sign_src[i])
+            } else {
+                data[i + 1]
+            }
+        } else {
+            // Top bit: always an MSB (of the widest lane) — replicate sign.
+            sign_src[i]
+        };
+        out.push(b.mux2(en, data[i], shifted));
+    }
+    out
+}
+
+/// Emit the 3-stage configurable shifter over existing nets.
+/// `corrected[i]` is the stage-1 sign source (sum ⊕ ovf); stages 2–3 use
+/// their own input's MSB.
+pub fn build_shifter(
+    b: &mut NetBuilder,
+    data: &[NodeId],
+    corrected: &[NodeId],
+    m: &[NodeId],
+    en: &[NodeId; 3],
+) -> Vec<NodeId> {
+    let w = data.len();
+    let mut capable = vec![false; w];
+    for p in msb_capable_positions() {
+        capable[p] = true;
+    }
+    let s1 = shift_stage(b, data, corrected, m, en[0], &capable);
+    let s2 = shift_stage(b, &s1.clone(), &s1, m, en[1], &capable);
+    let s3 = shift_stage(b, &s2.clone(), &s2, m, en[2], &capable);
+    s3
+}
+
+/// The complete fused Stage-1 datapath netlist (configurable adder →
+/// configurable shifter), one clock cycle of the multiply loop.
+///
+/// Input order: a[48] (acc), c[48] (X), add_en, sub, m[48], l[48],
+/// en[3] (thermometer shift enable). Output: out[48].
+pub fn stage1_datapath(select_adder: bool) -> Netlist {
+    let mut b = NetBuilder::new(if select_adder {
+        "softsimd_stage1_cs"
+    } else {
+        "softsimd_stage1"
+    });
+    let io: AdderIo = adder::declare_inputs(&mut b, DATAPATH_BITS as usize);
+    let en = [b.input(), b.input(), b.input()];
+    let (sums, ovfs) = if select_adder {
+        adder::build_carry_select(&mut b, &io, 4)
+    } else {
+        adder::build_ripple(&mut b, &io)
+    };
+    // Carry-corrected sign at MSB-capable positions: sum ⊕ ovf.
+    let capable_pos = msb_capable_positions();
+    let mut corrected = sums.clone();
+    for &p in &capable_pos {
+        corrected[p] = b.xor2(sums[p], ovfs[p]);
+    }
+    let out = build_shifter(&mut b, &sums, &corrected, &io.m, &en);
+    b.outputs(&out);
+    b.finish()
+}
+
+/// Drive a Stage-1 netlist for one cycle. `sign`: +1 add, −1 sub,
+/// 0 shift-only; `k`: shift distance 0..=3.
+pub fn drive_stage1(
+    sim: &mut super::sim::Simulator,
+    net: &Netlist,
+    acc: u64,
+    x: u64,
+    k: u32,
+    sign: i8,
+    fmt: SimdFormat,
+) -> u64 {
+    let mut ins = Vec::with_capacity(148 + 3);
+    for i in 0..48 {
+        ins.push((acc >> i) & 1 != 0);
+    }
+    for i in 0..48 {
+        ins.push((x >> i) & 1 != 0);
+    }
+    ins.push(sign != 0); // add_en
+    ins.push(sign < 0); // sub
+    let m = fmt.msb_mask();
+    let l = fmt.lsb_mask();
+    for i in 0..48 {
+        ins.push((m >> i) & 1 != 0);
+    }
+    for i in 0..48 {
+        ins.push((l >> i) & 1 != 0);
+    }
+    for s in 0..3 {
+        ins.push(s < k);
+    }
+    sim.set_inputs(&ins);
+    sim.eval(net);
+    sim.output_u64(net, 0, 48)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::swar::{swar_add_sar, swar_sar, swar_sub_sar};
+    use crate::rtl::sim::Simulator;
+    use crate::rtl::timing::depth;
+    use crate::workload::synth::XorShift64;
+
+    #[test]
+    fn msb_capable_set_is_union() {
+        let pos = msb_capable_positions();
+        assert!(pos.contains(&3) && pos.contains(&5) && pos.contains(&7));
+        assert!(pos.contains(&47));
+        assert!(!pos.contains(&0) && !pos.contains(&1) && !pos.contains(&2));
+        // 4k-1, 6k-1, 8k-1, 12k-1, 16k-1 unions: spot-check absence.
+        assert!(!pos.contains(&4));
+        assert!(!pos.contains(&6));
+    }
+
+    #[test]
+    fn stage1_matches_fused_swar_everywhere() {
+        for select in [false, true] {
+            let net = stage1_datapath(select);
+            let mut sim = Simulator::new(&net);
+            let mut rng = XorShift64::new(0x57A6E1);
+            for fmt in SimdFormat::all() {
+                for _ in 0..80 {
+                    let acc = rng.word();
+                    let x = rng.word();
+                    for k in 0..=3u32 {
+                        for sign in [-1i8, 0, 1] {
+                            if sign == 0 && k == 0 {
+                                continue; // no-op cycle never issued
+                            }
+                            let got = drive_stage1(&mut sim, &net, acc, x, k, sign, fmt);
+                            let want = match sign {
+                                1 => swar_add_sar(acc, x, k, fmt),
+                                -1 => swar_sub_sar(acc, x, k, fmt),
+                                _ => swar_sar(acc, k, fmt),
+                            };
+                            assert_eq!(
+                                got, want,
+                                "select={select} fmt {fmt} k {k} sign {sign} acc {acc:#x} x {x:#x}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn carry_select_variant_is_faster() {
+        let slow = stage1_datapath(false);
+        let fast = stage1_datapath(true);
+        assert!(depth(&fast) < depth(&slow));
+        assert!(fast.logic_cells() > slow.logic_cells());
+    }
+}

@@ -1,0 +1,66 @@
+//! Static timing: levelized depth of a netlist (FO4-normalized levels).
+//!
+//! Like real STA, runtime configuration inputs (`V_x`, format selects)
+//! are treated as unknowns — the reported depth is the structural worst
+//! case over all configurations.
+
+use super::gate::{Netlist, NO_NET};
+
+/// Longest input→output path in levels (see [`super::gate::CellKind::levels`]).
+pub fn depth(net: &Netlist) -> u32 {
+    let mut lvl = vec![0u32; net.cells.len()];
+    for (i, cell) in net.cells.iter().enumerate() {
+        let mut input_lvl = 0;
+        for op in [cell.a, cell.b, cell.sel] {
+            if op != NO_NET {
+                input_lvl = input_lvl.max(lvl[op as usize]);
+            }
+        }
+        lvl[i] = input_lvl + cell.kind.levels();
+    }
+    net.outputs
+        .iter()
+        .map(|&o| lvl[o as usize])
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtl::build::NetBuilder;
+
+    #[test]
+    fn chain_depth_is_linear() {
+        let mut b = NetBuilder::new("chain");
+        let ins = b.inputs(9);
+        let mut acc = ins[0];
+        for &i in &ins[1..] {
+            acc = b.and2(acc, i);
+        }
+        b.output(acc);
+        let net = b.finish();
+        assert_eq!(depth(&net), 8);
+    }
+
+    #[test]
+    fn tree_depth_is_logarithmic() {
+        let mut b = NetBuilder::new("tree");
+        let ins = b.inputs(16);
+        let o = b.or_tree(&ins);
+        b.output(o);
+        let net = b.finish();
+        assert_eq!(depth(&net), 4);
+    }
+
+    #[test]
+    fn xor_and_mux_cost_two_levels() {
+        let mut b = NetBuilder::new("x");
+        let ins = b.inputs(3);
+        let x = b.xor2(ins[0], ins[1]);
+        let m = b.mux2(ins[2], x, ins[0]);
+        b.output(m);
+        let net = b.finish();
+        assert_eq!(depth(&net), 4);
+    }
+}

@@ -1,0 +1,204 @@
+//! Cross-language golden-vector checker.
+//!
+//! `python/compile/aot.py` emits `artifacts/golden.txt` from the Python
+//! side of the pinned semantics; this module replays every line through
+//! the Rust implementations. Any mismatch is a semantics drift between
+//! the layers — the single most important invariant in the repo.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::bits::format::SimdFormat;
+use crate::bits::swar;
+use crate::pipeline::stage1::mul_packed;
+use crate::pipeline::stage2::repack_stream;
+
+/// Outcome of a golden run.
+#[derive(Debug, Default, Clone)]
+pub struct GoldenReport {
+    pub swar: usize,
+    pub mul: usize,
+    pub repack: usize,
+    pub mlp_rows: usize,
+    pub failures: Vec<String>,
+}
+
+impl std::fmt::Display for GoldenReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "golden: {} swar, {} mul, {} repack, {} mlp rows checked",
+            self.swar, self.mul, self.repack, self.mlp_rows
+        )?;
+        if self.failures.is_empty() {
+            write!(f, "ALL VECTORS MATCH")
+        } else {
+            writeln!(f, "{} FAILURES:", self.failures.len())?;
+            for l in self.failures.iter().take(20) {
+                writeln!(f, "  {l}")?;
+            }
+            Ok(())
+        }
+    }
+}
+
+impl GoldenReport {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+fn parse_u64(s: &str) -> anyhow::Result<u64> {
+    let s = s.trim();
+    if let Some(hex) = s.strip_prefix("0x") {
+        Ok(u64::from_str_radix(hex, 16)?)
+    } else {
+        Ok(s.parse()?)
+    }
+}
+
+/// Check every vector in a golden file against the Rust implementations.
+pub fn check_file(path: impl AsRef<Path>) -> anyhow::Result<GoldenReport> {
+    let text = std::fs::read_to_string(path.as_ref())?;
+    check_str(&text)
+}
+
+/// As [`check_file`] over in-memory text.
+pub fn check_str(text: &str) -> anyhow::Result<GoldenReport> {
+    let mut rep = GoldenReport::default();
+    // MLP vectors are checked jointly at the end.
+    let mut mlp_in: Vec<(usize, Vec<i64>)> = vec![];
+    let mut mlp_out: Vec<(usize, Vec<i64>)> = vec![];
+
+    for (lineno, line) in text.lines().enumerate() {
+        let mut it = line.split_whitespace();
+        let kind = match it.next() {
+            Some(k) => k,
+            None => continue,
+        };
+        let fail = |rep: &mut GoldenReport, msg: String| {
+            let mut s = String::new();
+            let _ = write!(s, "line {}: {msg}", lineno + 1);
+            rep.failures.push(s);
+        };
+        match kind {
+            "swar" => {
+                let op = it.next().unwrap();
+                let bits: u32 = it.next().unwrap().parse()?;
+                let a = parse_u64(it.next().unwrap())?;
+                let c = parse_u64(it.next().unwrap())?;
+                let k: u32 = it.next().unwrap().parse()?;
+                let want = parse_u64(it.next().unwrap())?;
+                let fmt = SimdFormat::new(bits);
+                let got = match op {
+                    "add" => swar::swar_add(a, c, fmt),
+                    "sub" => swar::swar_sub(a, c, fmt),
+                    "sar" => swar::swar_sar(a, k, fmt),
+                    "addsar" => swar::swar_add_sar(a, c, k, fmt),
+                    "subsar" => swar::swar_sub_sar(a, c, k, fmt),
+                    other => anyhow::bail!("unknown swar op {other}"),
+                };
+                rep.swar += 1;
+                if got != want {
+                    fail(&mut rep, format!("swar {op} {bits}b: got {got:#x} want {want:#x}"));
+                }
+            }
+            "mul" => {
+                let bits: u32 = it.next().unwrap().parse()?;
+                let y: u32 = it.next().unwrap().parse()?;
+                let m: i64 = it.next().unwrap().parse()?;
+                let x = parse_u64(it.next().unwrap())?;
+                let want = parse_u64(it.next().unwrap())?;
+                let got = mul_packed(x, m, y, SimdFormat::new(bits));
+                rep.mul += 1;
+                if got != want {
+                    fail(
+                        &mut rep,
+                        format!("mul {bits}b×{y}b m={m}: got {got:#x} want {want:#x}"),
+                    );
+                }
+            }
+            "repack" => {
+                let fb: u32 = it.next().unwrap().parse()?;
+                let tb: u32 = it.next().unwrap().parse()?;
+                let count: usize = it.next().unwrap().parse()?;
+                let input: Vec<u64> = it
+                    .next()
+                    .unwrap()
+                    .split(',')
+                    .map(parse_u64)
+                    .collect::<Result<_, _>>()?;
+                let want: Vec<u64> = it
+                    .next()
+                    .unwrap()
+                    .split(',')
+                    .map(parse_u64)
+                    .collect::<Result<_, _>>()?;
+                let got = repack_stream(&input, SimdFormat::new(fb), SimdFormat::new(tb), count);
+                rep.repack += 1;
+                if got != want {
+                    fail(&mut rep, format!("repack {fb}->{tb}: got {got:x?} want {want:x?}"));
+                }
+            }
+            "mlp_in" | "mlp_out" => {
+                let row: usize = it.next().unwrap().parse()?;
+                let vals: Vec<i64> = it
+                    .next()
+                    .unwrap()
+                    .split(',')
+                    .map(|v| v.parse::<i64>())
+                    .collect::<Result<_, _>>()?;
+                if kind == "mlp_in" {
+                    mlp_in.push((row, vals));
+                } else {
+                    mlp_out.push((row, vals));
+                }
+            }
+            "mlp_label" => { /* consumed by the e2e example, not here */ }
+            other => anyhow::bail!("unknown golden kind {other} on line {}", lineno + 1),
+        }
+    }
+
+    // MLP: replay through the Rust quantized-NN reference when the
+    // weights file sits next to the golden file.
+    if !mlp_in.is_empty() {
+        let weights_path = Path::new("artifacts/mlp_weights.txt");
+        if weights_path.exists() {
+            let layers = crate::nn::weights::load_weight_file(weights_path)?;
+            for ((ri, xin), (ro, want)) in mlp_in.iter().zip(mlp_out.iter()) {
+                assert_eq!(ri, ro);
+                let got = crate::nn::exec::mlp_forward_row(xin, &layers, 8, 16);
+                rep.mlp_rows += 1;
+                if &got != want {
+                    rep.failures
+                        .push(format!("mlp row {ri}: got {got:?} want {want:?}"));
+                }
+            }
+        }
+    }
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_hex_and_decimal() {
+        assert_eq!(parse_u64("0xff").unwrap(), 255);
+        assert_eq!(parse_u64("17").unwrap(), 17);
+    }
+
+    #[test]
+    fn detects_mismatch() {
+        let rep = check_str("mul 8 8 64 0x40 0x99\n").unwrap();
+        assert!(!rep.ok());
+    }
+
+    #[test]
+    fn accepts_correct_vector() {
+        // 0.5 × 0.5 = 0.25: lane0 = 64 → 32.
+        let rep = check_str("mul 8 8 64 0x40 0x20\n").unwrap();
+        assert!(rep.ok(), "{rep}");
+    }
+}

@@ -1,0 +1,65 @@
+//! `artifacts/manifest.txt` — shapes and metadata of the AOT artifacts.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub mul_words: usize,
+    pub ops_max: usize,
+    pub mlp_batch: usize,
+    pub mlp_in: usize,
+    pub mlp_hidden: usize,
+    pub mlp_out: usize,
+    pub mlp_classes: usize,
+    pub in_bits: u32,
+    pub acc_bits: u32,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        let mut kv = HashMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                kv.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        let get = |k: &str| -> anyhow::Result<usize> {
+            kv.get(k)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing key {k}"))?
+                .parse()
+                .map_err(|e| anyhow::anyhow!("manifest key {k}: {e}"))
+        };
+        Ok(Manifest {
+            mul_words: get("mul_words")?,
+            ops_max: get("ops_max")?,
+            mlp_batch: get("mlp_batch")?,
+            mlp_in: get("mlp_in")?,
+            mlp_hidden: get("mlp_hidden")?,
+            mlp_out: get("mlp_out")?,
+            mlp_classes: get("mlp_classes")?,
+            in_bits: get("in_bits")? as u32,
+            acc_bits: get("acc_bits")? as u32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_when_artifacts_exist() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.in_bits, 8);
+        assert!(m.mul_words >= 64);
+        assert_eq!(m.mlp_in, 64);
+    }
+}

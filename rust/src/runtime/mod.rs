@@ -1,0 +1,14 @@
+//! Runtime — loading and executing the AOT JAX/Pallas artifacts via
+//! PJRT, plus the cross-language golden-vector checker.
+//!
+//! Python authors and lowers the computations at build time
+//! (`make artifacts`); this module is the only place the compiled HLO is
+//! touched at run time. Interchange is HLO *text* (see
+//! `python/compile/aot.py` for why not serialized protos).
+
+pub mod golden;
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::Manifest;
+pub use pjrt::Engine;

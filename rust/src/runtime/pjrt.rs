@@ -1,0 +1,101 @@
+//! PJRT execution engine: compile the HLO-text artifacts once, execute
+//! them from the request path.
+
+use std::path::{Path, PathBuf};
+
+use crate::bits::format::SimdFormat;
+use crate::csd::schedule::{schedule_with, MulOp};
+use crate::runtime::manifest::Manifest;
+
+/// A compiled artifact bundle on the PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    mul_exe: xla::PjRtLoadedExecutable,
+    mlp_exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+    )?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+impl Engine {
+    /// Load and compile `mul.hlo.txt` + `mlp.hlo.txt` from `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mul_exe = compile(&client, &dir.join("mul.hlo.txt"))?;
+        let mlp_exe = compile(&client, &dir.join("mlp.hlo.txt"))?;
+        Ok(Engine { client, mul_exe, mlp_exe, manifest, dir })
+    }
+
+    /// Default artifact location relative to the crate root.
+    pub fn default_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute the packed-multiply artifact: multiply each sub-word of
+    /// `words` (format `fmt`) by the `Q1.(y_bits-1)` multiplier `m_raw`.
+    ///
+    /// `words.len()` must equal the artifact's word count
+    /// (`manifest.mul_words`); pad with zeros and slice as needed.
+    pub fn mul_packed(
+        &self,
+        words: &[u64],
+        m_raw: i64,
+        y_bits: u32,
+        fmt: SimdFormat,
+    ) -> anyhow::Result<Vec<u64>> {
+        anyhow::ensure!(
+            words.len() == self.manifest.mul_words,
+            "artifact expects {} words, got {}",
+            self.manifest.mul_words,
+            words.len()
+        );
+        let plan = schedule_with(m_raw, y_bits, crate::bits::format::MAX_SHIFT);
+        anyhow::ensure!(plan.ops.len() <= self.manifest.ops_max, "plan too long");
+        let mut shifts = vec![0i32; self.manifest.ops_max];
+        let mut signs = vec![0i32; self.manifest.ops_max];
+        for (i, op) in plan.ops.iter().enumerate() {
+            match *op {
+                MulOp::AddShift { shift, sign } => {
+                    shifts[i] = shift as i32;
+                    signs[i] = sign as i32;
+                }
+                MulOp::Shift { shift } => shifts[i] = shift as i32,
+            }
+        }
+        let x = xla::Literal::vec1(words);
+        let s = xla::Literal::vec1(&shifts);
+        let g = xla::Literal::vec1(&signs);
+        let h = xla::Literal::vec1(&[fmt.msb_mask()]);
+        let l = xla::Literal::vec1(&[fmt.lsb_mask()]);
+        let result = self.mul_exe.execute::<xla::Literal>(&[x, s, g, h, l])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<u64>()?)
+    }
+
+    /// Execute the MLP artifact on a quantized batch
+    /// (`int32[mlp_batch, mlp_in]` raws) → `int32[mlp_batch, mlp_out]`
+    /// Q1.15 logits, row-major.
+    pub fn mlp_forward(&self, x_q: &[i32]) -> anyhow::Result<Vec<i32>> {
+        let (b, k) = (self.manifest.mlp_batch, self.manifest.mlp_in);
+        anyhow::ensure!(x_q.len() == b * k, "expected {}x{} inputs", b, k);
+        let x = xla::Literal::vec1(x_q).reshape(&[b as i64, k as i64])?;
+        let result = self.mlp_exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+}

@@ -1,0 +1,5 @@
+//! Synthetic workload generation (the paper's ML-at-the-edge context).
+
+pub mod synth;
+
+pub use synth::{Digits, LayerSpec, Scenario, XorShift64};

@@ -1,0 +1,218 @@
+//! Deterministic synthetic workloads.
+//!
+//! `XorShift64` is bit-identical to `python/compile/model.py::XorShift`
+//! so the Rust side regenerates the exact dataset the AOT model was
+//! validated on — no files needed beyond the baked weights.
+
+use crate::bits::fixed::to_q;
+
+/// xorshift64 PRNG (Marsaglia), the repo-wide deterministic source.
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    s: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        assert_ne!(seed, 0, "xorshift seed must be nonzero");
+        XorShift64 { s: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.s;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.s = x;
+        x
+    }
+
+    /// Uniform in [0, 1) from the top 53 bits (same as the Python mirror).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform raw value in the `Q1.(bits-1)` range.
+    #[inline]
+    pub fn q_raw(&mut self, bits: u32) -> i64 {
+        crate::bits::fixed::sign_extend(self.next_u64() & ((1u64 << bits) - 1), bits)
+    }
+
+    /// A random 48-bit packed word.
+    #[inline]
+    pub fn word(&mut self) -> u64 {
+        self.next_u64() & crate::bits::format::WORD_MASK
+    }
+}
+
+/// The synthetic "digit glyph" dataset of the AOT model (10 classes of
+/// 8×8 images; see `python/compile/model.py`).
+pub struct Digits {
+    pub templates: Vec<Vec<f64>>, // [classes][pixels]
+    pub classes: usize,
+    pub pixels: usize,
+}
+
+impl Digits {
+    pub const TEMPLATE_SEED: u64 = 0xD161;
+
+    pub fn new(classes: usize, pixels: usize, seed: u64) -> Self {
+        let mut rng = XorShift64::new(seed);
+        let templates = (0..classes)
+            .map(|_| (0..pixels).map(|_| rng.uniform() * 2.0 - 1.0).collect())
+            .collect();
+        Digits { templates, classes, pixels }
+    }
+
+    /// The exact dataset the AOT model bakes (10 × 64, seed 0xD161).
+    pub fn standard() -> Self {
+        Digits::new(10, 64, Self::TEMPLATE_SEED)
+    }
+
+    /// Sample `n` noisy examples: returns (quantized Q1.7 rows, labels).
+    /// Bit-identical to `model.sample_batch` + `quantize_inputs`.
+    pub fn sample(&self, n: usize, noise: f64, seed: u64) -> (Vec<Vec<i64>>, Vec<usize>) {
+        let mut rng = XorShift64::new(seed);
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = (rng.next_u64() % self.classes as u64) as usize;
+            ys.push(c);
+            let row: Vec<i64> = (0..self.pixels)
+                .map(|p| {
+                    let v = self.templates[c][p] + (rng.uniform() * 2.0 - 1.0) * noise;
+                    to_q(v.clamp(-1.0, 1.0 - 1.0 / 128.0), 8)
+                })
+                .collect();
+            xs.push(row);
+        }
+        (xs, ys)
+    }
+}
+
+/// A layer of a quantization scenario (Fig. 10 workloads): how many
+/// multiplications at which operand widths.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerSpec {
+    pub mults: u64,
+    pub x_bits: u32,
+    pub y_bits: u32,
+}
+
+/// An application scenario: a named mix of per-layer bitwidths, used by
+/// the Fig. 10 harness ("average energy per sub-word multiplication
+/// across different scenarios").
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl Scenario {
+    /// The scenario set evaluated in `eval::fig10`: a uniformly-low-
+    /// precision network, a mixed-precision CNN-like stack (robust early
+    /// layers at 4–6 bits, sensitive late layers at 8–12), a
+    /// conservative 8-bit network, and a high-precision pipeline.
+    pub fn standard_set() -> Vec<Scenario> {
+        vec![
+            Scenario {
+                name: "uniform-4b",
+                layers: vec![LayerSpec { mults: 4096, x_bits: 4, y_bits: 4 }],
+            },
+            Scenario {
+                name: "mixed-cnn",
+                layers: vec![
+                    LayerSpec { mults: 2048, x_bits: 4, y_bits: 4 },
+                    LayerSpec { mults: 1024, x_bits: 6, y_bits: 6 },
+                    LayerSpec { mults: 512, x_bits: 8, y_bits: 8 },
+                    LayerSpec { mults: 256, x_bits: 12, y_bits: 12 },
+                ],
+            },
+            Scenario {
+                name: "uniform-8b",
+                layers: vec![LayerSpec { mults: 4096, x_bits: 8, y_bits: 8 }],
+            },
+            Scenario {
+                name: "hi-fi-16b",
+                layers: vec![
+                    LayerSpec { mults: 2048, x_bits: 16, y_bits: 16 },
+                    LayerSpec { mults: 2048, x_bits: 12, y_bits: 12 },
+                ],
+            },
+        ]
+    }
+
+    pub fn total_mults(&self) -> u64 {
+        self.layers.iter().map(|l| l.mults).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xorshift_is_deterministic() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn xorshift_matches_python_mirror() {
+        // First three values for seed 0xD161 — pinned so the Python
+        // mirror (model.XorShift) and this must agree forever.
+        let mut rng = XorShift64::new(0xD161);
+        let v1 = rng.next_u64();
+        let v2 = rng.next_u64();
+        // Recompute independently.
+        let mut x = 0xD161u64;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        assert_eq!(v1, x);
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        assert_eq!(v2, x);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut rng = XorShift64::new(7);
+        for _ in 0..1000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn digits_sample_shapes_and_range() {
+        let d = Digits::standard();
+        let (xs, ys) = d.sample(10, 0.3, 0xBA7C4);
+        assert_eq!(xs.len(), 10);
+        assert_eq!(ys.len(), 10);
+        for row in &xs {
+            assert_eq!(row.len(), 64);
+            for &v in row {
+                assert!((-128..=127).contains(&v));
+            }
+        }
+        for &y in &ys {
+            assert!(y < 10);
+        }
+    }
+
+    #[test]
+    fn scenarios_nonempty() {
+        let set = Scenario::standard_set();
+        assert_eq!(set.len(), 4);
+        for s in set {
+            assert!(s.total_mults() > 0);
+        }
+    }
+}

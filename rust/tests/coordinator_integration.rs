@@ -1,0 +1,180 @@
+//! Coordinator integration: packed serving vs the scalar reference and
+//! the AOT model, failure-injection on batching edges, and metrics
+//! consistency.
+
+use std::sync::atomic::Ordering;
+
+use softsimd::coordinator::cost::CostTable;
+use softsimd::coordinator::engine::PackedMlpEngine;
+use softsimd::coordinator::server::{Coordinator, Request};
+use softsimd::nn::exec::{mlp_forward_row, precompute_plans, mlp_forward_row_planned};
+use softsimd::nn::weights::QuantLayer;
+use softsimd::workload::synth::{Digits, XorShift64};
+
+fn cost() -> CostTable {
+    CostTable {
+        mhz: 1000.0,
+        s1_cycle_pj: softsimd::bits::format::FORMATS.iter().map(|&b| (b, 1.0)).collect(),
+        s2_pass_pj: 0.5,
+        area_um2: 4600.0,
+    }
+}
+
+fn random_model(rng: &mut XorShift64, dims: &[usize]) -> Vec<QuantLayer> {
+    dims.windows(2)
+        .map(|w| {
+            QuantLayer::new(
+                (0..w[0])
+                    .map(|_| (0..w[1]).map(|_| rng.q_raw(8)).collect())
+                    .collect(),
+                8,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn coordinator_bit_exact_across_pe_counts_and_batch_targets() {
+    let mut rng = XorShift64::new(0xC001);
+    let layers = random_model(&mut rng, &[12, 8, 4]);
+    let reqs: Vec<Request> = (0..20u64)
+        .map(|id| Request {
+            id,
+            rows: (0..1 + (id as usize % 4))
+                .map(|_| (0..12).map(|_| rng.q_raw(8)).collect())
+                .collect(),
+        })
+        .collect();
+    let expected: Vec<Vec<Vec<i64>>> = reqs
+        .iter()
+        .map(|r| r.rows.iter().map(|row| mlp_forward_row(row, &layers, 8, 16)).collect())
+        .collect();
+    for n_pes in [1usize, 2, 4] {
+        for target in [1usize, 6, 13, 64] {
+            let mut coord =
+                Coordinator::start(layers.clone(), 8, 16, n_pes, target, cost());
+            for r in &reqs {
+                coord.submit(r.clone());
+            }
+            let responses = coord.drain();
+            assert_eq!(responses.len(), reqs.len(), "pes={n_pes} target={target}");
+            for resp in &responses {
+                assert_eq!(
+                    resp.logits, expected[resp.id as usize],
+                    "pes={n_pes} target={target} req={}",
+                    resp.id
+                );
+            }
+            coord.shutdown();
+        }
+    }
+}
+
+#[test]
+fn engine_handles_singleton_and_ragged_batches() {
+    let mut rng = XorShift64::new(0xC002);
+    let layers = random_model(&mut rng, &[7, 5, 3]);
+    let engine = PackedMlpEngine::new(layers.clone(), 8, 16);
+    for m in 1..=13usize {
+        let batch: Vec<Vec<i64>> = (0..m)
+            .map(|_| (0..7).map(|_| rng.q_raw(8)).collect())
+            .collect();
+        let (got, _) = engine.forward_batch(&batch);
+        for (b, row) in batch.iter().enumerate() {
+            assert_eq!(got[b], mlp_forward_row(row, &layers, 8, 16), "m={m} b={b}");
+        }
+    }
+}
+
+#[test]
+fn planned_and_unplanned_reference_agree_on_aot_model() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/mlp_weights.txt");
+    if !path.exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let layers = softsimd::nn::weights::load_weight_file(&path).unwrap();
+    let plans = precompute_plans(&layers);
+    let digits = Digits::standard();
+    let (xs, _) = digits.sample(8, 0.3, 0xABCD);
+    for row in &xs {
+        assert_eq!(
+            mlp_forward_row(row, &layers, 8, 16),
+            mlp_forward_row_planned(row, &layers, &plans, 8, 16)
+        );
+    }
+}
+
+#[test]
+fn metrics_account_every_row_and_mult() {
+    let mut rng = XorShift64::new(0xC003);
+    let layers = random_model(&mut rng, &[6, 4]);
+    let mut coord = Coordinator::start(layers.clone(), 8, 16, 2, 5, cost());
+    let n_rows = 17u64;
+    for id in 0..n_rows {
+        coord.submit(Request {
+            id,
+            rows: vec![(0..6).map(|_| rng.q_raw(8)).collect()],
+        });
+    }
+    let _ = coord.drain();
+    assert_eq!(coord.metrics.rows.load(Ordering::Relaxed), n_rows);
+    assert_eq!(coord.metrics.requests.load(Ordering::Relaxed), n_rows);
+    // Energy must be positive and cycles consistent with plan lengths.
+    assert!(coord.metrics.energy_fj.load(Ordering::Relaxed) > 0);
+    assert!(coord.metrics.s1_cycles.load(Ordering::Relaxed) > 0);
+    coord.shutdown();
+}
+
+#[test]
+fn empty_drain_is_safe() {
+    let mut rng = XorShift64::new(0xC004);
+    let layers = random_model(&mut rng, &[4, 2]);
+    let mut coord = Coordinator::start(layers, 8, 16, 1, 4, cost());
+    assert!(coord.drain().is_empty());
+    coord.shutdown();
+}
+
+#[test]
+fn coordinator_matches_aot_golden_when_artifacts_exist() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let layers = softsimd::nn::weights::load_weight_file(dir.join("mlp_weights.txt")).unwrap();
+    // Parse the golden mlp rows.
+    let text = std::fs::read_to_string(dir.join("golden.txt")).unwrap();
+    let mut inputs: Vec<(usize, Vec<i64>)> = vec![];
+    let mut outputs: Vec<(usize, Vec<i64>)> = vec![];
+    for line in text.lines() {
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("mlp_in") => {
+                let row: usize = it.next().unwrap().parse().unwrap();
+                inputs.push((
+                    row,
+                    it.next().unwrap().split(',').map(|v| v.parse().unwrap()).collect(),
+                ));
+            }
+            Some("mlp_out") => {
+                let row: usize = it.next().unwrap().parse().unwrap();
+                outputs.push((
+                    row,
+                    it.next().unwrap().split(',').map(|v| v.parse().unwrap()).collect(),
+                ));
+            }
+            _ => {}
+        }
+    }
+    let mut coord = Coordinator::start(layers, 8, 16, 2, 8, cost());
+    for (row, vals) in &inputs {
+        coord.submit(Request { id: *row as u64, rows: vec![vals.clone()] });
+    }
+    for resp in coord.drain() {
+        let want = &outputs.iter().find(|(r, _)| *r == resp.id as usize).unwrap().1;
+        assert_eq!(&resp.logits[0], want, "row {}", resp.id);
+    }
+    coord.shutdown();
+}

@@ -1,0 +1,159 @@
+//! Integration across the architecture model and the gate-level
+//! substrate: the same operations computed three ways (functional SWAR,
+//! micro-op pipeline, gate netlist) must agree bit-exactly; the cost
+//! model's structural claims (Fig. 6 shapes) must hold.
+
+use softsimd::bits::format::SimdFormat;
+use softsimd::bits::pack::{pack_stream, unpack, unpack_stream};
+use softsimd::energy::model::SynthesizedSoftPipeline;
+use softsimd::hardsimd::pipeline::{HardSimdPipeline, HARD_FLEX, HARD_TWO};
+use softsimd::isa::{assemble_mul_repack, Instr, Reg};
+use softsimd::pipeline::stage1::{mul_packed, mul_scalar};
+use softsimd::pipeline::stage2::repack_stream;
+use softsimd::pipeline::{PipelineSim, RunResult};
+use softsimd::rtl::multiplier::{drive_bank, hard_product, simd_multiplier_bank};
+use softsimd::rtl::shifter::{drive_stage1, stage1_datapath};
+use softsimd::rtl::Simulator;
+use softsimd::workload::synth::XorShift64;
+
+#[test]
+fn functional_microop_and_gatelevel_multiplies_agree() {
+    let net = stage1_datapath(true);
+    let mut gate = Simulator::new(&net);
+    let mut rng = XorShift64::new(0x3A3A);
+    for fmt in SimdFormat::all() {
+        for _ in 0..30 {
+            let x = rng.word();
+            let m = rng.q_raw(8);
+            // Way 1: functional packed multiply.
+            let f = mul_packed(x, m, 8, fmt);
+            // Way 2: micro-op pipeline program.
+            let mut prog = assemble_mul_repack(m, 8, fmt, fmt, 3);
+            prog.instrs.insert(1, Instr::Load(Reg::X, x));
+            let mut sim = PipelineSim::new(fmt);
+            let mut res = RunResult::default();
+            sim.run(&prog, &mut res);
+            assert_eq!(res.outputs[0], f, "microop vs functional, fmt {fmt} m {m}");
+            // Way 3: gate-level replay of the plan.
+            let plan = softsimd::csd::schedule::schedule(m, 8);
+            let mut acc = 0u64;
+            for op in &plan.ops {
+                let (k, sign) = match *op {
+                    softsimd::csd::schedule::MulOp::AddShift { shift, sign } => (shift, sign),
+                    softsimd::csd::schedule::MulOp::Shift { shift } => (shift, 0),
+                };
+                acc = drive_stage1(&mut gate, &net, acc, x, k, sign, fmt);
+            }
+            assert_eq!(acc, f, "gate-level vs functional, fmt {fmt} m {m}");
+        }
+    }
+}
+
+#[test]
+fn repack_pipeline_roundtrip_all_pairs() {
+    // Multiply then convert through every format pair and back;
+    // compare against the canonical stream semantics.
+    let mut rng = XorShift64::new(0x9C9C);
+    for from in SimdFormat::all() {
+        for to in SimdFormat::all() {
+            let count = from.lanes() as usize * 2;
+            let vals: Vec<i64> = (0..count).map(|_| rng.q_raw(from.bits)).collect();
+            let words = pack_stream(&vals, from);
+            let there = repack_stream(&words, from, to, count);
+            let back = repack_stream(&there, to, from, count);
+            let got = unpack_stream(&back, from, count);
+            for (j, (&v, &g)) in vals.iter().zip(&got).enumerate() {
+                if to.bits >= from.bits {
+                    assert_eq!(v, g, "{from}->{to} lossless roundtrip idx {j}");
+                } else {
+                    // Narrowing truncated low bits; the value error is
+                    // bounded by one narrow ULP re-expressed at `from`.
+                    let dropped = from.bits - to.bits;
+                    assert_eq!(g >> dropped << dropped, g, "low bits cleared");
+                    assert!((v - g) >= 0 && (v - g) < (1 << dropped), "{from}->{to}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hard_simd_functional_bank_matches_reference_products() {
+    // The dedicated-bank functional netlist (the correctness carrier
+    // for Hard SIMD) against `hard_product` across formats.
+    let fmts = [4u32, 6, 8, 12, 16];
+    let net = simd_multiplier_bank(&fmts, false);
+    let mut sim = Simulator::new(&net);
+    let mut rng = XorShift64::new(0x4D4D);
+    for &b in &fmts {
+        let fmt = SimdFormat::new(b);
+        for _ in 0..20 {
+            let xs: Vec<i64> = (0..fmt.lanes()).map(|_| rng.q_raw(b)).collect();
+            let ms: Vec<i64> = (0..fmt.lanes()).map(|_| rng.q_raw(b)).collect();
+            let a = softsimd::bits::pack::pack(&xs, fmt);
+            let m = softsimd::bits::pack::pack(&ms, fmt);
+            let got = unpack(drive_bank(&mut sim, &net, &fmts, a, m, fmt), fmt);
+            let want: Vec<i64> = xs
+                .iter()
+                .zip(&ms)
+                .map(|(&x, &mm)| hard_product(x, mm, b))
+                .collect();
+            assert_eq!(got, want, "fmt {fmt}");
+        }
+    }
+}
+
+#[test]
+fn soft_vs_hard_accuracy_comparison() {
+    // Both arms compute Q1 products; hard truncates once, soft once per
+    // add — soft's error is bounded and the paper's ~1% claim holds.
+    let mut rng = XorShift64::new(0xACC2);
+    let mut soft_err = 0.0f64;
+    let mut hard_err = 0.0f64;
+    let n = 20_000;
+    for _ in 0..n {
+        let x = rng.q_raw(8);
+        let m = rng.q_raw(8);
+        if x == -128 && m == -128 {
+            continue;
+        }
+        let truth = (x as f64 / 128.0) * (m as f64 / 128.0);
+        soft_err += ((mul_scalar(x, m, 8, 8) as f64 / 128.0) - truth).abs();
+        hard_err += ((hard_product(x, m, 8) as f64 / 128.0) - truth).abs();
+    }
+    let (soft_mean, hard_mean) = (soft_err / n as f64, hard_err / n as f64);
+    assert!(hard_mean <= soft_mean, "hard should be ≥ as accurate");
+    assert!(soft_mean < 0.012, "soft mean abs error {soft_mean} ≈ 1% claim");
+}
+
+#[test]
+fn fig6_structural_claims_hold_at_all_constraints() {
+    for &mhz in &[200.0, 500.0, 1000.0] {
+        let soft = SynthesizedSoftPipeline::new(mhz).area();
+        let flex = HardSimdPipeline::new(HARD_FLEX, mhz).area();
+        let two = HardSimdPipeline::new(HARD_TWO, mhz).area();
+        assert!(soft.total() < 0.5 * flex.total(), "@{mhz} MHz");
+        assert!(two.total() > 1.1 * soft.total(), "@{mhz} MHz");
+        assert!(flex.total() > two.total(), "@{mhz} MHz");
+    }
+}
+
+#[test]
+fn pipeline_overlap_improves_throughput() {
+    // Back-to-back multiply+repack programs: the overlapped elapsed
+    // time must beat the serial sum by the stage-2 occupancy.
+    let fmt = SimdFormat::new(8);
+    let mut rng = XorShift64::new(0x0412);
+    let progs: Vec<_> = (0..100)
+        .map(|_| {
+            let mut p = assemble_mul_repack(rng.q_raw(8), 8, fmt, SimdFormat::new(16), 3);
+            p.instrs.insert(1, Instr::Load(Reg::X, rng.word()));
+            p
+        })
+        .collect();
+    let mut sim = PipelineSim::new(fmt);
+    sim.tracing = false;
+    let res = sim.run_batch(&progs);
+    assert!(res.elapsed_cycles < res.s1_busy + res.s2_busy);
+    assert!(res.elapsed_cycles >= res.s1_busy.max(res.s2_busy));
+}

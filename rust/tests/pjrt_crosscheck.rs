@@ -1,0 +1,131 @@
+//! Integration: the AOT HLO artifacts, executed through PJRT, must agree
+//! bit-exactly with the Rust architecture model — closing the loop
+//! Pallas kernel → HLO text → PJRT execution → Rust simulator.
+//!
+//! Skips (with a message) when `artifacts/` has not been built yet.
+
+use softsimd::bits::format::SimdFormat;
+use softsimd::bits::pack::{pack_stream, unpack_stream};
+use softsimd::nn::exec::mlp_forward_row;
+use softsimd::nn::weights::load_weight_file;
+use softsimd::pipeline::stage1::mul_packed;
+use softsimd::runtime::Engine;
+use softsimd::workload::synth::{Digits, XorShift64};
+
+fn engine() -> Option<Engine> {
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(dir).expect("artifact load"))
+}
+
+#[test]
+fn mul_artifact_matches_simulator_all_formats() {
+    let Some(eng) = engine() else { return };
+    let mut rng = XorShift64::new(0x7E57_0001);
+    for fmt in SimdFormat::all() {
+        for y_bits in [4u32, 8, fmt.bits] {
+            let m = rng.q_raw(y_bits);
+            let words: Vec<u64> = (0..eng.manifest.mul_words).map(|_| rng.word()).collect();
+            let got = eng
+                .mul_packed(&words, m, y_bits, fmt)
+                .expect("artifact exec");
+            let want: Vec<u64> = words
+                .iter()
+                .map(|&w| mul_packed(w, m, y_bits, fmt))
+                .collect();
+            assert_eq!(got, want, "fmt {fmt} y {y_bits} m {m}");
+        }
+    }
+}
+
+#[test]
+fn mul_artifact_edge_multipliers() {
+    let Some(eng) = engine() else { return };
+    let fmt = SimdFormat::new(8);
+    let mut rng = XorShift64::new(0x7E57_0002);
+    let words: Vec<u64> = (0..eng.manifest.mul_words).map(|_| rng.word()).collect();
+    for m in [-128i64, -127, -1, 0, 1, 64, 127] {
+        let got = eng.mul_packed(&words, m, 8, fmt).unwrap();
+        let want: Vec<u64> = words.iter().map(|&w| mul_packed(w, m, 8, fmt)).collect();
+        assert_eq!(got, want, "m={m}");
+    }
+}
+
+#[test]
+fn mul_artifact_lane_isolation() {
+    // A word with one hot lane: products must stay confined to that lane.
+    let Some(eng) = engine() else { return };
+    let fmt = SimdFormat::new(12);
+    let mut words = vec![0u64; eng.manifest.mul_words];
+    let vals: Vec<i64> = vec![0, -2048, 0, 0];
+    words[0] = pack_stream(&vals, fmt)[0];
+    let got = eng.mul_packed(&words, 1365, 12, fmt).unwrap();
+    let lanes = unpack_stream(&got[..1], fmt, 4);
+    assert_eq!(lanes[0], 0);
+    assert_eq!(lanes[2], 0);
+    assert_eq!(lanes[3], 0);
+    assert_ne!(lanes[1], 0);
+    assert!(got[1..].iter().all(|&w| w == 0));
+}
+
+#[test]
+fn mlp_artifact_matches_rust_reference_and_golden() {
+    let Some(eng) = engine() else { return };
+    let layers = load_weight_file(eng.dir.join("mlp_weights.txt")).expect("weights");
+
+    // The exact batch the golden file pins.
+    let digits = Digits::standard();
+    let (xs, _ys) = digits.sample(eng.manifest.mlp_batch, 0.3, 0xBA7C4);
+    let flat: Vec<i32> = xs.iter().flatten().map(|&v| v as i32).collect();
+    let logits = eng.mlp_forward(&flat).expect("mlp exec");
+
+    for (b, row) in xs.iter().enumerate() {
+        let want = mlp_forward_row(row, &layers, eng.manifest.in_bits, eng.manifest.acc_bits);
+        let got: Vec<i64> = logits
+            [b * eng.manifest.mlp_out..(b + 1) * eng.manifest.mlp_out]
+            .iter()
+            .map(|&v| v as i64)
+            .collect();
+        assert_eq!(got, want, "batch row {b}");
+    }
+}
+
+#[test]
+fn mlp_artifact_classifies_above_chance() {
+    let Some(eng) = engine() else { return };
+    let digits = Digits::standard();
+    let (xs, ys) = digits.sample(eng.manifest.mlp_batch, 0.3, 0xBA7C4);
+    let flat: Vec<i32> = xs.iter().flatten().map(|&v| v as i32).collect();
+    let logits = eng.mlp_forward(&flat).unwrap();
+    let mut correct = 0;
+    for b in 0..eng.manifest.mlp_batch {
+        let row: Vec<i64> = logits[b * eng.manifest.mlp_out..(b + 1) * eng.manifest.mlp_out]
+            .iter()
+            .map(|&v| v as i64)
+            .collect();
+        if softsimd::nn::exec::argmax_class(&row, eng.manifest.mlp_classes) == ys[b] {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / eng.manifest.mlp_batch as f64;
+    assert!(acc >= 0.5, "PJRT MLP accuracy {acc} (chance 0.1)");
+}
+
+#[test]
+fn golden_file_validates_end_to_end() {
+    let dir = Engine::default_dir();
+    let golden = dir.join("golden.txt");
+    if !golden.exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    // The mlp rows in check_file need the weights path relative to cwd;
+    // run from the crate root.
+    std::env::set_current_dir(env!("CARGO_MANIFEST_DIR")).unwrap();
+    let rep = softsimd::runtime::golden::check_file(&golden).expect("golden parse");
+    assert!(rep.ok(), "{rep}");
+    assert!(rep.swar > 500 && rep.mul > 100 && rep.repack >= 20 && rep.mlp_rows >= 16);
+}

@@ -1,0 +1,246 @@
+//! Property-based tests over the architecture invariants (hand-rolled
+//! generators — proptest is unavailable offline; see Cargo.toml).
+//!
+//! Each property runs a few thousand randomized cases with a fixed seed
+//! (deterministic, reproducible); assertion messages carry the failing
+//! inputs.
+
+use softsimd::bits::fixed::{from_q, sign_extend};
+use softsimd::bits::format::{SimdFormat, WORD_MASK};
+use softsimd::bits::pack::{pack, pack_stream, unpack, unpack_stream};
+use softsimd::bits::swar::{swar_add, swar_add_sar, swar_neg, swar_sar, swar_sub, swar_sub_sar};
+use softsimd::csd::encode::{csd_decode, csd_encode, Digit};
+use softsimd::csd::schedule::{schedule, schedule_with, MulOp};
+use softsimd::pipeline::stage1::{mul_packed, mul_packed_with, mul_scalar};
+use softsimd::pipeline::stage2::{conversion_chain, repack_stream};
+use softsimd::workload::synth::XorShift64;
+
+const CASES: usize = 3000;
+
+fn formats() -> Vec<SimdFormat> {
+    SimdFormat::all().collect()
+}
+
+#[test]
+fn prop_swar_ops_match_lanewise_model() {
+    let mut rng = XorShift64::new(0x11);
+    for i in 0..CASES {
+        let fmt = formats()[i % 5];
+        let (a, c) = (rng.word(), rng.word());
+        let b = fmt.bits;
+        let lanes_a = unpack(a, fmt);
+        let lanes_c = unpack(c, fmt);
+        let wrap = |v: i64| sign_extend((v as u64) & ((1u64 << b) - 1), b);
+        assert_eq!(
+            unpack(swar_add(a, c, fmt), fmt),
+            lanes_a.iter().zip(&lanes_c).map(|(&x, &y)| wrap(x + y)).collect::<Vec<_>>(),
+            "add a={a:#x} c={c:#x} fmt={fmt}"
+        );
+        assert_eq!(
+            unpack(swar_sub(a, c, fmt), fmt),
+            lanes_a.iter().zip(&lanes_c).map(|(&x, &y)| wrap(x - y)).collect::<Vec<_>>(),
+            "sub a={a:#x} c={c:#x} fmt={fmt}"
+        );
+        assert_eq!(
+            unpack(swar_neg(a, fmt), fmt),
+            lanes_a.iter().map(|&x| wrap(-x)).collect::<Vec<_>>(),
+            "neg a={a:#x} fmt={fmt}"
+        );
+        let k = 1 + (i as u32 % 3);
+        assert_eq!(
+            unpack(swar_add_sar(a, c, k, fmt), fmt),
+            lanes_a.iter().zip(&lanes_c).map(|(&x, &y)| (x + y) >> k).collect::<Vec<_>>(),
+            "addsar a={a:#x} c={c:#x} k={k} fmt={fmt}"
+        );
+        assert_eq!(
+            unpack(swar_sub_sar(a, c, k, fmt), fmt),
+            lanes_a.iter().zip(&lanes_c).map(|(&x, &y)| (x - y) >> k).collect::<Vec<_>>(),
+            "subsar fmt={fmt}"
+        );
+        assert_eq!(
+            unpack(swar_sar(a, k, fmt), fmt),
+            lanes_a.iter().map(|&x| x >> k).collect::<Vec<_>>(),
+            "sar fmt={fmt}"
+        );
+        assert_eq!(swar_add_sar(a, c, k, fmt) & !WORD_MASK, 0, "datapath overflow");
+    }
+}
+
+#[test]
+fn prop_csd_roundtrip_and_adjacency() {
+    let mut rng = XorShift64::new(0x22);
+    for i in 0..CASES {
+        let y = [4u32, 6, 8, 12, 16][i % 5];
+        let m = rng.q_raw(y);
+        let d = csd_encode(m, y);
+        assert_eq!(d.len(), y as usize, "length m={m} y={y}");
+        assert_eq!(csd_decode(&d), m, "roundtrip m={m} y={y}");
+        for w in d.windows(2) {
+            assert!(
+                matches!(w[0], Digit::Z) || matches!(w[1], Digit::Z),
+                "adjacent nonzeros m={m} y={y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_schedule_exactness_under_headroom() {
+    // Replaying any plan on a multiplicand with enough trailing zero
+    // bits computes x·m exactly — the core shift-add correctness.
+    let mut rng = XorShift64::new(0x33);
+    for i in 0..CASES {
+        let y = [4u32, 6, 8, 12, 16][i % 5];
+        let m = rng.q_raw(y);
+        let max_shift = 1 + (i as u32 % 4);
+        let plan = schedule_with(m, y, max_shift);
+        let x: i128 = (rng.q_raw(16) as i128) << 24;
+        let mut acc: i128 = 0;
+        for op in &plan.ops {
+            match *op {
+                MulOp::Shift { shift } => acc >>= shift,
+                MulOp::AddShift { shift, sign } => {
+                    acc += sign as i128 * x;
+                    acc >>= shift;
+                }
+            }
+        }
+        assert_eq!(acc, (x * m as i128) >> (y - 1), "m={m} y={y} ms={max_shift}");
+    }
+}
+
+#[test]
+fn prop_packed_mul_equals_scalar_oracle() {
+    let mut rng = XorShift64::new(0x44);
+    for i in 0..CASES / 2 {
+        let fmt = formats()[i % 5];
+        let y = [4u32, 8, 12, 16][i % 4];
+        let m = rng.q_raw(y);
+        let x = rng.word();
+        let got = unpack(mul_packed(x, m, y, fmt), fmt);
+        for (lane, &xv) in unpack(x, fmt).iter().enumerate() {
+            assert_eq!(
+                got[lane],
+                mul_scalar(xv, m, fmt.bits, y),
+                "lane {lane} x={xv} m={m} fmt={fmt} y={y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_mul_invariant_under_shifter_reach() {
+    // The shifter reach changes cycle counts, never results.
+    let mut rng = XorShift64::new(0x55);
+    for i in 0..CASES / 3 {
+        let fmt = formats()[i % 5];
+        let m = rng.q_raw(8);
+        let x = rng.word();
+        let r3 = mul_packed_with(x, m, 8, fmt, 3);
+        // Reach beyond 3 changes only cycle counts (ablation::density);
+        // the datapath executes k ≤ 3 (the paper's shifter).
+        for reach in [1u32, 2] {
+            assert_eq!(
+                mul_packed_with(x, m, 8, fmt, reach),
+                r3,
+                "reach {reach} m={m} x={x:#x} fmt={fmt}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_mul_accuracy_bound() {
+    // |soft product − exact| < cycles(plan)·ULP: each cycle truncates
+    // strictly less than one ULP.
+    let mut rng = XorShift64::new(0x66);
+    for i in 0..CASES {
+        let b = [4u32, 6, 8, 12, 16][i % 5];
+        let x = rng.q_raw(b);
+        let m = rng.q_raw(b);
+        if x == -(1 << (b - 1)) && m == -(1 << (b - 1)) {
+            continue; // −1 × −1 wrap corner
+        }
+        let plan_len = schedule(m, b).cycles().max(1) as f64;
+        let got = from_q(mul_scalar(x, m, b, b), b);
+        let truth = from_q(x, b) * from_q(m, b);
+        let ulp = 2f64.powi(-(b as i32 - 1));
+        assert!(
+            (got - truth).abs() <= plan_len * ulp + 1e-12,
+            "x={x} m={m} b={b}: err {} ULPs > {plan_len}",
+            (got - truth).abs() / ulp
+        );
+    }
+}
+
+#[test]
+fn prop_repack_widen_exact_and_narrow_truncates() {
+    let mut rng = XorShift64::new(0x77);
+    for i in 0..CASES / 2 {
+        let from = formats()[i % 5];
+        let to = formats()[(i / 5) % 5];
+        let count = 1 + (rng.next_u64() as usize % 30);
+        let vals: Vec<i64> = (0..count).map(|_| rng.q_raw(from.bits)).collect();
+        let words = pack_stream(&vals, from);
+        let out = repack_stream(&words, from, to, count);
+        let got = unpack_stream(&out, to, count);
+        for (j, (&v, &g)) in vals.iter().zip(&got).enumerate() {
+            let vq = from_q(v, from.bits);
+            let gq = from_q(g, to.bits);
+            if to.bits >= from.bits {
+                assert_eq!(vq, gq, "widen exact {from}->{to} idx {j}");
+            } else {
+                let ulp = 2f64.powi(-(to.bits as i32 - 1));
+                assert!(
+                    gq <= vq && vq - gq < ulp,
+                    "narrow {from}->{to} idx {j}: {vq} -> {gq}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_conversion_chains_are_minimal_and_legal() {
+    for a in formats() {
+        for b in formats() {
+            let chain = conversion_chain(a, b);
+            if a == b {
+                assert!(chain.is_empty());
+                continue;
+            }
+            assert!(chain.len() <= 2);
+            for (f, t) in &chain {
+                assert!(f.bits <= 2 * t.bits, "illegal hop {f}->{t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pack_roundtrip() {
+    let mut rng = XorShift64::new(0x88);
+    for i in 0..CASES {
+        let fmt = formats()[i % 5];
+        let vals: Vec<i64> = (0..fmt.lanes()).map(|_| rng.q_raw(fmt.bits)).collect();
+        assert_eq!(unpack(pack(&vals, fmt), fmt), vals, "fmt {fmt}");
+    }
+}
+
+#[test]
+fn prop_zero_multiplier_and_identity_edges() {
+    let mut rng = XorShift64::new(0x99);
+    for i in 0..CASES / 3 {
+        let fmt = formats()[i % 5];
+        let x = rng.word();
+        // ×0 → 0 in zero cycles.
+        assert_eq!(mul_packed(x, 0, 8, fmt), 0);
+        assert_eq!(schedule(0, 8).cycles(), 0);
+        // ×(−1) = per-lane negation (mod wrap).
+        let neg = unpack(mul_packed(x, -128, 8, fmt), fmt);
+        for (lane, &xv) in unpack(x, fmt).iter().enumerate() {
+            let want = sign_extend(((-xv) as u64) & ((1u64 << fmt.bits) - 1), fmt.bits);
+            assert_eq!(neg[lane], want, "neg lane {lane}");
+        }
+    }
+}
