@@ -1,0 +1,139 @@
+"""Deterministic fallback for the `hypothesis` API surface these tests
+use, for offline images where the real package is unavailable.
+
+Implements ``given``/``settings`` and the strategies actually consumed
+(``integers``, ``floats``, ``sampled_from``, ``data``) as a seeded
+exhaustive-ish random sweep: every ``@given`` test runs ``max_examples``
+deterministic cases (seeded from the test's qualified name), so failures
+are reproducible. No shrinking, no database — a test failure reports the
+drawn values via the assertion message only.
+
+Usage (at the top of a test module)::
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ModuleNotFoundError:
+        from _hypothesis_compat import given, settings, st
+"""
+
+import functools
+import inspect
+import random
+import zlib
+
+__all__ = ["given", "settings", "st", "HealthCheck"]
+
+_DEFAULT_EXAMPLES = 100
+
+
+class _Strategy:
+    """A draw function wrapper (mirrors hypothesis' SearchStrategy)."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rnd):
+        return self._draw(rnd)
+
+
+class _DataObject:
+    """Mirror of hypothesis' interactive ``data()`` object."""
+
+    def __init__(self, rnd):
+        self._rnd = rnd
+
+    def draw(self, strategy):
+        return strategy.draw(self._rnd)
+
+
+class _DataStrategy(_Strategy):
+    def __init__(self):
+        super().__init__(lambda rnd: _DataObject(rnd))
+
+
+class _St:
+    """The `strategies` module surface used by these tests."""
+
+    @staticmethod
+    def integers(min_value=None, max_value=None):
+        lo = -(2**64) if min_value is None else min_value
+        hi = 2**64 if max_value is None else max_value
+        return _Strategy(lambda rnd: rnd.randint(lo, hi))
+
+    @staticmethod
+    def floats(min_value=None, max_value=None, allow_nan=False, allow_infinity=False):
+        lo = -1e308 if min_value is None else min_value
+        hi = 1e308 if max_value is None else max_value
+        return _Strategy(lambda rnd: rnd.uniform(lo, hi))
+
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        if not seq:
+            raise ValueError("sampled_from needs a non-empty sequence")
+        return _Strategy(lambda rnd: rnd.choice(seq))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+    @staticmethod
+    def data():
+        return _DataStrategy()
+
+
+st = _St()
+
+
+class HealthCheck:
+    """Accepted and ignored (API compatibility)."""
+
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    """Records ``max_examples`` on the function; other knobs are no-ops."""
+
+    def decorate(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def given(*strategies, **kw_strategies):
+    """Run the test over ``max_examples`` deterministic random draws."""
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(
+                wrapper,
+                "_compat_max_examples",
+                getattr(fn, "_compat_max_examples", _DEFAULT_EXAMPLES),
+            )
+            seed_base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rnd = random.Random((seed_base << 20) + i)
+                drawn = [s.draw(rnd) for s in strategies]
+                kw_drawn = {k: s.draw(rnd) for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **kw_drawn)
+
+        # Hide the strategy-filled parameters from pytest, which would
+        # otherwise look for fixtures named after them. Strategies fill
+        # the trailing positional parameters (hypothesis semantics), so
+        # only the leading ones (e.g. `self`) remain visible.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        keep = len(params) - len(strategies) - len(kw_strategies)
+        wrapper.__signature__ = sig.replace(parameters=params[:keep])
+        try:
+            del wrapper.__wrapped__
+        except AttributeError:
+            pass
+        return wrapper
+
+    return decorate

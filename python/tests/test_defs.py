@@ -3,8 +3,11 @@
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # offline image — deterministic fallback
+    from _hypothesis_compat import given, settings, st
 
 from compile import defs
 

@@ -7,8 +7,11 @@ the semantics are integer).
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # offline image — deterministic fallback
+    from _hypothesis_compat import given, settings, st
 
 from compile import defs
 from compile.kernels import ref, softsimd

@@ -1,17 +1,29 @@
 //! Coordinator serving benchmarks: packed-engine layer throughput and
-//! the full submit→batch→PE→drain loop.
+//! the full submit→batch→PE→drain loop, comparing round-robin vs
+//! least-outstanding-rows dispatch at several PE counts.
+//!
+//! The serving comparison reports rows/sec and p50/p99 request latency
+//! per (policy, PE count) cell. The workload is deliberately skewed
+//! (most requests are 1 row, a few are 24-row bulks) — the case where
+//! blind round-robin parks small requests behind bulks and load-aware
+//! routing should win.
 
 #[path = "benchkit.rs"]
 mod benchkit;
 use benchkit::{bench, throughput};
 
+use std::sync::Arc;
+
 use softsimd::coordinator::cost::CostTable;
 use softsimd::coordinator::engine::PackedMlpEngine;
-use softsimd::coordinator::server::{Coordinator, Request};
+use softsimd::coordinator::model::CompiledModel;
+use softsimd::coordinator::server::{
+    Coordinator, DispatchPolicy, Request, ServeConfig,
+};
 use softsimd::nn::weights::QuantLayer;
 use softsimd::workload::synth::XorShift64;
 
-fn model(rng: &mut XorShift64) -> Vec<QuantLayer> {
+fn model_layers(rng: &mut XorShift64) -> Vec<QuantLayer> {
     let mk = |k: usize, n: usize, rng: &mut XorShift64| {
         QuantLayer::new(
             (0..k).map(|_| (0..n).map(|_| rng.q_raw(8)).collect()).collect(),
@@ -21,14 +33,30 @@ fn model(rng: &mut XorShift64) -> Vec<QuantLayer> {
     vec![mk(64, 32, rng), mk(32, 16, rng)]
 }
 
+/// Skewed open-loop workload: ~1/8 of requests are 24-row bulks.
+fn workload(rng: &mut XorShift64, n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|id| {
+            let rows = if rng.next_u64() % 8 == 0 { 24 } else { 1 };
+            Request {
+                id: id as u64,
+                rows: (0..rows)
+                    .map(|_| (0..64).map(|_| rng.q_raw(8)).collect())
+                    .collect(),
+            }
+        })
+        .collect()
+}
+
 fn main() {
     println!("== coordinator: packed NN serving ==");
     let mut rng = XorShift64::new(0xC0BE);
-    let layers = model(&mut rng);
+    let layers = model_layers(&mut rng);
     let mults_per_row: u64 = layers.iter().map(|l| (l.k * l.n) as u64).sum();
+    let model = CompiledModel::compile(layers, 8, 16);
 
-    // Engine-only: packed forward of a 12-row batch.
-    let engine = PackedMlpEngine::new(layers.clone(), 8, 16);
+    // Engine-only: packed forward of a 12-row batch on the shared model.
+    let engine = PackedMlpEngine::new(Arc::clone(&model));
     let batch: Vec<Vec<i64>> = (0..12)
         .map(|_| (0..64).map(|_| rng.q_raw(8)).collect())
         .collect();
@@ -37,22 +65,68 @@ fn main() {
     });
     throughput(&r, (12 * mults_per_row) as f64, "subword-mults");
 
-    // Full coordinator loop, 2 PEs.
     let cost = CostTable {
         mhz: 1000.0,
         s1_cycle_pj: softsimd::bits::format::FORMATS.iter().map(|&b| (b, 1.0)).collect(),
         s2_pass_pj: 0.5,
         area_um2: 4600.0,
     };
+
+    // Full coordinator loop: policy × PE-count grid on a skewed stream.
+    let reqs = workload(&mut rng, 256);
+    let total_rows: usize = reqs.iter().map(|r| r.rows.len()).sum();
+    println!(
+        "\n== dispatch policy comparison ({} requests, {} rows, skewed sizes) ==",
+        reqs.len(),
+        total_rows
+    );
+    println!(
+        "{:<14} {:>4} {:>12} {:>12} {:>12}",
+        "policy", "PEs", "rows/s", "p50 us", "p99 us"
+    );
+    for &policy in &[DispatchPolicy::RoundRobin, DispatchPolicy::LeastLoaded] {
+        for &n_pes in &[2usize, 4] {
+            let cfg = ServeConfig::new(n_pes, 12).policy(policy);
+            let mut coord =
+                Coordinator::start(Arc::clone(&model), cfg, cost.clone());
+            for req in &reqs {
+                coord.submit(req.clone()).expect("live workers");
+            }
+            let responses = coord.drain().expect("drain");
+            assert_eq!(responses.len(), reqs.len());
+            let p50 = coord.metrics.latency_quantile_ns(0.50).unwrap_or(0) as f64 / 1e3;
+            let p99 = coord.metrics.latency_quantile_ns(0.99).unwrap_or(0) as f64 / 1e3;
+            println!(
+                "{:<14} {:>4} {:>12.0} {:>12.1} {:>12.1}",
+                match policy {
+                    DispatchPolicy::RoundRobin => "round-robin",
+                    DispatchPolicy::LeastLoaded => "least-loaded",
+                },
+                n_pes,
+                coord.metrics.rows_per_sec(),
+                p50,
+                p99
+            );
+            coord.shutdown();
+        }
+    }
+
+    // The classic single-cell timing view, for regression tracking.
     let rows: Vec<Vec<i64>> = (0..96)
         .map(|_| (0..64).map(|_| rng.q_raw(8)).collect())
         .collect();
     let r = bench("coordinator submit+drain (96 requests, 2 PEs)", 120, || {
-        let mut coord = Coordinator::start(layers.clone(), 8, 16, 2, 12, cost.clone());
+        let mut coord = Coordinator::start(
+            Arc::clone(&model),
+            ServeConfig::new(2, 12),
+            cost.clone(),
+        );
         for (id, row) in rows.iter().enumerate() {
-            coord.submit(Request { id: id as u64, rows: vec![row.clone()] });
+            coord
+                .submit(Request { id: id as u64, rows: vec![row.clone()] })
+                .expect("live workers");
         }
-        std::hint::black_box(coord.drain());
+        std::hint::black_box(coord.drain().expect("drain"));
         coord.shutdown();
     });
     throughput(&r, (96 * mults_per_row) as f64, "subword-mults");

@@ -11,8 +11,10 @@
 
 use std::time::Instant;
 
+use softsimd::anyhow;
 use softsimd::coordinator::cost::CostTable;
-use softsimd::coordinator::server::{Coordinator, Request};
+use softsimd::coordinator::model::CompiledModel;
+use softsimd::coordinator::server::{Coordinator, Request, ServeConfig};
 use softsimd::energy::model::SynthesizedSoftPipeline;
 use softsimd::hardsimd::pipeline::{HardSimdPipeline, HARD_FLEX, HARD_TWO};
 use softsimd::nn::exec::argmax_class;
@@ -42,11 +44,12 @@ fn main() -> anyhow::Result<()> {
     // ---- system under test: coordinator over packed pipelines -----
     println!("[2/4] running the same batch on the packed PE array…");
     let cost = CostTable::characterize(1000.0);
-    let mut coord = Coordinator::start(layers.clone(), 8, 16, 2, b, cost);
+    let model = CompiledModel::compile(layers.clone(), 8, 16);
+    let mut coord = Coordinator::start(model, ServeConfig::new(2, b), cost);
     for (id, row) in xs.iter().enumerate() {
-        coord.submit(Request { id: id as u64, rows: vec![row.clone()] });
+        coord.submit(Request { id: id as u64, rows: vec![row.clone()] })?;
     }
-    let responses = coord.drain();
+    let responses = coord.drain()?;
 
     let out_n = engine.manifest.mlp_out;
     let mut mismatches = 0;
@@ -72,9 +75,9 @@ fn main() -> anyhow::Result<()> {
     let (xl, yl) = digits.sample(512, 0.3, 0xACC);
     let t0 = Instant::now();
     for (id, row) in xl.iter().enumerate() {
-        coord.submit(Request { id: (1000 + id) as u64, rows: vec![row.clone()] });
+        coord.submit(Request { id: (1000 + id) as u64, rows: vec![row.clone()] })?;
     }
-    let rs = coord.drain();
+    let rs = coord.drain()?;
     let wall = t0.elapsed();
     let correct = rs
         .iter()

@@ -2,12 +2,19 @@
 //! request stream and reports latency percentiles and throughput — the
 //! serving-system view of the near-memory accelerator.
 //!
+//! The stream relies on the coordinator's deadline thread for straggler
+//! flushes: requests are submitted in bursts and responses are only
+//! collected at the end, yet sub-target batches still execute within the
+//! configured deadline (DESIGN.md §8).
+//!
 //! Run: `make artifacts && cargo run --release --example serve [n_requests]`
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use softsimd::anyhow;
 use softsimd::coordinator::cost::CostTable;
-use softsimd::coordinator::server::{Coordinator, Request};
+use softsimd::coordinator::model::CompiledModel;
+use softsimd::coordinator::server::{Coordinator, Request, ServeConfig};
 use softsimd::nn::weights::load_weight_file;
 use softsimd::workload::synth::{Digits, XorShift64};
 
@@ -21,53 +28,46 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(weights.exists(), "run `make artifacts` first");
     let layers = load_weight_file(weights)?;
     let cost = CostTable::characterize(1000.0);
+    let model = CompiledModel::compile(layers, 8, 16);
 
-    println!("request stream: {n} requests, bursty arrivals, 4 PEs, batch target 12 rows");
+    println!(
+        "request stream: {n} requests, bursty arrivals, 4 PEs, batch target \
+         12 rows, 1 ms straggler deadline, least-loaded dispatch"
+    );
     let digits = Digits::standard();
     let mut rng = XorShift64::new(0x5E2E);
 
-    let mut coord = Coordinator::start(layers, 8, 16, 4, 12, cost);
-    let mut latencies_us: Vec<f64> = Vec::with_capacity(n);
+    let cfg = ServeConfig::new(4, 12).deadline(Duration::from_millis(1));
+    let mut coord = Coordinator::start(model, cfg, cost);
     let t_start = Instant::now();
     let mut submitted = 0u64;
-    let mut submit_times: Vec<Instant> = Vec::with_capacity(n);
     while (submitted as usize) < n {
-        // Bursts of 1..8 requests.
+        // Bursts of 1..8 requests with a small think-time gap.
         let burst = 1 + (rng.next_u64() % 8) as usize;
         for _ in 0..burst.min(n - submitted as usize) {
             let (xs, _) = digits.sample(1, 0.3, 1 + submitted * 7919);
-            submit_times.push(Instant::now());
-            coord.submit(Request { id: submitted, rows: vec![xs[0].clone()] });
+            coord.submit(Request { id: submitted, rows: vec![xs[0].clone()] })?;
             submitted += 1;
         }
-        // Periodically drain to measure per-request latency.
-        if submitted % 64 == 0 || submitted as usize >= n {
-            for resp in coord.drain() {
-                let lat = submit_times[resp.id as usize].elapsed();
-                latencies_us.push(lat.as_secs_f64() * 1e6);
-            }
+        if rng.next_u64() % 4 == 0 {
+            std::thread::sleep(Duration::from_micros(200));
         }
     }
-    for resp in coord.drain() {
-        let lat = submit_times[resp.id as usize].elapsed();
-        latencies_us.push(lat.as_secs_f64() * 1e6);
-    }
+    let responses = coord.drain()?;
     let wall = t_start.elapsed();
 
-    latencies_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| latencies_us[(latencies_us.len() as f64 * p) as usize];
     println!(
         "served {} responses in {:.1} ms → {:.0} req/s",
-        latencies_us.len(),
+        responses.len(),
         wall.as_secs_f64() * 1e3,
-        latencies_us.len() as f64 / wall.as_secs_f64()
+        responses.len() as f64 / wall.as_secs_f64()
     );
+    let pct = |q: f64| coord.metrics.latency_quantile_ns(q).unwrap_or(0) as f64 / 1e3;
     println!(
-        "latency µs: p50={:.0} p90={:.0} p99={:.0} max={:.0}",
+        "latency µs: p50={:.0} p90={:.0} p99={:.0}",
         pct(0.50),
         pct(0.90),
-        pct(0.99),
-        latencies_us.last().unwrap()
+        pct(0.99)
     );
     println!("{}", coord.metrics.report());
     coord.shutdown();

@@ -1,0 +1,116 @@
+//! Vendored, API-compatible subset of the `anyhow` crate.
+//!
+//! The build is fully offline (no crates.io registry in the image), so
+//! the error plumbing the repo would normally take from `anyhow` is
+//! reproduced here: a string-backed [`Error`], the [`Result`] alias, a
+//! blanket `From<E: std::error::Error>` conversion for `?`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Call sites are byte-for-byte
+//! what they would be against the real crate (`use crate::anyhow;` /
+//! `use softsimd::anyhow;` instead of an extern dependency), so swapping
+//! the real `anyhow` back in is a one-line Cargo.toml change.
+
+/// A string-backed error value (the shim keeps the rendered message
+/// only; the real crate would keep the source chain).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg(m: impl std::fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Deliberately NOT `impl std::error::Error for Error`: that keeps the
+// blanket conversion below coherent, exactly like the real crate.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` with the usual defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __softsimd_anyhow {
+    ($($arg:tt)*) => {
+        $crate::anyhow::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __softsimd_bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow::Error::msg(
+            ::std::format!($($arg)*),
+        ))
+    };
+}
+
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __softsimd_ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow::Error::msg(
+                ::std::format!($($arg)*),
+            ));
+        }
+    };
+}
+
+pub use crate::__softsimd_anyhow as anyhow;
+pub use crate::__softsimd_bail as bail;
+pub use crate::__softsimd_ensure as ensure;
+
+#[cfg(test)]
+mod tests {
+    use super::Error;
+    use crate::anyhow;
+
+    fn parse(s: &str) -> anyhow::Result<u64> {
+        anyhow::ensure!(!s.is_empty(), "empty input");
+        if s == "boom" {
+            anyhow::bail!("refused: {s}");
+        }
+        Ok(s.parse()?) // From<ParseIntError> via the blanket impl
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("17").unwrap(), 17);
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().contains("invalid digit"), "{e}");
+    }
+
+    #[test]
+    fn macros_render_messages() {
+        assert_eq!(parse("").unwrap_err().to_string(), "empty input");
+        assert_eq!(parse("boom").unwrap_err().to_string(), "refused: boom");
+        let e = anyhow::anyhow!("v={}", 3);
+        assert_eq!(format!("{e:#}"), "v=3");
+        assert_eq!(format!("{e:?}"), "v=3");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

@@ -33,7 +33,7 @@ pub struct SimdFormat {
 
 /// Precomputed per-format mask tables, indexed by sub-word width.
 /// Computed at compile time — the SWAR hot path must not rebuild masks
-/// (EXPERIMENTS.md §Perf).
+/// (DESIGN.md §9).
 const fn tile(pattern: u64, bits: u32) -> u64 {
     let mut out = 0u64;
     let mut i = 0;

@@ -1,24 +1,42 @@
 //! Dynamic batching: group inference requests into packed batches.
 //!
 //! Soft SIMD packs the batch dimension into sub-words, so the natural
-//! batch quantum is a multiple of the lane count (6 at 8-bit). The
-//! batcher accumulates requests until it can fill `target_rows` rows or
-//! a flush is forced (deadline/queue drain) — the classic
+//! batch quantum is a multiple of the lane count (6 at 8-bit) — the
+//! engine pads the remainder with zero rows (DESIGN.md §8). The batcher
+//! accumulates requests until it can fill `target_rows` rows or a flush
+//! is forced; starvation is prevented by the coordinator's deadline
+//! thread, which drives [`Batcher::tick`] at a fixed period so
+//! stragglers flush without an explicit `drain()` — the classic
 //! latency/throughput dial of serving systems.
 
+use std::time::Instant;
+
 use super::server::Request;
+
+/// A request stamped with its arrival time (for latency percentiles).
+#[derive(Debug)]
+pub struct TrackedRequest {
+    pub req: Request,
+    pub submitted_at: Instant,
+}
+
+impl TrackedRequest {
+    pub fn now(req: Request) -> Self {
+        TrackedRequest { req, submitted_at: Instant::now() }
+    }
+}
 
 /// A formed batch: requests plus the row span each owns.
 #[derive(Debug)]
 pub struct Batch {
-    pub requests: Vec<Request>,
+    pub entries: Vec<TrackedRequest>,
     pub rows: usize,
 }
 
 /// Row-count batcher.
 #[derive(Debug)]
 pub struct Batcher {
-    pending: Vec<Request>,
+    pending: Vec<TrackedRequest>,
     pending_rows: usize,
     pub target_rows: usize,
     pub max_wait_polls: u32,
@@ -30,8 +48,8 @@ impl Batcher {
         Batcher {
             pending: vec![],
             pending_rows: 0,
-            target_rows,
-            max_wait_polls,
+            target_rows: target_rows.max(1),
+            max_wait_polls: max_wait_polls.max(1),
             idle_polls: 0,
         }
     }
@@ -41,14 +59,23 @@ impl Batcher {
     }
 
     /// Offer a request; returns a formed batch when the target fills.
-    pub fn push(&mut self, req: Request) -> Option<Batch> {
-        self.pending_rows += req.rows.len();
-        self.pending.push(req);
+    pub fn push(&mut self, tr: TrackedRequest) -> Option<Batch> {
+        self.pending_rows += tr.req.rows.len();
+        self.pending.push(tr);
         self.idle_polls = 0;
         if self.pending_rows >= self.target_rows {
             return self.flush();
         }
         None
+    }
+
+    /// Put a formed batch back (dispatch failed); it will flush again on
+    /// the next tick or drain rather than being dropped.
+    pub fn restore(&mut self, batch: Batch) {
+        self.pending_rows += batch.rows;
+        let mut entries = batch.entries;
+        entries.append(&mut self.pending);
+        self.pending = entries;
     }
 
     /// Poll tick with no arrivals; flushes after `max_wait_polls` idle
@@ -71,9 +98,9 @@ impl Batcher {
             return None;
         }
         self.idle_polls = 0;
-        let requests = std::mem::take(&mut self.pending);
+        let entries = std::mem::take(&mut self.pending);
         let rows = std::mem::take(&mut self.pending_rows);
-        Some(Batch { requests, rows })
+        Some(Batch { entries, rows })
     }
 }
 
@@ -81,8 +108,8 @@ impl Batcher {
 mod tests {
     use super::*;
 
-    fn req(id: u64, rows: usize) -> Request {
-        Request { id, rows: vec![vec![0i64; 4]; rows] }
+    fn req(id: u64, rows: usize) -> TrackedRequest {
+        TrackedRequest::now(Request { id, rows: vec![vec![0i64; 4]; rows] })
     }
 
     #[test]
@@ -92,7 +119,7 @@ mod tests {
         assert!(b.push(req(2, 2)).is_none());
         let batch = b.push(req(3, 2)).expect("target reached");
         assert_eq!(batch.rows, 6);
-        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.entries.len(), 3);
         assert_eq!(b.pending_rows(), 0);
     }
 
@@ -118,5 +145,17 @@ mod tests {
         let mut b = Batcher::new(4, 1);
         assert!(b.tick().is_none());
         assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn restore_requeues_without_loss() {
+        let mut b = Batcher::new(4, 2);
+        let batch = b.push(req(1, 5)).expect("flush");
+        assert!(b.push(req(2, 1)).is_none());
+        b.restore(batch);
+        assert_eq!(b.pending_rows(), 6);
+        let again = b.flush().expect("restored rows flush");
+        assert_eq!(again.rows, 6);
+        assert_eq!(again.entries[0].req.id, 1, "restored batch goes first");
     }
 }

@@ -62,6 +62,15 @@ impl CostTable {
     pub fn energy_pj(&self, s1_cycles: u64, fmt: SimdFormat, s2_passes: u64) -> f64 {
         s1_cycles as f64 * self.s1_pj(fmt) + s2_passes as f64 * self.s2_pass_pj
     }
+
+    /// Energy of one engine run (the worker hot path's single call).
+    pub fn batch_energy_pj(
+        &self,
+        stats: &crate::coordinator::engine::EngineStats,
+        fmt: SimdFormat,
+    ) -> f64 {
+        self.energy_pj(stats.s1_cycles, fmt, stats.s2_passes)
+    }
 }
 
 #[cfg(test)]

@@ -4,8 +4,11 @@
 
 use std::time::Instant;
 
+use crate::anyhow;
+
 use super::cost::CostTable;
-use super::server::{Coordinator, Request};
+use super::model::CompiledModel;
+use super::server::{Coordinator, Request, ServeConfig};
 use crate::nn::exec::argmax_class;
 use crate::workload::synth::Digits;
 
@@ -24,15 +27,16 @@ pub fn serve_demo(n: usize) -> anyhow::Result<()> {
         cost.area_um2,
         cost.s1_pj(crate::bits::format::SimdFormat::new(8))
     );
+    let model = CompiledModel::compile(layers, 8, 16);
     let digits = Digits::standard();
     let (xs, ys) = digits.sample(n, 0.3, 0x5E21E);
 
-    let mut coord = Coordinator::start(layers, 8, 16, 4, 12, cost);
+    let mut coord = Coordinator::start(model, ServeConfig::new(4, 12), cost);
     let t0 = Instant::now();
     for (id, row) in xs.iter().enumerate() {
-        coord.submit(Request { id: id as u64, rows: vec![row.clone()] });
+        coord.submit(Request { id: id as u64, rows: vec![row.clone()] })?;
     }
-    let responses = coord.drain();
+    let responses = coord.drain()?;
     let wall = t0.elapsed();
 
     let mut correct = 0;

@@ -6,14 +6,21 @@
 //! every sample's activation `x[m][k]` for a fixed `k` shares the same
 //! weight multiplier `w[k][n]`, which is exactly the "one multiplier,
 //! several multiplicands" pattern of Section III-B.
+//!
+//! The engine owns no weights and compiles no plans: it executes a
+//! shared immutable [`CompiledModel`] (DESIGN.md §8). Batches are padded
+//! with zero rows up to the lane multiple (6 at 8-bit) so every packed
+//! word runs full; pad rows are dropped before returning and tallied in
+//! [`EngineStats::pad_rows`].
 
-use crate::bits::format::SimdFormat;
+use std::sync::Arc;
+
 use crate::bits::pack::{pack_stream, unpack_stream};
 use crate::bits::swar::swar_add;
-use crate::csd::schedule::MulPlan;
-use crate::nn::weights::QuantLayer;
 use crate::pipeline::stage1::Stage1;
-use crate::pipeline::stage2::{repack_cycles, repack_stream};
+use crate::pipeline::stage2::{repack_cycles_exact, repack_stream};
+
+use super::model::CompiledModel;
 
 /// Cycle/energy tallies of one engine run.
 #[derive(Debug, Clone, Copy, Default)]
@@ -22,80 +29,104 @@ pub struct EngineStats {
     pub s2_passes: u64,
     pub acc_adds: u64,
     pub subword_mults: u64,
+    /// Zero rows appended to fill the last packed word of the batch.
+    pub pad_rows: u64,
 }
 
-/// A packed-execution engine bound to one PE.
+/// A packed-execution engine bound to one PE, sharing one compiled model.
 pub struct PackedMlpEngine {
-    pub in_bits: u32,
-    pub acc_bits: u32,
-    /// Per-layer, per-(k,n) multiply plans, precompiled.
-    plans: Vec<Vec<Vec<MulPlan>>>,
-    layers: Vec<QuantLayer>,
+    model: Arc<CompiledModel>,
 }
 
 impl PackedMlpEngine {
-    pub fn new(layers: Vec<QuantLayer>, in_bits: u32, acc_bits: u32) -> Self {
-        let plans = crate::nn::exec::precompute_plans(&layers);
-        PackedMlpEngine { in_bits, acc_bits, plans, layers }
+    /// Bind a PE to a shared compiled model. Cheap: no plan compilation
+    /// and no weight copies happen here.
+    pub fn new(model: Arc<CompiledModel>) -> Self {
+        PackedMlpEngine { model }
     }
 
-    pub fn layers(&self) -> &[QuantLayer] {
-        &self.layers
+    pub fn model(&self) -> &CompiledModel {
+        &self.model
     }
 
     /// Forward a batch (rows of `Q1.(in_bits-1)` raws) through all
     /// layers using packed arithmetic; returns final accumulators
     /// (`Q1.(acc_bits-1)`) per row, plus tallies.
     pub fn forward_batch(&self, batch: &[Vec<i64>]) -> (Vec<Vec<i64>>, EngineStats) {
+        let model = &*self.model;
         let m = batch.len();
-        let in_fmt = SimdFormat::new(self.in_bits);
-        let acc_fmt = SimdFormat::new(self.acc_bits);
-        let mut stats = EngineStats::default();
-        // h[k][m] activations, column-major for packing across batch.
+        assert!(m > 0, "empty batch");
+        let in_fmt = model.in_fmt();
+        let acc_fmt = model.acc_fmt();
+        let in_bits = model.in_bits();
+        let acc_bits = model.acc_bits();
+        let lanes = model.lanes();
+        // Pad the batch dimension to the lane multiple: packed words run
+        // full and the accumulator stream has no partial final word.
+        let mp = m.div_ceil(lanes) * lanes;
+        let mut stats = EngineStats {
+            pad_rows: (mp - m) as u64,
+            ..EngineStats::default()
+        };
+        let layers = model.layers();
+        // h[k][mp] activations, column-major for packing across batch.
         let mut h: Vec<Vec<i64>> = (0..batch[0].len())
-            .map(|k| batch.iter().map(|row| row[k]).collect())
+            .map(|k| {
+                let mut col: Vec<i64> = batch.iter().map(|row| row[k]).collect();
+                col.resize(mp, 0);
+                col
+            })
             .collect();
         let mut s1 = Stage1::new(in_fmt);
-        for (li, layer) in self.layers.iter().enumerate() {
+        for (li, layer) in layers.iter().enumerate() {
             assert_eq!(h.len(), layer.k, "layer {li} input width");
             // Pack each activation column across the batch.
             let packed_cols: Vec<Vec<u64>> =
                 h.iter().map(|col| pack_stream(col, in_fmt)).collect();
-            let acc_words_per_n = (m * self.acc_bits as usize).div_ceil(48);
+            let acc_words_per_n = (mp * acc_bits as usize).div_ceil(48);
             // Fast path: the accumulate format is exactly double the
             // input format (8→16 here) — use the SWAR widen instead of
-            // the generic stream repack (EXPERIMENTS.md §Perf).
-            let doubling = self.acc_bits == 2 * self.in_bits;
+            // the generic stream repack (DESIGN.md §9).
+            let doubling = acc_bits == 2 * in_bits;
             let mut out_cols: Vec<Vec<i64>> = Vec::with_capacity(layer.n);
             let mut acc16 = vec![0u64; acc_words_per_n];
             for n in 0..layer.n {
                 acc16.iter_mut().for_each(|w| *w = 0);
                 for k in 0..layer.k {
-                    let plan = &self.plans[li][k][n];
+                    let plan = model.plan(li, k, n);
                     if plan.ops.is_empty() {
                         continue; // zero weight: zero-skipped entirely
                     }
-                    s1.set_fmt(in_fmt);
                     if doubling {
                         for (wi, &word) in packed_cols[k].iter().enumerate() {
-                            s1.load_x(word);
-                            let prod = s1.run_plan(plan);
+                            let prod = s1.run_plan_on(word, plan);
                             let (lo, hi) = crate::pipeline::stage2::widen_double(prod, in_fmt);
+                            // One accumulate add and one widen pass per
+                            // produced output word — the hi word exists
+                            // only when the accumulator stream extends
+                            // that far (always, once the batch is padded
+                            // to the lane multiple).
                             acc16[2 * wi] = swar_add(acc16[2 * wi], lo, acc_fmt);
+                            stats.acc_adds += 1;
+                            stats.s2_passes += 1;
                             if 2 * wi + 1 < acc16.len() {
                                 acc16[2 * wi + 1] =
                                     swar_add(acc16[2 * wi + 1], hi, acc_fmt);
+                                stats.acc_adds += 1;
+                                stats.s2_passes += 1;
                             }
-                            stats.acc_adds += 2;
                         }
                     } else {
-                        // Generic path through the canonical stream repack.
+                        // Generic path through the canonical stream
+                        // repack; Stage-2 passes are charged for the
+                        // sub-words actually converted, chained hops
+                        // included.
                         let mut products = Vec::with_capacity(packed_cols[k].len());
                         for &word in &packed_cols[k] {
-                            s1.load_x(word);
-                            products.push(s1.run_plan(plan));
+                            products.push(s1.run_plan_on(word, plan));
                         }
-                        let wide = repack_stream(&products, in_fmt, acc_fmt, m);
+                        let wide = repack_stream(&products, in_fmt, acc_fmt, mp);
+                        stats.s2_passes += repack_cycles_exact(mp, in_fmt, acc_fmt);
                         for (w, &p) in acc16.iter_mut().zip(wide.iter()) {
                             *w = swar_add(*w, p, acc_fmt);
                             stats.acc_adds += 1;
@@ -105,22 +136,21 @@ impl PackedMlpEngine {
                         plan.cycles() as u64 * packed_cols[k].len() as u64;
                     stats.subword_mults +=
                         in_fmt.lanes() as u64 * packed_cols[k].len() as u64;
-                    stats.s2_passes += repack_cycles(packed_cols[k].len(), in_fmt, acc_fmt);
                 }
-                out_cols.push(unpack_stream(&acc16, acc_fmt, m));
+                out_cols.push(unpack_stream(&acc16, acc_fmt, mp));
             }
-            if li + 1 < self.layers.len() {
+            if li + 1 < layers.len() {
                 // ReLU + requantize (activation unit, scalar glue).
                 h = out_cols
                     .iter()
                     .map(|col| {
                         col.iter()
-                            .map(|&v| v.max(0) >> (self.acc_bits - self.in_bits))
+                            .map(|&v| v.max(0) >> (acc_bits - in_bits))
                             .collect()
                     })
                     .collect();
             } else {
-                // Transpose back to row-major.
+                // Transpose back to row-major, dropping the pad rows.
                 let out: Vec<Vec<i64>> = (0..m)
                     .map(|b| out_cols.iter().map(|col| col[b]).collect())
                     .collect();
@@ -135,6 +165,7 @@ impl PackedMlpEngine {
 mod tests {
     use super::*;
     use crate::nn::exec::mlp_forward_row;
+    use crate::nn::weights::QuantLayer;
     use crate::workload::synth::XorShift64;
 
     fn random_layers(rng: &mut XorShift64) -> Vec<QuantLayer> {
@@ -153,25 +184,31 @@ mod tests {
     fn packed_engine_matches_scalar_reference() {
         let mut rng = XorShift64::new(0xE8E8);
         let layers = random_layers(&mut rng);
-        let engine = PackedMlpEngine::new(layers.clone(), 8, 16);
+        let model = CompiledModel::compile(layers.clone(), 8, 16);
+        let engine = PackedMlpEngine::new(model);
         for batch_size in [1usize, 3, 6, 16, 17] {
             let batch: Vec<Vec<i64>> = (0..batch_size)
                 .map(|_| (0..10).map(|_| rng.q_raw(8)).collect())
                 .collect();
             let (got, stats) = engine.forward_batch(&batch);
+            assert_eq!(got.len(), batch_size, "pad rows must be dropped");
             for (b, row) in batch.iter().enumerate() {
                 let want = mlp_forward_row(row, &layers, 8, 16);
                 assert_eq!(got[b], want, "batch row {b} (size {batch_size})");
             }
             assert!(stats.s1_cycles > 0);
             assert!(stats.s2_passes > 0);
+            assert_eq!(
+                stats.pad_rows as usize,
+                batch_size.div_ceil(6) * 6 - batch_size
+            );
         }
     }
 
     #[test]
     fn zero_weights_cost_nothing() {
         let layers = vec![QuantLayer::new(vec![vec![0, 64], vec![0, -32]], 8)];
-        let engine = PackedMlpEngine::new(layers, 8, 16);
+        let engine = PackedMlpEngine::new(CompiledModel::compile(layers, 8, 16));
         let batch = vec![vec![100i64, -50], vec![25, 77]];
         let (_, stats) = engine.forward_batch(&batch);
         // Column n=0 is all-zero weights: only n=1's two weights run.
@@ -186,7 +223,7 @@ mod tests {
     fn stats_scale_with_batch_words() {
         let mut rng = XorShift64::new(0x57A7);
         let layers = random_layers(&mut rng);
-        let engine = PackedMlpEngine::new(layers, 8, 16);
+        let engine = PackedMlpEngine::new(CompiledModel::compile(layers, 8, 16));
         let mk_batch = |n: usize, rng: &mut XorShift64| -> Vec<Vec<i64>> {
             (0..n).map(|_| (0..10).map(|_| rng.q_raw(8)).collect()).collect()
         };
@@ -194,5 +231,25 @@ mod tests {
         let (_, s12) = engine.forward_batch(&mk_batch(12, &mut rng));
         // 6 rows = 1 packed word per column; 12 rows = 2 words.
         assert_eq!(s12.s1_cycles, 2 * s6.s1_cycles);
+        assert_eq!(s12.s2_passes, 2 * s6.s2_passes);
+        assert_eq!(s12.acc_adds, 2 * s6.acc_adds);
+    }
+
+    #[test]
+    fn stats_count_produced_acc_words_on_doubling_path() {
+        // 1-layer 1×1 model, weight 64 (1-cycle plan): a 6-row batch
+        // packs into one input word → two 16-bit accumulator words →
+        // exactly 2 widen passes and 2 accumulate adds.
+        let layers = vec![QuantLayer::new(vec![vec![64]], 8)];
+        let engine = PackedMlpEngine::new(CompiledModel::compile(layers, 8, 16));
+        let batch: Vec<Vec<i64>> = (0..6).map(|i| vec![i as i64 * 10 - 25]).collect();
+        let (_, stats) = engine.forward_batch(&batch);
+        assert_eq!(stats.acc_adds, 2);
+        assert_eq!(stats.s2_passes, 2);
+        // A 3-row batch pads to the same single full word: same tallies.
+        let (_, s3) = engine.forward_batch(&batch[..3].to_vec());
+        assert_eq!(s3.acc_adds, 2);
+        assert_eq!(s3.s2_passes, 2);
+        assert_eq!(s3.pad_rows, 3);
     }
 }

@@ -1,13 +1,21 @@
-//! Serving metrics.
+//! Serving metrics: lock-free counters plus a log₂-bucketed latency
+//! histogram, updated by PE workers and read by anyone at any time.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+const LAT_BUCKETS: usize = 64;
 
 /// Shared counters (lock-free; updated by PE workers).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub rows: AtomicU64,
+    /// Zero rows added by lane padding (not counted in `rows`).
+    pub pad_rows: AtomicU64,
+    /// Rows dropped because no live worker could take them.
+    pub dropped_rows: AtomicU64,
     pub subword_mults: AtomicU64,
     pub s1_cycles: AtomicU64,
     pub s2_passes: AtomicU64,
@@ -15,17 +23,117 @@ pub struct Metrics {
     pub energy_fj: AtomicU64,
     /// Wall time spent in PE compute, nanoseconds.
     pub compute_ns: AtomicU64,
+    /// Request latency histogram: bucket `i` counts latencies in
+    /// `[2^(i-1), 2^i)` nanoseconds (bucket 0: `< 1 ns`).
+    lat_hist: [AtomicU64; LAT_BUCKETS],
+    lat_count: AtomicU64,
+    lat_sum_ns: AtomicU64,
+    /// Serving-window bounds, nanoseconds since `t0` (for rows/s).
+    first_submit_ns: AtomicU64,
+    last_done_ns: AtomicU64,
+    t0: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            pad_rows: AtomicU64::new(0),
+            dropped_rows: AtomicU64::new(0),
+            subword_mults: AtomicU64::new(0),
+            s1_cycles: AtomicU64::new(0),
+            s2_passes: AtomicU64::new(0),
+            energy_fj: AtomicU64::new(0),
+            compute_ns: AtomicU64::new(0),
+            lat_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            lat_count: AtomicU64::new(0),
+            lat_sum_ns: AtomicU64::new(0),
+            first_submit_ns: AtomicU64::new(u64::MAX),
+            last_done_ns: AtomicU64::new(0),
+            t0: Instant::now(),
+        }
+    }
 }
 
 impl Metrics {
-    pub fn add_batch(&self, rows: u64, stats: crate::coordinator::engine::EngineStats, pj: f64, ns: u64) {
+    fn now_ns(&self) -> u64 {
+        self.t0.elapsed().as_nanos() as u64
+    }
+
+    /// Called by the coordinator on every accepted request.
+    pub fn note_submit(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.first_submit_ns
+            .fetch_min(self.now_ns(), Ordering::Relaxed);
+    }
+
+    /// Called by a PE worker after completing a batch.
+    pub fn add_batch(
+        &self,
+        rows: u64,
+        stats: crate::coordinator::engine::EngineStats,
+        pj: f64,
+        ns: u64,
+    ) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.rows.fetch_add(rows, Ordering::Relaxed);
-        self.subword_mults.fetch_add(stats.subword_mults, Ordering::Relaxed);
+        self.pad_rows.fetch_add(stats.pad_rows, Ordering::Relaxed);
+        self.subword_mults
+            .fetch_add(stats.subword_mults, Ordering::Relaxed);
         self.s1_cycles.fetch_add(stats.s1_cycles, Ordering::Relaxed);
         self.s2_passes.fetch_add(stats.s2_passes, Ordering::Relaxed);
-        self.energy_fj.fetch_add((pj * 1000.0) as u64, Ordering::Relaxed);
+        self.energy_fj
+            .fetch_add((pj * 1000.0) as u64, Ordering::Relaxed);
         self.compute_ns.fetch_add(ns, Ordering::Relaxed);
+        self.last_done_ns.fetch_max(self.now_ns(), Ordering::Relaxed);
+    }
+
+    /// Record one request's submit→complete latency.
+    pub fn observe_latency_ns(&self, ns: u64) {
+        let bucket = (64 - ns.leading_zeros() as usize).min(LAT_BUCKETS - 1);
+        self.lat_hist[bucket].fetch_add(1, Ordering::Relaxed);
+        self.lat_count.fetch_add(1, Ordering::Relaxed);
+        self.lat_sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Latency quantile estimate in nanoseconds (upper bucket bound);
+    /// `None` until at least one latency is recorded. `q` in [0, 1].
+    pub fn latency_quantile_ns(&self, q: f64) -> Option<u64> {
+        let count = self.lat_count.load(Ordering::Relaxed);
+        if count == 0 {
+            return None;
+        }
+        let target = ((q.clamp(0.0, 1.0) * count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.lat_hist.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Some(1u64 << i.min(63));
+            }
+        }
+        Some(u64::MAX)
+    }
+
+    pub fn mean_latency_ns(&self) -> Option<f64> {
+        let count = self.lat_count.load(Ordering::Relaxed);
+        if count == 0 {
+            return None;
+        }
+        Some(self.lat_sum_ns.load(Ordering::Relaxed) as f64 / count as f64)
+    }
+
+    /// Served rows per second over the first-submit → last-completion
+    /// window (0.0 before any work completes).
+    pub fn rows_per_sec(&self) -> f64 {
+        let first = self.first_submit_ns.load(Ordering::Relaxed);
+        let last = self.last_done_ns.load(Ordering::Relaxed);
+        let rows = self.rows.load(Ordering::Relaxed);
+        if first == u64::MAX || last <= first || rows == 0 {
+            return 0.0;
+        }
+        rows as f64 / ((last - first) as f64 / 1e9)
     }
 
     pub fn report(&self) -> String {
@@ -34,19 +142,28 @@ impl Metrics {
         let cycles = self.s1_cycles.load(Ordering::Relaxed);
         let pj = self.energy_fj.load(Ordering::Relaxed) as f64 / 1000.0;
         let ns = self.compute_ns.load(Ordering::Relaxed).max(1);
+        let p50 = self.latency_quantile_ns(0.50).unwrap_or(0) as f64 / 1e3;
+        let p99 = self.latency_quantile_ns(0.99).unwrap_or(0) as f64 / 1e3;
         format!(
-            "requests={} batches={} rows={} subword_mults={} s1_cycles={} \
-             s2_passes={} sim_energy={:.2} nJ mean_pJ/mult={:.3} \
-             host_throughput={:.1} Mmult/s",
+            "requests={} batches={} rows={} pad_rows={} dropped_rows={} \
+             subword_mults={} s1_cycles={} s2_passes={} \
+             sim_energy={:.2} nJ mean_pJ/mult={:.3} \
+             host_throughput={:.1} Mmult/s rows/s={:.0} \
+             latency_p50={:.0}us latency_p99={:.0}us",
             self.requests.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             rows,
+            self.pad_rows.load(Ordering::Relaxed),
+            self.dropped_rows.load(Ordering::Relaxed),
             mults,
             cycles,
             self.s2_passes.load(Ordering::Relaxed),
             pj / 1000.0,
             if mults > 0 { pj / mults as f64 } else { 0.0 },
             mults as f64 / (ns as f64 / 1000.0),
+            self.rows_per_sec(),
+            p50,
+            p99,
         )
     }
 }
@@ -63,11 +180,37 @@ mod tests {
             s2_passes: 2,
             acc_adds: 5,
             subword_mults: 60,
+            pad_rows: 1,
         };
         m.add_batch(6, stats, 1.5, 100);
         m.add_batch(6, stats, 1.5, 100);
         assert_eq!(m.rows.load(Ordering::Relaxed), 12);
+        assert_eq!(m.pad_rows.load(Ordering::Relaxed), 2);
         assert_eq!(m.subword_mults.load(Ordering::Relaxed), 120);
         assert!(m.report().contains("rows=12"));
+    }
+
+    #[test]
+    fn latency_quantiles_order() {
+        let m = Metrics::default();
+        assert!(m.latency_quantile_ns(0.5).is_none());
+        for ns in [100u64, 200, 400, 800, 100_000] {
+            m.observe_latency_ns(ns);
+        }
+        let p50 = m.latency_quantile_ns(0.50).unwrap();
+        let p99 = m.latency_quantile_ns(0.99).unwrap();
+        assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+        assert!(p99 >= 100_000, "p99 {p99} below max sample");
+        assert!(m.mean_latency_ns().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn rows_per_sec_needs_window() {
+        let m = Metrics::default();
+        assert_eq!(m.rows_per_sec(), 0.0);
+        m.note_submit();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        m.add_batch(10, Default::default(), 0.0, 50);
+        assert!(m.rows_per_sec() > 0.0);
     }
 }

@@ -9,18 +9,28 @@
 //! "multiplier value with several multiplicands"), products are
 //! Stage-2-repacked 8→16 and accumulated with boundary-killed adds.
 //!
+//! The serving engine is built around one immutable [`CompiledModel`]
+//! (weights + precompiled CSD multiply plans) shared via `Arc` across
+//! every PE worker; dispatch is load-aware over bounded per-worker
+//! queues, and a deadline thread flushes straggler batches (DESIGN.md
+//! §8).
+//!
 //! Offline-image note: the std thread + channel fabric stands in for
-//! tokio (DESIGN.md §2); the public API is synchronous `submit`/`join`.
+//! tokio (DESIGN.md §8); the public API is synchronous `submit`/`drain`.
 
 pub mod batcher;
 pub mod cost;
 pub mod demo;
 pub mod engine;
 pub mod metrics;
+pub mod model;
 pub mod server;
 
-pub use batcher::{Batch, Batcher};
+pub use batcher::{Batch, Batcher, TrackedRequest};
 pub use cost::CostTable;
 pub use engine::PackedMlpEngine;
 pub use metrics::Metrics;
-pub use server::{Coordinator, Request, Response};
+pub use model::CompiledModel;
+pub use server::{
+    Coordinator, DispatchPolicy, Request, Response, ServeConfig, ServeError,
+};

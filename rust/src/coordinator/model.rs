@@ -1,0 +1,149 @@
+//! The immutable, shareable serving model: weights + precompiled CSD
+//! multiply plans + packing metadata, built **once** and handed to every
+//! PE worker behind an `Arc` (DESIGN.md §8).
+//!
+//! This is the schedule-amortization idea of the paper's control path
+//! (the CSD plan is a property of the *multiplier value*, not of the
+//! operand stream): compiling the per-weight shift-add programs is the
+//! expensive, quantization-dependent step, so it must happen off the
+//! per-request critical path and exactly once per deployed model — not
+//! once per worker, as the original demo loop did.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::bits::format::SimdFormat;
+use crate::csd::schedule::MulPlan;
+use crate::nn::weights::QuantLayer;
+
+/// Process-wide count of [`CompiledModel::compile`] runs. Exists so
+/// tests can assert that plan compilation happens exactly once per
+/// model no matter how many PE workers serve it.
+pub static PLAN_COMPILATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// An immutable compiled model: quantized layers plus every per-weight
+/// [`MulPlan`], shared across all PE workers via [`Arc`].
+#[derive(Debug)]
+pub struct CompiledModel {
+    layers: Vec<QuantLayer>,
+    /// `plans[layer][k][n]`, precompiled for every weight.
+    plans: Vec<Vec<Vec<MulPlan>>>,
+    in_bits: u32,
+    acc_bits: u32,
+    /// Total Stage-1 cycles of one forward pass per packed word column
+    /// (sum of plan cycles over all weights) — scheduling metadata for
+    /// load estimates.
+    cycles_per_word: u64,
+    /// Count of zero weights (zero-skipped at execution).
+    zero_weights: u64,
+}
+
+impl CompiledModel {
+    /// Compile all CSD multiply plans for `layers`. Call once per model;
+    /// clone the returned [`Arc`], never the model.
+    pub fn compile(layers: Vec<QuantLayer>, in_bits: u32, acc_bits: u32) -> Arc<CompiledModel> {
+        assert!(!layers.is_empty(), "model needs at least one layer");
+        // Validate the format pair up front so workers never do.
+        let _ = SimdFormat::new(in_bits);
+        let _ = SimdFormat::new(acc_bits);
+        PLAN_COMPILATIONS.fetch_add(1, Ordering::SeqCst);
+        let plans = crate::nn::exec::precompute_plans(&layers);
+        let mut cycles_per_word = 0u64;
+        let mut zero_weights = 0u64;
+        for layer_plans in &plans {
+            for row in layer_plans {
+                for plan in row {
+                    if plan.ops.is_empty() {
+                        zero_weights += 1;
+                    } else {
+                        cycles_per_word += plan.cycles() as u64;
+                    }
+                }
+            }
+        }
+        Arc::new(CompiledModel {
+            layers,
+            plans,
+            in_bits,
+            acc_bits,
+            cycles_per_word,
+            zero_weights,
+        })
+    }
+
+    pub fn layers(&self) -> &[QuantLayer] {
+        &self.layers
+    }
+
+    /// The precompiled plan for layer `li`, weight `(k, n)`.
+    #[inline]
+    pub fn plan(&self, li: usize, k: usize, n: usize) -> &MulPlan {
+        &self.plans[li][k][n]
+    }
+
+    pub fn in_bits(&self) -> u32 {
+        self.in_bits
+    }
+
+    pub fn acc_bits(&self) -> u32 {
+        self.acc_bits
+    }
+
+    pub fn in_fmt(&self) -> SimdFormat {
+        SimdFormat::new(self.in_bits)
+    }
+
+    pub fn acc_fmt(&self) -> SimdFormat {
+        SimdFormat::new(self.acc_bits)
+    }
+
+    /// Activation width of the first layer (row length of a request).
+    pub fn input_width(&self) -> usize {
+        self.layers[0].k
+    }
+
+    /// Sub-words per packed activation word (6 at 8-bit).
+    pub fn lanes(&self) -> usize {
+        self.in_fmt().lanes() as usize
+    }
+
+    /// Stage-1 cycles one packed word column costs across the whole
+    /// forward pass (load-estimate metadata).
+    pub fn cycles_per_word(&self) -> u64 {
+        self.cycles_per_word
+    }
+
+    pub fn zero_weights(&self) -> u64 {
+        self.zero_weights
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layers() -> Vec<QuantLayer> {
+        vec![
+            QuantLayer::new(vec![vec![64, 0], vec![-32, 127]], 8),
+            QuantLayer::new(vec![vec![5], vec![-9]], 8),
+        ]
+    }
+
+    #[test]
+    fn compile_counts_and_metadata() {
+        let before = PLAN_COMPILATIONS.load(Ordering::SeqCst);
+        let m = CompiledModel::compile(layers(), 8, 16);
+        assert_eq!(PLAN_COMPILATIONS.load(Ordering::SeqCst), before + 1);
+        assert_eq!(m.input_width(), 2);
+        assert_eq!(m.lanes(), 6);
+        assert_eq!(m.zero_weights(), 1);
+        assert!(m.cycles_per_word() > 0);
+        assert_eq!(m.plan(0, 0, 0).ops.len(), m.layers()[0].plan(0, 0).ops.len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_empty_model() {
+        let _ = CompiledModel::compile(vec![], 8, 16);
+    }
+}

@@ -1,22 +1,28 @@
 //! The coordinator: request intake → dynamic batcher → PE worker pool.
 //!
-//! Leader thread owns the batcher; worker threads own one
-//! [`PackedMlpEngine`] each (the near-memory PEs). Channels carry formed
-//! batches out and scattered responses back — the same leader/worker
-//! shape a vLLM-style router uses, scaled to this paper's accelerator.
+//! Serving shape (DESIGN.md §8): the submitting thread and a deadline
+//! thread share the batcher and the router; each PE worker owns one
+//! [`PackedMlpEngine`] bound to the single shared [`CompiledModel`].
+//! Dispatch routes formed batches over *bounded* per-worker queues —
+//! least-outstanding-rows by default, round-robin for comparison — so a
+//! slow PE exerts backpressure instead of growing an unbounded mailbox.
+//! The deadline thread drives [`Batcher::tick`] so straggler requests
+//! flush without an explicit [`Coordinator::drain`]. Worker death is
+//! surfaced as [`ServeError`], never a panic in the coordinator.
 
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
+};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use super::batcher::{Batch, Batcher};
+use super::batcher::{Batch, Batcher, TrackedRequest};
 use super::cost::CostTable;
 use super::engine::PackedMlpEngine;
 use super::metrics::Metrics;
-use crate::bits::format::SimdFormat;
-use crate::nn::weights::QuantLayer;
+use super::model::CompiledModel;
 
 /// An inference request: rows of quantized activations.
 #[derive(Debug, Clone)]
@@ -32,95 +38,495 @@ pub struct Response {
     pub logits: Vec<Vec<i64>>,
 }
 
+/// How formed batches are routed to PE workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Rotate over live workers regardless of their backlog.
+    RoundRobin,
+    /// Send to the live worker with the fewest outstanding rows.
+    LeastLoaded,
+}
+
+/// Coordinator deployment knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Number of PE worker threads.
+    pub n_pes: usize,
+    /// Rows the batcher tries to fill before forming a batch.
+    pub target_rows: usize,
+    /// Bounded depth (in batches) of each worker's queue.
+    pub queue_depth: usize,
+    /// Straggler flush deadline: a pending sub-target batch is flushed
+    /// at most ~this long after its last arrival.
+    pub deadline: Duration,
+    pub policy: DispatchPolicy,
+}
+
+impl ServeConfig {
+    pub fn new(n_pes: usize, target_rows: usize) -> ServeConfig {
+        ServeConfig {
+            n_pes: n_pes.max(1),
+            target_rows: target_rows.max(1),
+            queue_depth: 2,
+            deadline: Duration::from_millis(2),
+            policy: DispatchPolicy::LeastLoaded,
+        }
+    }
+
+    pub fn policy(mut self, policy: DispatchPolicy) -> ServeConfig {
+        self.policy = policy;
+        self
+    }
+
+    pub fn deadline(mut self, deadline: Duration) -> ServeConfig {
+        self.deadline = deadline;
+        self
+    }
+
+    pub fn queue_depth(mut self, depth: usize) -> ServeConfig {
+        self.queue_depth = depth.max(1);
+        self
+    }
+}
+
+/// Serving failures surfaced to the caller (instead of the seed's
+/// `expect("worker alive")` panics).
+#[derive(Debug)]
+pub enum ServeError {
+    /// The request doesn't fit the model (wrong row width, no rows, or
+    /// out-of-range raw values); nothing was enqueued. Rejecting at
+    /// submit keeps a malformed request from panicking a PE worker.
+    InvalidRequest { id: u64, reason: String },
+    /// Every PE worker is dead; the offending rows were restored to the
+    /// batcher, not dropped. `recovered` carries any responses that
+    /// were still collected (empty on the submit path).
+    NoLiveWorkers { recovered: Vec<Response> },
+    /// One or more workers died holding dispatched work; `recovered`
+    /// carries every response the remaining workers still produced.
+    WorkerLost {
+        workers: Vec<usize>,
+        lost_rows: usize,
+        recovered: Vec<Response>,
+    },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::InvalidRequest { id, reason } => {
+                write!(f, "invalid request {id}: {reason}")
+            }
+            ServeError::NoLiveWorkers { recovered } => write!(
+                f,
+                "no live PE workers ({} responses recovered)",
+                recovered.len()
+            ),
+            ServeError::WorkerLost { workers, lost_rows, recovered } => write!(
+                f,
+                "PE worker(s) {workers:?} died holding {lost_rows} dispatched \
+                 rows ({} responses recovered)",
+                recovered.len()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 enum WorkerMsg {
     Work(Batch),
     Stop,
 }
 
+/// Leader-side view of one PE worker.
+struct WorkerPort {
+    tx: SyncSender<WorkerMsg>,
+    /// Rows dispatched to this worker and not yet completed.
+    outstanding_rows: Arc<AtomicUsize>,
+    /// Batches dispatched to this worker and not yet completed.
+    outstanding_batches: Arc<AtomicUsize>,
+    alive: bool,
+}
+
+/// Load-aware batch router over the worker ports.
+struct Router {
+    ports: Vec<WorkerPort>,
+    policy: DispatchPolicy,
+    next_rr: usize,
+}
+
+impl Router {
+    /// Candidate workers, best first, per the policy. Only live ports.
+    fn candidates(&mut self) -> Vec<usize> {
+        let live: Vec<usize> = (0..self.ports.len())
+            .filter(|&i| self.ports[i].alive)
+            .collect();
+        if live.is_empty() {
+            return live;
+        }
+        match self.policy {
+            DispatchPolicy::RoundRobin => {
+                let start = self.next_rr % live.len();
+                self.next_rr = self.next_rr.wrapping_add(1);
+                let mut order = Vec::with_capacity(live.len());
+                for off in 0..live.len() {
+                    order.push(live[(start + off) % live.len()]);
+                }
+                order
+            }
+            DispatchPolicy::LeastLoaded => {
+                let mut order = live;
+                order.sort_by_key(|&i| {
+                    self.ports[i].outstanding_rows.load(Ordering::Relaxed)
+                });
+                order
+            }
+        }
+    }
+
+    /// Route one batch. Tries every live worker without blocking; if all
+    /// bounded queues are full, blocks on the preferred worker
+    /// (backpressure). `Err(batch)` iff no live worker remains.
+    fn dispatch(&mut self, batch: Batch) -> Result<usize, Batch> {
+        let mut batch = batch;
+        loop {
+            let order = self.candidates();
+            if order.is_empty() {
+                return Err(batch);
+            }
+            // Non-blocking pass in preference order.
+            for &w in &order {
+                self.charge(w, &batch);
+                match self.ports[w].tx.try_send(WorkerMsg::Work(batch)) {
+                    Ok(()) => return Ok(w),
+                    Err(TrySendError::Full(msg)) => {
+                        batch = self.uncharge(w, msg);
+                    }
+                    Err(TrySendError::Disconnected(msg)) => {
+                        batch = self.uncharge(w, msg);
+                        self.ports[w].alive = false;
+                    }
+                }
+            }
+            // All live queues full: block on the preferred one.
+            let w = match self.candidates().first() {
+                Some(&w) => w,
+                None => return Err(batch),
+            };
+            self.charge(w, &batch);
+            match self.ports[w].tx.send(WorkerMsg::Work(batch)) {
+                Ok(()) => return Ok(w),
+                Err(std::sync::mpsc::SendError(msg)) => {
+                    batch = self.uncharge(w, msg);
+                    self.ports[w].alive = false;
+                    // Retry the remaining live workers.
+                }
+            }
+        }
+    }
+
+    fn charge(&self, w: usize, batch: &Batch) {
+        self.ports[w]
+            .outstanding_rows
+            .fetch_add(batch.rows, Ordering::Relaxed);
+        self.ports[w]
+            .outstanding_batches
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn uncharge(&self, w: usize, msg: WorkerMsg) -> Batch {
+        let batch = match msg {
+            WorkerMsg::Work(b) => b,
+            WorkerMsg::Stop => unreachable!("router only routes work"),
+        };
+        self.ports[w]
+            .outstanding_rows
+            .fetch_sub(batch.rows, Ordering::Relaxed);
+        self.ports[w]
+            .outstanding_batches
+            .fetch_sub(1, Ordering::Relaxed);
+        batch
+    }
+}
+
+/// State shared between the submit path, the deadline thread, and the
+/// PE workers.
+struct Shared {
+    batcher: Mutex<Batcher>,
+    router: Mutex<Router>,
+    /// Batches dispatched and not yet collected by the leader.
+    in_flight: AtomicUsize,
+    stop_deadline: AtomicBool,
+    metrics: Arc<Metrics>,
+}
+
+impl Shared {
+    /// Count and route one formed batch while still holding the batcher
+    /// lock. Holding the lock keeps the invariant that whenever the
+    /// batcher is observable, every formed batch is either counted in
+    /// `in_flight` or restored as pending — so `drain` can never slip
+    /// between "batch left the batcher" and "batch became in-flight".
+    /// Lock order is always batcher → router; never the reverse.
+    fn dispatch_locked(&self, batcher: &mut Batcher, batch: Batch) -> Result<(), ServeError> {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        let result = self.router.lock().unwrap().dispatch(batch);
+        match result {
+            Ok(_) => Ok(()),
+            Err(batch) => {
+                self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                batcher.restore(batch);
+                Err(ServeError::NoLiveWorkers { recovered: vec![] })
+            }
+        }
+    }
+
+    /// Submit path: offer a request; dispatch if the target fills.
+    fn push_and_dispatch(&self, tr: TrackedRequest) -> Result<(), ServeError> {
+        let mut batcher = self.batcher.lock().unwrap();
+        match batcher.push(tr) {
+            Some(batch) => self.dispatch_locked(&mut batcher, batch),
+            None => Ok(()),
+        }
+    }
+
+    /// Deadline-thread path: poll tick; dispatch a straggler flush.
+    fn tick_and_dispatch(&self) {
+        let mut batcher = self.batcher.lock().unwrap();
+        if let Some(batch) = batcher.tick() {
+            // Total dispatch failure restores the rows; the next
+            // drain() surfaces the error.
+            let _ = self.dispatch_locked(&mut batcher, batch);
+        }
+    }
+
+    /// Drain path: force out whatever is pending.
+    fn flush_and_dispatch(&self) -> Result<(), ServeError> {
+        let mut batcher = self.batcher.lock().unwrap();
+        match batcher.flush() {
+            Some(batch) => self.dispatch_locked(&mut batcher, batch),
+            None => Ok(()),
+        }
+    }
+}
+
 /// The running coordinator.
 pub struct Coordinator {
-    batcher: Batcher,
-    tx_work: Vec<Sender<WorkerMsg>>,
-    rx_done: Receiver<Vec<Response>>,
+    shared: Arc<Shared>,
+    rx_done: Receiver<(usize, Vec<Response>)>,
     workers: Vec<JoinHandle<()>>,
-    next_worker: usize,
+    deadline_thread: Option<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
-    in_flight: usize,
+    /// Model row width, for request validation at submit.
+    input_width: usize,
+    /// Half-range of the input format (`2^(in_bits-1)`), for validation.
+    in_half: i64,
 }
 
 impl Coordinator {
-    /// Spawn `n_pes` worker PEs serving the given model.
-    pub fn start(
-        layers: Vec<QuantLayer>,
-        in_bits: u32,
-        acc_bits: u32,
-        n_pes: usize,
-        target_rows: usize,
-        cost: CostTable,
-    ) -> Coordinator {
+    /// Spawn `cfg.n_pes` worker PEs serving the shared compiled model.
+    /// Plans are compiled by [`CompiledModel::compile`], exactly once,
+    /// before this call; workers only clone the `Arc`.
+    pub fn start(model: Arc<CompiledModel>, cfg: ServeConfig, cost: CostTable) -> Coordinator {
         let metrics = Arc::new(Metrics::default());
-        let (tx_done, rx_done) = channel::<Vec<Response>>();
-        let mut tx_work = vec![];
-        let mut workers = vec![];
+        let (tx_done, rx_done) = channel::<(usize, Vec<Response>)>();
         let cost = Arc::new(cost);
-        for _ in 0..n_pes {
-            let (tx, rx) = channel::<WorkerMsg>();
-            tx_work.push(tx);
+        let mut ports = vec![];
+        let mut workers = vec![];
+        for worker_id in 0..cfg.n_pes.max(1) {
+            let (tx, rx) = sync_channel::<WorkerMsg>(cfg.queue_depth.max(1));
+            let outstanding_rows = Arc::new(AtomicUsize::new(0));
+            let outstanding_batches = Arc::new(AtomicUsize::new(0));
+            ports.push(WorkerPort {
+                tx,
+                outstanding_rows: Arc::clone(&outstanding_rows),
+                outstanding_batches: Arc::clone(&outstanding_batches),
+                alive: true,
+            });
             let done = tx_done.clone();
             let m = Arc::clone(&metrics);
             let c = Arc::clone(&cost);
-            let engine = PackedMlpEngine::new(layers.clone(), in_bits, acc_bits);
+            let engine = PackedMlpEngine::new(Arc::clone(&model));
             workers.push(std::thread::spawn(move || {
-                worker_loop(engine, rx, done, m, c);
+                worker_loop(
+                    worker_id,
+                    engine,
+                    rx,
+                    done,
+                    m,
+                    c,
+                    outstanding_rows,
+                    outstanding_batches,
+                );
             }));
         }
+        let shared = Arc::new(Shared {
+            batcher: Mutex::new(Batcher::new(cfg.target_rows, 2)),
+            router: Mutex::new(Router {
+                ports,
+                policy: cfg.policy,
+                next_rr: 0,
+            }),
+            in_flight: AtomicUsize::new(0),
+            stop_deadline: AtomicBool::new(false),
+            metrics: Arc::clone(&metrics),
+        });
+        // Deadline thread: tick at half the deadline so a straggler
+        // flushes within (0.5, 1.0]× the configured deadline.
+        let tick_period = (cfg.deadline / 2).max(Duration::from_micros(200));
+        let shared_bg = Arc::clone(&shared);
+        let deadline_thread = std::thread::spawn(move || {
+            while !shared_bg.stop_deadline.load(Ordering::Acquire) {
+                std::thread::park_timeout(tick_period);
+                shared_bg.tick_and_dispatch();
+            }
+        });
         Coordinator {
-            batcher: Batcher::new(target_rows, 4),
-            tx_work,
+            shared,
             rx_done,
             workers,
-            next_worker: 0,
+            deadline_thread: Some(deadline_thread),
             metrics,
-            in_flight: 0,
+            input_width: model.input_width(),
+            in_half: 1i64 << (model.in_bits() - 1),
         }
     }
 
-    fn dispatch(&mut self, batch: Batch) {
-        let w = self.next_worker % self.tx_work.len();
-        self.next_worker += 1;
-        self.in_flight += 1;
-        self.tx_work[w]
-            .send(WorkerMsg::Work(batch))
-            .expect("worker alive");
+    /// Submit a request (may trigger a batch dispatch). Shape and range
+    /// are validated here so a malformed request is an error for its
+    /// sender, never a panic inside a PE worker.
+    pub fn submit(&mut self, req: Request) -> Result<(), ServeError> {
+        self.validate(&req)?;
+        self.metrics.note_submit();
+        self.shared.push_and_dispatch(TrackedRequest::now(req))
     }
 
-    /// Submit a request (may trigger a batch dispatch).
-    pub fn submit(&mut self, req: Request) {
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        if let Some(batch) = self.batcher.push(req) {
-            self.dispatch(batch);
+    fn validate(&self, req: &Request) -> Result<(), ServeError> {
+        let invalid = |reason: String| ServeError::InvalidRequest { id: req.id, reason };
+        if req.rows.is_empty() {
+            return Err(invalid("request has no rows".to_string()));
         }
+        for (i, row) in req.rows.iter().enumerate() {
+            if row.len() != self.input_width {
+                return Err(invalid(format!(
+                    "row {i} width {} != model input width {}",
+                    row.len(),
+                    self.input_width
+                )));
+            }
+            if let Some(&v) = row.iter().find(|&&v| v < -self.in_half || v >= self.in_half) {
+                return Err(invalid(format!(
+                    "row {i} value {v} outside Q range [{}, {})",
+                    -self.in_half, self.in_half
+                )));
+            }
+        }
+        Ok(())
     }
 
-    /// Flush stragglers and wait for every response.
-    pub fn drain(&mut self) -> Vec<Response> {
-        if let Some(batch) = self.batcher.flush() {
-            self.dispatch(batch);
-        }
+    /// Rows batched but not yet dispatched (waiting on the deadline).
+    pub fn pending_rows(&self) -> usize {
+        self.shared.batcher.lock().unwrap().pending_rows()
+    }
+
+    /// Fault injection / rolling restart: stop worker `idx` after it
+    /// finishes its queued work. Routing avoids it immediately; its
+    /// in-queue work still completes and is collected by `drain`.
+    pub fn kill_worker(&mut self, idx: usize) {
+        let tx = {
+            let mut router = self.shared.router.lock().unwrap();
+            match router.ports.get_mut(idx) {
+                Some(port) => {
+                    port.alive = false;
+                    port.tx.clone()
+                }
+                None => return,
+            }
+        };
+        // Deliver Stop without holding the router lock and without
+        // blocking the caller: behind a full queue the send parks on a
+        // helper thread until the worker drains its backlog.
+        std::thread::spawn(move || {
+            let _ = tx.send(WorkerMsg::Stop);
+        });
+    }
+
+    /// Flush stragglers and wait for every response. On failure the
+    /// error still carries whatever responses could be collected —
+    /// completed work is never stranded behind an error.
+    pub fn drain(&mut self) -> Result<Vec<Response>, ServeError> {
+        // Collect in-flight work even if the flush finds no live
+        // workers: earlier batches may already have completed.
+        let flush_err = self.shared.flush_and_dispatch().err();
         let mut out = vec![];
-        while self.in_flight > 0 {
-            let mut rs = self.rx_done.recv().expect("worker response");
-            out.append(&mut rs);
-            self.in_flight -= 1;
+        let mut lost_workers: Vec<usize> = vec![];
+        let mut lost_rows = 0usize;
+        // Write off work held by workers that exited without answering.
+        let write_off = |lost_workers: &mut Vec<usize>, lost_rows: &mut usize| {
+            let mut router = self.shared.router.lock().unwrap();
+            for (i, port) in router.ports.iter_mut().enumerate() {
+                if !self.workers[i].is_finished() {
+                    continue;
+                }
+                port.alive = false;
+                let batches = port.outstanding_batches.swap(0, Ordering::SeqCst);
+                if batches == 0 {
+                    continue;
+                }
+                let rows = port.outstanding_rows.swap(0, Ordering::SeqCst);
+                self.shared.in_flight.fetch_sub(batches, Ordering::SeqCst);
+                self.metrics
+                    .dropped_rows
+                    .fetch_add(rows as u64, Ordering::Relaxed);
+                lost_workers.push(i);
+                *lost_rows += rows;
+            }
+        };
+        while self.shared.in_flight.load(Ordering::SeqCst) > 0 {
+            match self.rx_done.recv_timeout(Duration::from_millis(50)) {
+                Ok((_, mut rs)) => {
+                    self.shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+                    out.append(&mut rs);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    write_off(&mut lost_workers, &mut lost_rows);
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // Every worker is gone and the channel is empty:
+                    // account for their held work, then stop waiting.
+                    write_off(&mut lost_workers, &mut lost_rows);
+                    self.shared.in_flight.store(0, Ordering::SeqCst);
+                    break;
+                }
+            }
         }
         out.sort_by_key(|r| r.id);
-        out
+        if !lost_workers.is_empty() {
+            return Err(ServeError::WorkerLost {
+                workers: lost_workers,
+                lost_rows,
+                recovered: out,
+            });
+        }
+        if flush_err.is_some() {
+            return Err(ServeError::NoLiveWorkers { recovered: out });
+        }
+        Ok(out)
     }
 
-    /// Stop workers and join.
+    /// Stop the deadline thread and workers, then join them.
     pub fn shutdown(mut self) {
-        for tx in &self.tx_work {
-            let _ = tx.send(WorkerMsg::Stop);
+        self.shared.stop_deadline.store(true, Ordering::Release);
+        if let Some(t) = self.deadline_thread.take() {
+            t.thread().unpark();
+            let _ = t.join();
+        }
+        {
+            let router = self.shared.router.lock().unwrap();
+            for port in &router.ports {
+                // Blocking send so Stop lands even behind a full queue;
+                // a dead worker just returns SendError.
+                let _ = port.tx.send(WorkerMsg::Stop);
+            }
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -128,37 +534,50 @@ impl Coordinator {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
+    worker_id: usize,
     engine: PackedMlpEngine,
     rx: Receiver<WorkerMsg>,
-    done: Sender<Vec<Response>>,
+    done: Sender<(usize, Vec<Response>)>,
     metrics: Arc<Metrics>,
     cost: Arc<CostTable>,
+    outstanding_rows: Arc<AtomicUsize>,
+    outstanding_batches: Arc<AtomicUsize>,
 ) {
-    let in_fmt = SimdFormat::new(engine.in_bits);
-    while let Ok(WorkerMsg::Work(batch)) = rx.recv() {
+    let in_fmt = engine.model().in_fmt();
+    while let Ok(msg) = rx.recv() {
+        let batch = match msg {
+            WorkerMsg::Work(b) => b,
+            WorkerMsg::Stop => break,
+        };
         let t0 = Instant::now();
         // Gather rows, run packed, scatter back per request.
         let rows: Vec<Vec<i64>> = batch
-            .requests
+            .entries
             .iter()
-            .flat_map(|r| r.rows.iter().cloned())
+            .flat_map(|e| e.req.rows.iter().cloned())
             .collect();
         let (logits, stats) = engine.forward_batch(&rows);
         let ns = t0.elapsed().as_nanos() as u64;
-        let pj = cost.energy_pj(stats.s1_cycles, in_fmt, stats.s2_passes);
+        let pj = cost.batch_energy_pj(&stats, in_fmt);
         metrics.add_batch(rows.len() as u64, stats, pj, ns);
         let mut responses = vec![];
         let mut offset = 0;
-        for req in &batch.requests {
-            let n = req.rows.len();
+        for entry in &batch.entries {
+            let n = entry.req.rows.len();
             responses.push(Response {
-                id: req.id,
+                id: entry.req.id,
                 logits: logits[offset..offset + n].to_vec(),
             });
             offset += n;
+            metrics.observe_latency_ns(entry.submitted_at.elapsed().as_nanos() as u64);
         }
-        done.send(responses).expect("leader alive");
+        outstanding_rows.fetch_sub(batch.rows, Ordering::SeqCst);
+        outstanding_batches.fetch_sub(1, Ordering::SeqCst);
+        if done.send((worker_id, responses)).is_err() {
+            break; // leader gone
+        }
     }
 }
 
@@ -166,6 +585,7 @@ fn worker_loop(
 mod tests {
     use super::*;
     use crate::nn::exec::mlp_forward_row;
+    use crate::nn::weights::QuantLayer;
     use crate::workload::synth::XorShift64;
 
     fn layers(rng: &mut XorShift64) -> Vec<QuantLayer> {
@@ -194,7 +614,8 @@ mod tests {
     fn coordinator_round_trip_matches_reference() {
         let mut rng = XorShift64::new(0xC00D);
         let ls = layers(&mut rng);
-        let mut coord = Coordinator::start(ls.clone(), 8, 16, 2, 6, tiny_cost());
+        let model = CompiledModel::compile(ls.clone(), 8, 16);
+        let mut coord = Coordinator::start(model, ServeConfig::new(2, 6), tiny_cost());
         let reqs: Vec<Request> = (0..9u64)
             .map(|id| Request {
                 id,
@@ -208,9 +629,9 @@ mod tests {
             .map(|r| r.rows.iter().map(|row| mlp_forward_row(row, &ls, 8, 16)).collect())
             .collect();
         for r in reqs {
-            coord.submit(r);
+            coord.submit(r).unwrap();
         }
-        let responses = coord.drain();
+        let responses = coord.drain().unwrap();
         assert_eq!(responses.len(), 9);
         for resp in &responses {
             assert_eq!(resp.logits, expected[resp.id as usize], "request {}", resp.id);
@@ -223,17 +644,45 @@ mod tests {
     fn batching_groups_requests() {
         let mut rng = XorShift64::new(0xBA7);
         let ls = layers(&mut rng);
-        let mut coord = Coordinator::start(ls, 8, 16, 1, 12, tiny_cost());
+        let model = CompiledModel::compile(ls, 8, 16);
+        // A generous deadline so the batcher, not the deadline thread,
+        // forms the batches in this test.
+        let cfg = ServeConfig::new(1, 12).deadline(Duration::from_secs(5));
+        let mut coord = Coordinator::start(model, cfg, tiny_cost());
         for id in 0..12u64 {
-            coord.submit(Request {
-                id,
-                rows: vec![(0..8).map(|_| rng.q_raw(8)).collect()],
-            });
+            coord
+                .submit(Request {
+                    id,
+                    rows: vec![(0..8).map(|_| rng.q_raw(8)).collect()],
+                })
+                .unwrap();
         }
-        let responses = coord.drain();
+        let responses = coord.drain().unwrap();
         assert_eq!(responses.len(), 12);
         let batches = coord.metrics.batches.load(Ordering::Relaxed);
         assert!(batches <= 2, "expected ≤2 batches, got {batches}");
         coord.shutdown();
+    }
+
+    #[test]
+    fn round_robin_rotates_and_least_loaded_prefers_idle() {
+        let mut rng = XorShift64::new(0xD15);
+        let ls = layers(&mut rng);
+        let model = CompiledModel::compile(ls, 8, 16);
+        for policy in [DispatchPolicy::RoundRobin, DispatchPolicy::LeastLoaded] {
+            let cfg = ServeConfig::new(3, 1).policy(policy);
+            let mut coord = Coordinator::start(Arc::clone(&model), cfg, tiny_cost());
+            for id in 0..30u64 {
+                coord
+                    .submit(Request {
+                        id,
+                        rows: vec![(0..8).map(|_| rng.q_raw(8)).collect()],
+                    })
+                    .unwrap();
+            }
+            let responses = coord.drain().unwrap();
+            assert_eq!(responses.len(), 30, "{policy:?}");
+            coord.shutdown();
+        }
     }
 }

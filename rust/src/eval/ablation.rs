@@ -8,6 +8,7 @@
 //! * Stage-2 bypass (Section III-A): pipelines with format conversion
 //!   disabled vs always-through.
 
+use crate::anyhow;
 use crate::bits::format::SimdFormat;
 
 use crate::csd::schedule::{MulOp, MulPlan};

@@ -3,6 +3,7 @@
 //! scales gracefully with per-layer bitwidths; the flexible Hard SIMD
 //! consistently underperforms even the lean {8,16} one.
 
+use crate::anyhow;
 use crate::energy::model::SynthesizedSoftPipeline;
 use crate::energy::report::{pj, table};
 use crate::hardsimd::pipeline::{HardSimdPipeline, HARD_FLEX, HARD_TWO};

@@ -2,6 +2,7 @@
 //! and 1 GHz timing constraints, with the stage-level split the paper
 //! discusses (Stage-2 ~flat across frequency; Stage-1/registers grow).
 
+use crate::anyhow;
 use crate::energy::model::{PipelineArea, SynthesizedSoftPipeline};
 use crate::energy::report::{table, um2};
 use crate::hardsimd::pipeline::{HardSimdPipeline, HARD_FLEX, HARD_TWO};

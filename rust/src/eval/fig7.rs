@@ -2,6 +2,7 @@
 //! content is the per-block area split, which we report as a
 //! floorplan-style breakdown (DESIGN.md §2 substitution).
 
+use crate::anyhow;
 use crate::energy::model::SynthesizedSoftPipeline;
 use crate::energy::report::{pct, table, um2};
 

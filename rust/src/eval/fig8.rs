@@ -1,6 +1,7 @@
 //! Fig. 8 — energy (pJ) per sub-word multiplication for selected
 //! configurations (4×4, 8×8, 16×16) across synthesis timing constraints.
 
+use crate::anyhow;
 use crate::energy::model::SynthesizedSoftPipeline;
 use crate::energy::report::{pj, table};
 use crate::energy::tech::MHZ_POINTS;
@@ -70,7 +71,7 @@ pub fn run() -> anyhow::Result<()> {
     println!("{}", table(&["design", "constraint", "config", "pJ/mult"], &rows));
     println!(
         "(paper: Soft SIMD wins for widths < 8 bits; flexibility costs the\n\
-         Hard SIMD baselines energy at every width — see EXPERIMENTS.md for\n\
+         Hard SIMD baselines energy at every width — see DESIGN.md §5 for\n\
          the measured-vs-paper discussion)\n"
     );
     Ok(())

@@ -5,6 +5,7 @@
 //! The paper highlights the discontinuities where the multiplicand
 //! width crosses a Hard SIMD sub-word boundary (8→9 bits in panel b).
 
+use crate::anyhow;
 use crate::energy::model::SynthesizedSoftPipeline;
 use crate::energy::report::table;
 use crate::hardsimd::pipeline::{HardSimdPipeline, HARD_FLEX, HARD_TWO};
@@ -98,7 +99,7 @@ mod tests {
         assert!(b.gains[0][0].unwrap() > 0.6, "4×4 vs two");
         // ...and positive-but-smaller at 16 (documented deviation:
         // the paper's crossover at 16×16 is not reproduced, see
-        // EXPERIMENTS.md).
+        // DESIGN.md §5).
         let g16 = a.gains[3][12].unwrap();
         assert!(g16 < a.gains[0][0].unwrap());
         // Discontinuity: on panel (b), y=8 series jumps upward at x=9

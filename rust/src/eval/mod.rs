@@ -6,6 +6,8 @@
 //! energy); `ablation` covers the design choices the paper fixes
 //! (CSD vs binary recoding, max coalesced shift, Stage-2 bypass).
 
+use crate::anyhow;
+
 pub mod ablation;
 pub mod fig10;
 pub mod fig6;

@@ -2,6 +2,8 @@
 //! saving vs the equivalent Hard SIMD (paper: 53.1%) and maximum
 //! per-multiplication energy saving (paper: 88.8%).
 
+use crate::anyhow;
+
 use super::{fig6, fig9};
 
 pub struct Headlines {

@@ -22,6 +22,7 @@
 //!   accelerator runtime and its ML workloads.
 //! * [`runtime`] — PJRT loader for the AOT JAX/Pallas artifacts.
 
+pub mod anyhow;
 pub mod bits;
 pub mod coordinator;
 pub mod csd;

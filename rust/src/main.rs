@@ -4,6 +4,8 @@
 
 use std::process::ExitCode;
 
+use softsimd::anyhow;
+
 const USAGE: &str = "\
 softsimd — Soft SIMD microarchitecture reproduction (Yu et al., 2022)
 

@@ -51,8 +51,8 @@ pub fn mlp_forward_batch(
         .collect()
 }
 
-/// Forward with *precomputed plans* (the hot path used by the
-/// coordinator for repeated batches; avoids re-encoding CSD per call).
+/// Forward with *precomputed plans* (avoids re-encoding CSD per call;
+/// the scalar mirror of the packed serving path).
 pub fn mlp_forward_row_planned(
     x_q: &[i64],
     layers: &[QuantLayer],
@@ -83,7 +83,11 @@ pub fn mlp_forward_row_planned(
     h
 }
 
-/// Precompute all layer plans for [`mlp_forward_row_planned`].
+/// Precompute all layer plans for [`mlp_forward_row_planned`]. This is
+/// the expensive, quantization-dependent compilation step; the serving
+/// stack runs it exactly once per model inside
+/// [`crate::coordinator::CompiledModel::compile`] and shares the result
+/// across PE workers.
 pub fn precompute_plans(
     layers: &[QuantLayer],
 ) -> Vec<Vec<Vec<crate::csd::schedule::MulPlan>>> {

@@ -2,6 +2,8 @@
 
 use std::path::Path;
 
+use crate::anyhow;
+
 use crate::csd::schedule::{schedule, MulPlan};
 
 /// One layer's quantized weights (`Q1.(bits-1)` raws) with cached CSD

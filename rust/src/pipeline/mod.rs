@@ -6,7 +6,7 @@ pub mod stage1;
 pub mod stage2;
 pub mod trace;
 
-pub use core::{PipelineSim, RunResult};
+pub use self::core::{PipelineSim, RunResult};
 pub use stage1::{mul_packed, mul_scalar, Stage1};
 pub use stage2::{conversion_chain, repack_stream, repack_word, Stage2};
 pub use trace::{CycleEvent, Trace};

@@ -73,6 +73,14 @@ impl Stage1 {
         }
         self.acc
     }
+
+    /// Load a multiplicand word and execute a plan in one call — the
+    /// serving engine's inner loop (one call per packed word per weight).
+    #[inline]
+    pub fn run_plan_on(&mut self, x: u64, plan: &MulPlan) -> u64 {
+        self.load_x(x);
+        self.run_plan(plan)
+    }
 }
 
 /// Multiply every sub-word of `x_packed` (format `fmt`, `Q1.(b-1)`) by

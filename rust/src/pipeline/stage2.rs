@@ -136,7 +136,7 @@ pub fn repack_word(word: u64, from: SimdFormat, to: SimdFormat) -> Vec<u64> {
 /// conversion on the NN hot path): one input word expands into exactly
 /// two output words, each sub-word value-aligned (`<< b`) in its slot.
 /// Bit-identical to [`repack_word`] for `to = 2·from` (tested below);
-/// pure shifts/masks, no per-lane unpacking (EXPERIMENTS.md §Perf).
+/// pure shifts/masks, no per-lane unpacking (DESIGN.md §9).
 #[inline]
 pub fn widen_double(word: u64, from: SimdFormat) -> (u64, u64) {
     let b = from.bits;
@@ -185,9 +185,20 @@ pub fn repack_cycles(n_words: usize, from: SimdFormat, to: SimdFormat) -> u64 {
     if from == to {
         return n_words as u64; // bypass cycles
     }
-    let mut cycles = 0u64;
     // Sub-word count is conserved by conversion.
-    let count = n_words * from.lanes() as usize;
+    repack_cycles_exact(n_words * from.lanes() as usize, from, to)
+}
+
+/// As [`repack_cycles`], but billed for `count` *valid sub-words* rather
+/// than whole input words: the zero-padding lanes of a partial final
+/// word cost nothing. This is the serving engine's accounting (its
+/// batches are padded to the lane multiple, where the two agree).
+pub fn repack_cycles_exact(count: usize, from: SimdFormat, to: SimdFormat) -> u64 {
+    if from == to {
+        // Bypass: one cycle per occupied word.
+        return count.div_ceil(from.lanes() as usize) as u64;
+    }
+    let mut cycles = 0u64;
     for (_f, t) in conversion_chain(from, to) {
         // One cycle per produced output word of this hop.
         cycles += (count * t.bits as usize).div_ceil(48) as u64;

@@ -62,7 +62,7 @@ impl Simulator {
     ///
     /// Hot path of the figure harness: cell operand indices are
     /// topologically ordered by construction (`NetBuilder` asserts it),
-    /// so unchecked reads are sound (EXPERIMENTS.md §Perf).
+    /// so unchecked reads are sound (DESIGN.md §9).
     pub fn eval(&mut self, net: &Netlist) -> u64 {
         let pending = self.pending.take().expect("set_inputs before eval");
         assert_eq!(pending.len(), net.inputs.len(), "input width mismatch");

@@ -8,6 +8,8 @@
 use std::fmt::Write as _;
 use std::path::Path;
 
+use crate::anyhow;
+
 use crate::bits::format::SimdFormat;
 use crate::bits::swar;
 use crate::pipeline::stage1::mul_packed;

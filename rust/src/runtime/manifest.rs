@@ -3,6 +3,8 @@
 use std::collections::HashMap;
 use std::path::Path;
 
+use crate::anyhow;
+
 /// Parsed artifact manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {

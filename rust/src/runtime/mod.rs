@@ -8,6 +8,10 @@
 
 pub mod golden;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use manifest::Manifest;

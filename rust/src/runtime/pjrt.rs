@@ -3,6 +3,8 @@
 
 use std::path::{Path, PathBuf};
 
+use crate::anyhow;
+
 use crate::bits::format::SimdFormat;
 use crate::csd::schedule::{schedule_with, MulOp};
 use crate::runtime::manifest::Manifest;

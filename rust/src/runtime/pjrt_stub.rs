@@ -1,0 +1,72 @@
+//! API-compatible stub for [`super::pjrt`] when the `pjrt` cargo feature
+//! is disabled (the offline image carries no `xla` crate to execute the
+//! AOT artifacts with). Every entry point that would touch PJRT returns
+//! an error; shape/metadata helpers still work so callers can compile
+//! unconditionally and probe availability at run time.
+
+use std::path::{Path, PathBuf};
+
+use crate::anyhow;
+use crate::bits::format::SimdFormat;
+use crate::runtime::manifest::Manifest;
+
+const UNAVAILABLE: &str =
+    "PJRT execution is unavailable: softsimd was built without the `pjrt` \
+     cargo feature (the offline image has no `xla` crate). Rebuild with \
+     `--features pjrt` and a vendored xla dependency; see DESIGN.md §7.";
+
+/// Stub of the compiled artifact bundle. Never constructed: [`Engine::load`]
+/// always fails in this build.
+#[derive(Debug)]
+pub struct Engine {
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+}
+
+impl Engine {
+    /// Always fails in a non-`pjrt` build (after validating that the
+    /// artifact directory at least exists, for a friendlier message).
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Engine> {
+        let _ = Manifest::load(dir.as_ref())?;
+        anyhow::bail!("{UNAVAILABLE}")
+    }
+
+    /// Default artifact location relative to the crate root.
+    pub fn default_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without the `pjrt` feature)".to_string()
+    }
+
+    /// See the real `Engine::mul_packed`; always fails in this build.
+    pub fn mul_packed(
+        &self,
+        _words: &[u64],
+        _m_raw: i64,
+        _y_bits: u32,
+        _fmt: SimdFormat,
+    ) -> anyhow::Result<Vec<u64>> {
+        anyhow::bail!("{UNAVAILABLE}")
+    }
+
+    /// See the real `Engine::mlp_forward`; always fails in this build.
+    pub fn mlp_forward(&self, _x_q: &[i32]) -> anyhow::Result<Vec<i32>> {
+        anyhow::bail!("{UNAVAILABLE}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature_or_artifacts() {
+        let e = Engine::load(std::env::temp_dir().join("no_such_artifacts"))
+            .unwrap_err()
+            .to_string();
+        // Either the manifest is absent (io error) or the stub refuses.
+        assert!(!e.is_empty());
+    }
+}

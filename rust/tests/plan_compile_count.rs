@@ -1,0 +1,62 @@
+//! CSD plan compilation must happen exactly once per model regardless
+//! of how many PE workers serve it (the tentpole invariant of the
+//! shared-plan serving engine; DESIGN.md §8).
+//!
+//! This lives in its own integration-test binary so the process-global
+//! [`PLAN_COMPILATIONS`] counter is not perturbed by unrelated tests
+//! compiling models in parallel threads.
+
+use std::sync::atomic::Ordering;
+
+use softsimd::coordinator::cost::CostTable;
+use softsimd::coordinator::model::{CompiledModel, PLAN_COMPILATIONS};
+use softsimd::coordinator::server::{Coordinator, Request, ServeConfig};
+use softsimd::nn::weights::QuantLayer;
+use softsimd::workload::synth::XorShift64;
+
+fn cost() -> CostTable {
+    CostTable {
+        mhz: 1000.0,
+        s1_cycle_pj: softsimd::bits::format::FORMATS.iter().map(|&b| (b, 1.0)).collect(),
+        s2_pass_pj: 0.5,
+        area_um2: 4600.0,
+    }
+}
+
+#[test]
+fn plans_compile_exactly_once_regardless_of_pe_count() {
+    let mut rng = XorShift64::new(0xC0117);
+    let layers: Vec<QuantLayer> = [(10usize, 6usize), (6, 4)]
+        .iter()
+        .map(|&(k, n)| {
+            QuantLayer::new(
+                (0..k)
+                    .map(|_| (0..n).map(|_| rng.q_raw(8)).collect())
+                    .collect(),
+                8,
+            )
+        })
+        .collect();
+    for n_pes in [1usize, 2, 8] {
+        let before = PLAN_COMPILATIONS.load(Ordering::SeqCst);
+        let model = CompiledModel::compile(layers.clone(), 8, 16);
+        let mut coord = Coordinator::start(model, ServeConfig::new(n_pes, 6), cost());
+        for id in 0..8u64 {
+            coord
+                .submit(Request {
+                    id,
+                    rows: vec![(0..10).map(|_| rng.q_raw(8)).collect()],
+                })
+                .unwrap();
+        }
+        let responses = coord.drain().unwrap();
+        assert_eq!(responses.len(), 8);
+        coord.shutdown();
+        let after = PLAN_COMPILATIONS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            1,
+            "expected one plan compilation per model at {n_pes} PEs"
+        );
+    }
+}

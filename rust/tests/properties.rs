@@ -228,6 +228,57 @@ fn prop_pack_roundtrip() {
 }
 
 #[test]
+fn prop_repack_roundtrip_nondoubling_pairs_and_odd_counts() {
+    // Widen a→b then narrow b→a is the identity for every *non-doubling*
+    // widening pair (the generic chained-crossbar path the serving
+    // engine's fast path bypasses), including odd/partial-final-word
+    // element counts.
+    let mut rng = XorShift64::new(0xAA01);
+    let pairs = [(4u32, 6u32), (4, 12), (6, 8), (6, 16), (8, 12), (12, 16)];
+    for &(a, b) in &pairs {
+        let (fa, fb) = (SimdFormat::new(a), SimdFormat::new(b));
+        assert_ne!(fb.bits, 2 * fa.bits, "pair {fa}->{fb} must be non-doubling");
+        for count in [1usize, 2, 3, 5, 7, 11, 13, 17, 23, 29] {
+            let vals: Vec<i64> = (0..count).map(|_| rng.q_raw(a)).collect();
+            let words = pack_stream(&vals, fa);
+            let wide = repack_stream(&words, fa, fb, count);
+            // Densely packed: exactly ceil(count / lanes_b) output words.
+            assert_eq!(
+                wide.len(),
+                count.div_ceil(fb.lanes() as usize),
+                "{fa}->{fb} count {count}"
+            );
+            let back = repack_stream(&wide, fb, fa, count);
+            assert_eq!(
+                unpack_stream(&back, fa, count),
+                vals,
+                "{fa}->{fb} count {count}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_repack_stream_padding_lanes_are_zero() {
+    // The zero-padding of a partial final word must survive conversion:
+    // lanes beyond `count` stay zero so a padded serving batch cannot
+    // leak garbage into neighbouring sub-words.
+    let mut rng = XorShift64::new(0xAA02);
+    for i in 0..400 {
+        let from = formats()[i % 5];
+        let to = formats()[(i / 5) % 5];
+        let lanes = to.lanes() as usize;
+        let count = 1 + (rng.next_u64() as usize % (3 * lanes));
+        let vals: Vec<i64> = (0..count).map(|_| rng.q_raw(from.bits)).collect();
+        let out = repack_stream(&pack_stream(&vals, from), from, to, count);
+        let full = unpack_stream(&out, to, out.len() * lanes);
+        for (j, &v) in full.iter().enumerate().skip(count) {
+            assert_eq!(v, 0, "{from}->{to} count {count} pad lane {j}");
+        }
+    }
+}
+
+#[test]
 fn prop_zero_multiplier_and_identity_edges() {
     let mut rng = XorShift64::new(0x99);
     for i in 0..CASES / 3 {
