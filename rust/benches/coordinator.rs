@@ -1,12 +1,17 @@
 //! Coordinator serving benchmarks: packed-engine layer throughput and
 //! the full submit→batch→PE→drain loop, comparing round-robin vs
-//! least-outstanding-rows dispatch at several PE counts.
+//! least-outstanding-rows dispatch at several PE counts and serving the
+//! same model under several per-layer precision schedules.
 //!
 //! The serving comparison reports rows/sec and p50/p99 request latency
-//! per (policy, PE count) cell. The workload is deliberately skewed
-//! (most requests are 1 row, a few are 24-row bulks) — the case where
-//! blind round-robin parks small requests behind bulks and load-aware
-//! routing should win.
+//! per (policy, PE count) cell and per precision schedule. The policy
+//! workload is deliberately skewed (most requests are 1 row, a few are
+//! 24-row bulks) — the case where blind round-robin parks small
+//! requests behind bulks and load-aware routing should win.
+//!
+//! Every cell is also written to `BENCH_coordinator.json` (hand-rolled
+//! JSON — serde is unavailable offline) so CI can archive the perf
+//! trajectory across PRs as a machine-readable artifact.
 
 #[path = "benchkit.rs"]
 mod benchkit;
@@ -20,7 +25,7 @@ use softsimd::coordinator::model::CompiledModel;
 use softsimd::coordinator::server::{
     Coordinator, DispatchPolicy, Request, ServeConfig,
 };
-use softsimd::nn::weights::QuantLayer;
+use softsimd::nn::weights::{LayerPrecision, QuantLayer};
 use softsimd::workload::synth::XorShift64;
 
 fn model_layers(rng: &mut XorShift64) -> Vec<QuantLayer> {
@@ -33,19 +38,79 @@ fn model_layers(rng: &mut XorShift64) -> Vec<QuantLayer> {
     vec![mk(64, 32, rng), mk(32, 16, rng)]
 }
 
-/// Skewed open-loop workload: ~1/8 of requests are 24-row bulks.
-fn workload(rng: &mut XorShift64, n: usize) -> Vec<Request> {
+/// Skewed open-loop workload at the given input quantization: ~1/8 of
+/// requests are 24-row bulks.
+fn workload(rng: &mut XorShift64, n: usize, in_bits: u32) -> Vec<Request> {
     (0..n)
         .map(|id| {
             let rows = if rng.next_u64() % 8 == 0 { 24 } else { 1 };
             Request {
                 id: id as u64,
                 rows: (0..rows)
-                    .map(|_| (0..64).map(|_| rng.q_raw(8)).collect())
+                    .map(|_| (0..64).map(|_| rng.q_raw(in_bits)).collect())
                     .collect(),
             }
         })
         .collect()
+}
+
+/// One serving-grid measurement, JSON-serializable.
+struct Cell {
+    group: &'static str,
+    policy: &'static str,
+    pes: usize,
+    schedule: &'static str,
+    rows_per_s: f64,
+    p50_us: f64,
+    p99_us: f64,
+}
+
+impl Cell {
+    fn json(&self) -> String {
+        format!(
+            "{{\"group\":\"{}\",\"policy\":\"{}\",\"pes\":{},\"schedule\":\"{}\",\
+             \"rows_per_s\":{:.1},\"p50_us\":{:.1},\"p99_us\":{:.1}}}",
+            self.group, self.policy, self.pes, self.schedule,
+            self.rows_per_s, self.p50_us, self.p99_us
+        )
+    }
+}
+
+fn policy_name(policy: DispatchPolicy) -> &'static str {
+    match policy {
+        DispatchPolicy::RoundRobin => "round-robin",
+        DispatchPolicy::LeastLoaded => "least-loaded",
+    }
+}
+
+/// Serve `reqs` once and measure the cell.
+fn serve_cell(
+    model: &Arc<CompiledModel>,
+    cfg: ServeConfig,
+    cost: &CostTable,
+    reqs: &[Request],
+    group: &'static str,
+    schedule: &'static str,
+) -> Cell {
+    let policy = policy_name(cfg.policy);
+    let pes = cfg.n_pes;
+    let mut coord = Coordinator::start(Arc::clone(model), cfg, cost.clone());
+    for req in reqs {
+        coord.submit(req.clone()).expect("live workers");
+    }
+    let responses = coord.drain().expect("drain");
+    assert_eq!(responses.len(), reqs.len());
+    let cell = Cell {
+        group,
+        policy,
+        pes,
+        schedule,
+        rows_per_s: coord.metrics.rows_per_sec(),
+        p50_us: coord.metrics.latency_quantile_ns(0.50).unwrap_or(0) as f64 / 1e3,
+        p99_us: coord.metrics.latency_quantile_ns(0.99).unwrap_or(0) as f64 / 1e3,
+    };
+    coord.shutdown();
+    cell
 }
 
 fn main() {
@@ -53,7 +118,8 @@ fn main() {
     let mut rng = XorShift64::new(0xC0BE);
     let layers = model_layers(&mut rng);
     let mults_per_row: u64 = layers.iter().map(|l| (l.k * l.n) as u64).sum();
-    let model = CompiledModel::compile(layers, 8, 16);
+    let model = CompiledModel::compile(layers.clone(), 8, 16).expect("valid model");
+    let mut cells: Vec<Cell> = vec![];
 
     // Engine-only: packed forward of a 12-row batch on the shared model.
     let engine = PackedMlpEngine::new(Arc::clone(&model));
@@ -73,7 +139,7 @@ fn main() {
     };
 
     // Full coordinator loop: policy × PE-count grid on a skewed stream.
-    let reqs = workload(&mut rng, 256);
+    let reqs = workload(&mut rng, 256, 8);
     let total_rows: usize = reqs.iter().map(|r| r.rows.len()).sum();
     println!(
         "\n== dispatch policy comparison ({} requests, {} rows, skewed sizes) ==",
@@ -87,28 +153,49 @@ fn main() {
     for &policy in &[DispatchPolicy::RoundRobin, DispatchPolicy::LeastLoaded] {
         for &n_pes in &[2usize, 4] {
             let cfg = ServeConfig::new(n_pes, 12).policy(policy);
-            let mut coord =
-                Coordinator::start(Arc::clone(&model), cfg, cost.clone());
-            for req in &reqs {
-                coord.submit(req.clone()).expect("live workers");
-            }
-            let responses = coord.drain().expect("drain");
-            assert_eq!(responses.len(), reqs.len());
-            let p50 = coord.metrics.latency_quantile_ns(0.50).unwrap_or(0) as f64 / 1e3;
-            let p99 = coord.metrics.latency_quantile_ns(0.99).unwrap_or(0) as f64 / 1e3;
+            let cell = serve_cell(&model, cfg, &cost, &reqs, "policy", "uniform-8");
             println!(
                 "{:<14} {:>4} {:>12.0} {:>12.1} {:>12.1}",
-                match policy {
-                    DispatchPolicy::RoundRobin => "round-robin",
-                    DispatchPolicy::LeastLoaded => "least-loaded",
-                },
-                n_pes,
-                coord.metrics.rows_per_sec(),
-                p50,
-                p99
+                cell.policy, cell.pes, cell.rows_per_s, cell.p50_us, cell.p99_us
             );
-            coord.shutdown();
+            cells.push(cell);
         }
+    }
+
+    // Precision-schedule grid: the same weights served under different
+    // per-layer format pairs (least-loaded, 2 PEs). Lane occupancy per
+    // word differs per schedule, so rows/s and latency shift with the
+    // schedule — the run-time repacking story on the serving path.
+    let schedules: [(&'static str, Vec<LayerPrecision>); 3] = [
+        (
+            "uniform-8",
+            vec![LayerPrecision::new(8, 16), LayerPrecision::new(8, 16)],
+        ),
+        (
+            "low-first-4-8",
+            vec![LayerPrecision::new(4, 8), LayerPrecision::new(8, 16)],
+        ),
+        (
+            "narrowing-2hop",
+            vec![LayerPrecision::new(8, 16), LayerPrecision::new(4, 8)],
+        ),
+    ];
+    println!("\n== precision schedule comparison (least-loaded, 2 PEs) ==");
+    println!(
+        "{:<16} {:>12} {:>12} {:>12}",
+        "schedule", "rows/s", "p50 us", "p99 us"
+    );
+    for (name, sched) in &schedules {
+        let m = CompiledModel::compile_scheduled(layers.clone(), sched.clone())
+            .expect("valid schedule");
+        let reqs = workload(&mut rng, 192, sched[0].in_bits);
+        let cfg = ServeConfig::new(2, 12);
+        let cell = serve_cell(&m, cfg, &cost, &reqs, "schedule", *name);
+        println!(
+            "{:<16} {:>12.0} {:>12.1} {:>12.1}",
+            cell.schedule, cell.rows_per_s, cell.p50_us, cell.p99_us
+        );
+        cells.push(cell);
     }
 
     // The classic single-cell timing view, for regression tracking.
@@ -130,4 +217,13 @@ fn main() {
         coord.shutdown();
     });
     throughput(&r, (96 * mults_per_row) as f64, "subword-mults");
+
+    // Machine-readable artifact for CI perf tracking across PRs.
+    let json = format!(
+        "{{\"bench\":\"coordinator\",\"cells\":[\n  {}\n]}}\n",
+        cells.iter().map(Cell::json).collect::<Vec<_>>().join(",\n  ")
+    );
+    let path = "BENCH_coordinator.json";
+    std::fs::write(path, &json).expect("write bench artifact");
+    println!("\nwrote {} serving cells to {path}", cells.len());
 }

@@ -1,0 +1,86 @@
+//! Mixed-precision serving demo: the same quantized MLP deployed under
+//! three per-layer precision schedules, served through the coordinator,
+//! with exact per-format cycle/energy accounting compared across runs
+//! (DESIGN.md §10).
+//!
+//! Unlike `serve.rs` this needs no AOT artifacts: the model is quantized
+//! locally from synthetic float weights, so it runs anywhere.
+//!
+//! Run: `cargo run --release --example mixed_precision_serve`
+
+use softsimd::anyhow;
+use softsimd::coordinator::cost::CostTable;
+use softsimd::coordinator::model::CompiledModel;
+use softsimd::coordinator::server::{Coordinator, Request, ServeConfig};
+use softsimd::nn::weights::{quantize_stack, LayerPrecision};
+use softsimd::workload::synth::XorShift64;
+
+fn main() -> anyhow::Result<()> {
+    // A 32→24→16→10 float MLP, quantized at 8-bit weights per layer.
+    let mut rng = XorShift64::new(0x111D);
+    let dims = [32usize, 24, 16, 10];
+    let float_w: Vec<Vec<Vec<f64>>> = dims
+        .windows(2)
+        .map(|w| {
+            (0..w[0])
+                .map(|_| (0..w[1]).map(|_| rng.uniform() * 2.0 - 1.0).collect())
+                .collect()
+        })
+        .collect();
+    let layers = quantize_stack(&float_w, &[8, 8, 8])?;
+
+    println!("characterizing pipeline energy at 1 GHz…");
+    let cost = CostTable::characterize(1000.0);
+
+    let schedules: Vec<(&str, Vec<LayerPrecision>)> = vec![
+        (
+            "uniform 8-8-8",
+            vec![
+                LayerPrecision::new(8, 16),
+                LayerPrecision::new(8, 16),
+                LayerPrecision::new(8, 16),
+            ],
+        ),
+        (
+            "low-first 4-6-8",
+            vec![
+                LayerPrecision::new(4, 8),
+                LayerPrecision::new(6, 12),
+                LayerPrecision::new(8, 16),
+            ],
+        ),
+        (
+            "narrowing 16-8-4",
+            vec![
+                LayerPrecision::new(16, 16),
+                LayerPrecision::new(8, 16),
+                LayerPrecision::new(4, 8),
+            ],
+        ),
+    ];
+
+    for (name, sched) in schedules {
+        let model = CompiledModel::compile_scheduled(layers.clone(), sched.clone())?;
+        println!(
+            "\n== {name}: batch quantum {} rows, boundaries {} ==",
+            model.batch_quantum(),
+            (0..sched.len() - 1)
+                .map(|li| format!("{} hop(s)", model.boundary_chain(li).len()))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+        let in_bits = model.in_bits();
+        let mut coord = Coordinator::start(model, ServeConfig::new(2, 12), cost.clone());
+        for id in 0..256u64 {
+            coord.submit(Request {
+                id,
+                rows: vec![(0..dims[0]).map(|_| rng.q_raw(in_bits)).collect()],
+            })?;
+        }
+        let responses = coord.drain()?;
+        anyhow::ensure!(responses.len() == 256, "all requests must complete");
+        println!("{}", coord.metrics.report());
+        coord.shutdown();
+    }
+    Ok(())
+}

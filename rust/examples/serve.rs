@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(weights.exists(), "run `make artifacts` first");
     let layers = load_weight_file(weights)?;
     let cost = CostTable::characterize(1000.0);
-    let model = CompiledModel::compile(layers, 8, 16);
+    let model = CompiledModel::compile(layers, 8, 16)?;
 
     println!(
         "request stream: {n} requests, bursty arrivals, 4 PEs, batch target \

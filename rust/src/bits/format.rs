@@ -31,6 +31,17 @@ pub struct SimdFormat {
     pub bits: u32,
 }
 
+/// Position of `bits` inside [`FORMATS`] — the canonical index for
+/// per-format tally arrays (`EngineStats`, `Metrics`). Panics on an
+/// unsupported width, same contract as [`SimdFormat::new`].
+#[inline]
+pub fn format_index(bits: u32) -> usize {
+    FORMATS
+        .iter()
+        .position(|&b| b == bits)
+        .unwrap_or_else(|| panic!("unsupported Soft SIMD sub-word width {bits} (supported: {FORMATS:?})"))
+}
+
 /// Precomputed per-format mask tables, indexed by sub-word width.
 /// Computed at compile time — the SWAR hot path must not rebuild masks
 /// (DESIGN.md §9).
@@ -216,5 +227,18 @@ mod tests {
     #[should_panic]
     fn rejects_unsupported_width() {
         SimdFormat::new(5);
+    }
+
+    #[test]
+    fn format_index_matches_formats_order() {
+        for (i, &b) in FORMATS.iter().enumerate() {
+            assert_eq!(format_index(b), i);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn format_index_rejects_unsupported_width() {
+        format_index(5);
     }
 }

@@ -1,8 +1,9 @@
 //! Dynamic batching: group inference requests into packed batches.
 //!
 //! Soft SIMD packs the batch dimension into sub-words, so the natural
-//! batch quantum is a multiple of the lane count (6 at 8-bit) — the
-//! engine pads the remainder with zero rows (DESIGN.md §8). The batcher
+//! batch quantum is a multiple of the model's per-layer lane counts
+//! (`CompiledModel::batch_quantum`; 6 for the uniform 8→16 schedule) —
+//! the engine pads the remainder with zero rows (DESIGN.md §8). The batcher
 //! accumulates requests until it can fill `target_rows` rows or a flush
 //! is forced; starvation is prevented by the coordinator's deadline
 //! thread, which drives [`Batcher::tick`] at a fixed period so

@@ -50,26 +50,48 @@ impl CostTable {
         }
     }
 
+    /// pJ per Stage-1 cycle at `fmt`. An uncharacterized format is a
+    /// deployment bug (silently billing a placeholder would corrupt
+    /// every downstream energy figure), so it is a hard error.
     pub fn s1_pj(&self, fmt: SimdFormat) -> f64 {
         self.s1_cycle_pj
             .iter()
             .find(|&&(b, _)| b == fmt.bits)
             .map(|&(_, v)| v)
-            .unwrap_or(1.0)
+            .unwrap_or_else(|| {
+                panic!(
+                    "CostTable has no Stage-1 characterization for format {fmt} \
+                     (characterized: {:?}); refusing to guess",
+                    self.s1_cycle_pj.iter().map(|&(b, _)| b).collect::<Vec<_>>()
+                )
+            })
     }
 
-    /// Energy of a workload expressed in cycles.
+    /// Energy of a single-format workload expressed in cycles.
     pub fn energy_pj(&self, s1_cycles: u64, fmt: SimdFormat, s2_passes: u64) -> f64 {
         s1_cycles as f64 * self.s1_pj(fmt) + s2_passes as f64 * self.s2_pass_pj
     }
 
+    /// Stage-1 energy of one engine run, each format's cycles billed at
+    /// its own characterized rate — with a mixed-precision schedule each
+    /// layer runs at its own width and a single-format average would
+    /// misprice the batch.
+    pub fn s1_energy_pj(&self, stats: &crate::coordinator::engine::EngineStats) -> f64 {
+        let mut pj = 0.0;
+        for (&bits, &cycles) in crate::bits::format::FORMATS
+            .iter()
+            .zip(&stats.s1_cycles_by_fmt)
+        {
+            if cycles > 0 {
+                pj += cycles as f64 * self.s1_pj(SimdFormat::new(bits));
+            }
+        }
+        pj
+    }
+
     /// Energy of one engine run (the worker hot path's single call).
-    pub fn batch_energy_pj(
-        &self,
-        stats: &crate::coordinator::engine::EngineStats,
-        fmt: SimdFormat,
-    ) -> f64 {
-        self.energy_pj(stats.s1_cycles, fmt, stats.s2_passes)
+    pub fn batch_energy_pj(&self, stats: &crate::coordinator::engine::EngineStats) -> f64 {
+        self.s1_energy_pj(stats) + stats.s2_passes as f64 * self.s2_pass_pj
     }
 }
 
@@ -86,5 +108,40 @@ mod tests {
         }
         assert!(t.s2_pass_pj > 0.0);
         assert!(t.area_um2 > 100.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no Stage-1 characterization")]
+    fn uncharacterized_format_is_a_hard_error() {
+        // Regression (the silent 1.0 pJ fallback): a table missing a
+        // format must refuse to price it, not invent a number.
+        let t = CostTable {
+            mhz: 1000.0,
+            s1_cycle_pj: vec![(8, 1.0)],
+            s2_pass_pj: 0.5,
+            area_um2: 1000.0,
+        };
+        let _ = t.s1_pj(SimdFormat::new(4));
+    }
+
+    #[test]
+    fn batch_energy_bills_each_format_at_its_own_rate() {
+        let t = CostTable {
+            mhz: 1000.0,
+            s1_cycle_pj: vec![(4, 0.25), (8, 1.0)],
+            s2_pass_pj: 0.5,
+            area_um2: 1000.0,
+        };
+        let mut by_fmt = [0u64; crate::bits::format::FORMATS.len()];
+        by_fmt[crate::bits::format::format_index(4)] = 20;
+        by_fmt[crate::bits::format::format_index(8)] = 10;
+        let stats = crate::coordinator::engine::EngineStats {
+            s1_cycles: 30,
+            s2_passes: 4,
+            s1_cycles_by_fmt: by_fmt,
+            ..Default::default()
+        };
+        // 20·0.25 + 10·1.0 + 4·0.5 = 17 pJ — not 30·(any single rate).
+        assert!((t.batch_energy_pj(&stats) - 17.0).abs() < 1e-9);
     }
 }

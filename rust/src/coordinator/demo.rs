@@ -27,7 +27,7 @@ pub fn serve_demo(n: usize) -> anyhow::Result<()> {
         cost.area_um2,
         cost.s1_pj(crate::bits::format::SimdFormat::new(8))
     );
-    let model = CompiledModel::compile(layers, 8, 16);
+    let model = CompiledModel::compile(layers, 8, 16)?;
     let digits = Digits::standard();
     let (xs, ys) = digits.sample(n, 0.3, 0x5E21E);
 

@@ -1,36 +1,74 @@
 //! Packed MLP execution on a simulated PE.
 //!
-//! Layer semantics are pinned in DESIGN.md §4 and must match
-//! `nn::exec::mlp_forward_row` bit-exactly — the integration tests
+//! Layer semantics are pinned in DESIGN.md §4/§10 and must match
+//! `nn::exec::mlp_forward_row_mixed` bit-exactly — the integration tests
 //! enforce it. The engine packs the *batch* dimension into sub-words:
 //! every sample's activation `x[m][k]` for a fixed `k` shares the same
 //! weight multiplier `w[k][n]`, which is exactly the "one multiplier,
 //! several multiplicands" pattern of Section III-B.
 //!
+//! The engine is **format-polymorphic**: each layer executes at its own
+//! activation/accumulator format pair from the model's precision
+//! schedule, so lane occupancy changes per layer (12 sub-words per word
+//! at 4-bit, 6 at 8-bit, 3 at 16-bit) and words-per-column, Stage-1
+//! cycle billing and Stage-2 pass billing are all per-layer. At every
+//! layer boundary the activation stream is repacked through the Stage-2
+//! crossbar chain precompiled in the model (`boundary_chain`), after the
+//! scalar activation unit applies ReLU — this is the paper's "changing
+//! the bitwidth of sub-words at run-time" exercised on the serving path.
+//!
 //! The engine owns no weights and compiles no plans: it executes a
 //! shared immutable [`CompiledModel`] (DESIGN.md §8). Batches are padded
-//! with zero rows up to the lane multiple (6 at 8-bit) so every packed
-//! word runs full; pad rows are dropped before returning and tallied in
-//! [`EngineStats::pad_rows`].
+//! with zero rows up to the model's batch quantum (the LCM of every
+//! layer's lane counts; 6 for the uniform 8→16 schedule) so every packed
+//! word runs full at every layer; pad rows are dropped before returning
+//! and tallied in [`EngineStats::pad_rows`] — and are *not* billed as
+//! useful sub-word multiplies.
 
 use std::sync::Arc;
 
+use crate::bits::format::{format_index, SimdFormat, FORMATS};
 use crate::bits::pack::{pack_stream, unpack_stream};
 use crate::bits::swar::swar_add;
 use crate::pipeline::stage1::Stage1;
-use crate::pipeline::stage2::{repack_cycles_exact, repack_stream};
+use crate::pipeline::stage2::{convert_subword, repack_cycles_exact, repack_stream};
 
 use super::model::CompiledModel;
 
-/// Cycle/energy tallies of one engine run.
+/// Cycle/energy tallies of one engine run. Aggregate counters are kept
+/// for quick reads; the `*_by_fmt` arrays (indexed parallel to
+/// [`FORMATS`]) split the same work by the format it ran at, which is
+/// what exact per-format energy billing needs once layers differ in
+/// width ([`super::cost::CostTable::batch_energy_pj`]).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EngineStats {
     pub s1_cycles: u64,
     pub s2_passes: u64,
     pub acc_adds: u64,
+    /// Useful sub-word multiplies: real batch rows only — zero-pad
+    /// lanes are excluded, consistent with `repack_cycles_exact`'s
+    /// padding-exempt accounting.
     pub subword_mults: u64,
     /// Zero rows appended to fill the last packed word of the batch.
     pub pad_rows: u64,
+    /// Stage-1 multiply cycles split by the format they ran at.
+    pub s1_cycles_by_fmt: [u64; FORMATS.len()],
+    /// Stage-2 crossbar passes split by the format they *produced*.
+    pub s2_passes_by_fmt: [u64; FORMATS.len()],
+}
+
+impl EngineStats {
+    #[inline]
+    fn note_s1(&mut self, fmt: SimdFormat, cycles: u64) {
+        self.s1_cycles += cycles;
+        self.s1_cycles_by_fmt[format_index(fmt.bits)] += cycles;
+    }
+
+    #[inline]
+    fn note_s2(&mut self, produced: SimdFormat, passes: u64) {
+        self.s2_passes += passes;
+        self.s2_passes_by_fmt[format_index(produced.bits)] += passes;
+    }
 }
 
 /// A packed-execution engine bound to one PE, sharing one compiled model.
@@ -49,21 +87,19 @@ impl PackedMlpEngine {
         &self.model
     }
 
-    /// Forward a batch (rows of `Q1.(in_bits-1)` raws) through all
-    /// layers using packed arithmetic; returns final accumulators
-    /// (`Q1.(acc_bits-1)`) per row, plus tallies.
+    /// Forward a batch (rows of `Q1.(in_bits-1)` raws at the first
+    /// layer's activation format) through all layers using packed
+    /// arithmetic; returns final accumulators (`Q1.(acc_bits-1)` at the
+    /// last layer's accumulator format) per row, plus tallies.
     pub fn forward_batch(&self, batch: &[Vec<i64>]) -> (Vec<Vec<i64>>, EngineStats) {
         let model = &*self.model;
         let m = batch.len();
         assert!(m > 0, "empty batch");
-        let in_fmt = model.in_fmt();
-        let acc_fmt = model.acc_fmt();
-        let in_bits = model.in_bits();
-        let acc_bits = model.acc_bits();
-        let lanes = model.lanes();
-        // Pad the batch dimension to the lane multiple: packed words run
-        // full and the accumulator stream has no partial final word.
-        let mp = m.div_ceil(lanes) * lanes;
+        // Pad the batch dimension to the model's batch quantum: packed
+        // words run full at every layer's format and no layer's
+        // accumulator stream has a partial final word.
+        let quantum = model.batch_quantum();
+        let mp = m.div_ceil(quantum) * quantum;
         let mut stats = EngineStats {
             pad_rows: (mp - m) as u64,
             ..EngineStats::default()
@@ -77,21 +113,26 @@ impl PackedMlpEngine {
                 col
             })
             .collect();
-        let mut s1 = Stage1::new(in_fmt);
+        let mut s1 = Stage1::new(model.precision(0).in_fmt());
         for (li, layer) in layers.iter().enumerate() {
             assert_eq!(h.len(), layer.k, "layer {li} input width");
-            // Pack each activation column across the batch.
+            let prec = model.precision(li);
+            let (in_fmt, acc_fmt) = (prec.in_fmt(), prec.acc_fmt());
+            let (in_bits, acc_bits) = (prec.in_bits, prec.acc_bits);
+            s1.set_fmt(in_fmt);
+            // Pack each activation column across the batch at this
+            // layer's activation format.
             let packed_cols: Vec<Vec<u64>> =
                 h.iter().map(|col| pack_stream(col, in_fmt)).collect();
             let acc_words_per_n = (mp * acc_bits as usize).div_ceil(48);
             // Fast path: the accumulate format is exactly double the
-            // input format (8→16 here) — use the SWAR widen instead of
-            // the generic stream repack (DESIGN.md §9).
+            // input format — use the SWAR widen instead of the generic
+            // stream repack (DESIGN.md §9).
             let doubling = acc_bits == 2 * in_bits;
             let mut out_cols: Vec<Vec<i64>> = Vec::with_capacity(layer.n);
-            let mut acc16 = vec![0u64; acc_words_per_n];
+            let mut acc = vec![0u64; acc_words_per_n];
             for n in 0..layer.n {
-                acc16.iter_mut().for_each(|w| *w = 0);
+                acc.iter_mut().for_each(|w| *w = 0);
                 for k in 0..layer.k {
                     let plan = model.plan(li, k, n);
                     if plan.ops.is_empty() {
@@ -105,50 +146,81 @@ impl PackedMlpEngine {
                             // produced output word — the hi word exists
                             // only when the accumulator stream extends
                             // that far (always, once the batch is padded
-                            // to the lane multiple).
-                            acc16[2 * wi] = swar_add(acc16[2 * wi], lo, acc_fmt);
+                            // to the batch quantum).
+                            acc[2 * wi] = swar_add(acc[2 * wi], lo, acc_fmt);
                             stats.acc_adds += 1;
-                            stats.s2_passes += 1;
-                            if 2 * wi + 1 < acc16.len() {
-                                acc16[2 * wi + 1] =
-                                    swar_add(acc16[2 * wi + 1], hi, acc_fmt);
+                            stats.note_s2(acc_fmt, 1);
+                            if 2 * wi + 1 < acc.len() {
+                                acc[2 * wi + 1] =
+                                    swar_add(acc[2 * wi + 1], hi, acc_fmt);
                                 stats.acc_adds += 1;
-                                stats.s2_passes += 1;
+                                stats.note_s2(acc_fmt, 1);
                             }
                         }
                     } else {
                         // Generic path through the canonical stream
                         // repack; Stage-2 passes are charged for the
-                        // sub-words actually converted, chained hops
-                        // included.
+                        // sub-words actually converted (a single direct
+                        // widening hop here — `acc ≥ in` always). When
+                        // in == acc the product words accumulate as-is:
+                        // no conversion happens, so none is billed.
                         let mut products = Vec::with_capacity(packed_cols[k].len());
                         for &word in &packed_cols[k] {
                             products.push(s1.run_plan_on(word, plan));
                         }
-                        let wide = repack_stream(&products, in_fmt, acc_fmt, mp);
-                        stats.s2_passes += repack_cycles_exact(mp, in_fmt, acc_fmt);
-                        for (w, &p) in acc16.iter_mut().zip(wide.iter()) {
+                        let wide = if in_fmt == acc_fmt {
+                            products
+                        } else {
+                            stats.note_s2(acc_fmt, repack_cycles_exact(mp, in_fmt, acc_fmt));
+                            repack_stream(&products, in_fmt, acc_fmt, mp)
+                        };
+                        for (w, &p) in acc.iter_mut().zip(wide.iter()) {
                             *w = swar_add(*w, p, acc_fmt);
                             stats.acc_adds += 1;
                         }
                     }
-                    stats.s1_cycles +=
-                        plan.cycles() as u64 * packed_cols[k].len() as u64;
-                    stats.subword_mults +=
-                        in_fmt.lanes() as u64 * packed_cols[k].len() as u64;
+                    stats.note_s1(
+                        in_fmt,
+                        plan.cycles() as u64 * packed_cols[k].len() as u64,
+                    );
+                    // Only the m real rows are useful multiplies; the
+                    // zero-pad lanes of the batch tail are not.
+                    stats.subword_mults += m as u64;
                 }
-                out_cols.push(unpack_stream(&acc16, acc_fmt, mp));
+                out_cols.push(unpack_stream(&acc, acc_fmt, mp));
             }
             if li + 1 < layers.len() {
-                // ReLU + requantize (activation unit, scalar glue).
+                // ReLU (activation unit, scalar glue) then the Stage-2
+                // repack of each output column's accumulator stream
+                // into the next layer's activation format — the
+                // run-time sub-word bitwidth switch of Section III-C.
+                // The hop chain was precompiled at model compile; the
+                // per-value conversion below is exactly what
+                // `repack_stream` applies between its unpack and pack
+                // (the next layer's `pack_stream` re-packs the stream).
+                // An empty chain is a Stage-2 bypass: no crossbar
+                // traversal happens and none is billed.
+                let chain = model.boundary_chain(li);
                 h = out_cols
                     .iter()
                     .map(|col| {
                         col.iter()
-                            .map(|&v| v.max(0) >> (acc_bits - in_bits))
+                            .map(|&v| {
+                                let mut x = v.max(0);
+                                for &(f, t) in chain {
+                                    x = convert_subword(x, f, t);
+                                }
+                                x
+                            })
                             .collect()
                     })
                     .collect();
+                // One crossbar cycle per output word each hop produces,
+                // per output column — billed to the format produced.
+                for &(_, t) in chain {
+                    let passes = (mp * t.bits as usize).div_ceil(48) as u64;
+                    stats.note_s2(t, passes * layer.n as u64);
+                }
             } else {
                 // Transpose back to row-major, dropping the pad rows.
                 let out: Vec<Vec<i64>> = (0..m)
@@ -157,15 +229,15 @@ impl PackedMlpEngine {
                 return (out, stats);
             }
         }
-        unreachable!("empty layer stack")
+        unreachable!("CompiledModel::compile rejects empty layer stacks")
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::exec::mlp_forward_row;
-    use crate::nn::weights::QuantLayer;
+    use crate::nn::exec::{mlp_forward_row, mlp_forward_row_mixed};
+    use crate::nn::weights::{LayerPrecision, QuantLayer};
     use crate::workload::synth::XorShift64;
 
     fn random_layers(rng: &mut XorShift64) -> Vec<QuantLayer> {
@@ -184,7 +256,7 @@ mod tests {
     fn packed_engine_matches_scalar_reference() {
         let mut rng = XorShift64::new(0xE8E8);
         let layers = random_layers(&mut rng);
-        let model = CompiledModel::compile(layers.clone(), 8, 16);
+        let model = CompiledModel::compile(layers.clone(), 8, 16).unwrap();
         let engine = PackedMlpEngine::new(model);
         for batch_size in [1usize, 3, 6, 16, 17] {
             let batch: Vec<Vec<i64>> = (0..batch_size)
@@ -206,9 +278,53 @@ mod tests {
     }
 
     #[test]
+    fn mixed_precision_layers_match_scalar_oracle() {
+        let mut rng = XorShift64::new(0xE8E9);
+        let layers = random_layers(&mut rng);
+        // Widening 4→8 activations (direct boundary) and a 16→4
+        // boundary that needs the 2-hop chain.
+        let schedules = [
+            vec![LayerPrecision::new(4, 8), LayerPrecision::new(8, 16)],
+            vec![LayerPrecision::new(8, 16), LayerPrecision::new(4, 8)],
+        ];
+        for sched in &schedules {
+            let model =
+                CompiledModel::compile_scheduled(layers.clone(), sched.clone()).unwrap();
+            let engine = PackedMlpEngine::new(model);
+            for batch_size in [1usize, 5, 12, 25] {
+                let batch: Vec<Vec<i64>> = (0..batch_size)
+                    .map(|_| (0..10).map(|_| rng.q_raw(sched[0].in_bits)).collect())
+                    .collect();
+                let (got, stats) = engine.forward_batch(&batch);
+                for (b, row) in batch.iter().enumerate() {
+                    let want = mlp_forward_row_mixed(row, &layers, sched);
+                    assert_eq!(got[b], want, "sched {:?} row {b}", sched);
+                }
+                // Stage-1 cycles landed in both layers' format buckets.
+                for p in sched {
+                    assert!(
+                        stats.s1_cycles_by_fmt[format_index(p.in_bits)] > 0,
+                        "no S1 cycles at {}b",
+                        p.in_bits
+                    );
+                }
+                assert_eq!(
+                    stats.s1_cycles_by_fmt.iter().sum::<u64>(),
+                    stats.s1_cycles
+                );
+                assert_eq!(
+                    stats.s2_passes_by_fmt.iter().sum::<u64>(),
+                    stats.s2_passes
+                );
+            }
+        }
+    }
+
+    #[test]
     fn zero_weights_cost_nothing() {
         let layers = vec![QuantLayer::new(vec![vec![0, 64], vec![0, -32]], 8)];
-        let engine = PackedMlpEngine::new(CompiledModel::compile(layers, 8, 16));
+        let engine =
+            PackedMlpEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
         let batch = vec![vec![100i64, -50], vec![25, 77]];
         let (_, stats) = engine.forward_batch(&batch);
         // Column n=0 is all-zero weights: only n=1's two weights run.
@@ -223,7 +339,8 @@ mod tests {
     fn stats_scale_with_batch_words() {
         let mut rng = XorShift64::new(0x57A7);
         let layers = random_layers(&mut rng);
-        let engine = PackedMlpEngine::new(CompiledModel::compile(layers, 8, 16));
+        let engine =
+            PackedMlpEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
         let mk_batch = |n: usize, rng: &mut XorShift64| -> Vec<Vec<i64>> {
             (0..n).map(|_| (0..10).map(|_| rng.q_raw(8)).collect()).collect()
         };
@@ -241,7 +358,8 @@ mod tests {
         // packs into one input word → two 16-bit accumulator words →
         // exactly 2 widen passes and 2 accumulate adds.
         let layers = vec![QuantLayer::new(vec![vec![64]], 8)];
-        let engine = PackedMlpEngine::new(CompiledModel::compile(layers, 8, 16));
+        let engine =
+            PackedMlpEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
         let batch: Vec<Vec<i64>> = (0..6).map(|i| vec![i as i64 * 10 - 25]).collect();
         let (_, stats) = engine.forward_batch(&batch);
         assert_eq!(stats.acc_adds, 2);
@@ -251,5 +369,93 @@ mod tests {
         assert_eq!(s3.acc_adds, 2);
         assert_eq!(s3.s2_passes, 2);
         assert_eq!(s3.pad_rows, 3);
+    }
+
+    #[test]
+    fn subword_mults_bill_real_rows_not_pad_lanes() {
+        // Regression (the pad-lane billing bug): a 3-row batch on a
+        // 1×1 single-weight layer must report 3 useful multiplies per
+        // word-weight, not the 6 lanes the padded word physically runs.
+        let layers = vec![QuantLayer::new(vec![vec![64]], 8)];
+        let engine =
+            PackedMlpEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
+        let batch: Vec<Vec<i64>> = (0..3).map(|i| vec![i as i64 * 7 - 3]).collect();
+        let (_, stats) = engine.forward_batch(&batch);
+        assert_eq!(stats.subword_mults, 3);
+        assert_eq!(stats.pad_rows, 3);
+        // A full 6-row word bills all 6 — padding-exempt, not lane-blind.
+        let full: Vec<Vec<i64>> = (0..6).map(|i| vec![i as i64 * 7 - 3]).collect();
+        let (_, s6) = engine.forward_batch(&full);
+        assert_eq!(s6.subword_mults, 6);
+        assert_eq!(s6.pad_rows, 0);
+    }
+
+    #[test]
+    fn equal_width_accumulate_and_bypass_boundary_bill_no_passes() {
+        // in == acc layer: products accumulate without any conversion,
+        // so no crossbar pass may be billed.
+        let layers = vec![QuantLayer::new(vec![vec![64]], 8)];
+        let engine =
+            PackedMlpEngine::new(CompiledModel::compile(layers, 8, 8).unwrap());
+        let batch: Vec<Vec<i64>> = (0..6).map(|i| vec![i as i64 - 3]).collect();
+        let (_, stats) = engine.forward_batch(&batch);
+        assert_eq!(stats.s2_passes, 0);
+        assert!(stats.acc_adds > 0);
+        // Bypass boundary (acc == next layer's in): nothing billed
+        // either — only the two layers' widen passes remain.
+        let layers = vec![
+            QuantLayer::new(vec![vec![64]], 8),
+            QuantLayer::new(vec![vec![32]], 8),
+        ];
+        let sched = vec![LayerPrecision::new(4, 8), LayerPrecision::new(8, 16)];
+        let engine = PackedMlpEngine::new(
+            CompiledModel::compile_scheduled(layers, sched).unwrap(),
+        );
+        let batch: Vec<Vec<i64>> = (0..12).map(|i| vec![(i % 8) as i64 - 4]).collect();
+        let (_, stats) = engine.forward_batch(&batch);
+        // 12 rows: layer 0 produces 2 acc words (@8b), layer 1 produces
+        // 4 (@16b); the 8→8 boundary adds zero.
+        assert_eq!(stats.s2_passes, 2 + 4);
+    }
+
+    #[test]
+    fn two_hop_boundary_bills_each_hop_to_its_produced_format() {
+        // [(8,16), (4,8)]: the 16→4 boundary chains via 8. At a 12-row
+        // batch the 16→8 hop produces ceil(12·8/48) = 2 words and the
+        // 8→4 hop ceil(12·4/48) = 1, per hidden column — each booked to
+        // the format it produced, not all to the final one.
+        let mut rng = XorShift64::new(0x2B0B);
+        let layers = random_layers(&mut rng);
+        let hidden_n = layers[0].n as u64;
+        let sched = vec![LayerPrecision::new(8, 16), LayerPrecision::new(4, 8)];
+        let engine = PackedMlpEngine::new(
+            CompiledModel::compile_scheduled(layers, sched).unwrap(),
+        );
+        let batch: Vec<Vec<i64>> = (0..12)
+            .map(|_| (0..10).map(|_| rng.q_raw(8)).collect())
+            .collect();
+        let (_, stats) = engine.forward_batch(&batch);
+        // Only the boundary's second hop produces 4-bit words.
+        assert_eq!(stats.s2_passes_by_fmt[format_index(4)], hidden_n);
+        // The first hop's 8-bit words are in the 8-bit bucket (together
+        // with layer 1's 4→8 widen passes).
+        assert!(stats.s2_passes_by_fmt[format_index(8)] >= 2 * hidden_n);
+    }
+
+    #[test]
+    fn boundary_repack_is_billed_per_output_column() {
+        // 2-layer uniform 8→16 model: the 16→8 boundary conversion of
+        // each hidden column is billed as Stage-2 passes producing 8-bit
+        // words: ceil(6·8/48) = 1 pass per column at a 6-row batch.
+        let mut rng = XorShift64::new(0xB0B0);
+        let layers = random_layers(&mut rng);
+        let hidden_n = layers[0].n as u64;
+        let engine =
+            PackedMlpEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
+        let batch: Vec<Vec<i64>> = (0..6)
+            .map(|_| (0..10).map(|_| rng.q_raw(8)).collect())
+            .collect();
+        let (_, stats) = engine.forward_batch(&batch);
+        assert_eq!(stats.s2_passes_by_fmt[format_index(8)], hidden_n);
     }
 }

@@ -4,6 +4,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+use crate::bits::format::FORMATS;
+
 const LAT_BUCKETS: usize = 64;
 
 /// Shared counters (lock-free; updated by PE workers).
@@ -19,6 +21,11 @@ pub struct Metrics {
     pub subword_mults: AtomicU64,
     pub s1_cycles: AtomicU64,
     pub s2_passes: AtomicU64,
+    /// Stage-1 cycles split by the format they ran at (parallel to
+    /// `FORMATS`) — the serving-side view of a mixed-precision schedule.
+    pub s1_cycles_by_fmt: [AtomicU64; FORMATS.len()],
+    /// Stage-2 passes split by the format they produced.
+    pub s2_passes_by_fmt: [AtomicU64; FORMATS.len()],
     /// Simulated energy, femto-joules (integer for atomic accumulation).
     pub energy_fj: AtomicU64,
     /// Wall time spent in PE compute, nanoseconds.
@@ -45,6 +52,8 @@ impl Default for Metrics {
             subword_mults: AtomicU64::new(0),
             s1_cycles: AtomicU64::new(0),
             s2_passes: AtomicU64::new(0),
+            s1_cycles_by_fmt: std::array::from_fn(|_| AtomicU64::new(0)),
+            s2_passes_by_fmt: std::array::from_fn(|_| AtomicU64::new(0)),
             energy_fj: AtomicU64::new(0),
             compute_ns: AtomicU64::new(0),
             lat_hist: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -84,6 +93,12 @@ impl Metrics {
             .fetch_add(stats.subword_mults, Ordering::Relaxed);
         self.s1_cycles.fetch_add(stats.s1_cycles, Ordering::Relaxed);
         self.s2_passes.fetch_add(stats.s2_passes, Ordering::Relaxed);
+        for (dst, &src) in self.s1_cycles_by_fmt.iter().zip(&stats.s1_cycles_by_fmt) {
+            dst.fetch_add(src, Ordering::Relaxed);
+        }
+        for (dst, &src) in self.s2_passes_by_fmt.iter().zip(&stats.s2_passes_by_fmt) {
+            dst.fetch_add(src, Ordering::Relaxed);
+        }
         self.energy_fj
             .fetch_add((pj * 1000.0) as u64, Ordering::Relaxed);
         self.compute_ns.fetch_add(ns, Ordering::Relaxed);
@@ -144,9 +159,19 @@ impl Metrics {
         let ns = self.compute_ns.load(Ordering::Relaxed).max(1);
         let p50 = self.latency_quantile_ns(0.50).unwrap_or(0) as f64 / 1e3;
         let p99 = self.latency_quantile_ns(0.99).unwrap_or(0) as f64 / 1e3;
+        // Per-format Stage-1 breakdown, formats actually exercised only.
+        let by_fmt: String = FORMATS
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &b)| {
+                let c = self.s1_cycles_by_fmt[i].load(Ordering::Relaxed);
+                (c > 0).then(|| format!("{b}b:{c}"))
+            })
+            .collect::<Vec<_>>()
+            .join(",");
         format!(
             "requests={} batches={} rows={} pad_rows={} dropped_rows={} \
-             subword_mults={} s1_cycles={} s2_passes={} \
+             subword_mults={} s1_cycles={} s1_by_fmt=[{}] s2_passes={} \
              sim_energy={:.2} nJ mean_pJ/mult={:.3} \
              host_throughput={:.1} Mmult/s rows/s={:.0} \
              latency_p50={:.0}us latency_p99={:.0}us",
@@ -157,6 +182,7 @@ impl Metrics {
             self.dropped_rows.load(Ordering::Relaxed),
             mults,
             cycles,
+            by_fmt,
             self.s2_passes.load(Ordering::Relaxed),
             pj / 1000.0,
             if mults > 0 { pj / mults as f64 } else { 0.0 },
@@ -175,19 +201,26 @@ mod tests {
     #[test]
     fn accumulates() {
         let m = Metrics::default();
+        let mut by_fmt = [0u64; FORMATS.len()];
+        by_fmt[crate::bits::format::format_index(8)] = 10;
         let stats = crate::coordinator::engine::EngineStats {
             s1_cycles: 10,
             s2_passes: 2,
             acc_adds: 5,
             subword_mults: 60,
             pad_rows: 1,
+            s1_cycles_by_fmt: by_fmt,
+            s2_passes_by_fmt: [0; FORMATS.len()],
         };
         m.add_batch(6, stats, 1.5, 100);
         m.add_batch(6, stats, 1.5, 100);
         assert_eq!(m.rows.load(Ordering::Relaxed), 12);
         assert_eq!(m.pad_rows.load(Ordering::Relaxed), 2);
         assert_eq!(m.subword_mults.load(Ordering::Relaxed), 120);
+        let i8 = crate::bits::format::format_index(8);
+        assert_eq!(m.s1_cycles_by_fmt[i8].load(Ordering::Relaxed), 20);
         assert!(m.report().contains("rows=12"));
+        assert!(m.report().contains("8b:20"), "{}", m.report());
     }
 
     #[test]

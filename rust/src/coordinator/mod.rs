@@ -7,13 +7,18 @@
 //! NN layers execute *packed*: activations are packed across the batch
 //! dimension (the sub-words sharing one CSD multiplier — the paper's
 //! "multiplier value with several multiplicands"), products are
-//! Stage-2-repacked 8→16 and accumulated with boundary-killed adds.
+//! Stage-2-repacked into each layer's accumulator format and accumulated
+//! with boundary-killed adds.
 //!
 //! The serving engine is built around one immutable [`CompiledModel`]
-//! (weights + precompiled CSD multiply plans) shared via `Arc` across
+//! (weights + precompiled CSD multiply plans + the per-layer precision
+//! schedule with its boundary conversion chains) shared via `Arc` across
 //! every PE worker; dispatch is load-aware over bounded per-worker
 //! queues, and a deadline thread flushes straggler batches (DESIGN.md
-//! §8).
+//! §8). Layers may run at different activation/accumulator widths — the
+//! engine switches sub-word bitwidth between layers through the Stage-2
+//! crossbar and the cost path bills every cycle at the format it
+//! actually ran at (DESIGN.md §10).
 //!
 //! Offline-image note: the std thread + channel fabric stands in for
 //! tokio (DESIGN.md §8); the public API is synchronous `submit`/`drain`.
@@ -28,9 +33,11 @@ pub mod server;
 
 pub use batcher::{Batch, Batcher, TrackedRequest};
 pub use cost::CostTable;
-pub use engine::PackedMlpEngine;
+pub use engine::{EngineStats, PackedMlpEngine};
 pub use metrics::Metrics;
 pub use model::CompiledModel;
 pub use server::{
     Coordinator, DispatchPolicy, Request, Response, ServeConfig, ServeError,
 };
+
+pub use crate::nn::weights::LayerPrecision;

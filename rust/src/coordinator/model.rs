@@ -8,28 +8,48 @@
 //! expensive, quantization-dependent step, so it must happen off the
 //! per-request critical path and exactly once per deployed model — not
 //! once per worker, as the original demo loop did.
+//!
+//! Since the engine went format-polymorphic (DESIGN.md §10), the
+//! compiled model also carries the *precision schedule* — one
+//! [`LayerPrecision`] per layer — together with the precomputed Stage-2
+//! conversion chain for every layer boundary, and the batch quantum that
+//! keeps every packed word full at every per-layer format. All of it is
+//! validated here, at compile, so a malformed model (empty stack,
+//! non-chaining dims, unsupported or inverted format pair) is an error
+//! for its builder — never a panic inside a PE worker.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::anyhow;
 use crate::bits::format::SimdFormat;
 use crate::csd::schedule::MulPlan;
-use crate::nn::weights::QuantLayer;
+use crate::nn::weights::{uniform_schedule, LayerPrecision, QuantLayer};
+use crate::pipeline::stage2::conversion_chain;
 
 /// Process-wide count of [`CompiledModel::compile`] runs. Exists so
 /// tests can assert that plan compilation happens exactly once per
 /// model no matter how many PE workers serve it.
 pub static PLAN_COMPILATIONS: AtomicU64 = AtomicU64::new(0);
 
-/// An immutable compiled model: quantized layers plus every per-weight
-/// [`MulPlan`], shared across all PE workers via [`Arc`].
+/// An immutable compiled model: quantized layers, per-layer serving
+/// precision, plus every per-weight [`MulPlan`] and per-boundary
+/// Stage-2 conversion chain, shared across all PE workers via [`Arc`].
 #[derive(Debug)]
 pub struct CompiledModel {
     layers: Vec<QuantLayer>,
     /// `plans[layer][k][n]`, precompiled for every weight.
     plans: Vec<Vec<Vec<MulPlan>>>,
-    in_bits: u32,
-    acc_bits: u32,
+    /// One activation/accumulator format pair per layer.
+    schedule: Vec<LayerPrecision>,
+    /// `chains[li]`: the crossbar hop chain converting layer `li`'s
+    /// accumulator stream into layer `li+1`'s activation format
+    /// (`layers.len() - 1` entries; empty chain = Stage-2 bypass).
+    chains: Vec<Vec<(SimdFormat, SimdFormat)>>,
+    /// Rows per full packed batch: the LCM of every layer's activation
+    /// and accumulator lane counts, so no layer ever sees a partial
+    /// final word (6 for the uniform 8→16 schedule, up to 24 mixed).
+    batch_quantum: usize,
     /// Total Stage-1 cycles of one forward pass per packed word column
     /// (sum of plan cycles over all weights) — scheduling metadata for
     /// load estimates.
@@ -38,14 +58,75 @@ pub struct CompiledModel {
     zero_weights: u64,
 }
 
+fn lcm(a: usize, b: usize) -> usize {
+    let gcd = |mut x: usize, mut y: usize| {
+        while y != 0 {
+            (x, y) = (y, x % y);
+        }
+        x
+    };
+    a / gcd(a, b) * b
+}
+
 impl CompiledModel {
-    /// Compile all CSD multiply plans for `layers`. Call once per model;
-    /// clone the returned [`Arc`], never the model.
-    pub fn compile(layers: Vec<QuantLayer>, in_bits: u32, acc_bits: u32) -> Arc<CompiledModel> {
-        assert!(!layers.is_empty(), "model needs at least one layer");
-        // Validate the format pair up front so workers never do.
-        let _ = SimdFormat::new(in_bits);
-        let _ = SimdFormat::new(acc_bits);
+    /// Compile a uniform-precision model (every layer at
+    /// `in_bits → acc_bits`, the seed engine's only mode). Call once per
+    /// model; clone the returned [`Arc`], never the model.
+    pub fn compile(
+        layers: Vec<QuantLayer>,
+        in_bits: u32,
+        acc_bits: u32,
+    ) -> anyhow::Result<Arc<CompiledModel>> {
+        let schedule = uniform_schedule(in_bits, acc_bits, layers.len());
+        CompiledModel::compile_scheduled(layers, schedule)
+    }
+
+    /// Compile a mixed-precision model: layer `li` consumes
+    /// `schedule[li].in_bits` activations and produces
+    /// `schedule[li].acc_bits` accumulators; boundary conversion chains
+    /// are precomputed here so workers never run the BFS. All structural
+    /// validation happens here (DESIGN.md §10).
+    pub fn compile_scheduled(
+        layers: Vec<QuantLayer>,
+        schedule: Vec<LayerPrecision>,
+    ) -> anyhow::Result<Arc<CompiledModel>> {
+        anyhow::ensure!(!layers.is_empty(), "model needs at least one layer");
+        anyhow::ensure!(
+            layers.len() == schedule.len(),
+            "{} layers but {} precision entries",
+            layers.len(),
+            schedule.len()
+        );
+        let mut batch_quantum = 1usize;
+        for (li, (layer, p)) in layers.iter().zip(&schedule).enumerate() {
+            p.validate()
+                .map_err(|e| anyhow::anyhow!("layer {li}: {e}"))?;
+            anyhow::ensure!(
+                crate::bits::format::FORMATS.contains(&layer.bits),
+                "layer {li}: weight width {} is not a Soft SIMD format",
+                layer.bits
+            );
+            anyhow::ensure!(
+                layer.k > 0 && layer.n > 0,
+                "layer {li}: degenerate shape {}x{}",
+                layer.k,
+                layer.n
+            );
+            if li > 0 {
+                anyhow::ensure!(
+                    layers[li - 1].n == layer.k,
+                    "layer {li}: input width {} != previous layer's output width {}",
+                    layer.k,
+                    layers[li - 1].n
+                );
+            }
+            batch_quantum = lcm(batch_quantum, p.in_fmt().lanes() as usize);
+            batch_quantum = lcm(batch_quantum, p.acc_fmt().lanes() as usize);
+        }
+        let chains = schedule
+            .windows(2)
+            .map(|w| conversion_chain(w[0].acc_fmt(), w[1].in_fmt()))
+            .collect();
         PLAN_COMPILATIONS.fetch_add(1, Ordering::SeqCst);
         let plans = crate::nn::exec::precompute_plans(&layers);
         let mut cycles_per_word = 0u64;
@@ -61,14 +142,15 @@ impl CompiledModel {
                 }
             }
         }
-        Arc::new(CompiledModel {
+        Ok(Arc::new(CompiledModel {
             layers,
             plans,
-            in_bits,
-            acc_bits,
+            schedule,
+            chains,
+            batch_quantum,
             cycles_per_word,
             zero_weights,
-        })
+        }))
     }
 
     pub fn layers(&self) -> &[QuantLayer] {
@@ -81,20 +163,42 @@ impl CompiledModel {
         &self.plans[li][k][n]
     }
 
-    pub fn in_bits(&self) -> u32 {
-        self.in_bits
+    /// The full precision schedule, one entry per layer.
+    pub fn schedule(&self) -> &[LayerPrecision] {
+        &self.schedule
     }
 
+    /// Layer `li`'s activation/accumulator format pair.
+    #[inline]
+    pub fn precision(&self, li: usize) -> LayerPrecision {
+        self.schedule[li]
+    }
+
+    /// The precomputed crossbar chain converting layer `li`'s
+    /// accumulators into layer `li+1`'s activations (empty = bypass).
+    #[inline]
+    pub fn boundary_chain(&self, li: usize) -> &[(SimdFormat, SimdFormat)] {
+        &self.chains[li]
+    }
+
+    /// Activation width (bits) of the first layer — what requests
+    /// arrive quantized to.
+    pub fn in_bits(&self) -> u32 {
+        self.schedule[0].in_bits
+    }
+
+    /// Accumulator width (bits) of the last layer — what responses
+    /// carry.
     pub fn acc_bits(&self) -> u32 {
-        self.acc_bits
+        self.schedule[self.schedule.len() - 1].acc_bits
     }
 
     pub fn in_fmt(&self) -> SimdFormat {
-        SimdFormat::new(self.in_bits)
+        self.schedule[0].in_fmt()
     }
 
     pub fn acc_fmt(&self) -> SimdFormat {
-        SimdFormat::new(self.acc_bits)
+        self.schedule[self.schedule.len() - 1].acc_fmt()
     }
 
     /// Activation width of the first layer (row length of a request).
@@ -102,9 +206,11 @@ impl CompiledModel {
         self.layers[0].k
     }
 
-    /// Sub-words per packed activation word (6 at 8-bit).
-    pub fn lanes(&self) -> usize {
-        self.in_fmt().lanes() as usize
+    /// Rows per full packed batch: batches padded to a multiple of this
+    /// keep every packed word full at every layer's format (6 for the
+    /// uniform 8→16 schedule).
+    pub fn batch_quantum(&self) -> usize {
+        self.batch_quantum
     }
 
     /// Stage-1 cycles one packed word column costs across the whole
@@ -132,18 +238,53 @@ mod tests {
     #[test]
     fn compile_counts_and_metadata() {
         let before = PLAN_COMPILATIONS.load(Ordering::SeqCst);
-        let m = CompiledModel::compile(layers(), 8, 16);
+        let m = CompiledModel::compile(layers(), 8, 16).unwrap();
         assert_eq!(PLAN_COMPILATIONS.load(Ordering::SeqCst), before + 1);
         assert_eq!(m.input_width(), 2);
-        assert_eq!(m.lanes(), 6);
+        assert_eq!(m.batch_quantum(), 6); // lcm(6 @8b, 3 @16b)
         assert_eq!(m.zero_weights(), 1);
         assert!(m.cycles_per_word() > 0);
         assert_eq!(m.plan(0, 0, 0).ops.len(), m.layers()[0].plan(0, 0).ops.len());
+        assert_eq!(m.boundary_chain(0), &[(SimdFormat::new(16), SimdFormat::new(8))]);
     }
 
     #[test]
-    #[should_panic]
-    fn rejects_empty_model() {
-        let _ = CompiledModel::compile(vec![], 8, 16);
+    fn rejects_empty_model_as_error_not_panic() {
+        let err = CompiledModel::compile(vec![], 8, 16).expect_err("empty stack");
+        assert!(err.to_string().contains("at least one layer"), "{err}");
+    }
+
+    #[test]
+    fn rejects_malformed_schedules_and_shapes() {
+        // Inverted precision pair (accumulator narrower than input).
+        let err = CompiledModel::compile(layers(), 16, 8).expect_err("inverted pair");
+        assert!(err.to_string().contains("narrower"), "{err}");
+        // Schedule length mismatch.
+        let err = CompiledModel::compile_scheduled(layers(), uniform_schedule(8, 16, 3))
+            .expect_err("length mismatch");
+        assert!(err.to_string().contains("precision entries"), "{err}");
+        // Non-chaining layer dims.
+        let bad = vec![
+            QuantLayer::new(vec![vec![64, 0], vec![-32, 127]], 8), // 2 -> 2
+            QuantLayer::new(vec![vec![5]], 8),                     // 1 -> 1
+        ];
+        let err = CompiledModel::compile(bad, 8, 16).expect_err("non-chaining dims");
+        assert!(err.to_string().contains("output width"), "{err}");
+    }
+
+    #[test]
+    fn mixed_schedule_metadata() {
+        let sched = vec![LayerPrecision::new(4, 8), LayerPrecision::new(8, 16)];
+        let m = CompiledModel::compile_scheduled(layers(), sched).unwrap();
+        // lanes: 12 (4b in) / 6 (8b acc) / 6 (8b in) / 3 (16b acc).
+        assert_eq!(m.batch_quantum(), 12);
+        assert_eq!(m.in_bits(), 4);
+        assert_eq!(m.acc_bits(), 16);
+        // Boundary 8→8 is a bypass: empty chain.
+        assert!(m.boundary_chain(0).is_empty());
+        // A 2-hop boundary is precomputed as such.
+        let sched = vec![LayerPrecision::new(8, 16), LayerPrecision::new(4, 8)];
+        let m = CompiledModel::compile_scheduled(layers(), sched).unwrap();
+        assert_eq!(m.boundary_chain(0).len(), 2, "16→4 chains via 8");
     }
 }

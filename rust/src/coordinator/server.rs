@@ -545,7 +545,6 @@ fn worker_loop(
     outstanding_rows: Arc<AtomicUsize>,
     outstanding_batches: Arc<AtomicUsize>,
 ) {
-    let in_fmt = engine.model().in_fmt();
     while let Ok(msg) = rx.recv() {
         let batch = match msg {
             WorkerMsg::Work(b) => b,
@@ -560,7 +559,10 @@ fn worker_loop(
             .collect();
         let (logits, stats) = engine.forward_batch(&rows);
         let ns = t0.elapsed().as_nanos() as u64;
-        let pj = cost.batch_energy_pj(&stats, in_fmt);
+        // Exact per-format billing: with a mixed-precision schedule the
+        // layers run at different widths, so the worker hands the cost
+        // table the by-format cycle breakdown, not one format.
+        let pj = cost.batch_energy_pj(&stats);
         metrics.add_batch(rows.len() as u64, stats, pj, ns);
         let mut responses = vec![];
         let mut offset = 0;
@@ -614,7 +616,7 @@ mod tests {
     fn coordinator_round_trip_matches_reference() {
         let mut rng = XorShift64::new(0xC00D);
         let ls = layers(&mut rng);
-        let model = CompiledModel::compile(ls.clone(), 8, 16);
+        let model = CompiledModel::compile(ls.clone(), 8, 16).unwrap();
         let mut coord = Coordinator::start(model, ServeConfig::new(2, 6), tiny_cost());
         let reqs: Vec<Request> = (0..9u64)
             .map(|id| Request {
@@ -641,10 +643,45 @@ mod tests {
     }
 
     #[test]
+    fn mixed_precision_model_serves_bit_exactly() {
+        use crate::nn::exec::mlp_forward_row_mixed;
+        use crate::nn::weights::LayerPrecision;
+        let mut rng = XorShift64::new(0x417C0DE);
+        let ls = layers(&mut rng);
+        // 4-bit first layer, 8-bit second — with a direct 8→8 bypass
+        // boundary; requests arrive quantized at 4 bits.
+        let sched = vec![LayerPrecision::new(4, 8), LayerPrecision::new(8, 16)];
+        let model = CompiledModel::compile_scheduled(ls.clone(), sched.clone()).unwrap();
+        let mut coord = Coordinator::start(model, ServeConfig::new(2, 6), tiny_cost());
+        let reqs: Vec<Request> = (0..7u64)
+            .map(|id| Request {
+                id,
+                rows: vec![(0..8).map(|_| rng.q_raw(4)).collect()],
+            })
+            .collect();
+        for r in &reqs {
+            coord.submit(r.clone()).unwrap();
+        }
+        let responses = coord.drain().unwrap();
+        assert_eq!(responses.len(), 7);
+        for resp in &responses {
+            let want = mlp_forward_row_mixed(&reqs[resp.id as usize].rows[0], &ls, &sched);
+            assert_eq!(resp.logits[0], want, "request {}", resp.id);
+        }
+        // An out-of-range 8-bit value is invalid against a 4-bit input
+        // layer: the submit-time Q-range check tracks the schedule.
+        let err = coord
+            .submit(Request { id: 99, rows: vec![vec![100, 0, 0, 0, 0, 0, 0, 0]] })
+            .expect_err("out of 4-bit range");
+        assert!(err.to_string().contains("outside Q range"), "{err}");
+        coord.shutdown();
+    }
+
+    #[test]
     fn batching_groups_requests() {
         let mut rng = XorShift64::new(0xBA7);
         let ls = layers(&mut rng);
-        let model = CompiledModel::compile(ls, 8, 16);
+        let model = CompiledModel::compile(ls, 8, 16).unwrap();
         // A generous deadline so the batcher, not the deadline thread,
         // forms the batches in this test.
         let cfg = ServeConfig::new(1, 12).deadline(Duration::from_secs(5));
@@ -668,7 +705,7 @@ mod tests {
     fn round_robin_rotates_and_least_loaded_prefers_idle() {
         let mut rng = XorShift64::new(0xD15);
         let ls = layers(&mut rng);
-        let model = CompiledModel::compile(ls, 8, 16);
+        let model = CompiledModel::compile(ls, 8, 16).unwrap();
         for policy in [DispatchPolicy::RoundRobin, DispatchPolicy::LeastLoaded] {
             let cfg = ServeConfig::new(3, 1).policy(policy);
             let mut coord = Coordinator::start(Arc::clone(&model), cfg, tiny_cost());

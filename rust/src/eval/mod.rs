@@ -4,7 +4,9 @@
 //! Each sub-module prints the same rows/series the paper reports.
 //! `summary` derives the two headline numbers (53.1% area, 88.8%
 //! energy); `ablation` covers the design choices the paper fixes
-//! (CSD vs binary recoding, max coalesced shift, Stage-2 bypass).
+//! (CSD vs binary recoding, max coalesced shift, Stage-2 bypass);
+//! `precision` sweeps per-layer precision schedules through the serving
+//! engine (the run-time repacking story, DESIGN.md §10).
 
 use crate::anyhow;
 
@@ -14,6 +16,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod precision;
 pub mod summary;
 
 pub fn run(target: &str) -> anyhow::Result<()> {
@@ -25,6 +28,7 @@ pub fn run(target: &str) -> anyhow::Result<()> {
         "fig10" | "10" => fig10::run(),
         "summary" => summary::run(),
         "ablation" => ablation::run(),
+        "precision" => precision::run(),
         "all" => {
             fig6::run()?;
             fig7::run()?;
@@ -32,8 +36,11 @@ pub fn run(target: &str) -> anyhow::Result<()> {
             fig9::run()?;
             fig10::run()?;
             summary::run()?;
-            ablation::run()
+            ablation::run()?;
+            precision::run()
         }
-        other => anyhow::bail!("unknown eval target `{other}` (fig6..fig10, summary, ablation, all)"),
+        other => anyhow::bail!(
+            "unknown eval target `{other}` (fig6..fig10, summary, ablation, precision, all)"
+        ),
     }
 }

@@ -1,0 +1,202 @@
+//! Precision-schedule sweep — the serving-side payoff of the run-time
+//! repacking unit (Section III-C: "changing the bitwidth of sub-words at
+//! run-time dynamically").
+//!
+//! One fixed 3-layer MLP is compiled under several per-layer precision
+//! schedules and a batch is pushed through the packed engine under each;
+//! the table reports exact Stage-1/Stage-2 work and pre-characterized
+//! energy per inference, with the packed result checked bit-exactly
+//! against the scalar mixed-precision oracle first. The low-precision-
+//! first schedules pack more batch rows per word in the early (wide)
+//! layers, which is where the multiply volume is — that is the energy
+//! and throughput story the sweep quantifies.
+
+use crate::anyhow;
+use crate::coordinator::cost::CostTable;
+use crate::coordinator::engine::PackedMlpEngine;
+use crate::coordinator::model::CompiledModel;
+use crate::energy::report::table;
+use crate::nn::exec::mlp_forward_row_mixed;
+use crate::nn::weights::{LayerPrecision, QuantLayer};
+use crate::workload::synth::XorShift64;
+
+/// Batch size of the sweep (a multiple of every schedule's quantum).
+pub const BATCH: usize = 48;
+
+/// One sweep cell: exact work and billed energy per inference.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub name: &'static str,
+    pub schedule: Vec<LayerPrecision>,
+    pub s1_cycles_per_row: f64,
+    pub s2_passes_per_row: f64,
+    pub s1_pj_per_row: f64,
+    pub total_pj_per_row: f64,
+}
+
+/// The swept schedules over a 3-layer stack: uniform 8-bit, a 4-bit-
+/// first widening schedule, and a 16-bit-first narrowing one whose
+/// 16→4 boundary exercises the 2-hop crossbar chain.
+pub fn schedules() -> Vec<(&'static str, Vec<LayerPrecision>)> {
+    vec![
+        (
+            "8-8-8 (uniform)",
+            vec![
+                LayerPrecision::new(8, 16),
+                LayerPrecision::new(8, 16),
+                LayerPrecision::new(8, 16),
+            ],
+        ),
+        (
+            "4-6-8 (low first)",
+            vec![
+                LayerPrecision::new(4, 8),
+                LayerPrecision::new(6, 12),
+                LayerPrecision::new(8, 16),
+            ],
+        ),
+        (
+            "16-8-4 (2-hop 16\u{2192}4)",
+            vec![
+                LayerPrecision::new(16, 16),
+                LayerPrecision::new(8, 16),
+                LayerPrecision::new(4, 8),
+            ],
+        ),
+    ]
+}
+
+/// The fixed model under sweep: 24→16→12→8, 8-bit weights.
+pub fn model_layers() -> Vec<QuantLayer> {
+    let mut rng = XorShift64::new(0x5C4ED);
+    [(24usize, 16usize), (16, 12), (12, 8)]
+        .iter()
+        .map(|&(k, n)| {
+            QuantLayer::new(
+                (0..k)
+                    .map(|_| (0..n).map(|_| rng.q_raw(8)).collect())
+                    .collect(),
+                8,
+            )
+        })
+        .collect()
+}
+
+/// Run every schedule; each row is oracle-verified before being priced.
+pub fn rows(cost: &CostTable) -> anyhow::Result<Vec<SweepRow>> {
+    let layers = model_layers();
+    let mut rng = XorShift64::new(0x5C4EE);
+    let mut out = vec![];
+    for (name, sched) in schedules() {
+        let model = CompiledModel::compile_scheduled(layers.clone(), sched.clone())?;
+        let engine = PackedMlpEngine::new(model);
+        let batch: Vec<Vec<i64>> = (0..BATCH)
+            .map(|_| (0..layers[0].k).map(|_| rng.q_raw(sched[0].in_bits)).collect())
+            .collect();
+        let (got, stats) = engine.forward_batch(&batch);
+        for (b, row) in batch.iter().enumerate() {
+            let want = mlp_forward_row_mixed(row, &layers, &sched);
+            anyhow::ensure!(
+                got[b] == want,
+                "schedule `{name}` row {b} diverges from the scalar oracle"
+            );
+        }
+        let s1_pj = cost.s1_energy_pj(&stats);
+        let total_pj = cost.batch_energy_pj(&stats);
+        out.push(SweepRow {
+            name,
+            schedule: sched,
+            s1_cycles_per_row: stats.s1_cycles as f64 / BATCH as f64,
+            s2_passes_per_row: stats.s2_passes as f64 / BATCH as f64,
+            s1_pj_per_row: s1_pj / BATCH as f64,
+            total_pj_per_row: total_pj / BATCH as f64,
+        });
+    }
+    Ok(out)
+}
+
+pub fn run() -> anyhow::Result<()> {
+    println!(
+        "== precision-schedule sweep: per-layer formats on the serving engine \
+         ({BATCH}-row batch, @1GHz) =="
+    );
+    let cost = CostTable::characterize(1000.0);
+    let rs = rows(&cost)?;
+    let trows: Vec<Vec<String>> = rs
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.to_string(),
+                r.schedule
+                    .iter()
+                    .map(|p| p.to_string())
+                    .collect::<Vec<_>>()
+                    .join(" "),
+                format!("{:.1}", r.s1_cycles_per_row),
+                format!("{:.1}", r.s2_passes_per_row),
+                format!("{:.2}", r.s1_pj_per_row),
+                format!("{:.2}", r.total_pj_per_row),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        table(
+            &[
+                "schedule",
+                "layer formats (in->acc)",
+                "S1 cyc/row",
+                "S2 pass/row",
+                "S1 pJ/row",
+                "total pJ/row",
+            ],
+            &trows
+        )
+    );
+    let uniform = &rs[0];
+    let low_first = &rs[1];
+    println!(
+        "(every schedule bit-exact vs the scalar oracle; 4-6-8 spends \
+         {:.1}% of the uniform schedule's Stage-1 energy)\n",
+        low_first.s1_pj_per_row / uniform.s1_pj_per_row * 100.0
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_precision_first_schedule_is_cheaper_on_stage1() {
+        // The acceptance claim: the 4-bit-first schedule packs 12 rows
+        // per word in the widest layer (vs 6 at 8-bit), so its Stage-1
+        // energy per inference undercuts the uniform 8-bit schedule.
+        let cost = CostTable::characterize(1000.0);
+        let rs = rows(&cost).unwrap();
+        let uniform = rs.iter().find(|r| r.name.starts_with("8-8-8")).unwrap();
+        let low = rs.iter().find(|r| r.name.starts_with("4-6-8")).unwrap();
+        assert!(
+            low.s1_pj_per_row < uniform.s1_pj_per_row,
+            "4-6-8 {} pJ !< 8-8-8 {} pJ",
+            low.s1_pj_per_row,
+            uniform.s1_pj_per_row
+        );
+        assert!(
+            low.s1_cycles_per_row < uniform.s1_cycles_per_row,
+            "cycle count must also drop"
+        );
+    }
+
+    #[test]
+    fn sweep_covers_a_two_hop_schedule() {
+        let two_hop = schedules()
+            .into_iter()
+            .find(|(n, _)| n.starts_with("16-8-4"))
+            .unwrap()
+            .1;
+        let layers = model_layers();
+        let m = CompiledModel::compile_scheduled(layers, two_hop).unwrap();
+        assert_eq!(m.boundary_chain(1).len(), 2, "16→4 must chain via 8");
+    }
+}

@@ -1,42 +1,78 @@
 //! Quantized MLP forward passes.
 //!
-//! Layer semantics (DESIGN.md §4, mirrored by
-//! `python/compile/kernels/ref.py::layer_ref`): products at `in_bits`
-//! via the Soft SIMD shift-add multiply, widened (`<< acc−in`) to the
-//! accumulator format — the Stage-2 8→16 conversion — summed with
-//! wrapping `acc_bits` adds; hidden layers apply ReLU then truncate back
-//! to `in_bits`.
+//! Layer semantics (DESIGN.md §4/§10, mirrored by
+//! `python/compile/kernels/ref.py::layer_ref`): products at the layer's
+//! `in_bits` via the Soft SIMD shift-add multiply, widened (`<< acc−in`)
+//! to the layer's accumulator format — a Stage-2 conversion — summed
+//! with wrapping `acc_bits` adds; hidden layers apply ReLU then convert
+//! through the Stage-2 crossbar chain into the *next* layer's `in_bits`.
+//! Every layer may declare its own format pair ([`LayerPrecision`]);
+//! [`mlp_forward_row_mixed`] is the scalar oracle the packed serving
+//! engine must match bit-exactly at every layer boundary.
 
 use crate::bits::fixed::sign_extend;
+use crate::bits::format::SimdFormat;
 use crate::pipeline::stage1::{mul_scalar_plan, mul_scalar};
+use crate::pipeline::stage2::{conversion_chain, convert_subword};
 
-use super::weights::QuantLayer;
+use super::weights::{uniform_schedule, LayerPrecision, QuantLayer};
 
-/// Forward one input row through all layers; returns the final
+/// The inter-layer activation unit: ReLU at the producing layer's
+/// accumulator format, then the Stage-2 conversion chain into the
+/// consuming layer's activation format. Applying the chain hop-by-hop
+/// (not one composed shift) keeps this the exact scalar mirror of the
+/// engine's `repack_stream` boundary (DESIGN.md §10).
+pub fn requantize_activation(v: i64, from_acc: SimdFormat, to_in: SimdFormat) -> i64 {
+    let mut x = v.max(0);
+    for (f, t) in conversion_chain(from_acc, to_in) {
+        x = convert_subword(x, f, t);
+    }
+    x
+}
+
+/// Forward one input row through a mixed-precision layer stack: layer
+/// `li` consumes `schedule[li].in_bits` activations and produces
+/// `schedule[li].acc_bits` accumulators. Returns the final layer's
 /// pre-activation accumulators (`Q1.(acc_bits-1)` raws).
-pub fn mlp_forward_row(x_q: &[i64], layers: &[QuantLayer], in_bits: u32, acc_bits: u32) -> Vec<i64> {
+pub fn mlp_forward_row_mixed(
+    x_q: &[i64],
+    layers: &[QuantLayer],
+    schedule: &[LayerPrecision],
+) -> Vec<i64> {
+    assert!(!layers.is_empty(), "empty layer stack");
+    assert_eq!(layers.len(), schedule.len(), "one precision per layer");
     let mut h: Vec<i64> = x_q.to_vec();
-    for (li, layer) in layers.iter().enumerate() {
+    for (li, (layer, p)) in layers.iter().zip(schedule).enumerate() {
         assert_eq!(h.len(), layer.k, "layer {li} input width");
+        assert!(p.acc_bits >= p.in_bits, "layer {li} precision {p}");
         let mut out = vec![0i64; layer.n];
         for j in 0..layer.n {
             let mut acc = 0i64;
             for i in 0..layer.k {
-                let p = mul_scalar(h[i], layer.w_raw[i][j], in_bits, layer.bits);
-                acc += p << (acc_bits - in_bits);
+                let prod = mul_scalar(h[i], layer.w_raw[i][j], p.in_bits, layer.bits);
+                acc += prod << (p.acc_bits - p.in_bits);
             }
-            out[j] = sign_extend(acc as u64 & ((1u64 << acc_bits) - 1), acc_bits);
+            out[j] = sign_extend(acc as u64 & ((1u64 << p.acc_bits) - 1), p.acc_bits);
         }
         if li + 1 < layers.len() {
+            let next_in = schedule[li + 1].in_fmt();
             h = out
                 .iter()
-                .map(|&v| v.max(0) >> (acc_bits - in_bits))
+                .map(|&v| requantize_activation(v, p.acc_fmt(), next_in))
                 .collect();
         } else {
             return out;
         }
     }
-    h
+    unreachable!("the loop returns on the last layer")
+}
+
+/// Forward one input row through all layers at one uniform format pair;
+/// returns the final pre-activation accumulators (`Q1.(acc_bits-1)`
+/// raws). Shorthand for [`mlp_forward_row_mixed`] with a uniform
+/// schedule.
+pub fn mlp_forward_row(x_q: &[i64], layers: &[QuantLayer], in_bits: u32, acc_bits: u32) -> Vec<i64> {
+    mlp_forward_row_mixed(x_q, layers, &uniform_schedule(in_bits, acc_bits, layers.len()))
 }
 
 /// Batched forward; `x` is row-major `[batch][k]`.
@@ -60,6 +96,7 @@ pub fn mlp_forward_row_planned(
     in_bits: u32,
     acc_bits: u32,
 ) -> Vec<i64> {
+    assert!(!layers.is_empty(), "empty layer stack");
     let mut h: Vec<i64> = x_q.to_vec();
     for (li, layer) in layers.iter().enumerate() {
         let mut out = vec![0i64; layer.n];
@@ -157,5 +194,57 @@ mod tests {
     fn argmax_first_wins_ties_deterministically() {
         assert_eq!(argmax_class(&[5, 5, 1], 3), 0);
         assert_eq!(argmax_class(&[1, 9, 9], 3), 1);
+    }
+
+    #[test]
+    fn mixed_oracle_with_uniform_schedule_matches_uniform_path() {
+        let layers = tiny_layers();
+        let sched = uniform_schedule(8, 16, layers.len());
+        for x0 in [-128i64, -5, 0, 99, 127] {
+            for x1 in [-77i64, 0, 127] {
+                let x = vec![x0, x1];
+                assert_eq!(
+                    mlp_forward_row(&x, &layers, 8, 16),
+                    mlp_forward_row_mixed(&x, &layers, &sched)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn requantize_activation_relu_then_chained_conversion() {
+        let f16 = SimdFormat::new(16);
+        let f8 = SimdFormat::new(8);
+        let f4 = SimdFormat::new(4);
+        // Negative accumulators clip to zero before any conversion.
+        assert_eq!(requantize_activation(-12345, f16, f8), 0);
+        // Direct narrowing hop: value-aligned truncation.
+        assert_eq!(requantize_activation(0x1234, f16, f8), 0x12);
+        // Two-hop 16→4 (via 8) composes to the direct >>12 truncation.
+        assert_eq!(requantize_activation(0x7FFF, f16, f4), 7);
+        // Widening appends fractional zeros exactly.
+        assert_eq!(requantize_activation(3, f4, f8), 3 << 4);
+    }
+
+    #[test]
+    fn mixed_oracle_respects_per_layer_lane_width() {
+        // A widening 4→8 schedule: layer 0 consumes 4-bit activations
+        // (products at 4-bit lanes), layer 1 consumes 8-bit ones.
+        let layers = vec![
+            QuantLayer::new(vec![vec![4], vec![2]], 4), // 0.5, 0.25 @ Q1.3
+            QuantLayer::new(vec![vec![64]], 8),         // 0.5 @ Q1.7
+        ];
+        let sched = vec![LayerPrecision::new(4, 8), LayerPrecision::new(8, 16)];
+        let x = vec![4i64, 4]; // 0.5, 0.5 @ Q1.3
+        // Layer 0: mul(4,4,@4b)=2, mul(4,2,@4b)=1 → (2+1)<<4 = 48 @Q1.7.
+        // Boundary 8→8: identity. Layer 1: mul(48,64,@8b)=24 → 24<<8.
+        let out = mlp_forward_row_mixed(&x, &layers, &sched);
+        assert_eq!(out, vec![24 << 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty layer stack")]
+    fn forward_rejects_empty_layer_stack() {
+        let _ = mlp_forward_row(&[1, 2], &[], 8, 16);
     }
 }

@@ -9,5 +9,5 @@
 pub mod exec;
 pub mod weights;
 
-pub use exec::{mlp_forward_batch, mlp_forward_row};
-pub use weights::{load_weight_file, QuantLayer};
+pub use exec::{mlp_forward_batch, mlp_forward_row, mlp_forward_row_mixed, requantize_activation};
+pub use weights::{load_weight_file, quantize_stack, uniform_schedule, LayerPrecision, QuantLayer};

@@ -1,10 +1,76 @@
-//! Quantized weight storage and the `mlp_weights.txt` loader.
+//! Quantized weight storage, per-layer serving precision, and the
+//! `mlp_weights.txt` loader.
 
 use std::path::Path;
 
 use crate::anyhow;
 
+use crate::bits::format::{SimdFormat, FORMATS};
 use crate::csd::schedule::{schedule, MulPlan};
+
+/// One layer's serving precision: the Soft SIMD format its input
+/// activations are packed at and the format its accumulators are
+/// produced at. A model's *precision schedule* is one of these per
+/// layer; between layers the Stage-2 crossbar repacks the activation
+/// stream from the producing layer's `acc_bits` into the consuming
+/// layer's `in_bits` (DESIGN.md §10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerPrecision {
+    /// Activation sub-word width the layer's inputs arrive packed at.
+    pub in_bits: u32,
+    /// Accumulator sub-word width the layer's outputs leave at.
+    pub acc_bits: u32,
+}
+
+impl LayerPrecision {
+    pub fn new(in_bits: u32, acc_bits: u32) -> LayerPrecision {
+        LayerPrecision { in_bits, acc_bits }
+    }
+
+    /// Check the pair against the hardware: both widths must be
+    /// supported Soft SIMD formats and the accumulator must not be
+    /// narrower than the activations (products are widened
+    /// `<< (acc−in)` into it).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            FORMATS.contains(&self.in_bits),
+            "activation width {} is not a Soft SIMD format (supported: {FORMATS:?})",
+            self.in_bits
+        );
+        anyhow::ensure!(
+            FORMATS.contains(&self.acc_bits),
+            "accumulator width {} is not a Soft SIMD format (supported: {FORMATS:?})",
+            self.acc_bits
+        );
+        anyhow::ensure!(
+            self.acc_bits >= self.in_bits,
+            "accumulator width {} narrower than activation width {}",
+            self.acc_bits,
+            self.in_bits
+        );
+        Ok(())
+    }
+
+    pub fn in_fmt(&self) -> SimdFormat {
+        SimdFormat::new(self.in_bits)
+    }
+
+    pub fn acc_fmt(&self) -> SimdFormat {
+        SimdFormat::new(self.acc_bits)
+    }
+}
+
+impl std::fmt::Display for LayerPrecision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}->{}", self.in_bits, self.acc_bits)
+    }
+}
+
+/// The single-format schedule every layer of the seed engine ran at
+/// (`in_bits` activations, `acc_bits` accumulators, all layers).
+pub fn uniform_schedule(in_bits: u32, acc_bits: u32, n_layers: usize) -> Vec<LayerPrecision> {
+    vec![LayerPrecision::new(in_bits, acc_bits); n_layers]
+}
 
 /// One layer's quantized weights (`Q1.(bits-1)` raws) with cached CSD
 /// multiply plans (one per distinct weight value — plans are shared).
@@ -53,6 +119,37 @@ impl QuantLayer {
         }
         total as f64 / (self.k * self.n) as f64
     }
+}
+
+/// Quantize a float MLP with one weight width per layer (the
+/// mixed-precision companion of [`QuantLayer::quantize`]). Widths must
+/// be Soft SIMD formats; layer output/input widths must chain.
+pub fn quantize_stack(w: &[Vec<Vec<f64>>], bits: &[u32]) -> anyhow::Result<Vec<QuantLayer>> {
+    anyhow::ensure!(!w.is_empty(), "model needs at least one layer");
+    anyhow::ensure!(
+        w.len() == bits.len(),
+        "{} float layers but {} weight widths",
+        w.len(),
+        bits.len()
+    );
+    let mut layers = Vec::with_capacity(w.len());
+    for (li, (wl, &b)) in w.iter().zip(bits).enumerate() {
+        anyhow::ensure!(
+            FORMATS.contains(&b),
+            "layer {li}: weight width {b} is not a Soft SIMD format"
+        );
+        let layer = QuantLayer::quantize(wl, b);
+        if let Some(prev) = layers.last() {
+            anyhow::ensure!(
+                prev.n == layer.k,
+                "layer {li}: input width {} != previous layer's output width {}",
+                layer.k,
+                prev.n
+            );
+        }
+        layers.push(layer);
+    }
+    Ok(layers)
 }
 
 /// Parse `artifacts/mlp_weights.txt`:
@@ -112,6 +209,36 @@ mod tests {
     fn quantize_roundtrip() {
         let l = QuantLayer::quantize(&[vec![0.5, -0.25], vec![0.0, 0.99]], 8);
         assert_eq!(l.w_raw, vec![vec![64, -32], vec![0, 127]]);
+    }
+
+    #[test]
+    fn layer_precision_validation() {
+        assert!(LayerPrecision::new(8, 16).validate().is_ok());
+        assert!(LayerPrecision::new(4, 4).validate().is_ok());
+        // Unsupported widths and inverted pairs are rejected.
+        assert!(LayerPrecision::new(5, 16).validate().is_err());
+        assert!(LayerPrecision::new(8, 10).validate().is_err());
+        assert!(LayerPrecision::new(16, 8).validate().is_err());
+        let sched = uniform_schedule(8, 16, 3);
+        assert_eq!(sched.len(), 3);
+        assert!(sched.iter().all(|p| *p == LayerPrecision::new(8, 16)));
+    }
+
+    #[test]
+    fn quantize_stack_checks_widths_and_chaining() {
+        let w = vec![
+            vec![vec![0.5, -0.25], vec![0.0, 0.99]],
+            vec![vec![0.5], vec![-0.5]],
+        ];
+        let layers = quantize_stack(&w, &[8, 4]).unwrap();
+        assert_eq!(layers[0].bits, 8);
+        assert_eq!(layers[1].bits, 4);
+        assert_eq!(layers[1].w_raw, vec![vec![4], vec![-4]]);
+        assert!(quantize_stack(&w, &[8]).is_err(), "width-count mismatch");
+        assert!(quantize_stack(&w, &[8, 5]).is_err(), "bad format");
+        assert!(quantize_stack(&[], &[]).is_err(), "empty stack");
+        let ragged = vec![w[0].clone(), vec![vec![0.5]]]; // 2-wide into 1-in
+        assert!(quantize_stack(&ragged, &[8, 8]).is_err(), "non-chaining dims");
     }
 
     #[test]

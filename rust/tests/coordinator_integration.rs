@@ -42,7 +42,7 @@ fn random_model(rng: &mut XorShift64, dims: &[usize]) -> Vec<QuantLayer> {
 fn coordinator_bit_exact_across_pe_counts_batch_targets_and_policies() {
     let mut rng = XorShift64::new(0xC001);
     let layers = random_model(&mut rng, &[12, 8, 4]);
-    let model = CompiledModel::compile(layers.clone(), 8, 16);
+    let model = CompiledModel::compile(layers.clone(), 8, 16).unwrap();
     let reqs: Vec<Request> = (0..20u64)
         .map(|id| Request {
             id,
@@ -87,7 +87,7 @@ fn coordinator_bit_exact_across_pe_counts_batch_targets_and_policies() {
 fn deadline_thread_flushes_stragglers_without_drain() {
     let mut rng = XorShift64::new(0xDEAD1);
     let layers = random_model(&mut rng, &[6, 4]);
-    let model = CompiledModel::compile(layers, 8, 16);
+    let model = CompiledModel::compile(layers, 8, 16).unwrap();
     // Target far above what we submit: only the deadline can flush.
     let cfg = ServeConfig::new(1, 1000).deadline(Duration::from_millis(5));
     let mut coord = Coordinator::start(model, cfg, cost());
@@ -116,7 +116,7 @@ fn deadline_thread_flushes_stragglers_without_drain() {
 fn killed_worker_drains_gracefully_and_serving_continues() {
     let mut rng = XorShift64::new(0x5117);
     let layers = random_model(&mut rng, &[8, 5, 3]);
-    let model = CompiledModel::compile(layers.clone(), 8, 16);
+    let model = CompiledModel::compile(layers.clone(), 8, 16).unwrap();
     let mut coord = Coordinator::start(model, ServeConfig::new(2, 4), cost());
     // Kill one of the two PEs up front, then serve a full load.
     coord.kill_worker(0);
@@ -142,7 +142,7 @@ fn killed_worker_drains_gracefully_and_serving_continues() {
 fn all_workers_dead_surfaces_error_not_panic() {
     let mut rng = XorShift64::new(0xA11D);
     let layers = random_model(&mut rng, &[4, 2]);
-    let model = CompiledModel::compile(layers, 8, 16);
+    let model = CompiledModel::compile(layers, 8, 16).unwrap();
     let mut coord = Coordinator::start(model, ServeConfig::new(1, 4), cost());
     coord.kill_worker(0);
     // Submitting below target succeeds (batched); the flush at drain
@@ -165,7 +165,7 @@ fn all_workers_dead_surfaces_error_not_panic() {
 fn malformed_requests_are_rejected_not_worker_killing() {
     let mut rng = XorShift64::new(0xBAD1);
     let layers = random_model(&mut rng, &[6, 3]);
-    let model = CompiledModel::compile(layers.clone(), 8, 16);
+    let model = CompiledModel::compile(layers.clone(), 8, 16).unwrap();
     let mut coord = Coordinator::start(model, ServeConfig::new(1, 4), cost());
     // Wrong row width, empty request, and out-of-range raw values must
     // all bounce at submit instead of panicking the PE worker.
@@ -191,7 +191,7 @@ fn malformed_requests_are_rejected_not_worker_killing() {
 fn drain_returns_completed_work_even_with_no_live_workers() {
     let mut rng = XorShift64::new(0xA11E);
     let layers = random_model(&mut rng, &[4, 2]);
-    let model = CompiledModel::compile(layers, 8, 16);
+    let model = CompiledModel::compile(layers, 8, 16).unwrap();
     // target 1: the first request dispatches and completes immediately.
     let mut coord = Coordinator::start(model, ServeConfig::new(1, 1), cost());
     coord
@@ -241,7 +241,7 @@ fn drain_returns_completed_work_even_with_no_live_workers() {
 fn engine_handles_singleton_and_ragged_batches() {
     let mut rng = XorShift64::new(0xC002);
     let layers = random_model(&mut rng, &[7, 5, 3]);
-    let engine = PackedMlpEngine::new(CompiledModel::compile(layers.clone(), 8, 16));
+    let engine = PackedMlpEngine::new(CompiledModel::compile(layers.clone(), 8, 16).unwrap());
     for m in 1..=13usize {
         let batch: Vec<Vec<i64>> = (0..m)
             .map(|_| (0..7).map(|_| rng.q_raw(8)).collect())
@@ -277,7 +277,7 @@ fn planned_and_unplanned_reference_agree_on_aot_model() {
 fn metrics_account_every_row_mult_and_latency() {
     let mut rng = XorShift64::new(0xC003);
     let layers = random_model(&mut rng, &[6, 4]);
-    let model = CompiledModel::compile(layers, 8, 16);
+    let model = CompiledModel::compile(layers, 8, 16).unwrap();
     let mut coord = Coordinator::start(model, ServeConfig::new(2, 5), cost());
     let n_rows = 17u64;
     for id in 0..n_rows {
@@ -306,7 +306,7 @@ fn metrics_account_every_row_mult_and_latency() {
 fn empty_drain_is_safe() {
     let mut rng = XorShift64::new(0xC004);
     let layers = random_model(&mut rng, &[4, 2]);
-    let model = CompiledModel::compile(layers, 8, 16);
+    let model = CompiledModel::compile(layers, 8, 16).unwrap();
     let mut coord = Coordinator::start(model, ServeConfig::new(1, 4), cost());
     assert!(coord.drain().unwrap().is_empty());
     coord.shutdown();
@@ -344,7 +344,7 @@ fn coordinator_matches_aot_golden_when_artifacts_exist() {
             _ => {}
         }
     }
-    let model = CompiledModel::compile(layers, 8, 16);
+    let model = CompiledModel::compile(layers, 8, 16).unwrap();
     let mut coord = Coordinator::start(model, ServeConfig::new(2, 8), cost());
     for (row, vals) in &inputs {
         coord

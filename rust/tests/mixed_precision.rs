@@ -1,0 +1,206 @@
+//! Mixed-precision serving properties (hand-rolled generators —
+//! proptest is unavailable offline; see Cargo.toml).
+//!
+//! The tentpole invariant of the format-polymorphic engine: for *any*
+//! per-layer precision schedule the packed execution path — per-layer
+//! lane packing, the Stage-1 shift-add at each layer's width, and the
+//! Stage-2 boundary repacks, chained hops included — matches the scalar
+//! mixed-precision oracle bit-exactly on every row (DESIGN.md §10).
+
+use softsimd::bits::format::{format_index, FORMATS};
+use softsimd::coordinator::cost::CostTable;
+use softsimd::coordinator::engine::PackedMlpEngine;
+use softsimd::coordinator::model::CompiledModel;
+use softsimd::coordinator::server::{Coordinator, Request, ServeConfig};
+use softsimd::nn::exec::mlp_forward_row_mixed;
+use softsimd::nn::weights::{LayerPrecision, QuantLayer};
+use softsimd::workload::synth::XorShift64;
+
+fn random_layers(rng: &mut XorShift64, dims: &[usize], w_bits: &[u32]) -> Vec<QuantLayer> {
+    dims.windows(2)
+        .zip(w_bits)
+        .map(|(w, &b)| {
+            QuantLayer::new(
+                (0..w[0])
+                    .map(|_| (0..w[1]).map(|_| rng.q_raw(b)).collect())
+                    .collect(),
+                b,
+            )
+        })
+        .collect()
+}
+
+fn random_schedule(rng: &mut XorShift64, n_layers: usize) -> Vec<LayerPrecision> {
+    (0..n_layers)
+        .map(|_| {
+            let in_bits = FORMATS[(rng.next_u64() % FORMATS.len() as u64) as usize];
+            let wider: Vec<u32> = FORMATS.iter().copied().filter(|&b| b >= in_bits).collect();
+            let acc_bits = wider[(rng.next_u64() % wider.len() as u64) as usize];
+            LayerPrecision::new(in_bits, acc_bits)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_packed_engine_matches_mixed_oracle_over_random_schedules() {
+    let mut rng = XorShift64::new(0x517ED);
+    for case in 0..60 {
+        let n_layers = 1 + (rng.next_u64() % 3) as usize;
+        let dims: Vec<usize> = (0..=n_layers)
+            .map(|_| 1 + (rng.next_u64() % 7) as usize)
+            .collect();
+        let w_bits: Vec<u32> = (0..n_layers)
+            .map(|_| [4u32, 6, 8][(rng.next_u64() % 3) as usize])
+            .collect();
+        let layers = random_layers(&mut rng, &dims, &w_bits);
+        let sched = random_schedule(&mut rng, n_layers);
+        let model = CompiledModel::compile_scheduled(layers.clone(), sched.clone())
+            .unwrap_or_else(|e| panic!("case {case}: compile failed: {e}"));
+        let engine = PackedMlpEngine::new(model);
+        let batch_size = 1 + (rng.next_u64() % 40) as usize;
+        let batch: Vec<Vec<i64>> = (0..batch_size)
+            .map(|_| (0..dims[0]).map(|_| rng.q_raw(sched[0].in_bits)).collect())
+            .collect();
+        let (got, stats) = engine.forward_batch(&batch);
+        assert_eq!(got.len(), batch_size, "case {case}: pad rows must be dropped");
+        for (b, row) in batch.iter().enumerate() {
+            let want = mlp_forward_row_mixed(row, &layers, &sched);
+            assert_eq!(
+                got[b], want,
+                "case {case}: sched {sched:?} dims {dims:?} w_bits {w_bits:?} row {b}"
+            );
+        }
+        // Accounting invariants: by-format splits sum to the totals, and
+        // useful multiplies never include pad lanes.
+        assert_eq!(stats.s1_cycles_by_fmt.iter().sum::<u64>(), stats.s1_cycles);
+        assert_eq!(stats.s2_passes_by_fmt.iter().sum::<u64>(), stats.s2_passes);
+        let nonzero_weights: u64 = layers
+            .iter()
+            .map(|l| {
+                l.w_raw
+                    .iter()
+                    .flatten()
+                    .filter(|&&w| w != 0)
+                    .count() as u64
+            })
+            .sum();
+        assert_eq!(
+            stats.subword_mults,
+            nonzero_weights * batch_size as u64,
+            "case {case}: pad lanes must not be billed as useful multiplies"
+        );
+    }
+}
+
+#[test]
+fn two_hop_boundary_schedule_is_bit_exact() {
+    // 16-bit accumulators feeding a 4-bit layer force the 16→8→4 chain
+    // — the crossbar's 2-word input port can't narrow 4× in one pass.
+    let mut rng = XorShift64::new(0x2407);
+    let layers = random_layers(&mut rng, &[9, 6, 3], &[8, 8]);
+    let sched = vec![LayerPrecision::new(8, 16), LayerPrecision::new(4, 8)];
+    let model = CompiledModel::compile_scheduled(layers.clone(), sched.clone()).unwrap();
+    assert_eq!(model.boundary_chain(0).len(), 2, "16→4 must be 2 hops");
+    let engine = PackedMlpEngine::new(model);
+    for batch_size in [1usize, 7, 12, 23, 24] {
+        let batch: Vec<Vec<i64>> = (0..batch_size)
+            .map(|_| (0..9).map(|_| rng.q_raw(8)).collect())
+            .collect();
+        let (got, _) = engine.forward_batch(&batch);
+        for (b, row) in batch.iter().enumerate() {
+            let want = mlp_forward_row_mixed(row, &layers, &sched);
+            assert_eq!(got[b], want, "batch {batch_size} row {b}");
+        }
+    }
+}
+
+#[test]
+fn acceptance_schedules_serve_bit_exactly_end_to_end() {
+    // The three acceptance schedules, through the full coordinator:
+    // uniform 8-8, widening 4→6→8, and the 2-hop 16-8-4.
+    let mut rng = XorShift64::new(0xACC3);
+    let layers = random_layers(&mut rng, &[10, 8, 6, 4], &[8, 8, 8]);
+    let schedules: Vec<(&str, Vec<LayerPrecision>)> = vec![
+        (
+            "uniform-8",
+            vec![
+                LayerPrecision::new(8, 16),
+                LayerPrecision::new(8, 16),
+                LayerPrecision::new(8, 16),
+            ],
+        ),
+        (
+            "widening-4-6-8",
+            vec![
+                LayerPrecision::new(4, 8),
+                LayerPrecision::new(6, 12),
+                LayerPrecision::new(8, 16),
+            ],
+        ),
+        (
+            "two-hop-16-8-4",
+            vec![
+                LayerPrecision::new(16, 16),
+                LayerPrecision::new(8, 16),
+                LayerPrecision::new(4, 8),
+            ],
+        ),
+    ];
+    let cost = CostTable {
+        mhz: 1000.0,
+        s1_cycle_pj: FORMATS.iter().map(|&b| (b, 1.0)).collect(),
+        s2_pass_pj: 0.5,
+        area_um2: 4600.0,
+    };
+    for (name, sched) in schedules {
+        let model =
+            CompiledModel::compile_scheduled(layers.clone(), sched.clone()).unwrap();
+        let mut coord = Coordinator::start(model, ServeConfig::new(2, 8), cost.clone());
+        let reqs: Vec<Request> = (0..15u64)
+            .map(|id| Request {
+                id,
+                rows: (0..1 + (id as usize % 3))
+                    .map(|_| (0..10).map(|_| rng.q_raw(sched[0].in_bits)).collect())
+                    .collect(),
+            })
+            .collect();
+        for r in &reqs {
+            coord.submit(r.clone()).unwrap();
+        }
+        let responses = coord.drain().unwrap();
+        assert_eq!(responses.len(), reqs.len(), "{name}");
+        for resp in &responses {
+            for (i, row) in reqs[resp.id as usize].rows.iter().enumerate() {
+                let want = mlp_forward_row_mixed(row, &layers, &sched);
+                assert_eq!(resp.logits[i], want, "{name} req {} row {i}", resp.id);
+            }
+        }
+        // Per-format serving metrics landed in the right buckets.
+        use std::sync::atomic::Ordering;
+        for p in &sched {
+            assert!(
+                coord.metrics.s1_cycles_by_fmt[format_index(p.in_bits)]
+                    .load(Ordering::Relaxed)
+                    > 0,
+                "{name}: no Stage-1 cycles recorded at {}b",
+                p.in_bits
+            );
+        }
+        coord.shutdown();
+    }
+}
+
+#[test]
+fn malformed_models_surface_as_errors_not_worker_panics() {
+    // Empty stacks and invalid schedules must be compile-time errors;
+    // nothing reaches a PE worker.
+    assert!(CompiledModel::compile(vec![], 8, 16).is_err());
+    let mut rng = XorShift64::new(0xBAD2);
+    let layers = random_layers(&mut rng, &[4, 2], &[8]);
+    assert!(CompiledModel::compile_scheduled(
+        layers.clone(),
+        vec![LayerPrecision::new(16, 8)]
+    )
+    .is_err());
+    assert!(CompiledModel::compile_scheduled(layers, vec![]).is_err());
+}

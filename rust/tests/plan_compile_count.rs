@@ -39,7 +39,7 @@ fn plans_compile_exactly_once_regardless_of_pe_count() {
         .collect();
     for n_pes in [1usize, 2, 8] {
         let before = PLAN_COMPILATIONS.load(Ordering::SeqCst);
-        let model = CompiledModel::compile(layers.clone(), 8, 16);
+        let model = CompiledModel::compile(layers.clone(), 8, 16).unwrap();
         let mut coord = Coordinator::start(model, ServeConfig::new(n_pes, 6), cost());
         for id in 0..8u64 {
             coord
