@@ -45,3 +45,17 @@ pub fn throughput(r: &BenchResult, units_per_iter: f64, unit: &str) {
         per_sec / 1e6
     );
 }
+
+/// Write the machine-readable bench artifact — the shared
+/// `{"bench": ..., "cells": [...]}` envelope every JSON-emitting bench
+/// uses (hand-rolled; serde is unavailable offline). `cells` are the
+/// per-bench pre-serialized cell objects.
+#[allow(dead_code)] // not every #[path]-including bench emits JSON
+pub fn write_cells(bench: &str, path: &str, cells: &[String]) {
+    let json = format!(
+        "{{\"bench\":\"{bench}\",\"cells\":[\n  {}\n]}}\n",
+        cells.join(",\n  ")
+    );
+    std::fs::write(path, &json).expect("write bench artifact");
+    println!("\nwrote {} {bench} cells to {path}", cells.len());
+}

@@ -15,7 +15,7 @@
 
 #[path = "benchkit.rs"]
 mod benchkit;
-use benchkit::{bench, throughput};
+use benchkit::{bench, throughput, write_cells};
 
 use std::sync::Arc;
 
@@ -219,11 +219,6 @@ fn main() {
     throughput(&r, (96 * mults_per_row) as f64, "subword-mults");
 
     // Machine-readable artifact for CI perf tracking across PRs.
-    let json = format!(
-        "{{\"bench\":\"coordinator\",\"cells\":[\n  {}\n]}}\n",
-        cells.iter().map(Cell::json).collect::<Vec<_>>().join(",\n  ")
-    );
-    let path = "BENCH_coordinator.json";
-    std::fs::write(path, &json).expect("write bench artifact");
-    println!("\nwrote {} serving cells to {path}", cells.len());
+    let cell_json: Vec<String> = cells.iter().map(Cell::json).collect();
+    write_cells("coordinator", "BENCH_coordinator.json", &cell_json);
 }

@@ -1,0 +1,301 @@
+//! Serving-engine microbenchmarks: the allocation-free flat execution
+//! core against the pre-refactor per-op engine, on the same
+//! `CompiledModel`, same machine, same run (DESIGN.md §11).
+//!
+//! The pre-refactor engine is preserved verbatim in [`baseline`] (it
+//! only uses public APIs: `MulPlan` tables, `Stage1::run_plan_on`,
+//! `pack_stream`/`unpack_stream`, `repack_stream`, per-value boundary
+//! conversion) so every cell reports an honest speedup measured in the
+//! same process. Outputs are cross-checked bit-exact before timing.
+//!
+//! Every cell is written to `BENCH_engine.json` (hand-rolled JSON —
+//! serde is unavailable offline): rows/s, ns per useful sub-word
+//! multiply, steady-state allocations per batch (counted by a process
+//! `#[global_allocator]`), and the speedup over the baseline.
+
+#[path = "benchkit.rs"]
+mod benchkit;
+use benchkit::{bench, write_cells};
+
+use std::sync::Arc;
+
+use softsimd::coordinator::engine::{EngineScratch, PackedMlpEngine};
+use softsimd::coordinator::model::CompiledModel;
+use softsimd::nn::weights::{LayerPrecision, QuantLayer};
+use softsimd::testutil::CountingAlloc;
+use softsimd::workload::synth::XorShift64;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// The pre-refactor packed engine, kept as the measured baseline: heap
+/// `Vec`s per layer/column/weight, `MulPlan` enum dispatch in the inner
+/// loop, and the scalar per-value boundary conversion.
+mod baseline {
+    use softsimd::bits::pack::{pack_stream, unpack_stream};
+    use softsimd::bits::swar::swar_add;
+    use softsimd::coordinator::model::CompiledModel;
+    use softsimd::pipeline::stage1::Stage1;
+    use softsimd::pipeline::stage2::{
+        convert_subword, repack_cycles_exact, repack_stream, widen_double,
+    };
+
+    /// Work tallies the baseline produces (the subset the bench needs).
+    #[derive(Default)]
+    pub struct Tally {
+        pub s1_cycles: u64,
+        pub subword_mults: u64,
+        pub s2_passes: u64,
+    }
+
+    pub fn forward_batch(model: &CompiledModel, batch: &[Vec<i64>]) -> (Vec<Vec<i64>>, Tally) {
+        let m = batch.len();
+        assert!(m > 0, "empty batch");
+        let quantum = model.batch_quantum();
+        let mp = m.div_ceil(quantum) * quantum;
+        let mut tally = Tally::default();
+        let layers = model.layers();
+        let mut h: Vec<Vec<i64>> = (0..batch[0].len())
+            .map(|k| {
+                let mut col: Vec<i64> = batch.iter().map(|row| row[k]).collect();
+                col.resize(mp, 0);
+                col
+            })
+            .collect();
+        let mut s1 = Stage1::new(model.precision(0).in_fmt());
+        for (li, layer) in layers.iter().enumerate() {
+            let prec = model.precision(li);
+            let (in_fmt, acc_fmt) = (prec.in_fmt(), prec.acc_fmt());
+            let (in_bits, acc_bits) = (prec.in_bits, prec.acc_bits);
+            s1.set_fmt(in_fmt);
+            let packed_cols: Vec<Vec<u64>> =
+                h.iter().map(|col| pack_stream(col, in_fmt)).collect();
+            let acc_words_per_n = (mp * acc_bits as usize).div_ceil(48);
+            let doubling = acc_bits == 2 * in_bits;
+            let mut out_cols: Vec<Vec<i64>> = Vec::with_capacity(layer.n);
+            let mut acc = vec![0u64; acc_words_per_n];
+            for n in 0..layer.n {
+                acc.iter_mut().for_each(|w| *w = 0);
+                for k in 0..layer.k {
+                    let plan = model.plan(li, k, n);
+                    if plan.ops.is_empty() {
+                        continue;
+                    }
+                    if doubling {
+                        for (wi, &word) in packed_cols[k].iter().enumerate() {
+                            let prod = s1.run_plan_on(word, plan);
+                            let (lo, hi) = widen_double(prod, in_fmt);
+                            acc[2 * wi] = swar_add(acc[2 * wi], lo, acc_fmt);
+                            tally.s2_passes += 1;
+                            if 2 * wi + 1 < acc.len() {
+                                acc[2 * wi + 1] = swar_add(acc[2 * wi + 1], hi, acc_fmt);
+                                tally.s2_passes += 1;
+                            }
+                        }
+                    } else {
+                        let mut products = Vec::with_capacity(packed_cols[k].len());
+                        for &word in &packed_cols[k] {
+                            products.push(s1.run_plan_on(word, plan));
+                        }
+                        let wide = if in_fmt == acc_fmt {
+                            products
+                        } else {
+                            tally.s2_passes += repack_cycles_exact(mp, in_fmt, acc_fmt);
+                            repack_stream(&products, in_fmt, acc_fmt, mp)
+                        };
+                        for (w, &p) in acc.iter_mut().zip(wide.iter()) {
+                            *w = swar_add(*w, p, acc_fmt);
+                        }
+                    }
+                    tally.s1_cycles += plan.cycles() as u64 * packed_cols[k].len() as u64;
+                    tally.subword_mults += m as u64;
+                }
+                out_cols.push(unpack_stream(&acc, acc_fmt, mp));
+            }
+            if li + 1 < layers.len() {
+                let chain = model.boundary_chain(li);
+                h = out_cols
+                    .iter()
+                    .map(|col| {
+                        col.iter()
+                            .map(|&v| {
+                                let mut x = v.max(0);
+                                for &(f, t) in chain {
+                                    x = convert_subword(x, f, t);
+                                }
+                                x
+                            })
+                            .collect()
+                    })
+                    .collect();
+                for &(_, t) in chain {
+                    let passes = (mp * t.bits as usize).div_ceil(48) as u64;
+                    tally.s2_passes += passes * layer.n as u64;
+                }
+            } else {
+                let out: Vec<Vec<i64>> = (0..m)
+                    .map(|b| out_cols.iter().map(|col| col[b]).collect())
+                    .collect();
+                return (out, tally);
+            }
+        }
+        unreachable!("compile rejects empty layer stacks")
+    }
+}
+
+/// One measured cell, JSON-serializable.
+struct Cell {
+    schedule: &'static str,
+    batch: usize,
+    rows_per_s: f64,
+    ns_per_subword_mult: f64,
+    allocs_per_batch: f64,
+    baseline_rows_per_s: f64,
+    speedup: f64,
+}
+
+impl Cell {
+    fn json(&self) -> String {
+        format!(
+            "{{\"schedule\":\"{}\",\"batch\":{},\"rows_per_s\":{:.1},\
+             \"ns_per_subword_mult\":{:.3},\"allocs_per_batch\":{:.2},\
+             \"baseline_rows_per_s\":{:.1},\"speedup\":{:.2}}}",
+            self.schedule,
+            self.batch,
+            self.rows_per_s,
+            self.ns_per_subword_mult,
+            self.allocs_per_batch,
+            self.baseline_rows_per_s,
+            self.speedup
+        )
+    }
+}
+
+fn model_layers(rng: &mut XorShift64) -> Vec<QuantLayer> {
+    [(64usize, 48usize), (48, 32), (32, 16)]
+        .iter()
+        .map(|&(k, n)| {
+            QuantLayer::new(
+                (0..k).map(|_| (0..n).map(|_| rng.q_raw(8)).collect()).collect(),
+                8,
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== engine: flat allocation-free core vs pre-refactor baseline ==");
+    // Counting is opt-in per measurement; timed cells run untaxed.
+    CountingAlloc::set_counting(false);
+    let mut rng = XorShift64::new(0xE9E1);
+    let layers = model_layers(&mut rng);
+    let schedules: [(&'static str, Vec<LayerPrecision>); 3] = [
+        (
+            "uniform-8-8-8",
+            vec![
+                LayerPrecision::new(8, 8),
+                LayerPrecision::new(8, 8),
+                LayerPrecision::new(8, 8),
+            ],
+        ),
+        (
+            "uniform-8w16",
+            vec![
+                LayerPrecision::new(8, 16),
+                LayerPrecision::new(8, 16),
+                LayerPrecision::new(8, 16),
+            ],
+        ),
+        (
+            "mixed-4-6-8",
+            vec![
+                LayerPrecision::new(4, 12),
+                LayerPrecision::new(6, 12),
+                LayerPrecision::new(8, 16),
+            ],
+        ),
+    ];
+    let mut cells: Vec<Cell> = vec![];
+    println!(
+        "{:<16} {:>6} {:>12} {:>10} {:>10} {:>12} {:>8}",
+        "schedule", "batch", "rows/s", "ns/mult", "allocs/b", "base rows/s", "speedup"
+    );
+    for (name, sched) in &schedules {
+        let model =
+            CompiledModel::compile_scheduled(layers.clone(), sched.clone()).expect("valid");
+        let engine = PackedMlpEngine::new(Arc::clone(&model));
+        for &batch_rows in &[6usize, 48, 192] {
+            let batch: Vec<Vec<i64>> = (0..batch_rows)
+                .map(|_| (0..64).map(|_| rng.q_raw(sched[0].in_bits)).collect())
+                .collect();
+            // Cross-check first: the flat engine and the baseline must
+            // agree bit-exactly before either is timed.
+            let mut scratch = EngineScratch::new();
+            let mut out = Vec::new();
+            let stats = engine.forward_batch_into(&batch, &mut scratch, &mut out);
+            let (base_out, base_tally) = baseline::forward_batch(&model, &batch);
+            assert_eq!(out, base_out, "{name} batch {batch_rows}: engines diverge");
+            assert_eq!(stats.s1_cycles, base_tally.s1_cycles, "{name}: s1 billing");
+            assert_eq!(stats.subword_mults, base_tally.subword_mults);
+            assert_eq!(stats.s2_passes, base_tally.s2_passes, "{name}: s2 billing");
+
+            // Steady-state allocations per batch (scratch already warm);
+            // counting is enabled only here, so the timed cells below
+            // pay no counter RMW per allocation — the alloc-heavy
+            // baseline must not be taxed into a flattering speedup.
+            CountingAlloc::set_counting(true);
+            let trials = 50u64;
+            let before = CountingAlloc::count();
+            for _ in 0..trials {
+                std::hint::black_box(engine.forward_batch_into(
+                    &batch,
+                    &mut scratch,
+                    &mut out,
+                ));
+            }
+            let allocs_per_batch = (CountingAlloc::count() - before) as f64 / trials as f64;
+            CountingAlloc::set_counting(false);
+
+            let label = format!("flat {name} (batch {batch_rows})");
+            let r = bench(&label, 40, || {
+                std::hint::black_box(engine.forward_batch_into(
+                    &batch,
+                    &mut scratch,
+                    &mut out,
+                ));
+            });
+            let rows_per_s = batch_rows as f64 / (r.ns_per_iter * 1e-9);
+            let ns_per_mult = r.ns_per_iter / stats.subword_mults as f64;
+
+            let base_label = format!("baseline {name} (batch {batch_rows})");
+            let rb = bench(&base_label, 40, || {
+                std::hint::black_box(baseline::forward_batch(&model, &batch));
+            });
+            let baseline_rows_per_s = batch_rows as f64 / (rb.ns_per_iter * 1e-9);
+
+            let cell = Cell {
+                schedule: *name,
+                batch: batch_rows,
+                rows_per_s,
+                ns_per_subword_mult: ns_per_mult,
+                allocs_per_batch,
+                baseline_rows_per_s,
+                speedup: rows_per_s / baseline_rows_per_s,
+            };
+            println!(
+                "{:<16} {:>6} {:>12.0} {:>10.3} {:>10.2} {:>12.0} {:>7.2}x",
+                cell.schedule,
+                cell.batch,
+                cell.rows_per_s,
+                cell.ns_per_subword_mult,
+                cell.allocs_per_batch,
+                cell.baseline_rows_per_s,
+                cell.speedup
+            );
+            cells.push(cell);
+        }
+    }
+
+    let cell_json: Vec<String> = cells.iter().map(Cell::json).collect();
+    write_cells("engine", "BENCH_engine.json", &cell_json);
+}

@@ -1,22 +1,57 @@
 //! Hot-path microbenchmarks: the packed multiply (the L3 request path's
-//! inner loop), CSD scheduling, SWAR primitives, and repacking.
+//! inner loop), CSD scheduling, SWAR primitives, and repacking — now
+//! including the flattened micro-op path (`Stage1::run_flat`) the
+//! serving engine executes (DESIGN.md §11).
+//!
+//! Every cell is also written to `BENCH_mult.json` (hand-rolled JSON —
+//! serde is unavailable offline), mirroring `benches/coordinator.rs`,
+//! so CI archives the micro-level perf trajectory next to the serving
+//! numbers.
 
 #[path = "benchkit.rs"]
 mod benchkit;
-use benchkit::{bench, throughput};
+use benchkit::{bench, throughput, write_cells, BenchResult};
 
 use softsimd::bits::format::SimdFormat;
-use softsimd::bits::swar::{swar_add, swar_add_sar};
+use softsimd::bits::swar::{swar_add, swar_add_sar, swar_relu};
+use softsimd::csd::flat::encode_plan;
 use softsimd::csd::schedule::schedule;
 use softsimd::pipeline::stage1::{mul_packed, mul_scalar_plan, Stage1};
-use softsimd::pipeline::stage2::repack_stream;
+use softsimd::pipeline::stage2::{repack_hop_into, repack_stream};
 use softsimd::workload::synth::XorShift64;
+
+/// One measured cell, JSON-serializable.
+struct Cell {
+    name: String,
+    ns_per_iter: f64,
+    munits_per_s: f64,
+    unit: &'static str,
+}
+
+impl Cell {
+    fn measured(r: &BenchResult, units_per_iter: f64, unit: &'static str) -> Cell {
+        Cell {
+            name: r.name.clone(),
+            ns_per_iter: r.ns_per_iter,
+            munits_per_s: units_per_iter / (r.ns_per_iter * 1e-9) / 1e6,
+            unit,
+        }
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"ns_per_iter\":{:.2},\"munits_per_s\":{:.2},\"unit\":\"{}\"}}",
+            self.name, self.ns_per_iter, self.munits_per_s, self.unit
+        )
+    }
+}
 
 fn main() {
     println!("== mult: packed-arithmetic hot paths ==");
     let fmt = SimdFormat::new(8);
     let mut rng = XorShift64::new(0xBE4C);
     let words: Vec<u64> = (0..1024).map(|_| rng.word()).collect();
+    let mut cells: Vec<Cell> = vec![];
 
     let mut acc = 0u64;
     let r = bench("swar_add 8b (1024 words)", 20, || {
@@ -25,6 +60,7 @@ fn main() {
         }
     });
     throughput(&r, 1024.0 * 6.0, "lane-adds");
+    cells.push(Cell::measured(&r, 1024.0 * 6.0, "lane-adds"));
 
     let r = bench("swar_add_sar k=3 (1024 words)", 20, || {
         for &w in &words {
@@ -32,6 +68,15 @@ fn main() {
         }
     });
     throughput(&r, 1024.0 * 6.0, "lane-ops");
+    cells.push(Cell::measured(&r, 1024.0 * 6.0, "lane-ops"));
+
+    let r = bench("swar_relu 8b (1024 words)", 20, || {
+        for &w in &words {
+            acc = swar_relu(acc ^ w, fmt);
+        }
+    });
+    throughput(&r, 1024.0 * 6.0, "lane-relus");
+    cells.push(Cell::measured(&r, 1024.0 * 6.0, "lane-relus"));
 
     let r = bench("csd schedule (256 multipliers, 8-bit)", 20, || {
         for m in -128i64..128 {
@@ -39,8 +84,11 @@ fn main() {
         }
     });
     throughput(&r, 256.0, "plans");
+    cells.push(Cell::measured(&r, 256.0, "plans"));
 
-    // The inner loop of the coordinator: plan reuse + packed multiply.
+    // The inner loop of the coordinator: plan reuse + packed multiply,
+    // first over the MulPlan form, then over the flat byte encoding the
+    // serving engine actually executes.
     let plan = schedule(115, 8);
     let mut s1 = Stage1::new(fmt);
     let r = bench("packed mul via precompiled plan (1024 words)", 50, || {
@@ -50,20 +98,46 @@ fn main() {
         }
     });
     throughput(&r, 1024.0 * 6.0, "subword-mults");
+    cells.push(Cell::measured(&r, 1024.0 * 6.0, "subword-mults"));
+
+    let mut flat = Vec::new();
+    encode_plan(&plan, &mut flat);
+    let r = bench("packed mul via flat micro-ops (1024 words)", 50, || {
+        for &w in &words {
+            std::hint::black_box(s1.run_flat(w, &flat));
+        }
+        s1.reset_counters();
+    });
+    throughput(&r, 1024.0 * 6.0, "subword-mults");
+    cells.push(Cell::measured(&r, 1024.0 * 6.0, "subword-mults"));
 
     let r = bench("mul_packed incl. scheduling (per word)", 20, || {
         std::hint::black_box(mul_packed(words[0], 115, 8, fmt));
     });
     throughput(&r, 6.0, "subword-mults");
+    cells.push(Cell::measured(&r, 6.0, "subword-mults"));
 
     let r = bench("scalar oracle (per value)", 20, || {
         std::hint::black_box(mul_scalar_plan(100, &plan, 8));
     });
     throughput(&r, 1.0, "mults");
+    cells.push(Cell::measured(&r, 1.0, "mults"));
 
     let r = bench("repack_stream 8->16 (64 words)", 20, || {
         std::hint::black_box(repack_stream(&words[..64], fmt, SimdFormat::new(16), 384));
     });
     throughput(&r, 384.0, "subword-converts");
+    cells.push(Cell::measured(&r, 384.0, "subword-converts"));
+
+    let mut dst = Vec::new();
+    let r = bench("repack_hop_into 8->16 (64 words)", 20, || {
+        repack_hop_into(&words[..64], fmt, SimdFormat::new(16), 384, &mut dst);
+        std::hint::black_box(&dst);
+    });
+    throughput(&r, 384.0, "subword-converts");
+    cells.push(Cell::measured(&r, 384.0, "subword-converts"));
     std::hint::black_box(acc);
+
+    let cell_json: Vec<String> = cells.iter().map(Cell::json).collect();
+    write_cells("mult", "BENCH_mult.json", &cell_json);
 }

@@ -51,9 +51,17 @@ pub fn pack(vals: &[i64], fmt: SimdFormat) -> u64 {
         "expected {} lane values for {fmt}",
         fmt.lanes()
     );
+    pack_chunk(vals, fmt)
+}
+
+/// The one range-checked lane-packing loop every packing entry point
+/// shares: pack a chunk of at most `lanes` values (missing trailing
+/// lanes are zero). Panics if a value does not fit its lane.
+fn pack_chunk(chunk: &[i64], fmt: SimdFormat) -> u64 {
+    debug_assert!(chunk.len() <= fmt.lanes() as usize);
     let half = 1i64 << (fmt.bits - 1);
     let mut w = 0u64;
-    for (i, &v) in vals.iter().enumerate() {
+    for (i, &v) in chunk.iter().enumerate() {
         assert!(
             v >= -half && v < half,
             "lane {i} value {v} out of Q1.{} range [{}, {})",
@@ -76,17 +84,28 @@ pub fn unpack(word: u64, fmt: SimdFormat) -> Vec<i64> {
 }
 
 /// Pack a slice of raw values into as many words as needed, zero-padding
-/// the final partial word. Returns (words, count) where `count` is the
-/// original element count.
+/// the final partial word.
 pub fn pack_stream(vals: &[i64], fmt: SimdFormat) -> Vec<u64> {
-    let lanes = fmt.lanes() as usize;
-    vals.chunks(lanes)
-        .map(|chunk| {
-            let mut padded = chunk.to_vec();
-            padded.resize(lanes, 0);
-            pack(&padded, fmt)
-        })
-        .collect()
+    let mut out = Vec::with_capacity(vals.len().div_ceil(fmt.lanes() as usize));
+    pack_stream_into(vals, fmt, &mut out);
+    out
+}
+
+/// As [`pack_stream`], written into a caller-owned buffer (`dst` is
+/// cleared and refilled; a warmed buffer makes the call allocation-free
+/// — the serving hot path's form, DESIGN.md §11). Missing lanes of a
+/// partial final chunk pack as zero, identical to the padded [`pack`].
+pub fn pack_stream_into(vals: &[i64], fmt: SimdFormat, dst: &mut Vec<u64>) {
+    dst.clear();
+    pack_stream_append(vals, fmt, dst);
+}
+
+/// As [`pack_stream_into`], but appending to `dst` — the engine packs
+/// several activation columns back to back into one buffer.
+pub fn pack_stream_append(vals: &[i64], fmt: SimdFormat, dst: &mut Vec<u64>) {
+    for chunk in vals.chunks(fmt.lanes() as usize) {
+        dst.push(pack_chunk(chunk, fmt));
+    }
 }
 
 /// Unpack a stream of words, truncating to `count` elements.
@@ -137,6 +156,20 @@ mod tests {
         let words = pack_stream(&vals, fmt);
         assert_eq!(words.len(), 2);
         assert_eq!(unpack_stream(&words, fmt, vals.len()), vals);
+    }
+
+    #[test]
+    fn pack_stream_into_reuses_buffer_and_matches_pack_stream() {
+        let mut dst = Vec::new();
+        for fmt in SimdFormat::all() {
+            let half = 1i64 << (fmt.bits - 1);
+            let vals: Vec<i64> = (0..23).map(|i| ((i * 31 + 7) % (2 * half)) - half).collect();
+            pack_stream_into(&vals, fmt, &mut dst);
+            assert_eq!(dst, pack_stream(&vals, fmt), "fmt {fmt}");
+            // Reuse with a shorter stream: buffer shrinks, not appends.
+            pack_stream_into(&vals[..5], fmt, &mut dst);
+            assert_eq!(dst, pack_stream(&vals[..5], fmt), "fmt {fmt} short");
+        }
     }
 
     #[test]

@@ -120,6 +120,22 @@ pub fn swar_shl1(a: u64, fmt: SimdFormat) -> u64 {
     ((a << 1) & WORD_MASK) & !fmt.lsb_mask()
 }
 
+/// Per-sub-word ReLU: every lane whose sign bit is set becomes zero,
+/// non-negative lanes pass through — the activation unit applied to a
+/// whole packed word in one pass (the serving engine's word-level
+/// boundary, DESIGN.md §11).
+///
+/// The sign bits, moved to the lane LSBs, are spread into full-lane
+/// masks by one multiply with the all-ones lane pattern; the spreads
+/// cannot collide because lane bases are `bits` apart.
+#[inline]
+pub fn swar_relu(a: u64, fmt: SimdFormat) -> u64 {
+    debug_assert_eq!(a & !WORD_MASK, 0);
+    let signs = (a & fmt.msb_mask()) >> (fmt.bits - 1);
+    let neg_lanes = signs.wrapping_mul((1u64 << fmt.bits) - 1);
+    a & !neg_lanes
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,6 +306,25 @@ mod tests {
         let c = pack(&[127, -128, -128, 127, 0, 1], fmt);
         let got = unpack(swar_add_sar(a, c, 1, fmt), fmt);
         assert_eq!(got, vec![127, -128, -1, -1, 0, 1]);
+    }
+
+    #[test]
+    fn relu_matches_per_lane_max_zero() {
+        let mut rng = XorShift(0x5EED_0008);
+        for fmt in SimdFormat::all() {
+            for _ in 0..400 {
+                let a = rng.word();
+                let got = lanes_of(swar_relu(a, fmt), fmt);
+                let want: Vec<i64> = lanes_of(a, fmt).iter().map(|&x| x.max(0)).collect();
+                assert_eq!(got, want, "fmt {fmt} a={a:#x}");
+                assert_eq!(swar_relu(a, fmt) & !WORD_MASK, 0);
+            }
+            // Idempotent and zero-preserving.
+            let a = rng.word();
+            let r = swar_relu(a, fmt);
+            assert_eq!(swar_relu(r, fmt), r);
+            assert_eq!(swar_relu(0, fmt), 0);
+        }
     }
 
     #[test]

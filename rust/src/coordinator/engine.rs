@@ -14,8 +14,33 @@
 //! cycle billing and Stage-2 pass billing are all per-layer. At every
 //! layer boundary the activation stream is repacked through the Stage-2
 //! crossbar chain precompiled in the model (`boundary_chain`), after the
-//! scalar activation unit applies ReLU — this is the paper's "changing
-//! the bitwidth of sub-words at run-time" exercised on the serving path.
+//! activation unit applies ReLU — this is the paper's "changing the
+//! bitwidth of sub-words at run-time" exercised on the serving path.
+//!
+//! **Execution strategy (DESIGN.md §11).** The hot path is
+//! [`PackedMlpEngine::forward_batch_into`]: an allocation-free,
+//! cache-friendly core that
+//! * executes the model's flattened micro-op arena
+//!   ([`crate::csd::flat::PlanArena`]) via [`Stage1::run_flat`] — one
+//!   byte per cycle, the `k` plans feeding an output column adjacent, no
+//!   `MulPlan`/`Arc` in the inner loop;
+//! * keeps every intermediate in a caller-owned [`EngineScratch`]
+//!   (packed activation words, the weight-stationary accumulator block,
+//!   product/boundary staging), so steady-state serving performs **zero
+//!   heap allocations** after the first batch warms the buffers — the
+//!   counting-allocator integration test enforces this;
+//! * activations stay *packed* between layers: the boundary applies
+//!   ReLU word-level ([`crate::bits::swar::swar_relu`]) over the
+//!   accumulator stream, then runs each precompiled hop over the whole
+//!   stream ([`crate::pipeline::stage2::repack_hop_into`]) — there is no
+//!   unpack → per-value-convert → repack round trip;
+//! * fuses the doubling-path widen+accumulate per product word.
+//!
+//! Billing is **independent of execution strategy**: `EngineStats` is
+//! derived from the Stage-1 datapath's own cycle counters
+//! ([`Stage1::take_counters`] — one source of truth, no re-billing via
+//! `plan.cycles()`) and counts exactly what the pre-refactor engine
+//! counted for the same work; the property tests pin the formulas.
 //!
 //! The engine owns no weights and compiles no plans: it executes a
 //! shared immutable [`CompiledModel`] (DESIGN.md §8). Batches are padded
@@ -27,11 +52,12 @@
 
 use std::sync::Arc;
 
+use crate::bits::fixed::sign_extend;
 use crate::bits::format::{format_index, SimdFormat, FORMATS};
-use crate::bits::pack::{pack_stream, unpack_stream};
-use crate::bits::swar::swar_add;
+use crate::bits::pack::pack_stream_append;
+use crate::bits::swar::{swar_add, swar_relu};
 use crate::pipeline::stage1::Stage1;
-use crate::pipeline::stage2::{convert_subword, repack_cycles_exact, repack_stream};
+use crate::pipeline::stage2::{repack_hop_into, widen_double};
 
 use super::model::CompiledModel;
 
@@ -71,6 +97,63 @@ impl EngineStats {
     }
 }
 
+/// Reusable per-worker execution state: every buffer the packed forward
+/// pass needs, owned by the caller and warmed by the first batch. A PE
+/// worker keeps one across its whole lifetime (`server.rs`), so
+/// steady-state serving allocates nothing (DESIGN.md §11).
+///
+/// Lifecycle: all buffers are `clear()`ed and refilled per use — their
+/// capacity persists; nothing is freed between batches. A scratch is
+/// not tied to a model: reusing one across models is safe, it merely
+/// re-warms.
+#[derive(Debug)]
+pub struct EngineScratch {
+    /// The Stage-1 datapath (its cycle counters are drained into
+    /// `EngineStats` after every plan × word-stream unit).
+    s1: Stage1,
+    /// Packed activation columns of the current layer: `k` columns ×
+    /// `words_per_col`, column-major, at the layer's activation format.
+    h: Vec<u64>,
+    /// Next layer's activation columns (boundary output staging).
+    h_next: Vec<u64>,
+    /// Weight-stationary accumulator block: `n` columns × `acc_words`
+    /// at the layer's accumulator format.
+    acc: Vec<u64>,
+    /// Product words of one (column, weight) pair (generic widen path).
+    prod: Vec<u64>,
+    /// Widened/converted stream staging (generic path + boundary hops).
+    wide: Vec<u64>,
+    /// Intermediate hop staging for multi-hop boundary chains.
+    stage: Vec<u64>,
+    /// Scalar staging for the first layer's column gather.
+    col: Vec<i64>,
+    /// Warmed output rows parked by a smaller batch, re-adopted by a
+    /// later larger one — shrink-then-grow serving stays allocation-free.
+    spare_rows: Vec<Vec<i64>>,
+}
+
+impl EngineScratch {
+    pub fn new() -> EngineScratch {
+        EngineScratch {
+            s1: Stage1::new(SimdFormat::new(8)),
+            h: Vec::new(),
+            h_next: Vec::new(),
+            acc: Vec::new(),
+            prod: Vec::new(),
+            wide: Vec::new(),
+            stage: Vec::new(),
+            col: Vec::new(),
+            spare_rows: Vec::new(),
+        }
+    }
+}
+
+impl Default for EngineScratch {
+    fn default() -> Self {
+        EngineScratch::new()
+    }
+}
+
 /// A packed-execution engine bound to one PE, sharing one compiled model.
 pub struct PackedMlpEngine {
     model: Arc<CompiledModel>,
@@ -91,13 +174,40 @@ impl PackedMlpEngine {
     /// layer's activation format) through all layers using packed
     /// arithmetic; returns final accumulators (`Q1.(acc_bits-1)` at the
     /// last layer's accumulator format) per row, plus tallies.
+    ///
+    /// Convenience wrapper over [`forward_batch_into`] with one-shot
+    /// buffers — tests, evals and examples. The serving loop threads a
+    /// long-lived [`EngineScratch`] instead.
+    ///
+    /// [`forward_batch_into`]: PackedMlpEngine::forward_batch_into
     pub fn forward_batch(&self, batch: &[Vec<i64>]) -> (Vec<Vec<i64>>, EngineStats) {
+        let mut scratch = EngineScratch::new();
+        let mut out = Vec::with_capacity(batch.len());
+        let stats = self.forward_batch_into(batch, &mut scratch, &mut out);
+        (out, stats)
+    }
+
+    /// The allocation-free execution core: as [`forward_batch`], but
+    /// every intermediate lives in `scratch` and the per-row logits are
+    /// written into `out` (rows reused in place). After the first batch
+    /// has warmed the buffers, a steady-state call performs **zero**
+    /// heap allocations (enforced by the counting-allocator test).
+    ///
+    /// [`forward_batch`]: PackedMlpEngine::forward_batch
+    pub fn forward_batch_into(
+        &self,
+        batch: &[Vec<i64>],
+        scratch: &mut EngineScratch,
+        out: &mut Vec<Vec<i64>>,
+    ) -> EngineStats {
         let model = &*self.model;
+        let arena = model.flat();
         let m = batch.len();
         assert!(m > 0, "empty batch");
         // Pad the batch dimension to the model's batch quantum: packed
         // words run full at every layer's format and no layer's
-        // accumulator stream has a partial final word.
+        // accumulator stream has a partial final word — every
+        // words-per-column count below is exact, never a ceiling.
         let quantum = model.batch_quantum();
         let mp = m.div_ceil(quantum) * quantum;
         let mut stats = EngineStats {
@@ -105,128 +215,171 @@ impl PackedMlpEngine {
             ..EngineStats::default()
         };
         let layers = model.layers();
-        // h[k][mp] activations, column-major for packing across batch.
-        let mut h: Vec<Vec<i64>> = (0..batch[0].len())
-            .map(|k| {
-                let mut col: Vec<i64> = batch.iter().map(|row| row[k]).collect();
-                col.resize(mp, 0);
-                col
-            })
-            .collect();
-        let mut s1 = Stage1::new(model.precision(0).in_fmt());
+
+        // Pack the first layer's activation columns out of the
+        // row-major batch (pad rows are all-zero lanes): gather each
+        // column into the scalar staging buffer, then the canonical
+        // range-checked lane pack appends its words.
+        let in_fmt0 = model.precision(0).in_fmt();
+        let mut cur_words = mp / in_fmt0.lanes() as usize;
+        assert_eq!(batch[0].len(), layers[0].k, "layer 0 input width");
+        scratch.h.clear();
+        for k in 0..layers[0].k {
+            scratch.col.clear();
+            for row in batch {
+                scratch.col.push(row[k]);
+            }
+            scratch.col.resize(mp, 0);
+            pack_stream_append(&scratch.col, in_fmt0, &mut scratch.h);
+        }
+
         for (li, layer) in layers.iter().enumerate() {
-            assert_eq!(h.len(), layer.k, "layer {li} input width");
             let prec = model.precision(li);
             let (in_fmt, acc_fmt) = (prec.in_fmt(), prec.acc_fmt());
-            let (in_bits, acc_bits) = (prec.in_bits, prec.acc_bits);
-            s1.set_fmt(in_fmt);
-            // Pack each activation column across the batch at this
-            // layer's activation format.
-            let packed_cols: Vec<Vec<u64>> =
-                h.iter().map(|col| pack_stream(col, in_fmt)).collect();
-            let acc_words_per_n = (mp * acc_bits as usize).div_ceil(48);
+            assert_eq!(scratch.h.len(), layer.k * cur_words, "layer {li} input width");
+            scratch.s1.set_fmt(in_fmt);
+            scratch.s1.reset_counters();
+            let acc_words = mp * prec.acc_bits as usize / 48;
             // Fast path: the accumulate format is exactly double the
             // input format — use the SWAR widen instead of the generic
             // stream repack (DESIGN.md §9).
-            let doubling = acc_bits == 2 * in_bits;
-            let mut out_cols: Vec<Vec<i64>> = Vec::with_capacity(layer.n);
-            let mut acc = vec![0u64; acc_words_per_n];
+            let doubling = prec.acc_bits == 2 * prec.in_bits;
+            // Weight-stationary block: accumulators for *all* n output
+            // columns of this layer live in scratch at once, so each
+            // flat plan is fetched exactly once and streamed over the
+            // whole packed column.
+            scratch.acc.clear();
+            scratch.acc.resize(layer.n * acc_words, 0);
             for n in 0..layer.n {
-                acc.iter_mut().for_each(|w| *w = 0);
-                for k in 0..layer.k {
-                    let plan = model.plan(li, k, n);
-                    if plan.ops.is_empty() {
+                let acc_col = &mut scratch.acc[n * acc_words..(n + 1) * acc_words];
+                // The k plan headers feeding column n are adjacent.
+                for (k, hdr) in arena.column(li, n).iter().enumerate() {
+                    if hdr.is_zero() {
                         continue; // zero weight: zero-skipped entirely
                     }
+                    let ops = arena.ops(*hdr);
+                    let x_col = &scratch.h[k * cur_words..(k + 1) * cur_words];
                     if doubling {
-                        for (wi, &word) in packed_cols[k].iter().enumerate() {
-                            let prod = s1.run_plan_on(word, plan);
-                            let (lo, hi) = crate::pipeline::stage2::widen_double(prod, in_fmt);
-                            // One accumulate add and one widen pass per
-                            // produced output word — the hi word exists
-                            // only when the accumulator stream extends
-                            // that far (always, once the batch is padded
-                            // to the batch quantum).
-                            acc[2 * wi] = swar_add(acc[2 * wi], lo, acc_fmt);
+                        // Fused multiply → widen → accumulate per word:
+                        // one accumulate add and one widen pass per
+                        // produced accumulator word (always both, once
+                        // the batch is padded to the batch quantum).
+                        for (wi, &word) in x_col.iter().enumerate() {
+                            let prod = scratch.s1.run_flat(word, ops);
+                            let (lo, hi) = widen_double(prod, in_fmt);
+                            acc_col[2 * wi] = swar_add(acc_col[2 * wi], lo, acc_fmt);
                             stats.acc_adds += 1;
                             stats.note_s2(acc_fmt, 1);
-                            if 2 * wi + 1 < acc.len() {
-                                acc[2 * wi + 1] =
-                                    swar_add(acc[2 * wi + 1], hi, acc_fmt);
+                            if 2 * wi + 1 < acc_words {
+                                acc_col[2 * wi + 1] =
+                                    swar_add(acc_col[2 * wi + 1], hi, acc_fmt);
                                 stats.acc_adds += 1;
                                 stats.note_s2(acc_fmt, 1);
                             }
                         }
-                    } else {
-                        // Generic path through the canonical stream
-                        // repack; Stage-2 passes are charged for the
-                        // sub-words actually converted (a single direct
-                        // widening hop here — `acc ≥ in` always). When
-                        // in == acc the product words accumulate as-is:
-                        // no conversion happens, so none is billed.
-                        let mut products = Vec::with_capacity(packed_cols[k].len());
-                        for &word in &packed_cols[k] {
-                            products.push(s1.run_plan_on(word, plan));
+                    } else if in_fmt == acc_fmt {
+                        // Equal widths: the product words accumulate
+                        // as-is — no conversion happens, none is billed.
+                        for (wi, &word) in x_col.iter().enumerate() {
+                            let prod = scratch.s1.run_flat(word, ops);
+                            acc_col[wi] = swar_add(acc_col[wi], prod, acc_fmt);
+                            stats.acc_adds += 1;
                         }
-                        let wide = if in_fmt == acc_fmt {
-                            products
-                        } else {
-                            stats.note_s2(acc_fmt, repack_cycles_exact(mp, in_fmt, acc_fmt));
-                            repack_stream(&products, in_fmt, acc_fmt, mp)
-                        };
-                        for (w, &p) in acc.iter_mut().zip(wide.iter()) {
+                    } else {
+                        // Generic widening (`acc ≥ in` always, so the
+                        // hop is direct): products → one word-level hop
+                        // → accumulate. Stage-2 passes are charged for
+                        // the output words actually produced — with the
+                        // batch padded to the quantum, `acc_words` ==
+                        // `repack_cycles_exact(mp, in_fmt, acc_fmt)`.
+                        scratch.prod.clear();
+                        for &word in x_col {
+                            scratch.prod.push(scratch.s1.run_flat(word, ops));
+                        }
+                        stats.note_s2(acc_fmt, acc_words as u64);
+                        repack_hop_into(&scratch.prod, in_fmt, acc_fmt, mp, &mut scratch.wide);
+                        for (w, &p) in acc_col.iter_mut().zip(scratch.wide.iter()) {
                             *w = swar_add(*w, p, acc_fmt);
                             stats.acc_adds += 1;
                         }
                     }
-                    stats.note_s1(
-                        in_fmt,
-                        plan.cycles() as u64 * packed_cols[k].len() as u64,
-                    );
+                    // Stage-1 billing is the datapath's own cycle count
+                    // (one source of truth — never `plan.cycles()`
+                    // on the side).
+                    let (cycles, _adds) = scratch.s1.take_counters();
+                    debug_assert_eq!(cycles, hdr.cycles as u64 * cur_words as u64);
+                    stats.note_s1(in_fmt, cycles);
                     // Only the m real rows are useful multiplies; the
                     // zero-pad lanes of the batch tail are not.
                     stats.subword_mults += m as u64;
                 }
-                out_cols.push(unpack_stream(&acc, acc_fmt, mp));
             }
             if li + 1 < layers.len() {
-                // ReLU (activation unit, scalar glue) then the Stage-2
-                // repack of each output column's accumulator stream
-                // into the next layer's activation format — the
-                // run-time sub-word bitwidth switch of Section III-C.
-                // The hop chain was precompiled at model compile; the
-                // per-value conversion below is exactly what
-                // `repack_stream` applies between its unpack and pack
-                // (the next layer's `pack_stream` re-packs the stream).
-                // An empty chain is a Stage-2 bypass: no crossbar
-                // traversal happens and none is billed.
+                // Layer boundary, fully word-level: ReLU in one pass
+                // over each column's accumulator stream, then each
+                // precompiled crossbar hop over the whole packed stream
+                // — the run-time sub-word bitwidth switch of Section
+                // III-C with no unpack → per-value-convert → repack
+                // round trip. An empty chain is a Stage-2 bypass: no
+                // crossbar traversal happens and none is billed.
                 let chain = model.boundary_chain(li);
-                h = out_cols
-                    .iter()
-                    .map(|col| {
-                        col.iter()
-                            .map(|&v| {
-                                let mut x = v.max(0);
-                                for &(f, t) in chain {
-                                    x = convert_subword(x, f, t);
-                                }
-                                x
-                            })
-                            .collect()
-                    })
-                    .collect();
+                let next_words = mp / model.precision(li + 1).in_fmt().lanes() as usize;
+                scratch.h_next.clear();
+                for n in 0..layer.n {
+                    let span = n * acc_words..(n + 1) * acc_words;
+                    for w in scratch.acc[span.clone()].iter_mut() {
+                        *w = swar_relu(*w, acc_fmt);
+                    }
+                    let acc_col = &scratch.acc[span];
+                    if chain.is_empty() {
+                        scratch.h_next.extend_from_slice(acc_col);
+                    } else {
+                        repack_hop_into(acc_col, chain[0].0, chain[0].1, mp, &mut scratch.wide);
+                        for &(f, t) in &chain[1..] {
+                            std::mem::swap(&mut scratch.wide, &mut scratch.stage);
+                            repack_hop_into(&scratch.stage, f, t, mp, &mut scratch.wide);
+                        }
+                        scratch.h_next.extend_from_slice(&scratch.wide);
+                    }
+                }
                 // One crossbar cycle per output word each hop produces,
                 // per output column — billed to the format produced.
                 for &(_, t) in chain {
                     let passes = (mp * t.bits as usize).div_ceil(48) as u64;
                     stats.note_s2(t, passes * layer.n as u64);
                 }
+                std::mem::swap(&mut scratch.h, &mut scratch.h_next);
+                cur_words = next_words;
             } else {
-                // Transpose back to row-major, dropping the pad rows.
-                let out: Vec<Vec<i64>> = (0..m)
-                    .map(|b| out_cols.iter().map(|col| col[b]).collect())
-                    .collect();
-                return (out, stats);
+                // Untranspose the accumulator block into row-major
+                // logits, dropping the pad rows. `out`'s rows are
+                // reused in place; a smaller batch parks its surplus
+                // warmed rows in the scratch so a later larger batch
+                // re-adopts them instead of allocating.
+                let acc_lanes = acc_fmt.lanes() as usize;
+                let mask = (1u64 << acc_fmt.bits) - 1;
+                while out.len() > m {
+                    scratch.spare_rows.push(out.pop().expect("len checked"));
+                }
+                while out.len() < m {
+                    out.push(scratch.spare_rows.pop().unwrap_or_default());
+                }
+                for (b, row) in out.iter_mut().enumerate() {
+                    row.clear();
+                    for n in 0..layer.n {
+                        let word = scratch.acc[n * acc_words + b / acc_lanes];
+                        row.push(sign_extend(
+                            (word >> ((b % acc_lanes) as u32 * acc_fmt.bits)) & mask,
+                            acc_fmt.bits,
+                        ));
+                    }
+                }
+                // Grow the spare pool's spine now, while still in the
+                // call that grew `out` (a warming event by definition),
+                // so a later smaller batch parks its surplus rows
+                // without touching the allocator.
+                scratch.spare_rows.reserve(out.len());
+                return stats;
             }
         }
         unreachable!("CompiledModel::compile rejects empty layer stacks")
@@ -274,6 +427,35 @@ mod tests {
                 stats.pad_rows as usize,
                 batch_size.div_ceil(6) * 6 - batch_size
             );
+        }
+    }
+
+    #[test]
+    fn reused_scratch_is_bit_identical_to_fresh_buffers() {
+        // One scratch threaded across differently-shaped batches and
+        // models must never leak state between runs.
+        let mut rng = XorShift64::new(0xE8EA);
+        let layers = random_layers(&mut rng);
+        let sched_a = vec![LayerPrecision::new(8, 16), LayerPrecision::new(8, 16)];
+        let sched_b = vec![LayerPrecision::new(4, 8), LayerPrecision::new(8, 16)];
+        let mut scratch = EngineScratch::new();
+        let mut out = Vec::new();
+        for sched in [sched_a, sched_b] {
+            let model =
+                CompiledModel::compile_scheduled(layers.clone(), sched.clone()).unwrap();
+            let engine = PackedMlpEngine::new(model);
+            for batch_size in [17usize, 3, 24, 1] {
+                let batch: Vec<Vec<i64>> = (0..batch_size)
+                    .map(|_| (0..10).map(|_| rng.q_raw(sched[0].in_bits)).collect())
+                    .collect();
+                let stats = engine.forward_batch_into(&batch, &mut scratch, &mut out);
+                let (fresh, fresh_stats) = engine.forward_batch(&batch);
+                assert_eq!(out, fresh, "sched {sched:?} size {batch_size}");
+                assert_eq!(stats.s1_cycles, fresh_stats.s1_cycles);
+                assert_eq!(stats.s2_passes, fresh_stats.s2_passes);
+                assert_eq!(stats.acc_adds, fresh_stats.acc_adds);
+                assert_eq!(stats.subword_mults, fresh_stats.subword_mults);
+            }
         }
     }
 

@@ -33,7 +33,7 @@ pub mod server;
 
 pub use batcher::{Batch, Batcher, TrackedRequest};
 pub use cost::CostTable;
-pub use engine::{EngineStats, PackedMlpEngine};
+pub use engine::{EngineScratch, EngineStats, PackedMlpEngine};
 pub use metrics::Metrics;
 pub use model::CompiledModel;
 pub use server::{

@@ -23,6 +23,7 @@ use std::sync::Arc;
 
 use crate::anyhow;
 use crate::bits::format::SimdFormat;
+use crate::csd::flat::PlanArena;
 use crate::csd::schedule::MulPlan;
 use crate::nn::weights::{uniform_schedule, LayerPrecision, QuantLayer};
 use crate::pipeline::stage2::conversion_chain;
@@ -38,8 +39,14 @@ pub static PLAN_COMPILATIONS: AtomicU64 = AtomicU64::new(0);
 #[derive(Debug)]
 pub struct CompiledModel {
     layers: Vec<QuantLayer>,
-    /// `plans[layer][k][n]`, precompiled for every weight.
+    /// `plans[layer][k][n]`, precompiled for every weight — the
+    /// inspectable compilation artifact (oracles, tests, billing
+    /// cross-checks).
     plans: Vec<Vec<Vec<MulPlan>>>,
+    /// The same plans flattened into one contiguous SoA micro-op buffer
+    /// — the execution artifact the engine's hot loop runs
+    /// (DESIGN.md §11).
+    arena: PlanArena,
     /// One activation/accumulator format pair per layer.
     schedule: Vec<LayerPrecision>,
     /// `chains[li]`: the crossbar hop chain converting layer `li`'s
@@ -142,9 +149,11 @@ impl CompiledModel {
                 }
             }
         }
+        let arena = PlanArena::build(&plans);
         Ok(Arc::new(CompiledModel {
             layers,
             plans,
+            arena,
             schedule,
             chains,
             batch_quantum,
@@ -161,6 +170,13 @@ impl CompiledModel {
     #[inline]
     pub fn plan(&self, li: usize, k: usize, n: usize) -> &MulPlan {
         &self.plans[li][k][n]
+    }
+
+    /// The flattened micro-op arena the serving engine executes
+    /// (one byte per Stage-1 cycle; column-adjacent plan headers).
+    #[inline]
+    pub fn flat(&self) -> &PlanArena {
+        &self.arena
     }
 
     /// The full precision schedule, one entry per layer.
@@ -246,6 +262,33 @@ mod tests {
         assert!(m.cycles_per_word() > 0);
         assert_eq!(m.plan(0, 0, 0).ops.len(), m.layers()[0].plan(0, 0).ops.len());
         assert_eq!(m.boundary_chain(0), &[(SimdFormat::new(16), SimdFormat::new(8))]);
+    }
+
+    #[test]
+    fn flat_arena_mirrors_the_plan_tables() {
+        let m = CompiledModel::compile(layers(), 8, 16).unwrap();
+        let arena = m.flat();
+        for (li, layer) in m.layers().iter().enumerate() {
+            for k in 0..layer.k {
+                for n in 0..layer.n {
+                    let plan = m.plan(li, k, n);
+                    let h = arena.header(li, k, n);
+                    assert_eq!(h.cycles as usize, plan.cycles(), "({li},{k},{n})");
+                    assert_eq!(h.adds as usize, plan.adds());
+                    let decoded: Vec<_> = arena
+                        .ops(h)
+                        .iter()
+                        .map(|&b| crate::csd::flat::decode_op(b))
+                        .collect();
+                    assert_eq!(decoded, plan.ops);
+                }
+            }
+        }
+        // Column adjacency: layer 0 column 0 holds plans (k=0,n=0),(k=1,n=0).
+        let col = arena.column(0, 0);
+        assert_eq!(col.len(), 2);
+        assert_eq!(col[0], arena.header(0, 0, 0));
+        assert_eq!(col[1], arena.header(0, 1, 0));
     }
 
     #[test]

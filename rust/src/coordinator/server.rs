@@ -545,25 +545,40 @@ fn worker_loop(
     outstanding_rows: Arc<AtomicUsize>,
     outstanding_batches: Arc<AtomicUsize>,
 ) {
+    // Steady-state serving allocates nothing in the engine: the worker
+    // owns one EngineScratch plus gather/output buffers for its whole
+    // lifetime, warmed by the first batch and reused across requests
+    // (DESIGN.md §11). Only the Response assembly below allocates.
+    let mut scratch = crate::coordinator::engine::EngineScratch::new();
+    let mut logits: Vec<Vec<i64>> = Vec::new();
+    let mut rows_buf: Vec<Vec<i64>> = Vec::new();
     while let Ok(msg) = rx.recv() {
         let batch = match msg {
             WorkerMsg::Work(b) => b,
             WorkerMsg::Stop => break,
         };
         let t0 = Instant::now();
-        // Gather rows, run packed, scatter back per request.
-        let rows: Vec<Vec<i64>> = batch
-            .entries
-            .iter()
-            .flat_map(|e| e.req.rows.iter().cloned())
-            .collect();
-        let (logits, stats) = engine.forward_batch(&rows);
+        // Gather rows into the reusable buffer (rows keep their
+        // capacity; `n_rows` tracks the live prefix), run packed,
+        // scatter back per request.
+        let mut n_rows = 0usize;
+        for entry in &batch.entries {
+            for row in &entry.req.rows {
+                if n_rows == rows_buf.len() {
+                    rows_buf.push(Vec::new());
+                }
+                rows_buf[n_rows].clear();
+                rows_buf[n_rows].extend_from_slice(row);
+                n_rows += 1;
+            }
+        }
+        let stats = engine.forward_batch_into(&rows_buf[..n_rows], &mut scratch, &mut logits);
         let ns = t0.elapsed().as_nanos() as u64;
         // Exact per-format billing: with a mixed-precision schedule the
         // layers run at different widths, so the worker hands the cost
         // table the by-format cycle breakdown, not one format.
         let pj = cost.batch_energy_pj(&stats);
-        metrics.add_batch(rows.len() as u64, stats, pj, ns);
+        metrics.add_batch(n_rows as u64, stats, pj, ns);
         let mut responses = vec![];
         let mut offset = 0;
         for entry in &batch.entries {

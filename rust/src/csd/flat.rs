@@ -1,0 +1,253 @@
+//! Flattened CSD micro-op plans — the serving engine's execution form
+//! (DESIGN.md §11).
+//!
+//! [`super::schedule::MulPlan`] is the right *compilation* artifact (one
+//! heap `Vec<MulOp>` per weight, easy to inspect and test), but it is a
+//! poor *execution* artifact: the engine's inner loop walks thousands of
+//! tiny heap allocations per batch, each op an 8-byte enum, with a
+//! pointer chase per weight. This module flattens a whole model's plans
+//! into one contiguous structure-of-arrays [`PlanArena`]:
+//!
+//! * every micro-op is **one byte** — shift amount in the low nibble,
+//!   op kind / operand sign in the top bits ([`FLAT_ADD`], [`FLAT_NEG`]);
+//! * every plan is a `(offset, cycles, adds)` header ([`FlatPlan`]) into
+//!   the shared op buffer;
+//! * headers are laid out so the `k` plans feeding output column `n` of
+//!   a layer are **adjacent** ([`PlanArena::column`]) — the engine's
+//!   weight-stationary loop streams them front to back.
+//!
+//! The encoding is lossless ([`encode_op`]/[`decode_op`] round-trip) and
+//! execution over the flat form ([`crate::pipeline::stage1::Stage1::run_flat`])
+//! is bit-exact against [`crate::pipeline::stage1::Stage1::run_plan`];
+//! the property tests enforce both.
+
+use super::schedule::{MulOp, MulPlan};
+
+/// Low nibble of a flat op: the cycle's shift distance (`0..=MAX_SHIFT`;
+/// 0 only on the final add of a plan).
+pub const FLAT_SHIFT_MASK: u8 = 0x0F;
+/// Set: the cycle adds/subtracts the multiplicand before shifting
+/// (`MulOp::AddShift`); clear: a pure-shift zero-run cycle.
+pub const FLAT_ADD: u8 = 0x40;
+/// Set (only together with [`FLAT_ADD`]): the operand is subtracted
+/// (a CSD `−1` digit).
+pub const FLAT_NEG: u8 = 0x80;
+
+/// Encode one [`MulOp`] into its one-byte flat form.
+#[inline]
+pub fn encode_op(op: MulOp) -> u8 {
+    match op {
+        MulOp::Shift { shift } => {
+            debug_assert!(shift <= FLAT_SHIFT_MASK as u32);
+            shift as u8
+        }
+        MulOp::AddShift { shift, sign } => {
+            debug_assert!(shift <= FLAT_SHIFT_MASK as u32);
+            FLAT_ADD | if sign < 0 { FLAT_NEG } else { 0 } | shift as u8
+        }
+    }
+}
+
+/// Decode a flat op byte back into a [`MulOp`] (inspection/testing; the
+/// execution path never decodes).
+#[inline]
+pub fn decode_op(b: u8) -> MulOp {
+    let shift = (b & FLAT_SHIFT_MASK) as u32;
+    if b & FLAT_ADD != 0 {
+        MulOp::AddShift { shift, sign: if b & FLAT_NEG != 0 { -1 } else { 1 } }
+    } else {
+        MulOp::Shift { shift }
+    }
+}
+
+/// Encode a whole plan into flat bytes (appended to `buf`).
+pub fn encode_plan(plan: &MulPlan, buf: &mut Vec<u8>) {
+    buf.extend(plan.ops.iter().map(|&op| encode_op(op)));
+}
+
+/// One plan's header into the arena's shared micro-op buffer. A zero
+/// weight compiles to `cycles == 0` — the engine's zero-skip test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlatPlan {
+    /// Byte offset of the plan's first micro-op in [`PlanArena::ops`].
+    pub offset: u32,
+    /// Stage-1 cycle count == micro-op count (one op per cycle). Also
+    /// the slice length: ops are `ops[offset .. offset + cycles]`.
+    pub cycles: u16,
+    /// Add/sub cycles among them (CSD nonzero digits) — kept in the
+    /// header so billing cross-checks never re-scan the op bytes.
+    pub adds: u16,
+}
+
+impl FlatPlan {
+    /// Is this the empty plan of a zero weight?
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.cycles == 0
+    }
+}
+
+/// A whole model's multiply plans flattened into one contiguous SoA
+/// buffer: `ops` holds every layer's micro-ops back to back; `headers`
+/// holds one [`FlatPlan`] per weight, laid out n-major per layer so the
+/// `k` plans feeding an output column are adjacent.
+#[derive(Debug)]
+pub struct PlanArena {
+    ops: Vec<u8>,
+    headers: Vec<FlatPlan>,
+    /// First header of each layer: `headers[layer_base[li] + n*k + k_i]`.
+    layer_base: Vec<usize>,
+    /// Input width `k` of each layer (the column stride).
+    layer_k: Vec<usize>,
+}
+
+impl PlanArena {
+    /// Flatten `plans[layer][k][n]` (the [`CompiledModel`] layout) into
+    /// one arena. Op bytes are emitted in the same n-major header order
+    /// so a layer's execution streams the buffer strictly forward.
+    ///
+    /// [`CompiledModel`]: crate::coordinator::model::CompiledModel
+    pub fn build(plans: &[Vec<Vec<MulPlan>>]) -> PlanArena {
+        let mut arena = PlanArena {
+            ops: Vec::new(),
+            headers: Vec::new(),
+            layer_base: Vec::with_capacity(plans.len()),
+            layer_k: Vec::with_capacity(plans.len()),
+        };
+        for layer_plans in plans {
+            let k = layer_plans.len();
+            let n = if k > 0 { layer_plans[0].len() } else { 0 };
+            arena.layer_base.push(arena.headers.len());
+            arena.layer_k.push(k);
+            for ni in 0..n {
+                for row in layer_plans.iter() {
+                    let plan = &row[ni];
+                    let offset = arena.ops.len() as u32;
+                    encode_plan(plan, &mut arena.ops);
+                    arena.headers.push(FlatPlan {
+                        offset,
+                        cycles: plan.cycles() as u16,
+                        adds: plan.adds() as u16,
+                    });
+                }
+            }
+        }
+        arena.ops.shrink_to_fit();
+        arena.headers.shrink_to_fit();
+        arena
+    }
+
+    /// Header of layer `li`'s plan for weight `(k, n)`.
+    #[inline]
+    pub fn header(&self, li: usize, k: usize, n: usize) -> FlatPlan {
+        self.headers[self.layer_base[li] + n * self.layer_k[li] + k]
+    }
+
+    /// The `k` adjacent headers feeding output column `n` of layer `li`
+    /// — index `i` of the slice is input index `k = i`.
+    #[inline]
+    pub fn column(&self, li: usize, n: usize) -> &[FlatPlan] {
+        let k = self.layer_k[li];
+        let base = self.layer_base[li] + n * k;
+        &self.headers[base..base + k]
+    }
+
+    /// The micro-op bytes of one plan.
+    #[inline]
+    pub fn ops(&self, h: FlatPlan) -> &[u8] {
+        &self.ops[h.offset as usize..h.offset as usize + h.cycles as usize]
+    }
+
+    /// Total micro-op bytes in the arena (diagnostics).
+    pub fn total_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Total plan headers in the arena (diagnostics).
+    pub fn total_plans(&self) -> usize {
+        self.headers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csd::schedule::schedule;
+
+    #[test]
+    fn op_encoding_round_trips() {
+        for shift in 0..=3u32 {
+            for op in [
+                MulOp::Shift { shift: shift.max(1) },
+                MulOp::AddShift { shift, sign: 1 },
+                MulOp::AddShift { shift, sign: -1 },
+            ] {
+                assert_eq!(decode_op(encode_op(op)), op, "{op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_eight_bit_plan_round_trips_through_the_arena() {
+        let plans: Vec<Vec<MulPlan>> =
+            vec![(-128i64..128).map(|m| schedule(m, 8)).collect()];
+        // One "layer" with k=1, n=256.
+        let arena = PlanArena::build(&[plans.clone()]);
+        assert_eq!(arena.total_plans(), 256);
+        for (ni, plan) in plans[0].iter().enumerate() {
+            let h = arena.header(0, 0, ni);
+            assert_eq!(h.cycles as usize, plan.cycles(), "m={}", ni as i64 - 128);
+            assert_eq!(h.adds as usize, plan.adds());
+            let decoded: Vec<MulOp> =
+                arena.ops(h).iter().map(|&b| decode_op(b)).collect();
+            assert_eq!(decoded, plan.ops);
+            assert_eq!(h.is_zero(), plan.ops.is_empty());
+        }
+    }
+
+    #[test]
+    fn column_slices_are_k_adjacent_plans() {
+        // 3×2 layer: column n holds plans for weights (0,n), (1,n), (2,n).
+        let w = [[10i64, -20], [0, 115], [64, -1]];
+        let plans: Vec<Vec<MulPlan>> = w
+            .iter()
+            .map(|row| row.iter().map(|&m| schedule(m, 8)).collect())
+            .collect();
+        let arena = PlanArena::build(&[plans]);
+        for n in 0..2 {
+            let col = arena.column(0, n);
+            assert_eq!(col.len(), 3);
+            for (k, h) in col.iter().enumerate() {
+                assert_eq!(*h, arena.header(0, k, n));
+                assert_eq!(h.cycles as usize, schedule(w[k][n], 8).cycles());
+            }
+        }
+        // The zero weight is a zero-cycle header.
+        assert!(arena.header(0, 1, 0).is_zero());
+    }
+
+    #[test]
+    fn multi_layer_arena_indexes_independently() {
+        let l0: Vec<Vec<MulPlan>> = (0..4)
+            .map(|i| (0..3).map(|j| schedule(i * 7 + j - 5, 8)).collect())
+            .collect();
+        let l1: Vec<Vec<MulPlan>> =
+            (0..3).map(|i| (0..2).map(|j| schedule(i * j, 8)).collect()).collect();
+        let arena = PlanArena::build(&[l0.clone(), l1.clone()]);
+        assert_eq!(arena.total_plans(), 12 + 6);
+        for (k, row) in l0.iter().enumerate() {
+            for (n, plan) in row.iter().enumerate() {
+                assert_eq!(arena.header(0, k, n).cycles as usize, plan.cycles());
+            }
+        }
+        for (k, row) in l1.iter().enumerate() {
+            for (n, plan) in row.iter().enumerate() {
+                let h = arena.header(1, k, n);
+                assert_eq!(h.cycles as usize, plan.cycles());
+                let decoded: Vec<MulOp> =
+                    arena.ops(h).iter().map(|&b| decode_op(b)).collect();
+                assert_eq!(decoded, plan.ops);
+            }
+        }
+    }
+}

@@ -2,9 +2,11 @@
 //! (Section II-B, III-B).
 
 pub mod encode;
+pub mod flat;
 pub mod schedule;
 pub mod stats;
 
 pub use encode::{csd_decode, csd_encode, Digit};
+pub use flat::{FlatPlan, PlanArena};
 pub use schedule::{schedule, MulOp, MulPlan};
 pub use stats::{density, DensityStats};

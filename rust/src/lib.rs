@@ -35,4 +35,5 @@ pub mod pipeline;
 pub mod quant;
 pub mod rtl;
 pub mod runtime;
+pub mod testutil;
 pub mod workload;

@@ -8,5 +8,5 @@ pub mod trace;
 
 pub use self::core::{PipelineSim, RunResult};
 pub use stage1::{mul_packed, mul_scalar, Stage1};
-pub use stage2::{conversion_chain, repack_stream, repack_word, Stage2};
+pub use stage2::{conversion_chain, repack_hop_into, repack_stream, repack_word, Stage2};
 pub use trace::{CycleEvent, Trace};

@@ -81,6 +81,57 @@ impl Stage1 {
         self.load_x(x);
         self.run_plan(plan)
     }
+
+    /// Execute a flattened micro-op slice ([`crate::csd::flat`]) on a
+    /// freshly loaded multiplicand word — the allocation-free serving
+    /// inner loop. Bit-exact against [`Stage1::run_plan`] on the encoded
+    /// form of the same plan (property-tested); no `MulPlan`, no enum
+    /// dispatch, no pointer chase: one byte per cycle, branch-lean.
+    #[inline]
+    pub fn run_flat(&mut self, x: u64, ops: &[u8]) -> u64 {
+        use crate::csd::flat::{FLAT_ADD, FLAT_NEG, FLAT_SHIFT_MASK};
+        self.x = x;
+        self.acc = 0;
+        for &op in ops {
+            let k = (op & FLAT_SHIFT_MASK) as u32;
+            self.acc = if op & FLAT_ADD != 0 {
+                self.add_cycles += 1;
+                if op & FLAT_NEG == 0 {
+                    swar_add_sar(self.acc, self.x, k, self.fmt)
+                } else {
+                    swar_sub_sar(self.acc, self.x, k, self.fmt)
+                }
+            } else {
+                swar_sar(self.acc, k, self.fmt)
+            };
+            self.cycles += 1;
+        }
+        self.acc
+    }
+
+    /// Read and reset the cycle counters.
+    ///
+    /// The counters deliberately *accumulate* across `run_plan`/`run_flat`
+    /// calls (a multi-word multiply is many calls); the billing layer
+    /// drains them here after each plan × word-stream unit, making the
+    /// datapath's own cycle count the single source of truth for
+    /// `EngineStats` — the engine never re-bills via `plan.cycles()`,
+    /// and the counters can no longer grow unbounded over a worker's
+    /// lifetime. Returns `(cycles, add_cycles)`.
+    #[inline]
+    pub fn take_counters(&mut self) -> (u64, u64) {
+        let out = (self.cycles, self.add_cycles);
+        self.cycles = 0;
+        self.add_cycles = 0;
+        out
+    }
+
+    /// Reset the cycle counters without reading them.
+    #[inline]
+    pub fn reset_counters(&mut self) {
+        self.cycles = 0;
+        self.add_cycles = 0;
+    }
 }
 
 /// Multiply every sub-word of `x_packed` (format `fmt`, `Q1.(b-1)`) by
@@ -234,6 +285,41 @@ mod tests {
         s1.run_plan(&plan);
         assert_eq!(s1.cycles as usize, plan.cycles());
         assert_eq!(s1.add_cycles as usize, plan.adds());
+    }
+
+    #[test]
+    fn run_flat_matches_run_plan_and_counters_drain() {
+        // The flat byte-encoded execution path must agree with the
+        // MulPlan path on every word, and take_counters must hand the
+        // billing layer exactly plan.cycles()/plan.adds() per word —
+        // the one-source-of-truth contract (DESIGN.md §11).
+        let mut rng = XorShift(0xF1A7);
+        for fmt in SimdFormat::all() {
+            for ybits in [4u32, 8, fmt.bits] {
+                for _ in 0..50 {
+                    let m = rng.lane(ybits);
+                    let plan = schedule_with(m, ybits, 3);
+                    let mut flat = Vec::new();
+                    crate::csd::flat::encode_plan(&plan, &mut flat);
+                    let mut a = Stage1::new(fmt);
+                    let mut b = Stage1::new(fmt);
+                    let words = 1 + (rng.next() % 4);
+                    for _ in 0..words {
+                        let x = rng.next() & crate::bits::format::WORD_MASK;
+                        assert_eq!(
+                            b.run_flat(x, &flat),
+                            a.run_plan_on(x, &plan),
+                            "fmt {fmt} m {m}"
+                        );
+                    }
+                    let (cycles, adds) = b.take_counters();
+                    assert_eq!(cycles, plan.cycles() as u64 * words);
+                    assert_eq!(adds, plan.adds() as u64 * words);
+                    // Drained: a second take reads zero.
+                    assert_eq!(b.take_counters(), (0, 0));
+                }
+            }
+        }
     }
 
     #[test]

@@ -132,6 +132,48 @@ pub fn repack_word(word: u64, from: SimdFormat, to: SimdFormat) -> Vec<u64> {
     repack_stream(&[word], from, to, from.lanes() as usize)
 }
 
+/// One *direct* crossbar hop over a whole packed stream, written into a
+/// caller-owned buffer: for each output word, the `S2` source sub-words
+/// are gathered straight out of the input words by bit arithmetic — no
+/// per-value `Vec` round trip, and with a warmed `dst` no allocation at
+/// all. This is the serving engine's batched boundary repack
+/// (DESIGN.md §11); it is bit-identical to the canonical
+/// [`repack_stream`] for a direct hop (tested below). Chains are run
+/// hop-by-hop by the caller (the chain is precompiled in the model).
+///
+/// `count` is the number of valid sub-words; sub-words past `count` in
+/// the final output word pack as zero, matching [`repack_stream`].
+pub fn repack_hop_into(
+    src: &[u64],
+    from: SimdFormat,
+    to: SimdFormat,
+    count: usize,
+    dst: &mut Vec<u64>,
+) {
+    debug_assert!(is_direct(from, to), "{from}->{to} is not a direct crossbar hop");
+    debug_assert!(src.len() * from.lanes() as usize >= count, "source stream too short");
+    dst.clear();
+    let out_lanes = to.lanes() as usize;
+    let in_lanes = from.lanes() as usize;
+    let in_mask = (1u64 << from.bits) - 1;
+    let out_words = count.div_ceil(out_lanes);
+    for ow in 0..out_words {
+        let mut w = 0u64;
+        for lane in 0..out_lanes {
+            let idx = ow * out_lanes + lane;
+            if idx >= count {
+                break;
+            }
+            let s = sign_extend(
+                (src[idx / in_lanes] >> ((idx % in_lanes) as u32 * from.bits)) & in_mask,
+                from.bits,
+            );
+            w |= truncate(convert_subword(s, from, to), to.bits) << (lane as u32 * to.bits);
+        }
+        dst.push(w);
+    }
+}
+
 /// Fast path for the doubling widen `b → 2b` (the multiply→accumulate
 /// conversion on the NN hot path): one input word expands into exactly
 /// two output words, each sub-word value-aligned (`<< b`) in its slot.
@@ -335,6 +377,41 @@ mod tests {
                 let (lo, hi) = widen_double(w, fa);
                 let want = repack_word(w, fa, fb);
                 assert_eq!(vec![lo, hi], want, "{fa}->{fb} w={w:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn repack_hop_into_matches_canonical_stream_on_every_direct_pair() {
+        // The word-level gather must agree with the canonical per-value
+        // repack for every direct hop, at full, partial, and multi-word
+        // stream lengths.
+        let mut state = 0xD00D_F00D_1234u64;
+        let mut dst = Vec::new();
+        for a in SimdFormat::all() {
+            for b in SimdFormat::all() {
+                if a == b || !is_direct(a, b) {
+                    continue;
+                }
+                for n_words in [1usize, 2, 5] {
+                    let words: Vec<u64> = (0..n_words)
+                        .map(|_| {
+                            state ^= state << 13;
+                            state ^= state >> 7;
+                            state ^= state << 17;
+                            state & crate::bits::format::WORD_MASK
+                        })
+                        .collect();
+                    let full = n_words * a.lanes() as usize;
+                    for count in [full, full - 1, full / 2 + 1] {
+                        repack_hop_into(&words, a, b, count, &mut dst);
+                        assert_eq!(
+                            dst,
+                            repack_stream(&words, a, b, count),
+                            "{a}->{b} count {count}"
+                        );
+                    }
+                }
             }
         }
     }

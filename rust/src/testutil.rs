@@ -1,0 +1,71 @@
+//! Shared test/bench instrumentation.
+//!
+//! [`CountingAlloc`] is a counting wrapper around the system allocator
+//! used by both the zero-allocation integration test
+//! (`tests/alloc_free.rs`) and the engine benchmark
+//! (`benches/engine.rs`) — one implementation, so the proof and the
+//! reported `allocs_per_batch` always measure the same thing. The
+//! consuming binary installs it process-wide:
+//!
+//! ```ignore
+//! use softsimd::testutil::CountingAlloc;
+//! #[global_allocator]
+//! static GLOBAL: CountingAlloc = CountingAlloc;
+//! ```
+//!
+//! Allocations, zeroed allocations and reallocs are counted;
+//! deallocations are free — releasing warmed capacity is never the bug
+//! the counter hunts (DESIGN.md §11).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Process-wide allocation counter backing [`CountingAlloc`].
+pub static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// When false, the allocator skips the counter RMW entirely (one
+/// relaxed bool load per allocation remains). Benchmarks disable
+/// counting around *timed* sections so an allocation-heavy baseline is
+/// not taxed with an atomic RMW per allocation, which would inflate
+/// measured speedups; the zero-allocation proof keeps it enabled.
+pub static COUNT_ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Counting `#[global_allocator]` shim over [`System`].
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    /// Current allocation count (monotonic while counting is enabled).
+    pub fn count() -> u64 {
+        ALLOCS.load(Ordering::SeqCst)
+    }
+
+    /// Enable/disable counting (see [`COUNT_ENABLED`]).
+    pub fn set_counting(on: bool) {
+        COUNT_ENABLED.store(on, Ordering::SeqCst);
+    }
+}
+
+#[inline]
+fn note() {
+    if COUNT_ENABLED.load(Ordering::Relaxed) {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        note();
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        note();
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        note();
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}

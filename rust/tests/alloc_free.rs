@@ -1,0 +1,127 @@
+//! Proof that the serving hot path is allocation-free in steady state
+//! (DESIGN.md §11): after the first batch has warmed an
+//! [`EngineScratch`], every subsequent `forward_batch_into` call on the
+//! same shapes performs **zero** heap allocations.
+//!
+//! This lives in its own integration-test binary because the counting
+//! `#[global_allocator]` is process-wide: a single `#[test]` runs every
+//! scenario sequentially so no concurrent test can perturb the counter.
+//!
+//! [`EngineScratch`]: softsimd::coordinator::engine::EngineScratch
+
+use softsimd::coordinator::engine::{EngineScratch, PackedMlpEngine};
+use softsimd::coordinator::model::CompiledModel;
+use softsimd::nn::weights::{LayerPrecision, QuantLayer};
+use softsimd::testutil::CountingAlloc;
+use softsimd::workload::synth::XorShift64;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn random_layers(rng: &mut XorShift64, dims: &[usize]) -> Vec<QuantLayer> {
+    dims.windows(2)
+        .map(|w| {
+            QuantLayer::new(
+                (0..w[0])
+                    .map(|_| (0..w[1]).map(|_| rng.q_raw(8)).collect())
+                    .collect(),
+                8,
+            )
+        })
+        .collect()
+}
+
+/// Warm the scratch with one batch, then assert that `steady` further
+/// batches of the same shape allocate nothing at all.
+fn assert_steady_state_alloc_free(
+    name: &str,
+    layers: Vec<QuantLayer>,
+    sched: Vec<LayerPrecision>,
+    batch_rows: usize,
+    rng: &mut XorShift64,
+) {
+    let model = CompiledModel::compile_scheduled(layers, sched.clone()).unwrap();
+    let engine = PackedMlpEngine::new(model);
+    let k0 = engine.model().input_width();
+    let batch: Vec<Vec<i64>> = (0..batch_rows)
+        .map(|_| (0..k0).map(|_| rng.q_raw(sched[0].in_bits)).collect())
+        .collect();
+    let mut scratch = EngineScratch::new();
+    let mut out = Vec::new();
+    // First batch: allowed (and expected) to allocate — it warms every
+    // scratch buffer and the output rows.
+    let warm_stats = engine.forward_batch_into(&batch, &mut scratch, &mut out);
+    let warm_out = out.clone();
+    // Second and subsequent batches: zero allocations, bit-identical
+    // results, identical billing.
+    for i in 2..=6 {
+        let before = CountingAlloc::count();
+        let stats = engine.forward_batch_into(&batch, &mut scratch, &mut out);
+        let after = CountingAlloc::count();
+        assert_eq!(
+            after - before,
+            0,
+            "{name}: batch {i} performed {} heap allocation(s)",
+            after - before
+        );
+        assert_eq!(out, warm_out, "{name}: batch {i} diverged");
+        assert_eq!(stats.s1_cycles, warm_stats.s1_cycles, "{name}: billing drifted");
+        assert_eq!(stats.subword_mults, warm_stats.subword_mults);
+    }
+}
+
+#[test]
+fn forward_batch_is_allocation_free_after_warmup() {
+    let mut rng = XorShift64::new(0xA110C);
+
+    // Uniform 8-8: every layer consumes and produces 8-bit sub-words
+    // (the equal-width accumulate path, historically the worst
+    // offender: one product Vec per weight-column pair).
+    assert_steady_state_alloc_free(
+        "uniform-8-8",
+        random_layers(&mut rng, &[16, 12, 8]),
+        vec![LayerPrecision::new(8, 8), LayerPrecision::new(8, 8)],
+        24,
+        &mut rng,
+    );
+
+    // Mixed 4-6-8: a 4-bit generic-widening layer (4→12), a 6-bit
+    // doubling layer (6→12) and an 8-bit doubling layer (8→16), with
+    // narrowing boundary hops 12→6 and 12→8 — every engine path plus
+    // the batched word-level boundary repack.
+    let mut rng2 = XorShift64::new(0xA110D);
+    assert_steady_state_alloc_free(
+        "mixed-4-6-8",
+        random_layers(&mut rng2, &[16, 12, 8, 4]),
+        vec![
+            LayerPrecision::new(4, 12),
+            LayerPrecision::new(6, 12),
+            LayerPrecision::new(8, 16),
+        ],
+        24,
+        &mut rng2,
+    );
+
+    // Varying batch sizes after warmup must also be allocation-free —
+    // including shrink-then-grow, the normal load-dependent serving
+    // pattern: a smaller batch parks its surplus warmed output rows in
+    // the scratch and a later larger batch re-adopts them.
+    let mut rng3 = XorShift64::new(0xA110E);
+    let layers = random_layers(&mut rng3, &[10, 6, 4]);
+    let sched = vec![LayerPrecision::new(8, 16), LayerPrecision::new(8, 16)];
+    let model = CompiledModel::compile_scheduled(layers, sched).unwrap();
+    let engine = PackedMlpEngine::new(model);
+    let big: Vec<Vec<i64>> = (0..24)
+        .map(|_| (0..10).map(|_| rng3.q_raw(8)).collect())
+        .collect();
+    let mut scratch = EngineScratch::new();
+    let mut out = Vec::new();
+    engine.forward_batch_into(&big, &mut scratch, &mut out);
+    for &rows in &[6usize, 24, 1, 17, 24] {
+        let before = CountingAlloc::count();
+        engine.forward_batch_into(&big[..rows], &mut scratch, &mut out);
+        let after = CountingAlloc::count();
+        assert_eq!(after - before, 0, "batch of {rows} rows allocated after warmup");
+        assert_eq!(out.len(), rows);
+    }
+}

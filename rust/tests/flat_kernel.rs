@@ -1,0 +1,255 @@
+//! Property tests for the flattened execution core (DESIGN.md §11),
+//! hand-rolled generators (proptest is unavailable offline).
+//!
+//! Two invariants are pinned here:
+//!
+//! 1. **Bit-exactness.** The flat micro-op kernel (`Stage1::run_flat`
+//!    over the model's `PlanArena`) agrees lane-by-lane with the scalar
+//!    oracles — `mul_scalar_plan` for single multiplies (including the
+//!    zero-weight skip and the `−1 × −1` wrap corner) and
+//!    `nn::exec::mlp_forward_row_mixed` for whole forward passes over
+//!    random precision schedules.
+//!
+//! 2. **Billing independence.** `EngineStats` must equal the
+//!    pre-refactor billing formulas computed from the `MulPlan` tables —
+//!    the execution strategy (flat ops, scratch reuse, word-level
+//!    boundaries) must be invisible to the counters, down to the
+//!    per-format buckets.
+
+use softsimd::bits::format::{format_index, SimdFormat, FORMATS};
+use softsimd::bits::pack::{pack, unpack};
+use softsimd::coordinator::engine::{EngineScratch, EngineStats, PackedMlpEngine};
+use softsimd::coordinator::model::CompiledModel;
+use softsimd::csd::flat::encode_plan;
+use softsimd::csd::schedule::schedule;
+use softsimd::nn::exec::mlp_forward_row_mixed;
+use softsimd::nn::weights::{LayerPrecision, QuantLayer};
+use softsimd::pipeline::stage1::{mul_scalar_plan, Stage1};
+use softsimd::workload::synth::XorShift64;
+
+fn random_layers(rng: &mut XorShift64, dims: &[usize], w_bits: &[u32]) -> Vec<QuantLayer> {
+    dims.windows(2)
+        .zip(w_bits)
+        .map(|(w, &b)| {
+            QuantLayer::new(
+                (0..w[0])
+                    .map(|_| (0..w[1]).map(|_| rng.q_raw(b)).collect())
+                    .collect(),
+                b,
+            )
+        })
+        .collect()
+}
+
+fn random_schedule(rng: &mut XorShift64, n_layers: usize) -> Vec<LayerPrecision> {
+    (0..n_layers)
+        .map(|_| {
+            let in_bits = FORMATS[(rng.next_u64() % FORMATS.len() as u64) as usize];
+            let wider: Vec<u32> = FORMATS.iter().copied().filter(|&b| b >= in_bits).collect();
+            let acc_bits = wider[(rng.next_u64() % wider.len() as u64) as usize];
+            LayerPrecision::new(in_bits, acc_bits)
+        })
+        .collect()
+}
+
+#[test]
+fn flat_kernel_matches_scalar_plan_oracle_across_formats() {
+    // Random plans × all formats × random packed words, plus the two
+    // documented corners: the zero multiplier (empty plan → product 0,
+    // zero cycles) and −1 × −1 (the two's-complement wrap).
+    let mut rng = XorShift64::new(0xF1A7_0001);
+    let mut flat = Vec::new();
+    for fmt in SimdFormat::all() {
+        let mut s1 = Stage1::new(fmt);
+        for y_bits in [4u32, 6, 8, fmt.bits] {
+            let half = 1i64 << (y_bits - 1);
+            for trial in 0..80 {
+                // Sweep the corners deterministically, then random.
+                let m_raw = match trial {
+                    0 => 0,
+                    1 => -half, // −1.0: the −1 × −1 wrap partner
+                    2 => half - 1,
+                    _ => (rng.next_u64() % (2 * half as u64)) as i64 - half,
+                };
+                let plan = schedule(m_raw, y_bits);
+                flat.clear();
+                encode_plan(&plan, &mut flat);
+                // Include the −1 multiplicand lane explicitly.
+                let lanes: Vec<i64> = (0..fmt.lanes())
+                    .map(|i| {
+                        if i == 0 {
+                            -(1i64 << (fmt.bits - 1)) // −1.0 in Q1.(b−1)
+                        } else {
+                            rng.q_raw(fmt.bits)
+                        }
+                    })
+                    .collect();
+                let x = pack(&lanes, fmt);
+                let got = unpack(s1.run_flat(x, &flat), fmt);
+                let want: Vec<i64> = lanes
+                    .iter()
+                    .map(|&l| mul_scalar_plan(l, &plan, fmt.bits))
+                    .collect();
+                assert_eq!(got, want, "fmt {fmt} y {y_bits} m {m_raw}");
+                let (cycles, adds) = s1.take_counters();
+                assert_eq!(cycles, plan.cycles() as u64, "fmt {fmt} m {m_raw}");
+                assert_eq!(adds, plan.adds() as u64, "fmt {fmt} m {m_raw}");
+                if m_raw == 0 {
+                    assert_eq!((cycles, adds), (0, 0), "zero weight costs nothing");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn stage1_counters_never_diverge_from_plan_billing() {
+    // Regression for the unbounded-counter bug: the engine bills
+    // Stage-1 cycles by draining the datapath's counters; those drains
+    // must equal the plan-formula billing (`plan.cycles() × words`)
+    // for every plan, format and stream length — the two sources can
+    // never diverge, because only one exists.
+    let mut rng = XorShift64::new(0xF1A7_0002);
+    let mut flat = Vec::new();
+    for fmt in SimdFormat::all() {
+        let mut s1 = Stage1::new(fmt);
+        for _ in 0..60 {
+            let m_raw = rng.q_raw(8);
+            let plan = schedule(m_raw, 8);
+            flat.clear();
+            encode_plan(&plan, &mut flat);
+            let words = 1 + rng.next_u64() % 7;
+            for _ in 0..words {
+                s1.run_flat(rng.next_u64() & softsimd::bits::format::WORD_MASK, &flat);
+            }
+            let (cycles, adds) = s1.take_counters();
+            assert_eq!(cycles, plan.cycles() as u64 * words, "m={m_raw} fmt {fmt}");
+            assert_eq!(adds, plan.adds() as u64 * words, "m={m_raw} fmt {fmt}");
+        }
+    }
+}
+
+/// The pre-refactor billing formulas, computed from the `MulPlan`
+/// tables and the model's schedule — what the per-op engine counted.
+fn expected_stats(model: &CompiledModel, m: usize) -> EngineStats {
+    let quantum = model.batch_quantum();
+    let mp = m.div_ceil(quantum) * quantum;
+    let mut want = EngineStats {
+        pad_rows: (mp - m) as u64,
+        ..EngineStats::default()
+    };
+    for (li, layer) in model.layers().iter().enumerate() {
+        let p = model.precision(li);
+        let words = (mp / p.in_fmt().lanes() as usize) as u64;
+        let acc_words = (mp * p.acc_bits as usize / 48) as u64;
+        for k in 0..layer.k {
+            for n in 0..layer.n {
+                let plan = model.plan(li, k, n);
+                if plan.ops.is_empty() {
+                    continue;
+                }
+                let cycles = plan.cycles() as u64 * words;
+                want.s1_cycles += cycles;
+                want.s1_cycles_by_fmt[format_index(p.in_bits)] += cycles;
+                want.subword_mults += m as u64;
+                want.acc_adds += acc_words;
+                if p.in_bits != p.acc_bits {
+                    want.s2_passes += acc_words;
+                    want.s2_passes_by_fmt[format_index(p.acc_bits)] += acc_words;
+                }
+            }
+        }
+        if li + 1 < model.layers().len() {
+            for &(_, t) in model.boundary_chain(li) {
+                let passes = (mp * t.bits as usize).div_ceil(48) as u64 * layer.n as u64;
+                want.s2_passes += passes;
+                want.s2_passes_by_fmt[format_index(t.bits)] += passes;
+            }
+        }
+    }
+    want
+}
+
+fn assert_stats_eq(got: &EngineStats, want: &EngineStats, ctx: &str) {
+    assert_eq!(got.s1_cycles, want.s1_cycles, "{ctx}: s1_cycles");
+    assert_eq!(got.s2_passes, want.s2_passes, "{ctx}: s2_passes");
+    assert_eq!(got.acc_adds, want.acc_adds, "{ctx}: acc_adds");
+    assert_eq!(got.subword_mults, want.subword_mults, "{ctx}: subword_mults");
+    assert_eq!(got.pad_rows, want.pad_rows, "{ctx}: pad_rows");
+    assert_eq!(got.s1_cycles_by_fmt, want.s1_cycles_by_fmt, "{ctx}: s1 by fmt");
+    assert_eq!(got.s2_passes_by_fmt, want.s2_passes_by_fmt, "{ctx}: s2 by fmt");
+}
+
+#[test]
+fn prop_flat_engine_is_bit_exact_and_bills_the_prerefactor_formulas() {
+    // Random models × random schedules × random batch sizes, one
+    // scratch reused across every case (the serving shape): results
+    // must match the scalar mixed-precision oracle row-by-row and the
+    // stats must equal the pre-refactor formulas field-by-field.
+    let mut rng = XorShift64::new(0xF1A7_0003);
+    let mut scratch = EngineScratch::new();
+    let mut out = Vec::new();
+    for case in 0..50 {
+        let n_layers = 1 + (rng.next_u64() % 3) as usize;
+        let dims: Vec<usize> = (0..=n_layers)
+            .map(|_| 1 + (rng.next_u64() % 6) as usize)
+            .collect();
+        let w_bits: Vec<u32> = (0..n_layers)
+            .map(|_| [4u32, 6, 8][(rng.next_u64() % 3) as usize])
+            .collect();
+        // Sprinkle exact zero weights so the zero-skip path is always
+        // exercised.
+        let mut layers = random_layers(&mut rng, &dims, &w_bits);
+        for layer in &mut layers {
+            for row in &mut layer.w_raw {
+                for w in row.iter_mut() {
+                    if rng.next_u64() % 5 == 0 {
+                        *w = 0;
+                    }
+                }
+            }
+        }
+        let sched = random_schedule(&mut rng, n_layers);
+        let model = CompiledModel::compile_scheduled(layers.clone(), sched.clone())
+            .unwrap_or_else(|e| panic!("case {case}: compile failed: {e}"));
+        let engine = PackedMlpEngine::new(model);
+        let batch_size = 1 + (rng.next_u64() % 40) as usize;
+        let batch: Vec<Vec<i64>> = (0..batch_size)
+            .map(|_| (0..dims[0]).map(|_| rng.q_raw(sched[0].in_bits)).collect())
+            .collect();
+        let stats = engine.forward_batch_into(&batch, &mut scratch, &mut out);
+        assert_eq!(out.len(), batch_size, "case {case}: pad rows must be dropped");
+        for (b, row) in batch.iter().enumerate() {
+            let want = mlp_forward_row_mixed(row, &layers, &sched);
+            assert_eq!(
+                out[b], want,
+                "case {case}: sched {sched:?} dims {dims:?} w_bits {w_bits:?} row {b}"
+            );
+        }
+        let want = expected_stats(engine.model(), batch_size);
+        assert_stats_eq(&stats, &want, &format!("case {case} (sched {sched:?})"));
+    }
+}
+
+#[test]
+fn minus_one_times_minus_one_wraps_identically_end_to_end() {
+    // The documented two's-complement corner: a −1.0 weight times a
+    // −1.0 activation wraps to −1.0 (Q1.(b−1) cannot represent +1.0).
+    // The packed engine must reproduce the oracle's wrap bit-exactly at
+    // an equal-width accumulate, where nothing re-widens the product.
+    for bits in [4u32, 8] {
+        let half = 1i64 << (bits - 1);
+        let layers = vec![QuantLayer::new(vec![vec![-half]], bits)];
+        let sched = vec![LayerPrecision::new(bits, bits)];
+        let model = CompiledModel::compile_scheduled(layers.clone(), sched.clone()).unwrap();
+        let engine = PackedMlpEngine::new(model);
+        let lanes = (48 / bits) as usize;
+        let batch: Vec<Vec<i64>> = (0..lanes).map(|_| vec![-half]).collect();
+        let (got, _) = engine.forward_batch(&batch);
+        for (b, row) in batch.iter().enumerate() {
+            let want = mlp_forward_row_mixed(row, &layers, &sched);
+            assert_eq!(got[b], want, "bits {bits} row {b}");
+            assert_eq!(got[b], vec![-half], "−1 × −1 must wrap to −1 at {bits}b");
+        }
+    }
+}
