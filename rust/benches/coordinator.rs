@@ -20,7 +20,7 @@ use benchkit::{bench, throughput, write_cells};
 use std::sync::Arc;
 
 use softsimd::coordinator::cost::CostTable;
-use softsimd::coordinator::engine::PackedMlpEngine;
+use softsimd::coordinator::engine::PackedEngine;
 use softsimd::coordinator::model::CompiledModel;
 use softsimd::coordinator::server::{
     Coordinator, DispatchPolicy, Request, ServeConfig,
@@ -122,11 +122,11 @@ fn main() {
     let mut cells: Vec<Cell> = vec![];
 
     // Engine-only: packed forward of a 12-row batch on the shared model.
-    let engine = PackedMlpEngine::new(Arc::clone(&model));
+    let engine = PackedEngine::new(Arc::clone(&model));
     let batch: Vec<Vec<i64>> = (0..12)
         .map(|_| (0..64).map(|_| rng.q_raw(8)).collect())
         .collect();
-    let r = bench("PackedMlpEngine forward (12-row batch)", 60, || {
+    let r = bench("PackedEngine forward (12-row batch)", 60, || {
         std::hint::black_box(engine.forward_batch(&batch));
     });
     throughput(&r, (12 * mults_per_row) as f64, "subword-mults");

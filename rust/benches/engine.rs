@@ -19,7 +19,7 @@ use benchkit::{bench, write_cells};
 
 use std::sync::Arc;
 
-use softsimd::coordinator::engine::{EngineScratch, PackedMlpEngine};
+use softsimd::coordinator::engine::{EngineScratch, PackedEngine};
 use softsimd::coordinator::model::CompiledModel;
 use softsimd::nn::weights::{LayerPrecision, QuantLayer};
 use softsimd::testutil::CountingAlloc;
@@ -64,6 +64,7 @@ mod baseline {
             .collect();
         let mut s1 = Stage1::new(model.precision(0).in_fmt());
         for (li, layer) in layers.iter().enumerate() {
+            let layer = layer.weights();
             let prec = model.precision(li);
             let (in_fmt, acc_fmt) = (prec.in_fmt(), prec.acc_fmt());
             let (in_bits, acc_bits) = (prec.in_bits, prec.acc_bits);
@@ -223,7 +224,7 @@ fn main() {
     for (name, sched) in &schedules {
         let model =
             CompiledModel::compile_scheduled(layers.clone(), sched.clone()).expect("valid");
-        let engine = PackedMlpEngine::new(Arc::clone(&model));
+        let engine = PackedEngine::new(Arc::clone(&model));
         for &batch_rows in &[6usize, 48, 192] {
             let batch: Vec<Vec<i64>> = (0..batch_rows)
                 .map(|_| (0..64).map(|_| rng.q_raw(sched[0].in_bits)).collect())
@@ -298,4 +299,139 @@ fn main() {
 
     let cell_json: Vec<String> = cells.iter().map(Cell::json).collect();
     write_cells("engine", "BENCH_engine.json", &cell_json);
+
+    conv_cells();
+}
+
+/// One conv serving cell, JSON-serializable (`BENCH_conv.json`):
+/// images/s through the im2col CNN, ns per useful sub-word multiply,
+/// and steady-state allocations per batch.
+struct ConvCell {
+    schedule: &'static str,
+    batch: usize,
+    patch_rows_per_img: usize,
+    /// Images per second. One image is `patch_rows_per_img` packed
+    /// rows, so the JSON also carries `rows_per_s` (= imgs_per_s ×
+    /// patch_rows_per_img) in the same packed-row unit the other bench
+    /// artifacts use — the two keys name their units to keep
+    /// cross-file comparisons honest.
+    imgs_per_s: f64,
+    ns_per_subword_mult: f64,
+    allocs_per_batch: f64,
+}
+
+impl ConvCell {
+    fn json(&self) -> String {
+        format!(
+            "{{\"schedule\":\"{}\",\"batch\":{},\"patch_rows_per_img\":{},\
+             \"imgs_per_s\":{:.1},\"rows_per_s\":{:.1},\
+             \"ns_per_subword_mult\":{:.3},\"allocs_per_batch\":{:.2}}}",
+            self.schedule,
+            self.batch,
+            self.patch_rows_per_img,
+            self.imgs_per_s,
+            self.imgs_per_s * self.patch_rows_per_img as f64,
+            self.ns_per_subword_mult,
+            self.allocs_per_batch
+        )
+    }
+}
+
+/// Conv serving cells (DESIGN.md §12): the synthetic CNN (conv 1×8×8 →
+/// 4ch 3×3 s1 p1 → conv 4ch → 4ch 3×3 s2 p1 → dense 64 → 10) through
+/// the flat engine, cross-checked bit-exact against the scalar stack
+/// oracle before timing. Emits `BENCH_conv.json`.
+fn conv_cells() {
+    use softsimd::nn::exec::stack_forward_row;
+    use softsimd::workload::synth::{synth_cnn_stack, ImageSet};
+
+    println!("\n== engine: im2col CNN serving cells ==");
+    let stack = synth_cnn_stack(0xBE9C4, 8);
+    let images = ImageSet::standard();
+    let patch_rows_per_img: usize =
+        stack.iter().map(softsimd::nn::conv::LayerOp::patch_rows).sum();
+    let schedules: [(&'static str, Vec<LayerPrecision>); 2] = [
+        (
+            "conv-8-8-8",
+            vec![
+                LayerPrecision::new(8, 16),
+                LayerPrecision::new(8, 16),
+                LayerPrecision::new(8, 16),
+            ],
+        ),
+        (
+            "conv-4-6-8",
+            vec![
+                LayerPrecision::new(4, 8),
+                LayerPrecision::new(6, 12),
+                LayerPrecision::new(8, 16),
+            ],
+        ),
+    ];
+    let mut cells: Vec<ConvCell> = vec![];
+    println!(
+        "{:<16} {:>6} {:>12} {:>10} {:>10}",
+        "schedule", "batch", "imgs/s", "ns/mult", "allocs/b"
+    );
+    for (name, sched) in &schedules {
+        let model =
+            CompiledModel::compile_stack(stack.clone(), sched.clone()).expect("valid");
+        let engine = PackedEngine::new(model);
+        for &batch_imgs in &[6usize, 24, 96] {
+            let (batch, _) =
+                images.sample(batch_imgs, 0.25, 0xBE9C5 + batch_imgs as u64, sched[0].in_bits);
+            let mut scratch = EngineScratch::new();
+            let mut out = Vec::new();
+            let stats = engine.forward_batch_into(&batch, &mut scratch, &mut out);
+            // Cross-check the head of every batch against the scalar
+            // stack oracle before timing anything.
+            for (b, row) in batch.iter().take(6).enumerate() {
+                let want = stack_forward_row(row, &stack, sched);
+                assert_eq!(out[b], want, "{name} batch {batch_imgs}: image {b} diverges");
+            }
+
+            CountingAlloc::set_counting(true);
+            let trials = 20u64;
+            let before = CountingAlloc::count();
+            for _ in 0..trials {
+                std::hint::black_box(engine.forward_batch_into(
+                    &batch,
+                    &mut scratch,
+                    &mut out,
+                ));
+            }
+            let allocs_per_batch = (CountingAlloc::count() - before) as f64 / trials as f64;
+            CountingAlloc::set_counting(false);
+
+            let label = format!("conv {name} (batch {batch_imgs})");
+            let r = bench(&label, 40, || {
+                std::hint::black_box(engine.forward_batch_into(
+                    &batch,
+                    &mut scratch,
+                    &mut out,
+                ));
+            });
+            let imgs_per_s = batch_imgs as f64 / (r.ns_per_iter * 1e-9);
+            let ns_per_mult = r.ns_per_iter / stats.subword_mults as f64;
+            let cell = ConvCell {
+                schedule: name,
+                batch: batch_imgs,
+                patch_rows_per_img,
+                imgs_per_s,
+                ns_per_subword_mult: ns_per_mult,
+                allocs_per_batch,
+            };
+            println!(
+                "{:<16} {:>6} {:>12.0} {:>10.3} {:>10.2}",
+                cell.schedule,
+                cell.batch,
+                cell.imgs_per_s,
+                cell.ns_per_subword_mult,
+                cell.allocs_per_batch
+            );
+            cells.push(cell);
+        }
+    }
+    let cell_json: Vec<String> = cells.iter().map(ConvCell::json).collect();
+    write_cells("conv", "BENCH_conv.json", &cell_json);
 }

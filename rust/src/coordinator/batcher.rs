@@ -9,6 +9,15 @@
 //! thread, which drives [`Batcher::tick`] at a fixed period so
 //! stragglers flush without an explicit `drain()` — the classic
 //! latency/throughput dial of serving systems.
+//!
+//! **Restore/retry semantics.** A batch whose dispatch failed is handed
+//! back via [`Batcher::restore`]; its rows go to the front of the queue
+//! *and the retry is armed*: the very next [`Batcher::tick`] flushes,
+//! regardless of the idle-poll deadline. Restored rows already waited
+//! out their deadline once — making them sit through a second full
+//! idle-poll cycle (the pre-fix behavior, worse when the restored rows
+//! already meet `target_rows` and no new arrival will ever trigger a
+//! push-path flush) would silently double their latency.
 
 use std::time::Instant;
 
@@ -42,6 +51,10 @@ pub struct Batcher {
     pub target_rows: usize,
     pub max_wait_polls: u32,
     idle_polls: u32,
+    /// Set by [`Batcher::restore`]: the pending rows came back from a
+    /// failed dispatch, so the next tick flushes immediately instead of
+    /// waiting out another full idle-poll deadline.
+    retry_armed: bool,
 }
 
 impl Batcher {
@@ -52,6 +65,7 @@ impl Batcher {
             target_rows: target_rows.max(1),
             max_wait_polls: max_wait_polls.max(1),
             idle_polls: 0,
+            retry_armed: false,
         }
     }
 
@@ -70,23 +84,30 @@ impl Batcher {
         None
     }
 
-    /// Put a formed batch back (dispatch failed); it will flush again on
-    /// the next tick or drain rather than being dropped.
+    /// Put a formed batch back (dispatch failed); its rows go to the
+    /// front of the queue and the retry is armed: the next [`tick`]
+    /// re-flushes immediately — restored rows never wait out a second
+    /// idle-poll deadline (and a new `push` does not disarm the retry;
+    /// arrivals must not reset a failed dispatch's clock).
+    ///
+    /// [`tick`]: Batcher::tick
     pub fn restore(&mut self, batch: Batch) {
         self.pending_rows += batch.rows;
         let mut entries = batch.entries;
         entries.append(&mut self.pending);
         self.pending = entries;
+        self.retry_armed = true;
     }
 
     /// Poll tick with no arrivals; flushes after `max_wait_polls` idle
-    /// ticks so stragglers are not starved.
+    /// ticks so stragglers are not starved — or immediately when a
+    /// restored batch armed the retry.
     pub fn tick(&mut self) -> Option<Batch> {
         if self.pending.is_empty() {
             return None;
         }
         self.idle_polls += 1;
-        if self.idle_polls >= self.max_wait_polls {
+        if self.retry_armed || self.idle_polls >= self.max_wait_polls {
             self.flush()
         } else {
             None
@@ -99,6 +120,7 @@ impl Batcher {
             return None;
         }
         self.idle_polls = 0;
+        self.retry_armed = false;
         let entries = std::mem::take(&mut self.pending);
         let rows = std::mem::take(&mut self.pending_rows);
         Some(Batch { entries, rows })
@@ -158,5 +180,137 @@ mod tests {
         let again = b.flush().expect("restored rows flush");
         assert_eq!(again.rows, 6);
         assert_eq!(again.entries[0].req.id, 1, "restored batch goes first");
+    }
+
+    #[test]
+    fn restore_arms_immediate_retry_on_next_tick() {
+        // Regression: a restored batch used to wait out a *second* full
+        // idle-poll deadline — and when its rows already met
+        // `target_rows`, no later push would ever flush it either. Now
+        // the tick after a restore flushes unconditionally.
+        let mut b = Batcher::new(4, 3);
+        let batch = b.push(req(1, 4)).expect("target reached");
+        b.restore(batch);
+        let retried = b.tick().expect("first tick after restore must flush");
+        assert_eq!(retried.rows, 4);
+        assert_eq!(retried.entries[0].req.id, 1);
+        // The retry is one-shot: normal deadline pacing resumes after.
+        assert!(b.push(req(2, 1)).is_none());
+        assert!(b.tick().is_none(), "tick 1 of 3 must wait");
+        assert!(b.tick().is_none(), "tick 2 of 3 must wait");
+        assert!(b.tick().is_some(), "deadline flush on tick 3");
+    }
+
+    #[test]
+    fn dispatch_fail_then_worker_recovery_retries_on_next_tick() {
+        // The serving sequence the fix exists for: a formed batch's
+        // dispatch fails (all workers busy/dead), the batcher takes the
+        // rows back, the worker pool recovers, and the *next* deadline
+        // tick — not a full extra deadline cycle later — re-flushes the
+        // same rows for a successful dispatch.
+        let mut b = Batcher::new(6, 4);
+        let mut worker_up = false;
+        let mut served: Vec<u64> = vec![];
+        // Requests arrive and fill the target: a batch forms.
+        assert!(b.push(req(7, 3)).is_none());
+        let batch = b.push(req(8, 3)).expect("target reached");
+        // Dispatch fails — the worker is down; the rows are restored.
+        assert!(!worker_up);
+        b.restore(batch);
+        assert_eq!(b.pending_rows(), 6, "no row may be lost on restore");
+        // The worker recovers before the next deadline tick.
+        worker_up = true;
+        // That next tick retries immediately (with the bug it returned
+        // None here, and for a target-met batch with no further
+        // arrivals the rows sat a whole extra deadline cycle).
+        let retry = b.tick().expect("immediate retry on the tick after restore");
+        assert!(worker_up, "recovered worker takes the batch");
+        served.extend(retry.entries.iter().map(|e| e.req.id));
+        assert_eq!(served, vec![7, 8], "same rows, same order, exactly once");
+        assert_eq!(b.pending_rows(), 0);
+    }
+
+    #[test]
+    fn prop_interleaved_push_tick_flush_restore_preserve_rows_and_requests() {
+        // Property: under arbitrary interleavings of push / tick /
+        // flush / restore, `pending_rows()` always equals the sum of
+        // the pending entries' row counts, and every pushed request is
+        // emitted exactly once (no loss, no duplication) once
+        // everything is drained.
+        use crate::workload::synth::XorShift64;
+        let mut rng = XorShift64::new(0xBA7C4E5);
+        for case in 0..60 {
+            let target = 1 + (rng.next_u64() % 9) as usize;
+            let max_polls = 1 + (rng.next_u64() % 4) as u32;
+            let mut b = Batcher::new(target, max_polls);
+            let mut next_id = 0u64;
+            let mut expected_pending = 0usize; // rows inside the batcher
+            let mut limbo: Vec<Batch> = vec![]; // emitted, restorable
+            let mut done: Vec<u64> = vec![]; // ids emitted for good
+            let mut pushed: Vec<u64> = vec![];
+            let mut note = |batch: Option<Batch>,
+                            expected_pending: &mut usize,
+                            limbo: &mut Vec<Batch>| {
+                if let Some(batch) = batch {
+                    assert_eq!(
+                        batch.rows,
+                        batch
+                            .entries
+                            .iter()
+                            .map(|e| e.req.rows.len())
+                            .sum::<usize>(),
+                        "case {case}: batch rows must equal its entries' rows"
+                    );
+                    *expected_pending -= batch.rows;
+                    limbo.push(batch);
+                }
+            };
+            for _ in 0..200 {
+                match rng.next_u64() % 10 {
+                    // push (weighted): 1–3 rows per request.
+                    0..=4 => {
+                        let rows = 1 + (rng.next_u64() % 3) as usize;
+                        let id = next_id;
+                        next_id += 1;
+                        pushed.push(id);
+                        expected_pending += rows;
+                        note(b.push(req(id, rows)), &mut expected_pending, &mut limbo);
+                    }
+                    5..=6 => note(b.tick(), &mut expected_pending, &mut limbo),
+                    7 => note(b.flush(), &mut expected_pending, &mut limbo),
+                    // restore a random in-limbo batch, or settle it.
+                    _ => {
+                        if !limbo.is_empty() {
+                            let i = (rng.next_u64() % limbo.len() as u64) as usize;
+                            let batch = limbo.swap_remove(i);
+                            if rng.next_u64() % 2 == 0 {
+                                expected_pending += batch.rows;
+                                b.restore(batch);
+                            } else {
+                                done.extend(batch.entries.iter().map(|e| e.req.id));
+                            }
+                        }
+                    }
+                }
+                assert_eq!(
+                    b.pending_rows(),
+                    expected_pending,
+                    "case {case}: pending_rows drifted from the entry sum"
+                );
+            }
+            // Drain: final flush plus every unsettled in-limbo batch.
+            note(b.flush(), &mut expected_pending, &mut limbo);
+            assert_eq!(b.pending_rows(), 0);
+            assert_eq!(expected_pending, 0);
+            for batch in limbo.drain(..) {
+                done.extend(batch.entries.iter().map(|e| e.req.id));
+            }
+            done.sort_unstable();
+            pushed.sort_unstable();
+            assert_eq!(
+                done, pushed,
+                "case {case}: every request exactly once — none dropped, none duplicated"
+            );
+        }
     }
 }

@@ -1,24 +1,30 @@
-//! Packed MLP execution on a simulated PE.
+//! Packed execution of interleaved conv + dense stacks on a simulated
+//! PE.
 //!
-//! Layer semantics are pinned in DESIGN.md §4/§10 and must match
-//! `nn::exec::mlp_forward_row_mixed` bit-exactly — the integration tests
+//! Layer semantics are pinned in DESIGN.md §4/§10/§12 and must match
+//! `nn::exec::stack_forward_row` bit-exactly — the integration tests
 //! enforce it. The engine packs the *batch* dimension into sub-words:
 //! every sample's activation `x[m][k]` for a fixed `k` shares the same
 //! weight multiplier `w[k][n]`, which is exactly the "one multiplier,
-//! several multiplicands" pattern of Section III-B.
+//! several multiplicands" pattern of Section III-B. A Conv2D layer
+//! folds its output pixels into that same packed dimension (im2col,
+//! DESIGN.md §12): each output pixel of each image is one patch row,
+//! so one kernel weight's CSD plan streams over `m · out_h · out_w`
+//! sub-words per word column — convolution is where the sub-word
+//! packing wins compound.
 //!
 //! The engine is **format-polymorphic**: each layer executes at its own
 //! activation/accumulator format pair from the model's precision
 //! schedule, so lane occupancy changes per layer (12 sub-words per word
 //! at 4-bit, 6 at 8-bit, 3 at 16-bit) and words-per-column, Stage-1
 //! cycle billing and Stage-2 pass billing are all per-layer. At every
-//! layer boundary the activation stream is repacked through the Stage-2
-//! crossbar chain precompiled in the model (`boundary_chain`), after the
-//! activation unit applies ReLU — this is the paper's "changing the
+//! layer boundary the activation stream is converted through the
+//! Stage-2 crossbar chain precompiled in the model (`boundary_chain`),
+//! after the activation unit applies ReLU — the paper's "changing the
 //! bitwidth of sub-words at run-time" exercised on the serving path.
 //!
-//! **Execution strategy (DESIGN.md §11).** The hot path is
-//! [`PackedMlpEngine::forward_batch_into`]: an allocation-free,
+//! **Execution strategy (DESIGN.md §11/§12).** The hot path is
+//! [`PackedEngine::forward_batch_into`]: an allocation-free,
 //! cache-friendly core that
 //! * executes the model's flattened micro-op arena
 //!   ([`crate::csd::flat::PlanArena`]) via [`Stage1::run_flat`] — one
@@ -26,14 +32,19 @@
 //!   `MulPlan`/`Arc` in the inner loop;
 //! * keeps every intermediate in a caller-owned [`EngineScratch`]
 //!   (packed activation words, the weight-stationary accumulator block,
-//!   product/boundary staging), so steady-state serving performs **zero
-//!   heap allocations** after the first batch warms the buffers — the
-//!   counting-allocator integration test enforces this;
-//! * activations stay *packed* between layers: the boundary applies
-//!   ReLU word-level ([`crate::bits::swar::swar_relu`]) over the
-//!   accumulator stream, then runs each precompiled hop over the whole
-//!   stream ([`crate::pipeline::stage2::repack_hop_into`]) — there is no
-//!   unpack → per-value-convert → repack round trip;
+//!   product/boundary staging, the scalar feature-map staging of conv
+//!   boundaries, the im2col gather column), so steady-state serving
+//!   performs **zero heap allocations** after the first batch warms the
+//!   buffers — the counting-allocator integration test enforces this
+//!   for dense and conv schedules alike;
+//! * keeps activations *packed* across dense→dense boundaries (word
+//!   level [`crate::bits::swar::swar_relu`] +
+//!   [`crate::pipeline::stage2::repack_hop_into`] whole-stream hops);
+//!   conv-adjacent boundaries additionally stage the converted stream
+//!   as scalars in [`EngineScratch::fmap`] so the next layer's im2col
+//!   (or flatten) gather can read features at arbitrary offsets —
+//!   patch columns are written straight back into the packed column
+//!   buffer, never through per-patch `Vec`s;
 //! * fuses the doubling-path widen+accumulate per product word.
 //!
 //! Billing is **independent of execution strategy**: `EngineStats` is
@@ -41,6 +52,11 @@
 //! ([`Stage1::take_counters`] — one source of truth, no re-billing via
 //! `plan.cycles()`) and counts exactly what the pre-refactor engine
 //! counted for the same work; the property tests pin the formulas.
+//! Boundary conversions are billed identically whether the stream stays
+//! packed or is staged scalar — the crossbar does the same work either
+//! way; the im2col gather/scatter itself is near-memory data staging
+//! and is billed no datapath cycles, exactly like the first layer's
+//! batch pack (DESIGN.md §12).
 //!
 //! The engine owns no weights and compiles no plans: it executes a
 //! shared immutable [`CompiledModel`] (DESIGN.md §8). Batches are padded
@@ -48,7 +64,8 @@
 //! layer's lane counts; 6 for the uniform 8→16 schedule) so every packed
 //! word runs full at every layer; pad rows are dropped before returning
 //! and tallied in [`EngineStats::pad_rows`] — and are *not* billed as
-//! useful sub-word multiplies.
+//! useful sub-word multiplies (a conv layer's useful work is the real
+//! images' patch rows, `m · out_pixels`).
 
 use std::sync::Arc;
 
@@ -56,6 +73,7 @@ use crate::bits::fixed::sign_extend;
 use crate::bits::format::{format_index, SimdFormat, FORMATS};
 use crate::bits::pack::pack_stream_append;
 use crate::bits::swar::{swar_add, swar_relu};
+use crate::nn::conv::{ConvShape, LayerOp};
 use crate::pipeline::stage1::Stage1;
 use crate::pipeline::stage2::{repack_hop_into, widen_double};
 
@@ -73,7 +91,8 @@ pub struct EngineStats {
     pub acc_adds: u64,
     /// Useful sub-word multiplies: real batch rows only — zero-pad
     /// lanes are excluded, consistent with `repack_cycles_exact`'s
-    /// padding-exempt accounting.
+    /// padding-exempt accounting. A conv layer's real rows are the real
+    /// images' im2col patch rows (`m · out_pixels`).
     pub subword_mults: u64,
     /// Zero rows appended to fill the last packed word of the batch.
     pub pad_rows: u64,
@@ -125,8 +144,14 @@ pub struct EngineScratch {
     wide: Vec<u64>,
     /// Intermediate hop staging for multi-hop boundary chains.
     stage: Vec<u64>,
-    /// Scalar staging for the first layer's column gather.
+    /// Scalar staging for column gathers: the first layer's batch
+    /// columns and every im2col patch / flatten column (DESIGN.md §12).
     col: Vec<i64>,
+    /// Scalar feature-map staging of a conv-adjacent layer boundary:
+    /// `mp` images × flattened feature length, image-major, features in
+    /// `[channel][y][x]` order — what the next layer's im2col or
+    /// flatten gather reads (DESIGN.md §12).
+    fmap: Vec<i64>,
     /// Warmed output rows parked by a smaller batch, re-adopted by a
     /// later larger one — shrink-then-grow serving stays allocation-free.
     spare_rows: Vec<Vec<i64>>,
@@ -143,6 +168,7 @@ impl EngineScratch {
             wide: Vec::new(),
             stage: Vec::new(),
             col: Vec::new(),
+            fmap: Vec::new(),
             spare_rows: Vec::new(),
         }
     }
@@ -154,16 +180,48 @@ impl Default for EngineScratch {
     }
 }
 
+/// Gather one im2col patch column (`k` = patch index, fixed) for every
+/// output pixel of every image into `col` — patch rows ordered
+/// `(image, oy, ox)` image-major. `src(b, idx)` reads flattened feature
+/// `idx` (`[ci][y][x]` order) of image `b`; padding taps read zero.
+/// Writes straight into the caller's scalar column buffer: no per-patch
+/// allocation ever happens (DESIGN.md §12).
+fn gather_conv_column<F: Fn(usize, usize) -> i64>(
+    shape: &ConvShape,
+    k: usize,
+    images: usize,
+    src: F,
+    col: &mut Vec<i64>,
+) {
+    col.clear();
+    let (oh, ow) = (shape.out_h(), shape.out_w());
+    for b in 0..images {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                // One shared encoding of the patch-index decomposition:
+                // the engine gathers through the exact `src_index` the
+                // scalar oracle reads through, so the two can never
+                // disagree on patch order or padding semantics.
+                col.push(shape.src_index(k, oy, ox).map_or(0, |i| src(b, i)));
+            }
+        }
+    }
+}
+
 /// A packed-execution engine bound to one PE, sharing one compiled model.
-pub struct PackedMlpEngine {
+pub struct PackedEngine {
     model: Arc<CompiledModel>,
 }
 
-impl PackedMlpEngine {
+/// The engine's pre-conv name, kept so existing integrations keep
+/// compiling; new code should say [`PackedEngine`].
+pub type PackedMlpEngine = PackedEngine;
+
+impl PackedEngine {
     /// Bind a PE to a shared compiled model. Cheap: no plan compilation
     /// and no weight copies happen here.
     pub fn new(model: Arc<CompiledModel>) -> Self {
-        PackedMlpEngine { model }
+        PackedEngine { model }
     }
 
     pub fn model(&self) -> &CompiledModel {
@@ -171,15 +229,17 @@ impl PackedMlpEngine {
     }
 
     /// Forward a batch (rows of `Q1.(in_bits-1)` raws at the first
-    /// layer's activation format) through all layers using packed
-    /// arithmetic; returns final accumulators (`Q1.(acc_bits-1)` at the
-    /// last layer's accumulator format) per row, plus tallies.
+    /// layer's activation format; for a conv-first model each row is
+    /// the flattened `[cin][h][w]` image) through all layers using
+    /// packed arithmetic; returns final accumulators
+    /// (`Q1.(acc_bits-1)` at the last layer's accumulator format) per
+    /// row, plus tallies.
     ///
     /// Convenience wrapper over [`forward_batch_into`] with one-shot
     /// buffers — tests, evals and examples. The serving loop threads a
     /// long-lived [`EngineScratch`] instead.
     ///
-    /// [`forward_batch_into`]: PackedMlpEngine::forward_batch_into
+    /// [`forward_batch_into`]: PackedEngine::forward_batch_into
     pub fn forward_batch(&self, batch: &[Vec<i64>]) -> (Vec<Vec<i64>>, EngineStats) {
         let mut scratch = EngineScratch::new();
         let mut out = Vec::with_capacity(batch.len());
@@ -191,9 +251,10 @@ impl PackedMlpEngine {
     /// every intermediate lives in `scratch` and the per-row logits are
     /// written into `out` (rows reused in place). After the first batch
     /// has warmed the buffers, a steady-state call performs **zero**
-    /// heap allocations (enforced by the counting-allocator test).
+    /// heap allocations (enforced by the counting-allocator test, for
+    /// conv schedules too).
     ///
-    /// [`forward_batch`]: PackedMlpEngine::forward_batch
+    /// [`forward_batch`]: PackedEngine::forward_batch
     pub fn forward_batch_into(
         &self,
         batch: &[Vec<i64>],
@@ -208,6 +269,8 @@ impl PackedMlpEngine {
         // words run full at every layer's format and no layer's
         // accumulator stream has a partial final word — every
         // words-per-column count below is exact, never a ceiling.
+        // A conv layer's packed row count `mp · out_pixels` inherits
+        // every divisibility from `mp`.
         let quantum = model.batch_quantum();
         let mp = m.div_ceil(quantum) * quantum;
         let mut stats = EngineStats {
@@ -215,31 +278,94 @@ impl PackedMlpEngine {
             ..EngineStats::default()
         };
         let layers = model.layers();
+        assert_eq!(batch[0].len(), layers[0].in_len(), "layer 0 input width");
 
-        // Pack the first layer's activation columns out of the
-        // row-major batch (pad rows are all-zero lanes): gather each
-        // column into the scalar staging buffer, then the canonical
-        // range-checked lane pack appends its words.
-        let in_fmt0 = model.precision(0).in_fmt();
-        let mut cur_words = mp / in_fmt0.lanes() as usize;
-        assert_eq!(batch[0].len(), layers[0].k, "layer 0 input width");
-        scratch.h.clear();
-        for k in 0..layers[0].k {
-            scratch.col.clear();
-            for row in batch {
-                scratch.col.push(row[k]);
-            }
-            scratch.col.resize(mp, 0);
-            pack_stream_append(&scratch.col, in_fmt0, &mut scratch.h);
-        }
+        let EngineScratch {
+            s1,
+            h,
+            h_next,
+            acc,
+            prod,
+            wide,
+            stage,
+            col,
+            fmap,
+            spare_rows,
+        } = scratch;
+
+        // Whether `h` already holds this layer's packed activation
+        // columns (dense→dense boundaries keep the stream packed;
+        // conv-adjacent boundaries stage scalars in `fmap` instead).
+        let mut h_is_packed = false;
 
         for (li, layer) in layers.iter().enumerate() {
             let prec = model.precision(li);
             let (in_fmt, acc_fmt) = (prec.in_fmt(), prec.acc_fmt());
-            assert_eq!(scratch.h.len(), layer.k * cur_words, "layer {li} input width");
-            scratch.s1.set_fmt(in_fmt);
-            scratch.s1.reset_counters();
-            let acc_words = mp * prec.acc_bits as usize / 48;
+            let w = layer.weights();
+            // Packed rows this layer streams: every image is one row of
+            // a dense layer and `out_pixels` im2col patch rows of a
+            // conv layer (DESIGN.md §12).
+            let prows = layer.patch_rows();
+            let rows = mp * prows;
+            let cur_words = rows / in_fmt.lanes() as usize;
+
+            // ---- Gather stage: pack this layer's activation columns.
+            // Dense→dense boundaries leave them packed already; the
+            // first layer and every conv-adjacent layer gather scalars
+            // (batch rows, im2col patches, or the flatten view of
+            // `fmap`) through `col` into the canonical range-checked
+            // lane pack.
+            if !h_is_packed {
+                h.clear();
+                match layer {
+                    LayerOp::Dense(_) => {
+                        for k in 0..w.k {
+                            col.clear();
+                            if li == 0 {
+                                for row in batch {
+                                    col.push(row[k]);
+                                }
+                                col.resize(mp, 0);
+                            } else {
+                                // Flatten gather: feature `k` of every
+                                // staged image.
+                                for b in 0..mp {
+                                    col.push(fmap[b * w.k + k]);
+                                }
+                            }
+                            pack_stream_append(col, in_fmt, h);
+                        }
+                    }
+                    LayerOp::Conv(c) => {
+                        for k in 0..w.k {
+                            if li == 0 {
+                                gather_conv_column(
+                                    &c.shape,
+                                    k,
+                                    mp,
+                                    |b, idx| if b < m { batch[b][idx] } else { 0 },
+                                    col,
+                                );
+                            } else {
+                                let feat = c.shape.in_len();
+                                gather_conv_column(
+                                    &c.shape,
+                                    k,
+                                    mp,
+                                    |b, idx| fmap[b * feat + idx],
+                                    col,
+                                );
+                            }
+                            pack_stream_append(col, in_fmt, h);
+                        }
+                    }
+                }
+            }
+            assert_eq!(h.len(), w.k * cur_words, "layer {li} input width");
+
+            s1.set_fmt(in_fmt);
+            s1.reset_counters();
+            let acc_words = rows * prec.acc_bits as usize / 48;
             // Fast path: the accumulate format is exactly double the
             // input format — use the SWAR widen instead of the generic
             // stream repack (DESIGN.md §9).
@@ -248,25 +374,25 @@ impl PackedMlpEngine {
             // columns of this layer live in scratch at once, so each
             // flat plan is fetched exactly once and streamed over the
             // whole packed column.
-            scratch.acc.clear();
-            scratch.acc.resize(layer.n * acc_words, 0);
-            for n in 0..layer.n {
-                let acc_col = &mut scratch.acc[n * acc_words..(n + 1) * acc_words];
+            acc.clear();
+            acc.resize(w.n * acc_words, 0);
+            for n in 0..w.n {
+                let acc_col = &mut acc[n * acc_words..(n + 1) * acc_words];
                 // The k plan headers feeding column n are adjacent.
                 for (k, hdr) in arena.column(li, n).iter().enumerate() {
                     if hdr.is_zero() {
                         continue; // zero weight: zero-skipped entirely
                     }
                     let ops = arena.ops(*hdr);
-                    let x_col = &scratch.h[k * cur_words..(k + 1) * cur_words];
+                    let x_col = &h[k * cur_words..(k + 1) * cur_words];
                     if doubling {
                         // Fused multiply → widen → accumulate per word:
                         // one accumulate add and one widen pass per
                         // produced accumulator word (always both, once
                         // the batch is padded to the batch quantum).
                         for (wi, &word) in x_col.iter().enumerate() {
-                            let prod = scratch.s1.run_flat(word, ops);
-                            let (lo, hi) = widen_double(prod, in_fmt);
+                            let p = s1.run_flat(word, ops);
+                            let (lo, hi) = widen_double(p, in_fmt);
                             acc_col[2 * wi] = swar_add(acc_col[2 * wi], lo, acc_fmt);
                             stats.acc_adds += 1;
                             stats.note_s2(acc_fmt, 1);
@@ -281,8 +407,8 @@ impl PackedMlpEngine {
                         // Equal widths: the product words accumulate
                         // as-is — no conversion happens, none is billed.
                         for (wi, &word) in x_col.iter().enumerate() {
-                            let prod = scratch.s1.run_flat(word, ops);
-                            acc_col[wi] = swar_add(acc_col[wi], prod, acc_fmt);
+                            let p = s1.run_flat(word, ops);
+                            acc_col[wi] = swar_add(acc_col[wi], p, acc_fmt);
                             stats.acc_adds += 1;
                         }
                     } else {
@@ -291,27 +417,28 @@ impl PackedMlpEngine {
                         // → accumulate. Stage-2 passes are charged for
                         // the output words actually produced — with the
                         // batch padded to the quantum, `acc_words` ==
-                        // `repack_cycles_exact(mp, in_fmt, acc_fmt)`.
-                        scratch.prod.clear();
+                        // `repack_cycles_exact(rows, in_fmt, acc_fmt)`.
+                        prod.clear();
                         for &word in x_col {
-                            scratch.prod.push(scratch.s1.run_flat(word, ops));
+                            prod.push(s1.run_flat(word, ops));
                         }
                         stats.note_s2(acc_fmt, acc_words as u64);
-                        repack_hop_into(&scratch.prod, in_fmt, acc_fmt, mp, &mut scratch.wide);
-                        for (w, &p) in acc_col.iter_mut().zip(scratch.wide.iter()) {
-                            *w = swar_add(*w, p, acc_fmt);
+                        repack_hop_into(prod, in_fmt, acc_fmt, rows, wide);
+                        for (dst, &p) in acc_col.iter_mut().zip(wide.iter()) {
+                            *dst = swar_add(*dst, p, acc_fmt);
                             stats.acc_adds += 1;
                         }
                     }
                     // Stage-1 billing is the datapath's own cycle count
                     // (one source of truth — never `plan.cycles()`
                     // on the side).
-                    let (cycles, _adds) = scratch.s1.take_counters();
+                    let (cycles, _adds) = s1.take_counters();
                     debug_assert_eq!(cycles, hdr.cycles as u64 * cur_words as u64);
                     stats.note_s1(in_fmt, cycles);
-                    // Only the m real rows are useful multiplies; the
-                    // zero-pad lanes of the batch tail are not.
-                    stats.subword_mults += m as u64;
+                    // Only the m real rows (for conv: the real images'
+                    // patch rows) are useful multiplies; the zero-pad
+                    // lanes of the batch tail are not.
+                    stats.subword_mults += (m * prows) as u64;
                 }
             }
             if li + 1 < layers.len() {
@@ -322,63 +449,106 @@ impl PackedMlpEngine {
                 // III-C with no unpack → per-value-convert → repack
                 // round trip. An empty chain is a Stage-2 bypass: no
                 // crossbar traversal happens and none is billed.
+                //
+                // Dense→dense boundaries hand the converted stream
+                // straight to the next layer still packed. A boundary
+                // touching a conv layer additionally scatters it into
+                // the scalar feature-map staging, because the next
+                // gather reads features at arbitrary offsets (im2col
+                // patches overlap; the flatten view interleaves
+                // channels) — the conversion itself, and its billing,
+                // are identical either way (DESIGN.md §12).
+                let next = &layers[li + 1];
                 let chain = model.boundary_chain(li);
-                let next_words = mp / model.precision(li + 1).in_fmt().lanes() as usize;
-                scratch.h_next.clear();
-                for n in 0..layer.n {
+                let packed_boundary = !layer.is_conv() && !next.is_conv();
+                let next_in_fmt = model.precision(li + 1).in_fmt();
+                let feat = layer.out_len();
+                if packed_boundary {
+                    h_next.clear();
+                } else {
+                    fmap.resize(mp * feat, 0);
+                }
+                for n in 0..w.n {
                     let span = n * acc_words..(n + 1) * acc_words;
-                    for w in scratch.acc[span.clone()].iter_mut() {
-                        *w = swar_relu(*w, acc_fmt);
+                    for word in acc[span.clone()].iter_mut() {
+                        *word = swar_relu(*word, acc_fmt);
                     }
-                    let acc_col = &scratch.acc[span];
-                    if chain.is_empty() {
-                        scratch.h_next.extend_from_slice(acc_col);
+                    let acc_col = &acc[span];
+                    let converted: &[u64] = if chain.is_empty() {
+                        acc_col
                     } else {
-                        repack_hop_into(acc_col, chain[0].0, chain[0].1, mp, &mut scratch.wide);
+                        repack_hop_into(acc_col, chain[0].0, chain[0].1, rows, wide);
                         for &(f, t) in &chain[1..] {
-                            std::mem::swap(&mut scratch.wide, &mut scratch.stage);
-                            repack_hop_into(&scratch.stage, f, t, mp, &mut scratch.wide);
+                            std::mem::swap(wide, stage);
+                            repack_hop_into(stage, f, t, rows, wide);
                         }
-                        scratch.h_next.extend_from_slice(&scratch.wide);
+                        wide.as_slice()
+                    };
+                    if packed_boundary {
+                        h_next.extend_from_slice(converted);
+                    } else {
+                        // Scatter the converted column into the scalar
+                        // feature map: patch row `r` of image `r/prows`
+                        // is feature `n·prows + r%prows` (`[channel]
+                        // [y][x]` order — for a dense producer `prows`
+                        // is 1 and this is the plain transpose).
+                        let lanes = next_in_fmt.lanes() as usize;
+                        let mask = (1u64 << next_in_fmt.bits) - 1;
+                        for r in 0..rows {
+                            let v = sign_extend(
+                                (converted[r / lanes]
+                                    >> ((r % lanes) as u32 * next_in_fmt.bits))
+                                    & mask,
+                                next_in_fmt.bits,
+                            );
+                            fmap[(r / prows) * feat + n * prows + (r % prows)] = v;
+                        }
                     }
                 }
                 // One crossbar cycle per output word each hop produces,
                 // per output column — billed to the format produced.
                 for &(_, t) in chain {
-                    let passes = (mp * t.bits as usize).div_ceil(48) as u64;
-                    stats.note_s2(t, passes * layer.n as u64);
+                    let passes = (rows * t.bits as usize).div_ceil(48) as u64;
+                    stats.note_s2(t, passes * w.n as u64);
                 }
-                std::mem::swap(&mut scratch.h, &mut scratch.h_next);
-                cur_words = next_words;
+                if packed_boundary {
+                    std::mem::swap(h, h_next);
+                }
+                h_is_packed = packed_boundary;
             } else {
                 // Untranspose the accumulator block into row-major
-                // logits, dropping the pad rows. `out`'s rows are
-                // reused in place; a smaller batch parks its surplus
-                // warmed rows in the scratch so a later larger batch
-                // re-adopts them instead of allocating.
+                // logits, dropping the pad rows; a conv final layer
+                // flattens back to `[cout][oy][ox]` feature order.
+                // `out`'s rows are reused in place; a smaller batch
+                // parks its surplus warmed rows in the scratch so a
+                // later larger batch re-adopts them instead of
+                // allocating.
                 let acc_lanes = acc_fmt.lanes() as usize;
                 let mask = (1u64 << acc_fmt.bits) - 1;
                 while out.len() > m {
-                    scratch.spare_rows.push(out.pop().expect("len checked"));
+                    spare_rows.push(out.pop().expect("len checked"));
                 }
                 while out.len() < m {
-                    out.push(scratch.spare_rows.pop().unwrap_or_default());
+                    out.push(spare_rows.pop().unwrap_or_default());
                 }
                 for (b, row) in out.iter_mut().enumerate() {
                     row.clear();
-                    for n in 0..layer.n {
-                        let word = scratch.acc[n * acc_words + b / acc_lanes];
-                        row.push(sign_extend(
-                            (word >> ((b % acc_lanes) as u32 * acc_fmt.bits)) & mask,
-                            acc_fmt.bits,
-                        ));
+                    for n in 0..w.n {
+                        for within in 0..prows {
+                            let r = b * prows + within;
+                            let word = acc[n * acc_words + r / acc_lanes];
+                            row.push(sign_extend(
+                                (word >> ((r % acc_lanes) as u32 * acc_fmt.bits)) & mask,
+                                acc_fmt.bits,
+                            ));
+                        }
                     }
                 }
                 // Grow the spare pool's spine now, while still in the
                 // call that grew `out` (a warming event by definition),
                 // so a later smaller batch parks its surplus rows
                 // without touching the allocator.
-                scratch.spare_rows.reserve(out.len());
+                spare_rows.reserve(out.len());
                 return stats;
             }
         }
@@ -389,8 +559,9 @@ impl PackedMlpEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::exec::{mlp_forward_row, mlp_forward_row_mixed};
-    use crate::nn::weights::{LayerPrecision, QuantLayer};
+    use crate::nn::conv::ConvLayer;
+    use crate::nn::exec::{mlp_forward_row, mlp_forward_row_mixed, stack_forward_row};
+    use crate::nn::weights::{uniform_schedule, LayerPrecision, QuantLayer};
     use crate::workload::synth::XorShift64;
 
     fn random_layers(rng: &mut XorShift64) -> Vec<QuantLayer> {
@@ -405,12 +576,26 @@ mod tests {
         vec![mk(10, 6, rng), mk(6, 4, rng)]
     }
 
+    fn random_conv(
+        rng: &mut XorShift64,
+        shape: ConvShape,
+        bits: u32,
+    ) -> ConvLayer {
+        let w = QuantLayer::new(
+            (0..shape.patch_len())
+                .map(|_| (0..shape.cout).map(|_| rng.q_raw(bits)).collect())
+                .collect(),
+            bits,
+        );
+        ConvLayer::new(w, shape).unwrap()
+    }
+
     #[test]
     fn packed_engine_matches_scalar_reference() {
         let mut rng = XorShift64::new(0xE8E8);
         let layers = random_layers(&mut rng);
         let model = CompiledModel::compile(layers.clone(), 8, 16).unwrap();
-        let engine = PackedMlpEngine::new(model);
+        let engine = PackedEngine::new(model);
         for batch_size in [1usize, 3, 6, 16, 17] {
             let batch: Vec<Vec<i64>> = (0..batch_size)
                 .map(|_| (0..10).map(|_| rng.q_raw(8)).collect())
@@ -443,7 +628,7 @@ mod tests {
         for sched in [sched_a, sched_b] {
             let model =
                 CompiledModel::compile_scheduled(layers.clone(), sched.clone()).unwrap();
-            let engine = PackedMlpEngine::new(model);
+            let engine = PackedEngine::new(model);
             for batch_size in [17usize, 3, 24, 1] {
                 let batch: Vec<Vec<i64>> = (0..batch_size)
                     .map(|_| (0..10).map(|_| rng.q_raw(sched[0].in_bits)).collect())
@@ -472,7 +657,7 @@ mod tests {
         for sched in &schedules {
             let model =
                 CompiledModel::compile_scheduled(layers.clone(), sched.clone()).unwrap();
-            let engine = PackedMlpEngine::new(model);
+            let engine = PackedEngine::new(model);
             for batch_size in [1usize, 5, 12, 25] {
                 let batch: Vec<Vec<i64>> = (0..batch_size)
                     .map(|_| (0..10).map(|_| rng.q_raw(sched[0].in_bits)).collect())
@@ -503,10 +688,123 @@ mod tests {
     }
 
     #[test]
+    fn conv_stack_matches_scalar_oracle() {
+        // conv 1x6x6 → 3ch 3x3 s1 p1 → conv 3ch → 2ch 3x3 s2 p1 →
+        // dense 18 → 4, uniform 8→16: every boundary kind (conv→conv,
+        // conv→dense) plus the im2col gather from the raw batch.
+        let mut rng = XorShift64::new(0xC0DE1);
+        let c1 = random_conv(
+            &mut rng,
+            ConvShape { cin: 1, h: 6, w: 6, cout: 3, kh: 3, kw: 3, stride: 1, pad: 1 },
+            8,
+        );
+        let c2 = random_conv(
+            &mut rng,
+            ConvShape { cin: 3, h: 6, w: 6, cout: 2, kh: 3, kw: 3, stride: 2, pad: 1 },
+            8,
+        );
+        let dense = QuantLayer::new(
+            (0..18).map(|_| (0..4).map(|_| rng.q_raw(8)).collect()).collect(),
+            8,
+        );
+        let ops = vec![LayerOp::Conv(c1), LayerOp::Conv(c2), LayerOp::Dense(dense)];
+        let sched = uniform_schedule(8, 16, 3);
+        let model = CompiledModel::compile_stack(ops.clone(), sched.clone()).unwrap();
+        let engine = PackedEngine::new(model);
+        for batch_size in [1usize, 4, 7] {
+            let batch: Vec<Vec<i64>> = (0..batch_size)
+                .map(|_| (0..36).map(|_| rng.q_raw(8)).collect())
+                .collect();
+            let (got, stats) = engine.forward_batch(&batch);
+            assert_eq!(got.len(), batch_size);
+            for (b, row) in batch.iter().enumerate() {
+                let want = stack_forward_row(row, &ops, &sched);
+                assert_eq!(got[b], want, "batch row {b} (size {batch_size})");
+            }
+            // Conv useful multiplies count the real images' patch rows
+            // exactly: Σ over layers of m · patch_rows · nonzero weights.
+            let want_mults: u64 = ops
+                .iter()
+                .map(|op| {
+                    let nz = op
+                        .weights()
+                        .w_raw
+                        .iter()
+                        .flatten()
+                        .filter(|&&v| v != 0)
+                        .count();
+                    (batch_size * op.patch_rows() * nz) as u64
+                })
+                .sum();
+            assert_eq!(stats.subword_mults, want_mults);
+        }
+    }
+
+    #[test]
+    fn conv_final_layer_returns_flattened_feature_maps() {
+        // dense 4 → 8 then conv 2x2x2 → 2ch 2x2 s1 p0 (out 2x1x1):
+        // exercises dense→conv staging and the conv untranspose.
+        let mut rng = XorShift64::new(0xC0DE2);
+        let dense = QuantLayer::new(
+            (0..4).map(|_| (0..8).map(|_| rng.q_raw(8)).collect()).collect(),
+            8,
+        );
+        let conv = random_conv(
+            &mut rng,
+            ConvShape { cin: 2, h: 2, w: 2, cout: 2, kh: 2, kw: 2, stride: 1, pad: 0 },
+            8,
+        );
+        let ops = vec![LayerOp::Dense(dense), LayerOp::Conv(conv)];
+        let sched = uniform_schedule(8, 16, 2);
+        let model = CompiledModel::compile_stack(ops.clone(), sched.clone()).unwrap();
+        let engine = PackedEngine::new(model);
+        let batch: Vec<Vec<i64>> = (0..5)
+            .map(|_| (0..4).map(|_| rng.q_raw(8)).collect())
+            .collect();
+        let (got, _) = engine.forward_batch(&batch);
+        for (b, row) in batch.iter().enumerate() {
+            let want = stack_forward_row(row, &ops, &sched);
+            assert_eq!(got[b], want, "row {b}");
+            assert_eq!(got[b].len(), 2, "flattened [cout][oh][ow] length");
+        }
+    }
+
+    #[test]
+    fn conv_mixed_precision_boundaries_match_oracle() {
+        // 4-bit conv front end widening into an 8-bit dense head, and a
+        // narrowing 16→4 conv→dense boundary (2-hop chain) — the
+        // run-time bitwidth switch on conv streams.
+        let mut rng = XorShift64::new(0xC0DE3);
+        let shape =
+            ConvShape { cin: 1, h: 4, w: 4, cout: 2, kh: 2, kw: 2, stride: 2, pad: 0 };
+        for sched in [
+            vec![LayerPrecision::new(4, 8), LayerPrecision::new(8, 16)],
+            vec![LayerPrecision::new(8, 16), LayerPrecision::new(4, 8)],
+        ] {
+            let conv = random_conv(&mut rng, shape, 4);
+            let dense = QuantLayer::new(
+                (0..8).map(|_| (0..3).map(|_| rng.q_raw(4)).collect()).collect(),
+                4,
+            );
+            let ops = vec![LayerOp::Conv(conv), LayerOp::Dense(dense)];
+            let model = CompiledModel::compile_stack(ops.clone(), sched.clone()).unwrap();
+            let engine = PackedEngine::new(model);
+            let batch: Vec<Vec<i64>> = (0..9)
+                .map(|_| (0..16).map(|_| rng.q_raw(sched[0].in_bits)).collect())
+                .collect();
+            let (got, _) = engine.forward_batch(&batch);
+            for (b, row) in batch.iter().enumerate() {
+                let want = stack_forward_row(row, &ops, &sched);
+                assert_eq!(got[b], want, "sched {sched:?} row {b}");
+            }
+        }
+    }
+
+    #[test]
     fn zero_weights_cost_nothing() {
         let layers = vec![QuantLayer::new(vec![vec![0, 64], vec![0, -32]], 8)];
         let engine =
-            PackedMlpEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
+            PackedEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
         let batch = vec![vec![100i64, -50], vec![25, 77]];
         let (_, stats) = engine.forward_batch(&batch);
         // Column n=0 is all-zero weights: only n=1's two weights run.
@@ -522,7 +820,7 @@ mod tests {
         let mut rng = XorShift64::new(0x57A7);
         let layers = random_layers(&mut rng);
         let engine =
-            PackedMlpEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
+            PackedEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
         let mk_batch = |n: usize, rng: &mut XorShift64| -> Vec<Vec<i64>> {
             (0..n).map(|_| (0..10).map(|_| rng.q_raw(8)).collect()).collect()
         };
@@ -541,7 +839,7 @@ mod tests {
         // exactly 2 widen passes and 2 accumulate adds.
         let layers = vec![QuantLayer::new(vec![vec![64]], 8)];
         let engine =
-            PackedMlpEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
+            PackedEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
         let batch: Vec<Vec<i64>> = (0..6).map(|i| vec![i as i64 * 10 - 25]).collect();
         let (_, stats) = engine.forward_batch(&batch);
         assert_eq!(stats.acc_adds, 2);
@@ -560,7 +858,7 @@ mod tests {
         // word-weight, not the 6 lanes the padded word physically runs.
         let layers = vec![QuantLayer::new(vec![vec![64]], 8)];
         let engine =
-            PackedMlpEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
+            PackedEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
         let batch: Vec<Vec<i64>> = (0..3).map(|i| vec![i as i64 * 7 - 3]).collect();
         let (_, stats) = engine.forward_batch(&batch);
         assert_eq!(stats.subword_mults, 3);
@@ -578,7 +876,7 @@ mod tests {
         // so no crossbar pass may be billed.
         let layers = vec![QuantLayer::new(vec![vec![64]], 8)];
         let engine =
-            PackedMlpEngine::new(CompiledModel::compile(layers, 8, 8).unwrap());
+            PackedEngine::new(CompiledModel::compile(layers, 8, 8).unwrap());
         let batch: Vec<Vec<i64>> = (0..6).map(|i| vec![i as i64 - 3]).collect();
         let (_, stats) = engine.forward_batch(&batch);
         assert_eq!(stats.s2_passes, 0);
@@ -590,7 +888,7 @@ mod tests {
             QuantLayer::new(vec![vec![32]], 8),
         ];
         let sched = vec![LayerPrecision::new(4, 8), LayerPrecision::new(8, 16)];
-        let engine = PackedMlpEngine::new(
+        let engine = PackedEngine::new(
             CompiledModel::compile_scheduled(layers, sched).unwrap(),
         );
         let batch: Vec<Vec<i64>> = (0..12).map(|i| vec![(i % 8) as i64 - 4]).collect();
@@ -610,7 +908,7 @@ mod tests {
         let layers = random_layers(&mut rng);
         let hidden_n = layers[0].n as u64;
         let sched = vec![LayerPrecision::new(8, 16), LayerPrecision::new(4, 8)];
-        let engine = PackedMlpEngine::new(
+        let engine = PackedEngine::new(
             CompiledModel::compile_scheduled(layers, sched).unwrap(),
         );
         let batch: Vec<Vec<i64>> = (0..12)
@@ -633,11 +931,36 @@ mod tests {
         let layers = random_layers(&mut rng);
         let hidden_n = layers[0].n as u64;
         let engine =
-            PackedMlpEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
+            PackedEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
         let batch: Vec<Vec<i64>> = (0..6)
             .map(|_| (0..10).map(|_| rng.q_raw(8)).collect())
             .collect();
         let (_, stats) = engine.forward_batch(&batch);
         assert_eq!(stats.s2_passes_by_fmt[format_index(8)], hidden_n);
+    }
+
+    #[test]
+    fn conv_boundary_bills_conversions_like_packed_boundaries() {
+        // A conv→dense boundary converts the same number of sub-words
+        // through the same chain as a dense→dense boundary of equal row
+        // count — the scalar staging is invisible to the counters.
+        let mut rng = XorShift64::new(0xC0DE4);
+        // conv 1x2x2 → 2ch 2x2 s1 p0: out 2 pixels... (2-2)/1+1 = 1 →
+        // out 2x1x1, 2 features, prows = 1 pixel per image.
+        let shape =
+            ConvShape { cin: 1, h: 2, w: 2, cout: 2, kh: 2, kw: 2, stride: 1, pad: 0 };
+        let conv = random_conv(&mut rng, shape, 8);
+        let dense_tail = QuantLayer::new(vec![vec![64], vec![-32]], 8);
+        let ops = vec![LayerOp::Conv(conv), LayerOp::Dense(dense_tail.clone())];
+        let model =
+            CompiledModel::compile_stack(ops, uniform_schedule(8, 16, 2)).unwrap();
+        let engine = PackedEngine::new(model);
+        let batch: Vec<Vec<i64>> = (0..6)
+            .map(|_| (0..4).map(|_| rng.q_raw(8)).collect())
+            .collect();
+        let (_, stats) = engine.forward_batch(&batch);
+        // Boundary: 6 rows × 2 columns, 16→8 chain → ceil(6·8/48) = 1
+        // pass per column, booked to the 8-bit bucket.
+        assert_eq!(stats.s2_passes_by_fmt[format_index(8)], 2);
     }
 }

@@ -26,8 +26,13 @@ pub struct Metrics {
     pub s1_cycles_by_fmt: [AtomicU64; FORMATS.len()],
     /// Stage-2 passes split by the format they produced.
     pub s2_passes_by_fmt: [AtomicU64; FORMATS.len()],
-    /// Simulated energy, femto-joules (integer for atomic accumulation).
-    pub energy_fj: AtomicU64,
+    /// Simulated energy, *atto*-joules (integer for atomic
+    /// accumulation). Per-batch pJ figures are rounded to the nearest
+    /// aJ before accumulating, so the worst-case drift is 0.5 aJ
+    /// (5·10⁻⁴ fJ) per batch — the pre-fix femtojoule truncation lost
+    /// up to a full fJ per batch, which compounds to nonsense totals
+    /// over a serving run. Read through [`Metrics::energy_fj`].
+    pub energy_aj: AtomicU64,
     /// Wall time spent in PE compute, nanoseconds.
     pub compute_ns: AtomicU64,
     /// Request latency histogram: bucket `i` counts latencies in
@@ -54,7 +59,7 @@ impl Default for Metrics {
             s2_passes: AtomicU64::new(0),
             s1_cycles_by_fmt: std::array::from_fn(|_| AtomicU64::new(0)),
             s2_passes_by_fmt: std::array::from_fn(|_| AtomicU64::new(0)),
-            energy_fj: AtomicU64::new(0),
+            energy_aj: AtomicU64::new(0),
             compute_ns: AtomicU64::new(0),
             lat_hist: std::array::from_fn(|_| AtomicU64::new(0)),
             lat_count: AtomicU64::new(0),
@@ -99,10 +104,25 @@ impl Metrics {
         for (dst, &src) in self.s2_passes_by_fmt.iter().zip(&stats.s2_passes_by_fmt) {
             dst.fetch_add(src, Ordering::Relaxed);
         }
-        self.energy_fj
-            .fetch_add((pj * 1000.0) as u64, Ordering::Relaxed);
+        // A batch's energy is a finite, non-negative physical quantity;
+        // NaN or a negative figure is a cost-model bug upstream, not
+        // something to silently saturate-cast into the counter.
+        debug_assert!(
+            pj.is_finite() && pj >= 0.0,
+            "batch energy must be finite and non-negative, got {pj} pJ"
+        );
+        // Round to the nearest attojoule (`max` also maps NaN to 0.0 in
+        // release builds) — never truncate: sub-unit remainders must
+        // not be systematically dropped every batch.
+        self.energy_aj
+            .fetch_add((pj.max(0.0) * 1e6).round() as u64, Ordering::Relaxed);
         self.compute_ns.fetch_add(ns, Ordering::Relaxed);
         self.last_done_ns.fetch_max(self.now_ns(), Ordering::Relaxed);
+    }
+
+    /// Accumulated simulated energy in femtojoules.
+    pub fn energy_fj(&self) -> f64 {
+        self.energy_aj.load(Ordering::Relaxed) as f64 / 1e3
     }
 
     /// Record one request's submit→complete latency.
@@ -115,6 +135,11 @@ impl Metrics {
 
     /// Latency quantile estimate in nanoseconds (upper bucket bound);
     /// `None` until at least one latency is recorded. `q` in [0, 1].
+    /// Never exceeds the top bucket's documented upper bound
+    /// (`2^(LAT_BUCKETS-1)` ns): the overflow bucket clamps there, and
+    /// a racing reader that sees `lat_count` ahead of the histogram
+    /// falls through to the same clamp — the old `u64::MAX` sentinel
+    /// printed as an ~18-exasecond p99 in `report()`.
     pub fn latency_quantile_ns(&self, q: f64) -> Option<u64> {
         let count = self.lat_count.load(Ordering::Relaxed);
         if count == 0 {
@@ -125,10 +150,10 @@ impl Metrics {
         for (i, b) in self.lat_hist.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return Some(1u64 << i.min(63));
+                return Some(1u64 << i.min(LAT_BUCKETS - 1));
             }
         }
-        Some(u64::MAX)
+        Some(1u64 << (LAT_BUCKETS - 1))
     }
 
     pub fn mean_latency_ns(&self) -> Option<f64> {
@@ -155,7 +180,7 @@ impl Metrics {
         let rows = self.rows.load(Ordering::Relaxed);
         let mults = self.subword_mults.load(Ordering::Relaxed);
         let cycles = self.s1_cycles.load(Ordering::Relaxed);
-        let pj = self.energy_fj.load(Ordering::Relaxed) as f64 / 1000.0;
+        let pj = self.energy_fj() / 1000.0;
         let ns = self.compute_ns.load(Ordering::Relaxed).max(1);
         let p50 = self.latency_quantile_ns(0.50).unwrap_or(0) as f64 / 1e3;
         let p99 = self.latency_quantile_ns(0.99).unwrap_or(0) as f64 / 1e3;
@@ -235,6 +260,49 @@ mod tests {
         assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
         assert!(p99 >= 100_000, "p99 {p99} below max sample");
         assert!(m.mean_latency_ns().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn per_batch_energy_sums_match_the_oracle_total_within_a_femtojoule() {
+        // Regression (the fJ-truncation bug): 1000 batches of 0.0007 pJ
+        // = 0.7 fJ each used to truncate to 0 fJ every single batch,
+        // reporting zero total energy for 700 fJ of real work.
+        let m = Metrics::default();
+        let per_batch_pj = 0.0007;
+        let batches = 1000u64;
+        for _ in 0..batches {
+            m.add_batch(1, Default::default(), per_batch_pj, 1);
+        }
+        let oracle_fj = per_batch_pj * batches as f64 * 1000.0;
+        assert!(
+            (m.energy_fj() - oracle_fj).abs() < 1.0,
+            "accumulated {} fJ, oracle {} fJ",
+            m.energy_fj(),
+            oracle_fj
+        );
+        // And fractional picojoule figures keep their remainders too.
+        let m2 = Metrics::default();
+        for _ in 0..100 {
+            m2.add_batch(1, Default::default(), 1.2345, 1);
+        }
+        assert!((m2.energy_fj() - 123450.0).abs() < 1.0, "{}", m2.energy_fj());
+    }
+
+    #[test]
+    fn overflow_latency_bucket_clamps_to_its_documented_upper_bound() {
+        // Regression (the u64::MAX sentinel): an astronomically large
+        // latency lands in the top bucket and every quantile must clamp
+        // to that bucket's upper bound, never the ~18-exasecond
+        // sentinel `report()` would print as a p99.
+        let m = Metrics::default();
+        m.observe_latency_ns(u64::MAX);
+        m.observe_latency_ns(u64::MAX - 1);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let v = m.latency_quantile_ns(q).unwrap();
+            assert_eq!(v, 1u64 << 63, "q={q} must clamp to the top bucket bound");
+            assert_ne!(v, u64::MAX);
+        }
+        assert!(m.report().contains("latency_p99"), "{}", m.report());
     }
 
     #[test]

@@ -8,7 +8,10 @@
 //! dimension (the sub-words sharing one CSD multiplier — the paper's
 //! "multiplier value with several multiplicands"), products are
 //! Stage-2-repacked into each layer's accumulator format and accumulated
-//! with boundary-killed adds.
+//! with boundary-killed adds. Conv2D layers serve on the same core via
+//! im2col lowering — every output pixel becomes a packed batch row
+//! (DESIGN.md §12) — so interleaved CNN + MLP stacks are first-class
+//! workloads.
 //!
 //! The serving engine is built around one immutable [`CompiledModel`]
 //! (weights + precompiled CSD multiply plans + the per-layer precision
@@ -33,11 +36,12 @@ pub mod server;
 
 pub use batcher::{Batch, Batcher, TrackedRequest};
 pub use cost::CostTable;
-pub use engine::{EngineScratch, EngineStats, PackedMlpEngine};
+pub use engine::{EngineScratch, EngineStats, PackedEngine, PackedMlpEngine};
 pub use metrics::Metrics;
 pub use model::CompiledModel;
 pub use server::{
     Coordinator, DispatchPolicy, Request, Response, ServeConfig, ServeError,
 };
 
+pub use crate::nn::conv::{ConvLayer, ConvShape, LayerOp};
 pub use crate::nn::weights::LayerPrecision;

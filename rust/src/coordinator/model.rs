@@ -25,6 +25,7 @@ use crate::anyhow;
 use crate::bits::format::SimdFormat;
 use crate::csd::flat::PlanArena;
 use crate::csd::schedule::MulPlan;
+use crate::nn::conv::LayerOp;
 use crate::nn::weights::{uniform_schedule, LayerPrecision, QuantLayer};
 use crate::pipeline::stage2::conversion_chain;
 
@@ -33,15 +34,18 @@ use crate::pipeline::stage2::conversion_chain;
 /// model no matter how many PE workers serve it.
 pub static PLAN_COMPILATIONS: AtomicU64 = AtomicU64::new(0);
 
-/// An immutable compiled model: quantized layers, per-layer serving
-/// precision, plus every per-weight [`MulPlan`] and per-boundary
-/// Stage-2 conversion chain, shared across all PE workers via [`Arc`].
+/// An immutable compiled model: quantized layers (dense or conv, each
+/// lowered to its matmul view), per-layer serving precision, plus every
+/// per-weight [`MulPlan`] and per-boundary Stage-2 conversion chain,
+/// shared across all PE workers via [`Arc`]. A conv layer contributes
+/// exactly one CSD plan per kernel weight — the plan is shared across
+/// every output pixel of every image (DESIGN.md §12).
 #[derive(Debug)]
 pub struct CompiledModel {
-    layers: Vec<QuantLayer>,
-    /// `plans[layer][k][n]`, precompiled for every weight — the
-    /// inspectable compilation artifact (oracles, tests, billing
-    /// cross-checks).
+    layers: Vec<LayerOp>,
+    /// `plans[layer][k][n]`, precompiled for every weight of the
+    /// layer's matmul view — the inspectable compilation artifact
+    /// (oracles, tests, billing cross-checks).
     plans: Vec<Vec<Vec<MulPlan>>>,
     /// The same plans flattened into one contiguous SoA micro-op buffer
     /// — the execution artifact the engine's hot loop runs
@@ -88,13 +92,30 @@ impl CompiledModel {
         CompiledModel::compile_scheduled(layers, schedule)
     }
 
-    /// Compile a mixed-precision model: layer `li` consumes
+    /// Compile a mixed-precision dense model: layer `li` consumes
     /// `schedule[li].in_bits` activations and produces
-    /// `schedule[li].acc_bits` accumulators; boundary conversion chains
-    /// are precomputed here so workers never run the BFS. All structural
-    /// validation happens here (DESIGN.md §10).
+    /// `schedule[li].acc_bits` accumulators. Shorthand for
+    /// [`compile_stack`] with every layer dense.
+    ///
+    /// [`compile_stack`]: CompiledModel::compile_stack
     pub fn compile_scheduled(
         layers: Vec<QuantLayer>,
+        schedule: Vec<LayerPrecision>,
+    ) -> anyhow::Result<Arc<CompiledModel>> {
+        CompiledModel::compile_stack(layers.into_iter().map(LayerOp::Dense).collect(), schedule)
+    }
+
+    /// Compile an interleaved conv + dense stack (DESIGN.md §12):
+    /// layer `li` consumes its flattened input features at
+    /// `schedule[li].in_bits` and produces flattened accumulators at
+    /// `schedule[li].acc_bits`; conv layers are lowered to their im2col
+    /// matmul (one CSD plan per kernel weight, shared across all output
+    /// pixels). Boundary conversion chains are precomputed here so
+    /// workers never run the BFS, and all structural validation happens
+    /// here (DESIGN.md §10) — a malformed model is its builder's error,
+    /// never a PE-worker panic.
+    pub fn compile_stack(
+        layers: Vec<LayerOp>,
         schedule: Vec<LayerPrecision>,
     ) -> anyhow::Result<Arc<CompiledModel>> {
         anyhow::ensure!(!layers.is_empty(), "model needs at least one layer");
@@ -108,23 +129,36 @@ impl CompiledModel {
         for (li, (layer, p)) in layers.iter().zip(&schedule).enumerate() {
             p.validate()
                 .map_err(|e| anyhow::anyhow!("layer {li}: {e}"))?;
+            let w = layer.weights();
             anyhow::ensure!(
-                crate::bits::format::FORMATS.contains(&layer.bits),
+                crate::bits::format::FORMATS.contains(&w.bits),
                 "layer {li}: weight width {} is not a Soft SIMD format",
-                layer.bits
+                w.bits
             );
             anyhow::ensure!(
-                layer.k > 0 && layer.n > 0,
+                w.k > 0 && w.n > 0,
                 "layer {li}: degenerate shape {}x{}",
-                layer.k,
-                layer.n
+                w.k,
+                w.n
             );
+            if let LayerOp::Conv(c) = layer {
+                c.shape
+                    .validate()
+                    .map_err(|e| anyhow::anyhow!("layer {li}: {e}"))?;
+                anyhow::ensure!(
+                    w.k == c.shape.patch_len() && w.n == c.shape.cout,
+                    "layer {li}: conv weight matrix {}x{} does not match shape {}",
+                    w.k,
+                    w.n,
+                    c.shape
+                );
+            }
             if li > 0 {
                 anyhow::ensure!(
-                    layers[li - 1].n == layer.k,
+                    layers[li - 1].out_len() == layer.in_len(),
                     "layer {li}: input width {} != previous layer's output width {}",
-                    layer.k,
-                    layers[li - 1].n
+                    layer.in_len(),
+                    layers[li - 1].out_len()
                 );
             }
             batch_quantum = lcm(batch_quantum, p.in_fmt().lanes() as usize);
@@ -135,7 +169,8 @@ impl CompiledModel {
             .map(|w| conversion_chain(w[0].acc_fmt(), w[1].in_fmt()))
             .collect();
         PLAN_COMPILATIONS.fetch_add(1, Ordering::SeqCst);
-        let plans = crate::nn::exec::precompute_plans(&layers);
+        let plans: Vec<Vec<Vec<MulPlan>>> =
+            layers.iter().map(|layer| layer.weights().plans()).collect();
         let mut cycles_per_word = 0u64;
         let mut zero_weights = 0u64;
         for layer_plans in &plans {
@@ -162,7 +197,7 @@ impl CompiledModel {
         }))
     }
 
-    pub fn layers(&self) -> &[QuantLayer] {
+    pub fn layers(&self) -> &[LayerOp] {
         &self.layers
     }
 
@@ -217,9 +252,16 @@ impl CompiledModel {
         self.schedule[self.schedule.len() - 1].acc_fmt()
     }
 
-    /// Activation width of the first layer (row length of a request).
+    /// Flattened input length of the first layer (row length of a
+    /// request; for a conv-first model this is `cin·h·w`).
     pub fn input_width(&self) -> usize {
-        self.layers[0].k
+        self.layers[0].in_len()
+    }
+
+    /// Flattened output length of the last layer (row length of a
+    /// response; for a conv-final model this is `cout·out_h·out_w`).
+    pub fn output_width(&self) -> usize {
+        self.layers[self.layers.len() - 1].out_len()
     }
 
     /// Rows per full packed batch: batches padded to a multiple of this
@@ -260,7 +302,10 @@ mod tests {
         assert_eq!(m.batch_quantum(), 6); // lcm(6 @8b, 3 @16b)
         assert_eq!(m.zero_weights(), 1);
         assert!(m.cycles_per_word() > 0);
-        assert_eq!(m.plan(0, 0, 0).ops.len(), m.layers()[0].plan(0, 0).ops.len());
+        assert_eq!(
+            m.plan(0, 0, 0).ops.len(),
+            m.layers()[0].weights().plan(0, 0).ops.len()
+        );
         assert_eq!(m.boundary_chain(0), &[(SimdFormat::new(16), SimdFormat::new(8))]);
     }
 
@@ -269,6 +314,7 @@ mod tests {
         let m = CompiledModel::compile(layers(), 8, 16).unwrap();
         let arena = m.flat();
         for (li, layer) in m.layers().iter().enumerate() {
+            let layer = layer.weights();
             for k in 0..layer.k {
                 for n in 0..layer.n {
                     let plan = m.plan(li, k, n);
@@ -312,6 +358,35 @@ mod tests {
             QuantLayer::new(vec![vec![5]], 8),                     // 1 -> 1
         ];
         let err = CompiledModel::compile(bad, 8, 16).expect_err("non-chaining dims");
+        assert!(err.to_string().contains("output width"), "{err}");
+    }
+
+    #[test]
+    fn compile_stack_chains_conv_and_dense_by_flattened_lengths() {
+        use crate::nn::conv::{ConvLayer, ConvShape};
+        // conv 1x4x4 → 2ch 3x3 s1 p1 (out 2x4x4 = 32) then dense 32→3.
+        let shape =
+            ConvShape { cin: 1, h: 4, w: 4, cout: 2, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let cw = QuantLayer::new(vec![vec![5, -9]; 9], 8);
+        let conv = ConvLayer::new(cw, shape).unwrap();
+        let dense = QuantLayer::new(vec![vec![1, 2, 3]; 32], 8);
+        let ops = vec![LayerOp::Conv(conv.clone()), LayerOp::Dense(dense)];
+        let m = CompiledModel::compile_stack(ops, uniform_schedule(8, 16, 2)).unwrap();
+        assert_eq!(m.input_width(), 16);
+        assert_eq!(m.output_width(), 3);
+        assert_eq!(m.layers()[0].patch_rows(), 16);
+        assert_eq!(m.layers()[1].patch_rows(), 1);
+        // The arena holds one plan per kernel weight (9·2) plus the
+        // dense plans (32·3) — shared across output pixels, not one per
+        // pixel.
+        assert_eq!(m.flat().total_plans(), 9 * 2 + 32 * 3);
+        // Non-chaining flattened lengths are a compile error.
+        let bad_dense = QuantLayer::new(vec![vec![1]; 31], 8);
+        let err = CompiledModel::compile_stack(
+            vec![LayerOp::Conv(conv), LayerOp::Dense(bad_dense)],
+            uniform_schedule(8, 16, 2),
+        )
+        .expect_err("31 != 32");
         assert!(err.to_string().contains("output width"), "{err}");
     }
 

@@ -2,7 +2,7 @@
 //!
 //! Serving shape (DESIGN.md §8): the submitting thread and a deadline
 //! thread share the batcher and the router; each PE worker owns one
-//! [`PackedMlpEngine`] bound to the single shared [`CompiledModel`].
+//! [`PackedEngine`] bound to the single shared [`CompiledModel`].
 //! Dispatch routes formed batches over *bounded* per-worker queues —
 //! least-outstanding-rows by default, round-robin for comparison — so a
 //! slow PE exerts backpressure instead of growing an unbounded mailbox.
@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{Batch, Batcher, TrackedRequest};
 use super::cost::CostTable;
-use super::engine::PackedMlpEngine;
+use super::engine::PackedEngine;
 use super::metrics::Metrics;
 use super::model::CompiledModel;
 
@@ -345,7 +345,7 @@ impl Coordinator {
             let done = tx_done.clone();
             let m = Arc::clone(&metrics);
             let c = Arc::clone(&cost);
-            let engine = PackedMlpEngine::new(Arc::clone(&model));
+            let engine = PackedEngine::new(Arc::clone(&model));
             workers.push(std::thread::spawn(move || {
                 worker_loop(
                     worker_id,
@@ -537,7 +537,7 @@ impl Coordinator {
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker_id: usize,
-    engine: PackedMlpEngine,
+    engine: PackedEngine,
     rx: Receiver<WorkerMsg>,
     done: Sender<(usize, Vec<Response>)>,
     metrics: Arc<Metrics>,

@@ -20,6 +20,12 @@
 //! execution over the flat form ([`crate::pipeline::stage1::Stage1::run_flat`])
 //! is bit-exact against [`crate::pipeline::stage1::Stage1::run_plan`];
 //! the property tests enforce both.
+//!
+//! The arena is layer-kind-agnostic: a Conv2D layer contributes its
+//! im2col weight matrix (`[cin·kh·kw][cout]`, DESIGN.md §12), so one
+//! [`FlatPlan`] header per *kernel weight* is shared across every
+//! output pixel of every image — the header count scales with the
+//! kernel tensor, never with the spatial extent it slides over.
 
 use super::schedule::{MulOp, MulPlan};
 

@@ -6,11 +6,13 @@
 //! energy); `ablation` covers the design choices the paper fixes
 //! (CSD vs binary recoding, max coalesced shift, Stage-2 bypass);
 //! `precision` sweeps per-layer precision schedules through the serving
-//! engine (the run-time repacking story, DESIGN.md §10).
+//! engine (the run-time repacking story, DESIGN.md §10); `conv` runs
+//! the same sweep on the im2col CNN serving path (DESIGN.md §12).
 
 use crate::anyhow;
 
 pub mod ablation;
+pub mod conv;
 pub mod fig10;
 pub mod fig6;
 pub mod fig7;
@@ -29,6 +31,7 @@ pub fn run(target: &str) -> anyhow::Result<()> {
         "summary" => summary::run(),
         "ablation" => ablation::run(),
         "precision" => precision::run(),
+        "conv" => conv::run(),
         "all" => {
             fig6::run()?;
             fig7::run()?;
@@ -37,10 +40,12 @@ pub fn run(target: &str) -> anyhow::Result<()> {
             fig10::run()?;
             summary::run()?;
             ablation::run()?;
-            precision::run()
+            precision::run()?;
+            conv::run()
         }
         other => anyhow::bail!(
-            "unknown eval target `{other}` (fig6..fig10, summary, ablation, precision, all)"
+            "unknown eval target `{other}` (fig6..fig10, summary, ablation, \
+             precision, conv, all)"
         ),
     }
 }

@@ -13,7 +13,7 @@
 
 use crate::anyhow;
 use crate::coordinator::cost::CostTable;
-use crate::coordinator::engine::PackedMlpEngine;
+use crate::coordinator::engine::PackedEngine;
 use crate::coordinator::model::CompiledModel;
 use crate::energy::report::table;
 use crate::nn::exec::mlp_forward_row_mixed;
@@ -89,7 +89,7 @@ pub fn rows(cost: &CostTable) -> anyhow::Result<Vec<SweepRow>> {
     let mut out = vec![];
     for (name, sched) in schedules() {
         let model = CompiledModel::compile_scheduled(layers.clone(), sched.clone())?;
-        let engine = PackedMlpEngine::new(model);
+        let engine = PackedEngine::new(model);
         let batch: Vec<Vec<i64>> = (0..BATCH)
             .map(|_| (0..layers[0].k).map(|_| rng.q_raw(sched[0].in_bits)).collect())
             .collect();

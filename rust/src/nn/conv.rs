@@ -1,0 +1,380 @@
+//! Quantized Conv2D layers and the im2col lowering (DESIGN.md §12).
+//!
+//! A convolution is served on the same packed matmul hot path as a
+//! dense layer: each output pixel of each image is one *patch row* of
+//! the im2col matrix (`patch_len = cin·kh·kw` activations), and the
+//! kernel tensor is the `[patch_len][cout]` weight matrix — so the CSD
+//! multiply plan of a kernel weight is compiled **once** and shared
+//! across every output pixel of every image, exactly the paper's "one
+//! multiplier value, several multiplicands" pattern with the patch
+//! dimension folded into the packed batch dimension.
+//!
+//! [`conv_forward_row`] is the scalar oracle for one image: the serving
+//! engine must match it bit-exactly at every layer boundary (the conv
+//! integration tests randomize shapes, strides and precision schedules
+//! to enforce it). [`LayerOp`] is the layer algebra the compiled model
+//! executes — interleaved conv + dense stacks.
+
+use crate::anyhow;
+use crate::bits::fixed::sign_extend;
+use crate::pipeline::stage1::mul_scalar;
+
+use super::weights::{LayerPrecision, QuantLayer};
+
+/// The spatial geometry of one Conv2D layer. Tensor layouts are
+/// channel-major and flattened: inputs `[cin][h][w]`, outputs
+/// `[cout][out_h][out_w]`, and the im2col patch index runs
+/// `k = (ci·kh + ky)·kw + kx` — the same order the weight matrix rows
+/// use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvShape {
+    /// Input channels.
+    pub cin: usize,
+    /// Input height / width (pixels).
+    pub h: usize,
+    pub w: usize,
+    /// Output channels (kernel count).
+    pub cout: usize,
+    /// Kernel height / width.
+    pub kh: usize,
+    pub kw: usize,
+    /// Stride (both axes).
+    pub stride: usize,
+    /// Zero padding (both axes, both sides).
+    pub pad: usize,
+}
+
+impl ConvShape {
+    pub fn out_h(&self) -> usize {
+        (self.h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// Output pixels per image — the im2col patch rows one image
+    /// expands into.
+    pub fn out_pixels(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+
+    /// im2col row width: `cin·kh·kw` (the lowered matmul's `k`).
+    pub fn patch_len(&self) -> usize {
+        self.cin * self.kh * self.kw
+    }
+
+    /// Flattened input feature length (`cin·h·w`).
+    pub fn in_len(&self) -> usize {
+        self.cin * self.h * self.w
+    }
+
+    /// Flattened output feature length (`cout·out_h·out_w`).
+    pub fn out_len(&self) -> usize {
+        self.cout * self.out_pixels()
+    }
+
+    /// Structural validity: nonzero dims, stride ≥ 1, and a kernel that
+    /// fits the padded input with at least one output pixel.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.cin > 0 && self.h > 0 && self.w > 0 && self.cout > 0,
+            "degenerate conv tensor {self:?}"
+        );
+        anyhow::ensure!(
+            self.kh > 0 && self.kw > 0 && self.stride > 0,
+            "degenerate conv kernel {self:?}"
+        );
+        anyhow::ensure!(
+            self.kh <= self.h + 2 * self.pad && self.kw <= self.w + 2 * self.pad,
+            "kernel {}x{} larger than padded input {}x{}",
+            self.kh,
+            self.kw,
+            self.h + 2 * self.pad,
+            self.w + 2 * self.pad
+        );
+        anyhow::ensure!(
+            self.pad < self.kh && self.pad < self.kw,
+            "padding {} would produce all-zero patches (kernel {}x{})",
+            self.pad,
+            self.kh,
+            self.kw
+        );
+        Ok(())
+    }
+
+    /// The flattened input index a patch element reads, or `None` when
+    /// the element falls in the zero padding. `k` is the im2col patch
+    /// index, `(oy, ox)` the output pixel.
+    #[inline]
+    pub fn src_index(&self, k: usize, oy: usize, ox: usize) -> Option<usize> {
+        let kx = k % self.kw;
+        let ky = (k / self.kw) % self.kh;
+        let ci = k / (self.kw * self.kh);
+        let iy = (oy * self.stride + ky) as isize - self.pad as isize;
+        let ix = (ox * self.stride + kx) as isize - self.pad as isize;
+        if iy < 0 || iy >= self.h as isize || ix < 0 || ix >= self.w as isize {
+            return None;
+        }
+        Some(ci * self.h * self.w + iy as usize * self.w + ix as usize)
+    }
+}
+
+impl std::fmt::Display for ConvShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}x{}x{} -> {}ch {}x{} s{} p{}",
+            self.cin, self.h, self.w, self.cout, self.kh, self.kw, self.stride, self.pad
+        )
+    }
+}
+
+/// One quantized Conv2D layer: the kernel tensor stored as its im2col
+/// weight matrix (`[patch_len][cout]` raws, row `k = (ci·kh + ky)·kw +
+/// kx`) plus the spatial geometry.
+#[derive(Debug, Clone)]
+pub struct ConvLayer {
+    /// The lowered `[patch_len][cout]` weight matrix — CSD plans, weight
+    /// width and the flat arena all come from here, unchanged.
+    pub w: QuantLayer,
+    pub shape: ConvShape,
+}
+
+impl ConvLayer {
+    /// Build from the lowered weight matrix; shape and matrix dims must
+    /// agree.
+    pub fn new(w: QuantLayer, shape: ConvShape) -> anyhow::Result<ConvLayer> {
+        shape.validate()?;
+        anyhow::ensure!(
+            w.k == shape.patch_len() && w.n == shape.cout,
+            "conv weight matrix {}x{} does not match shape {shape} \
+             (want {}x{})",
+            w.k,
+            w.n,
+            shape.patch_len(),
+            shape.cout
+        );
+        Ok(ConvLayer { w, shape })
+    }
+
+    /// Quantize a float kernel tensor `[cout][cin][kh][kw]` at `bits`.
+    pub fn quantize(
+        kernel: &[Vec<Vec<Vec<f64>>>],
+        shape: ConvShape,
+        bits: u32,
+    ) -> anyhow::Result<ConvLayer> {
+        shape.validate()?;
+        anyhow::ensure!(kernel.len() == shape.cout, "kernel cout mismatch");
+        let mut rows = vec![vec![0i64; shape.cout]; shape.patch_len()];
+        for (co, ker) in kernel.iter().enumerate() {
+            anyhow::ensure!(ker.len() == shape.cin, "kernel cin mismatch");
+            for (ci, plane) in ker.iter().enumerate() {
+                anyhow::ensure!(plane.len() == shape.kh, "kernel kh mismatch");
+                for (ky, row) in plane.iter().enumerate() {
+                    anyhow::ensure!(row.len() == shape.kw, "kernel kw mismatch");
+                    for (kx, &v) in row.iter().enumerate() {
+                        let k = (ci * shape.kh + ky) * shape.kw + kx;
+                        rows[k][co] = crate::bits::fixed::to_q(v, bits);
+                    }
+                }
+            }
+        }
+        ConvLayer::new(QuantLayer::new(rows, bits), shape)
+    }
+}
+
+/// One layer of a servable stack: a dense matmul or a Conv2D lowered to
+/// one. Both execute on the same packed matmul core; conv layers fold
+/// their output pixels into the packed batch dimension.
+#[derive(Debug, Clone)]
+pub enum LayerOp {
+    Dense(QuantLayer),
+    Conv(ConvLayer),
+}
+
+impl LayerOp {
+    /// The layer's matmul view — the weight matrix the CSD plans and
+    /// the flat arena are compiled from (`[k][n]`; for conv,
+    /// `k = patch_len`, `n = cout`).
+    #[inline]
+    pub fn weights(&self) -> &QuantLayer {
+        match self {
+            LayerOp::Dense(q) => q,
+            LayerOp::Conv(c) => &c.w,
+        }
+    }
+
+    /// Flattened input feature length (dense: `k`; conv: `cin·h·w`).
+    pub fn in_len(&self) -> usize {
+        match self {
+            LayerOp::Dense(q) => q.k,
+            LayerOp::Conv(c) => c.shape.in_len(),
+        }
+    }
+
+    /// Flattened output feature length (dense: `n`; conv:
+    /// `cout·out_h·out_w`).
+    pub fn out_len(&self) -> usize {
+        match self {
+            LayerOp::Dense(q) => q.n,
+            LayerOp::Conv(c) => c.shape.out_len(),
+        }
+    }
+
+    /// Packed rows one image contributes at this layer: 1 for dense,
+    /// `out_h·out_w` im2col patch rows for conv.
+    #[inline]
+    pub fn patch_rows(&self) -> usize {
+        match self {
+            LayerOp::Dense(_) => 1,
+            LayerOp::Conv(c) => c.shape.out_pixels(),
+        }
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self, LayerOp::Conv(_))
+    }
+}
+
+/// Scalar Conv2D oracle for one image: `x_q` is the flattened
+/// `[cin][h][w]` input at `Q1.(in_bits-1)`; returns the flattened
+/// `[cout][out_h][out_w]` pre-activation accumulators at
+/// `Q1.(acc_bits-1)`. Semantics per output value are exactly one dense
+/// layer applied to the im2col patch row: products at `in_bits` via the
+/// Soft SIMD shift-add multiply, widened `<< (acc−in)`, summed with
+/// wrapping `acc_bits` adds — padding reads as the zero activation.
+pub fn conv_forward_row(x_q: &[i64], layer: &ConvLayer, p: LayerPrecision) -> Vec<i64> {
+    let s = &layer.shape;
+    assert_eq!(x_q.len(), s.in_len(), "conv input length");
+    assert!(p.acc_bits >= p.in_bits, "conv precision {p}");
+    let (oh, ow) = (s.out_h(), s.out_w());
+    let mask = (1u64 << p.acc_bits) - 1;
+    let mut out = vec![0i64; s.out_len()];
+    for co in 0..s.cout {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0i64;
+                for k in 0..s.patch_len() {
+                    let xv = s.src_index(k, oy, ox).map_or(0, |i| x_q[i]);
+                    let prod = mul_scalar(xv, layer.w.w_raw[k][co], p.in_bits, layer.w.bits);
+                    acc += prod << (p.acc_bits - p.in_bits);
+                }
+                out[(co * oh + oy) * ow + ox] = sign_extend(acc as u64 & mask, p.acc_bits);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape_3x3() -> ConvShape {
+        ConvShape { cin: 1, h: 4, w: 4, cout: 1, kh: 3, kw: 3, stride: 1, pad: 1 }
+    }
+
+    #[test]
+    fn shape_arithmetic() {
+        let s = shape_3x3();
+        assert_eq!((s.out_h(), s.out_w()), (4, 4));
+        assert_eq!(s.patch_len(), 9);
+        assert_eq!(s.in_len(), 16);
+        assert_eq!(s.out_len(), 16);
+        let strided = ConvShape { stride: 2, ..s };
+        assert_eq!((strided.out_h(), strided.out_w()), (2, 2));
+        let valid = ConvShape { pad: 0, ..s };
+        assert_eq!((valid.out_h(), valid.out_w()), (2, 2));
+    }
+
+    #[test]
+    fn shape_validation_rejects_degenerates() {
+        assert!(shape_3x3().validate().is_ok());
+        assert!(ConvShape { stride: 0, ..shape_3x3() }.validate().is_err());
+        assert!(ConvShape { kh: 7, pad: 0, ..shape_3x3() }.validate().is_err());
+        assert!(ConvShape { cout: 0, ..shape_3x3() }.validate().is_err());
+        assert!(ConvShape { pad: 3, ..shape_3x3() }.validate().is_err());
+    }
+
+    #[test]
+    fn src_index_handles_padding_and_stride() {
+        let s = shape_3x3();
+        // Output pixel (0,0), patch element (ky=0,kx=0) reads the
+        // padding ring; the center tap (ky=1,kx=1) reads input (0,0).
+        assert_eq!(s.src_index(0, 0, 0), None);
+        assert_eq!(s.src_index(4, 0, 0), Some(0));
+        // Bottom-right corner, bottom-right tap: padding again.
+        assert_eq!(s.src_index(8, 3, 3), None);
+        // ky=1,kx=1 at (3,3) reads input (3,3) = index 15.
+        assert_eq!(s.src_index(4, 3, 3), Some(15));
+    }
+
+    #[test]
+    fn identity_kernel_convolves_to_relocated_input() {
+        // A center-tap 0.5 kernel with pad 1 reproduces the input
+        // halved: out(y,x) = mul(in(y,x), 64@Q1.7).
+        let mut w = vec![vec![0i64]; 9];
+        w[4][0] = 64; // center tap 0.5 @ Q1.7
+        let layer = ConvLayer::new(QuantLayer::new(w, 8), shape_3x3()).unwrap();
+        let x: Vec<i64> = (0..16).map(|i| i as i64 * 8 - 60).collect();
+        let out = conv_forward_row(&x, &layer, LayerPrecision::new(8, 16));
+        for (i, (&o, &xi)) in out.iter().zip(&x).enumerate() {
+            let want = mul_scalar(xi, 64, 8, 8) << 8;
+            assert_eq!(o, want, "pixel {i}");
+        }
+    }
+
+    #[test]
+    fn conv_oracle_matches_im2col_dense_oracle() {
+        // The lowering identity: conv(x) == dense(im2col patch row) for
+        // every output pixel, including stride 2 and zero padding.
+        use crate::nn::exec::mlp_forward_row_mixed;
+        use crate::workload::synth::XorShift64;
+        let mut rng = XorShift64::new(0xC0211);
+        let shape =
+            ConvShape { cin: 2, h: 5, w: 4, cout: 3, kh: 3, kw: 2, stride: 2, pad: 1 };
+        let w = QuantLayer::new(
+            (0..shape.patch_len())
+                .map(|_| (0..shape.cout).map(|_| rng.q_raw(8)).collect())
+                .collect(),
+            8,
+        );
+        let layer = ConvLayer::new(w.clone(), shape).unwrap();
+        let x: Vec<i64> = (0..shape.in_len()).map(|_| rng.q_raw(8)).collect();
+        let p = LayerPrecision::new(8, 16);
+        let got = conv_forward_row(&x, &layer, p);
+        let (oh, ow) = (shape.out_h(), shape.out_w());
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let patch: Vec<i64> = (0..shape.patch_len())
+                    .map(|k| shape.src_index(k, oy, ox).map_or(0, |i| x[i]))
+                    .collect();
+                let want = mlp_forward_row_mixed(&patch, &[w.clone()], &[p]);
+                for co in 0..shape.cout {
+                    assert_eq!(got[(co * oh + oy) * ow + ox], want[co], "({oy},{ox},{co})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_layer_rejects_mismatched_weight_matrix() {
+        let w = QuantLayer::new(vec![vec![1, 2]; 4], 8); // 4x2, want 9x1
+        assert!(ConvLayer::new(w, shape_3x3()).is_err());
+    }
+
+    #[test]
+    fn quantize_lowering_orders_rows_ci_ky_kx() {
+        // One 1-channel 2x2 kernel, distinct values per tap.
+        let shape =
+            ConvShape { cin: 1, h: 3, w: 3, cout: 1, kh: 2, kw: 2, stride: 1, pad: 0 };
+        let kernel = vec![vec![vec![vec![0.5, -0.25], vec![0.125, 0.75]]]];
+        let layer = ConvLayer::quantize(&kernel, shape, 8).unwrap();
+        assert_eq!(
+            layer.w.w_raw,
+            vec![vec![64], vec![-32], vec![16], vec![96]],
+            "rows must run (ky, kx) within a channel"
+        );
+    }
+}

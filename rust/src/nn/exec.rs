@@ -15,6 +15,7 @@ use crate::bits::format::SimdFormat;
 use crate::pipeline::stage1::{mul_scalar_plan, mul_scalar};
 use crate::pipeline::stage2::{conversion_chain, convert_subword};
 
+use super::conv::{conv_forward_row, LayerOp};
 use super::weights::{uniform_schedule, LayerPrecision, QuantLayer};
 
 /// The inter-layer activation unit: ReLU at the producing layer's
@@ -28,6 +29,26 @@ pub fn requantize_activation(v: i64, from_acc: SimdFormat, to_in: SimdFormat) ->
         x = convert_subword(x, f, t);
     }
     x
+}
+
+/// One dense layer's pre-activation accumulators for one input row
+/// (the shared inner step of every scalar oracle): products at
+/// `p.in_bits` via the Soft SIMD shift-add multiply, widened
+/// `<< (acc−in)`, summed with wrapping `acc_bits` adds.
+pub fn dense_layer_row(h: &[i64], layer: &QuantLayer, p: LayerPrecision) -> Vec<i64> {
+    assert_eq!(h.len(), layer.k, "dense input width");
+    assert!(p.acc_bits >= p.in_bits, "dense precision {p}");
+    let mask = (1u64 << p.acc_bits) - 1;
+    let mut out = vec![0i64; layer.n];
+    for j in 0..layer.n {
+        let mut acc = 0i64;
+        for i in 0..layer.k {
+            let prod = mul_scalar(h[i], layer.w_raw[i][j], p.in_bits, layer.bits);
+            acc += prod << (p.acc_bits - p.in_bits);
+        }
+        out[j] = sign_extend(acc as u64 & mask, p.acc_bits);
+    }
+    out
 }
 
 /// Forward one input row through a mixed-precision layer stack: layer
@@ -44,17 +65,42 @@ pub fn mlp_forward_row_mixed(
     let mut h: Vec<i64> = x_q.to_vec();
     for (li, (layer, p)) in layers.iter().zip(schedule).enumerate() {
         assert_eq!(h.len(), layer.k, "layer {li} input width");
-        assert!(p.acc_bits >= p.in_bits, "layer {li} precision {p}");
-        let mut out = vec![0i64; layer.n];
-        for j in 0..layer.n {
-            let mut acc = 0i64;
-            for i in 0..layer.k {
-                let prod = mul_scalar(h[i], layer.w_raw[i][j], p.in_bits, layer.bits);
-                acc += prod << (p.acc_bits - p.in_bits);
-            }
-            out[j] = sign_extend(acc as u64 & ((1u64 << p.acc_bits) - 1), p.acc_bits);
-        }
+        let out = dense_layer_row(&h, layer, *p);
         if li + 1 < layers.len() {
+            let next_in = schedule[li + 1].in_fmt();
+            h = out
+                .iter()
+                .map(|&v| requantize_activation(v, p.acc_fmt(), next_in))
+                .collect();
+        } else {
+            return out;
+        }
+    }
+    unreachable!("the loop returns on the last layer")
+}
+
+/// Forward one input row through an interleaved conv + dense stack —
+/// the scalar oracle for the conv-capable serving engine (DESIGN.md
+/// §12). Layer `li` consumes its flattened input features at
+/// `schedule[li].in_bits` and produces flattened pre-activation
+/// accumulators at `schedule[li].acc_bits`; hidden layers apply ReLU
+/// then the Stage-2 conversion chain into the next layer's activation
+/// format, identically for conv and dense.
+pub fn stack_forward_row(
+    x_q: &[i64],
+    ops: &[LayerOp],
+    schedule: &[LayerPrecision],
+) -> Vec<i64> {
+    assert!(!ops.is_empty(), "empty layer stack");
+    assert_eq!(ops.len(), schedule.len(), "one precision per layer");
+    let mut h: Vec<i64> = x_q.to_vec();
+    for (li, (op, p)) in ops.iter().zip(schedule).enumerate() {
+        assert_eq!(h.len(), op.in_len(), "layer {li} input length");
+        let out = match op {
+            LayerOp::Dense(layer) => dense_layer_row(&h, layer, *p),
+            LayerOp::Conv(layer) => conv_forward_row(&h, layer, *p),
+        };
+        if li + 1 < ops.len() {
             let next_in = schedule[li + 1].in_fmt();
             h = out
                 .iter()
@@ -128,14 +174,7 @@ pub fn mlp_forward_row_planned(
 pub fn precompute_plans(
     layers: &[QuantLayer],
 ) -> Vec<Vec<Vec<crate::csd::schedule::MulPlan>>> {
-    layers
-        .iter()
-        .map(|l| {
-            (0..l.k)
-                .map(|i| (0..l.n).map(|j| l.plan(i, j)).collect())
-                .collect()
-        })
-        .collect()
+    layers.iter().map(QuantLayer::plans).collect()
 }
 
 /// Argmax over the first `classes` outputs (logit decision; first-max
@@ -246,5 +285,47 @@ mod tests {
     #[should_panic(expected = "empty layer stack")]
     fn forward_rejects_empty_layer_stack() {
         let _ = mlp_forward_row(&[1, 2], &[], 8, 16);
+    }
+
+    #[test]
+    fn stack_oracle_on_dense_ops_matches_mlp_oracle() {
+        let layers = tiny_layers();
+        let ops: Vec<crate::nn::conv::LayerOp> = layers
+            .iter()
+            .cloned()
+            .map(crate::nn::conv::LayerOp::Dense)
+            .collect();
+        let sched = uniform_schedule(8, 16, layers.len());
+        for x0 in [-128i64, 0, 99] {
+            let x = vec![x0, 64];
+            assert_eq!(
+                stack_forward_row(&x, &ops, &sched),
+                mlp_forward_row_mixed(&x, &layers, &sched)
+            );
+        }
+    }
+
+    #[test]
+    fn stack_oracle_runs_conv_then_dense() {
+        use crate::nn::conv::{ConvLayer, ConvShape, LayerOp};
+        // conv 1x2x2 → 1ch 1x1 (2x2 kernel, no pad) then dense 1 → 1:
+        // the conv output feeds the dense head through ReLU + requant.
+        let shape =
+            ConvShape { cin: 1, h: 2, w: 2, cout: 1, kh: 2, kw: 2, stride: 1, pad: 0 };
+        let conv = ConvLayer::new(
+            QuantLayer::new(vec![vec![64], vec![0], vec![0], vec![0]], 8),
+            shape,
+        )
+        .unwrap();
+        let ops = vec![
+            LayerOp::Conv(conv),
+            LayerOp::Dense(QuantLayer::new(vec![vec![127]], 8)),
+        ];
+        let sched = vec![LayerPrecision::new(8, 16), LayerPrecision::new(8, 16)];
+        let x = vec![100i64, 1, 2, 3];
+        // Conv: mul(100, 64) << 8 = 50 << 8. Boundary 16→8: ReLU then
+        // truncate → 50. Dense: mul(50, 127) << 8.
+        let out = stack_forward_row(&x, &ops, &sched);
+        assert_eq!(out, vec![mul_scalar(50, 127, 8, 8) << 8]);
     }
 }

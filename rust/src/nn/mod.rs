@@ -1,13 +1,19 @@
 //! Quantized neural-network execution on the Soft SIMD semantics.
 //!
-//! `weights` loads the AOT-baked model; `exec` provides the scalar-int
-//! reference forward pass (the semantic pivot shared with
-//! `python/compile/model.py::mlp_forward_int`) and the packed execution
-//! path that runs layers on the simulated pipeline through the
-//! coordinator.
+//! `weights` loads the AOT-baked model; `conv` adds Conv2D layers and
+//! their im2col lowering onto the same packed matmul core (DESIGN.md
+//! §12); `exec` provides the scalar-int reference forward passes (the
+//! semantic pivot shared with
+//! `python/compile/model.py::mlp_forward_int`) that the packed serving
+//! engine must match bit-exactly.
 
+pub mod conv;
 pub mod exec;
 pub mod weights;
 
-pub use exec::{mlp_forward_batch, mlp_forward_row, mlp_forward_row_mixed, requantize_activation};
+pub use conv::{conv_forward_row, ConvLayer, ConvShape, LayerOp};
+pub use exec::{
+    mlp_forward_batch, mlp_forward_row, mlp_forward_row_mixed, requantize_activation,
+    stack_forward_row,
+};
 pub use weights::{load_weight_file, quantize_stack, uniform_schedule, LayerPrecision, QuantLayer};

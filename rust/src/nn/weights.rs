@@ -108,6 +108,14 @@ impl QuantLayer {
         schedule(self.w_raw[i][j], self.bits)
     }
 
+    /// Every weight's multiply plan, `[k][n]` — the one enumeration the
+    /// model compiler and the scalar planned path both build from.
+    pub fn plans(&self) -> Vec<Vec<MulPlan>> {
+        (0..self.k)
+            .map(|i| (0..self.n).map(|j| self.plan(i, j)).collect())
+            .collect()
+    }
+
     /// Mean Stage-1 cycles per weight (workload statistics for the
     /// energy model).
     pub fn mean_cycles(&self) -> f64 {

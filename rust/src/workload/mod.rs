@@ -1,5 +1,8 @@
-//! Synthetic workload generation (the paper's ML-at-the-edge context).
+//! Synthetic workload generation (the paper's ML-at-the-edge context):
+//! deterministic PRNG, labeled digit/image datasets, the synthetic CNN
+//! classification scenario of the conv serving path (DESIGN.md §12),
+//! and the Fig. 10 bitwidth-mix scenarios.
 
 pub mod synth;
 
-pub use synth::{Digits, LayerSpec, Scenario, XorShift64};
+pub use synth::{synth_cnn_stack, Digits, ImageSet, LayerSpec, Scenario, XorShift64};

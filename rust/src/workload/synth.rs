@@ -92,6 +92,98 @@ impl Digits {
     }
 }
 
+/// A labeled synthetic image-classification workload: per-class
+/// template images of `cin` channels × `h`×`w` pixels, sampled with
+/// additive noise — [`Digits`] generalized to multi-channel spatial
+/// tensors, the input side of the Conv2D serving path (DESIGN.md §12).
+/// Rows are flattened `[cin][h][w]`, the layout `nn::conv` consumes.
+pub struct ImageSet {
+    /// `[classes][cin·h·w]` float templates in [−1, 1).
+    pub templates: Vec<Vec<f64>>,
+    pub classes: usize,
+    pub cin: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl ImageSet {
+    pub fn new(classes: usize, cin: usize, h: usize, w: usize, seed: u64) -> Self {
+        let mut rng = XorShift64::new(seed);
+        let pixels = cin * h * w;
+        let templates = (0..classes)
+            .map(|_| (0..pixels).map(|_| rng.uniform() * 2.0 - 1.0).collect())
+            .collect();
+        ImageSet { templates, classes, cin, h, w }
+    }
+
+    /// The standard conv workload: 10 classes of 1×8×8 images — the
+    /// [`Digits`] geometry reinterpreted as single-channel images (same
+    /// seed, so the templates are the familiar glyphs).
+    pub fn standard() -> Self {
+        ImageSet::new(10, 1, 8, 8, Digits::TEMPLATE_SEED)
+    }
+
+    /// Flattened image length (`cin·h·w`), the serving row width.
+    pub fn pixels(&self) -> usize {
+        self.cin * self.h * self.w
+    }
+
+    /// Sample `n` noisy examples quantized to `Q1.(in_bits-1)`:
+    /// returns (flattened rows, labels). The quantization width is a
+    /// parameter so low-precision-first conv schedules can be fed at
+    /// their native activation format.
+    pub fn sample(
+        &self,
+        n: usize,
+        noise: f64,
+        seed: u64,
+        in_bits: u32,
+    ) -> (Vec<Vec<i64>>, Vec<usize>) {
+        let mut rng = XorShift64::new(seed);
+        let half = (1i64 << (in_bits - 1)) as f64;
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = (rng.next_u64() % self.classes as u64) as usize;
+            ys.push(c);
+            let row: Vec<i64> = (0..self.pixels())
+                .map(|p| {
+                    let v = self.templates[c][p] + (rng.uniform() * 2.0 - 1.0) * noise;
+                    to_q(v.clamp(-1.0, 1.0 - 1.0 / half), in_bits)
+                })
+                .collect();
+            xs.push(row);
+        }
+        (xs, ys)
+    }
+}
+
+/// The standard synthetic CNN over [`ImageSet::standard`] images —
+/// the image-classification scenario the conv serving path is
+/// exercised on (eval sweep, engine bench, the `cnn_serve` example):
+/// conv 1×8×8 → 4ch 3×3 s1 p1 (64 patch rows per image), conv 4ch →
+/// 4ch 3×3 s2 p1 (16 patch rows), dense 64 → 10 logits. Weights are
+/// seeded from the repo-wide xorshift at `w_bits`.
+pub fn synth_cnn_stack(seed: u64, w_bits: u32) -> Vec<crate::nn::conv::LayerOp> {
+    use crate::nn::conv::{ConvLayer, ConvShape, LayerOp};
+    use crate::nn::weights::QuantLayer;
+    let mut rng = XorShift64::new(seed);
+    let mut mk = |k: usize, n: usize| {
+        QuantLayer::new(
+            (0..k)
+                .map(|_| (0..n).map(|_| rng.q_raw(w_bits)).collect())
+                .collect(),
+            w_bits,
+        )
+    };
+    let s1 = ConvShape { cin: 1, h: 8, w: 8, cout: 4, kh: 3, kw: 3, stride: 1, pad: 1 };
+    let s2 = ConvShape { cin: 4, h: 8, w: 8, cout: 4, kh: 3, kw: 3, stride: 2, pad: 1 };
+    let c1 = ConvLayer::new(mk(s1.patch_len(), s1.cout), s1).expect("valid shape");
+    let c2 = ConvLayer::new(mk(s2.patch_len(), s2.cout), s2).expect("valid shape");
+    let head = mk(s2.out_len(), 10);
+    vec![LayerOp::Conv(c1), LayerOp::Conv(c2), LayerOp::Dense(head)]
+}
+
 /// A layer of a quantization scenario (Fig. 10 workloads): how many
 /// multiplications at which operand widths.
 #[derive(Debug, Clone, Copy)]
@@ -205,6 +297,38 @@ mod tests {
         for &y in &ys {
             assert!(y < 10);
         }
+    }
+
+    #[test]
+    fn image_set_samples_flattened_quantized_rows() {
+        let im = ImageSet::standard();
+        assert_eq!(im.pixels(), 64);
+        for in_bits in [4u32, 8] {
+            let half = 1i64 << (in_bits - 1);
+            let (xs, ys) = im.sample(6, 0.3, 0xC4A5, in_bits);
+            assert_eq!(xs.len(), 6);
+            for row in &xs {
+                assert_eq!(row.len(), 64);
+                assert!(row.iter().all(|&v| (-half..half).contains(&v)), "{in_bits}b");
+            }
+            assert!(ys.iter().all(|&y| y < 10));
+        }
+        // Single-channel 8×8 templates match the Digits glyphs exactly.
+        let d = Digits::standard();
+        assert_eq!(im.templates, d.templates);
+    }
+
+    #[test]
+    fn synth_cnn_stack_chains_and_ends_in_ten_logits() {
+        let stack = synth_cnn_stack(0xC9A17, 8);
+        assert_eq!(stack.len(), 3);
+        assert_eq!(stack[0].in_len(), 64);
+        for w in stack.windows(2) {
+            assert_eq!(w[0].out_len(), w[1].in_len(), "flattened chaining");
+        }
+        assert_eq!(stack[2].out_len(), 10);
+        assert_eq!(stack[0].patch_rows(), 64, "8×8 output pixels per image");
+        assert_eq!(stack[1].patch_rows(), 16, "stride-2 4×4 output pixels");
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //!
 //! [`EngineScratch`]: softsimd::coordinator::engine::EngineScratch
 
-use softsimd::coordinator::engine::{EngineScratch, PackedMlpEngine};
+use softsimd::coordinator::engine::{EngineScratch, PackedEngine};
 use softsimd::coordinator::model::CompiledModel;
 use softsimd::nn::weights::{LayerPrecision, QuantLayer};
 use softsimd::testutil::CountingAlloc;
@@ -40,8 +40,24 @@ fn assert_steady_state_alloc_free(
     batch_rows: usize,
     rng: &mut XorShift64,
 ) {
-    let model = CompiledModel::compile_scheduled(layers, sched.clone()).unwrap();
-    let engine = PackedMlpEngine::new(model);
+    assert_steady_state_alloc_free_stack(
+        name,
+        layers.into_iter().map(softsimd::nn::conv::LayerOp::Dense).collect(),
+        sched,
+        batch_rows,
+        rng,
+    )
+}
+
+fn assert_steady_state_alloc_free_stack(
+    name: &str,
+    ops: Vec<softsimd::nn::conv::LayerOp>,
+    sched: Vec<LayerPrecision>,
+    batch_rows: usize,
+    rng: &mut XorShift64,
+) {
+    let model = CompiledModel::compile_stack(ops, sched.clone()).unwrap();
+    let engine = PackedEngine::new(model);
     let k0 = engine.model().input_width();
     let batch: Vec<Vec<i64>> = (0..batch_rows)
         .map(|_| (0..k0).map(|_| rng.q_raw(sched[0].in_bits)).collect())
@@ -102,6 +118,38 @@ fn forward_batch_is_allocation_free_after_warmup() {
         &mut rng2,
     );
 
+    // Conv schedule (DESIGN.md §12): the synthetic CNN — two im2col
+    // gather stages (64 and 16 patch rows per image), two scalar-staged
+    // boundaries through `fmap`, and the conv untranspose — must be
+    // just as allocation-free once warmed as the dense paths above.
+    let mut rng_c = XorShift64::new(0xA110F);
+    assert_steady_state_alloc_free_stack(
+        "conv-cnn-8-8-8",
+        softsimd::workload::synth::synth_cnn_stack(0xA1110, 8),
+        vec![
+            LayerPrecision::new(8, 16),
+            LayerPrecision::new(8, 16),
+            LayerPrecision::new(8, 16),
+        ],
+        9,
+        &mut rng_c,
+    );
+    // And a mixed-precision conv schedule: 4-bit first conv (doubling),
+    // 6-bit second conv with a narrowing 8→6 boundary, 8-bit dense head
+    // behind a 12→8 boundary.
+    let mut rng_c2 = XorShift64::new(0xA1111);
+    assert_steady_state_alloc_free_stack(
+        "conv-cnn-4-6-8",
+        softsimd::workload::synth::synth_cnn_stack(0xA1112, 8),
+        vec![
+            LayerPrecision::new(4, 8),
+            LayerPrecision::new(6, 12),
+            LayerPrecision::new(8, 16),
+        ],
+        9,
+        &mut rng_c2,
+    );
+
     // Varying batch sizes after warmup must also be allocation-free —
     // including shrink-then-grow, the normal load-dependent serving
     // pattern: a smaller batch parks its surplus warmed output rows in
@@ -110,7 +158,7 @@ fn forward_batch_is_allocation_free_after_warmup() {
     let layers = random_layers(&mut rng3, &[10, 6, 4]);
     let sched = vec![LayerPrecision::new(8, 16), LayerPrecision::new(8, 16)];
     let model = CompiledModel::compile_scheduled(layers, sched).unwrap();
-    let engine = PackedMlpEngine::new(model);
+    let engine = PackedEngine::new(model);
     let big: Vec<Vec<i64>> = (0..24)
         .map(|_| (0..10).map(|_| rng3.q_raw(8)).collect())
         .collect();

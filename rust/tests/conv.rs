@@ -1,0 +1,230 @@
+//! Conv serving integration properties (DESIGN.md §12), hand-rolled
+//! generators (proptest is unavailable offline).
+//!
+//! The acceptance invariant: the packed engine's conv forward is
+//! **bit-exact** against the scalar oracles over randomized shapes,
+//! strides, paddings, layer interleavings and precision schedules —
+//! `nn::conv::conv_forward_row` for a single conv layer and
+//! `nn::exec::stack_forward_row` for whole interleaved stacks.
+
+use softsimd::bits::format::FORMATS;
+use softsimd::coordinator::engine::{EngineScratch, PackedEngine};
+use softsimd::coordinator::model::CompiledModel;
+use softsimd::nn::conv::{conv_forward_row, ConvLayer, ConvShape, LayerOp};
+use softsimd::nn::exec::stack_forward_row;
+use softsimd::nn::weights::LayerPrecision;
+use softsimd::nn::weights::QuantLayer;
+use softsimd::workload::synth::XorShift64;
+
+fn random_shape(rng: &mut XorShift64, cin: usize) -> ConvShape {
+    loop {
+        let h = 3 + (rng.next_u64() % 4) as usize;
+        let w = 3 + (rng.next_u64() % 4) as usize;
+        let kh = 1 + (rng.next_u64() % 3) as usize;
+        let kw = 1 + (rng.next_u64() % 3) as usize;
+        let stride = 1 + (rng.next_u64() % 2) as usize;
+        let pad = (rng.next_u64() % kh.min(kw) as u64) as usize;
+        let shape = ConvShape {
+            cin,
+            h,
+            w,
+            cout: 1 + (rng.next_u64() % 3) as usize,
+            kh,
+            kw,
+            stride,
+            pad,
+        };
+        if shape.validate().is_ok() {
+            return shape;
+        }
+    }
+}
+
+fn random_conv(rng: &mut XorShift64, cin: usize, w_bits: u32) -> ConvLayer {
+    let shape = random_shape(rng, cin);
+    let w = QuantLayer::new(
+        (0..shape.patch_len())
+            .map(|_| (0..shape.cout).map(|_| rng.q_raw(w_bits)).collect())
+            .collect(),
+        w_bits,
+    );
+    ConvLayer::new(w, shape).unwrap()
+}
+
+fn random_precision(rng: &mut XorShift64) -> LayerPrecision {
+    let in_bits = FORMATS[(rng.next_u64() % FORMATS.len() as u64) as usize];
+    let wider: Vec<u32> = FORMATS.iter().copied().filter(|&b| b >= in_bits).collect();
+    LayerPrecision::new(in_bits, wider[(rng.next_u64() % wider.len() as u64) as usize])
+}
+
+#[test]
+fn prop_single_conv_layer_is_bit_exact_over_random_shapes_and_precisions() {
+    let mut rng = XorShift64::new(0xC2121);
+    let mut scratch = EngineScratch::new();
+    let mut out = Vec::new();
+    for case in 0..60 {
+        let w_bits = [4u32, 6, 8][(rng.next_u64() % 3) as usize];
+        let cin = 1 + (rng.next_u64() % 2) as usize;
+        let conv = random_conv(&mut rng, cin, w_bits);
+        let p = random_precision(&mut rng);
+        let shape = conv.shape;
+        let model = CompiledModel::compile_stack(
+            vec![LayerOp::Conv(conv.clone())],
+            vec![p],
+        )
+        .unwrap_or_else(|e| panic!("case {case}: compile failed: {e}"));
+        let engine = PackedEngine::new(model);
+        let batch_size = 1 + (rng.next_u64() % 9) as usize;
+        let batch: Vec<Vec<i64>> = (0..batch_size)
+            .map(|_| (0..shape.in_len()).map(|_| rng.q_raw(p.in_bits)).collect())
+            .collect();
+        let stats = engine.forward_batch_into(&batch, &mut scratch, &mut out);
+        assert_eq!(out.len(), batch_size, "case {case}: pad images dropped");
+        for (b, row) in batch.iter().enumerate() {
+            let want = conv_forward_row(row, &conv, p);
+            assert_eq!(
+                out[b], want,
+                "case {case}: shape {shape} precision {p} image {b}"
+            );
+        }
+        // Useful multiplies are the real images' patch rows only.
+        let nonzero = conv
+            .w
+            .w_raw
+            .iter()
+            .flatten()
+            .filter(|&&v| v != 0)
+            .count() as u64;
+        assert_eq!(
+            stats.subword_mults,
+            batch_size as u64 * shape.out_pixels() as u64 * nonzero,
+            "case {case}: conv useful-work billing"
+        );
+    }
+}
+
+#[test]
+fn prop_interleaved_stacks_are_bit_exact_over_random_schedules() {
+    // Random conv/dense interleavings (conv first, conv mid, conv last)
+    // under random precision schedules, one scratch reused across every
+    // case — the serving shape.
+    let mut rng = XorShift64::new(0xC2122);
+    let mut scratch = EngineScratch::new();
+    let mut out = Vec::new();
+    for case in 0..40 {
+        let w_bits = [4u32, 6, 8][(rng.next_u64() % 3) as usize];
+        let mut ops: Vec<LayerOp> = Vec::new();
+        let mut width; // flattened feature length flowing through
+        match rng.next_u64() % 3 {
+            // conv → dense
+            0 => {
+                let c = random_conv(&mut rng, 1 + (rng.next_u64() % 2) as usize, w_bits);
+                width = c.shape.out_len();
+                ops.push(LayerOp::Conv(c));
+                let n = 1 + (rng.next_u64() % 4) as usize;
+                ops.push(LayerOp::Dense(QuantLayer::new(
+                    (0..width)
+                        .map(|_| (0..n).map(|_| rng.q_raw(w_bits)).collect())
+                        .collect(),
+                    w_bits,
+                )));
+            }
+            // conv → conv → dense (channel-chained)
+            1 => {
+                let c1 = random_conv(&mut rng, 1, w_bits);
+                let cout1 = c1.shape.cout;
+                let (oh1, ow1) = (c1.shape.out_h(), c1.shape.out_w());
+                ops.push(LayerOp::Conv(c1));
+                // Second conv consumes the first's spatial output.
+                let mut s2 = ConvShape {
+                    cin: cout1,
+                    h: oh1,
+                    w: ow1,
+                    cout: 1 + (rng.next_u64() % 2) as usize,
+                    kh: 1 + (rng.next_u64() % 2) as usize,
+                    kw: 1 + (rng.next_u64() % 2) as usize,
+                    stride: 1,
+                    pad: 0,
+                };
+                if s2.validate().is_err() {
+                    s2.kh = 1;
+                    s2.kw = 1;
+                }
+                let w2 = QuantLayer::new(
+                    (0..s2.patch_len())
+                        .map(|_| (0..s2.cout).map(|_| rng.q_raw(w_bits)).collect())
+                        .collect(),
+                    w_bits,
+                );
+                let c2 = ConvLayer::new(w2, s2).unwrap();
+                width = c2.shape.out_len();
+                ops.push(LayerOp::Conv(c2));
+                ops.push(LayerOp::Dense(QuantLayer::new(
+                    (0..width).map(|_| vec![rng.q_raw(w_bits)]).collect(),
+                    w_bits,
+                )));
+            }
+            // dense → conv (the dense output reshaped into feature maps)
+            _ => {
+                let c = random_conv(&mut rng, 1, w_bits);
+                let k = 2 + (rng.next_u64() % 5) as usize;
+                ops.push(LayerOp::Dense(QuantLayer::new(
+                    (0..k)
+                        .map(|_| (0..c.shape.in_len()).map(|_| rng.q_raw(w_bits)).collect())
+                        .collect(),
+                    w_bits,
+                )));
+                ops.push(LayerOp::Conv(c));
+            }
+        }
+        let sched: Vec<LayerPrecision> =
+            (0..ops.len()).map(|_| random_precision(&mut rng)).collect();
+        let model = CompiledModel::compile_stack(ops.clone(), sched.clone())
+            .unwrap_or_else(|e| panic!("case {case}: compile failed: {e}"));
+        let engine = PackedEngine::new(model);
+        let batch_size = 1 + (rng.next_u64() % 7) as usize;
+        let k0 = ops[0].in_len();
+        let batch: Vec<Vec<i64>> = (0..batch_size)
+            .map(|_| (0..k0).map(|_| rng.q_raw(sched[0].in_bits)).collect())
+            .collect();
+        engine.forward_batch_into(&batch, &mut scratch, &mut out);
+        for (b, row) in batch.iter().enumerate() {
+            let want = stack_forward_row(row, &ops, &sched);
+            assert_eq!(out[b], want, "case {case}: sched {sched:?} image {b}");
+        }
+    }
+}
+
+#[test]
+fn conv_serving_round_trip_through_the_coordinator() {
+    // End to end: the synthetic CNN served through submit → batcher →
+    // PE workers → drain, responses bit-exact against the stack oracle.
+    use softsimd::coordinator::server::{Coordinator, Request, ServeConfig};
+    use softsimd::coordinator::CostTable;
+    use softsimd::nn::weights::uniform_schedule;
+    use softsimd::workload::synth::{synth_cnn_stack, ImageSet};
+    let stack = synth_cnn_stack(0xC2123, 8);
+    let sched = uniform_schedule(8, 16, stack.len());
+    let model = CompiledModel::compile_stack(stack.clone(), sched.clone()).unwrap();
+    let cost = CostTable {
+        mhz: 1000.0,
+        s1_cycle_pj: FORMATS.iter().map(|&b| (b, 1.0)).collect(),
+        s2_pass_pj: 0.5,
+        area_um2: 1000.0,
+    };
+    let mut coord = Coordinator::start(model, ServeConfig::new(2, 6), cost);
+    let (xs, _ys) = ImageSet::standard().sample(9, 0.3, 0xC2124, 8);
+    for (id, row) in xs.iter().enumerate() {
+        coord
+            .submit(Request { id: id as u64, rows: vec![row.clone()] })
+            .unwrap();
+    }
+    let responses = coord.drain().unwrap();
+    assert_eq!(responses.len(), 9);
+    for resp in &responses {
+        let want = stack_forward_row(&xs[resp.id as usize], &stack, &sched);
+        assert_eq!(resp.logits[0], want, "request {}", resp.id);
+        assert_eq!(resp.logits[0].len(), 10);
+    }
+    coord.shutdown();
+}

@@ -7,7 +7,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use softsimd::coordinator::cost::CostTable;
-use softsimd::coordinator::engine::PackedMlpEngine;
+use softsimd::coordinator::engine::PackedEngine;
 use softsimd::coordinator::model::CompiledModel;
 use softsimd::coordinator::server::{
     Coordinator, DispatchPolicy, Request, ServeConfig,
@@ -241,7 +241,7 @@ fn drain_returns_completed_work_even_with_no_live_workers() {
 fn engine_handles_singleton_and_ragged_batches() {
     let mut rng = XorShift64::new(0xC002);
     let layers = random_model(&mut rng, &[7, 5, 3]);
-    let engine = PackedMlpEngine::new(CompiledModel::compile(layers.clone(), 8, 16).unwrap());
+    let engine = PackedEngine::new(CompiledModel::compile(layers.clone(), 8, 16).unwrap());
     for m in 1..=13usize {
         let batch: Vec<Vec<i64>> = (0..m)
             .map(|_| (0..7).map(|_| rng.q_raw(8)).collect())
@@ -292,7 +292,7 @@ fn metrics_account_every_row_mult_and_latency() {
     assert_eq!(coord.metrics.rows.load(Ordering::Relaxed), n_rows);
     assert_eq!(coord.metrics.requests.load(Ordering::Relaxed), n_rows);
     // Energy must be positive and cycles consistent with plan lengths.
-    assert!(coord.metrics.energy_fj.load(Ordering::Relaxed) > 0);
+    assert!(coord.metrics.energy_fj() > 0.0);
     assert!(coord.metrics.s1_cycles.load(Ordering::Relaxed) > 0);
     // Every request's latency was observed, and the percentiles order.
     let p50 = coord.metrics.latency_quantile_ns(0.50).expect("latencies recorded");

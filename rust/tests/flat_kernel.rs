@@ -18,7 +18,7 @@
 
 use softsimd::bits::format::{format_index, SimdFormat, FORMATS};
 use softsimd::bits::pack::{pack, unpack};
-use softsimd::coordinator::engine::{EngineScratch, EngineStats, PackedMlpEngine};
+use softsimd::coordinator::engine::{EngineScratch, EngineStats, PackedEngine};
 use softsimd::coordinator::model::CompiledModel;
 use softsimd::csd::flat::encode_plan;
 use softsimd::csd::schedule::schedule;
@@ -139,6 +139,7 @@ fn expected_stats(model: &CompiledModel, m: usize) -> EngineStats {
         ..EngineStats::default()
     };
     for (li, layer) in model.layers().iter().enumerate() {
+        let layer = layer.weights();
         let p = model.precision(li);
         let words = (mp / p.in_fmt().lanes() as usize) as u64;
         let acc_words = (mp * p.acc_bits as usize / 48) as u64;
@@ -212,7 +213,7 @@ fn prop_flat_engine_is_bit_exact_and_bills_the_prerefactor_formulas() {
         let sched = random_schedule(&mut rng, n_layers);
         let model = CompiledModel::compile_scheduled(layers.clone(), sched.clone())
             .unwrap_or_else(|e| panic!("case {case}: compile failed: {e}"));
-        let engine = PackedMlpEngine::new(model);
+        let engine = PackedEngine::new(model);
         let batch_size = 1 + (rng.next_u64() % 40) as usize;
         let batch: Vec<Vec<i64>> = (0..batch_size)
             .map(|_| (0..dims[0]).map(|_| rng.q_raw(sched[0].in_bits)).collect())
@@ -242,7 +243,7 @@ fn minus_one_times_minus_one_wraps_identically_end_to_end() {
         let layers = vec![QuantLayer::new(vec![vec![-half]], bits)];
         let sched = vec![LayerPrecision::new(bits, bits)];
         let model = CompiledModel::compile_scheduled(layers.clone(), sched.clone()).unwrap();
-        let engine = PackedMlpEngine::new(model);
+        let engine = PackedEngine::new(model);
         let lanes = (48 / bits) as usize;
         let batch: Vec<Vec<i64>> = (0..lanes).map(|_| vec![-half]).collect();
         let (got, _) = engine.forward_batch(&batch);

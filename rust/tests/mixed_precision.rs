@@ -9,7 +9,7 @@
 
 use softsimd::bits::format::{format_index, FORMATS};
 use softsimd::coordinator::cost::CostTable;
-use softsimd::coordinator::engine::PackedMlpEngine;
+use softsimd::coordinator::engine::PackedEngine;
 use softsimd::coordinator::model::CompiledModel;
 use softsimd::coordinator::server::{Coordinator, Request, ServeConfig};
 use softsimd::nn::exec::mlp_forward_row_mixed;
@@ -56,7 +56,7 @@ fn prop_packed_engine_matches_mixed_oracle_over_random_schedules() {
         let sched = random_schedule(&mut rng, n_layers);
         let model = CompiledModel::compile_scheduled(layers.clone(), sched.clone())
             .unwrap_or_else(|e| panic!("case {case}: compile failed: {e}"));
-        let engine = PackedMlpEngine::new(model);
+        let engine = PackedEngine::new(model);
         let batch_size = 1 + (rng.next_u64() % 40) as usize;
         let batch: Vec<Vec<i64>> = (0..batch_size)
             .map(|_| (0..dims[0]).map(|_| rng.q_raw(sched[0].in_bits)).collect())
@@ -101,7 +101,7 @@ fn two_hop_boundary_schedule_is_bit_exact() {
     let sched = vec![LayerPrecision::new(8, 16), LayerPrecision::new(4, 8)];
     let model = CompiledModel::compile_scheduled(layers.clone(), sched.clone()).unwrap();
     assert_eq!(model.boundary_chain(0).len(), 2, "16→4 must be 2 hops");
-    let engine = PackedMlpEngine::new(model);
+    let engine = PackedEngine::new(model);
     for batch_size in [1usize, 7, 12, 23, 24] {
         let batch: Vec<Vec<i64>> = (0..batch_size)
             .map(|_| (0..9).map(|_| rng.q_raw(8)).collect())
