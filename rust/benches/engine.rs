@@ -233,7 +233,7 @@ fn main() {
             // agree bit-exactly before either is timed.
             let mut scratch = EngineScratch::new();
             let mut out = Vec::new();
-            let stats = engine.forward_batch_into(&batch, &mut scratch, &mut out);
+            let stats = engine.forward_batch_into(&batch, 0, &mut scratch, &mut out);
             let (base_out, base_tally) = baseline::forward_batch(&model, &batch);
             assert_eq!(out, base_out, "{name} batch {batch_rows}: engines diverge");
             assert_eq!(stats.s1_cycles, base_tally.s1_cycles, "{name}: s1 billing");
@@ -250,6 +250,7 @@ fn main() {
             for _ in 0..trials {
                 std::hint::black_box(engine.forward_batch_into(
                     &batch,
+                    0,
                     &mut scratch,
                     &mut out,
                 ));
@@ -261,6 +262,7 @@ fn main() {
             let r = bench(&label, 40, || {
                 std::hint::black_box(engine.forward_batch_into(
                     &batch,
+                    0,
                     &mut scratch,
                     &mut out,
                 ));
@@ -382,7 +384,7 @@ fn conv_cells() {
                 images.sample(batch_imgs, 0.25, 0xBE9C5 + batch_imgs as u64, sched[0].in_bits);
             let mut scratch = EngineScratch::new();
             let mut out = Vec::new();
-            let stats = engine.forward_batch_into(&batch, &mut scratch, &mut out);
+            let stats = engine.forward_batch_into(&batch, 0, &mut scratch, &mut out);
             // Cross-check the head of every batch against the scalar
             // stack oracle before timing anything.
             for (b, row) in batch.iter().take(6).enumerate() {
@@ -396,6 +398,7 @@ fn conv_cells() {
             for _ in 0..trials {
                 std::hint::black_box(engine.forward_batch_into(
                     &batch,
+                    0,
                     &mut scratch,
                     &mut out,
                 ));
@@ -407,6 +410,7 @@ fn conv_cells() {
             let r = bench(&label, 40, || {
                 std::hint::black_box(engine.forward_batch_into(
                     &batch,
+                    0,
                     &mut scratch,
                     &mut out,
                 ));

@@ -1,0 +1,154 @@
+//! Governor step-load benchmark (DESIGN.md §13): drive the serving
+//! coordinator through light → burst → light phases under the default
+//! SLO hysteresis policy and record, per phase, throughput, windowed
+//! p99 latency and how the executed rows split across the precision
+//! variants — the machine-readable trace of the governor shedding
+//! precision under overload and recovering afterwards.
+//!
+//! Every cell goes to `BENCH_governor.json` (hand-rolled JSON — serde
+//! is unavailable offline) so CI archives the governor's behavior
+//! alongside the other perf artifacts.
+
+#[path = "benchkit.rs"]
+mod benchkit;
+use benchkit::write_cells;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use softsimd::coordinator::governor::SloPolicy;
+use softsimd::coordinator::model::{CompiledModel, VariantSpec};
+use softsimd::coordinator::server::{Coordinator, Request, ServeConfig};
+use softsimd::nn::conv::LayerOp;
+use softsimd::testutil::{flat_cost, random_dense_stack_uniform};
+use softsimd::workload::synth::XorShift64;
+
+struct PhaseCell {
+    phase: &'static str,
+    requests: usize,
+    rows: u64,
+    rows_per_s: f64,
+    p99_us: f64,
+    /// Rows executed per variant during this phase.
+    variant_rows: Vec<u64>,
+    end_variant: usize,
+}
+
+impl PhaseCell {
+    fn json(&self) -> String {
+        let vr: Vec<String> = self.variant_rows.iter().map(u64::to_string).collect();
+        format!(
+            "{{\"phase\":\"{}\",\"requests\":{},\"rows\":{},\"rows_per_s\":{:.1},\
+             \"p99_us\":{:.1},\"variant_rows\":[{}],\"end_variant\":{}}}",
+            self.phase,
+            self.requests,
+            self.rows,
+            self.rows_per_s,
+            self.p99_us,
+            vr.join(","),
+            self.end_variant
+        )
+    }
+}
+
+/// Serve one phase: `reqs` requests of `rows_per_req` rows, optionally
+/// paced, then drain; measure everything from metric-snapshot deltas.
+fn phase(
+    coord: &mut Coordinator,
+    rng: &mut XorShift64,
+    name: &'static str,
+    reqs: usize,
+    rows_per_req: usize,
+    pace: Option<Duration>,
+) -> PhaseCell {
+    let before = coord.metrics.snapshot();
+    let t0 = Instant::now();
+    for id in 0..reqs {
+        let req = Request {
+            id: id as u64,
+            rows: (0..rows_per_req)
+                .map(|_| (0..64).map(|_| rng.q_raw(8)).collect())
+                .collect(),
+        };
+        coord.submit(req).expect("live workers");
+        if let Some(gap) = pace {
+            std::thread::sleep(gap);
+        }
+    }
+    let responses = coord.drain().expect("drain");
+    assert_eq!(responses.len(), reqs);
+    let wall = t0.elapsed().as_secs_f64();
+    let after = coord.metrics.snapshot();
+    let rows = after.window_rows(&before);
+    let variant_rows: Vec<u64> = after
+        .per_variant
+        .iter()
+        .zip(&before.per_variant)
+        .map(|(a, b)| a.rows - b.rows)
+        .collect();
+    PhaseCell {
+        phase: name,
+        requests: reqs,
+        rows,
+        rows_per_s: rows as f64 / wall.max(1e-9),
+        p99_us: after.window_latency_quantile_ns(&before, 0.99).unwrap_or(0) as f64 / 1e3,
+        variant_rows,
+        end_variant: coord.active_variant(),
+    }
+}
+
+fn main() {
+    println!("== governor: step-load precision shedding ==");
+    let mut rng = XorShift64::new(0x90EB);
+    let layers = random_dense_stack_uniform(&mut rng, &[64, 48, 24, 10], 8);
+    let ops: Vec<LayerOp> = layers.into_iter().map(LayerOp::Dense).collect();
+    let model =
+        CompiledModel::compile_variants(ops, VariantSpec::standard_trio(3)).expect("trio");
+    // Queue-depth hysteresis: shed past two batches' worth of backlog,
+    // recover below half a batch, after two calm decisions.
+    let policy = SloPolicy::new(Duration::from_millis(5), 48, 8).patience(2);
+    let cfg = ServeConfig::new(2, 24)
+        .deadline(Duration::from_millis(2))
+        .queue_depth(1);
+    let mut coord =
+        Coordinator::start_with_policy(Arc::clone(&model), cfg, flat_cost(), Box::new(policy));
+
+    let cells = vec![
+        // Light open-loop traffic: the governor should hold hi-fi.
+        phase(&mut coord, &mut rng, "light-1", 64, 1, Some(Duration::from_micros(300))),
+        // Step overload: a closed-loop burst of full batches.
+        phase(&mut coord, &mut rng, "burst", 48, 24, None),
+        // Light again: the governor should walk back to hi-fi.
+        phase(&mut coord, &mut rng, "light-2", 64, 1, Some(Duration::from_micros(300))),
+    ];
+
+    println!(
+        "{:<10} {:>6} {:>8} {:>12} {:>10} {:>24} {:>12}",
+        "phase", "reqs", "rows", "rows/s", "p99 us", "rows by variant", "end variant"
+    );
+    for c in &cells {
+        println!(
+            "{:<10} {:>6} {:>8} {:>12.0} {:>10.1} {:>24} {:>12}",
+            c.phase,
+            c.requests,
+            c.rows,
+            c.rows_per_s,
+            c.p99_us,
+            format!("{:?}", c.variant_rows),
+            c.end_variant
+        );
+    }
+    let burst = &cells[1];
+    let recovered = &cells[2];
+    if burst.variant_rows[1..].iter().sum::<u64>() == 0 {
+        println!("NOTE: burst never shed precision (machine outpaced the load)");
+    }
+    if recovered.end_variant != 0 {
+        println!("NOTE: governor had not recovered hi-fi by the end of light-2");
+    }
+    println!("\n{}", coord.metrics.report());
+    coord.shutdown();
+
+    let cell_json: Vec<String> = cells.iter().map(PhaseCell::json).collect();
+    write_cells("governor", "BENCH_governor.json", &cell_json);
+}

@@ -10,6 +10,15 @@
 //! stragglers flush without an explicit `drain()` — the classic
 //! latency/throughput dial of serving systems.
 //!
+//! With run-time precision variants (DESIGN.md §13) the quantum is a
+//! property of the *active variant*: the governor re-arms it via
+//! [`Batcher::set_quantum`] after every decision, and push-path batches
+//! prefer a whole-request cut whose row total is a multiple of the
+//! quantum (fewer zero pad rows at the engine) — deadline and drain
+//! flushes still take everything, and a quantum change never drops,
+//! splits or duplicates a pending request (the mid-stream-switch
+//! property test pins it).
+//!
 //! **Restore/retry semantics.** A batch whose dispatch failed is handed
 //! back via [`Batcher::restore`]; its rows go to the front of the queue
 //! *and the retry is armed*: the very next [`Batcher::tick`] flushes,
@@ -36,11 +45,16 @@ impl TrackedRequest {
     }
 }
 
-/// A formed batch: requests plus the row span each owns.
+/// A formed batch: requests plus the row span each owns, tagged with
+/// the precision variant it should execute at (assigned by the
+/// governor at dispatch; 0 — the reference variant — at formation).
 #[derive(Debug)]
 pub struct Batch {
     pub entries: Vec<TrackedRequest>,
     pub rows: usize,
+    /// Precision variant this batch executes at. The worker bills this
+    /// — the variant actually executed — never a later decision.
+    pub variant: usize,
 }
 
 /// Row-count batcher.
@@ -53,8 +67,22 @@ pub struct Batcher {
     idle_polls: u32,
     /// Set by [`Batcher::restore`]: the pending rows came back from a
     /// failed dispatch, so the next tick flushes immediately instead of
-    /// waiting out another full idle-poll deadline.
+    /// waiting out another full idle-poll deadline. Disarmed as soon as
+    /// no restored row remains pending (`restored_pending`), so a
+    /// successful re-dispatch does not leak an early flush to fresh
+    /// stragglers that never failed.
     retry_armed: bool,
+    /// Rows currently pending that came back via [`Batcher::restore`].
+    /// Restores prepend and every emission takes a queue prefix, so
+    /// restored rows always leave before fresh ones — subtracting each
+    /// emitted batch's rows (saturating) tracks them exactly.
+    restored_pending: usize,
+    /// The active variant's batch quantum (rows per full packed word
+    /// set). Push-path batches prefer a row total that is a multiple of
+    /// this so the engine pads as few zero rows as possible; deadline
+    /// and drain flushes still take everything (latency beats lane
+    /// occupancy for stragglers). 1 = no alignment preference.
+    quantum: usize,
 }
 
 impl Batcher {
@@ -66,6 +94,8 @@ impl Batcher {
             max_wait_polls: max_wait_polls.max(1),
             idle_polls: 0,
             retry_armed: false,
+            restored_pending: 0,
+            quantum: 1,
         }
     }
 
@@ -73,15 +103,66 @@ impl Batcher {
         self.pending_rows
     }
 
+    /// Update the lane-padding quantum to the active variant's
+    /// (DESIGN.md §13). Takes effect for the *next* formed batch; rows
+    /// already pending are never dropped or split by a quantum change —
+    /// the mid-stream-switch property test pins exactly-once emission
+    /// across arbitrary switch points.
+    pub fn set_quantum(&mut self, quantum: usize) {
+        self.quantum = quantum.max(1);
+    }
+
+    pub fn quantum(&self) -> usize {
+        self.quantum
+    }
+
     /// Offer a request; returns a formed batch when the target fills.
+    /// The formed batch is the shortest request prefix reaching the
+    /// target, extended (by whole requests — a request's rows are never
+    /// split across batches) until its row total hits a multiple of the
+    /// active quantum; when no aligned cut exists the whole queue goes
+    /// out and the engine pads the remainder.
     pub fn push(&mut self, tr: TrackedRequest) -> Option<Batch> {
         self.pending_rows += tr.req.rows.len();
         self.pending.push(tr);
         self.idle_polls = 0;
         if self.pending_rows >= self.target_rows {
-            return self.flush();
+            return self.form_aligned();
         }
         None
+    }
+
+    /// The push-path batch former: shortest prefix ≥ target, extended
+    /// to quantum alignment, whole queue as the fallback.
+    fn form_aligned(&mut self) -> Option<Batch> {
+        let mut rows = 0usize;
+        let mut cut = self.pending.len();
+        for (i, tr) in self.pending.iter().enumerate() {
+            rows += tr.req.rows.len();
+            if rows >= self.target_rows {
+                cut = i + 1;
+                break;
+            }
+        }
+        while rows % self.quantum != 0 && cut < self.pending.len() {
+            rows += self.pending[cut].req.rows.len();
+            cut += 1;
+        }
+        if cut == self.pending.len() {
+            return self.flush();
+        }
+        self.idle_polls = 0;
+        let entries: Vec<TrackedRequest> = self.pending.drain(..cut).collect();
+        self.pending_rows -= rows;
+        // Restored rows sit at the queue front, so this prefix carries
+        // them out first; once none remain the armed retry is spent —
+        // fresh stragglers left behind follow normal deadline pacing.
+        self.restored_pending = self.restored_pending.saturating_sub(rows);
+        if self.restored_pending == 0 {
+            self.retry_armed = false;
+        }
+        debug_assert_eq!(rows, entries.iter().map(|e| e.req.rows.len()).sum::<usize>());
+        Some(Batch { entries, rows, variant: 0 })
     }
 
     /// Put a formed batch back (dispatch failed); its rows go to the
@@ -93,6 +174,7 @@ impl Batcher {
     /// [`tick`]: Batcher::tick
     pub fn restore(&mut self, batch: Batch) {
         self.pending_rows += batch.rows;
+        self.restored_pending += batch.rows;
         let mut entries = batch.entries;
         entries.append(&mut self.pending);
         self.pending = entries;
@@ -121,9 +203,10 @@ impl Batcher {
         }
         self.idle_polls = 0;
         self.retry_armed = false;
+        self.restored_pending = 0;
         let entries = std::mem::take(&mut self.pending);
         let rows = std::mem::take(&mut self.pending_rows);
-        Some(Batch { entries, rows })
+        Some(Batch { entries, rows, variant: 0 })
     }
 }
 
@@ -228,6 +311,175 @@ mod tests {
         served.extend(retry.entries.iter().map(|e| e.req.id));
         assert_eq!(served, vec![7, 8], "same rows, same order, exactly once");
         assert_eq!(b.pending_rows(), 0);
+    }
+
+    #[test]
+    fn push_forms_quantum_aligned_batches_when_a_cut_exists() {
+        // target 4, quantum 6: a restored 6-row batch plus a 1-row
+        // straggler re-forms as the aligned 6-row cut, leaving the
+        // straggler pending instead of dragging a 7-row batch (1 row of
+        // which the engine would pad to 12) out the door.
+        let mut b = Batcher::new(4, 3);
+        b.set_quantum(6);
+        assert_eq!(b.quantum(), 6);
+        assert!(b.push(req(1, 3)).is_none());
+        let a = b.push(req(2, 3)).expect("target reached");
+        assert_eq!(a.rows, 6);
+        b.restore(a);
+        let aligned = b.push(req(3, 1)).expect("restored rows re-form");
+        assert_eq!(aligned.rows, 6, "aligned cut leaves the straggler pending");
+        assert_eq!(aligned.entries.len(), 2);
+        assert_eq!(b.pending_rows(), 1);
+        // No aligned cut exists → the whole queue goes out and the
+        // engine pads the remainder (alignment is a preference, never a
+        // reason to strand rows).
+        let mut c = Batcher::new(4, 3);
+        c.set_quantum(5);
+        assert!(c.push(req(4, 3)).is_none());
+        let all = c.push(req(5, 3)).expect("target");
+        assert_eq!(all.rows, 6, "misaligned: take everything");
+        assert_eq!(c.pending_rows(), 0);
+        // Formed batches default to the reference variant until the
+        // governor re-tags them at dispatch.
+        assert_eq!(all.variant, 0);
+    }
+
+    #[test]
+    fn successful_redispatch_of_restored_rows_disarms_the_retry() {
+        // Regression (stale retry_armed): once a push-path cut carries
+        // every restored row back out, a fresh straggler left pending
+        // must wait out the normal deadline — not inherit the failed
+        // dispatch's immediate-flush flag.
+        let mut b = Batcher::new(4, 3);
+        let a = b.push(req(1, 4)).expect("target reached");
+        assert!(b.push(req(2, 1)).is_none(), "fresh straggler pends");
+        b.restore(a);
+        // The next push re-forms a batch; the aligned prefix is exactly
+        // the restored rows (4 ≥ target), leaving [2, 3] pending.
+        let retried = b.push(req(3, 1)).expect("restored rows re-form");
+        assert_eq!(retried.entries[0].req.id, 1, "restored rows go first");
+        assert_eq!(b.pending_rows(), 2);
+        assert!(b.tick().is_none(), "tick 1 of 3: retry is spent");
+        assert!(b.tick().is_none(), "tick 2 of 3");
+        let late = b.tick().expect("deadline flush on tick 3");
+        assert_eq!(late.rows, 2);
+        // But while *any* restored row remains pending, the retry stays
+        // armed: a partial cut must not strand the rest of a restored
+        // batch behind a fresh deadline.
+        let mut c = Batcher::new(2, 3);
+        assert!(c.push(req(10, 2)).is_some());
+        let big = Batch {
+            entries: vec![req(11, 2), req(12, 2)],
+            rows: 4,
+            variant: 0,
+        };
+        c.restore(big);
+        let first = c.push(req(13, 1)).expect("re-form");
+        assert_eq!(first.entries[0].req.id, 11);
+        assert_eq!(first.rows, 2, "partial cut: one restored entry left");
+        let rest = c.tick().expect("armed retry flushes the remaining restored rows");
+        assert_eq!(rest.entries[0].req.id, 12);
+    }
+
+    #[test]
+    fn prop_mid_stream_quantum_switches_preserve_rows_and_exactly_once() {
+        // The §13 satellite property: under arbitrary interleavings of
+        // push / tick / flush / restore *and quantum switches between
+        // them* (the governor changing the active variant mid-stream),
+        // `pending_rows()` always equals the sum of the pending
+        // entries' row counts, push-path batches are quantum-aligned
+        // unless they emptied the queue, and every pushed request is
+        // emitted exactly once.
+        use crate::workload::synth::XorShift64;
+        let mut rng = XorShift64::new(0x9A27B1);
+        let quanta = [1usize, 4, 6, 12, 24];
+        for case in 0..60 {
+            let target = 1 + (rng.next_u64() % 12) as usize;
+            let max_polls = 1 + (rng.next_u64() % 4) as u32;
+            let mut b = Batcher::new(target, max_polls);
+            let mut next_id = 0u64;
+            let mut expected_pending = 0usize;
+            let mut limbo: Vec<Batch> = vec![];
+            let mut done: Vec<u64> = vec![];
+            let mut pushed: Vec<u64> = vec![];
+            for _ in 0..300 {
+                match rng.next_u64() % 12 {
+                    0..=5 => {
+                        let rows = 1 + (rng.next_u64() % 5) as usize;
+                        let id = next_id;
+                        next_id += 1;
+                        pushed.push(id);
+                        expected_pending += rows;
+                        if let Some(batch) = b.push(req(id, rows)) {
+                            assert!(
+                                batch.rows % b.quantum() == 0 || b.pending_rows() == 0,
+                                "case {case}: unaligned cut left rows pending \
+                                 (quantum {}, batch {})",
+                                b.quantum(),
+                                batch.rows
+                            );
+                            expected_pending -= batch.rows;
+                            limbo.push(batch);
+                        }
+                    }
+                    6..=7 => {
+                        if let Some(batch) = b.tick() {
+                            expected_pending -= batch.rows;
+                            limbo.push(batch);
+                        }
+                    }
+                    8 => {
+                        if let Some(batch) = b.flush() {
+                            expected_pending -= batch.rows;
+                            limbo.push(batch);
+                        }
+                    }
+                    // The governor switches the active variant between
+                    // ticks: the quantum changes under pending rows.
+                    9 => {
+                        let q = quanta[(rng.next_u64() % quanta.len() as u64) as usize];
+                        b.set_quantum(q);
+                    }
+                    _ => {
+                        if !limbo.is_empty() {
+                            let i = (rng.next_u64() % limbo.len() as u64) as usize;
+                            let batch = limbo.swap_remove(i);
+                            if rng.next_u64() % 2 == 0 {
+                                expected_pending += batch.rows;
+                                b.restore(batch);
+                            } else {
+                                done.extend(batch.entries.iter().map(|e| e.req.id));
+                            }
+                        }
+                    }
+                }
+                assert_eq!(
+                    b.pending_rows(),
+                    expected_pending,
+                    "case {case}: pending_rows drifted from the entry sum"
+                );
+            }
+            if let Some(batch) = b.flush() {
+                expected_pending -= batch.rows;
+                limbo.push(batch);
+            }
+            assert_eq!(expected_pending, 0, "case {case}");
+            assert_eq!(b.pending_rows(), 0, "case {case}");
+            for batch in limbo.drain(..) {
+                assert_eq!(
+                    batch.rows,
+                    batch.entries.iter().map(|e| e.req.rows.len()).sum::<usize>(),
+                    "case {case}: batch rows must equal its entries' rows"
+                );
+                done.extend(batch.entries.iter().map(|e| e.req.id));
+            }
+            done.sort_unstable();
+            pushed.sort_unstable();
+            assert_eq!(
+                done, pushed,
+                "case {case}: every request exactly once — none dropped, none duplicated"
+            );
+        }
     }
 
     #[test]

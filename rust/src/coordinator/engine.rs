@@ -228,40 +228,61 @@ impl PackedEngine {
         &self.model
     }
 
-    /// Forward a batch (rows of `Q1.(in_bits-1)` raws at the first
-    /// layer's activation format; for a conv-first model each row is
-    /// the flattened `[cin][h][w]` image) through all layers using
-    /// packed arithmetic; returns final accumulators
+    /// Forward a batch (rows of `Q1.(in_bits-1)` raws at the reference
+    /// variant's first-layer activation format; for a conv-first model
+    /// each row is the flattened `[cin][h][w]` image) through all
+    /// layers using packed arithmetic; returns final accumulators
     /// (`Q1.(acc_bits-1)` at the last layer's accumulator format) per
     /// row, plus tallies.
     ///
-    /// Convenience wrapper over [`forward_batch_into`] with one-shot
-    /// buffers — tests, evals and examples. The serving loop threads a
-    /// long-lived [`EngineScratch`] instead.
+    /// Convenience wrapper over [`forward_batch_into`] at the reference
+    /// variant with one-shot buffers — tests, evals and examples. The
+    /// serving loop threads a long-lived [`EngineScratch`] instead.
     ///
     /// [`forward_batch_into`]: PackedEngine::forward_batch_into
     pub fn forward_batch(&self, batch: &[Vec<i64>]) -> (Vec<Vec<i64>>, EngineStats) {
+        self.forward_batch_variant(batch, 0)
+    }
+
+    /// As [`forward_batch`], executing precision variant `variant` —
+    /// rows must already be quantized to that variant's first-layer
+    /// format ([`Variant::quantize_row`]).
+    ///
+    /// [`forward_batch`]: PackedEngine::forward_batch
+    /// [`Variant::quantize_row`]: super::model::Variant::quantize_row
+    pub fn forward_batch_variant(
+        &self,
+        batch: &[Vec<i64>],
+        variant: usize,
+    ) -> (Vec<Vec<i64>>, EngineStats) {
         let mut scratch = EngineScratch::new();
         let mut out = Vec::with_capacity(batch.len());
-        let stats = self.forward_batch_into(batch, &mut scratch, &mut out);
+        let stats = self.forward_batch_into(batch, variant, &mut scratch, &mut out);
         (out, stats)
     }
 
-    /// The allocation-free execution core: as [`forward_batch`], but
-    /// every intermediate lives in `scratch` and the per-row logits are
-    /// written into `out` (rows reused in place). After the first batch
-    /// has warmed the buffers, a steady-state call performs **zero**
-    /// heap allocations (enforced by the counting-allocator test, for
-    /// conv schedules too).
+    /// The allocation-free execution core: as [`forward_batch_variant`],
+    /// but every intermediate lives in `scratch` and the per-row logits
+    /// are written into `out` (rows reused in place). After a batch has
+    /// warmed the buffers at each served variant's shapes, a
+    /// steady-state call performs **zero** heap allocations — variant
+    /// switches included (enforced by the counting-allocator test, for
+    /// conv schedules too). `variant` selects which precision variant of
+    /// the shared model executes; lane occupancy, padding quantum,
+    /// boundary chains and all per-format billing follow that variant's
+    /// schedule, while the CSD plans are the one shared set
+    /// (DESIGN.md §13).
     ///
-    /// [`forward_batch`]: PackedEngine::forward_batch
+    /// [`forward_batch_variant`]: PackedEngine::forward_batch_variant
     pub fn forward_batch_into(
         &self,
         batch: &[Vec<i64>],
+        variant: usize,
         scratch: &mut EngineScratch,
         out: &mut Vec<Vec<i64>>,
     ) -> EngineStats {
         let model = &*self.model;
+        let var = model.variant(variant);
         let arena = model.flat();
         let m = batch.len();
         assert!(m > 0, "empty batch");
@@ -270,8 +291,9 @@ impl PackedEngine {
         // accumulator stream has a partial final word — every
         // words-per-column count below is exact, never a ceiling.
         // A conv layer's packed row count `mp · out_pixels` inherits
-        // every divisibility from `mp`.
-        let quantum = model.batch_quantum();
+        // every divisibility from `mp`. The quantum is the *executed
+        // variant's* — padding follows whichever schedule runs.
+        let quantum = var.batch_quantum();
         let mp = m.div_ceil(quantum) * quantum;
         let mut stats = EngineStats {
             pad_rows: (mp - m) as u64,
@@ -299,7 +321,7 @@ impl PackedEngine {
         let mut h_is_packed = false;
 
         for (li, layer) in layers.iter().enumerate() {
-            let prec = model.precision(li);
+            let prec = var.precision(li);
             let (in_fmt, acc_fmt) = (prec.in_fmt(), prec.acc_fmt());
             let w = layer.weights();
             // Packed rows this layer streams: every image is one row of
@@ -459,9 +481,9 @@ impl PackedEngine {
                 // channels) — the conversion itself, and its billing,
                 // are identical either way (DESIGN.md §12).
                 let next = &layers[li + 1];
-                let chain = model.boundary_chain(li);
+                let chain = var.boundary_chain(li);
                 let packed_boundary = !layer.is_conv() && !next.is_conv();
-                let next_in_fmt = model.precision(li + 1).in_fmt();
+                let next_in_fmt = var.precision(li + 1).in_fmt();
                 let feat = layer.out_len();
                 if packed_boundary {
                     h_next.clear();
@@ -559,43 +581,23 @@ impl PackedEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::conv::ConvLayer;
     use crate::nn::exec::{mlp_forward_row, mlp_forward_row_mixed, stack_forward_row};
     use crate::nn::weights::{uniform_schedule, LayerPrecision, QuantLayer};
+    use crate::testutil::{
+        engine_for, engine_uniform, random_batch, random_conv_for_shape,
+        random_dense_stack_uniform,
+    };
     use crate::workload::synth::XorShift64;
 
     fn random_layers(rng: &mut XorShift64) -> Vec<QuantLayer> {
-        let mk = |k: usize, n: usize, rng: &mut XorShift64| {
-            QuantLayer::new(
-                (0..k)
-                    .map(|_| (0..n).map(|_| rng.q_raw(8)).collect())
-                    .collect(),
-                8,
-            )
-        };
-        vec![mk(10, 6, rng), mk(6, 4, rng)]
-    }
-
-    fn random_conv(
-        rng: &mut XorShift64,
-        shape: ConvShape,
-        bits: u32,
-    ) -> ConvLayer {
-        let w = QuantLayer::new(
-            (0..shape.patch_len())
-                .map(|_| (0..shape.cout).map(|_| rng.q_raw(bits)).collect())
-                .collect(),
-            bits,
-        );
-        ConvLayer::new(w, shape).unwrap()
+        random_dense_stack_uniform(rng, &[10, 6, 4], 8)
     }
 
     #[test]
     fn packed_engine_matches_scalar_reference() {
         let mut rng = XorShift64::new(0xE8E8);
         let layers = random_layers(&mut rng);
-        let model = CompiledModel::compile(layers.clone(), 8, 16).unwrap();
-        let engine = PackedEngine::new(model);
+        let engine = engine_uniform(layers.clone(), 8, 16);
         for batch_size in [1usize, 3, 6, 16, 17] {
             let batch: Vec<Vec<i64>> = (0..batch_size)
                 .map(|_| (0..10).map(|_| rng.q_raw(8)).collect())
@@ -626,14 +628,12 @@ mod tests {
         let mut scratch = EngineScratch::new();
         let mut out = Vec::new();
         for sched in [sched_a, sched_b] {
-            let model =
-                CompiledModel::compile_scheduled(layers.clone(), sched.clone()).unwrap();
-            let engine = PackedEngine::new(model);
+            let engine = engine_for(layers.clone(), sched.clone());
             for batch_size in [17usize, 3, 24, 1] {
                 let batch: Vec<Vec<i64>> = (0..batch_size)
                     .map(|_| (0..10).map(|_| rng.q_raw(sched[0].in_bits)).collect())
                     .collect();
-                let stats = engine.forward_batch_into(&batch, &mut scratch, &mut out);
+                let stats = engine.forward_batch_into(&batch, 0, &mut scratch, &mut out);
                 let (fresh, fresh_stats) = engine.forward_batch(&batch);
                 assert_eq!(out, fresh, "sched {sched:?} size {batch_size}");
                 assert_eq!(stats.s1_cycles, fresh_stats.s1_cycles);
@@ -655,9 +655,7 @@ mod tests {
             vec![LayerPrecision::new(8, 16), LayerPrecision::new(4, 8)],
         ];
         for sched in &schedules {
-            let model =
-                CompiledModel::compile_scheduled(layers.clone(), sched.clone()).unwrap();
-            let engine = PackedEngine::new(model);
+            let engine = engine_for(layers.clone(), sched.clone());
             for batch_size in [1usize, 5, 12, 25] {
                 let batch: Vec<Vec<i64>> = (0..batch_size)
                     .map(|_| (0..10).map(|_| rng.q_raw(sched[0].in_bits)).collect())
@@ -688,17 +686,54 @@ mod tests {
     }
 
     #[test]
+    fn variant_switching_matches_each_variants_oracle_and_billing() {
+        // One shared model carrying the standard trio: executing
+        // variant v must be bit-identical to a single-variant model
+        // compiled at v's schedule alone — same logits, same stats down
+        // to the per-format buckets — with one scratch threaded across
+        // interleaved variant switches (the serving shape).
+        use crate::coordinator::model::VariantSpec;
+        let mut rng = XorShift64::new(0xE8EB);
+        let layers = random_layers(&mut rng);
+        let specs = VariantSpec::standard_trio(layers.len());
+        let ops: Vec<LayerOp> = layers.iter().cloned().map(LayerOp::Dense).collect();
+        let set = CompiledModel::compile_variants(ops, specs.clone()).unwrap();
+        let engine = PackedEngine::new(set);
+        let mut scratch = EngineScratch::new();
+        let mut out = Vec::new();
+        for &(v, rows) in &[(0usize, 7usize), (2, 13), (1, 5), (0, 24), (2, 1)] {
+            let sched = specs[v].schedule.clone();
+            let batch = random_batch(&mut rng, rows, 10, sched[0].in_bits);
+            let stats = engine.forward_batch_into(&batch, v, &mut scratch, &mut out);
+            let single = engine_for(layers.clone(), sched.clone());
+            let (want_out, want_stats) = single.forward_batch(&batch);
+            assert_eq!(out, want_out, "variant {v} rows {rows}");
+            assert_eq!(stats.s1_cycles, want_stats.s1_cycles, "variant {v}");
+            assert_eq!(stats.s2_passes, want_stats.s2_passes, "variant {v}");
+            assert_eq!(stats.acc_adds, want_stats.acc_adds, "variant {v}");
+            assert_eq!(stats.subword_mults, want_stats.subword_mults, "variant {v}");
+            assert_eq!(stats.pad_rows, want_stats.pad_rows, "variant {v}");
+            assert_eq!(stats.s1_cycles_by_fmt, want_stats.s1_cycles_by_fmt);
+            assert_eq!(stats.s2_passes_by_fmt, want_stats.s2_passes_by_fmt);
+            for (b, row) in batch.iter().enumerate() {
+                let want = mlp_forward_row_mixed(row, &layers, &sched);
+                assert_eq!(out[b], want, "variant {v} row {b}");
+            }
+        }
+    }
+
+    #[test]
     fn conv_stack_matches_scalar_oracle() {
         // conv 1x6x6 → 3ch 3x3 s1 p1 → conv 3ch → 2ch 3x3 s2 p1 →
         // dense 18 → 4, uniform 8→16: every boundary kind (conv→conv,
         // conv→dense) plus the im2col gather from the raw batch.
         let mut rng = XorShift64::new(0xC0DE1);
-        let c1 = random_conv(
+        let c1 = random_conv_for_shape(
             &mut rng,
             ConvShape { cin: 1, h: 6, w: 6, cout: 3, kh: 3, kw: 3, stride: 1, pad: 1 },
             8,
         );
-        let c2 = random_conv(
+        let c2 = random_conv_for_shape(
             &mut rng,
             ConvShape { cin: 3, h: 6, w: 6, cout: 2, kh: 3, kw: 3, stride: 2, pad: 1 },
             8,
@@ -749,7 +784,7 @@ mod tests {
             (0..4).map(|_| (0..8).map(|_| rng.q_raw(8)).collect()).collect(),
             8,
         );
-        let conv = random_conv(
+        let conv = random_conv_for_shape(
             &mut rng,
             ConvShape { cin: 2, h: 2, w: 2, cout: 2, kh: 2, kw: 2, stride: 1, pad: 0 },
             8,
@@ -781,7 +816,7 @@ mod tests {
             vec![LayerPrecision::new(4, 8), LayerPrecision::new(8, 16)],
             vec![LayerPrecision::new(8, 16), LayerPrecision::new(4, 8)],
         ] {
-            let conv = random_conv(&mut rng, shape, 4);
+            let conv = random_conv_for_shape(&mut rng, shape, 4);
             let dense = QuantLayer::new(
                 (0..8).map(|_| (0..3).map(|_| rng.q_raw(4)).collect()).collect(),
                 4,
@@ -803,8 +838,7 @@ mod tests {
     #[test]
     fn zero_weights_cost_nothing() {
         let layers = vec![QuantLayer::new(vec![vec![0, 64], vec![0, -32]], 8)];
-        let engine =
-            PackedEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
+        let engine = engine_uniform(layers, 8, 16);
         let batch = vec![vec![100i64, -50], vec![25, 77]];
         let (_, stats) = engine.forward_batch(&batch);
         // Column n=0 is all-zero weights: only n=1's two weights run.
@@ -819,8 +853,7 @@ mod tests {
     fn stats_scale_with_batch_words() {
         let mut rng = XorShift64::new(0x57A7);
         let layers = random_layers(&mut rng);
-        let engine =
-            PackedEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
+        let engine = engine_uniform(layers, 8, 16);
         let mk_batch = |n: usize, rng: &mut XorShift64| -> Vec<Vec<i64>> {
             (0..n).map(|_| (0..10).map(|_| rng.q_raw(8)).collect()).collect()
         };
@@ -838,8 +871,7 @@ mod tests {
         // packs into one input word → two 16-bit accumulator words →
         // exactly 2 widen passes and 2 accumulate adds.
         let layers = vec![QuantLayer::new(vec![vec![64]], 8)];
-        let engine =
-            PackedEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
+        let engine = engine_uniform(layers, 8, 16);
         let batch: Vec<Vec<i64>> = (0..6).map(|i| vec![i as i64 * 10 - 25]).collect();
         let (_, stats) = engine.forward_batch(&batch);
         assert_eq!(stats.acc_adds, 2);
@@ -857,8 +889,7 @@ mod tests {
         // 1×1 single-weight layer must report 3 useful multiplies per
         // word-weight, not the 6 lanes the padded word physically runs.
         let layers = vec![QuantLayer::new(vec![vec![64]], 8)];
-        let engine =
-            PackedEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
+        let engine = engine_uniform(layers, 8, 16);
         let batch: Vec<Vec<i64>> = (0..3).map(|i| vec![i as i64 * 7 - 3]).collect();
         let (_, stats) = engine.forward_batch(&batch);
         assert_eq!(stats.subword_mults, 3);
@@ -875,8 +906,7 @@ mod tests {
         // in == acc layer: products accumulate without any conversion,
         // so no crossbar pass may be billed.
         let layers = vec![QuantLayer::new(vec![vec![64]], 8)];
-        let engine =
-            PackedEngine::new(CompiledModel::compile(layers, 8, 8).unwrap());
+        let engine = engine_uniform(layers, 8, 8);
         let batch: Vec<Vec<i64>> = (0..6).map(|i| vec![i as i64 - 3]).collect();
         let (_, stats) = engine.forward_batch(&batch);
         assert_eq!(stats.s2_passes, 0);
@@ -888,9 +918,7 @@ mod tests {
             QuantLayer::new(vec![vec![32]], 8),
         ];
         let sched = vec![LayerPrecision::new(4, 8), LayerPrecision::new(8, 16)];
-        let engine = PackedEngine::new(
-            CompiledModel::compile_scheduled(layers, sched).unwrap(),
-        );
+        let engine = engine_for(layers, sched);
         let batch: Vec<Vec<i64>> = (0..12).map(|i| vec![(i % 8) as i64 - 4]).collect();
         let (_, stats) = engine.forward_batch(&batch);
         // 12 rows: layer 0 produces 2 acc words (@8b), layer 1 produces
@@ -908,9 +936,7 @@ mod tests {
         let layers = random_layers(&mut rng);
         let hidden_n = layers[0].n as u64;
         let sched = vec![LayerPrecision::new(8, 16), LayerPrecision::new(4, 8)];
-        let engine = PackedEngine::new(
-            CompiledModel::compile_scheduled(layers, sched).unwrap(),
-        );
+        let engine = engine_for(layers, sched);
         let batch: Vec<Vec<i64>> = (0..12)
             .map(|_| (0..10).map(|_| rng.q_raw(8)).collect())
             .collect();
@@ -930,8 +956,7 @@ mod tests {
         let mut rng = XorShift64::new(0xB0B0);
         let layers = random_layers(&mut rng);
         let hidden_n = layers[0].n as u64;
-        let engine =
-            PackedEngine::new(CompiledModel::compile(layers, 8, 16).unwrap());
+        let engine = engine_uniform(layers, 8, 16);
         let batch: Vec<Vec<i64>> = (0..6)
             .map(|_| (0..10).map(|_| rng.q_raw(8)).collect())
             .collect();
@@ -949,7 +974,7 @@ mod tests {
         // out 2x1x1, 2 features, prows = 1 pixel per image.
         let shape =
             ConvShape { cin: 1, h: 2, w: 2, cout: 2, kh: 2, kw: 2, stride: 1, pad: 0 };
-        let conv = random_conv(&mut rng, shape, 8);
+        let conv = random_conv_for_shape(&mut rng, shape, 8);
         let dense_tail = QuantLayer::new(vec![vec![64], vec![-32]], 8);
         let ops = vec![LayerOp::Conv(conv), LayerOp::Dense(dense_tail.clone())];
         let model =

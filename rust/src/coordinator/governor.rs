@@ -1,0 +1,217 @@
+//! The SLO-driven precision governor (DESIGN.md §13): the run-time
+//! policy that picks which precision [`Variant`] of the served model
+//! each dispatched batch executes at.
+//!
+//! The paper's repacking unit exists so sub-word bitwidth can change
+//! *at run time*; precision-scalable accelerators (Moons & Verhelst's
+//! 0.3–2.6 TOPS/W ConvNet processor, Ottavi et al.'s mixed-precision
+//! RISC-V core) make that trade under load: when the queue grows or the
+//! tail latency blows past its objective, shed operand width — each
+//! step down packs more rows per 48-bit word, so the same silicon
+//! clears the backlog at lower energy per row — and step back to full
+//! fidelity once the pressure is gone.
+//!
+//! The governor is a policy object consulted at every batch dispatch
+//! with the current [`LoadSignals`]; [`SloPolicy`] is the default
+//! hysteresis implementation, [`PinnedVariant`] the degenerate one
+//! (and the default: installing no governor serves the reference
+//! variant forever, exactly the pre-§13 behavior). Decisions are
+//! *advisory per batch*: the batch is tagged with the chosen variant
+//! and the worker bills the variant it actually executed.
+//!
+//! [`Variant`]: super::model::Variant
+
+use std::time::Duration;
+
+/// Load signals sampled at one dispatch decision.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadSignals {
+    /// Rows visible to the serving loop right now: the batch being
+    /// dispatched, everything still pending in the batcher, and every
+    /// row dispatched to a PE worker and not yet completed.
+    pub queued_rows: usize,
+    /// p99 request latency over the window since the previous decision
+    /// (`None` when no request completed in the window — treat as "no
+    /// pressure signal", not as zero latency).
+    pub window_p99_ns: Option<u64>,
+    /// How many precision variants the served model carries; choices
+    /// are clamped to `0..n_variants` by the caller.
+    pub n_variants: usize,
+}
+
+/// A precision-selection policy. Implementations are consulted once
+/// per dispatched batch and may keep internal state (hysteresis
+/// counters, EWMAs, …). Returned ids out of range are clamped by the
+/// coordinator.
+pub trait GovernorPolicy: Send {
+    /// Variant id the next dispatched batch should execute at.
+    fn choose(&mut self, load: &LoadSignals) -> usize;
+}
+
+/// Pin one variant forever — the no-governor default, and the
+/// deterministic harness for per-variant billing tests.
+#[derive(Debug, Clone)]
+pub struct PinnedVariant(pub usize);
+
+impl GovernorPolicy for PinnedVariant {
+    fn choose(&mut self, _load: &LoadSignals) -> usize {
+        self.0
+    }
+}
+
+/// The default governor: watermark hysteresis over queue depth plus a
+/// p99 latency objective.
+///
+/// Variants are assumed ordered hi-fidelity (0) → cheapest (N−1), the
+/// order [`VariantSpec::standard_trio`] produces. One step of
+/// precision is shed per overloaded decision (`queued_rows` above the
+/// high watermark **or** windowed p99 above the objective); one step
+/// is restored only after `patience` consecutive *calm* decisions
+/// (`queued_rows` at or below the low watermark **and** windowed p99
+/// at or below half the objective — recovering into a still-warm
+/// latency tail would oscillate). Between the watermarks the current
+/// variant holds: that dead band is the hysteresis that keeps a
+/// borderline load from flapping formats every batch.
+///
+/// [`VariantSpec::standard_trio`]: super::model::VariantSpec::standard_trio
+#[derive(Debug, Clone)]
+pub struct SloPolicy {
+    target_p99: Duration,
+    high_rows: usize,
+    low_rows: usize,
+    patience: u32,
+    current: usize,
+    calm_streak: u32,
+}
+
+impl SloPolicy {
+    /// Shed precision above `high_rows` queued rows (or past
+    /// `target_p99`); recover at or below `low_rows`. `low_rows` is
+    /// clamped to `high_rows`.
+    pub fn new(target_p99: Duration, high_rows: usize, low_rows: usize) -> SloPolicy {
+        SloPolicy {
+            target_p99,
+            high_rows: high_rows.max(1),
+            low_rows: low_rows.min(high_rows).max(1),
+            patience: 2,
+            current: 0,
+            calm_streak: 0,
+        }
+    }
+
+    /// Consecutive calm decisions required before restoring one step of
+    /// fidelity (default 2; clamped to ≥ 1).
+    pub fn patience(mut self, n: u32) -> SloPolicy {
+        self.patience = n.max(1);
+        self
+    }
+
+    /// The variant the policy currently considers active.
+    pub fn current(&self) -> usize {
+        self.current
+    }
+}
+
+impl GovernorPolicy for SloPolicy {
+    fn choose(&mut self, load: &LoadSignals) -> usize {
+        let cheapest = load.n_variants.saturating_sub(1);
+        let target_ns = self.target_p99.as_nanos() as u64;
+        let overloaded = load.queued_rows > self.high_rows
+            || load.window_p99_ns.is_some_and(|p| p > target_ns);
+        let calm = load.queued_rows <= self.low_rows
+            && load.window_p99_ns.map_or(true, |p| p <= target_ns / 2);
+        if overloaded {
+            self.calm_streak = 0;
+            if self.current < cheapest {
+                self.current += 1;
+            }
+        } else if calm {
+            self.calm_streak += 1;
+            if self.calm_streak >= self.patience && self.current > 0 {
+                self.current -= 1;
+                self.calm_streak = 0;
+            }
+        } else {
+            // The dead band between the watermarks: hold and restart
+            // the calm count — recovery needs *consecutive* calm.
+            self.calm_streak = 0;
+        }
+        self.current.min(cheapest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(queued: usize, p99_ns: Option<u64>) -> LoadSignals {
+        LoadSignals { queued_rows: queued, window_p99_ns: p99_ns, n_variants: 3 }
+    }
+
+    #[test]
+    fn pinned_never_moves() {
+        let mut p = PinnedVariant(1);
+        assert_eq!(p.choose(&sig(0, None)), 1);
+        assert_eq!(p.choose(&sig(10_000, Some(u64::MAX))), 1);
+    }
+
+    #[test]
+    fn step_load_sheds_then_recovers_with_hysteresis() {
+        // The acceptance trace in miniature: light → overload → light.
+        let mut g = SloPolicy::new(Duration::from_millis(1), 100, 20).patience(2);
+        // Light load: stays at full fidelity.
+        for _ in 0..5 {
+            assert_eq!(g.choose(&sig(5, Some(10_000))), 0);
+        }
+        // Step overload: sheds one step per decision down to cheapest,
+        // and no further.
+        assert_eq!(g.choose(&sig(500, Some(10_000))), 1);
+        assert_eq!(g.choose(&sig(500, None)), 2);
+        assert_eq!(g.choose(&sig(500, None)), 2, "clamps at the cheapest variant");
+        // Load drops into the dead band: hold (no flapping).
+        assert_eq!(g.choose(&sig(50, Some(10_000))), 2);
+        assert_eq!(g.choose(&sig(50, None)), 2);
+        // Calm: one step of fidelity back per `patience` calm decisions.
+        assert_eq!(g.choose(&sig(5, Some(10_000))), 2, "calm 1 of 2");
+        assert_eq!(g.choose(&sig(5, None)), 1, "calm 2 of 2 → step up");
+        assert_eq!(g.choose(&sig(5, None)), 1, "calm 1 of 2 again");
+        assert_eq!(g.choose(&sig(5, None)), 0, "back at full fidelity");
+        assert_eq!(g.choose(&sig(5, None)), 0, "and stays there");
+    }
+
+    #[test]
+    fn latency_breach_sheds_even_with_a_short_queue() {
+        let mut g = SloPolicy::new(Duration::from_micros(100), 1_000_000, 10);
+        // Queue is empty but the tail blew the objective: shed anyway.
+        assert_eq!(g.choose(&sig(0, Some(200_000))), 1);
+        // A calm window with p99 ≤ target/2 recovers (after patience).
+        assert_eq!(g.choose(&sig(0, Some(40_000))), 1);
+        assert_eq!(g.choose(&sig(0, Some(40_000))), 0);
+        // p99 in (target/2, target]: dead band — calm streak resets.
+        let mut h = SloPolicy::new(Duration::from_micros(100), 1_000_000, 10);
+        assert_eq!(h.choose(&sig(0, Some(200_000))), 1);
+        assert_eq!(h.choose(&sig(0, Some(40_000))), 1, "calm 1 of 2");
+        assert_eq!(h.choose(&sig(0, Some(80_000))), 1, "dead band resets calm");
+        assert_eq!(h.choose(&sig(0, Some(40_000))), 1, "calm 1 of 2 again");
+        assert_eq!(h.choose(&sig(0, Some(40_000))), 0);
+    }
+
+    #[test]
+    fn quiet_windows_count_as_calm_on_queue_alone() {
+        let mut g = SloPolicy::new(Duration::from_millis(1), 100, 20).patience(1);
+        assert_eq!(g.choose(&sig(500, None)), 1);
+        // No completions in the window (p99 None) and an empty queue:
+        // calm — recovery must not deadlock on a silent window.
+        assert_eq!(g.choose(&sig(0, None)), 0);
+    }
+
+    #[test]
+    fn choices_clamp_to_the_variant_count() {
+        let mut g = SloPolicy::new(Duration::from_millis(1), 10, 2);
+        let two = LoadSignals { queued_rows: 999, window_p99_ns: None, n_variants: 2 };
+        assert_eq!(g.choose(&two), 1);
+        assert_eq!(g.choose(&two), 1, "never past n_variants - 1");
+        let one = LoadSignals { queued_rows: 999, window_p99_ns: None, n_variants: 1 };
+        assert_eq!(g.choose(&one), 0, "single-variant models never switch");
+    }
+}

@@ -1,5 +1,20 @@
 //! Serving metrics: lock-free counters plus a log₂-bucketed latency
 //! histogram, updated by PE workers and read by anyone at any time.
+//!
+//! Two read modes exist (DESIGN.md §13): the cumulative counters, and
+//! [`Metrics::snapshot`] — a consistent-enough point-in-time copy that
+//! lets a reader (the precision governor) compute **windowed** figures
+//! (e.g. the p99 over just the last decision interval) by differencing
+//! two snapshots, without consuming or resetting the cumulative totals
+//! everyone else reads. [`Metrics::reset`] zeroes everything for
+//! harnesses that reuse one `Metrics` across measurement phases.
+//!
+//! When the served model carries several precision variants, every
+//! batch is additionally billed into its **executed variant's** bucket
+//! ([`VariantMetrics`]) — rows, cycles, energy and compute time per
+//! variant, so `report()` can show per-variant rows/s and pJ/row and
+//! the billing-exactness tests can pin each bucket to the
+//! single-variant formulas.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -7,6 +22,156 @@ use std::time::Instant;
 use crate::bits::format::FORMATS;
 
 const LAT_BUCKETS: usize = 64;
+
+/// Per-precision-variant billing bucket (lock-free, updated by PE
+/// workers with the variant their batch actually executed at).
+#[derive(Debug, Default)]
+pub struct VariantMetrics {
+    pub name: String,
+    pub batches: AtomicU64,
+    pub rows: AtomicU64,
+    pub pad_rows: AtomicU64,
+    pub subword_mults: AtomicU64,
+    pub s1_cycles: AtomicU64,
+    pub s2_passes: AtomicU64,
+    /// Simulated energy in attojoules (same rounding as the aggregate).
+    pub energy_aj: AtomicU64,
+    /// Wall time spent in PE compute on this variant, nanoseconds.
+    pub compute_ns: AtomicU64,
+}
+
+impl VariantMetrics {
+    fn named(name: String) -> VariantMetrics {
+        VariantMetrics { name, ..VariantMetrics::default() }
+    }
+
+    /// Billed energy per served row, pJ (0.0 before any rows).
+    pub fn pj_per_row(&self) -> f64 {
+        let rows = self.rows.load(Ordering::Relaxed);
+        if rows == 0 {
+            return 0.0;
+        }
+        self.energy_aj.load(Ordering::Relaxed) as f64 / 1e6 / rows as f64
+    }
+
+    /// Served rows per second of PE *compute* time on this variant —
+    /// per-variant wall-clock windows overlap across variants, so the
+    /// honest per-variant throughput figure is compute-based.
+    pub fn rows_per_compute_sec(&self) -> f64 {
+        let ns = self.compute_ns.load(Ordering::Relaxed);
+        if ns == 0 {
+            return 0.0;
+        }
+        self.rows.load(Ordering::Relaxed) as f64 / (ns as f64 / 1e9)
+    }
+}
+
+/// Plain-value copy of one variant bucket (inside [`MetricsSnapshot`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct VariantCounters {
+    pub batches: u64,
+    pub rows: u64,
+    pub pad_rows: u64,
+    pub subword_mults: u64,
+    pub s1_cycles: u64,
+    pub s2_passes: u64,
+    pub energy_aj: u64,
+    pub compute_ns: u64,
+}
+
+/// A point-in-time copy of every counter, cheap to take and free of
+/// atomics — what windowed readers difference (DESIGN.md §13). Each
+/// field is loaded individually (`Relaxed`), so a snapshot taken while
+/// workers are mid-update may be skewed by the in-flight batch; the
+/// governor's hysteresis absorbs that, and the histogram quantile
+/// clamps exactly like [`Metrics::latency_quantile_ns`].
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub rows: u64,
+    pub pad_rows: u64,
+    pub dropped_rows: u64,
+    pub subword_mults: u64,
+    pub s1_cycles: u64,
+    pub s2_passes: u64,
+    pub energy_aj: u64,
+    pub compute_ns: u64,
+    pub variant_switches: u64,
+    pub lat_count: u64,
+    pub lat_sum_ns: u64,
+    pub lat_hist: [u64; LAT_BUCKETS],
+    pub per_variant: Vec<VariantCounters>,
+}
+
+impl MetricsSnapshot {
+    /// An all-zero snapshot (the "before anything happened" baseline).
+    pub fn empty(n_variants: usize) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: 0,
+            batches: 0,
+            rows: 0,
+            pad_rows: 0,
+            dropped_rows: 0,
+            subword_mults: 0,
+            s1_cycles: 0,
+            s2_passes: 0,
+            energy_aj: 0,
+            compute_ns: 0,
+            variant_switches: 0,
+            lat_count: 0,
+            lat_sum_ns: 0,
+            lat_hist: [0; LAT_BUCKETS],
+            per_variant: vec![VariantCounters::default(); n_variants.max(1)],
+        }
+    }
+
+    /// Latency quantile over this snapshot's cumulative histogram
+    /// (upper bucket bound, clamped to `2^(LAT_BUCKETS-1)` ns).
+    pub fn latency_quantile_ns(&self, q: f64) -> Option<u64> {
+        quantile_of(&self.lat_hist, self.lat_count, q)
+    }
+
+    /// Latency quantile over the **window** between `earlier` and this
+    /// snapshot — the governor's windowed p99. `None` when no request
+    /// completed in the window (the caller should treat that as "no
+    /// pressure signal", not as zero latency).
+    pub fn window_latency_quantile_ns(
+        &self,
+        earlier: &MetricsSnapshot,
+        q: f64,
+    ) -> Option<u64> {
+        let mut hist = [0u64; LAT_BUCKETS];
+        let mut count = 0u64;
+        for (i, h) in hist.iter_mut().enumerate() {
+            // saturating: a racing reader can see bucket updates out of
+            // order across two snapshots.
+            *h = self.lat_hist[i].saturating_sub(earlier.lat_hist[i]);
+            count += *h;
+        }
+        quantile_of(&hist, count, q)
+    }
+
+    /// Rows completed in the window between `earlier` and this snapshot.
+    pub fn window_rows(&self, earlier: &MetricsSnapshot) -> u64 {
+        self.rows.saturating_sub(earlier.rows)
+    }
+}
+
+fn quantile_of(hist: &[u64; LAT_BUCKETS], count: u64, q: f64) -> Option<u64> {
+    if count == 0 {
+        return None;
+    }
+    let target = ((q.clamp(0.0, 1.0) * count as f64).ceil() as u64).max(1);
+    let mut seen = 0u64;
+    for (i, &b) in hist.iter().enumerate() {
+        seen += b;
+        if seen >= target {
+            return Some(1u64 << i.min(LAT_BUCKETS - 1));
+        }
+    }
+    Some(1u64 << (LAT_BUCKETS - 1))
+}
 
 /// Shared counters (lock-free; updated by PE workers).
 #[derive(Debug)]
@@ -35,6 +200,10 @@ pub struct Metrics {
     pub energy_aj: AtomicU64,
     /// Wall time spent in PE compute, nanoseconds.
     pub compute_ns: AtomicU64,
+    /// Per-precision-variant billing buckets (index = variant id).
+    pub per_variant: Vec<VariantMetrics>,
+    /// Governor decisions that changed the active variant.
+    pub variant_switches: AtomicU64,
     /// Request latency histogram: bucket `i` counts latencies in
     /// `[2^(i-1), 2^i)` nanoseconds (bucket 0: `< 1 ns`).
     lat_hist: [AtomicU64; LAT_BUCKETS],
@@ -48,6 +217,27 @@ pub struct Metrics {
 
 impl Default for Metrics {
     fn default() -> Self {
+        Metrics::with_variants(1)
+    }
+}
+
+impl Metrics {
+    /// Metrics for a model serving `n_variants` precision variants
+    /// (buckets named `v0`, `v1`, …; [`Metrics::with_variant_names`]
+    /// attaches the real names).
+    pub fn with_variants(n_variants: usize) -> Metrics {
+        Metrics::with_variant_names(
+            &(0..n_variants.max(1)).map(|v| format!("v{v}")).collect::<Vec<_>>(),
+        )
+    }
+
+    /// Metrics with one named billing bucket per precision variant.
+    pub fn with_variant_names(names: &[String]) -> Metrics {
+        let names: Vec<String> = if names.is_empty() {
+            vec!["v0".to_string()]
+        } else {
+            names.to_vec()
+        };
         Metrics {
             requests: AtomicU64::new(0),
             batches: AtomicU64::new(0),
@@ -61,6 +251,8 @@ impl Default for Metrics {
             s2_passes_by_fmt: std::array::from_fn(|_| AtomicU64::new(0)),
             energy_aj: AtomicU64::new(0),
             compute_ns: AtomicU64::new(0),
+            per_variant: names.into_iter().map(VariantMetrics::named).collect(),
+            variant_switches: AtomicU64::new(0),
             lat_hist: std::array::from_fn(|_| AtomicU64::new(0)),
             lat_count: AtomicU64::new(0),
             lat_sum_ns: AtomicU64::new(0),
@@ -69,9 +261,7 @@ impl Default for Metrics {
             t0: Instant::now(),
         }
     }
-}
 
-impl Metrics {
     fn now_ns(&self) -> u64 {
         self.t0.elapsed().as_nanos() as u64
     }
@@ -83,10 +273,19 @@ impl Metrics {
             .fetch_min(self.now_ns(), Ordering::Relaxed);
     }
 
-    /// Called by a PE worker after completing a batch.
+    /// Called by the governor when a dispatch decision changed the
+    /// active variant.
+    pub fn note_variant_switch(&self) {
+        self.variant_switches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Called by a PE worker after completing a batch; `variant` is the
+    /// precision variant the batch **actually executed at** — billing
+    /// follows execution, not whatever was active at submit time.
     pub fn add_batch(
         &self,
         rows: u64,
+        variant: usize,
         stats: crate::coordinator::engine::EngineStats,
         pj: f64,
         ns: u64,
@@ -114,10 +313,22 @@ impl Metrics {
         // Round to the nearest attojoule (`max` also maps NaN to 0.0 in
         // release builds) — never truncate: sub-unit remainders must
         // not be systematically dropped every batch.
-        self.energy_aj
-            .fetch_add((pj.max(0.0) * 1e6).round() as u64, Ordering::Relaxed);
+        let aj = (pj.max(0.0) * 1e6).round() as u64;
+        self.energy_aj.fetch_add(aj, Ordering::Relaxed);
         self.compute_ns.fetch_add(ns, Ordering::Relaxed);
         self.last_done_ns.fetch_max(self.now_ns(), Ordering::Relaxed);
+        // The executed variant's bucket gets the same figures — the
+        // by-variant split must always sum to the aggregates.
+        let vb = &self.per_variant[variant.min(self.per_variant.len() - 1)];
+        vb.batches.fetch_add(1, Ordering::Relaxed);
+        vb.rows.fetch_add(rows, Ordering::Relaxed);
+        vb.pad_rows.fetch_add(stats.pad_rows, Ordering::Relaxed);
+        vb.subword_mults
+            .fetch_add(stats.subword_mults, Ordering::Relaxed);
+        vb.s1_cycles.fetch_add(stats.s1_cycles, Ordering::Relaxed);
+        vb.s2_passes.fetch_add(stats.s2_passes, Ordering::Relaxed);
+        vb.energy_aj.fetch_add(aj, Ordering::Relaxed);
+        vb.compute_ns.fetch_add(ns, Ordering::Relaxed);
     }
 
     /// Accumulated simulated energy in femtojoules.
@@ -131,6 +342,81 @@ impl Metrics {
         self.lat_hist[bucket].fetch_add(1, Ordering::Relaxed);
         self.lat_count.fetch_add(1, Ordering::Relaxed);
         self.lat_sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of every counter — windowed readers (the
+    /// governor) difference two of these; the cumulative totals are
+    /// left untouched for everyone else.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut snap = MetricsSnapshot::empty(self.per_variant.len());
+        snap.requests = self.requests.load(Ordering::Relaxed);
+        snap.batches = self.batches.load(Ordering::Relaxed);
+        snap.rows = self.rows.load(Ordering::Relaxed);
+        snap.pad_rows = self.pad_rows.load(Ordering::Relaxed);
+        snap.dropped_rows = self.dropped_rows.load(Ordering::Relaxed);
+        snap.subword_mults = self.subword_mults.load(Ordering::Relaxed);
+        snap.s1_cycles = self.s1_cycles.load(Ordering::Relaxed);
+        snap.s2_passes = self.s2_passes.load(Ordering::Relaxed);
+        snap.energy_aj = self.energy_aj.load(Ordering::Relaxed);
+        snap.compute_ns = self.compute_ns.load(Ordering::Relaxed);
+        snap.variant_switches = self.variant_switches.load(Ordering::Relaxed);
+        snap.lat_count = self.lat_count.load(Ordering::Relaxed);
+        snap.lat_sum_ns = self.lat_sum_ns.load(Ordering::Relaxed);
+        for (dst, src) in snap.lat_hist.iter_mut().zip(&self.lat_hist) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        for (dst, src) in snap.per_variant.iter_mut().zip(&self.per_variant) {
+            dst.batches = src.batches.load(Ordering::Relaxed);
+            dst.rows = src.rows.load(Ordering::Relaxed);
+            dst.pad_rows = src.pad_rows.load(Ordering::Relaxed);
+            dst.subword_mults = src.subword_mults.load(Ordering::Relaxed);
+            dst.s1_cycles = src.s1_cycles.load(Ordering::Relaxed);
+            dst.s2_passes = src.s2_passes.load(Ordering::Relaxed);
+            dst.energy_aj = src.energy_aj.load(Ordering::Relaxed);
+            dst.compute_ns = src.compute_ns.load(Ordering::Relaxed);
+        }
+        snap
+    }
+
+    /// Zero every counter (histogram, per-variant buckets and serving
+    /// window included) — for harnesses that reuse one `Metrics` across
+    /// measurement phases. Not linearizable against concurrent workers;
+    /// quiesce first if exact phase boundaries matter.
+    pub fn reset(&self) {
+        self.requests.store(0, Ordering::Relaxed);
+        self.batches.store(0, Ordering::Relaxed);
+        self.rows.store(0, Ordering::Relaxed);
+        self.pad_rows.store(0, Ordering::Relaxed);
+        self.dropped_rows.store(0, Ordering::Relaxed);
+        self.subword_mults.store(0, Ordering::Relaxed);
+        self.s1_cycles.store(0, Ordering::Relaxed);
+        self.s2_passes.store(0, Ordering::Relaxed);
+        for c in &self.s1_cycles_by_fmt {
+            c.store(0, Ordering::Relaxed);
+        }
+        for c in &self.s2_passes_by_fmt {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.energy_aj.store(0, Ordering::Relaxed);
+        self.compute_ns.store(0, Ordering::Relaxed);
+        self.variant_switches.store(0, Ordering::Relaxed);
+        for b in &self.lat_hist {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.lat_count.store(0, Ordering::Relaxed);
+        self.lat_sum_ns.store(0, Ordering::Relaxed);
+        self.first_submit_ns.store(u64::MAX, Ordering::Relaxed);
+        self.last_done_ns.store(0, Ordering::Relaxed);
+        for vb in &self.per_variant {
+            vb.batches.store(0, Ordering::Relaxed);
+            vb.rows.store(0, Ordering::Relaxed);
+            vb.pad_rows.store(0, Ordering::Relaxed);
+            vb.subword_mults.store(0, Ordering::Relaxed);
+            vb.s1_cycles.store(0, Ordering::Relaxed);
+            vb.s2_passes.store(0, Ordering::Relaxed);
+            vb.energy_aj.store(0, Ordering::Relaxed);
+            vb.compute_ns.store(0, Ordering::Relaxed);
+        }
     }
 
     /// Latency quantile estimate in nanoseconds (upper bucket bound);
@@ -194,12 +480,12 @@ impl Metrics {
             })
             .collect::<Vec<_>>()
             .join(",");
-        format!(
+        let mut out = format!(
             "requests={} batches={} rows={} pad_rows={} dropped_rows={} \
              subword_mults={} s1_cycles={} s1_by_fmt=[{}] s2_passes={} \
              sim_energy={:.2} nJ mean_pJ/mult={:.3} \
              host_throughput={:.1} Mmult/s rows/s={:.0} \
-             latency_p50={:.0}us latency_p99={:.0}us",
+             latency_p50={:.0}us latency_p99={:.0}us variant_switches={}",
             self.requests.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             rows,
@@ -215,7 +501,29 @@ impl Metrics {
             self.rows_per_sec(),
             p50,
             p99,
-        )
+            self.variant_switches.load(Ordering::Relaxed),
+        );
+        // Per-variant billing lines, variants actually exercised only
+        // (a single-variant deployment prints none — its figures are
+        // the aggregates above).
+        if self.per_variant.len() > 1 {
+            for (v, vb) in self.per_variant.iter().enumerate() {
+                let vrows = vb.rows.load(Ordering::Relaxed);
+                if vrows == 0 {
+                    continue;
+                }
+                out.push_str(&format!(
+                    "\n  variant[{v} {}]: batches={} rows={} rows/s(compute)={:.0} \
+                     pJ/row={:.2}",
+                    vb.name,
+                    vb.batches.load(Ordering::Relaxed),
+                    vrows,
+                    vb.rows_per_compute_sec(),
+                    vb.pj_per_row(),
+                ));
+            }
+        }
+        out
     }
 }
 
@@ -237,8 +545,8 @@ mod tests {
             s1_cycles_by_fmt: by_fmt,
             s2_passes_by_fmt: [0; FORMATS.len()],
         };
-        m.add_batch(6, stats, 1.5, 100);
-        m.add_batch(6, stats, 1.5, 100);
+        m.add_batch(6, 0, stats, 1.5, 100);
+        m.add_batch(6, 0, stats, 1.5, 100);
         assert_eq!(m.rows.load(Ordering::Relaxed), 12);
         assert_eq!(m.pad_rows.load(Ordering::Relaxed), 2);
         assert_eq!(m.subword_mults.load(Ordering::Relaxed), 120);
@@ -246,6 +554,90 @@ mod tests {
         assert_eq!(m.s1_cycles_by_fmt[i8].load(Ordering::Relaxed), 20);
         assert!(m.report().contains("rows=12"));
         assert!(m.report().contains("8b:20"), "{}", m.report());
+    }
+
+    #[test]
+    fn per_variant_buckets_split_and_sum_to_the_aggregates() {
+        let m = Metrics::with_variant_names(&[
+            "hifi".to_string(),
+            "turbo".to_string(),
+        ]);
+        let stats = crate::coordinator::engine::EngineStats {
+            s1_cycles: 10,
+            s2_passes: 4,
+            subword_mults: 30,
+            ..Default::default()
+        };
+        m.add_batch(6, 0, stats, 2.0, 1_000);
+        m.add_batch(12, 1, stats, 1.0, 500);
+        m.add_batch(12, 1, stats, 1.0, 500);
+        assert_eq!(m.rows.load(Ordering::Relaxed), 30);
+        assert_eq!(m.per_variant[0].rows.load(Ordering::Relaxed), 6);
+        assert_eq!(m.per_variant[1].rows.load(Ordering::Relaxed), 24);
+        assert_eq!(m.per_variant[1].batches.load(Ordering::Relaxed), 2);
+        // Bucket energies sum to the aggregate (2.0 + 1.0 + 1.0 pJ).
+        let total: u64 = m
+            .per_variant
+            .iter()
+            .map(|v| v.energy_aj.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(total, m.energy_aj.load(Ordering::Relaxed));
+        assert_eq!(total, 4_000_000, "4 pJ in aJ");
+        // pJ/row per bucket: hifi 2.0/6, turbo 2.0/24.
+        assert!((m.per_variant[0].pj_per_row() - 2.0 / 6.0).abs() < 1e-9);
+        assert!((m.per_variant[1].pj_per_row() - 2.0 / 24.0).abs() < 1e-9);
+        let report = m.report();
+        assert!(report.contains("variant[0 hifi]"), "{report}");
+        assert!(report.contains("variant[1 turbo]"), "{report}");
+        // Out-of-range variant ids clamp to the last bucket instead of
+        // panicking a PE worker.
+        m.add_batch(1, 99, stats, 0.0, 1);
+        assert_eq!(m.per_variant[1].batches.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn snapshot_windows_dont_consume_cumulative_totals() {
+        let m = Metrics::default();
+        for ns in [100u64, 200, 400] {
+            m.observe_latency_ns(ns);
+        }
+        let a = m.snapshot();
+        // Cumulative reads still work after a snapshot.
+        assert_eq!(m.lat_count.load(Ordering::Relaxed), 3);
+        assert_eq!(a.lat_count, 3);
+        // A quiet window has no quantile — distinct from "0 ns".
+        let b = m.snapshot();
+        assert!(b.window_latency_quantile_ns(&a, 0.99).is_none());
+        // A window containing only slow requests reports *their* p99,
+        // not the cumulative one.
+        m.observe_latency_ns(1_000_000);
+        m.observe_latency_ns(2_000_000);
+        let c = m.snapshot();
+        let windowed = c.window_latency_quantile_ns(&b, 0.99).unwrap();
+        assert!(windowed >= 1_000_000, "windowed p99 {windowed}");
+        let cumulative = m.latency_quantile_ns(0.50).unwrap();
+        assert!(cumulative <= 512, "cumulative p50 {cumulative} polluted");
+        assert_eq!(c.window_rows(&a), 0);
+    }
+
+    #[test]
+    fn reset_zeroes_everything() {
+        let m = Metrics::with_variants(2);
+        m.note_submit();
+        m.note_variant_switch();
+        m.add_batch(6, 1, Default::default(), 1.0, 100);
+        m.observe_latency_ns(500);
+        m.reset();
+        assert_eq!(m.rows.load(Ordering::Relaxed), 0);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 0);
+        assert_eq!(m.variant_switches.load(Ordering::Relaxed), 0);
+        assert_eq!(m.per_variant[1].rows.load(Ordering::Relaxed), 0);
+        assert!(m.latency_quantile_ns(0.5).is_none());
+        assert_eq!(m.rows_per_sec(), 0.0);
+        // And it keeps working after the reset.
+        m.note_submit();
+        m.add_batch(3, 0, Default::default(), 0.5, 50);
+        assert_eq!(m.rows.load(Ordering::Relaxed), 3);
     }
 
     #[test]
@@ -271,7 +663,7 @@ mod tests {
         let per_batch_pj = 0.0007;
         let batches = 1000u64;
         for _ in 0..batches {
-            m.add_batch(1, Default::default(), per_batch_pj, 1);
+            m.add_batch(1, 0, Default::default(), per_batch_pj, 1);
         }
         let oracle_fj = per_batch_pj * batches as f64 * 1000.0;
         assert!(
@@ -283,7 +675,7 @@ mod tests {
         // And fractional picojoule figures keep their remainders too.
         let m2 = Metrics::default();
         for _ in 0..100 {
-            m2.add_batch(1, Default::default(), 1.2345, 1);
+            m2.add_batch(1, 0, Default::default(), 1.2345, 1);
         }
         assert!((m2.energy_fj() - 123450.0).abs() < 1.0, "{}", m2.energy_fj());
     }
@@ -303,6 +695,12 @@ mod tests {
             assert_ne!(v, u64::MAX);
         }
         assert!(m.report().contains("latency_p99"), "{}", m.report());
+        // The snapshot's windowed quantile clamps identically.
+        let s = m.snapshot();
+        assert_eq!(
+            s.window_latency_quantile_ns(&MetricsSnapshot::empty(1), 0.99),
+            Some(1u64 << 63)
+        );
     }
 
     #[test]
@@ -311,7 +709,7 @@ mod tests {
         assert_eq!(m.rows_per_sec(), 0.0);
         m.note_submit();
         std::thread::sleep(std::time::Duration::from_millis(2));
-        m.add_batch(10, Default::default(), 0.0, 50);
+        m.add_batch(10, 0, Default::default(), 0.0, 50);
         assert!(m.rows_per_sec() > 0.0);
     }
 }

@@ -23,6 +23,14 @@
 //! crossbar and the cost path bills every cycle at the format it
 //! actually ran at (DESIGN.md §10).
 //!
+//! Since DESIGN.md §13 one served model can carry **several precision
+//! variants** over the same weights (one shared CSD plan arena, one
+//! schedule + boundary-chain + batch-quantum set per variant), and an
+//! SLO-driven [`GovernorPolicy`] picks the executing variant per
+//! dispatched batch from queue depth and the windowed p99 — the
+//! paper's run-time repacking exercised as load-adaptive serving.
+//! Billing always follows the variant a batch *actually executed*.
+//!
 //! Offline-image note: the std thread + channel fabric stands in for
 //! tokio (DESIGN.md §8); the public API is synchronous `submit`/`drain`.
 
@@ -30,6 +38,7 @@ pub mod batcher;
 pub mod cost;
 pub mod demo;
 pub mod engine;
+pub mod governor;
 pub mod metrics;
 pub mod model;
 pub mod server;
@@ -37,8 +46,9 @@ pub mod server;
 pub use batcher::{Batch, Batcher, TrackedRequest};
 pub use cost::CostTable;
 pub use engine::{EngineScratch, EngineStats, PackedEngine, PackedMlpEngine};
-pub use metrics::Metrics;
-pub use model::CompiledModel;
+pub use governor::{GovernorPolicy, LoadSignals, PinnedVariant, SloPolicy};
+pub use metrics::{Metrics, MetricsSnapshot, VariantMetrics};
+pub use model::{CompiledModel, Variant, VariantSet, VariantSpec};
 pub use server::{
     Coordinator, DispatchPolicy, Request, Response, ServeConfig, ServeError,
 };

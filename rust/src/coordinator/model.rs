@@ -9,14 +9,21 @@
 //! per-request critical path and exactly once per deployed model — not
 //! once per worker, as the original demo loop did.
 //!
-//! Since the engine went format-polymorphic (DESIGN.md §10), the
-//! compiled model also carries the *precision schedule* — one
-//! [`LayerPrecision`] per layer — together with the precomputed Stage-2
-//! conversion chain for every layer boundary, and the batch quantum that
-//! keeps every packed word full at every per-layer format. All of it is
-//! validated here, at compile, so a malformed model (empty stack,
-//! non-chaining dims, unsupported or inverted format pair) is an error
-//! for its builder — never a panic inside a PE worker.
+//! Since DESIGN.md §13 a compiled model is a **variant set**: one
+//! `LayerOp` stack carrying one or more precision [`Variant`]s (a full
+//! per-layer [`LayerPrecision`] schedule each, with its precomputed
+//! Stage-2 boundary conversion chains and batch quantum), so the
+//! coordinator can switch the serving precision at run time without
+//! touching the weights. The CSD plans depend only on the weight
+//! values, never on the schedule, so the plan tables and the flattened
+//! [`PlanArena`] are compiled **once** and shared by every variant —
+//! `PLAN_COMPILATIONS` counts one compilation per variant *set*, not
+//! per variant, and the tests pin that.
+//!
+//! All structural validation happens here, at compile, so a malformed
+//! model (empty stack, non-chaining dims, unsupported or inverted
+//! format pair, a variant wider than the reference at the first layer)
+//! is an error for its builder — never a panic inside a PE worker.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -29,28 +36,68 @@ use crate::nn::conv::LayerOp;
 use crate::nn::weights::{uniform_schedule, LayerPrecision, QuantLayer};
 use crate::pipeline::stage2::conversion_chain;
 
-/// Process-wide count of [`CompiledModel::compile`] runs. Exists so
-/// tests can assert that plan compilation happens exactly once per
-/// model no matter how many PE workers serve it.
+/// Process-wide count of CSD plan compilations. Exists so tests can
+/// assert that plan compilation happens exactly once per model no
+/// matter how many PE workers serve it — and exactly once per variant
+/// *set* no matter how many precision variants it carries.
 pub static PLAN_COMPILATIONS: AtomicU64 = AtomicU64::new(0);
 
-/// An immutable compiled model: quantized layers (dense or conv, each
-/// lowered to its matmul view), per-layer serving precision, plus every
-/// per-weight [`MulPlan`] and per-boundary Stage-2 conversion chain,
-/// shared across all PE workers via [`Arc`]. A conv layer contributes
-/// exactly one CSD plan per kernel weight — the plan is shared across
-/// every output pixel of every image (DESIGN.md §12).
+/// A declared precision variant: a display name plus one
+/// [`LayerPrecision`] per layer. `specs[0]` of a variant set is the
+/// **reference** variant — requests arrive quantized at its first-layer
+/// activation width, and every other variant's first layer must be at
+/// most that wide (narrower variants consume the same request stream
+/// through an arithmetic right shift; [`Variant::in_shift`]).
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub name: String,
+    pub schedule: Vec<LayerPrecision>,
+}
+
+impl VariantSpec {
+    pub fn new(name: impl Into<String>, schedule: Vec<LayerPrecision>) -> VariantSpec {
+        VariantSpec { name: name.into(), schedule }
+    }
+
+    /// The standard serving trio over an `n_layers` stack, ordered
+    /// hi-fidelity first (the reference variant) to cheapest:
+    /// `hifi-8` (uniform 8→16), `balanced-4-6-8` (4-bit first layer,
+    /// 6-bit middle, 8-bit last) and `turbo-4-4-8` (4-bit everywhere
+    /// but the last layer) — the three operating points the governor
+    /// trades between under load.
+    pub fn standard_trio(n_layers: usize) -> Vec<VariantSpec> {
+        assert!(n_layers > 0, "variant trio needs at least one layer");
+        let ramp = |li: usize| -> LayerPrecision {
+            if li + 1 == n_layers {
+                LayerPrecision::new(8, 16)
+            } else if li == 0 {
+                LayerPrecision::new(4, 8)
+            } else {
+                LayerPrecision::new(6, 12)
+            }
+        };
+        let turbo = |li: usize| -> LayerPrecision {
+            if li + 1 == n_layers {
+                LayerPrecision::new(8, 16)
+            } else {
+                LayerPrecision::new(4, 8)
+            }
+        };
+        vec![
+            VariantSpec::new("hifi-8", uniform_schedule(8, 16, n_layers)),
+            VariantSpec::new("balanced-4-6-8", (0..n_layers).map(ramp).collect()),
+            VariantSpec::new("turbo-4-4-8", (0..n_layers).map(turbo).collect()),
+        ]
+    }
+}
+
+/// One compiled precision variant: the validated schedule plus
+/// everything precomputed from it (boundary chains, batch quantum,
+/// request requantization shift). Weights and CSD plans live on the
+/// owning [`CompiledModel`], shared across all variants.
 #[derive(Debug)]
-pub struct CompiledModel {
-    layers: Vec<LayerOp>,
-    /// `plans[layer][k][n]`, precompiled for every weight of the
-    /// layer's matmul view — the inspectable compilation artifact
-    /// (oracles, tests, billing cross-checks).
-    plans: Vec<Vec<Vec<MulPlan>>>,
-    /// The same plans flattened into one contiguous SoA micro-op buffer
-    /// — the execution artifact the engine's hot loop runs
-    /// (DESIGN.md §11).
-    arena: PlanArena,
+pub struct Variant {
+    name: String,
     /// One activation/accumulator format pair per layer.
     schedule: Vec<LayerPrecision>,
     /// `chains[li]`: the crossbar hop chain converting layer `li`'s
@@ -61,6 +108,97 @@ pub struct CompiledModel {
     /// and accumulator lane counts, so no layer ever sees a partial
     /// final word (6 for the uniform 8→16 schedule, up to 24 mixed).
     batch_quantum: usize,
+    /// Arithmetic right shift turning a reference-precision request
+    /// value into this variant's first-layer activation format (0 for
+    /// the reference variant itself).
+    in_shift: u32,
+}
+
+impl Variant {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The full precision schedule, one entry per layer.
+    pub fn schedule(&self) -> &[LayerPrecision] {
+        &self.schedule
+    }
+
+    /// Layer `li`'s activation/accumulator format pair.
+    #[inline]
+    pub fn precision(&self, li: usize) -> LayerPrecision {
+        self.schedule[li]
+    }
+
+    /// The precomputed crossbar chain converting layer `li`'s
+    /// accumulators into layer `li+1`'s activations (empty = bypass).
+    #[inline]
+    pub fn boundary_chain(&self, li: usize) -> &[(SimdFormat, SimdFormat)] {
+        &self.chains[li]
+    }
+
+    /// Rows per full packed batch at this variant's schedule.
+    pub fn batch_quantum(&self) -> usize {
+        self.batch_quantum
+    }
+
+    /// Activation width (bits) of the first layer — what rows handed to
+    /// the engine under this variant must be quantized to.
+    pub fn in_bits(&self) -> u32 {
+        self.schedule[0].in_bits
+    }
+
+    /// Accumulator width (bits) of the last layer.
+    pub fn acc_bits(&self) -> u32 {
+        self.schedule[self.schedule.len() - 1].acc_bits
+    }
+
+    pub fn in_fmt(&self) -> SimdFormat {
+        self.schedule[0].in_fmt()
+    }
+
+    pub fn acc_fmt(&self) -> SimdFormat {
+        self.schedule[self.schedule.len() - 1].acc_fmt()
+    }
+
+    /// Arithmetic right shift mapping reference-precision request
+    /// values into this variant's first-layer format. The serving loop
+    /// applies it per value before the engine packs the batch; the
+    /// per-variant scalar oracle is `forward(row >> in_shift)`.
+    #[inline]
+    pub fn in_shift(&self) -> u32 {
+        self.in_shift
+    }
+
+    /// Requantize one reference-precision row into this variant's
+    /// first-layer format (floor / arithmetic-shift rounding — the
+    /// exact transform the PE workers apply).
+    pub fn quantize_row(&self, row: &[i64]) -> Vec<i64> {
+        row.iter().map(|&v| v >> self.in_shift).collect()
+    }
+}
+
+/// An immutable compiled model — since DESIGN.md §13 a **variant set**:
+/// quantized layers (dense or conv, each lowered to its matmul view)
+/// plus every per-weight [`MulPlan`], shared across all PE workers via
+/// [`Arc`], carrying one or more precision [`Variant`]s over the same
+/// weights. A conv layer contributes exactly one CSD plan per kernel
+/// weight — the plan is shared across every output pixel of every image
+/// (DESIGN.md §12) and across every variant (§13).
+#[derive(Debug)]
+pub struct CompiledModel {
+    layers: Vec<LayerOp>,
+    /// `plans[layer][k][n]`, precompiled for every weight of the
+    /// layer's matmul view — the inspectable compilation artifact
+    /// (oracles, tests, billing cross-checks). One copy per variant
+    /// *set*: plans depend on weight values only, never on a schedule.
+    plans: Vec<Vec<Vec<MulPlan>>>,
+    /// The same plans flattened into one contiguous SoA micro-op buffer
+    /// — the execution artifact the engine's hot loop runs
+    /// (DESIGN.md §11). Shared by every variant.
+    arena: PlanArena,
+    /// The precision variants, reference (hi-fidelity) first.
+    variants: Vec<Variant>,
     /// Total Stage-1 cycles of one forward pass per packed word column
     /// (sum of plan cycles over all weights) — scheduling metadata for
     /// load estimates.
@@ -68,6 +206,10 @@ pub struct CompiledModel {
     /// Count of zero weights (zero-skipped at execution).
     zero_weights: u64,
 }
+
+/// A multi-variant [`CompiledModel`] behind its serving `Arc` — the
+/// "variant set" the coordinator switches across at run time.
+pub type VariantSet = Arc<CompiledModel>;
 
 fn lcm(a: usize, b: usize) -> usize {
     let gcd = |mut x: usize, mut y: usize| {
@@ -105,30 +247,36 @@ impl CompiledModel {
         CompiledModel::compile_stack(layers.into_iter().map(LayerOp::Dense).collect(), schedule)
     }
 
-    /// Compile an interleaved conv + dense stack (DESIGN.md §12):
-    /// layer `li` consumes its flattened input features at
-    /// `schedule[li].in_bits` and produces flattened accumulators at
-    /// `schedule[li].acc_bits`; conv layers are lowered to their im2col
-    /// matmul (one CSD plan per kernel weight, shared across all output
-    /// pixels). Boundary conversion chains are precomputed here so
-    /// workers never run the BFS, and all structural validation happens
-    /// here (DESIGN.md §10) — a malformed model is its builder's error,
-    /// never a PE-worker panic.
+    /// Compile an interleaved conv + dense stack (DESIGN.md §12) under
+    /// a single precision schedule — a one-variant variant set.
     pub fn compile_stack(
         layers: Vec<LayerOp>,
         schedule: Vec<LayerPrecision>,
     ) -> anyhow::Result<Arc<CompiledModel>> {
+        CompiledModel::compile_variants(layers, vec![VariantSpec::new("default", schedule)])
+    }
+
+    /// Compile one `LayerOp` stack under `specs.len()` precision
+    /// variants into one shared structure (DESIGN.md §13): the CSD plan
+    /// tables and the flattened micro-op arena are built **once** —
+    /// plans are a property of the weight values, so recompiling them
+    /// per variant would be pure waste (`PLAN_COMPILATIONS` counts one
+    /// compilation here regardless of `specs.len()`; the tests pin it).
+    /// Per variant, the schedule is validated against the stack and the
+    /// boundary conversion chains and batch quantum are precomputed.
+    ///
+    /// `specs[0]` is the **reference** variant: requests are validated
+    /// and quantized at its first-layer activation width, so every
+    /// other variant's first layer must be at most that wide (its
+    /// [`Variant::in_shift`] bridges the difference at dispatch).
+    pub fn compile_variants(
+        layers: Vec<LayerOp>,
+        specs: Vec<VariantSpec>,
+    ) -> anyhow::Result<Arc<CompiledModel>> {
         anyhow::ensure!(!layers.is_empty(), "model needs at least one layer");
-        anyhow::ensure!(
-            layers.len() == schedule.len(),
-            "{} layers but {} precision entries",
-            layers.len(),
-            schedule.len()
-        );
-        let mut batch_quantum = 1usize;
-        for (li, (layer, p)) in layers.iter().zip(&schedule).enumerate() {
-            p.validate()
-                .map_err(|e| anyhow::anyhow!("layer {li}: {e}"))?;
+        anyhow::ensure!(!specs.is_empty(), "model needs at least one precision variant");
+        // Schedule-independent structural validation, once per stack.
+        for (li, layer) in layers.iter().enumerate() {
             let w = layer.weights();
             anyhow::ensure!(
                 crate::bits::format::FORMATS.contains(&w.bits),
@@ -161,13 +309,46 @@ impl CompiledModel {
                     layers[li - 1].out_len()
                 );
             }
-            batch_quantum = lcm(batch_quantum, p.in_fmt().lanes() as usize);
-            batch_quantum = lcm(batch_quantum, p.acc_fmt().lanes() as usize);
         }
-        let chains = schedule
-            .windows(2)
-            .map(|w| conversion_chain(w[0].acc_fmt(), w[1].in_fmt()))
-            .collect();
+        // Per-variant schedule validation and precomputation.
+        let ref_in_bits = specs[0].schedule.first().map(|p| p.in_bits).unwrap_or(0);
+        let mut variants = Vec::with_capacity(specs.len());
+        for (vi, spec) in specs.into_iter().enumerate() {
+            let VariantSpec { name, schedule } = spec;
+            anyhow::ensure!(
+                layers.len() == schedule.len(),
+                "variant {vi} ({name}): {} layers but {} precision entries",
+                layers.len(),
+                schedule.len()
+            );
+            let mut batch_quantum = 1usize;
+            for (li, p) in schedule.iter().enumerate() {
+                p.validate()
+                    .map_err(|e| anyhow::anyhow!("variant {vi} ({name}), layer {li}: {e}"))?;
+                batch_quantum = lcm(batch_quantum, p.in_fmt().lanes() as usize);
+                batch_quantum = lcm(batch_quantum, p.acc_fmt().lanes() as usize);
+            }
+            anyhow::ensure!(
+                schedule[0].in_bits <= ref_in_bits,
+                "variant {vi} ({name}): first-layer width {} exceeds the reference \
+                 variant's {} — requests arrive at the reference precision and can \
+                 only be narrowed at dispatch",
+                schedule[0].in_bits,
+                ref_in_bits
+            );
+            let chains = schedule
+                .windows(2)
+                .map(|w| conversion_chain(w[0].acc_fmt(), w[1].in_fmt()))
+                .collect();
+            variants.push(Variant {
+                name,
+                in_shift: ref_in_bits - schedule[0].in_bits,
+                schedule,
+                chains,
+                batch_quantum,
+            });
+        }
+        // One plan compilation per variant *set* — the dedup invariant.
         PLAN_COMPILATIONS.fetch_add(1, Ordering::SeqCst);
         let plans: Vec<Vec<Vec<MulPlan>>> =
             layers.iter().map(|layer| layer.weights().plans()).collect();
@@ -189,9 +370,7 @@ impl CompiledModel {
             layers,
             plans,
             arena,
-            schedule,
-            chains,
-            batch_quantum,
+            variants,
             cycles_per_word,
             zero_weights,
         }))
@@ -214,42 +393,57 @@ impl CompiledModel {
         &self.arena
     }
 
-    /// The full precision schedule, one entry per layer.
-    pub fn schedule(&self) -> &[LayerPrecision] {
-        &self.schedule
+    /// Every precision variant, reference first.
+    pub fn variants(&self) -> &[Variant] {
+        &self.variants
     }
 
-    /// Layer `li`'s activation/accumulator format pair.
+    pub fn n_variants(&self) -> usize {
+        self.variants.len()
+    }
+
+    /// Variant `v`'s compiled schedule metadata.
+    #[inline]
+    pub fn variant(&self, v: usize) -> &Variant {
+        &self.variants[v]
+    }
+
+    /// The full precision schedule of the **reference** variant, one
+    /// entry per layer.
+    pub fn schedule(&self) -> &[LayerPrecision] {
+        self.variants[0].schedule()
+    }
+
+    /// The reference variant's format pair for layer `li`.
     #[inline]
     pub fn precision(&self, li: usize) -> LayerPrecision {
-        self.schedule[li]
+        self.variants[0].precision(li)
     }
 
-    /// The precomputed crossbar chain converting layer `li`'s
-    /// accumulators into layer `li+1`'s activations (empty = bypass).
+    /// The reference variant's boundary chain after layer `li`.
     #[inline]
     pub fn boundary_chain(&self, li: usize) -> &[(SimdFormat, SimdFormat)] {
-        &self.chains[li]
+        self.variants[0].boundary_chain(li)
     }
 
-    /// Activation width (bits) of the first layer — what requests
-    /// arrive quantized to.
+    /// Activation width (bits) of the reference variant's first layer —
+    /// what requests arrive quantized to, whichever variant executes
+    /// them.
     pub fn in_bits(&self) -> u32 {
-        self.schedule[0].in_bits
+        self.variants[0].in_bits()
     }
 
-    /// Accumulator width (bits) of the last layer — what responses
-    /// carry.
+    /// Accumulator width (bits) of the reference variant's last layer.
     pub fn acc_bits(&self) -> u32 {
-        self.schedule[self.schedule.len() - 1].acc_bits
+        self.variants[0].acc_bits()
     }
 
     pub fn in_fmt(&self) -> SimdFormat {
-        self.schedule[0].in_fmt()
+        self.variants[0].in_fmt()
     }
 
     pub fn acc_fmt(&self) -> SimdFormat {
-        self.schedule[self.schedule.len() - 1].acc_fmt()
+        self.variants[0].acc_fmt()
     }
 
     /// Flattened input length of the first layer (row length of a
@@ -264,11 +458,11 @@ impl CompiledModel {
         self.layers[self.layers.len() - 1].out_len()
     }
 
-    /// Rows per full packed batch: batches padded to a multiple of this
-    /// keep every packed word full at every layer's format (6 for the
-    /// uniform 8→16 schedule).
+    /// The reference variant's batch quantum: batches padded to a
+    /// multiple of this keep every packed word full at every layer's
+    /// format (6 for the uniform 8→16 schedule).
     pub fn batch_quantum(&self) -> usize {
-        self.batch_quantum
+        self.variants[0].batch_quantum()
     }
 
     /// Stage-1 cycles one packed word column costs across the whole
@@ -307,6 +501,8 @@ mod tests {
             m.layers()[0].weights().plan(0, 0).ops.len()
         );
         assert_eq!(m.boundary_chain(0), &[(SimdFormat::new(16), SimdFormat::new(8))]);
+        assert_eq!(m.n_variants(), 1);
+        assert_eq!(m.variant(0).in_shift(), 0);
     }
 
     #[test]
@@ -359,6 +555,10 @@ mod tests {
         ];
         let err = CompiledModel::compile(bad, 8, 16).expect_err("non-chaining dims");
         assert!(err.to_string().contains("output width"), "{err}");
+        // No variants at all.
+        let ops: Vec<LayerOp> = layers().into_iter().map(LayerOp::Dense).collect();
+        let err = CompiledModel::compile_variants(ops, vec![]).expect_err("no variants");
+        assert!(err.to_string().contains("at least one precision variant"), "{err}");
     }
 
     #[test]
@@ -404,5 +604,46 @@ mod tests {
         let sched = vec![LayerPrecision::new(8, 16), LayerPrecision::new(4, 8)];
         let m = CompiledModel::compile_scheduled(layers(), sched).unwrap();
         assert_eq!(m.boundary_chain(0).len(), 2, "16→4 chains via 8");
+    }
+
+    #[test]
+    fn variant_set_shares_one_plan_table_and_computes_per_variant_metadata() {
+        // (The "one plan compilation per variant *set*" invariant is
+        // pinned in tests/plan_compile_count.rs — its own binary, so
+        // the process-global counter isn't raced by parallel tests.)
+        let ops: Vec<LayerOp> = layers().into_iter().map(LayerOp::Dense).collect();
+        let m = CompiledModel::compile_variants(ops, VariantSpec::standard_trio(2)).unwrap();
+        assert_eq!(m.n_variants(), 3);
+        assert_eq!(m.variant(0).name(), "hifi-8");
+        assert_eq!(m.variant(0).batch_quantum(), 6);
+        // balanced: layer 0 at 4→8 (12/6 lanes), layer 1 at 8→16 (6/3).
+        assert_eq!(m.variant(1).batch_quantum(), 12);
+        assert_eq!(m.variant(2).batch_quantum(), 12);
+        // Request precision follows the reference variant; narrower
+        // variants bridge it with a right shift.
+        assert_eq!(m.in_bits(), 8);
+        assert_eq!(m.variant(1).in_shift(), 4);
+        assert_eq!(m.variant(2).in_shift(), 4);
+        assert_eq!(m.variant(1).quantize_row(&[127, -128, 15]), vec![7, -8, 0]);
+        // Reference-variant delegations keep pointing at variant 0.
+        assert_eq!(m.schedule(), m.variant(0).schedule());
+        assert_eq!(m.batch_quantum(), m.variant(0).batch_quantum());
+    }
+
+    #[test]
+    fn variant_wider_than_reference_is_a_compile_error() {
+        let ops: Vec<LayerOp> = layers().into_iter().map(LayerOp::Dense).collect();
+        let specs = vec![
+            VariantSpec::new(
+                "narrow-ref",
+                vec![LayerPrecision::new(4, 8), LayerPrecision::new(8, 16)],
+            ),
+            VariantSpec::new(
+                "too-wide",
+                vec![LayerPrecision::new(8, 16), LayerPrecision::new(8, 16)],
+            ),
+        ];
+        let err = CompiledModel::compile_variants(ops, specs).expect_err("wider variant");
+        assert!(err.to_string().contains("exceeds the reference"), "{err}");
     }
 }

@@ -8,7 +8,21 @@
 //! slow PE exerts backpressure instead of growing an unbounded mailbox.
 //! The deadline thread drives [`Batcher::tick`] so straggler requests
 //! flush without an explicit [`Coordinator::drain`]. Worker death is
-//! surfaced as [`ServeError`], never a panic in the coordinator.
+//! surfaced as [`ServeError`], never a panic in the coordinator, and a
+//! dead PE can be respawned in place with
+//! [`Coordinator::revive_worker`] (rolling restarts must not
+//! permanently shrink capacity).
+//!
+//! When the served model carries several precision variants
+//! (DESIGN.md §13), every dispatch consults the installed
+//! [`GovernorPolicy`] with the live load signals (queued rows + the
+//! windowed p99 from the metrics histogram); the chosen variant is
+//! stamped on the batch, the batcher's alignment quantum follows it,
+//! and the PE worker requantizes the batch's rows
+//! ([`Variant::in_shift`]) and bills cycles/energy to the variant it
+//! **actually executed** — never to a later decision.
+//!
+//! [`Variant::in_shift`]: super::model::Variant::in_shift
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{
@@ -21,21 +35,28 @@ use std::time::{Duration, Instant};
 use super::batcher::{Batch, Batcher, TrackedRequest};
 use super::cost::CostTable;
 use super::engine::PackedEngine;
-use super::metrics::Metrics;
+use super::governor::{GovernorPolicy, LoadSignals, PinnedVariant};
+use super::metrics::{Metrics, MetricsSnapshot};
 use super::model::CompiledModel;
 
-/// An inference request: rows of quantized activations.
+/// An inference request: rows of quantized activations at the model's
+/// reference precision ([`CompiledModel::in_bits`]), whichever variant
+/// ends up executing them.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub rows: Vec<Vec<i64>>,
 }
 
-/// Its response: per-row `Q1.(acc_bits-1)` logits.
+/// Its response: per-row logits at the executing variant's final
+/// accumulator format, tagged with the variant that produced them so
+/// callers can check against the right per-variant oracle.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
     pub logits: Vec<Vec<i64>>,
+    /// The precision variant that executed this request's batch.
+    pub variant: usize,
 }
 
 /// How formed batches are routed to PE workers.
@@ -249,6 +270,14 @@ impl Router {
     }
 }
 
+/// The governor's mutable half: the installed policy plus the metrics
+/// snapshot its last decision was taken at (windowed p99 = the
+/// histogram delta between two consecutive decisions).
+struct GovernorState {
+    policy: Box<dyn GovernorPolicy>,
+    last_snap: MetricsSnapshot,
+}
+
 /// State shared between the submit path, the deadline thread, and the
 /// PE workers.
 struct Shared {
@@ -258,6 +287,19 @@ struct Shared {
     in_flight: AtomicUsize,
     stop_deadline: AtomicBool,
     metrics: Arc<Metrics>,
+    /// The precision governor, consulted once per dispatched batch.
+    governor: Mutex<GovernorState>,
+    /// Each worker slot's outstanding-row counter (shared with the
+    /// router's ports) — readable without the router lock, so the
+    /// governor's queue-depth signal never nests router inside batcher
+    /// beyond the dispatch itself.
+    port_loads: Vec<Arc<AtomicUsize>>,
+    /// Per-variant batch quanta (index = variant id); also the variant
+    /// count — single-entry for a single-variant model.
+    quanta: Vec<usize>,
+    /// Most recently chosen variant (observability; billing follows
+    /// each batch's own tag, not this).
+    active_variant: AtomicUsize,
 }
 
 impl Shared {
@@ -266,8 +308,47 @@ impl Shared {
     /// batcher is observable, every formed batch is either counted in
     /// `in_flight` or restored as pending — so `drain` can never slip
     /// between "batch left the batcher" and "batch became in-flight".
-    /// Lock order is always batcher → router; never the reverse.
-    fn dispatch_locked(&self, batcher: &mut Batcher, batch: Batch) -> Result<(), ServeError> {
+    /// Lock order is always batcher → governor → router; never any
+    /// reverse.
+    fn dispatch_locked(
+        &self,
+        batcher: &mut Batcher,
+        mut batch: Batch,
+    ) -> Result<(), ServeError> {
+        // Governor decision (DESIGN.md §13): sample the live load —
+        // this batch's rows, everything still pending, and every row
+        // dispatched-but-not-done — plus the windowed p99 since the
+        // previous decision; stamp the batch and re-arm the batcher's
+        // alignment quantum for the *next* batch. A restored batch
+        // passes through here again on retry and may legitimately be
+        // re-tagged: it has not executed yet. A single-variant model
+        // has no decision to make: skip the snapshot/quantile work
+        // entirely rather than tax every dispatch of the common case
+        // with a heap allocation under the batcher lock.
+        if self.quanta.len() > 1 {
+            let mut gov = self.governor.lock().unwrap();
+            let queued_rows = batch.rows
+                + batcher.pending_rows()
+                + self
+                    .port_loads
+                    .iter()
+                    .map(|l| l.load(Ordering::Relaxed))
+                    .sum::<usize>();
+            let snap = self.metrics.snapshot();
+            let window_p99_ns = snap.window_latency_quantile_ns(&gov.last_snap, 0.99);
+            let chosen = gov.policy.choose(&LoadSignals {
+                queued_rows,
+                window_p99_ns,
+                n_variants: self.quanta.len(),
+            });
+            gov.last_snap = snap;
+            let v = chosen.min(self.quanta.len() - 1);
+            if v != self.active_variant.swap(v, Ordering::Relaxed) {
+                self.metrics.note_variant_switch();
+            }
+            batch.variant = v;
+            batcher.set_quantum(self.quanta[v]);
+        }
         self.in_flight.fetch_add(1, Ordering::SeqCst);
         let result = self.router.lock().unwrap().dispatch(batch);
         match result {
@@ -318,49 +399,107 @@ pub struct Coordinator {
     pub metrics: Arc<Metrics>,
     /// Model row width, for request validation at submit.
     input_width: usize,
-    /// Half-range of the input format (`2^(in_bits-1)`), for validation.
+    /// Half-range of the reference variant's input format
+    /// (`2^(in_bits-1)`), for validation.
     in_half: i64,
+    /// Worker (re)spawn context, kept for [`Coordinator::revive_worker`].
+    model: Arc<CompiledModel>,
+    cost: Arc<CostTable>,
+    tx_done: Sender<(usize, Vec<Response>)>,
+    queue_depth: usize,
+}
+
+/// Spawn one PE worker thread bound to slot `worker_id`, reusing the
+/// slot's outstanding-work counters (they outlive any one incarnation
+/// of the worker — the router and the governor read them by slot).
+#[allow(clippy::too_many_arguments)]
+fn spawn_worker(
+    worker_id: usize,
+    model: &Arc<CompiledModel>,
+    cost: &Arc<CostTable>,
+    tx_done: &Sender<(usize, Vec<Response>)>,
+    metrics: &Arc<Metrics>,
+    queue_depth: usize,
+    outstanding_rows: Arc<AtomicUsize>,
+    outstanding_batches: Arc<AtomicUsize>,
+) -> (WorkerPort, JoinHandle<()>) {
+    let (tx, rx) = sync_channel::<WorkerMsg>(queue_depth.max(1));
+    let port = WorkerPort {
+        tx,
+        outstanding_rows: Arc::clone(&outstanding_rows),
+        outstanding_batches: Arc::clone(&outstanding_batches),
+        alive: true,
+    };
+    let done = tx_done.clone();
+    let m = Arc::clone(metrics);
+    let c = Arc::clone(cost);
+    let engine = PackedEngine::new(Arc::clone(model));
+    let handle = std::thread::spawn(move || {
+        worker_loop(
+            worker_id,
+            engine,
+            rx,
+            done,
+            m,
+            c,
+            outstanding_rows,
+            outstanding_batches,
+        );
+    });
+    (port, handle)
 }
 
 impl Coordinator {
-    /// Spawn `cfg.n_pes` worker PEs serving the shared compiled model.
-    /// Plans are compiled by [`CompiledModel::compile`], exactly once,
-    /// before this call; workers only clone the `Arc`.
+    /// Spawn `cfg.n_pes` worker PEs serving the shared compiled model
+    /// at its reference variant, with no precision governor (a
+    /// multi-variant model serves variant 0 until a policy is installed
+    /// via [`Coordinator::start_with_policy`]). Plans are compiled by
+    /// [`CompiledModel::compile`], exactly once, before this call;
+    /// workers only clone the `Arc`.
     pub fn start(model: Arc<CompiledModel>, cfg: ServeConfig, cost: CostTable) -> Coordinator {
-        let metrics = Arc::new(Metrics::default());
+        Coordinator::start_with_policy(model, cfg, cost, Box::new(PinnedVariant(0)))
+    }
+
+    /// As [`Coordinator::start`], with a precision-governor policy
+    /// consulted at every batch dispatch (DESIGN.md §13).
+    pub fn start_with_policy(
+        model: Arc<CompiledModel>,
+        cfg: ServeConfig,
+        cost: CostTable,
+        policy: Box<dyn GovernorPolicy>,
+    ) -> Coordinator {
+        let names: Vec<String> =
+            model.variants().iter().map(|v| v.name().to_string()).collect();
+        let metrics = Arc::new(Metrics::with_variant_names(&names));
         let (tx_done, rx_done) = channel::<(usize, Vec<Response>)>();
         let cost = Arc::new(cost);
+        let queue_depth = cfg.queue_depth.max(1);
         let mut ports = vec![];
         let mut workers = vec![];
+        let mut port_loads = vec![];
         for worker_id in 0..cfg.n_pes.max(1) {
-            let (tx, rx) = sync_channel::<WorkerMsg>(cfg.queue_depth.max(1));
             let outstanding_rows = Arc::new(AtomicUsize::new(0));
             let outstanding_batches = Arc::new(AtomicUsize::new(0));
-            ports.push(WorkerPort {
-                tx,
-                outstanding_rows: Arc::clone(&outstanding_rows),
-                outstanding_batches: Arc::clone(&outstanding_batches),
-                alive: true,
-            });
-            let done = tx_done.clone();
-            let m = Arc::clone(&metrics);
-            let c = Arc::clone(&cost);
-            let engine = PackedEngine::new(Arc::clone(&model));
-            workers.push(std::thread::spawn(move || {
-                worker_loop(
-                    worker_id,
-                    engine,
-                    rx,
-                    done,
-                    m,
-                    c,
-                    outstanding_rows,
-                    outstanding_batches,
-                );
-            }));
+            port_loads.push(Arc::clone(&outstanding_rows));
+            let (port, handle) = spawn_worker(
+                worker_id,
+                &model,
+                &cost,
+                &tx_done,
+                &metrics,
+                queue_depth,
+                outstanding_rows,
+                outstanding_batches,
+            );
+            ports.push(port);
+            workers.push(handle);
         }
+        let quanta: Vec<usize> =
+            model.variants().iter().map(|v| v.batch_quantum()).collect();
+        let mut batcher = Batcher::new(cfg.target_rows, 2);
+        batcher.set_quantum(quanta[0]);
         let shared = Arc::new(Shared {
-            batcher: Mutex::new(Batcher::new(cfg.target_rows, 2)),
+            batcher: Mutex::new(batcher),
             router: Mutex::new(Router {
                 ports,
                 policy: cfg.policy,
@@ -369,6 +508,13 @@ impl Coordinator {
             in_flight: AtomicUsize::new(0),
             stop_deadline: AtomicBool::new(false),
             metrics: Arc::clone(&metrics),
+            governor: Mutex::new(GovernorState {
+                policy,
+                last_snap: MetricsSnapshot::empty(quanta.len()),
+            }),
+            port_loads,
+            quanta,
+            active_variant: AtomicUsize::new(0),
         });
         // Deadline thread: tick at half the deadline so a straggler
         // flushes within (0.5, 1.0]× the configured deadline.
@@ -388,7 +534,17 @@ impl Coordinator {
             metrics,
             input_width: model.input_width(),
             in_half: 1i64 << (model.in_bits() - 1),
+            model,
+            cost,
+            tx_done,
+            queue_depth,
         }
+    }
+
+    /// The variant the governor chose at the most recent dispatch
+    /// (observability; per-batch billing follows each batch's own tag).
+    pub fn active_variant(&self) -> usize {
+        self.shared.active_variant.load(Ordering::Relaxed)
     }
 
     /// Submit a request (may trigger a batch dispatch). Shape and range
@@ -450,6 +606,54 @@ impl Coordinator {
         });
     }
 
+    /// Rolling-restart companion of [`kill_worker`]: respawn a dead
+    /// PE in its slot — fresh thread, fresh bounded queue, same
+    /// outstanding-work counters — and re-arm routing to it. Returns
+    /// `false` (and does nothing) for an out-of-range slot or a worker
+    /// that is still alive; a killed worker is first joined, so any
+    /// work still in its old queue completes and is collected before
+    /// the replacement takes over. Without this, every
+    /// [`kill_worker`] permanently shrank serving capacity.
+    ///
+    /// [`kill_worker`]: Coordinator::kill_worker
+    pub fn revive_worker(&mut self, idx: usize) -> bool {
+        if idx >= self.workers.len() {
+            return false;
+        }
+        {
+            let router = self.shared.router.lock().unwrap();
+            if router.ports[idx].alive {
+                return false;
+            }
+        }
+        // The old incarnation exits once its queued work (and the
+        // pending Stop) drains; joining here is what makes "revive"
+        // safe — two workers never share a slot.
+        let (mut port, handle) = spawn_worker(
+            idx,
+            &self.model,
+            &self.cost,
+            &self.tx_done,
+            &self.metrics,
+            self.queue_depth,
+            Arc::clone(&self.shared.port_loads[idx]),
+            {
+                let router = self.shared.router.lock().unwrap();
+                Arc::clone(&router.ports[idx].outstanding_batches)
+            },
+        );
+        let old = std::mem::replace(&mut self.workers[idx], handle);
+        let _ = old.join();
+        // Install the new port only after the old worker is gone: its
+        // leftover counters were either drained by the worker itself or
+        // written off by `drain`.
+        let mut router = self.shared.router.lock().unwrap();
+        std::mem::swap(&mut router.ports[idx], &mut port);
+        // `port` now holds the dead incarnation's channel; dropping it
+        // closes that queue for good.
+        true
+    }
+
     /// Flush stragglers and wait for every response. On failure the
     /// error still carries whatever responses could be collected —
     /// completed work is never stranded behind an error.
@@ -487,15 +691,15 @@ impl Coordinator {
                     self.shared.in_flight.fetch_sub(1, Ordering::SeqCst);
                     out.append(&mut rs);
                 }
-                Err(RecvTimeoutError::Timeout) => {
+                // Disconnected is unreachable while the coordinator
+                // holds its respawn sender (kept for `revive_worker`);
+                // both arms mean "no response right now" — write off
+                // work held by exited workers and keep collecting. The
+                // loop ends when `in_flight` reaches zero: every
+                // dispatched batch is either answered on `rx_done` or
+                // counted in some port's outstanding batches.
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
                     write_off(&mut lost_workers, &mut lost_rows);
-                }
-                Err(RecvTimeoutError::Disconnected) => {
-                    // Every worker is gone and the channel is empty:
-                    // account for their held work, then stop waiting.
-                    write_off(&mut lost_workers, &mut lost_rows);
-                    self.shared.in_flight.store(0, Ordering::SeqCst);
-                    break;
                 }
             }
         }
@@ -558,8 +762,15 @@ fn worker_loop(
             WorkerMsg::Stop => break,
         };
         let t0 = Instant::now();
+        // The variant this batch was tagged with at dispatch is the
+        // variant that executes — and the variant that gets billed.
+        let variant = batch.variant.min(engine.model().n_variants() - 1);
+        let in_shift = engine.model().variant(variant).in_shift();
         // Gather rows into the reusable buffer (rows keep their
-        // capacity; `n_rows` tracks the live prefix), run packed,
+        // capacity; `n_rows` tracks the live prefix), requantizing
+        // reference-precision request values into the executing
+        // variant's first-layer format (arithmetic right shift — the
+        // per-variant oracle applies the same transform), run packed,
         // scatter back per request.
         let mut n_rows = 0usize;
         for entry in &batch.entries {
@@ -568,17 +779,23 @@ fn worker_loop(
                     rows_buf.push(Vec::new());
                 }
                 rows_buf[n_rows].clear();
-                rows_buf[n_rows].extend_from_slice(row);
+                if in_shift == 0 {
+                    rows_buf[n_rows].extend_from_slice(row);
+                } else {
+                    rows_buf[n_rows].extend(row.iter().map(|&v| v >> in_shift));
+                }
                 n_rows += 1;
             }
         }
-        let stats = engine.forward_batch_into(&rows_buf[..n_rows], &mut scratch, &mut logits);
+        let stats =
+            engine.forward_batch_into(&rows_buf[..n_rows], variant, &mut scratch, &mut logits);
         let ns = t0.elapsed().as_nanos() as u64;
         // Exact per-format billing: with a mixed-precision schedule the
         // layers run at different widths, so the worker hands the cost
-        // table the by-format cycle breakdown, not one format.
+        // table the by-format cycle breakdown, not one format — and the
+        // whole batch lands in the executed variant's metrics bucket.
         let pj = cost.batch_energy_pj(&stats);
-        metrics.add_batch(n_rows as u64, stats, pj, ns);
+        metrics.add_batch(n_rows as u64, variant, stats, pj, ns);
         let mut responses = vec![];
         let mut offset = 0;
         for entry in &batch.entries {
@@ -586,6 +803,7 @@ fn worker_loop(
             responses.push(Response {
                 id: entry.req.id,
                 logits: logits[offset..offset + n].to_vec(),
+                variant,
             });
             offset += n;
             metrics.observe_latency_ns(entry.submitted_at.elapsed().as_nanos() as u64);
@@ -603,28 +821,11 @@ mod tests {
     use super::*;
     use crate::nn::exec::mlp_forward_row;
     use crate::nn::weights::QuantLayer;
+    use crate::testutil::{flat_cost as tiny_cost, random_dense_stack_uniform};
     use crate::workload::synth::XorShift64;
 
     fn layers(rng: &mut XorShift64) -> Vec<QuantLayer> {
-        vec![
-            QuantLayer::new(
-                (0..8).map(|_| (0..5).map(|_| rng.q_raw(8)).collect()).collect(),
-                8,
-            ),
-            QuantLayer::new(
-                (0..5).map(|_| (0..3).map(|_| rng.q_raw(8)).collect()).collect(),
-                8,
-            ),
-        ]
-    }
-
-    fn tiny_cost() -> CostTable {
-        CostTable {
-            mhz: 1000.0,
-            s1_cycle_pj: crate::bits::format::FORMATS.iter().map(|&b| (b, 1.0)).collect(),
-            s2_pass_pj: 0.5,
-            area_um2: 1000.0,
-        }
+        random_dense_stack_uniform(rng, &[8, 5, 3], 8)
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! `eval autoscale` — the accuracy/energy/latency Pareto across a
+//! precision-variant set (DESIGN.md §13).
+//!
+//! One variant set per workload — the matched-filter MLP
+//! ([`synth_mlp_stack`], where absolute classification accuracy is
+//! meaningful) and the synthetic CNN ([`synth_cnn_stack`], judged by
+//! fidelity to the hi-fi variant) — is compiled once (one shared CSD
+//! plan arena) and the same reference-precision sample batch is pushed
+//! through **every** variant, exactly as the serving loop would
+//! (requantization by the variant's `in_shift`, packed execution
+//! oracle-checked bit-exact first). Each row of the table is one
+//! operating point the governor trades between: accuracy and hi-fi
+//! agreement against exact Stage-1/Stage-2 work, pre-characterized
+//! energy and the cycle-time latency estimate at the deployment clock.
+
+use std::sync::Arc;
+
+use crate::anyhow;
+use crate::coordinator::cost::CostTable;
+use crate::coordinator::engine::PackedEngine;
+use crate::coordinator::model::{CompiledModel, VariantSpec};
+use crate::energy::report::table;
+use crate::nn::conv::LayerOp;
+use crate::nn::exec::{argmax_class, stack_forward_row};
+use crate::nn::weights::LayerPrecision;
+use crate::workload::synth::{synth_cnn_stack, synth_mlp_stack, Digits, ImageSet};
+
+/// Samples per workload (a multiple of every variant's batch quantum).
+pub const SAMPLES: usize = 96;
+
+/// One Pareto point: a (workload, variant) cell.
+#[derive(Debug, Clone)]
+pub struct ParetoRow {
+    pub workload: &'static str,
+    pub variant: String,
+    /// Top-1 accuracy against the workload's labels.
+    pub accuracy: f64,
+    /// Top-1 agreement with the reference (hi-fi) variant.
+    pub fidelity: f64,
+    pub s1_cycles_per_row: f64,
+    pub s2_passes_per_row: f64,
+    pub pj_per_row: f64,
+    /// Datapath-cycle latency estimate per row at the cost table's
+    /// clock (Stage-1 + Stage-2 cycles, serial execution).
+    pub est_us_per_row: f64,
+}
+
+/// The MLP's variant list: a 6-bit middle step makes all three
+/// operating points distinct on a 2-layer stack (the standard trio's
+/// balanced/turbo coincide there).
+fn mlp_specs() -> Vec<VariantSpec> {
+    vec![
+        VariantSpec::new(
+            "hifi-8",
+            vec![LayerPrecision::new(8, 16), LayerPrecision::new(8, 16)],
+        ),
+        VariantSpec::new(
+            "balanced-6",
+            vec![LayerPrecision::new(6, 12), LayerPrecision::new(8, 16)],
+        ),
+        VariantSpec::new(
+            "turbo-4",
+            vec![LayerPrecision::new(4, 8), LayerPrecision::new(8, 16)],
+        ),
+    ]
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_workload(
+    workload: &'static str,
+    stack: &[LayerOp],
+    model: &Arc<CompiledModel>,
+    xs: &[Vec<i64>],
+    ys: &[usize],
+    classes: usize,
+    cost: &CostTable,
+    out: &mut Vec<ParetoRow>,
+) -> anyhow::Result<()> {
+    let engine = PackedEngine::new(Arc::clone(model));
+    let n = xs.len();
+    let mut ref_preds: Vec<usize> = vec![];
+    for v in 0..model.n_variants() {
+        let var = model.variant(v);
+        let batch: Vec<Vec<i64>> = xs.iter().map(|r| var.quantize_row(r)).collect();
+        let (got, stats) = engine.forward_batch_variant(&batch, v);
+        // Bit-exactness before pricing: the packed result must equal
+        // the per-variant scalar oracle on every sampled row.
+        for (b, row) in batch.iter().enumerate() {
+            let want = stack_forward_row(row, stack, var.schedule());
+            anyhow::ensure!(
+                got[b] == want,
+                "{workload}/{}: row {b} diverges from the scalar oracle",
+                var.name()
+            );
+        }
+        let preds: Vec<usize> = got.iter().map(|l| argmax_class(l, classes)).collect();
+        if v == 0 {
+            ref_preds = preds.clone();
+        }
+        let accuracy =
+            preds.iter().zip(ys).filter(|(p, y)| p == y).count() as f64 / n as f64;
+        let fidelity =
+            preds.iter().zip(&ref_preds).filter(|(p, r)| p == r).count() as f64 / n as f64;
+        let cycles = (stats.s1_cycles + stats.s2_passes) as f64;
+        out.push(ParetoRow {
+            workload,
+            variant: var.name().to_string(),
+            accuracy,
+            fidelity,
+            s1_cycles_per_row: stats.s1_cycles as f64 / n as f64,
+            s2_passes_per_row: stats.s2_passes as f64 / n as f64,
+            pj_per_row: cost.batch_energy_pj(&stats) / n as f64,
+            est_us_per_row: cycles / n as f64 / cost.mhz,
+        });
+    }
+    Ok(())
+}
+
+/// Every (workload, variant) Pareto point, oracle-verified then priced.
+pub fn rows(cost: &CostTable) -> anyhow::Result<Vec<ParetoRow>> {
+    let mut out = vec![];
+
+    let mlp = synth_mlp_stack(8);
+    let model = CompiledModel::compile_variants(mlp.clone(), mlp_specs())?;
+    let digits = Digits::standard();
+    let (xs, ys) = digits.sample(SAMPLES, 0.3, 0xA07A5);
+    run_workload("mlp-digits", &mlp, &model, &xs, &ys, 10, cost, &mut out)?;
+
+    let cnn = synth_cnn_stack(0xA07A6, 8);
+    let model = CompiledModel::compile_variants(cnn.clone(), VariantSpec::standard_trio(3))?;
+    let images = ImageSet::standard();
+    let (xs, ys) = images.sample(SAMPLES, 0.3, 0xA07A7, 8);
+    run_workload("cnn-synth", &cnn, &model, &xs, &ys, 10, cost, &mut out)?;
+
+    Ok(out)
+}
+
+pub fn run() -> anyhow::Result<()> {
+    println!(
+        "== autoscale sweep: the variant-set Pareto the precision governor \
+         trades across ({SAMPLES} samples per workload, @1GHz) =="
+    );
+    let cost = CostTable::characterize(1000.0);
+    let rs = rows(&cost)?;
+    let trows: Vec<Vec<String>> = rs
+        .iter()
+        .map(|r| {
+            vec![
+                r.workload.to_string(),
+                r.variant.clone(),
+                format!("{:.1}%", r.accuracy * 100.0),
+                format!("{:.1}%", r.fidelity * 100.0),
+                format!("{:.1}", r.s1_cycles_per_row),
+                format!("{:.1}", r.s2_passes_per_row),
+                format!("{:.2}", r.pj_per_row),
+                format!("{:.3}", r.est_us_per_row),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        table(
+            &[
+                "workload",
+                "variant",
+                "top-1 acc",
+                "vs hi-fi",
+                "S1 cyc/row",
+                "S2 pass/row",
+                "pJ/row",
+                "est us/row",
+            ],
+            &trows
+        )
+    );
+    let hifi = &rs[0];
+    let turbo = &rs[2];
+    println!(
+        "(every cell bit-exact vs the per-variant scalar oracle; on the MLP the \
+         turbo variant keeps {:.1}% top-1 at {:.1}% of the hi-fi variant's \
+         energy per row — the spread `eval` prices and the serving governor \
+         exploits under load)\n",
+        turbo.accuracy * 100.0,
+        turbo.pj_per_row / hifi.pj_per_row * 100.0
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pareto_orders_work_and_keeps_mlp_accuracy() {
+        let cost = CostTable::characterize(1000.0);
+        let rs = rows(&cost).unwrap();
+        let mlp: Vec<&ParetoRow> =
+            rs.iter().filter(|r| r.workload == "mlp-digits").collect();
+        let cnn: Vec<&ParetoRow> =
+            rs.iter().filter(|r| r.workload == "cnn-synth").collect();
+        assert_eq!(mlp.len(), 3);
+        assert_eq!(cnn.len(), 3);
+        for set in [&mlp, &cnn] {
+            // The reference variant agrees with itself by definition.
+            assert_eq!(set[0].fidelity, 1.0);
+            // Exact work strictly decreases as precision drops: fewer
+            // words per packed column at every shed step.
+            assert!(
+                set[2].s1_cycles_per_row < set[1].s1_cycles_per_row
+                    && set[1].s1_cycles_per_row < set[0].s1_cycles_per_row,
+                "{}: S1 cycles must strictly decrease across the trio",
+                set[0].workload
+            );
+            // And the cheapest variant is cheaper in billed energy too.
+            assert!(
+                set[2].pj_per_row < set[0].pj_per_row,
+                "{}: turbo must undercut hi-fi pJ/row",
+                set[0].workload
+            );
+        }
+        // The matched-filter MLP keeps meaningful accuracy at every
+        // operating point (96/96, 96/96, 87/96 at these seeds).
+        assert!(mlp[0].accuracy >= 0.9, "hi-fi accuracy {}", mlp[0].accuracy);
+        assert!(mlp[1].accuracy >= 0.9, "balanced accuracy {}", mlp[1].accuracy);
+        assert!(
+            mlp[2].accuracy >= 0.75,
+            "turbo must degrade gracefully, got {}",
+            mlp[2].accuracy
+        );
+        assert!(mlp[2].fidelity >= 0.75, "turbo fidelity {}", mlp[2].fidelity);
+    }
+
+    #[test]
+    fn mlp_variant_list_is_three_distinct_operating_points() {
+        let specs = mlp_specs();
+        assert_eq!(specs.len(), 3);
+        let first_layer: Vec<u32> = specs.iter().map(|s| s.schedule[0].in_bits).collect();
+        assert_eq!(first_layer, vec![8, 6, 4]);
+        // Compiles as one variant set over the matched-filter stack.
+        let model =
+            CompiledModel::compile_variants(synth_mlp_stack(8), specs).unwrap();
+        assert_eq!(model.n_variants(), 3);
+        assert_eq!(model.variant(2).in_shift(), 4);
+    }
+}

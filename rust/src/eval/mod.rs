@@ -7,11 +7,15 @@
 //! (CSD vs binary recoding, max coalesced shift, Stage-2 bypass);
 //! `precision` sweeps per-layer precision schedules through the serving
 //! engine (the run-time repacking story, DESIGN.md §10); `conv` runs
-//! the same sweep on the im2col CNN serving path (DESIGN.md §12).
+//! the same sweep on the im2col CNN serving path (DESIGN.md §12);
+//! `autoscale` prices the accuracy/energy/latency Pareto across a
+//! precision-variant set — the operating points the serving governor
+//! switches between at run time (DESIGN.md §13).
 
 use crate::anyhow;
 
 pub mod ablation;
+pub mod autoscale;
 pub mod conv;
 pub mod fig10;
 pub mod fig6;
@@ -32,6 +36,7 @@ pub fn run(target: &str) -> anyhow::Result<()> {
         "ablation" => ablation::run(),
         "precision" => precision::run(),
         "conv" => conv::run(),
+        "autoscale" => autoscale::run(),
         "all" => {
             fig6::run()?;
             fig7::run()?;
@@ -41,11 +46,12 @@ pub fn run(target: &str) -> anyhow::Result<()> {
             summary::run()?;
             ablation::run()?;
             precision::run()?;
-            conv::run()
+            conv::run()?;
+            autoscale::run()
         }
         other => anyhow::bail!(
             "unknown eval target `{other}` (fig6..fig10, summary, ablation, \
-             precision, conv, all)"
+             precision, conv, autoscale, all)"
         ),
     }
 }

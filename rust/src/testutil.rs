@@ -1,4 +1,11 @@
-//! Shared test/bench instrumentation.
+//! Shared test/bench instrumentation and model-construction scaffolds.
+//!
+//! The `random_*` builders and the [`engine_for`]/[`flat_cost`]
+//! constructors are the one home of the "random stack + schedule +
+//! `CompiledModel::compile*(..).unwrap()`" scaffolding that used to be
+//! copy-pasted across the engine unit tests and every serving
+//! integration test — one implementation, so every test generates
+//! models the same way.
 //!
 //! [`CountingAlloc`] is a counting wrapper around the system allocator
 //! used by both the zero-allocation integration test
@@ -19,6 +26,153 @@
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::bits::format::FORMATS;
+use crate::coordinator::cost::CostTable;
+use crate::coordinator::engine::PackedEngine;
+use crate::coordinator::model::CompiledModel;
+use crate::nn::conv::{ConvLayer, ConvShape};
+use crate::nn::weights::{LayerPrecision, QuantLayer};
+use crate::workload::synth::XorShift64;
+
+/// A deterministic random `k×n` quantized dense layer at `bits`-wide
+/// weights — the one weight-matrix generator every engine/serving test
+/// used to hand-roll.
+pub fn random_dense(rng: &mut XorShift64, k: usize, n: usize, bits: u32) -> QuantLayer {
+    QuantLayer::new(
+        (0..k)
+            .map(|_| (0..n).map(|_| rng.q_raw(bits)).collect())
+            .collect(),
+        bits,
+    )
+}
+
+/// A chain of dense layers along `dims` (`dims.len() - 1` layers), one
+/// weight width per layer.
+pub fn random_dense_stack(
+    rng: &mut XorShift64,
+    dims: &[usize],
+    w_bits: &[u32],
+) -> Vec<QuantLayer> {
+    assert_eq!(dims.len(), w_bits.len() + 1, "one width per layer");
+    dims.windows(2)
+        .zip(w_bits)
+        .map(|(w, &b)| random_dense(rng, w[0], w[1], b))
+        .collect()
+}
+
+/// [`random_dense_stack`] with one uniform weight width.
+pub fn random_dense_stack_uniform(
+    rng: &mut XorShift64,
+    dims: &[usize],
+    bits: u32,
+) -> Vec<QuantLayer> {
+    let w_bits = vec![bits; dims.len() - 1];
+    random_dense_stack(rng, dims, &w_bits)
+}
+
+/// A random *valid* conv geometry over `cin` input channels (small
+/// spatial sizes, stride 1–2, padding below the kernel).
+pub fn random_conv_shape(rng: &mut XorShift64, cin: usize) -> ConvShape {
+    loop {
+        let h = 3 + (rng.next_u64() % 4) as usize;
+        let w = 3 + (rng.next_u64() % 4) as usize;
+        let kh = 1 + (rng.next_u64() % 3) as usize;
+        let kw = 1 + (rng.next_u64() % 3) as usize;
+        let stride = 1 + (rng.next_u64() % 2) as usize;
+        let pad = (rng.next_u64() % kh.min(kw) as u64) as usize;
+        let shape = ConvShape {
+            cin,
+            h,
+            w,
+            cout: 1 + (rng.next_u64() % 3) as usize,
+            kh,
+            kw,
+            stride,
+            pad,
+        };
+        if shape.validate().is_ok() {
+            return shape;
+        }
+    }
+}
+
+/// A conv layer with random weights over a given geometry.
+pub fn random_conv_for_shape(
+    rng: &mut XorShift64,
+    shape: ConvShape,
+    w_bits: u32,
+) -> ConvLayer {
+    let w = random_dense(rng, shape.patch_len(), shape.cout, w_bits);
+    ConvLayer::new(w, shape).expect("validated shape")
+}
+
+/// A conv layer with both geometry and weights randomized.
+pub fn random_conv_layer(rng: &mut XorShift64, cin: usize, w_bits: u32) -> ConvLayer {
+    let shape = random_conv_shape(rng, cin);
+    random_conv_for_shape(rng, shape, w_bits)
+}
+
+/// A random *valid* precision pair: any Soft SIMD activation width with
+/// an accumulator at least as wide.
+pub fn random_precision(rng: &mut XorShift64) -> LayerPrecision {
+    let in_bits = FORMATS[(rng.next_u64() % FORMATS.len() as u64) as usize];
+    let wider: Vec<u32> = FORMATS.iter().copied().filter(|&b| b >= in_bits).collect();
+    let acc_bits = wider[(rng.next_u64() % wider.len() as u64) as usize];
+    LayerPrecision::new(in_bits, acc_bits)
+}
+
+/// A random valid schedule, one [`random_precision`] pair per layer.
+pub fn random_schedule(rng: &mut XorShift64, n_layers: usize) -> Vec<LayerPrecision> {
+    (0..n_layers).map(|_| random_precision(rng)).collect()
+}
+
+/// A random batch: `rows` rows of `width` raws at `in_bits`.
+pub fn random_batch(
+    rng: &mut XorShift64,
+    rows: usize,
+    width: usize,
+    in_bits: u32,
+) -> Vec<Vec<i64>> {
+    (0..rows)
+        .map(|_| (0..width).map(|_| rng.q_raw(in_bits)).collect())
+        .collect()
+}
+
+/// `CompiledModel::compile_scheduled(..).unwrap()` + engine binding —
+/// the ubiquitous test scaffold, in one place instead of ~10 copies.
+pub fn engine_for(layers: Vec<QuantLayer>, sched: Vec<LayerPrecision>) -> PackedEngine {
+    PackedEngine::new(compiled_for(layers, sched))
+}
+
+/// The `.unwrap()`ed scheduled compile alone, for tests that also need
+/// the shared `Arc`.
+pub fn compiled_for(
+    layers: Vec<QuantLayer>,
+    sched: Vec<LayerPrecision>,
+) -> Arc<CompiledModel> {
+    CompiledModel::compile_scheduled(layers, sched).expect("valid test model")
+}
+
+/// Uniform-precision shorthand for [`engine_for`].
+pub fn engine_uniform(layers: Vec<QuantLayer>, in_bits: u32, acc_bits: u32) -> PackedEngine {
+    PackedEngine::new(
+        CompiledModel::compile(layers, in_bits, acc_bits).expect("valid test model"),
+    )
+}
+
+/// The flat-rate cost table every serving test used to re-declare
+/// inline: 1 pJ per Stage-1 cycle at every format, 0.5 pJ per Stage-2
+/// pass — simple enough that expected energies are mental arithmetic.
+pub fn flat_cost() -> CostTable {
+    CostTable {
+        mhz: 1000.0,
+        s1_cycle_pj: FORMATS.iter().map(|&b| (b, 1.0)).collect(),
+        s2_pass_pj: 0.5,
+        area_um2: 1000.0,
+    }
+}
 
 /// Process-wide allocation counter backing [`CountingAlloc`].
 pub static ALLOCS: AtomicU64 = AtomicU64::new(0);

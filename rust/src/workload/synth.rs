@@ -184,6 +184,52 @@ pub fn synth_cnn_stack(seed: u64, w_bits: u32) -> Vec<crate::nn::conv::LayerOp> 
     vec![LayerOp::Conv(c1), LayerOp::Conv(c2), LayerOp::Dense(head)]
 }
 
+/// The standard synthetic MLP workload over [`Digits::standard`]
+/// glyphs — the dense companion of [`synth_cnn_stack`] and the
+/// accuracy-bearing workload of the `eval autoscale` Pareto sweep
+/// (DESIGN.md §13): a 64→10 *sparse sign matched filter* (each class's
+/// three strongest template pixels at weight ±0.25) behind a ×0.5
+/// diagonal 10→10 head that adds one more layer boundary for a
+/// precision schedule to cross.
+///
+/// The construction is deliberate: ±0.25 and 0.5 are powers of two, so
+/// every product is an exact arithmetic shift at *any* activation
+/// width (no CSD approximation error muddying the precision
+/// comparison), and a 3-tap correlation stays inside the wrapping
+/// `Q1.(acc−1)` accumulator range at every supported format. Unlike
+/// random weights, classification accuracy is therefore meaningful —
+/// and degrades gracefully rather than catastrophically as the serving
+/// precision drops, which is exactly the accuracy/energy trade the
+/// autoscale governor exists to exploit.
+pub fn synth_mlp_stack(w_bits: u32) -> Vec<crate::nn::conv::LayerOp> {
+    use crate::nn::conv::LayerOp;
+    use crate::nn::weights::QuantLayer;
+    assert!(w_bits >= 4, "matched filter needs ±2^(w_bits-3) weights");
+    let digits = Digits::standard();
+    let quarter = 1i64 << (w_bits - 3);
+    let mut w0 = vec![vec![0i64; digits.classes]; digits.pixels];
+    for (c, template) in digits.templates.iter().enumerate() {
+        let mut idx: Vec<usize> = (0..digits.pixels).collect();
+        idx.sort_by(|&a, &b| {
+            template[b].abs().partial_cmp(&template[a].abs()).expect("finite")
+        });
+        for &k in idx.iter().take(3) {
+            w0[k][c] = if template[k] > 0.0 { quarter } else { -quarter };
+        }
+    }
+    let head: Vec<Vec<i64>> = (0..digits.classes)
+        .map(|i| {
+            (0..digits.classes)
+                .map(|j| if i == j { 1i64 << (w_bits - 2) } else { 0 })
+                .collect()
+        })
+        .collect();
+    vec![
+        LayerOp::Dense(QuantLayer::new(w0, w_bits)),
+        LayerOp::Dense(QuantLayer::new(head, w_bits)),
+    ]
+}
+
 /// A layer of a quantization scenario (Fig. 10 workloads): how many
 /// multiplications at which operand widths.
 #[derive(Debug, Clone, Copy)]
@@ -329,6 +375,35 @@ mod tests {
         assert_eq!(stack[2].out_len(), 10);
         assert_eq!(stack[0].patch_rows(), 64, "8×8 output pixels per image");
         assert_eq!(stack[1].patch_rows(), 16, "stride-2 4×4 output pixels");
+    }
+
+    #[test]
+    fn synth_mlp_stack_classifies_its_own_noisy_digits() {
+        use crate::nn::exec::{argmax_class, stack_forward_row};
+        use crate::nn::weights::uniform_schedule;
+        let stack = synth_mlp_stack(8);
+        assert_eq!(stack.len(), 2);
+        assert_eq!(stack[0].in_len(), 64);
+        assert_eq!(stack[1].out_len(), 10);
+        // Each class's filter has exactly 3 taps, at ±0.25.
+        let w0 = stack[0].weights();
+        for c in 0..10 {
+            let taps: Vec<i64> =
+                (0..64).map(|k| w0.w_raw[k][c]).filter(|&v| v != 0).collect();
+            assert_eq!(taps.len(), 3, "class {c}");
+            assert!(taps.iter().all(|&v| v == 32 || v == -32), "class {c}");
+        }
+        // The matched filter classifies its own noisy samples well at
+        // the hi-fi schedule (96/100 at this seed by construction).
+        let sched = uniform_schedule(8, 16, 2);
+        let d = Digits::standard();
+        let (xs, ys) = d.sample(100, 0.3, 0xA5C4);
+        let correct = xs
+            .iter()
+            .zip(&ys)
+            .filter(|(x, &y)| argmax_class(&stack_forward_row(x, &stack, &sched), 10) == y)
+            .count();
+        assert!(correct >= 90, "matched filter got {correct}/100 at 8-bit");
     }
 
     #[test]

@@ -66,13 +66,13 @@ fn assert_steady_state_alloc_free_stack(
     let mut out = Vec::new();
     // First batch: allowed (and expected) to allocate — it warms every
     // scratch buffer and the output rows.
-    let warm_stats = engine.forward_batch_into(&batch, &mut scratch, &mut out);
+    let warm_stats = engine.forward_batch_into(&batch, 0, &mut scratch, &mut out);
     let warm_out = out.clone();
     // Second and subsequent batches: zero allocations, bit-identical
     // results, identical billing.
     for i in 2..=6 {
         let before = CountingAlloc::count();
-        let stats = engine.forward_batch_into(&batch, &mut scratch, &mut out);
+        let stats = engine.forward_batch_into(&batch, 0, &mut scratch, &mut out);
         let after = CountingAlloc::count();
         assert_eq!(
             after - before,
@@ -164,12 +164,57 @@ fn forward_batch_is_allocation_free_after_warmup() {
         .collect();
     let mut scratch = EngineScratch::new();
     let mut out = Vec::new();
-    engine.forward_batch_into(&big, &mut scratch, &mut out);
+    engine.forward_batch_into(&big, 0, &mut scratch, &mut out);
     for &rows in &[6usize, 24, 1, 17, 24] {
         let before = CountingAlloc::count();
-        engine.forward_batch_into(&big[..rows], &mut scratch, &mut out);
+        engine.forward_batch_into(&big[..rows], 0, &mut scratch, &mut out);
         let after = CountingAlloc::count();
         assert_eq!(after - before, 0, "batch of {rows} rows allocated after warmup");
+        assert_eq!(out.len(), rows);
+    }
+
+    // Run-time variant switching (DESIGN.md §13): a multi-variant model
+    // served with one scratch. After one warm batch *per variant* (each
+    // variant's lane occupancy sizes the buffers differently), any
+    // interleaving of variants and batch sizes must allocate nothing —
+    // the governor switches precision mid-stream, so a switch that
+    // touched the allocator would put the hot path back on the heap.
+    use softsimd::coordinator::model::VariantSpec;
+    let mut rng4 = XorShift64::new(0xA1113);
+    let layers = random_layers(&mut rng4, &[16, 12, 8, 4]);
+    let ops: Vec<softsimd::nn::conv::LayerOp> =
+        layers.into_iter().map(softsimd::nn::conv::LayerOp::Dense).collect();
+    let model =
+        CompiledModel::compile_variants(ops, VariantSpec::standard_trio(3)).unwrap();
+    let n_variants = model.n_variants();
+    let engine = PackedEngine::new(model);
+    let mut scratch = EngineScratch::new();
+    let mut out = Vec::new();
+    // Reference-precision rows, requantized per variant exactly like
+    // the serving loop does.
+    let raw: Vec<Vec<i64>> = (0..24)
+        .map(|_| (0..16).map(|_| rng4.q_raw(8)).collect())
+        .collect();
+    let quantize = |v: usize, rows: usize| -> Vec<Vec<i64>> {
+        raw[..rows]
+            .iter()
+            .map(|r| engine.model().variant(v).quantize_row(r))
+            .collect()
+    };
+    for v in 0..n_variants {
+        let batch = quantize(v, 24);
+        engine.forward_batch_into(&batch, v, &mut scratch, &mut out);
+    }
+    for &(v, rows) in &[(0usize, 24usize), (2, 12), (1, 24), (0, 5), (2, 24), (1, 1)] {
+        let batch = quantize(v, rows);
+        let before = CountingAlloc::count();
+        engine.forward_batch_into(&batch, v, &mut scratch, &mut out);
+        let after = CountingAlloc::count();
+        assert_eq!(
+            after - before,
+            0,
+            "variant {v} batch of {rows} rows allocated after warmup"
+        );
         assert_eq!(out.len(), rows);
     }
 }

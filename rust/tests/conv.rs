@@ -7,55 +7,14 @@
 //! `nn::conv::conv_forward_row` for a single conv layer and
 //! `nn::exec::stack_forward_row` for whole interleaved stacks.
 
-use softsimd::bits::format::FORMATS;
 use softsimd::coordinator::engine::{EngineScratch, PackedEngine};
 use softsimd::coordinator::model::CompiledModel;
 use softsimd::nn::conv::{conv_forward_row, ConvLayer, ConvShape, LayerOp};
 use softsimd::nn::exec::stack_forward_row;
 use softsimd::nn::weights::LayerPrecision;
 use softsimd::nn::weights::QuantLayer;
+use softsimd::testutil::{random_conv_layer as random_conv, random_precision};
 use softsimd::workload::synth::XorShift64;
-
-fn random_shape(rng: &mut XorShift64, cin: usize) -> ConvShape {
-    loop {
-        let h = 3 + (rng.next_u64() % 4) as usize;
-        let w = 3 + (rng.next_u64() % 4) as usize;
-        let kh = 1 + (rng.next_u64() % 3) as usize;
-        let kw = 1 + (rng.next_u64() % 3) as usize;
-        let stride = 1 + (rng.next_u64() % 2) as usize;
-        let pad = (rng.next_u64() % kh.min(kw) as u64) as usize;
-        let shape = ConvShape {
-            cin,
-            h,
-            w,
-            cout: 1 + (rng.next_u64() % 3) as usize,
-            kh,
-            kw,
-            stride,
-            pad,
-        };
-        if shape.validate().is_ok() {
-            return shape;
-        }
-    }
-}
-
-fn random_conv(rng: &mut XorShift64, cin: usize, w_bits: u32) -> ConvLayer {
-    let shape = random_shape(rng, cin);
-    let w = QuantLayer::new(
-        (0..shape.patch_len())
-            .map(|_| (0..shape.cout).map(|_| rng.q_raw(w_bits)).collect())
-            .collect(),
-        w_bits,
-    );
-    ConvLayer::new(w, shape).unwrap()
-}
-
-fn random_precision(rng: &mut XorShift64) -> LayerPrecision {
-    let in_bits = FORMATS[(rng.next_u64() % FORMATS.len() as u64) as usize];
-    let wider: Vec<u32> = FORMATS.iter().copied().filter(|&b| b >= in_bits).collect();
-    LayerPrecision::new(in_bits, wider[(rng.next_u64() % wider.len() as u64) as usize])
-}
 
 #[test]
 fn prop_single_conv_layer_is_bit_exact_over_random_shapes_and_precisions() {
@@ -78,7 +37,7 @@ fn prop_single_conv_layer_is_bit_exact_over_random_shapes_and_precisions() {
         let batch: Vec<Vec<i64>> = (0..batch_size)
             .map(|_| (0..shape.in_len()).map(|_| rng.q_raw(p.in_bits)).collect())
             .collect();
-        let stats = engine.forward_batch_into(&batch, &mut scratch, &mut out);
+        let stats = engine.forward_batch_into(&batch, 0, &mut scratch, &mut out);
         assert_eq!(out.len(), batch_size, "case {case}: pad images dropped");
         for (b, row) in batch.iter().enumerate() {
             let want = conv_forward_row(row, &conv, p);
@@ -187,7 +146,7 @@ fn prop_interleaved_stacks_are_bit_exact_over_random_schedules() {
         let batch: Vec<Vec<i64>> = (0..batch_size)
             .map(|_| (0..k0).map(|_| rng.q_raw(sched[0].in_bits)).collect())
             .collect();
-        engine.forward_batch_into(&batch, &mut scratch, &mut out);
+        engine.forward_batch_into(&batch, 0, &mut scratch, &mut out);
         for (b, row) in batch.iter().enumerate() {
             let want = stack_forward_row(row, &ops, &sched);
             assert_eq!(out[b], want, "case {case}: sched {sched:?} image {b}");
@@ -200,19 +159,13 @@ fn conv_serving_round_trip_through_the_coordinator() {
     // End to end: the synthetic CNN served through submit → batcher →
     // PE workers → drain, responses bit-exact against the stack oracle.
     use softsimd::coordinator::server::{Coordinator, Request, ServeConfig};
-    use softsimd::coordinator::CostTable;
     use softsimd::nn::weights::uniform_schedule;
+    use softsimd::testutil::flat_cost;
     use softsimd::workload::synth::{synth_cnn_stack, ImageSet};
     let stack = synth_cnn_stack(0xC2123, 8);
     let sched = uniform_schedule(8, 16, stack.len());
     let model = CompiledModel::compile_stack(stack.clone(), sched.clone()).unwrap();
-    let cost = CostTable {
-        mhz: 1000.0,
-        s1_cycle_pj: FORMATS.iter().map(|&b| (b, 1.0)).collect(),
-        s2_pass_pj: 0.5,
-        area_um2: 1000.0,
-    };
-    let mut coord = Coordinator::start(model, ServeConfig::new(2, 6), cost);
+    let mut coord = Coordinator::start(model, ServeConfig::new(2, 6), flat_cost());
     let (xs, _ys) = ImageSet::standard().sample(9, 0.3, 0xC2124, 8);
     for (id, row) in xs.iter().enumerate() {
         coord

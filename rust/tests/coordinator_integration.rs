@@ -162,6 +162,76 @@ fn all_workers_dead_surfaces_error_not_panic() {
 }
 
 #[test]
+fn kill_revive_serve_round_trip_restores_capacity() {
+    // The worker-lifecycle satellite (DESIGN.md §13): kill → revive →
+    // serve. A revived slot gets a fresh thread and a fresh bounded
+    // queue; responses served after the revive are bit-exact, and
+    // reviving a live (or out-of-range) worker is a refused no-op —
+    // two workers must never share a slot.
+    let mut rng = XorShift64::new(0x4E117E);
+    let layers = random_model(&mut rng, &[8, 5, 3]);
+    let model = CompiledModel::compile(layers.clone(), 8, 16).unwrap();
+    let mut coord = Coordinator::start(model, ServeConfig::new(2, 4), cost());
+    assert!(!coord.revive_worker(0), "a live worker must not be revived");
+    assert!(!coord.revive_worker(99), "an out-of-range slot is a no-op");
+    coord.kill_worker(0);
+    // First wave: the surviving PE carries the load.
+    let reqs: Vec<Request> = (0..8u64)
+        .map(|id| Request {
+            id,
+            rows: vec![(0..8).map(|_| rng.q_raw(8)).collect()],
+        })
+        .collect();
+    for r in &reqs {
+        coord.submit(r.clone()).unwrap();
+    }
+    let responses = coord.drain().expect("one PE still serves");
+    assert_eq!(responses.len(), reqs.len());
+    // Rolling restart completes: the dead slot comes back.
+    assert!(coord.revive_worker(0), "a killed worker must revive");
+    assert!(!coord.revive_worker(0), "the revived worker is live again");
+    // Second wave at full capacity, bit-exact.
+    let reqs: Vec<Request> = (100..124u64)
+        .map(|id| Request {
+            id,
+            rows: vec![(0..8).map(|_| rng.q_raw(8)).collect()],
+        })
+        .collect();
+    for r in &reqs {
+        coord.submit(r.clone()).unwrap();
+    }
+    let responses = coord.drain().expect("revived pool serves");
+    assert_eq!(responses.len(), reqs.len());
+    for resp in &responses {
+        let want =
+            mlp_forward_row(&reqs[(resp.id - 100) as usize].rows[0], &layers, 8, 16);
+        assert_eq!(resp.logits[0], want, "req {}", resp.id);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn revive_recovers_a_fully_dead_pool() {
+    // All PEs dead surfaces NoLiveWorkers with the rows restored (not
+    // dropped); reviving the slot then serves exactly those rows.
+    let mut rng = XorShift64::new(0x4E117F);
+    let layers = random_model(&mut rng, &[4, 2]);
+    let model = CompiledModel::compile(layers.clone(), 8, 16).unwrap();
+    let mut coord = Coordinator::start(model, ServeConfig::new(1, 4), cost());
+    coord.kill_worker(0);
+    let row: Vec<i64> = (0..4).map(|_| rng.q_raw(8)).collect();
+    coord.submit(Request { id: 7, rows: vec![row.clone()] }).unwrap();
+    let err = coord.drain().expect_err("no live workers");
+    assert!(err.to_string().contains("no live PE workers"), "{err}");
+    assert_eq!(coord.pending_rows(), 1, "rows restored, not dropped");
+    assert!(coord.revive_worker(0));
+    let responses = coord.drain().expect("revived pool serves the restored rows");
+    assert_eq!(responses.len(), 1);
+    assert_eq!(responses[0].logits[0], mlp_forward_row(&row, &layers, 8, 16));
+    coord.shutdown();
+}
+
+#[test]
 fn malformed_requests_are_rejected_not_worker_killing() {
     let mut rng = XorShift64::new(0xBAD1);
     let layers = random_model(&mut rng, &[6, 3]);

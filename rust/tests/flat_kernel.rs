@@ -16,40 +16,20 @@
 //!    boundaries) must be invisible to the counters, down to the
 //!    per-format buckets.
 
-use softsimd::bits::format::{format_index, SimdFormat, FORMATS};
+use softsimd::bits::format::{format_index, SimdFormat};
 use softsimd::bits::pack::{pack, unpack};
 use softsimd::coordinator::engine::{EngineScratch, EngineStats, PackedEngine};
-use softsimd::coordinator::model::CompiledModel;
+use softsimd::coordinator::model::{CompiledModel, VariantSpec};
 use softsimd::csd::flat::encode_plan;
 use softsimd::csd::schedule::schedule;
 use softsimd::nn::exec::mlp_forward_row_mixed;
 use softsimd::nn::weights::{LayerPrecision, QuantLayer};
 use softsimd::pipeline::stage1::{mul_scalar_plan, Stage1};
+use softsimd::testutil::{random_dense_stack, random_schedule};
 use softsimd::workload::synth::XorShift64;
 
 fn random_layers(rng: &mut XorShift64, dims: &[usize], w_bits: &[u32]) -> Vec<QuantLayer> {
-    dims.windows(2)
-        .zip(w_bits)
-        .map(|(w, &b)| {
-            QuantLayer::new(
-                (0..w[0])
-                    .map(|_| (0..w[1]).map(|_| rng.q_raw(b)).collect())
-                    .collect(),
-                b,
-            )
-        })
-        .collect()
-}
-
-fn random_schedule(rng: &mut XorShift64, n_layers: usize) -> Vec<LayerPrecision> {
-    (0..n_layers)
-        .map(|_| {
-            let in_bits = FORMATS[(rng.next_u64() % FORMATS.len() as u64) as usize];
-            let wider: Vec<u32> = FORMATS.iter().copied().filter(|&b| b >= in_bits).collect();
-            let acc_bits = wider[(rng.next_u64() % wider.len() as u64) as usize];
-            LayerPrecision::new(in_bits, acc_bits)
-        })
-        .collect()
+    random_dense_stack(rng, dims, w_bits)
 }
 
 #[test]
@@ -130,9 +110,13 @@ fn stage1_counters_never_diverge_from_plan_billing() {
 }
 
 /// The pre-refactor billing formulas, computed from the `MulPlan`
-/// tables and the model's schedule — what the per-op engine counted.
-fn expected_stats(model: &CompiledModel, m: usize) -> EngineStats {
-    let quantum = model.batch_quantum();
+/// tables and one variant's schedule — what the per-op engine counted
+/// for that schedule. With several variants on one model, these are
+/// exactly the "single-variant formulas" each executed batch must be
+/// billed by (DESIGN.md §13).
+fn expected_stats(model: &CompiledModel, variant: usize, m: usize) -> EngineStats {
+    let var = model.variant(variant);
+    let quantum = var.batch_quantum();
     let mp = m.div_ceil(quantum) * quantum;
     let mut want = EngineStats {
         pad_rows: (mp - m) as u64,
@@ -140,7 +124,7 @@ fn expected_stats(model: &CompiledModel, m: usize) -> EngineStats {
     };
     for (li, layer) in model.layers().iter().enumerate() {
         let layer = layer.weights();
-        let p = model.precision(li);
+        let p = var.precision(li);
         let words = (mp / p.in_fmt().lanes() as usize) as u64;
         let acc_words = (mp * p.acc_bits as usize / 48) as u64;
         for k in 0..layer.k {
@@ -161,7 +145,7 @@ fn expected_stats(model: &CompiledModel, m: usize) -> EngineStats {
             }
         }
         if li + 1 < model.layers().len() {
-            for &(_, t) in model.boundary_chain(li) {
+            for &(_, t) in var.boundary_chain(li) {
                 let passes = (mp * t.bits as usize).div_ceil(48) as u64 * layer.n as u64;
                 want.s2_passes += passes;
                 want.s2_passes_by_fmt[format_index(t.bits)] += passes;
@@ -218,7 +202,7 @@ fn prop_flat_engine_is_bit_exact_and_bills_the_prerefactor_formulas() {
         let batch: Vec<Vec<i64>> = (0..batch_size)
             .map(|_| (0..dims[0]).map(|_| rng.q_raw(sched[0].in_bits)).collect())
             .collect();
-        let stats = engine.forward_batch_into(&batch, &mut scratch, &mut out);
+        let stats = engine.forward_batch_into(&batch, 0, &mut scratch, &mut out);
         assert_eq!(out.len(), batch_size, "case {case}: pad rows must be dropped");
         for (b, row) in batch.iter().enumerate() {
             let want = mlp_forward_row_mixed(row, &layers, &sched);
@@ -227,8 +211,71 @@ fn prop_flat_engine_is_bit_exact_and_bills_the_prerefactor_formulas() {
                 "case {case}: sched {sched:?} dims {dims:?} w_bits {w_bits:?} row {b}"
             );
         }
-        let want = expected_stats(engine.model(), batch_size);
+        let want = expected_stats(engine.model(), 0, batch_size);
         assert_stats_eq(&stats, &want, &format!("case {case} (sched {sched:?})"));
+    }
+}
+
+#[test]
+fn prop_variant_switching_bills_each_batch_by_its_own_variants_formulas() {
+    // The §13 billing pin: one multi-variant model, variants switched
+    // batch-to-batch on one scratch — every batch's stats must equal
+    // the single-variant pre-refactor formulas of the variant that
+    // executed it, field-by-field and bucket-by-bucket, and the logits
+    // must match that variant's scalar oracle. The execution history
+    // (which variant ran before, warmed buffers, shrunk batches) must
+    // be invisible to both results and billing.
+    let mut rng = XorShift64::new(0xF1A7_0004);
+    let mut scratch = EngineScratch::new();
+    let mut out = Vec::new();
+    for case in 0..20 {
+        let n_layers = 1 + (rng.next_u64() % 3) as usize;
+        let dims: Vec<usize> = (0..=n_layers)
+            .map(|_| 1 + (rng.next_u64() % 6) as usize)
+            .collect();
+        let w_bits: Vec<u32> = (0..n_layers)
+            .map(|_| [4u32, 6, 8][(rng.next_u64() % 3) as usize])
+            .collect();
+        let layers = random_layers(&mut rng, &dims, &w_bits);
+        // Reference variant first (widest first layer), then random
+        // narrower-or-equal variants.
+        let mut specs = vec![VariantSpec::new(
+            "ref",
+            (0..n_layers).map(|_| LayerPrecision::new(8, 16)).collect(),
+        )];
+        for v in 0..2 {
+            let sched = random_schedule(&mut rng, n_layers);
+            if sched[0].in_bits <= 8 {
+                specs.push(VariantSpec::new(format!("alt{v}"), sched));
+            }
+        }
+        let ops = layers
+            .iter()
+            .cloned()
+            .map(softsimd::nn::conv::LayerOp::Dense)
+            .collect();
+        let model = CompiledModel::compile_variants(ops, specs.clone())
+            .unwrap_or_else(|e| panic!("case {case}: compile failed: {e}"));
+        let engine = PackedEngine::new(model);
+        for step in 0..6 {
+            let v = (rng.next_u64() % specs.len() as u64) as usize;
+            let sched = &specs[v].schedule;
+            let batch_size = 1 + (rng.next_u64() % 30) as usize;
+            let batch: Vec<Vec<i64>> = (0..batch_size)
+                .map(|_| (0..dims[0]).map(|_| rng.q_raw(sched[0].in_bits)).collect())
+                .collect();
+            let stats = engine.forward_batch_into(&batch, v, &mut scratch, &mut out);
+            for (b, row) in batch.iter().enumerate() {
+                let want = mlp_forward_row_mixed(row, &layers, sched);
+                assert_eq!(out[b], want, "case {case} step {step} variant {v} row {b}");
+            }
+            let want = expected_stats(engine.model(), v, batch_size);
+            assert_stats_eq(
+                &stats,
+                &want,
+                &format!("case {case} step {step} variant {v}"),
+            );
+        }
     }
 }
 

@@ -1,0 +1,238 @@
+//! End-to-end tests of the SLO-driven precision governor
+//! (DESIGN.md §13) — the acceptance scenario of the multi-variant
+//! serving stack:
+//!
+//! 1. **Step load.** Under a burst that saturates the single PE, the
+//!    governor sheds precision to the cheapest variant; under a light
+//!    trickle it recovers to full fidelity — observed through
+//!    `Coordinator::active_variant`, the per-variant metrics buckets
+//!    and each `Response`'s variant tag.
+//! 2. **Billing exactness.** Every executed batch is billed by the
+//!    *single-variant* formulas of the variant that executed it:
+//!    per-variant cycle/energy buckets equal a direct engine run of
+//!    the same rows at that variant, and every response is bit-exact
+//!    against the per-variant scalar oracle (reference rows
+//!    requantized by the variant's `in_shift`).
+//!
+//! Determinism notes: the step-load test drives decisions purely from
+//! queue depth (the p99 target is set far out of reach), uses one PE
+//! with queue depth 1 so backpressure serializes the burst, and a
+//! deadline long enough that only submit-path and drain-path
+//! dispatches ever happen.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use softsimd::coordinator::engine::PackedEngine;
+use softsimd::coordinator::governor::{PinnedVariant, SloPolicy};
+use softsimd::coordinator::model::{CompiledModel, VariantSpec};
+use softsimd::coordinator::server::{Coordinator, Request, ServeConfig};
+use softsimd::nn::conv::LayerOp;
+use softsimd::nn::exec::mlp_forward_row_mixed;
+use softsimd::nn::weights::QuantLayer;
+use softsimd::testutil::{flat_cost, random_dense_stack_uniform};
+use softsimd::workload::synth::XorShift64;
+
+/// The shared step-load model: a 3-layer MLP heavy enough that one
+/// batch outlasts the whole submit loop, carrying the standard
+/// hi-fi / balanced / turbo trio.
+fn trio_model(rng: &mut XorShift64) -> (Vec<QuantLayer>, Arc<CompiledModel>) {
+    let layers = random_dense_stack_uniform(rng, &[64, 48, 24, 10], 8);
+    let ops: Vec<LayerOp> = layers.iter().cloned().map(LayerOp::Dense).collect();
+    let model = CompiledModel::compile_variants(ops, VariantSpec::standard_trio(3)).unwrap();
+    (layers, model)
+}
+
+/// The per-variant scalar oracle: requantize the reference-precision
+/// row exactly like the serving loop, then run the variant's schedule.
+fn variant_oracle(model: &CompiledModel, layers: &[QuantLayer], v: usize, row: &[i64]) -> Vec<i64> {
+    let var = model.variant(v);
+    mlp_forward_row_mixed(&var.quantize_row(row), layers, var.schedule())
+}
+
+#[test]
+fn step_load_sheds_precision_under_overload_and_recovers_when_calm() {
+    let mut rng = XorShift64::new(0x90E40001);
+    let (layers, model) = trio_model(&mut rng);
+    assert_eq!(model.n_variants(), 3);
+    // Queue-depth-driven policy: the high watermark is exactly one
+    // burst batch's rows, so the first burst dispatch (nothing else
+    // outstanding) holds hi-fi and every later one — which sees at
+    // least the previous batch still outstanding — sheds a step; the
+    // p99 objective is far out of reach so latency never triggers.
+    let policy = SloPolicy::new(Duration::from_secs(300), 24, 4).patience(2);
+    let cfg = ServeConfig::new(1, 12)
+        .deadline(Duration::from_secs(60))
+        .queue_depth(1);
+    let mut coord =
+        Coordinator::start_with_policy(Arc::clone(&model), cfg, flat_cost(), Box::new(policy));
+    assert_eq!(coord.active_variant(), 0);
+
+    // --- Step up: a burst of full batches, submitted far faster than
+    // one PE can clear them. Each submit forms and dispatches one
+    // 24-row batch; from the second dispatch on the previous batches
+    // are still outstanding, so the governor sheds one step per
+    // dispatch down to the cheapest variant.
+    let burst: Vec<Request> = (0..8u64)
+        .map(|id| Request {
+            id,
+            rows: (0..24).map(|_| (0..64).map(|_| rng.q_raw(8)).collect()).collect(),
+        })
+        .collect();
+    for r in &burst {
+        coord.submit(r.clone()).unwrap();
+    }
+    let responses = coord.drain().unwrap();
+    assert_eq!(responses.len(), burst.len());
+    assert_eq!(
+        coord.active_variant(),
+        2,
+        "sustained overload must shed to the cheapest variant"
+    );
+    // Every response is bit-exact against the oracle of the variant
+    // that *actually executed* it — whichever that was.
+    for resp in &responses {
+        for (i, row) in burst[resp.id as usize].rows.iter().enumerate() {
+            let want = variant_oracle(&model, &layers, resp.variant, row);
+            assert_eq!(resp.logits[i], want, "req {} row {i} (variant {})", resp.id, resp.variant);
+        }
+    }
+    // The burst demonstrably executed across the shed: fidelity first,
+    // turbo by the end.
+    assert_eq!(responses.iter().find(|r| r.id == 0).unwrap().variant, 0);
+    assert_eq!(responses.iter().find(|r| r.id == 7).unwrap().variant, 2);
+    let m = &coord.metrics;
+    assert!(m.per_variant[0].rows.load(Ordering::Relaxed) > 0);
+    assert!(
+        m.per_variant[2].rows.load(Ordering::Relaxed) > 0,
+        "turbo bucket must have executed rows"
+    );
+    assert!(
+        m.variant_switches.load(Ordering::Relaxed) >= 2,
+        "0→1→2 is at least two switches"
+    );
+
+    // --- Step down: a light trickle (one straggler per drain, queue
+    // empty at every decision). With patience 2 the governor walks
+    // back 2→1→0 over four calm dispatches and stays there.
+    let mut last_variant = usize::MAX;
+    for i in 0..6u64 {
+        let req = Request {
+            id: 100 + i,
+            rows: vec![(0..64).map(|_| rng.q_raw(8)).collect()],
+        };
+        let rows = req.rows.clone();
+        coord.submit(req).unwrap();
+        let responses = coord.drain().unwrap();
+        assert_eq!(responses.len(), 1);
+        let want = variant_oracle(&model, &layers, responses[0].variant, &rows[0]);
+        assert_eq!(responses[0].logits[0], want, "trickle {i}");
+        last_variant = responses[0].variant;
+    }
+    assert_eq!(coord.active_variant(), 0, "calm traffic must recover full fidelity");
+    assert_eq!(last_variant, 0, "the last trickle batch executed at hi-fi");
+    coord.shutdown();
+}
+
+#[test]
+fn per_variant_billing_is_pinned_to_the_single_variant_formulas() {
+    // The acceptance billing criterion: serve one deterministic batch
+    // per pinned variant and require the executed variant's metrics
+    // bucket to equal — exactly — a direct engine run of the same rows
+    // at that variant (which tests/flat_kernel.rs in turn pins to the
+    // pre-refactor single-variant formulas), with the energy billed at
+    // the cost table's figure for precisely those stats and all other
+    // variants' buckets untouched.
+    let mut rng = XorShift64::new(0x90E40002);
+    let (layers, model) = trio_model(&mut rng);
+    let engine = PackedEngine::new(Arc::clone(&model));
+    let rows: Vec<Vec<i64>> = (0..24)
+        .map(|_| (0..64).map(|_| rng.q_raw(8)).collect())
+        .collect();
+    for v in 0..model.n_variants() {
+        let cfg = ServeConfig::new(1, 24).deadline(Duration::from_secs(60));
+        let mut coord = Coordinator::start_with_policy(
+            Arc::clone(&model),
+            cfg,
+            flat_cost(),
+            Box::new(PinnedVariant(v)),
+        );
+        coord.submit(Request { id: 0, rows: rows.clone() }).unwrap();
+        let responses = coord.drain().unwrap();
+        let metrics = Arc::clone(&coord.metrics);
+        coord.shutdown();
+        assert_eq!(responses.len(), 1);
+        assert_eq!(responses[0].variant, v);
+        assert_eq!(
+            metrics.batches.load(Ordering::Relaxed),
+            1,
+            "variant {v}: the 24-row request must serve as one batch"
+        );
+        // The worker's transform, replayed: requantize, then execute
+        // the variant directly on a fresh engine.
+        let shifted: Vec<Vec<i64>> =
+            rows.iter().map(|r| model.variant(v).quantize_row(r)).collect();
+        let (want_out, want_stats) = engine.forward_batch_variant(&shifted, v);
+        assert_eq!(responses[0].logits, want_out, "variant {v} logits");
+        for (b, row) in rows.iter().enumerate() {
+            assert_eq!(
+                responses[0].logits[b],
+                variant_oracle(&model, &layers, v, row),
+                "variant {v} row {b} vs scalar oracle"
+            );
+        }
+        let vb = &metrics.per_variant[v];
+        assert_eq!(vb.batches.load(Ordering::Relaxed), 1);
+        assert_eq!(vb.rows.load(Ordering::Relaxed), 24);
+        assert_eq!(vb.pad_rows.load(Ordering::Relaxed), want_stats.pad_rows);
+        assert_eq!(vb.subword_mults.load(Ordering::Relaxed), want_stats.subword_mults);
+        assert_eq!(vb.s1_cycles.load(Ordering::Relaxed), want_stats.s1_cycles);
+        assert_eq!(vb.s2_passes.load(Ordering::Relaxed), want_stats.s2_passes);
+        let want_pj = flat_cost().batch_energy_pj(&want_stats);
+        assert_eq!(
+            vb.energy_aj.load(Ordering::Relaxed),
+            (want_pj * 1e6).round() as u64,
+            "variant {v}: energy must be the single-variant figure, exactly"
+        );
+        // Aggregates equal the single bucket; every other bucket is
+        // empty — nothing was billed to a variant that didn't execute.
+        assert_eq!(
+            metrics.s1_cycles.load(Ordering::Relaxed),
+            want_stats.s1_cycles
+        );
+        for (u, ub) in metrics.per_variant.iter().enumerate() {
+            if u != v {
+                assert_eq!(ub.batches.load(Ordering::Relaxed), 0, "variant {u} bucket");
+                assert_eq!(ub.energy_aj.load(Ordering::Relaxed), 0, "variant {u} bucket");
+            }
+        }
+    }
+}
+
+#[test]
+fn cheaper_variants_cost_less_energy_per_row_on_the_same_traffic() {
+    // The reason the governor exists: for the same request stream the
+    // turbo variant must bill strictly less Stage-1 energy per row
+    // than hi-fi (more sub-words per 48-bit word → fewer words → fewer
+    // cycles), using the real characterized cost relation only through
+    // the flat table (1 pJ/cycle at every width) so the comparison is
+    // purely about cycle counts.
+    let mut rng = XorShift64::new(0x90E40003);
+    let (_layers, model) = trio_model(&mut rng);
+    let engine = PackedEngine::new(Arc::clone(&model));
+    let rows: Vec<Vec<i64>> = (0..24)
+        .map(|_| (0..64).map(|_| rng.q_raw(8)).collect())
+        .collect();
+    let mut s1_by_variant = vec![];
+    for v in 0..model.n_variants() {
+        let shifted: Vec<Vec<i64>> =
+            rows.iter().map(|r| model.variant(v).quantize_row(r)).collect();
+        let (_, stats) = engine.forward_batch_variant(&shifted, v);
+        s1_by_variant.push(stats.s1_cycles);
+    }
+    assert!(
+        s1_by_variant[2] < s1_by_variant[1] && s1_by_variant[1] < s1_by_variant[0],
+        "turbo < balanced < hi-fi Stage-1 cycles, got {s1_by_variant:?}"
+    );
+}

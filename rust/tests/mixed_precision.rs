@@ -7,38 +7,17 @@
 //! Stage-2 boundary repacks, chained hops included — matches the scalar
 //! mixed-precision oracle bit-exactly on every row (DESIGN.md §10).
 
-use softsimd::bits::format::{format_index, FORMATS};
-use softsimd::coordinator::cost::CostTable;
+use softsimd::bits::format::format_index;
 use softsimd::coordinator::engine::PackedEngine;
 use softsimd::coordinator::model::CompiledModel;
 use softsimd::coordinator::server::{Coordinator, Request, ServeConfig};
 use softsimd::nn::exec::mlp_forward_row_mixed;
 use softsimd::nn::weights::{LayerPrecision, QuantLayer};
+use softsimd::testutil::{flat_cost, random_dense_stack, random_schedule};
 use softsimd::workload::synth::XorShift64;
 
 fn random_layers(rng: &mut XorShift64, dims: &[usize], w_bits: &[u32]) -> Vec<QuantLayer> {
-    dims.windows(2)
-        .zip(w_bits)
-        .map(|(w, &b)| {
-            QuantLayer::new(
-                (0..w[0])
-                    .map(|_| (0..w[1]).map(|_| rng.q_raw(b)).collect())
-                    .collect(),
-                b,
-            )
-        })
-        .collect()
-}
-
-fn random_schedule(rng: &mut XorShift64, n_layers: usize) -> Vec<LayerPrecision> {
-    (0..n_layers)
-        .map(|_| {
-            let in_bits = FORMATS[(rng.next_u64() % FORMATS.len() as u64) as usize];
-            let wider: Vec<u32> = FORMATS.iter().copied().filter(|&b| b >= in_bits).collect();
-            let acc_bits = wider[(rng.next_u64() % wider.len() as u64) as usize];
-            LayerPrecision::new(in_bits, acc_bits)
-        })
-        .collect()
+    random_dense_stack(rng, dims, w_bits)
 }
 
 #[test]
@@ -146,12 +125,7 @@ fn acceptance_schedules_serve_bit_exactly_end_to_end() {
             ],
         ),
     ];
-    let cost = CostTable {
-        mhz: 1000.0,
-        s1_cycle_pj: FORMATS.iter().map(|&b| (b, 1.0)).collect(),
-        s2_pass_pj: 0.5,
-        area_um2: 4600.0,
-    };
+    let cost = flat_cost();
     for (name, sched) in schedules {
         let model =
             CompiledModel::compile_scheduled(layers.clone(), sched.clone()).unwrap();

@@ -59,4 +59,41 @@ fn plans_compile_exactly_once_regardless_of_pe_count() {
             "expected one plan compilation per model at {n_pes} PEs"
         );
     }
+
+    // The §13 dedup invariant, in the same (single-test) binary so no
+    // parallel test perturbs the process-global counter: compiling a
+    // whole variant *set* is still exactly one plan compilation — the
+    // schedules differ, the weights (and therefore the CSD plans and
+    // the flat arena) do not.
+    use softsimd::coordinator::model::VariantSpec;
+    use softsimd::nn::conv::LayerOp;
+    let ops: Vec<LayerOp> = layers.iter().cloned().map(LayerOp::Dense).collect();
+    let before = PLAN_COMPILATIONS.load(Ordering::SeqCst);
+    let set =
+        CompiledModel::compile_variants(ops, VariantSpec::standard_trio(layers.len()))
+            .unwrap();
+    assert_eq!(
+        PLAN_COMPILATIONS.load(Ordering::SeqCst),
+        before + 1,
+        "a 3-variant set must compile its plans exactly once, not per variant"
+    );
+    assert_eq!(set.n_variants(), 3);
+    // And serving the set still compiles nothing further.
+    let mut coord = Coordinator::start(set, ServeConfig::new(2, 6), cost());
+    for id in 0..6u64 {
+        coord
+            .submit(Request {
+                id,
+                rows: vec![(0..10).map(|_| rng.q_raw(8)).collect()],
+            })
+            .unwrap();
+    }
+    let responses = coord.drain().unwrap();
+    assert_eq!(responses.len(), 6);
+    coord.shutdown();
+    assert_eq!(
+        PLAN_COMPILATIONS.load(Ordering::SeqCst),
+        before + 1,
+        "serving a variant set must not recompile plans"
+    );
 }
