@@ -1,0 +1,140 @@
+//! The abstract interval domain of the lane-safety verifier
+//! (DESIGN.md §14).
+//!
+//! An [`Interval`] `[lo, hi]` abstracts the set of raw (sign-extended)
+//! sub-word values a lane can hold at some program point. Every
+//! transfer function used by the analyzer is *monotone in the
+//! endpoints* — arithmetic shifts, additions, ReLU and the Stage-2
+//! format conversions all map the least/greatest concrete value to the
+//! least/greatest result — so propagating the two endpoints is a sound
+//! over-approximation of propagating every concrete value.
+//!
+//! The keystone invariant of the accumulator soundness argument
+//! (`analysis::verify_with_arena`): every interval the analyzer
+//! propagates **contains zero**. Layer-0 inputs span the full two's
+//! complement range (which straddles zero), ReLU outputs include zero,
+//! format conversions fix zero, and a CSD multiply maps zero to zero —
+//! so every per-tap product interval has `lo ≤ 0 ≤ hi`, which is what
+//! bounds every *partial* accumulation order by the full-sum interval.
+
+use crate::bits::format::SimdFormat;
+use crate::pipeline::stage2::convert_subword;
+
+/// A closed interval `[lo, hi]` of raw sub-word values (`lo ≤ hi`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    /// Least value the lane can hold.
+    pub lo: i64,
+    /// Greatest value the lane can hold.
+    pub hi: i64,
+}
+
+impl Interval {
+    /// The singleton interval `[v, v]`.
+    #[inline]
+    pub fn point(v: i64) -> Interval {
+        Interval { lo: v, hi: v }
+    }
+
+    /// The full two's-complement range of a `bits`-wide lane:
+    /// `[−2^(b−1), 2^(b−1)−1]`.
+    #[inline]
+    pub fn full(bits: u32) -> Interval {
+        let half = 1i64 << (bits - 1);
+        Interval { lo: -half, hi: half - 1 }
+    }
+
+    /// Smallest interval containing both operands (the domain's join).
+    #[inline]
+    pub fn hull(self, other: Interval) -> Interval {
+        Interval { lo: self.lo.min(other.lo), hi: self.hi.max(other.hi) }
+    }
+
+    /// `hi − lo` as an unsigned span (number of values minus one).
+    #[inline]
+    pub fn width(&self) -> u64 {
+        (self.hi as i128 - self.lo as i128) as u64
+    }
+
+    /// Does the interval contain `v`?
+    #[inline]
+    pub fn contains(&self, v: i64) -> bool {
+        self.lo <= v && v <= self.hi
+    }
+
+    /// Transfer function of the SWAR ReLU: both endpoints clamp at
+    /// zero (monotone, and the result always contains zero).
+    #[inline]
+    pub fn relu(self) -> Interval {
+        Interval { lo: self.lo.max(0), hi: self.hi.max(0) }
+    }
+
+    /// Transfer function of one Stage-2 crossbar hop: widening is an
+    /// exact left shift, narrowing an arithmetic right shift — both
+    /// monotone, so mapping the endpoints is exact on the hull.
+    #[inline]
+    pub fn convert(self, from: SimdFormat, to: SimdFormat) -> Interval {
+        Interval {
+            lo: convert_subword(self.lo, from, to),
+            hi: convert_subword(self.hi, from, to),
+        }
+    }
+
+    /// Does every value of the interval fit a `bits`-wide two's
+    /// complement lane without wrapping?
+    #[inline]
+    pub fn fits(&self, bits: u32) -> bool {
+        let half = 1i64 << (bits - 1);
+        self.lo >= -half && self.hi < half
+    }
+}
+
+impl std::fmt::Display for Interval {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}, {}]", self.lo, self.hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_range_straddles_zero_at_every_format() {
+        for fmt in SimdFormat::all() {
+            let iv = Interval::full(fmt.bits);
+            assert!(iv.contains(0), "{fmt}");
+            assert!(iv.fits(fmt.bits), "{fmt}");
+            assert_eq!(iv.width(), (1u64 << fmt.bits) - 1, "{fmt}");
+        }
+    }
+
+    #[test]
+    fn hull_and_relu_preserve_zero_membership() {
+        let a = Interval { lo: -5, hi: 3 };
+        let b = Interval::point(7);
+        let h = a.hull(b);
+        assert_eq!(h, Interval { lo: -5, hi: 7 });
+        assert_eq!(h.relu(), Interval { lo: 0, hi: 7 });
+        // ReLU of an all-negative interval collapses to the point zero.
+        assert_eq!(Interval { lo: -9, hi: -1 }.relu(), Interval::point(0));
+    }
+
+    #[test]
+    fn convert_maps_endpoints_exactly() {
+        let f8 = SimdFormat::new(8);
+        let f16 = SimdFormat::new(16);
+        let iv = Interval { lo: -100, hi: 99 };
+        assert_eq!(iv.convert(f8, f16), Interval { lo: -100 << 8, hi: 99 << 8 });
+        // Narrowing truncates toward −∞ on both ends.
+        let wide = Interval { lo: -0x1234, hi: 0x0FFF };
+        assert_eq!(wide.convert(f16, f8), Interval { lo: -0x13, hi: 0x0F });
+    }
+
+    #[test]
+    fn fits_is_the_lane_range_check() {
+        assert!(Interval { lo: -128, hi: 127 }.fits(8));
+        assert!(!Interval { lo: -129, hi: 0 }.fits(8));
+        assert!(!Interval { lo: 0, hi: 128 }.fits(8));
+    }
+}

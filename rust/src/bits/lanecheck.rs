@@ -1,0 +1,152 @@
+//! Runtime lane sanitizer — the dynamic oracle of the static
+//! lane-safety verifier (DESIGN.md §14; `--features lanecheck`).
+//!
+//! When the `lanecheck` feature is enabled, the SWAR primitives
+//! ([`crate::bits::swar`]) report every lane whose value actually
+//! wrapped during an add/sub/neg, and the pipeline stages check that
+//! every word they produce stays inside the 48-bit datapath mask.
+//! Violations are *recorded, never raised*: the SWAR layer's wrapping
+//! behavior is architecturally defined (the `−1 × −1` corner is even
+//! exercised on purpose by its unit tests), so the sanitizer is a
+//! tracing tool — tests and harnesses bracket a region with
+//! [`reset`]/[`count`] and decide for themselves whether a wrap was
+//! legitimate.
+//!
+//! The two directions of the oracle:
+//!
+//! * **Soundness.** Schedules the static verifier accepts must keep
+//!   [`count`] at zero over randomized batches — any violation would
+//!   disprove the abstract interpretation.
+//! * **Tightness.** Schedules it rejects ship a synthesized
+//!   counterexample input; executing that input must make [`count`]
+//!   positive — the rejection is demonstrably not a false alarm.
+//!
+//! State is thread-local (workers sanitize independently) and the
+//! detailed log is capped at [`LOG_CAP`] entries; the total counter is
+//! never capped.
+
+use std::cell::{Cell, RefCell};
+
+use crate::bits::format::WORD_MASK;
+
+/// Maximum number of [`Violation`] records retained per thread; the
+/// total count keeps incrementing past the cap.
+pub const LOG_CAP: usize = 1024;
+
+/// What kind of lane invariant was violated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ViolationKind {
+    /// A lane wrapped during a SWAR addition.
+    AddOverflow,
+    /// A lane wrapped during a SWAR subtraction.
+    SubOverflow,
+    /// A minimum-value lane wrapped during a SWAR negation.
+    NegOverflow,
+    /// A produced word had bits set above the 48-bit datapath mask.
+    MaskViolation,
+}
+
+/// One recorded lane violation.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// The invariant that failed.
+    pub kind: ViolationKind,
+    /// Sub-word width of the operation.
+    pub bits: u32,
+    /// For overflows: the MSB mask of the lanes that wrapped. For mask
+    /// violations: the out-of-datapath bits.
+    pub lanes: u64,
+    /// The pipeline context last announced via [`set_context`].
+    pub context: &'static str,
+}
+
+thread_local! {
+    static VIOLATIONS: RefCell<Vec<Violation>> = RefCell::new(Vec::new());
+    static TOTAL: Cell<u64> = Cell::new(0);
+    static CONTEXT: Cell<&'static str> = Cell::new("");
+}
+
+/// Clear this thread's violation log and counter.
+pub fn reset() {
+    VIOLATIONS.with(|v| v.borrow_mut().clear());
+    TOTAL.with(|t| t.set(0));
+}
+
+/// Total violations recorded on this thread since the last [`reset`]
+/// (not capped).
+pub fn count() -> u64 {
+    TOTAL.with(|t| t.get())
+}
+
+/// Drain this thread's detailed violation log (at most [`LOG_CAP`]
+/// entries; the counter is left untouched).
+pub fn take() -> Vec<Violation> {
+    VIOLATIONS.with(|v| std::mem::take(&mut *v.borrow_mut()))
+}
+
+/// Announce the pipeline region subsequent violations belong to
+/// (purely diagnostic — shows up in [`Violation::context`]).
+pub fn set_context(ctx: &'static str) {
+    CONTEXT.with(|c| c.set(ctx));
+}
+
+/// Record `lanes` violating lanes of an operation (no-op when zero).
+/// Never panics — see the module docs for why recording beats raising.
+pub(crate) fn note(kind: ViolationKind, bits: u32, lanes: u64) {
+    if lanes == 0 {
+        return;
+    }
+    TOTAL.with(|t| t.set(t.get() + 1));
+    let context = CONTEXT.with(|c| c.get());
+    VIOLATIONS.with(|v| {
+        let mut log = v.borrow_mut();
+        if log.len() < LOG_CAP {
+            log.push(Violation { kind, bits, lanes, context });
+        }
+    });
+}
+
+/// Check a produced word against the 48-bit datapath mask, recording a
+/// [`ViolationKind::MaskViolation`] if any higher bit is set.
+pub(crate) fn check_word(w: u64, bits: u32) {
+    note(ViolationKind::MaskViolation, bits, w & !WORD_MASK);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recording_is_counted_logged_and_resettable() {
+        reset();
+        assert_eq!(count(), 0);
+        note(ViolationKind::AddOverflow, 8, 0); // zero lanes: no-op
+        assert_eq!(count(), 0);
+        set_context("unit-test");
+        note(ViolationKind::AddOverflow, 8, 0x80);
+        check_word(1u64 << 50, 8);
+        assert_eq!(count(), 2);
+        let log = take();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[0].kind, ViolationKind::AddOverflow);
+        assert_eq!(log[0].context, "unit-test");
+        assert_eq!(log[1].kind, ViolationKind::MaskViolation);
+        assert_eq!(log[1].lanes, 1u64 << 50);
+        // take() drained the log but not the counter; reset clears both.
+        assert_eq!(count(), 2);
+        reset();
+        assert_eq!(count(), 0);
+        assert!(take().is_empty());
+    }
+
+    #[test]
+    fn log_caps_but_counter_does_not() {
+        reset();
+        for _ in 0..(LOG_CAP + 10) {
+            note(ViolationKind::MaskViolation, 4, 1);
+        }
+        assert_eq!(count(), LOG_CAP as u64 + 10);
+        assert_eq!(take().len(), LOG_CAP);
+        reset();
+    }
+}

@@ -7,6 +7,8 @@
 
 pub mod fixed;
 pub mod format;
+#[cfg(feature = "lanecheck")]
+pub mod lanecheck;
 pub mod pack;
 pub mod swar;
 

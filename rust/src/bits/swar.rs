@@ -8,37 +8,83 @@
 //! classical SWAR identities below; the per-format masks *are* `V_x`.
 //!
 //! All functions preserve the invariant `result & !WORD_MASK == 0`.
+//!
+//! Under `--features lanecheck` the standalone add/sub/neg report any
+//! lane that actually wrapped to the runtime sanitizer
+//! ([`crate::bits::lanecheck`]); the *fused* ops with `k ≥ 1` do not —
+//! their `(b+1)`-bit intermediate makes a wrapped sum sign-corrected
+//! and information-lossless by construction, so it is not a violation.
 
 use super::format::{SimdFormat, MAX_SHIFT, WORD_MASK};
 
-/// Per-sub-word add, modulo `2^b` in each lane (carry killed at
-/// boundaries — an overflowing lane wraps, it never disturbs its
-/// neighbour).
+/// The raw wrapping SWAR add shared by every public entry point (no
+/// sanitizer hook — callers that legitimately exploit the wrapped form
+/// go through here).
 ///
 /// Identity: with `H` the MSB mask, `(a&~H) + (c&~H)` can never carry
 /// *out* of a lane (the MSBs are zeroed), and the true MSB sum is
 /// restored by `^ ((a^c) & H)`.
 #[inline]
-pub fn swar_add(a: u64, c: u64, fmt: SimdFormat) -> u64 {
+fn add_wrapped(a: u64, c: u64, fmt: SimdFormat) -> u64 {
     debug_assert_eq!(a & !WORD_MASK, 0);
     debug_assert_eq!(c & !WORD_MASK, 0);
     let h = fmt.msb_mask();
     (((a & !h).wrapping_add(c & !h)) ^ ((a ^ c) & h)) & WORD_MASK
 }
 
+/// The raw wrapping SWAR negation (complement, then `+1` injected at
+/// every lane LSB); no sanitizer hook.
+#[inline]
+fn neg_wrapped(c: u64, fmt: SimdFormat) -> u64 {
+    add_wrapped(!c & WORD_MASK, fmt.lsb_mask(), fmt)
+}
+
+/// Per-sub-word add, modulo `2^b` in each lane (carry killed at
+/// boundaries — an overflowing lane wraps, it never disturbs its
+/// neighbour). Under `lanecheck`, wrapped lanes (`~(a^c) & (a^w)` at
+/// the MSB) are reported to the sanitizer.
+#[inline]
+pub fn swar_add(a: u64, c: u64, fmt: SimdFormat) -> u64 {
+    let w = add_wrapped(a, c, fmt);
+    #[cfg(feature = "lanecheck")]
+    crate::bits::lanecheck::note(
+        crate::bits::lanecheck::ViolationKind::AddOverflow,
+        fmt.bits,
+        !(a ^ c) & (a ^ w) & fmt.msb_mask(),
+    );
+    w
+}
+
 /// Per-sub-word two's-complement negation: bitwise complement then `+1`
 /// injected at every lane LSB — exactly the subtraction path of the
 /// configurable adder ("provide +1 for the next sub-word in
-/// subtractions", Section III-B).
+/// subtractions", Section III-B). Under `lanecheck`, wrapped lanes
+/// (negating the lane minimum: `c & w` at the MSB) are reported.
 #[inline]
 pub fn swar_neg(c: u64, fmt: SimdFormat) -> u64 {
-    swar_add(!c & WORD_MASK, fmt.lsb_mask(), fmt)
+    let w = neg_wrapped(c, fmt);
+    #[cfg(feature = "lanecheck")]
+    crate::bits::lanecheck::note(
+        crate::bits::lanecheck::ViolationKind::NegOverflow,
+        fmt.bits,
+        c & w & fmt.msb_mask(),
+    );
+    w
 }
 
-/// Per-sub-word subtract `a - c` (mod `2^b` per lane).
+/// Per-sub-word subtract `a - c` (mod `2^b` per lane). Under
+/// `lanecheck`, wrapped lanes (`(a^c) & (a^w)` at the MSB) are
+/// reported.
 #[inline]
 pub fn swar_sub(a: u64, c: u64, fmt: SimdFormat) -> u64 {
-    swar_add(a, swar_neg(c, fmt), fmt)
+    let w = add_wrapped(a, neg_wrapped(c, fmt), fmt);
+    #[cfg(feature = "lanecheck")]
+    crate::bits::lanecheck::note(
+        crate::bits::lanecheck::ViolationKind::SubOverflow,
+        fmt.bits,
+        (a ^ c) & (a ^ w) & fmt.msb_mask(),
+    );
+    w
 }
 
 /// Per-sub-word *arithmetic* right shift by `k ∈ {1..=3}` — the
@@ -76,11 +122,13 @@ pub fn swar_sar(a: u64, k: u32, fmt: SimdFormat) -> u64 {
 /// position-0 digit).
 #[inline]
 pub fn swar_add_sar(a: u64, c: u64, k: u32, fmt: SimdFormat) -> u64 {
-    let h = fmt.msb_mask();
-    let w = swar_add(a, c, fmt);
     if k == 0 {
-        return w;
+        // The final position-0 digit: a genuinely wrapping add, routed
+        // through the sanitizer-visible entry point.
+        return swar_add(a, c, fmt);
     }
+    let h = fmt.msb_mask();
+    let w = add_wrapped(a, c, fmt);
     let ovf = !(a ^ c) & (a ^ w) & h;
     sar_with_sign(w, (w & h) ^ ovf, k, fmt)
 }
@@ -90,11 +138,11 @@ pub fn swar_add_sar(a: u64, c: u64, k: u32, fmt: SimdFormat) -> u64 {
 /// and the result disagrees with `a`: `V = (a^c) & (a^w)` at the MSB.
 #[inline]
 pub fn swar_sub_sar(a: u64, c: u64, k: u32, fmt: SimdFormat) -> u64 {
-    let h = fmt.msb_mask();
-    let w = swar_sub(a, c, fmt);
     if k == 0 {
-        return w;
+        return swar_sub(a, c, fmt);
     }
+    let h = fmt.msb_mask();
+    let w = add_wrapped(a, neg_wrapped(c, fmt), fmt);
     let ovf = (a ^ c) & (a ^ w) & h;
     sar_with_sign(w, (w & h) ^ ovf, k, fmt)
 }
@@ -325,6 +373,33 @@ mod tests {
             assert_eq!(swar_relu(r, fmt), r);
             assert_eq!(swar_relu(0, fmt), 0);
         }
+    }
+
+    #[cfg(feature = "lanecheck")]
+    #[test]
+    fn sanitizer_records_wrapped_lanes_but_not_fused_intermediates() {
+        use crate::bits::lanecheck::{self, ViolationKind};
+        let fmt = SimdFormat::new(8);
+        let a = pack(&[127, 0, -128, 1, 0, 0], fmt);
+        let c = pack(&[1, 0, -1, 2, 0, 0], fmt);
+        lanecheck::reset();
+        swar_add(a, c, fmt);
+        assert_eq!(lanecheck::count(), 1, "one violating op recorded");
+        let log = lanecheck::take();
+        assert_eq!(log[0].kind, ViolationKind::AddOverflow);
+        // Lanes 0 (127+1) and 2 (−128−1) wrapped: their MSB bits.
+        assert_eq!(log[0].lanes, (1u64 << 7) | (1u64 << 23));
+        // The same operands through the fused op with k ≥ 1 are
+        // information-lossless ((b+1)-bit intermediate): no record.
+        lanecheck::reset();
+        swar_add_sar(a, c, 1, fmt);
+        swar_sub_sar(a, c, 2, fmt);
+        assert_eq!(lanecheck::count(), 0);
+        // Negating the lane minimum is the one neg overflow.
+        swar_neg(pack(&[-128, 1, -1, 0, 0, 0], fmt), fmt);
+        assert_eq!(lanecheck::count(), 1);
+        assert_eq!(lanecheck::take()[0].kind, ViolationKind::NegOverflow);
+        lanecheck::reset();
     }
 
     #[test]

@@ -26,8 +26,9 @@
 //! is an error for its builder — never a panic inside a PE worker.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
+use crate::analysis::{AnalysisError, LaneSafetyReport};
 use crate::anyhow;
 use crate::bits::format::SimdFormat;
 use crate::csd::flat::PlanArena;
@@ -205,6 +206,10 @@ pub struct CompiledModel {
     cycles_per_word: u64,
     /// Count of zero weights (zero-skipped at execution).
     zero_weights: u64,
+    /// Lazily computed lane-safety verdict per variant (same order as
+    /// `variants`). Populated on first [`CompiledModel::lane_safety`]
+    /// call; `compile_variants_verified` forces it at compile time.
+    lane_safety: OnceLock<Vec<Result<LaneSafetyReport, AnalysisError>>>,
 }
 
 /// A multi-variant [`CompiledModel`] behind its serving `Arc` — the
@@ -373,7 +378,33 @@ impl CompiledModel {
             variants,
             cycles_per_word,
             zero_weights,
+            lane_safety: OnceLock::new(),
         }))
+    }
+
+    /// [`compile_variants`] plus the static lane-safety verifier
+    /// (DESIGN.md §14) over **every** variant: a schedule whose
+    /// worst-case accumulator range can wrap a lane is a typed
+    /// [`CompileError::Unsafe`] carrying the per-layer analysis verdict
+    /// and, when the overflow is reachable from the model input, a
+    /// synthesized concrete counterexample row.
+    ///
+    /// [`compile_variants`]: CompiledModel::compile_variants
+    pub fn compile_variants_verified(
+        layers: Vec<LayerOp>,
+        specs: Vec<VariantSpec>,
+    ) -> Result<Arc<CompiledModel>, CompileError> {
+        let model =
+            CompiledModel::compile_variants(layers, specs).map_err(CompileError::Invalid)?;
+        for v in 0..model.n_variants() {
+            if let Err(e) = model.lane_safety(v) {
+                return Err(CompileError::Unsafe {
+                    variant: model.variant(v).name().to_string(),
+                    error: e.clone(),
+                });
+            }
+        }
+        Ok(model)
     }
 
     pub fn layers(&self) -> &[LayerOp] {
@@ -474,7 +505,57 @@ impl CompiledModel {
     pub fn zero_weights(&self) -> u64 {
         self.zero_weights
     }
+
+    /// Variant `v`'s static lane-safety verdict: the per-layer margin
+    /// report when the schedule is proven safe, or the typed analysis
+    /// error (with a synthesized counterexample where reachable) when it
+    /// is not. Computed once per variant set on first call and cached;
+    /// the plain `compile*` paths never force it, so existing unsafe
+    /// test fixtures still compile — opt into enforcement with
+    /// [`CompiledModel::compile_variants_verified`].
+    pub fn lane_safety(&self, v: usize) -> Result<&LaneSafetyReport, &AnalysisError> {
+        let all = self.lane_safety.get_or_init(|| {
+            self.variants
+                .iter()
+                .map(|var| {
+                    crate::analysis::verify_with_arena(&self.layers, &self.arena, var.schedule())
+                })
+                .collect()
+        });
+        all[v].as_ref()
+    }
 }
+
+/// Error type of [`CompiledModel::compile_variants_verified`]: either
+/// the structural validation failure the plain compile paths already
+/// produce, or a schedule the lane-safety verifier rejected.
+#[derive(Debug)]
+pub enum CompileError {
+    /// Structural validation failed (empty stack, non-chaining dims,
+    /// malformed schedule, ...) — the `compile_variants` error.
+    Invalid(anyhow::Error),
+    /// A variant's schedule can wrap a lane: the verifier's typed
+    /// verdict, naming the offending variant.
+    Unsafe {
+        /// Display name of the rejected variant.
+        variant: String,
+        /// The analysis verdict (layer, bound, counterexample).
+        error: AnalysisError,
+    },
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::Invalid(e) => write!(f, "invalid model: {e}"),
+            CompileError::Unsafe { variant, error } => {
+                write!(f, "variant '{variant}' is lane-unsafe: {error}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
 
 #[cfg(test)]
 mod tests {
@@ -628,6 +709,41 @@ mod tests {
         // Reference-variant delegations keep pointing at variant 0.
         assert_eq!(m.schedule(), m.variant(0).schedule());
         assert_eq!(m.batch_quantum(), m.variant(0).batch_quantum());
+    }
+
+    #[test]
+    fn lane_safety_is_cached_per_variant_and_verified_compile_enforces_it() {
+        let ops: Vec<LayerOp> = layers().into_iter().map(LayerOp::Dense).collect();
+        let m = CompiledModel::compile_variants(ops.clone(), VariantSpec::standard_trio(2))
+            .unwrap();
+        for v in 0..m.n_variants() {
+            let report = m.lane_safety(v).unwrap_or_else(|e| {
+                panic!("variant {} should verify: {e}", m.variant(v).name())
+            });
+            assert_eq!(report.layers.len(), 2);
+        }
+        // Cached: the second call returns the same report object.
+        assert!(std::ptr::eq(m.lane_safety(0).unwrap(), m.lane_safety(0).unwrap()));
+        // The verified compile path accepts the same set…
+        CompiledModel::compile_variants_verified(ops, VariantSpec::standard_trio(2))
+            .expect("trio is lane-safe on this stack");
+        // …and rejects an under-provisioned one: 32 taps of +32/128 into
+        // an 8-bit accumulator needs 11 bits of headroom.
+        let wide = vec![LayerOp::Dense(QuantLayer::new(vec![vec![32; 4]; 32], 8))];
+        let specs = vec![VariantSpec::new("hot", uniform_schedule(8, 8, 1))];
+        let err = CompiledModel::compile_variants_verified(wide.clone(), specs.clone())
+            .expect_err("wide fan-in into an equal-width accumulator");
+        match &err {
+            CompileError::Unsafe { variant, error } => {
+                assert_eq!(variant, "hot");
+                assert_eq!(error.layer(), 0);
+            }
+            other => panic!("expected Unsafe, got {other}"),
+        }
+        // The plain compile path still accepts it (opt-in enforcement)
+        // but reports the verdict on demand.
+        let m = CompiledModel::compile_variants(wide, specs).unwrap();
+        assert!(m.lane_safety(0).is_err());
     }
 
     #[test]

@@ -129,6 +129,16 @@ pub enum ServeError {
         lost_rows: usize,
         recovered: Vec<Response>,
     },
+    /// A shared lock was poisoned by a panicking holder. Submit-path
+    /// callers get this instead of a propagated panic; `recovered`
+    /// carries any responses `drain` still collected. Observability
+    /// and teardown paths (`pending_rows`, `kill_worker`, `shutdown`,
+    /// the deadline tick) recover the lock instead — they must make
+    /// progress even after a panic elsewhere.
+    LockPoisoned {
+        what: &'static str,
+        recovered: Vec<Response>,
+    },
 }
 
 impl std::fmt::Display for ServeError {
@@ -148,11 +158,38 @@ impl std::fmt::Display for ServeError {
                  rows ({} responses recovered)",
                 recovered.len()
             ),
+            ServeError::LockPoisoned { what, recovered } => write!(
+                f,
+                "{what} lock poisoned by a panicking holder ({} responses \
+                 recovered)",
+                recovered.len()
+            ),
         }
     }
 }
 
 impl std::error::Error for ServeError {}
+
+/// Recover a mutex regardless of poisoning — for paths that must make
+/// progress after a panic elsewhere (teardown, observability, the
+/// deadline tick, writing off dead workers' counters). The guarded
+/// state is counters and queues that stay consistent across a holder's
+/// panic; the submit paths use [`lock_or`] instead and surface the
+/// poisoning as a typed error.
+fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Acquire a mutex or surface the poisoning as
+/// [`ServeError::LockPoisoned`] — the submit-path counterpart of
+/// [`relock`]: a caller handing in new work can be refused cleanly.
+fn lock_or<'a, T>(
+    m: &'a Mutex<T>,
+    what: &'static str,
+) -> Result<std::sync::MutexGuard<'a, T>, ServeError> {
+    m.lock()
+        .map_err(|_| ServeError::LockPoisoned { what, recovered: vec![] })
+}
 
 enum WorkerMsg {
     Work(Batch),
@@ -325,32 +362,28 @@ impl Shared {
         // has no decision to make: skip the snapshot/quantile work
         // entirely rather than tax every dispatch of the common case
         // with a heap allocation under the batcher lock.
+        // A poisoned governor degrades gracefully: the batch keeps its
+        // current variant tag and dispatch proceeds — precision
+        // adaptation pauses, serving does not.
         if self.quanta.len() > 1 {
-            let mut gov = self.governor.lock().unwrap();
-            let queued_rows = batch.rows
-                + batcher.pending_rows()
-                + self
-                    .port_loads
-                    .iter()
-                    .map(|l| l.load(Ordering::Relaxed))
-                    .sum::<usize>();
-            let snap = self.metrics.snapshot();
-            let window_p99_ns = snap.window_latency_quantile_ns(&gov.last_snap, 0.99);
-            let chosen = gov.policy.choose(&LoadSignals {
-                queued_rows,
-                window_p99_ns,
-                n_variants: self.quanta.len(),
-            });
-            gov.last_snap = snap;
-            let v = chosen.min(self.quanta.len() - 1);
-            if v != self.active_variant.swap(v, Ordering::Relaxed) {
-                self.metrics.note_variant_switch();
+            if let Ok(mut gov) = self.governor.lock() {
+                self.govern(&mut gov, batcher, &mut batch);
             }
-            batch.variant = v;
-            batcher.set_quantum(self.quanta[v]);
         }
         self.in_flight.fetch_add(1, Ordering::SeqCst);
-        let result = self.router.lock().unwrap().dispatch(batch);
+        let result = match self.router.lock() {
+            Ok(mut router) => router.dispatch(batch),
+            Err(_) => {
+                // Poisoned router: restore the batch (it was never
+                // dispatched) and refuse the submit.
+                self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                batcher.restore(batch);
+                return Err(ServeError::LockPoisoned {
+                    what: "router",
+                    recovered: vec![],
+                });
+            }
+        };
         match result {
             Ok(_) => Ok(()),
             Err(batch) => {
@@ -361,9 +394,35 @@ impl Shared {
         }
     }
 
+    /// The governor decision of [`dispatch_locked`], split out so a
+    /// poisoned governor lock can skip it wholesale.
+    fn govern(&self, gov: &mut GovernorState, batcher: &mut Batcher, batch: &mut Batch) {
+        let queued_rows = batch.rows
+            + batcher.pending_rows()
+            + self
+                .port_loads
+                .iter()
+                .map(|l| l.load(Ordering::Relaxed))
+                .sum::<usize>();
+        let snap = self.metrics.snapshot();
+        let window_p99_ns = snap.window_latency_quantile_ns(&gov.last_snap, 0.99);
+        let chosen = gov.policy.choose(&LoadSignals {
+            queued_rows,
+            window_p99_ns,
+            n_variants: self.quanta.len(),
+        });
+        gov.last_snap = snap;
+        let v = chosen.min(self.quanta.len() - 1);
+        if v != self.active_variant.swap(v, Ordering::Relaxed) {
+            self.metrics.note_variant_switch();
+        }
+        batch.variant = v;
+        batcher.set_quantum(self.quanta[v]);
+    }
+
     /// Submit path: offer a request; dispatch if the target fills.
     fn push_and_dispatch(&self, tr: TrackedRequest) -> Result<(), ServeError> {
-        let mut batcher = self.batcher.lock().unwrap();
+        let mut batcher = lock_or(&self.batcher, "batcher")?;
         match batcher.push(tr) {
             Some(batch) => self.dispatch_locked(&mut batcher, batch),
             None => Ok(()),
@@ -371,8 +430,10 @@ impl Shared {
     }
 
     /// Deadline-thread path: poll tick; dispatch a straggler flush.
+    /// Recovers a poisoned batcher — the deadline thread must keep
+    /// ticking (and must never panic itself) after a panic elsewhere.
     fn tick_and_dispatch(&self) {
-        let mut batcher = self.batcher.lock().unwrap();
+        let mut batcher = relock(&self.batcher);
         if let Some(batch) = batcher.tick() {
             // Total dispatch failure restores the rows; the next
             // drain() surfaces the error.
@@ -382,7 +443,7 @@ impl Shared {
 
     /// Drain path: force out whatever is pending.
     fn flush_and_dispatch(&self) -> Result<(), ServeError> {
-        let mut batcher = self.batcher.lock().unwrap();
+        let mut batcher = lock_or(&self.batcher, "batcher")?;
         match batcher.flush() {
             Some(batch) => self.dispatch_locked(&mut batcher, batch),
             None => Ok(()),
@@ -580,8 +641,9 @@ impl Coordinator {
     }
 
     /// Rows batched but not yet dispatched (waiting on the deadline).
+    /// Observability must survive a poisoned lock.
     pub fn pending_rows(&self) -> usize {
-        self.shared.batcher.lock().unwrap().pending_rows()
+        relock(&self.shared.batcher).pending_rows()
     }
 
     /// Fault injection / rolling restart: stop worker `idx` after it
@@ -589,7 +651,7 @@ impl Coordinator {
     /// in-queue work still completes and is collected by `drain`.
     pub fn kill_worker(&mut self, idx: usize) {
         let tx = {
-            let mut router = self.shared.router.lock().unwrap();
+            let mut router = relock(&self.shared.router);
             match router.ports.get_mut(idx) {
                 Some(port) => {
                     port.alive = false;
@@ -621,7 +683,7 @@ impl Coordinator {
             return false;
         }
         {
-            let router = self.shared.router.lock().unwrap();
+            let router = relock(&self.shared.router);
             if router.ports[idx].alive {
                 return false;
             }
@@ -638,7 +700,7 @@ impl Coordinator {
             self.queue_depth,
             Arc::clone(&self.shared.port_loads[idx]),
             {
-                let router = self.shared.router.lock().unwrap();
+                let router = relock(&self.shared.router);
                 Arc::clone(&router.ports[idx].outstanding_batches)
             },
         );
@@ -647,7 +709,7 @@ impl Coordinator {
         // Install the new port only after the old worker is gone: its
         // leftover counters were either drained by the worker itself or
         // written off by `drain`.
-        let mut router = self.shared.router.lock().unwrap();
+        let mut router = relock(&self.shared.router);
         std::mem::swap(&mut router.ports[idx], &mut port);
         // `port` now holds the dead incarnation's channel; dropping it
         // closes that queue for good.
@@ -666,7 +728,7 @@ impl Coordinator {
         let mut lost_rows = 0usize;
         // Write off work held by workers that exited without answering.
         let write_off = |lost_workers: &mut Vec<usize>, lost_rows: &mut usize| {
-            let mut router = self.shared.router.lock().unwrap();
+            let mut router = relock(&self.shared.router);
             for (i, port) in router.ports.iter_mut().enumerate() {
                 if !self.workers[i].is_finished() {
                     continue;
@@ -711,10 +773,13 @@ impl Coordinator {
                 recovered: out,
             });
         }
-        if flush_err.is_some() {
-            return Err(ServeError::NoLiveWorkers { recovered: out });
+        match flush_err {
+            Some(ServeError::LockPoisoned { what, .. }) => {
+                Err(ServeError::LockPoisoned { what, recovered: out })
+            }
+            Some(_) => Err(ServeError::NoLiveWorkers { recovered: out }),
+            None => Ok(out),
         }
-        Ok(out)
     }
 
     /// Stop the deadline thread and workers, then join them.
@@ -725,7 +790,7 @@ impl Coordinator {
             let _ = t.join();
         }
         {
-            let router = self.shared.router.lock().unwrap();
+            let router = relock(&self.shared.router);
             for port in &router.ports {
                 // Blocking send so Stop lands even behind a full queue;
                 // a dead worker just returns SendError.
@@ -914,6 +979,40 @@ mod tests {
         assert_eq!(responses.len(), 12);
         let batches = coord.metrics.batches.load(Ordering::Relaxed);
         assert!(batches <= 2, "expected ≤2 batches, got {batches}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn poisoned_batcher_degrades_to_typed_errors_not_panics() {
+        let mut rng = XorShift64::new(0xDEAD10);
+        let ls = layers(&mut rng);
+        let model = CompiledModel::compile(ls, 8, 16).unwrap();
+        let cfg = ServeConfig::new(1, 4).deadline(Duration::from_secs(5));
+        let mut coord = Coordinator::start(model, cfg, tiny_cost());
+        // Poison the batcher lock: a thread panics while holding it.
+        let shared = Arc::clone(&coord.shared);
+        let _ = std::thread::spawn(move || {
+            let _guard = shared.batcher.lock().unwrap();
+            panic!("deliberate poison (test)");
+        })
+        .join();
+        // Submits are refused with a typed error, not a propagated
+        // panic…
+        let req = Request { id: 1, rows: vec![vec![0i64; 8]] };
+        match coord.submit(req) {
+            Err(ServeError::LockPoisoned { what: "batcher", .. }) => {}
+            other => panic!("expected LockPoisoned, got {other:?}"),
+        }
+        // …observability recovers the lock…
+        assert_eq!(coord.pending_rows(), 0);
+        // …drain surfaces the same condition, with whatever completed…
+        match coord.drain() {
+            Err(ServeError::LockPoisoned { what: "batcher", recovered }) => {
+                assert!(recovered.is_empty());
+            }
+            other => panic!("expected LockPoisoned from drain, got {other:?}"),
+        }
+        // …and teardown still joins every thread.
         coord.shutdown();
     }
 

@@ -164,6 +164,35 @@ impl PlanArena {
         &self.ops[h.offset as usize..h.offset as usize + h.cycles as usize]
     }
 
+    /// Number of layers flattened into the arena.
+    #[inline]
+    pub fn n_layers(&self) -> usize {
+        self.layer_base.len()
+    }
+
+    /// `(k, n)` dimensions of layer `li`'s header block — the input
+    /// width (column stride) and output column count it was built with.
+    #[inline]
+    pub fn layer_dims(&self, li: usize) -> (usize, usize) {
+        let base = self.layer_base[li];
+        let end = self
+            .layer_base
+            .get(li + 1)
+            .copied()
+            .unwrap_or(self.headers.len());
+        let k = self.layer_k[li];
+        (k, if k == 0 { 0 } else { (end - base) / k })
+    }
+
+    /// Walk one plan's micro-ops decoded back to [`MulOp`]s, in issue
+    /// order — the inspection/analysis view of the bytecode (the
+    /// execution path stays on the raw bytes). The iterator is `Clone`
+    /// so abstract interpreters can replay a plan per input value.
+    #[inline]
+    pub fn walk(&self, h: FlatPlan) -> impl Iterator<Item = MulOp> + Clone + '_ {
+        self.ops(h).iter().map(|&b| decode_op(b))
+    }
+
     /// Total micro-op bytes in the arena (diagnostics).
     pub fn total_ops(&self) -> usize {
         self.ops.len()
@@ -241,6 +270,13 @@ mod tests {
             (0..3).map(|i| (0..2).map(|j| schedule(i * j, 8)).collect()).collect();
         let arena = PlanArena::build(&[l0.clone(), l1.clone()]);
         assert_eq!(arena.total_plans(), 12 + 6);
+        assert_eq!(arena.n_layers(), 2);
+        assert_eq!(arena.layer_dims(0), (4, 3));
+        assert_eq!(arena.layer_dims(1), (3, 2));
+        // The walker decodes exactly the plan the header was built from.
+        let h = arena.header(0, 2, 1);
+        let walked: Vec<MulOp> = arena.walk(h).collect();
+        assert_eq!(walked, l0[2][1].ops);
         for (k, row) in l0.iter().enumerate() {
             for (n, plan) in row.iter().enumerate() {
                 assert_eq!(arena.header(0, k, n).cycles as usize, plan.cycles());

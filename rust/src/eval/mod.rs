@@ -10,7 +10,9 @@
 //! the same sweep on the im2col CNN serving path (DESIGN.md §12);
 //! `autoscale` prices the accuracy/energy/latency Pareto across a
 //! precision-variant set — the operating points the serving governor
-//! switches between at run time (DESIGN.md §13).
+//! switches between at run time (DESIGN.md §13); `verify` prints the
+//! static lane-safety margins the abstract interpreter proves for the
+//! same variant trio (DESIGN.md §14).
 
 use crate::anyhow;
 
@@ -24,6 +26,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod precision;
 pub mod summary;
+pub mod verify;
 
 pub fn run(target: &str) -> anyhow::Result<()> {
     match target {
@@ -37,6 +40,7 @@ pub fn run(target: &str) -> anyhow::Result<()> {
         "precision" => precision::run(),
         "conv" => conv::run(),
         "autoscale" => autoscale::run(),
+        "verify" => verify::run(),
         "all" => {
             fig6::run()?;
             fig7::run()?;
@@ -47,11 +51,12 @@ pub fn run(target: &str) -> anyhow::Result<()> {
             ablation::run()?;
             precision::run()?;
             conv::run()?;
-            autoscale::run()
+            autoscale::run()?;
+            verify::run()
         }
         other => anyhow::bail!(
             "unknown eval target `{other}` (fig6..fig10, summary, ablation, \
-             precision, conv, autoscale, all)"
+             precision, conv, autoscale, verify, all)"
         ),
     }
 }

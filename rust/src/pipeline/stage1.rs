@@ -90,6 +90,11 @@ impl Stage1 {
     #[inline]
     pub fn run_flat(&mut self, x: u64, ops: &[u8]) -> u64 {
         use crate::csd::flat::{FLAT_ADD, FLAT_NEG, FLAT_SHIFT_MASK};
+        #[cfg(feature = "lanecheck")]
+        {
+            crate::bits::lanecheck::set_context("stage1::run_flat");
+            crate::bits::lanecheck::check_word(x, self.fmt.bits);
+        }
         self.x = x;
         self.acc = 0;
         for &op in ops {
@@ -106,6 +111,8 @@ impl Stage1 {
             };
             self.cycles += 1;
         }
+        #[cfg(feature = "lanecheck")]
+        crate::bits::lanecheck::check_word(self.acc, self.fmt.bits);
         self.acc
     }
 

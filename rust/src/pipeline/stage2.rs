@@ -152,6 +152,8 @@ pub fn repack_hop_into(
 ) {
     debug_assert!(is_direct(from, to), "{from}->{to} is not a direct crossbar hop");
     debug_assert!(src.len() * from.lanes() as usize >= count, "source stream too short");
+    #[cfg(feature = "lanecheck")]
+    crate::bits::lanecheck::set_context("stage2::repack_hop_into");
     dst.clear();
     let out_lanes = to.lanes() as usize;
     let in_lanes = from.lanes() as usize;
@@ -170,6 +172,8 @@ pub fn repack_hop_into(
             );
             w |= truncate(convert_subword(s, from, to), to.bits) << (lane as u32 * to.bits);
         }
+        #[cfg(feature = "lanecheck")]
+        crate::bits::lanecheck::check_word(w, to.bits);
         dst.push(w);
     }
 }

@@ -62,7 +62,9 @@ impl Simulator {
     ///
     /// Hot path of the figure harness: cell operand indices are
     /// topologically ordered by construction (`NetBuilder` asserts it),
-    /// so unchecked reads are sound (DESIGN.md §9).
+    /// so the indexed reads below never fail their bounds checks
+    /// (DESIGN.md §9). Plain indexing — the crate denies `unsafe_code`,
+    /// and the predictable in-bounds branches cost little here.
     pub fn eval(&mut self, net: &Netlist) -> u64 {
         let pending = self.pending.take().expect("set_inputs before eval");
         assert_eq!(pending.len(), net.inputs.len(), "input width mismatch");
@@ -71,8 +73,8 @@ impl Simulator {
         let mut in_idx = 0usize;
         let v = &mut self.values;
         for (i, cell) in net.cells.iter().enumerate() {
-            // SAFETY: builder guarantees a/b/sel < i ≤ values.len().
-            let rd = |idx: u32| unsafe { *v.get_unchecked(idx as usize) };
+            // Builder guarantees a/b/sel < i ≤ values.len().
+            let rd = |idx: u32| v[idx as usize];
             let new = match cell.kind {
                 CellKind::Input => {
                     let x = pending[in_idx];

@@ -162,19 +162,38 @@ impl ImageSet {
 /// the image-classification scenario the conv serving path is
 /// exercised on (eval sweep, engine bench, the `cnn_serve` example):
 /// conv 1×8×8 → 4ch 3×3 s1 p1 (64 patch rows per image), conv 4ch →
-/// 4ch 3×3 s2 p1 (16 patch rows), dense 64 → 10 logits. Weights are
-/// seeded from the repo-wide xorshift at `w_bits`.
+/// 4ch 3×3 s2 p1 (16 patch rows), dense 64 → 10 logits.
+///
+/// Like [`synth_mlp_stack`], every output column is a *sparse sign
+/// filter*: the three largest-magnitude taps of a seeded random draw,
+/// snapped to ±0.25 (`±2^(w_bits-3)` raw), the rest zeroed. Sparsity
+/// is load-bearing for the accumulator range, not cosmetic: each
+/// nonzero tap's truncated product can reach a full negative ULP even
+/// for tiny weights, so a dense random 3×3×4 = 36-tap patch at 4-bit
+/// activations can wrap an 8-bit `Q1.7` accumulator no matter how
+/// small the draws are. Three ±0.25 taps keep the worst-case partial
+/// sums provably inside every schedule of the standard trio — the
+/// static verifier (`analysis`, DESIGN.md §14) proves it per variant
+/// and `eval verify` prints the margins.
 pub fn synth_cnn_stack(seed: u64, w_bits: u32) -> Vec<crate::nn::conv::LayerOp> {
     use crate::nn::conv::{ConvLayer, ConvShape, LayerOp};
     use crate::nn::weights::QuantLayer;
+    assert!(w_bits >= 4, "sparse sign filters need ±2^(w_bits-3) weights");
+    let quarter = 1i64 << (w_bits - 3);
     let mut rng = XorShift64::new(seed);
     let mut mk = |k: usize, n: usize| {
-        QuantLayer::new(
-            (0..k)
-                .map(|_| (0..n).map(|_| rng.q_raw(w_bits)).collect())
-                .collect(),
-            w_bits,
-        )
+        let raw: Vec<Vec<i64>> = (0..k)
+            .map(|_| (0..n).map(|_| rng.q_raw(w_bits)).collect())
+            .collect();
+        let mut w = vec![vec![0i64; n]; k];
+        for col in 0..n {
+            let mut idx: Vec<usize> = (0..k).collect();
+            idx.sort_by_key(|&i| (std::cmp::Reverse(raw[i][col].abs()), i));
+            for &i in idx.iter().take(3.min(k)) {
+                w[i][col] = if raw[i][col] >= 0 { quarter } else { -quarter };
+            }
+        }
+        QuantLayer::new(w, w_bits)
     };
     let s1 = ConvShape { cin: 1, h: 8, w: 8, cout: 4, kh: 3, kw: 3, stride: 1, pad: 1 };
     let s2 = ConvShape { cin: 4, h: 8, w: 8, cout: 4, kh: 3, kw: 3, stride: 2, pad: 1 };
@@ -375,6 +394,16 @@ mod tests {
         assert_eq!(stack[2].out_len(), 10);
         assert_eq!(stack[0].patch_rows(), 64, "8×8 output pixels per image");
         assert_eq!(stack[1].patch_rows(), 16, "stride-2 4×4 output pixels");
+        // Every output column of every layer is a 3-tap ±0.25 filter.
+        for (li, op) in stack.iter().enumerate() {
+            let w = op.weights();
+            for n in 0..w.n {
+                let taps: Vec<i64> =
+                    (0..w.k).map(|k| w.w_raw[k][n]).filter(|&v| v != 0).collect();
+                assert_eq!(taps.len(), 3, "layer {li} col {n}");
+                assert!(taps.iter().all(|&v| v.abs() == 32), "layer {li} col {n}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Lane-safety verifier integration tests (DESIGN.md §14).
+//!
+//! The static side is exercised unconditionally: the standard serving
+//! trio must verify on both synthetic stacks, an under-provisioned
+//! schedule must be rejected with a *working* counterexample, and every
+//! analyzer-accepted random (stack, schedule) pair must shadow-execute
+//! random batches without a single wrap.
+//!
+//! Under `--features lanecheck` the dynamic sanitizer becomes the
+//! oracle for the same claims on the *packed engine itself*: accepted
+//! pairs run thousands of rows with zero recorded violations
+//! (soundness), and rejected pairs' synthesized counterexamples trip
+//! the sanitizer when executed (the rejection is no false alarm).
+
+use softsimd::analysis::{find_first_wrap, verify_stack, AnalysisError, WrapEvent};
+use softsimd::coordinator::model::{CompileError, CompiledModel, VariantSpec};
+use softsimd::nn::conv::LayerOp;
+use softsimd::nn::weights::{uniform_schedule, LayerPrecision, QuantLayer};
+use softsimd::testutil::{random_batch, random_schedule};
+use softsimd::workload::synth::{synth_cnn_stack, synth_mlp_stack, XorShift64};
+
+/// 32 taps of +0.25 into each of 4 columns: the worst-case widened sum
+/// needs 11 bits against the 8 a uniform 8→8 schedule provides, so the
+/// verifier must reject it.
+fn wide_fanin(sign: i64) -> Vec<LayerOp> {
+    vec![LayerOp::Dense(QuantLayer::new(vec![vec![sign * 32; 4]; 32], 8))]
+}
+
+/// The same ±0.25 weights at a 4-row fan-in: the worst-case sum uses
+/// the 8-bit accumulator exactly (margin 0), so the verifier accepts
+/// it — the fixture above is rejected for its fan-in, not its formats.
+fn narrow_fanin() -> Vec<LayerOp> {
+    vec![LayerOp::Dense(QuantLayer::new(vec![vec![32; 4]; 4], 8))]
+}
+
+/// A random sparse-sign dense stack in the synth-workload idiom: per
+/// output column, three ±2^(w_bits−3) taps at random rows — the weight
+/// family the analyzer accepts across most random schedules.
+fn random_sparse_stack(rng: &mut XorShift64, dims: &[usize]) -> Vec<QuantLayer> {
+    dims.windows(2)
+        .map(|d| {
+            let (k, n) = (d[0], d[1]);
+            let w_bits = [4u32, 6, 8][(rng.next_u64() % 3) as usize];
+            let quarter = 1i64 << (w_bits - 3);
+            let mut w = vec![vec![0i64; n]; k];
+            for col in 0..n {
+                for _ in 0..3 {
+                    let row = (rng.next_u64() % k as u64) as usize;
+                    w[row][col] =
+                        if rng.next_u64() & 1 == 0 { quarter } else { -quarter };
+                }
+            }
+            QuantLayer::new(w, w_bits)
+        })
+        .collect()
+}
+
+#[test]
+fn standard_trio_is_proven_safe_on_both_synth_stacks() {
+    let stacks = [
+        ("synth-mlp", synth_mlp_stack(8)),
+        ("synth-cnn", synth_cnn_stack(0x5C4EF, 8)),
+    ];
+    for (name, stack) in &stacks {
+        for spec in VariantSpec::standard_trio(stack.len()) {
+            let report = verify_stack(stack, &spec.schedule).unwrap_or_else(|e| {
+                panic!("{name} / {} must verify: {e}", spec.name)
+            });
+            assert_eq!(report.layers.len(), stack.len(), "{name} / {}", spec.name);
+            for m in &report.layers {
+                assert!(
+                    m.needed_bits <= m.precision.acc_bits,
+                    "{name} / {} layer {}",
+                    spec.name,
+                    m.layer
+                );
+            }
+        }
+    }
+    // The matched-filter MLP margins are pinned: the first layer uses
+    // its accumulator exactly (margin 0) and the ×0.5 diagonal head
+    // keeps a guard bit at every operating point.
+    let mlp = synth_mlp_stack(8);
+    for spec in VariantSpec::standard_trio(2) {
+        let report = verify_stack(&mlp, &spec.schedule).unwrap();
+        assert_eq!(report.layers[0].margin_bits, 0, "{}", spec.name);
+        assert_eq!(report.min_margin_bits(), 0, "{}", spec.name);
+        assert!(report.layers[1].margin_bits >= 1, "{}", spec.name);
+    }
+}
+
+#[test]
+fn under_provisioned_schedule_is_rejected_with_a_working_counterexample() {
+    let hot = wide_fanin(1);
+    let sched = uniform_schedule(8, 8, 1);
+    let err = verify_stack(&hot, &sched).expect_err("needs 11 bits, got 8");
+    match &err {
+        AnalysisError::AccumulatorOverflow { layer, acc_bits, needed_bits, .. } => {
+            assert_eq!(*layer, 0);
+            assert_eq!(*acc_bits, 8);
+            assert_eq!(*needed_bits, 11);
+        }
+        other => panic!("expected AccumulatorOverflow, got {other}"),
+    }
+    let cx = err.counterexample().expect("layer-0 rejection synthesizes a row");
+    assert_eq!(cx.len(), 32);
+    match find_first_wrap(&hot, &sched, cx) {
+        Some(WrapEvent::Accumulator { layer: 0, .. }) => {}
+        other => panic!("counterexample must replay an accumulator wrap, got {other:?}"),
+    }
+    // No accumulator format rescues this fan-in: Q1 widening is
+    // value-preserving (products shift left with the format), so the
+    // needed width grows in lockstep with `acc_bits`. What makes the
+    // same weights provable is trimming the fan-in.
+    assert!(verify_stack(&hot, &uniform_schedule(8, 16, 1)).is_err());
+    let ok = verify_stack(&narrow_fanin(), &sched).unwrap();
+    assert_eq!(ok.min_margin_bits(), 0, "a 4-tap ±0.25 column fits exactly");
+}
+
+#[test]
+fn verified_compile_is_a_typed_error_while_plain_compile_defers() {
+    let specs = || vec![VariantSpec::new("hot", uniform_schedule(8, 8, 1))];
+    match CompiledModel::compile_variants_verified(wide_fanin(1), specs()) {
+        Err(CompileError::Unsafe { variant, error }) => {
+            assert_eq!(variant, "hot");
+            assert_eq!(error.layer(), 0);
+            assert!(error.counterexample().is_some());
+        }
+        Err(other) => panic!("expected Unsafe, got {other}"),
+        Ok(_) => panic!("under-provisioned schedule must not verify"),
+    }
+    // The plain path still compiles it (existing callers are untouched)
+    // and reports the verdict lazily.
+    let m = CompiledModel::compile_variants(wide_fanin(1), specs()).unwrap();
+    assert!(m.lane_safety(0).is_err());
+    // A provable fixture passes the verified path end to end.
+    let m = CompiledModel::compile_variants_verified(
+        narrow_fanin(),
+        vec![VariantSpec::new("safe", uniform_schedule(8, 8, 1))],
+    )
+    .expect("a 4-tap ±0.25 column fits an 8-bit accumulator exactly");
+    assert!(m.lane_safety(0).is_ok());
+}
+
+#[test]
+fn accepted_random_pairs_never_wrap_in_shadow_execution() {
+    let mut rng = XorShift64::new(0x1A4E_5AFE);
+    let mut accepted = 0usize;
+    for _ in 0..60 {
+        let layers = random_sparse_stack(&mut rng, &[8, 6, 4]);
+        let sched: Vec<LayerPrecision> = random_schedule(&mut rng, layers.len());
+        let ops: Vec<LayerOp> = layers.into_iter().map(LayerOp::Dense).collect();
+        if verify_stack(&ops, &sched).is_err() {
+            continue;
+        }
+        accepted += 1;
+        for row in random_batch(&mut rng, 10, 8, sched[0].in_bits) {
+            assert_eq!(
+                find_first_wrap(&ops, &sched, &row),
+                None,
+                "analyzer accepted a pair that wraps on {row:?}"
+            );
+        }
+    }
+    assert!(accepted >= 20, "only {accepted}/60 random pairs accepted");
+}
+
+/// The dynamic-oracle half: only meaningful when the SWAR primitives
+/// are instrumented.
+#[cfg(feature = "lanecheck")]
+mod lanecheck_oracle {
+    use super::*;
+    use softsimd::bits::lanecheck;
+    use softsimd::coordinator::engine::PackedEngine;
+    use softsimd::testutil::{compiled_for, engine_uniform};
+
+    #[test]
+    fn accepted_pairs_run_clean_under_the_sanitizer() {
+        let mut rng = XorShift64::new(0xC1EA_0A7E);
+        let mut accepted = 0usize;
+        let mut rows_run = 0usize;
+        for _ in 0..60 {
+            let layers = random_sparse_stack(&mut rng, &[8, 6, 4]);
+            let sched: Vec<LayerPrecision> = random_schedule(&mut rng, layers.len());
+            let ops: Vec<LayerOp> =
+                layers.iter().cloned().map(LayerOp::Dense).collect();
+            if verify_stack(&ops, &sched).is_err() {
+                continue;
+            }
+            accepted += 1;
+            let engine = PackedEngine::new(compiled_for(layers, sched.clone()));
+            lanecheck::reset();
+            for _ in 0..5 {
+                let batch = random_batch(&mut rng, 10, 8, sched[0].in_bits);
+                rows_run += batch.len();
+                engine.forward_batch(&batch);
+            }
+            assert_eq!(
+                lanecheck::count(),
+                0,
+                "sanitizer tripped on an analyzer-accepted pair: {:?}",
+                lanecheck::take()
+            );
+        }
+        assert!(accepted >= 20, "only {accepted}/60 random pairs accepted");
+        assert!(rows_run >= 1000, "only {rows_run} rows executed");
+    }
+
+    #[test]
+    fn rejected_counterexamples_trip_the_sanitizer() {
+        for sign in [1i64, -1] {
+            let hot = wide_fanin(sign);
+            let sched = uniform_schedule(8, 8, 1);
+            let err = verify_stack(&hot, &sched).expect_err("unsafe fixture");
+            let cx = err.counterexample().expect("synthesized row").to_vec();
+            let layers = vec![QuantLayer::new(vec![vec![sign * 32; 4]; 32], 8)];
+            let engine = engine_uniform(layers, 8, 8);
+            lanecheck::reset();
+            engine.forward_batch(&[cx]);
+            assert!(
+                lanecheck::count() > 0,
+                "counterexample (sign {sign}) must wrap a lane in the engine"
+            );
+            assert!(
+                lanecheck::take().iter().any(|v| matches!(
+                    v.kind,
+                    lanecheck::ViolationKind::AddOverflow
+                        | lanecheck::ViolationKind::SubOverflow
+                )),
+                "the wrap is an accumulate overflow"
+            );
+        }
+    }
+}
