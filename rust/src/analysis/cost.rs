@@ -1,0 +1,413 @@
+//! Static cost certification of compiled precision variants
+//! (DESIGN.md §15).
+//!
+//! The paper's headline claims are *cost* claims — cycles and energy
+//! versus hardware SIMD — yet the engine's billing counters are
+//! asserted only dynamically. This module closes the loop the way the
+//! lane-safety verifier (§14) did for values: a static pass over the
+//! flat [`PlanArena`] bytecode plus one variant's precision schedule
+//! emits, at compile time, a **cost certificate** — per layer, the
+//! aggregate Stage-1 cycle/add weight of the nonzero plans, the
+//! accumulate and widening work, and the boundary crossbar chain —
+//! from which every [`EngineStats`] field of any batch is a closed
+//! form in the batch row count `m`.
+//!
+//! The certificate is exact, not a bound: [`CostCertificate::eval_stats`]
+//! reproduces the engine's counters *field by field and bucket by
+//! bucket* for every `m` (the property tests and, under
+//! `--features billaudit`, the differential [`audit`] oracle enforce
+//! it), and [`CostCertificate::energy_pj`] prices the predicted stats
+//! through the same [`CostTable`] arithmetic the serving loop uses —
+//! so predicted and measured energy agree to the attojoule, not merely
+//! approximately.
+//!
+//! **The affine-in-`m` model.** Batches are padded to the variant's
+//! batch quantum, so every counter is a function of
+//! `blocks = ceil(m / quantum)`. Per quantum block each layer
+//! contributes constants (Stage-1 cycles/adds per block, accumulate
+//! adds, widening passes); `subword_mults` alone is affine in the
+//! *real* row count `m` (pad lanes are never billed as useful work).
+//! Boundary hops are the one ceil term: a hop producing format `t`
+//! costs `ceil(rows·t.bits / 48) · cols` passes, which is linear in
+//! blocks exactly when `quantum · patch_rows · t.bits` divides 48
+//! evenly — `eval_stats` keeps the exact `div_ceil`, and the
+//! `CERT_costs.json` export flags each hop's linearity.
+
+use crate::bits::format::{format_index, SimdFormat, FORMATS};
+use crate::coordinator::cost::CostTable;
+use crate::coordinator::engine::EngineStats;
+use crate::coordinator::model::Variant;
+use crate::csd::flat::PlanArena;
+use crate::nn::conv::LayerOp;
+
+/// One layer's certified cost coefficients: everything the closed-form
+/// evaluation needs, read once from the arena headers and the variant's
+/// schedule — never from the engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerCost {
+    /// Layer index.
+    pub layer: usize,
+    /// Activation width the layer executes at.
+    pub in_bits: u32,
+    /// Accumulator width.
+    pub acc_bits: u32,
+    /// Packed patch rows per batch row: 1 for dense, `out_pixels` for
+    /// conv (DESIGN.md §12).
+    pub patch_rows: usize,
+    /// Output columns (`n` of the layer's matmul view).
+    pub cols: usize,
+    /// Nonzero plan headers over the `k × n` weight matrix (zero
+    /// weights are zero-skipped and bill nothing).
+    pub nonzero_plans: u64,
+    /// Σ `header.cycles` over the nonzero plans — Stage-1 cycles per
+    /// packed word column, summed over the whole layer.
+    pub plan_cycles: u64,
+    /// Σ `header.adds` over the nonzero plans (CSD nonzero digits).
+    pub plan_adds: u64,
+    /// The boundary crossbar chain after this layer (empty for the last
+    /// layer, and for a Stage-2 bypass).
+    pub boundary: Vec<(SimdFormat, SimdFormat)>,
+}
+
+/// A compile-time cost certificate for one `(model, variant)` pair:
+/// evaluating it at any batch size `m` reproduces the engine's
+/// [`EngineStats`] exactly. Built by [`CostCertificate::certify`];
+/// memoized on `CompiledModel` alongside the lane-safety verdicts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CostCertificate {
+    /// Name of the certified variant.
+    pub variant: String,
+    /// The variant's batch quantum (batches pad up to a multiple).
+    pub batch_quantum: usize,
+    /// Per-layer coefficients, in execution order.
+    pub layers: Vec<LayerCost>,
+}
+
+impl CostCertificate {
+    /// Certify one variant from the compiled artifact: the flat plan
+    /// headers (cycle/add weights per nonzero weight) and the variant's
+    /// schedule/boundary metadata. Reads no engine code and executes
+    /// nothing.
+    pub fn certify(layers: &[LayerOp], arena: &PlanArena, var: &Variant) -> CostCertificate {
+        debug_assert_eq!(arena.n_layers(), layers.len());
+        let per_layer = layers
+            .iter()
+            .enumerate()
+            .map(|(li, layer)| {
+                let w = layer.weights();
+                debug_assert_eq!(arena.layer_dims(li), (w.k, w.n));
+                let p = var.precision(li);
+                let mut nonzero_plans = 0u64;
+                let mut plan_cycles = 0u64;
+                let mut plan_adds = 0u64;
+                for n in 0..w.n {
+                    for hdr in arena.column(li, n) {
+                        if hdr.is_zero() {
+                            continue;
+                        }
+                        nonzero_plans += 1;
+                        plan_cycles += hdr.cycles as u64;
+                        plan_adds += hdr.adds as u64;
+                    }
+                }
+                let boundary = if li + 1 < layers.len() {
+                    var.boundary_chain(li).to_vec()
+                } else {
+                    Vec::new()
+                };
+                LayerCost {
+                    layer: li,
+                    in_bits: p.in_bits,
+                    acc_bits: p.acc_bits,
+                    patch_rows: layer.patch_rows(),
+                    cols: w.n,
+                    nonzero_plans,
+                    plan_cycles,
+                    plan_adds,
+                    boundary,
+                }
+            })
+            .collect();
+        CostCertificate {
+            variant: var.name().to_string(),
+            batch_quantum: var.batch_quantum(),
+            layers: per_layer,
+        }
+    }
+
+    /// The engine's exact [`EngineStats`] for a batch of `m` rows —
+    /// the closed-form evaluation of the certificate. Mirrors the
+    /// billing formulas the engine derives from its own datapath
+    /// counters; the `billaudit` oracle and the property tests pin the
+    /// two sources equal on every field.
+    pub fn eval_stats(&self, m: usize) -> EngineStats {
+        assert!(m > 0, "empty batch");
+        let mp = m.div_ceil(self.batch_quantum) * self.batch_quantum;
+        let mut stats = EngineStats {
+            pad_rows: (mp - m) as u64,
+            ..EngineStats::default()
+        };
+        for lc in &self.layers {
+            let in_fmt = SimdFormat::new(lc.in_bits);
+            // Padded packed rows this layer streams (conv folds its
+            // output pixels into the batch dimension).
+            let rows = mp * lc.patch_rows;
+            let cur_words = (rows / in_fmt.lanes() as usize) as u64;
+            let acc_words = (rows * lc.acc_bits as usize / 48) as u64;
+            let cycles = lc.plan_cycles * cur_words;
+            let adds = lc.plan_adds * cur_words;
+            let fi = format_index(lc.in_bits);
+            stats.s1_cycles += cycles;
+            stats.s1_cycles_by_fmt[fi] += cycles;
+            stats.s1_adds += adds;
+            stats.s1_adds_by_fmt[fi] += adds;
+            // Useful multiplies: real rows only, one per nonzero plan.
+            stats.subword_mults += lc.nonzero_plans * (m * lc.patch_rows) as u64;
+            // Every accumulate path (doubling, equal-width, generic)
+            // performs one add per produced accumulator word.
+            stats.acc_adds += lc.nonzero_plans * acc_words;
+            // Widening products into the accumulator format is one
+            // Stage-2 pass per produced word, billed at the produced
+            // format; the equal-width path converts nothing.
+            if lc.in_bits != lc.acc_bits {
+                let passes = lc.nonzero_plans * acc_words;
+                stats.s2_passes += passes;
+                stats.s2_passes_by_fmt[format_index(lc.acc_bits)] += passes;
+            }
+            // Boundary chain: one crossbar cycle per word each hop
+            // produces, per output column — the exact `div_ceil` the
+            // engine bills (non-linear in blocks when the per-block
+            // bit count is not a multiple of 48).
+            for &(_, t) in &lc.boundary {
+                let passes = (rows * t.bits as usize).div_ceil(48) as u64 * lc.cols as u64;
+                stats.s2_passes += passes;
+                stats.s2_passes_by_fmt[format_index(t.bits)] += passes;
+            }
+        }
+        stats
+    }
+
+    /// Certified batch energy: the predicted stats priced through the
+    /// **same** [`CostTable`] arithmetic the serving loop applies to
+    /// measured stats — identical floating-point operation sequence,
+    /// so equal stats give bit-identical pJ and attojoule-identical
+    /// metrics accumulation.
+    pub fn energy_pj(&self, m: usize, cost: &CostTable) -> f64 {
+        cost.batch_energy_pj(&self.eval_stats(m))
+    }
+
+    /// Certified energy per row (pJ) at one full batch quantum — the
+    /// steady-state figure the predictive governor consults.
+    pub fn pj_per_row(&self, cost: &CostTable) -> f64 {
+        self.energy_pj(self.batch_quantum, cost) / self.batch_quantum as f64
+    }
+
+    /// Certified Stage-1 + Stage-2 datapath cycles per row at one full
+    /// batch quantum (the serial drain-time coefficient).
+    pub fn cycles_per_row(&self) -> f64 {
+        let stats = self.eval_stats(self.batch_quantum);
+        (stats.s1_cycles + stats.s2_passes) as f64 / self.batch_quantum as f64
+    }
+}
+
+/// Differential billing auditor — the dynamic oracle of the static
+/// cost certifier (`--features billaudit`; sibling of
+/// [`crate::bits::lanecheck`]).
+///
+/// When enabled, the engine checks **every executed batch's**
+/// [`EngineStats`] field-by-field (aggregates and per-format buckets)
+/// against the certificate evaluated at that batch's row count, and
+/// records each mismatch to a thread-local divergence log —
+/// *recorded, never raised*, so a billing drift shows up as auditable
+/// evidence instead of a panic inside a PE worker. Tests bracket a
+/// region with [`reset`]/[`count`] and assert zero divergences; the
+/// mutation test perturbs one counter and asserts the auditor trips.
+///
+/// [`reset`]: audit::reset
+/// [`count`]: audit::count
+#[cfg(feature = "billaudit")]
+pub mod audit {
+    use std::cell::{Cell, RefCell};
+
+    use super::{CostCertificate, EngineStats, FORMATS};
+
+    /// Maximum number of [`Divergence`] records retained per thread;
+    /// the total count keeps incrementing past the cap.
+    pub const LOG_CAP: usize = 1024;
+
+    /// One billing counter that disagreed with the certificate.
+    #[derive(Debug, Clone)]
+    pub struct Divergence {
+        /// Name of the certified variant the batch executed at.
+        pub variant: String,
+        /// The `EngineStats` field (or per-format bucket) that diverged.
+        pub field: String,
+        /// Real row count of the audited batch.
+        pub m: usize,
+        /// The certificate's value.
+        pub expected: u64,
+        /// The engine's value.
+        pub got: u64,
+    }
+
+    thread_local! {
+        static DIVERGENCES: RefCell<Vec<Divergence>> = const { RefCell::new(Vec::new()) };
+        static TOTAL: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Clear this thread's divergence log and counter.
+    pub fn reset() {
+        DIVERGENCES.with(|d| d.borrow_mut().clear());
+        TOTAL.with(|t| t.set(0));
+    }
+
+    /// Total divergences recorded on this thread since the last
+    /// [`reset`] (not capped).
+    pub fn count() -> u64 {
+        TOTAL.with(|t| t.get())
+    }
+
+    /// Drain this thread's detailed divergence log (at most
+    /// [`LOG_CAP`] entries; the counter is left untouched).
+    pub fn take() -> Vec<Divergence> {
+        DIVERGENCES.with(|d| std::mem::take(&mut *d.borrow_mut()))
+    }
+
+    fn note(d: Divergence) {
+        TOTAL.with(|t| t.set(t.get() + 1));
+        DIVERGENCES.with(|log| {
+            let mut log = log.borrow_mut();
+            if log.len() < LOG_CAP {
+                log.push(d);
+            }
+        });
+    }
+
+    /// Differentially check one executed batch's stats against the
+    /// certificate at that batch's row count, recording every
+    /// divergent field. Never panics.
+    pub fn check_batch(cert: &CostCertificate, stats: &EngineStats, m: usize) {
+        let want = cert.eval_stats(m);
+        let mut check = |field: String, expected: u64, got: u64| {
+            if expected != got {
+                note(Divergence { variant: cert.variant.clone(), field, m, expected, got });
+            }
+        };
+        check("s1_cycles".into(), want.s1_cycles, stats.s1_cycles);
+        check("s1_adds".into(), want.s1_adds, stats.s1_adds);
+        check("s2_passes".into(), want.s2_passes, stats.s2_passes);
+        check("acc_adds".into(), want.acc_adds, stats.acc_adds);
+        check("subword_mults".into(), want.subword_mults, stats.subword_mults);
+        check("pad_rows".into(), want.pad_rows, stats.pad_rows);
+        for (i, &bits) in FORMATS.iter().enumerate() {
+            check(
+                format!("s1_cycles_by_fmt[{bits}b]"),
+                want.s1_cycles_by_fmt[i],
+                stats.s1_cycles_by_fmt[i],
+            );
+            check(
+                format!("s1_adds_by_fmt[{bits}b]"),
+                want.s1_adds_by_fmt[i],
+                stats.s1_adds_by_fmt[i],
+            );
+            check(
+                format!("s2_passes_by_fmt[{bits}b]"),
+                want.s2_passes_by_fmt[i],
+                stats.s2_passes_by_fmt[i],
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::model::{CompiledModel, VariantSpec};
+    use crate::nn::weights::LayerPrecision;
+    use crate::testutil::{flat_cost, random_dense_stack_uniform};
+    use crate::workload::synth::XorShift64;
+
+    #[test]
+    fn certificate_is_schedule_aware_and_counts_nonzero_plans_once() {
+        let mut rng = XorShift64::new(0xCE47);
+        let mut layers = random_dense_stack_uniform(&mut rng, &[5, 4, 3], 8);
+        layers[0].w_raw[0][0] = 0; // at least one zero-skip
+        let ops: Vec<LayerOp> = layers.into_iter().map(LayerOp::Dense).collect();
+        let model =
+            CompiledModel::compile_variants(ops, VariantSpec::standard_trio(2)).unwrap();
+        for v in 0..model.n_variants() {
+            let cert = CostCertificate::certify(model.layers(), model.flat(), model.variant(v));
+            assert_eq!(cert.variant, model.variant(v).name());
+            assert_eq!(cert.batch_quantum, model.variant(v).batch_quantum());
+            assert_eq!(cert.layers.len(), 2);
+            for (li, lc) in cert.layers.iter().enumerate() {
+                let p = model.variant(v).precision(li);
+                assert_eq!((lc.in_bits, lc.acc_bits), (p.in_bits, p.acc_bits));
+                let w = model.layers()[li].weights();
+                let nonzero = (0..w.k)
+                    .flat_map(|k| (0..w.n).map(move |n| (k, n)))
+                    .filter(|&(k, n)| w.w_raw[k][n] != 0)
+                    .count() as u64;
+                assert_eq!(lc.nonzero_plans, nonzero, "variant {v} layer {li}");
+                assert!(lc.plan_adds <= lc.plan_cycles);
+            }
+            // The memoized accessor returns the same certificate.
+            assert_eq!(model.cost_certificate(v), &cert);
+        }
+    }
+
+    #[test]
+    fn eval_is_exact_at_every_quantum_phase() {
+        // Stats must be a pure function of ceil(m/quantum) except for
+        // subword_mults/pad_rows, which are affine in the real m.
+        let mut rng = XorShift64::new(0xCE48);
+        let layers = random_dense_stack_uniform(&mut rng, &[4, 3], 8);
+        let ops: Vec<LayerOp> = layers.into_iter().map(LayerOp::Dense).collect();
+        let model = CompiledModel::compile_variants(
+            ops,
+            vec![VariantSpec::new("u8", vec![LayerPrecision::new(8, 16)])],
+        )
+        .unwrap();
+        let cert = model.cost_certificate(0);
+        let q = cert.batch_quantum;
+        let full = cert.eval_stats(q);
+        for m in 1..=q {
+            let s = cert.eval_stats(m);
+            assert_eq!(s.s1_cycles, full.s1_cycles, "m={m}");
+            assert_eq!(s.acc_adds, full.acc_adds, "m={m}");
+            assert_eq!(s.s2_passes, full.s2_passes, "m={m}");
+            assert_eq!(s.pad_rows, (q - m) as u64, "m={m}");
+            assert_eq!(
+                s.subword_mults,
+                cert.layers.iter().map(|l| l.nonzero_plans * m as u64).sum::<u64>(),
+                "m={m}"
+            );
+        }
+        let two = cert.eval_stats(q + 1);
+        assert_eq!(two.s1_cycles, 2 * full.s1_cycles, "second block doubles S1");
+    }
+
+    #[test]
+    fn per_row_figures_price_through_the_shared_cost_table() {
+        let mut rng = XorShift64::new(0xCE49);
+        let layers = random_dense_stack_uniform(&mut rng, &[4, 4], 8);
+        let ops: Vec<LayerOp> = layers.into_iter().map(LayerOp::Dense).collect();
+        let model = CompiledModel::compile_variants(
+            ops,
+            vec![VariantSpec::new("u8", vec![LayerPrecision::new(8, 16)])],
+        )
+        .unwrap();
+        let cert = model.cost_certificate(0);
+        let cost = flat_cost();
+        let q = cert.batch_quantum;
+        let stats = cert.eval_stats(q);
+        // flat_cost: 1 pJ per S1 cycle, 0.5 per S2 pass.
+        let want = stats.s1_cycles as f64 + stats.s2_passes as f64 * 0.5;
+        assert_eq!(cert.energy_pj(q, &cost), want);
+        assert_eq!(cert.pj_per_row(&cost), want / q as f64);
+        assert_eq!(
+            cert.cycles_per_row(),
+            (stats.s1_cycles + stats.s2_passes) as f64 / q as f64
+        );
+    }
+}

@@ -36,6 +36,7 @@
 //! that the scalar shadow executor ([`find_first_wrap`]) — and, under
 //! `--features lanecheck`, the runtime lane sanitizer — confirms.
 
+pub mod cost;
 pub mod interval;
 
 pub use interval::Interval;

@@ -61,9 +61,9 @@ pub struct Violation {
 }
 
 thread_local! {
-    static VIOLATIONS: RefCell<Vec<Violation>> = RefCell::new(Vec::new());
-    static TOTAL: Cell<u64> = Cell::new(0);
-    static CONTEXT: Cell<&'static str> = Cell::new("");
+    static VIOLATIONS: RefCell<Vec<Violation>> = const { RefCell::new(Vec::new()) };
+    static TOTAL: Cell<u64> = const { Cell::new(0) };
+    static CONTEXT: Cell<&'static str> = const { Cell::new("") };
 }
 
 /// Clear this thread's violation log and counter.

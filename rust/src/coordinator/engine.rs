@@ -84,9 +84,12 @@ use super::model::CompiledModel;
 /// [`FORMATS`]) split the same work by the format it ran at, which is
 /// what exact per-format energy billing needs once layers differ in
 /// width ([`super::cost::CostTable::batch_energy_pj`]).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct EngineStats {
     pub s1_cycles: u64,
+    /// Add/sub cycles among `s1_cycles` (CSD nonzero digits) — the
+    /// datapath work the certificate prices separately from shifts.
+    pub s1_adds: u64,
     pub s2_passes: u64,
     pub acc_adds: u64,
     /// Useful sub-word multiplies: real batch rows only — zero-pad
@@ -98,15 +101,19 @@ pub struct EngineStats {
     pub pad_rows: u64,
     /// Stage-1 multiply cycles split by the format they ran at.
     pub s1_cycles_by_fmt: [u64; FORMATS.len()],
+    /// Stage-1 add/sub cycles split by the format they ran at.
+    pub s1_adds_by_fmt: [u64; FORMATS.len()],
     /// Stage-2 crossbar passes split by the format they *produced*.
     pub s2_passes_by_fmt: [u64; FORMATS.len()],
 }
 
 impl EngineStats {
     #[inline]
-    fn note_s1(&mut self, fmt: SimdFormat, cycles: u64) {
+    fn note_s1(&mut self, fmt: SimdFormat, cycles: u64, adds: u64) {
         self.s1_cycles += cycles;
         self.s1_cycles_by_fmt[format_index(fmt.bits)] += cycles;
+        self.s1_adds += adds;
+        self.s1_adds_by_fmt[format_index(fmt.bits)] += adds;
     }
 
     #[inline]
@@ -454,9 +461,10 @@ impl PackedEngine {
                     // Stage-1 billing is the datapath's own cycle count
                     // (one source of truth — never `plan.cycles()`
                     // on the side).
-                    let (cycles, _adds) = s1.take_counters();
+                    let (cycles, adds) = s1.take_counters();
                     debug_assert_eq!(cycles, hdr.cycles as u64 * cur_words as u64);
-                    stats.note_s1(in_fmt, cycles);
+                    debug_assert_eq!(adds, hdr.adds as u64 * cur_words as u64);
+                    stats.note_s1(in_fmt, cycles, adds);
                     // Only the m real rows (for conv: the real images'
                     // patch rows) are useful multiplies; the zero-pad
                     // lanes of the batch tail are not.
@@ -571,6 +579,15 @@ impl PackedEngine {
                 // so a later smaller batch parks its surplus rows
                 // without touching the allocator.
                 spare_rows.reserve(out.len());
+                // The differential billing auditor (DESIGN.md §15):
+                // every executed batch's stats are checked against the
+                // static certificate at this batch's row count.
+                #[cfg(feature = "billaudit")]
+                crate::analysis::cost::audit::check_batch(
+                    model.cost_certificate(variant),
+                    &stats,
+                    m,
+                );
                 return stats;
             }
         }

@@ -19,9 +19,21 @@
 //! *advisory per batch*: the batch is tagged with the chosen variant
 //! and the worker bills the variant it actually executed.
 //!
+//! Since DESIGN.md §15 the governor can also act **predictively**: a
+//! [`CertifiedCosts`] table — certified pJ/row and datapath cycles/row
+//! per variant, read off each variant's static cost certificate — lets
+//! [`SloPolicy`] estimate how long the *current* queue would take to
+//! drain at a candidate variant and shed **before** the p99 degrades
+//! (or refuse a fidelity step-up that the certified drain time says
+//! would immediately breach the objective). Without a table the policy
+//! behaves exactly as before: purely reactive.
+//!
 //! [`Variant`]: super::model::Variant
 
 use std::time::Duration;
+
+use super::cost::CostTable;
+use super::model::CompiledModel;
 
 /// Load signals sampled at one dispatch decision.
 #[derive(Debug, Clone, Copy)]
@@ -37,6 +49,58 @@ pub struct LoadSignals {
     /// How many precision variants the served model carries; choices
     /// are clamped to `0..n_variants` by the caller.
     pub n_variants: usize,
+}
+
+/// Per-variant certified cost figures the predictive governor consults
+/// (DESIGN.md §15): steady-state pJ/row and serial datapath cycles/row,
+/// evaluated from each variant's static [`CostCertificate`] at one full
+/// batch quantum — no measurement involved.
+///
+/// [`CostCertificate`]: crate::analysis::cost::CostCertificate
+#[derive(Debug, Clone)]
+pub struct CertifiedCosts {
+    mhz: f64,
+    pj_per_row: Vec<f64>,
+    cycles_per_row: Vec<f64>,
+}
+
+impl CertifiedCosts {
+    /// Build from explicit figures (`cycles_per_row` / `pj_per_row`
+    /// indexed by variant id, hi-fidelity first). Test/synthetic entry
+    /// point; serving code uses [`CertifiedCosts::from_model`].
+    pub fn new(mhz: f64, pj_per_row: Vec<f64>, cycles_per_row: Vec<f64>) -> CertifiedCosts {
+        assert!(mhz > 0.0, "clock must be positive");
+        assert_eq!(pj_per_row.len(), cycles_per_row.len());
+        assert!(!cycles_per_row.is_empty(), "at least one variant");
+        CertifiedCosts { mhz, pj_per_row, cycles_per_row }
+    }
+
+    /// Evaluate every variant's cost certificate under `cost`'s clock
+    /// and energy table.
+    pub fn from_model(model: &CompiledModel, cost: &CostTable) -> CertifiedCosts {
+        let (pj, cycles) = (0..model.n_variants())
+            .map(|v| {
+                let cert = model.cost_certificate(v);
+                (cert.pj_per_row(cost), cert.cycles_per_row())
+            })
+            .unzip();
+        CertifiedCosts { mhz: cost.mhz, pj_per_row: pj, cycles_per_row: cycles }
+    }
+
+    /// Certified steady-state energy per row at variant `v`, pJ.
+    pub fn pj_per_row(&self, v: usize) -> f64 {
+        self.pj_per_row[v.min(self.pj_per_row.len() - 1)]
+    }
+
+    /// Certified estimate of the time to drain `rows` queued rows
+    /// serially at variant `v`, nanoseconds. A deliberately simple
+    /// first-order model (no parallel PEs, no batching overlap) — what
+    /// the hysteresis needs is the correct *ordering* of variants and a
+    /// magnitude comparable to the latency objective.
+    pub fn est_drain_ns(&self, rows: usize, v: usize) -> u64 {
+        let cpr = self.cycles_per_row[v.min(self.cycles_per_row.len() - 1)];
+        (rows as f64 * cpr / self.mhz * 1000.0).round() as u64
+    }
 }
 
 /// A precision-selection policy. Implementations are consulted once
@@ -82,6 +146,9 @@ pub struct SloPolicy {
     patience: u32,
     current: usize,
     calm_streak: u32,
+    /// Certified per-variant cost figures for predictive decisions
+    /// (`None` → purely reactive, the pre-§15 behavior).
+    certified: Option<CertifiedCosts>,
 }
 
 impl SloPolicy {
@@ -96,7 +163,19 @@ impl SloPolicy {
             patience: 2,
             current: 0,
             calm_streak: 0,
+            certified: None,
         }
+    }
+
+    /// Arm the predictive path: shed when the certified drain time of
+    /// the *current* queue at the *current* variant already exceeds the
+    /// p99 objective (before any request actually misses it), and block
+    /// a fidelity step-up whose certified drain time would land above
+    /// half the objective (the same guard the calm condition applies to
+    /// the measured tail).
+    pub fn with_certified_costs(mut self, certified: CertifiedCosts) -> SloPolicy {
+        self.certified = Some(certified);
+        self
     }
 
     /// Consecutive calm decisions required before restoring one step of
@@ -116,8 +195,16 @@ impl GovernorPolicy for SloPolicy {
     fn choose(&mut self, load: &LoadSignals) -> usize {
         let cheapest = load.n_variants.saturating_sub(1);
         let target_ns = self.target_p99.as_nanos() as u64;
+        // Predictive breach: the certified drain time of what is queued
+        // *right now*, at the variant we are about to run, already
+        // exceeds the objective — shed before any request misses it.
+        let predicted_breach = self
+            .certified
+            .as_ref()
+            .is_some_and(|c| c.est_drain_ns(load.queued_rows, self.current) > target_ns);
         let overloaded = load.queued_rows > self.high_rows
-            || load.window_p99_ns.is_some_and(|p| p > target_ns);
+            || load.window_p99_ns.is_some_and(|p| p > target_ns)
+            || predicted_breach;
         let calm = load.queued_rows <= self.low_rows
             && load.window_p99_ns.map_or(true, |p| p <= target_ns / 2);
         if overloaded {
@@ -126,8 +213,18 @@ impl GovernorPolicy for SloPolicy {
                 self.current += 1;
             }
         } else if calm {
-            self.calm_streak += 1;
-            if self.calm_streak >= self.patience && self.current > 0 {
+            self.calm_streak = self.calm_streak.saturating_add(1);
+            // A step-up must also be certifiably affordable: the queue
+            // drained at the *more expensive* candidate has to fit in
+            // the same half-objective margin the calm condition demands
+            // of the measured tail. The streak is not reset on a
+            // blocked step — the moment the queue shrinks enough, the
+            // restore goes through without re-serving the patience.
+            let up_ok = self.current > 0
+                && self.certified.as_ref().map_or(true, |c| {
+                    c.est_drain_ns(load.queued_rows, self.current - 1) <= target_ns / 2
+                });
+            if self.calm_streak >= self.patience && up_ok {
                 self.current -= 1;
                 self.calm_streak = 0;
             }
@@ -203,6 +300,66 @@ mod tests {
         // No completions in the window (p99 None) and an empty queue:
         // calm — recovery must not deadlock on a silent window.
         assert_eq!(g.choose(&sig(0, None)), 0);
+    }
+
+    #[test]
+    fn certified_costs_shed_before_the_tail_degrades() {
+        // 50 queued rows at the hi-fi variant's certified 100
+        // cycles/row @ 1 GHz = 5 µs of drain against a 2 µs objective:
+        // the policy sheds on the *prediction* — the measured p99 is
+        // still silent and the queue is far below the high watermark.
+        let certified =
+            CertifiedCosts::new(1000.0, vec![30.0, 6.0, 1.2], vec![100.0, 20.0, 4.0]);
+        assert_eq!(certified.est_drain_ns(50, 0), 5_000);
+        assert_eq!(certified.pj_per_row(99), 1.2, "variant ids clamp");
+        let mut g = SloPolicy::new(Duration::from_micros(2), 100, 10)
+            .with_certified_costs(certified);
+        assert_eq!(g.choose(&sig(50, None)), 1, "predictive shed");
+        // At the shed variant the same queue drains in 1 µs — no longer
+        // a predicted breach, but still above the low watermark: dead
+        // band, hold.
+        assert_eq!(g.choose(&sig(50, None)), 1);
+    }
+
+    #[test]
+    fn certified_costs_block_a_step_up_the_queue_cannot_afford() {
+        let certified = CertifiedCosts::new(1000.0, vec![30.0, 6.0], vec![100.0, 20.0]);
+        let mut g = SloPolicy::new(Duration::from_micros(2), 1000, 100)
+            .patience(1)
+            .with_certified_costs(certified);
+        assert_eq!(g.choose(&sig(50, None)), 1, "predicted breach sheds");
+        // Calm by every reactive measure, but 30 rows at the hi-fi
+        // variant would drain in 3 µs > target/2: the restore is held.
+        assert_eq!(g.choose(&sig(30, None)), 1, "step-up blocked by the certificate");
+        // Once the queue shrinks enough the restore goes through
+        // immediately — the blocked decisions still counted as calm.
+        assert_eq!(g.choose(&sig(5, None)), 0, "affordable step-up proceeds");
+    }
+
+    #[test]
+    fn from_model_orders_variants_cheapest_last() {
+        use crate::nn::conv::LayerOp;
+        use crate::testutil::{flat_cost, random_dense_stack_uniform};
+        use crate::workload::synth::XorShift64;
+        let mut rng = XorShift64::new(0x60BE);
+        let layers = random_dense_stack_uniform(&mut rng, &[6, 5, 4], 8);
+        let ops: Vec<LayerOp> = layers.into_iter().map(LayerOp::Dense).collect();
+        let model = crate::coordinator::model::CompiledModel::compile_variants(
+            ops,
+            crate::coordinator::model::VariantSpec::standard_trio(2),
+        )
+        .unwrap();
+        let certified = CertifiedCosts::from_model(&model, &flat_cost());
+        // hifi-8 runs every lane at 8 bits; turbo packs 4-bit lanes —
+        // fewer words per row, so certified pJ/row must strictly drop.
+        assert!(
+            certified.pj_per_row(0) > certified.pj_per_row(2),
+            "hifi {} pJ/row vs turbo {} pJ/row",
+            certified.pj_per_row(0),
+            certified.pj_per_row(2)
+        );
+        assert!(certified.est_drain_ns(100, 0) > certified.est_drain_ns(100, 2));
+        assert_eq!(certified.est_drain_ns(0, 0), 0);
     }
 
     #[test]

@@ -36,6 +36,11 @@ pub struct VariantMetrics {
     pub s2_passes: AtomicU64,
     /// Simulated energy in attojoules (same rounding as the aggregate).
     pub energy_aj: AtomicU64,
+    /// Energy the static cost certificate (DESIGN.md §15) predicted for
+    /// the same batches, attojoules, same rounding — zero when the
+    /// worker bills without a certificate. Must equal `energy_aj`
+    /// exactly whenever predictions are recorded.
+    pub predicted_energy_aj: AtomicU64,
     /// Wall time spent in PE compute on this variant, nanoseconds.
     pub compute_ns: AtomicU64,
 }
@@ -52,6 +57,16 @@ impl VariantMetrics {
             return 0.0;
         }
         self.energy_aj.load(Ordering::Relaxed) as f64 / 1e6 / rows as f64
+    }
+
+    /// Certificate-predicted energy per served row, pJ (0.0 before any
+    /// rows or without predictions).
+    pub fn predicted_pj_per_row(&self) -> f64 {
+        let rows = self.rows.load(Ordering::Relaxed);
+        if rows == 0 {
+            return 0.0;
+        }
+        self.predicted_energy_aj.load(Ordering::Relaxed) as f64 / 1e6 / rows as f64
     }
 
     /// Served rows per second of PE *compute* time on this variant —
@@ -76,6 +91,7 @@ pub struct VariantCounters {
     pub s1_cycles: u64,
     pub s2_passes: u64,
     pub energy_aj: u64,
+    pub predicted_energy_aj: u64,
     pub compute_ns: u64,
 }
 
@@ -96,6 +112,7 @@ pub struct MetricsSnapshot {
     pub s1_cycles: u64,
     pub s2_passes: u64,
     pub energy_aj: u64,
+    pub predicted_energy_aj: u64,
     pub compute_ns: u64,
     pub variant_switches: u64,
     pub lat_count: u64,
@@ -117,6 +134,7 @@ impl MetricsSnapshot {
             s1_cycles: 0,
             s2_passes: 0,
             energy_aj: 0,
+            predicted_energy_aj: 0,
             compute_ns: 0,
             variant_switches: 0,
             lat_count: 0,
@@ -198,6 +216,10 @@ pub struct Metrics {
     /// up to a full fJ per batch, which compounds to nonsense totals
     /// over a serving run. Read through [`Metrics::energy_fj`].
     pub energy_aj: AtomicU64,
+    /// Certificate-predicted energy for the same batches, attojoules
+    /// (DESIGN.md §15) — stays zero when batches are billed without a
+    /// prediction ([`Metrics::add_batch`]).
+    pub predicted_energy_aj: AtomicU64,
     /// Wall time spent in PE compute, nanoseconds.
     pub compute_ns: AtomicU64,
     /// Per-precision-variant billing buckets (index = variant id).
@@ -250,6 +272,7 @@ impl Metrics {
             s1_cycles_by_fmt: std::array::from_fn(|_| AtomicU64::new(0)),
             s2_passes_by_fmt: std::array::from_fn(|_| AtomicU64::new(0)),
             energy_aj: AtomicU64::new(0),
+            predicted_energy_aj: AtomicU64::new(0),
             compute_ns: AtomicU64::new(0),
             per_variant: names.into_iter().map(VariantMetrics::named).collect(),
             variant_switches: AtomicU64::new(0),
@@ -290,6 +313,26 @@ impl Metrics {
         pj: f64,
         ns: u64,
     ) {
+        self.add_batch_predicted(rows, variant, stats, pj, 0.0, ns);
+    }
+
+    /// As [`add_batch`], additionally recording the energy the static
+    /// cost certificate predicted for this batch (DESIGN.md §15).
+    /// `predicted_pj` goes through the identical attojoule rounding as
+    /// the measured figure, so a correct certificate accumulates a
+    /// predicted total that equals the measured one *exactly* — the
+    /// `eval autoscale`/`eval certify` gates assert a zero-aJ delta.
+    ///
+    /// [`add_batch`]: Metrics::add_batch
+    pub fn add_batch_predicted(
+        &self,
+        rows: u64,
+        variant: usize,
+        stats: crate::coordinator::engine::EngineStats,
+        pj: f64,
+        predicted_pj: f64,
+        ns: u64,
+    ) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.rows.fetch_add(rows, Ordering::Relaxed);
         self.pad_rows.fetch_add(stats.pad_rows, Ordering::Relaxed);
@@ -314,7 +357,10 @@ impl Metrics {
         // release builds) — never truncate: sub-unit remainders must
         // not be systematically dropped every batch.
         let aj = (pj.max(0.0) * 1e6).round() as u64;
+        let predicted_aj = (predicted_pj.max(0.0) * 1e6).round() as u64;
         self.energy_aj.fetch_add(aj, Ordering::Relaxed);
+        self.predicted_energy_aj
+            .fetch_add(predicted_aj, Ordering::Relaxed);
         self.compute_ns.fetch_add(ns, Ordering::Relaxed);
         self.last_done_ns.fetch_max(self.now_ns(), Ordering::Relaxed);
         // The executed variant's bucket gets the same figures — the
@@ -328,6 +374,8 @@ impl Metrics {
         vb.s1_cycles.fetch_add(stats.s1_cycles, Ordering::Relaxed);
         vb.s2_passes.fetch_add(stats.s2_passes, Ordering::Relaxed);
         vb.energy_aj.fetch_add(aj, Ordering::Relaxed);
+        vb.predicted_energy_aj
+            .fetch_add(predicted_aj, Ordering::Relaxed);
         vb.compute_ns.fetch_add(ns, Ordering::Relaxed);
     }
 
@@ -358,6 +406,7 @@ impl Metrics {
         snap.s1_cycles = self.s1_cycles.load(Ordering::Relaxed);
         snap.s2_passes = self.s2_passes.load(Ordering::Relaxed);
         snap.energy_aj = self.energy_aj.load(Ordering::Relaxed);
+        snap.predicted_energy_aj = self.predicted_energy_aj.load(Ordering::Relaxed);
         snap.compute_ns = self.compute_ns.load(Ordering::Relaxed);
         snap.variant_switches = self.variant_switches.load(Ordering::Relaxed);
         snap.lat_count = self.lat_count.load(Ordering::Relaxed);
@@ -373,6 +422,7 @@ impl Metrics {
             dst.s1_cycles = src.s1_cycles.load(Ordering::Relaxed);
             dst.s2_passes = src.s2_passes.load(Ordering::Relaxed);
             dst.energy_aj = src.energy_aj.load(Ordering::Relaxed);
+            dst.predicted_energy_aj = src.predicted_energy_aj.load(Ordering::Relaxed);
             dst.compute_ns = src.compute_ns.load(Ordering::Relaxed);
         }
         snap
@@ -398,6 +448,7 @@ impl Metrics {
             c.store(0, Ordering::Relaxed);
         }
         self.energy_aj.store(0, Ordering::Relaxed);
+        self.predicted_energy_aj.store(0, Ordering::Relaxed);
         self.compute_ns.store(0, Ordering::Relaxed);
         self.variant_switches.store(0, Ordering::Relaxed);
         for b in &self.lat_hist {
@@ -415,6 +466,7 @@ impl Metrics {
             vb.s1_cycles.store(0, Ordering::Relaxed);
             vb.s2_passes.store(0, Ordering::Relaxed);
             vb.energy_aj.store(0, Ordering::Relaxed);
+            vb.predicted_energy_aj.store(0, Ordering::Relaxed);
             vb.compute_ns.store(0, Ordering::Relaxed);
         }
     }
@@ -503,6 +555,18 @@ impl Metrics {
             p99,
             self.variant_switches.load(Ordering::Relaxed),
         );
+        // Certificate prediction line, only when workers recorded one:
+        // the measured-vs-predicted delta in aJ must read 0 whenever the
+        // static cost certificate (DESIGN.md §15) is wired in.
+        let predicted_aj = self.predicted_energy_aj.load(Ordering::Relaxed);
+        if predicted_aj > 0 {
+            let measured_aj = self.energy_aj.load(Ordering::Relaxed);
+            out.push_str(&format!(
+                " predicted_energy={:.2} nJ predicted_delta_aJ={}",
+                predicted_aj as f64 / 1e9,
+                measured_aj as i128 - predicted_aj as i128,
+            ));
+        }
         // Per-variant billing lines, variants actually exercised only
         // (a single-variant deployment prints none — its figures are
         // the aggregates above).
@@ -521,6 +585,12 @@ impl Metrics {
                     vb.rows_per_compute_sec(),
                     vb.pj_per_row(),
                 ));
+                if vb.predicted_energy_aj.load(Ordering::Relaxed) > 0 {
+                    out.push_str(&format!(
+                        " predicted_pJ/row={:.2}",
+                        vb.predicted_pj_per_row()
+                    ));
+                }
             }
         }
         out
@@ -538,11 +608,13 @@ mod tests {
         by_fmt[crate::bits::format::format_index(8)] = 10;
         let stats = crate::coordinator::engine::EngineStats {
             s1_cycles: 10,
+            s1_adds: 6,
             s2_passes: 2,
             acc_adds: 5,
             subword_mults: 60,
             pad_rows: 1,
             s1_cycles_by_fmt: by_fmt,
+            s1_adds_by_fmt: [0; FORMATS.len()],
             s2_passes_by_fmt: [0; FORMATS.len()],
         };
         m.add_batch(6, 0, stats, 1.5, 100);
@@ -593,6 +665,34 @@ mod tests {
         // panicking a PE worker.
         m.add_batch(1, 99, stats, 0.0, 1);
         assert_eq!(m.per_variant[1].batches.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn predicted_energy_bills_alongside_measured_and_gates_the_report() {
+        let m = Metrics::with_variant_names(&["hifi".to_string(), "turbo".to_string()]);
+        // Plain add_batch records no prediction: counters stay zero and
+        // the report omits the prediction fields entirely.
+        m.add_batch(6, 0, Default::default(), 1.5, 100);
+        assert_eq!(m.predicted_energy_aj.load(Ordering::Relaxed), 0);
+        assert!(!m.report().contains("predicted_energy"), "{}", m.report());
+        // An exact prediction accumulates through the identical aJ
+        // rounding, so the delta is zero to the attojoule.
+        m.add_batch_predicted(6, 1, Default::default(), 1.2345, 1.2345, 100);
+        m.add_batch_predicted(6, 1, Default::default(), 0.0007, 0.0007, 100);
+        assert_eq!(
+            m.per_variant[1].predicted_energy_aj.load(Ordering::Relaxed),
+            m.per_variant[1].energy_aj.load(Ordering::Relaxed)
+        );
+        let report = m.report();
+        // The unpredicted first batch shows up as the aggregate delta.
+        assert!(report.contains("predicted_delta_aJ=1500000"), "{report}");
+        assert!(report.contains("predicted_pJ/row"), "{report}");
+        // Snapshot and reset carry the new counter.
+        assert_eq!(m.snapshot().predicted_energy_aj, 1_235_200);
+        assert_eq!(m.snapshot().per_variant[1].predicted_energy_aj, 1_235_200);
+        m.reset();
+        assert_eq!(m.predicted_energy_aj.load(Ordering::Relaxed), 0);
+        assert_eq!(m.per_variant[1].predicted_energy_aj.load(Ordering::Relaxed), 0);
     }
 
     #[test]

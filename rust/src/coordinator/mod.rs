@@ -46,7 +46,7 @@ pub mod server;
 pub use batcher::{Batch, Batcher, TrackedRequest};
 pub use cost::CostTable;
 pub use engine::{EngineScratch, EngineStats, PackedEngine, PackedMlpEngine};
-pub use governor::{GovernorPolicy, LoadSignals, PinnedVariant, SloPolicy};
+pub use governor::{CertifiedCosts, GovernorPolicy, LoadSignals, PinnedVariant, SloPolicy};
 pub use metrics::{Metrics, MetricsSnapshot, VariantMetrics};
 pub use model::{CompiledModel, Variant, VariantSet, VariantSpec};
 pub use server::{

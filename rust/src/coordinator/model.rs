@@ -28,6 +28,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
 
+use crate::analysis::cost::CostCertificate;
 use crate::analysis::{AnalysisError, LaneSafetyReport};
 use crate::anyhow;
 use crate::bits::format::SimdFormat;
@@ -210,6 +211,10 @@ pub struct CompiledModel {
     /// `variants`). Populated on first [`CompiledModel::lane_safety`]
     /// call; `compile_variants_verified` forces it at compile time.
     lane_safety: OnceLock<Vec<Result<LaneSafetyReport, AnalysisError>>>,
+    /// Lazily computed static cost certificate per variant (same order
+    /// as `variants`, DESIGN.md §15). Populated on first
+    /// [`CompiledModel::cost_certificate`] call.
+    costs: OnceLock<Vec<CostCertificate>>,
 }
 
 /// A multi-variant [`CompiledModel`] behind its serving `Arc` — the
@@ -379,6 +384,7 @@ impl CompiledModel {
             cycles_per_word,
             zero_weights,
             lane_safety: OnceLock::new(),
+            costs: OnceLock::new(),
         }))
     }
 
@@ -523,6 +529,22 @@ impl CompiledModel {
                 .collect()
         });
         all[v].as_ref()
+    }
+
+    /// Variant `v`'s static cost certificate (DESIGN.md §15): the
+    /// closed-form-in-`m` billing model read off the flat plan headers
+    /// and the variant's schedule. Computed once per variant set on
+    /// first call and cached — cheap enough (one header scan per
+    /// variant) that the serving path consults it per batch under
+    /// `--features billaudit`.
+    pub fn cost_certificate(&self, v: usize) -> &CostCertificate {
+        let all = self.costs.get_or_init(|| {
+            self.variants
+                .iter()
+                .map(|var| CostCertificate::certify(&self.layers, &self.arena, var))
+                .collect()
+        });
+        &all[v]
     }
 }
 

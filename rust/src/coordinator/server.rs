@@ -860,7 +860,12 @@ fn worker_loop(
         // table the by-format cycle breakdown, not one format — and the
         // whole batch lands in the executed variant's metrics bucket.
         let pj = cost.batch_energy_pj(&stats);
-        metrics.add_batch(n_rows as u64, variant, stats, pj, ns);
+        // The static cost certificate's prediction for this batch,
+        // priced through the same table (DESIGN.md §15): a correct
+        // certificate makes the predicted and measured figures agree to
+        // the attojoule, and `report()` surfaces the delta.
+        let predicted_pj = engine.model().cost_certificate(variant).energy_pj(n_rows, &cost);
+        metrics.add_batch_predicted(n_rows as u64, variant, stats, pj, predicted_pj, ns);
         let mut responses = vec![];
         let mut offset = 0;
         for entry in &batch.entries {

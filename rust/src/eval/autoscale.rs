@@ -40,6 +40,13 @@ pub struct ParetoRow {
     pub s1_cycles_per_row: f64,
     pub s2_passes_per_row: f64,
     pub pj_per_row: f64,
+    /// Energy per row the static cost certificate predicted for the
+    /// same batch (DESIGN.md §15) — must equal `pj_per_row` to the
+    /// attojoule.
+    pub predicted_pj_per_row: f64,
+    /// Measured-minus-predicted batch energy in attojoules, after the
+    /// metrics pipeline's rounding. Always 0 for a correct certificate.
+    pub delta_aj: i64,
     /// Datapath-cycle latency estimate per row at the cost table's
     /// clock (Stage-1 + Stage-2 cycles, serial execution).
     pub est_us_per_row: f64,
@@ -48,7 +55,7 @@ pub struct ParetoRow {
 /// The MLP's variant list: a 6-bit middle step makes all three
 /// operating points distinct on a 2-layer stack (the standard trio's
 /// balanced/turbo coincide there).
-fn mlp_specs() -> Vec<VariantSpec> {
+pub(crate) fn mlp_specs() -> Vec<VariantSpec> {
     vec![
         VariantSpec::new(
             "hifi-8",
@@ -102,6 +109,26 @@ fn run_workload(
         let fidelity =
             preds.iter().zip(&ref_preds).filter(|(p, r)| p == r).count() as f64 / n as f64;
         let cycles = (stats.s1_cycles + stats.s2_passes) as f64;
+        // Predicted-vs-measured energy: the static cost certificate
+        // (DESIGN.md §15), evaluated at this batch's row count and
+        // priced through the same table, must reproduce the measured
+        // bill exactly — field-exact stats, attojoule-exact energy.
+        let cert = model.cost_certificate(v);
+        anyhow::ensure!(
+            cert.eval_stats(n) == stats,
+            "{workload}/{}: certificate stats diverge from the engine",
+            var.name()
+        );
+        let pj = cost.batch_energy_pj(&stats);
+        let predicted_pj = cert.energy_pj(n, cost);
+        let aj = |p: f64| (p.max(0.0) * 1e6).round() as i64;
+        let delta_aj = aj(pj) - aj(predicted_pj);
+        anyhow::ensure!(
+            delta_aj == 0,
+            "{workload}/{}: predicted energy off by {delta_aj} aJ \
+             (measured {pj} pJ, predicted {predicted_pj} pJ)",
+            var.name()
+        );
         out.push(ParetoRow {
             workload,
             variant: var.name().to_string(),
@@ -109,7 +136,9 @@ fn run_workload(
             fidelity,
             s1_cycles_per_row: stats.s1_cycles as f64 / n as f64,
             s2_passes_per_row: stats.s2_passes as f64 / n as f64,
-            pj_per_row: cost.batch_energy_pj(&stats) / n as f64,
+            pj_per_row: pj / n as f64,
+            predicted_pj_per_row: predicted_pj / n as f64,
+            delta_aj,
             est_us_per_row: cycles / n as f64 / cost.mhz,
         });
     }
@@ -153,6 +182,8 @@ pub fn run() -> anyhow::Result<()> {
                 format!("{:.1}", r.s1_cycles_per_row),
                 format!("{:.1}", r.s2_passes_per_row),
                 format!("{:.2}", r.pj_per_row),
+                format!("{:.2}", r.predicted_pj_per_row),
+                format!("{}", r.delta_aj),
                 format!("{:.3}", r.est_us_per_row),
             ]
         })
@@ -168,6 +199,8 @@ pub fn run() -> anyhow::Result<()> {
                 "S1 cyc/row",
                 "S2 pass/row",
                 "pJ/row",
+                "pred pJ/row",
+                "Δ aJ",
                 "est us/row",
             ],
             &trows
@@ -194,6 +227,12 @@ mod tests {
     fn pareto_orders_work_and_keeps_mlp_accuracy() {
         let cost = CostTable::characterize(1000.0);
         let rs = rows(&cost).unwrap();
+        // Certificate predictions are attojoule-exact on every cell
+        // (rows() already errors otherwise; pin the surfaced figure).
+        for r in &rs {
+            assert_eq!(r.delta_aj, 0, "{}/{}", r.workload, r.variant);
+            assert!(r.predicted_pj_per_row > 0.0);
+        }
         let mlp: Vec<&ParetoRow> =
             rs.iter().filter(|r| r.workload == "mlp-digits").collect();
         let cnn: Vec<&ParetoRow> =

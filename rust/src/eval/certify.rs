@@ -1,0 +1,189 @@
+//! `eval certify` — the static cost-certificate report (DESIGN.md §15).
+//!
+//! For both standard workloads (the matched-filter MLP with its
+//! three-point variant list and the synthetic CNN with the standard
+//! trio) this command certifies every variant from the compiled
+//! artifact alone, prints the per-variant certified figures, and then
+//! **differentially checks** the certificate against the running
+//! engine at several batch sizes straddling the padding quantum:
+//! every `EngineStats` field (aggregates and per-format buckets) must
+//! match exactly, and the certified energy must agree with the
+//! measured bill to the attojoule — any mismatch errors, so the CI
+//! smoke run is a real gate. The certificates are also written to
+//! `CERT_costs.json` (cwd-relative, like `BENCH_*.json` and
+//! `VERIFY_margins.json`) for CI upload.
+//!
+//! Billing is value-independent (zero-skip is a property of the
+//! weights), so random reference-precision rows exercise the exact
+//! same counters a production batch of the same size would.
+
+use std::sync::Arc;
+
+use crate::anyhow;
+use crate::coordinator::cost::CostTable;
+use crate::coordinator::engine::PackedEngine;
+use crate::coordinator::model::{CompiledModel, VariantSpec};
+use crate::eval::autoscale::mlp_specs;
+use crate::nn::conv::LayerOp;
+use crate::testutil::random_batch;
+use crate::workload::synth::{synth_cnn_stack, synth_mlp_stack, XorShift64};
+
+/// Largest differentially-checked batch (a multiple of every variant's
+/// quantum, matching the autoscale sample count).
+const MAX_ROWS: usize = 96;
+
+fn aj(pj: f64) -> i64 {
+    (pj.max(0.0) * 1e6).round() as i64
+}
+
+/// Certify, print, differentially check, and JSON-encode one model's
+/// variant set; appends the per-variant JSON objects to `json_variants`.
+fn certify_model(
+    name: &str,
+    model: &Arc<CompiledModel>,
+    cost: &CostTable,
+    json_variants: &mut Vec<String>,
+) -> anyhow::Result<()> {
+    println!("model {name} ({} layers):", model.layers().len());
+    let engine = PackedEngine::new(Arc::clone(model));
+    let mut rng = XorShift64::new(0xCE47_1F1C);
+    let batch = random_batch(&mut rng, MAX_ROWS, model.input_width(), model.in_bits());
+    for v in 0..model.n_variants() {
+        let var = model.variant(v);
+        let cert = model.cost_certificate(v);
+        let q = cert.batch_quantum;
+        // Batch sizes straddling the quantum: a lone row, a partial
+        // word, one exact quantum, and the full sample block.
+        let mut ms = vec![1, q.saturating_sub(1).max(1), q, q + 1, MAX_ROWS];
+        ms.sort_unstable();
+        ms.dedup();
+        let rows: Vec<Vec<i64>> = batch.iter().map(|r| var.quantize_row(r)).collect();
+        let mut deltas = vec![];
+        for &m in &ms {
+            let (_, stats) = engine.forward_batch_variant(&rows[..m], v);
+            anyhow::ensure!(
+                cert.eval_stats(m) == stats,
+                "{name}/{}: certificate diverges from the engine at m={m}:\n  \
+                 cert {:?}\n  engine {:?}",
+                var.name(),
+                cert.eval_stats(m),
+                stats
+            );
+            let delta = aj(cost.batch_energy_pj(&stats)) - aj(cert.energy_pj(m, cost));
+            anyhow::ensure!(
+                delta == 0,
+                "{name}/{}: certified energy off by {delta} aJ at m={m}",
+                var.name()
+            );
+            deltas.push(format!("m={m}"));
+        }
+        println!(
+            "  {:<12} quantum={:<3} pJ/row={:<8.2} cyc/row={:<8.1} checked: {} (Δ=0 aJ)",
+            var.name(),
+            q,
+            cert.pj_per_row(cost),
+            cert.cycles_per_row(),
+            deltas.join(" ")
+        );
+        let layers_json = cert
+            .layers
+            .iter()
+            .map(|lc| {
+                let hops = lc
+                    .boundary
+                    .iter()
+                    .map(|(f, t)| {
+                        // Boundary passes are linear in quantum blocks
+                        // exactly when a block's produced bit count
+                        // divides 48 evenly; otherwise the certificate
+                        // keeps the exact ceil.
+                        let bits_per_block = q * lc.patch_rows * t.bits as usize;
+                        format!(
+                            "{{\"from\": {}, \"to\": {}, \"bits_per_block\": {}, \
+                             \"linear_in_blocks\": {}}}",
+                            f.bits,
+                            t.bits,
+                            bits_per_block,
+                            bits_per_block % 48 == 0
+                        )
+                    })
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                format!(
+                    "{{\"layer\": {}, \"in_bits\": {}, \"acc_bits\": {}, \
+                     \"patch_rows\": {}, \"cols\": {}, \"nonzero_plans\": {}, \
+                     \"plan_cycles\": {}, \"plan_adds\": {}, \"hops\": [{hops}]}}",
+                    lc.layer,
+                    lc.in_bits,
+                    lc.acc_bits,
+                    lc.patch_rows,
+                    lc.cols,
+                    lc.nonzero_plans,
+                    lc.plan_cycles,
+                    lc.plan_adds
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
+        json_variants.push(format!(
+            "    {{\"model\": \"{name}\", \"variant\": \"{}\", \"batch_quantum\": {q}, \
+             \"pj_per_row\": {}, \"cycles_per_row\": {}, \"checked_batch_sizes\": [{}], \
+             \"max_delta_aj\": 0, \"layers\": [{layers_json}]}}",
+            var.name(),
+            cert.pj_per_row(cost),
+            cert.cycles_per_row(),
+            ms.iter().map(|m| m.to_string()).collect::<Vec<_>>().join(", ")
+        ));
+    }
+    println!();
+    Ok(())
+}
+
+/// Run the certificate report; errors on any certificate/engine or
+/// energy divergence.
+pub fn run() -> anyhow::Result<()> {
+    println!("== eval certify: static cost certificates vs the running engine ==\n");
+    let cost = CostTable::characterize(1000.0);
+    let mut json_variants = vec![];
+
+    let mlp = synth_mlp_stack(8);
+    let model = CompiledModel::compile_variants(mlp, mlp_specs())?;
+    certify_model("synth-mlp", &model, &cost, &mut json_variants)?;
+
+    let cnn: Vec<LayerOp> = synth_cnn_stack(0xA07A6, 8);
+    let model = CompiledModel::compile_variants(cnn, VariantSpec::standard_trio(3))?;
+    certify_model("synth-cnn", &model, &cost, &mut json_variants)?;
+
+    let json = format!(
+        "{{\n  \"clock_mhz\": {},\n  \"certificates\": [\n{}\n  ]\n}}\n",
+        cost.mhz,
+        json_variants.join(",\n")
+    );
+    std::fs::write("CERT_costs.json", &json)?;
+    println!("certificates written to CERT_costs.json");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_workload_variant_sets_certify_against_the_engine() {
+        // The full differential sweep (every variant × batch sizes
+        // straddling each quantum), minus the JSON side effect.
+        let cost = CostTable::characterize(1000.0);
+        let mut sink = vec![];
+        let model =
+            CompiledModel::compile_variants(synth_mlp_stack(8), mlp_specs()).unwrap();
+        certify_model("synth-mlp", &model, &cost, &mut sink).unwrap();
+        let model = CompiledModel::compile_variants(
+            synth_cnn_stack(0xA07A6, 8),
+            VariantSpec::standard_trio(3),
+        )
+        .unwrap();
+        certify_model("synth-cnn", &model, &cost, &mut sink).unwrap();
+        assert_eq!(sink.len(), 6, "three variants per workload");
+        assert!(sink.iter().all(|j| j.contains("\"max_delta_aj\": 0")));
+    }
+}

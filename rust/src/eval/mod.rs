@@ -12,12 +12,15 @@
 //! precision-variant set — the operating points the serving governor
 //! switches between at run time (DESIGN.md §13); `verify` prints the
 //! static lane-safety margins the abstract interpreter proves for the
-//! same variant trio (DESIGN.md §14).
+//! same variant trio (DESIGN.md §14); `certify` prints the static cost
+//! certificates and differentially checks them against the running
+//! engine (DESIGN.md §15).
 
 use crate::anyhow;
 
 pub mod ablation;
 pub mod autoscale;
+pub mod certify;
 pub mod conv;
 pub mod fig10;
 pub mod fig6;
@@ -41,6 +44,7 @@ pub fn run(target: &str) -> anyhow::Result<()> {
         "conv" => conv::run(),
         "autoscale" => autoscale::run(),
         "verify" => verify::run(),
+        "certify" => certify::run(),
         "all" => {
             fig6::run()?;
             fig7::run()?;
@@ -52,11 +56,12 @@ pub fn run(target: &str) -> anyhow::Result<()> {
             precision::run()?;
             conv::run()?;
             autoscale::run()?;
-            verify::run()
+            verify::run()?;
+            certify::run()
         }
         other => anyhow::bail!(
             "unknown eval target `{other}` (fig6..fig10, summary, ablation, \
-             precision, conv, autoscale, verify, all)"
+             precision, conv, autoscale, verify, certify, all)"
         ),
     }
 }

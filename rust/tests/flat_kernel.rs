@@ -10,11 +10,13 @@
 //!    `nn::exec::mlp_forward_row_mixed` for whole forward passes over
 //!    random precision schedules.
 //!
-//! 2. **Billing independence.** `EngineStats` must equal the
-//!    pre-refactor billing formulas computed from the `MulPlan` tables —
-//!    the execution strategy (flat ops, scratch reuse, word-level
+//! 2. **Billing independence.** `EngineStats` must equal the static
+//!    cost certificate's closed-form evaluation (DESIGN.md §15) — the
+//!    execution strategy (flat ops, scratch reuse, word-level
 //!    boundaries) must be invisible to the counters, down to the
-//!    per-format buckets.
+//!    per-format buckets. The certificate itself is pinned against the
+//!    pre-refactor hand formulas in one legacy regression case, so it
+//!    can never drift silently.
 
 use softsimd::bits::format::{format_index, SimdFormat};
 use softsimd::bits::pack::{pack, unpack};
@@ -111,10 +113,11 @@ fn stage1_counters_never_diverge_from_plan_billing() {
 
 /// The pre-refactor billing formulas, computed from the `MulPlan`
 /// tables and one variant's schedule — what the per-op engine counted
-/// for that schedule. With several variants on one model, these are
-/// exactly the "single-variant formulas" each executed batch must be
-/// billed by (DESIGN.md §13).
-fn expected_stats(model: &CompiledModel, variant: usize, m: usize) -> EngineStats {
+/// for that schedule. Kept as the one **legacy regression oracle** the
+/// cost certificate is pinned against
+/// (`certificate_matches_the_legacy_prerefactor_formulas`); everything
+/// else bills through `CompiledModel::cost_certificate`.
+fn legacy_expected_stats(model: &CompiledModel, variant: usize, m: usize) -> EngineStats {
     let var = model.variant(variant);
     let quantum = var.batch_quantum();
     let mp = m.div_ceil(quantum) * quantum;
@@ -136,6 +139,9 @@ fn expected_stats(model: &CompiledModel, variant: usize, m: usize) -> EngineStat
                 let cycles = plan.cycles() as u64 * words;
                 want.s1_cycles += cycles;
                 want.s1_cycles_by_fmt[format_index(p.in_bits)] += cycles;
+                let adds = plan.adds() as u64 * words;
+                want.s1_adds += adds;
+                want.s1_adds_by_fmt[format_index(p.in_bits)] += adds;
                 want.subword_mults += m as u64;
                 want.acc_adds += acc_words;
                 if p.in_bits != p.acc_bits {
@@ -157,11 +163,13 @@ fn expected_stats(model: &CompiledModel, variant: usize, m: usize) -> EngineStat
 
 fn assert_stats_eq(got: &EngineStats, want: &EngineStats, ctx: &str) {
     assert_eq!(got.s1_cycles, want.s1_cycles, "{ctx}: s1_cycles");
+    assert_eq!(got.s1_adds, want.s1_adds, "{ctx}: s1_adds");
     assert_eq!(got.s2_passes, want.s2_passes, "{ctx}: s2_passes");
     assert_eq!(got.acc_adds, want.acc_adds, "{ctx}: acc_adds");
     assert_eq!(got.subword_mults, want.subword_mults, "{ctx}: subword_mults");
     assert_eq!(got.pad_rows, want.pad_rows, "{ctx}: pad_rows");
     assert_eq!(got.s1_cycles_by_fmt, want.s1_cycles_by_fmt, "{ctx}: s1 by fmt");
+    assert_eq!(got.s1_adds_by_fmt, want.s1_adds_by_fmt, "{ctx}: s1 adds by fmt");
     assert_eq!(got.s2_passes_by_fmt, want.s2_passes_by_fmt, "{ctx}: s2 by fmt");
 }
 
@@ -211,7 +219,7 @@ fn prop_flat_engine_is_bit_exact_and_bills_the_prerefactor_formulas() {
                 "case {case}: sched {sched:?} dims {dims:?} w_bits {w_bits:?} row {b}"
             );
         }
-        let want = expected_stats(engine.model(), 0, batch_size);
+        let want = engine.model().cost_certificate(0).eval_stats(batch_size);
         assert_stats_eq(&stats, &want, &format!("case {case} (sched {sched:?})"));
     }
 }
@@ -269,12 +277,71 @@ fn prop_variant_switching_bills_each_batch_by_its_own_variants_formulas() {
                 let want = mlp_forward_row_mixed(row, &layers, sched);
                 assert_eq!(out[b], want, "case {case} step {step} variant {v} row {b}");
             }
-            let want = expected_stats(engine.model(), v, batch_size);
+            let want = engine.model().cost_certificate(v).eval_stats(batch_size);
             assert_stats_eq(
                 &stats,
                 &want,
                 &format!("case {case} step {step} variant {v}"),
             );
+        }
+    }
+}
+
+#[test]
+fn certificate_matches_the_legacy_prerefactor_formulas() {
+    // The anti-drift pin: the static cost certificate (DESIGN.md §15)
+    // must reproduce the pre-refactor hand formulas exactly — random
+    // multi-variant dense models, batch sizes straddling each quantum.
+    // Every other billing test trusts the certificate; this one is the
+    // independent derivation that keeps it honest.
+    let mut rng = XorShift64::new(0xF1A7_0005);
+    for case in 0..20 {
+        let n_layers = 1 + (rng.next_u64() % 3) as usize;
+        let dims: Vec<usize> = (0..=n_layers)
+            .map(|_| 1 + (rng.next_u64() % 6) as usize)
+            .collect();
+        let w_bits: Vec<u32> = (0..n_layers)
+            .map(|_| [4u32, 6, 8][(rng.next_u64() % 3) as usize])
+            .collect();
+        let mut layers = random_layers(&mut rng, &dims, &w_bits);
+        for layer in &mut layers {
+            for row in &mut layer.w_raw {
+                for w in row.iter_mut() {
+                    if rng.next_u64() % 5 == 0 {
+                        *w = 0;
+                    }
+                }
+            }
+        }
+        let mut specs = vec![VariantSpec::new(
+            "ref",
+            (0..n_layers).map(|_| LayerPrecision::new(8, 16)).collect(),
+        )];
+        // The alt variant's first layer may not exceed the reference
+        // width (requests can only be narrowed at dispatch).
+        let alt = loop {
+            let sched = random_schedule(&mut rng, n_layers);
+            if sched[0].in_bits <= 8 {
+                break sched;
+            }
+        };
+        specs.push(VariantSpec::new("alt", alt));
+        let ops = layers
+            .into_iter()
+            .map(softsimd::nn::conv::LayerOp::Dense)
+            .collect();
+        let model = CompiledModel::compile_variants(ops, specs)
+            .unwrap_or_else(|e| panic!("case {case}: compile failed: {e}"));
+        for v in 0..model.n_variants() {
+            let cert = model.cost_certificate(v);
+            let q = cert.batch_quantum;
+            for m in [1, q, q + 1, 3 * q - 1] {
+                assert_stats_eq(
+                    &cert.eval_stats(m),
+                    &legacy_expected_stats(&model, v, m),
+                    &format!("case {case} variant {v} m={m}"),
+                );
+            }
         }
     }
 }
