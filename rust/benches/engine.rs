@@ -144,30 +144,43 @@ mod baseline {
     }
 }
 
-/// One measured cell, JSON-serializable.
+/// One measured cell, JSON-serializable. `rows_per_s` is whatever
+/// backend `forward_batch_into` resolves to (`backend` names it);
+/// `scalar_core_rows_per_s` is the same engine forced onto the scalar
+/// core in the same process, and `simd_speedup` is their ratio — 1.0
+/// when the crate is built without the `simd` feature. The
+/// pre-refactor `baseline_rows_per_s`/`speedup` pair is unchanged.
 struct Cell {
     schedule: &'static str,
     batch: usize,
+    backend: &'static str,
     rows_per_s: f64,
     ns_per_subword_mult: f64,
     allocs_per_batch: f64,
     baseline_rows_per_s: f64,
     speedup: f64,
+    scalar_core_rows_per_s: f64,
+    simd_speedup: f64,
 }
 
 impl Cell {
     fn json(&self) -> String {
         format!(
-            "{{\"schedule\":\"{}\",\"batch\":{},\"rows_per_s\":{:.1},\
+            "{{\"schedule\":\"{}\",\"batch\":{},\"backend\":\"{}\",\
+             \"rows_per_s\":{:.1},\
              \"ns_per_subword_mult\":{:.3},\"allocs_per_batch\":{:.2},\
-             \"baseline_rows_per_s\":{:.1},\"speedup\":{:.2}}}",
+             \"baseline_rows_per_s\":{:.1},\"speedup\":{:.2},\
+             \"scalar_core_rows_per_s\":{:.1},\"simd_speedup\":{:.2}}}",
             self.schedule,
             self.batch,
+            self.backend,
             self.rows_per_s,
             self.ns_per_subword_mult,
             self.allocs_per_batch,
             self.baseline_rows_per_s,
-            self.speedup
+            self.speedup,
+            self.scalar_core_rows_per_s,
+            self.simd_speedup
         )
     }
 }
@@ -216,10 +229,19 @@ fn main() {
             ],
         ),
     ];
+    // Which backend `forward_batch_into` resolves to in this build
+    // (DESIGN.md §16): the detected host-vector kernel under
+    // `--features simd`, the scalar core otherwise.
+    #[cfg(feature = "simd")]
+    let backend: &'static str = softsimd::bits::swarx::kernel().name();
+    #[cfg(not(feature = "simd"))]
+    let backend: &'static str = "scalar";
+    println!("backend: {backend}");
     let mut cells: Vec<Cell> = vec![];
     println!(
-        "{:<16} {:>6} {:>12} {:>10} {:>10} {:>12} {:>8}",
-        "schedule", "batch", "rows/s", "ns/mult", "allocs/b", "base rows/s", "speedup"
+        "{:<16} {:>6} {:>12} {:>10} {:>10} {:>12} {:>8} {:>8}",
+        "schedule", "batch", "rows/s", "ns/mult", "allocs/b", "base rows/s", "speedup",
+        "simd x"
     );
     for (name, sched) in &schedules {
         let model =
@@ -276,24 +298,61 @@ fn main() {
             });
             let baseline_rows_per_s = batch_rows as f64 / (rb.ns_per_iter * 1e-9);
 
+            // The in-process scalar core (DESIGN.md §16): cross-check
+            // the wide path bit-exact and stats-exact against it, then
+            // time it on the same warmed scratch for the per-backend
+            // speedup column. Without `simd` the two paths are one and
+            // the ratio is identically 1.0.
+            #[cfg(feature = "simd")]
+            let scalar_core_rows_per_s = {
+                let mut s_out = Vec::new();
+                let s_stats = engine.forward_batch_into_scalar(
+                    &batch,
+                    0,
+                    &mut scratch,
+                    &mut s_out,
+                );
+                assert_eq!(out, s_out, "{name} batch {batch_rows}: wide vs scalar core");
+                assert_eq!(
+                    stats, s_stats,
+                    "{name} batch {batch_rows}: billing wide vs scalar core"
+                );
+                let s_label = format!("scalar-core {name} (batch {batch_rows})");
+                let rs = bench(&s_label, 40, || {
+                    std::hint::black_box(engine.forward_batch_into_scalar(
+                        &batch,
+                        0,
+                        &mut scratch,
+                        &mut out,
+                    ));
+                });
+                batch_rows as f64 / (rs.ns_per_iter * 1e-9)
+            };
+            #[cfg(not(feature = "simd"))]
+            let scalar_core_rows_per_s = rows_per_s;
+
             let cell = Cell {
                 schedule: *name,
                 batch: batch_rows,
+                backend,
                 rows_per_s,
                 ns_per_subword_mult: ns_per_mult,
                 allocs_per_batch,
                 baseline_rows_per_s,
                 speedup: rows_per_s / baseline_rows_per_s,
+                scalar_core_rows_per_s,
+                simd_speedup: rows_per_s / scalar_core_rows_per_s,
             };
             println!(
-                "{:<16} {:>6} {:>12.0} {:>10.3} {:>10.2} {:>12.0} {:>7.2}x",
+                "{:<16} {:>6} {:>12.0} {:>10.3} {:>10.2} {:>12.0} {:>7.2}x {:>7.2}x",
                 cell.schedule,
                 cell.batch,
                 cell.rows_per_s,
                 cell.ns_per_subword_mult,
                 cell.allocs_per_batch,
                 cell.baseline_rows_per_s,
-                cell.speedup
+                cell.speedup,
+                cell.simd_speedup
             );
             cells.push(cell);
         }

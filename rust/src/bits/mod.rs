@@ -11,6 +11,8 @@ pub mod format;
 pub mod lanecheck;
 pub mod pack;
 pub mod swar;
+#[cfg(feature = "simd")]
+pub mod swarx;
 
 pub use fixed::{from_q, to_q, Q};
 pub use format::{SimdFormat, DATAPATH_BITS, FORMATS, WORD_MASK};

@@ -19,13 +19,16 @@ use super::format::{SimdFormat, MAX_SHIFT, WORD_MASK};
 
 /// The raw wrapping SWAR add shared by every public entry point (no
 /// sanitizer hook — callers that legitimately exploit the wrapped form
-/// go through here).
+/// go through here). `pub(crate)` so the multi-word backend
+/// (`bits::swarx`, `--features simd`) reuses the identity verbatim —
+/// the wide kernel deliberately bypasses the `lanecheck` hooks, which
+/// is why the engine pins `lanecheck` builds to the scalar path.
 ///
 /// Identity: with `H` the MSB mask, `(a&~H) + (c&~H)` can never carry
 /// *out* of a lane (the MSBs are zeroed), and the true MSB sum is
 /// restored by `^ ((a^c) & H)`.
 #[inline]
-fn add_wrapped(a: u64, c: u64, fmt: SimdFormat) -> u64 {
+pub(crate) fn add_wrapped(a: u64, c: u64, fmt: SimdFormat) -> u64 {
     debug_assert_eq!(a & !WORD_MASK, 0);
     debug_assert_eq!(c & !WORD_MASK, 0);
     let h = fmt.msb_mask();
@@ -33,9 +36,10 @@ fn add_wrapped(a: u64, c: u64, fmt: SimdFormat) -> u64 {
 }
 
 /// The raw wrapping SWAR negation (complement, then `+1` injected at
-/// every lane LSB); no sanitizer hook.
+/// every lane LSB); no sanitizer hook. `pub(crate)` for `bits::swarx`,
+/// same contract as [`add_wrapped`].
 #[inline]
-fn neg_wrapped(c: u64, fmt: SimdFormat) -> u64 {
+pub(crate) fn neg_wrapped(c: u64, fmt: SimdFormat) -> u64 {
     add_wrapped(!c & WORD_MASK, fmt.lsb_mask(), fmt)
 }
 
@@ -148,9 +152,10 @@ pub fn swar_sub_sar(a: u64, c: u64, k: u32, fmt: SimdFormat) -> u64 {
 }
 
 /// Shift `w` right by `k` per sub-word, replicating the supplied sign
-/// bits (at MSB positions) into the vacated top bits.
+/// bits (at MSB positions) into the vacated top bits. `pub(crate)` for
+/// `bits::swarx`, same contract as [`add_wrapped`].
 #[inline]
-fn sar_with_sign(w: u64, signs: u64, k: u32, fmt: SimdFormat) -> u64 {
+pub(crate) fn sar_with_sign(w: u64, signs: u64, k: u32, fmt: SimdFormat) -> u64 {
     debug_assert!(k >= 1 && k <= MAX_SHIFT);
     debug_assert_eq!(signs & !fmt.msb_mask(), 0);
     let mut fill = 0u64;

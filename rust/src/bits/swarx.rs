@@ -1,0 +1,603 @@
+//! Multi-word (host-vector) SWAR primitives — the `simd` execution
+//! backend of the flat core (DESIGN.md §16).
+//!
+//! The paper's Soft SIMD already packs sub-words *inside* one 48-bit
+//! word; this module packs **several such words across host vector
+//! lanes** and executes a flat micro-op stream
+//! ([`crate::csd::flat`]) on all of them per instruction. One [`Tile`]
+//! is `TILE = 4` packed `u64` words — a 256-bit host vector, the widest
+//! path stable x86 offers (AVX2); wider units compose by streaming
+//! tiles back to back.
+//!
+//! Three implementations share one semantics:
+//! * **portable** — safe unrolled-scalar loops over the tile, built
+//!   from the same raw identities as [`crate::bits::swar`]
+//!   (`add_wrapped`/`neg_wrapped`/`sar_with_sign`). The compiler
+//!   autovectorizes the element-wise loops; this is the stable-Rust
+//!   fallback and the only path on non-x86 hosts.
+//! * **AVX2** — explicit `core::arch::x86_64` intrinsics behind
+//!   run-time `is_x86_feature_detected!` dispatch, in the one narrowly
+//!   `allow(unsafe_code)` module of the crate (see `lib.rs`).
+//! * **`std::simd`** — under the nightly-only `simd-nightly` feature
+//!   the portable implementation switches to `core::simd` vectors
+//!   (`u64x4`); same element-wise identities, target-independent.
+//!
+//! Every function here is **bit-exact** against its scalar sibling
+//! (property-tested below) and performs **no heap allocation**. None of
+//! them carries `lanecheck` sanitizer hooks — the per-lane overflow
+//! masks are defined word-at-a-time — so the engine forces the scalar
+//! path under `--features lanecheck` via a compile-time `cfg` guard
+//! (`coordinator::engine`). Billing never happens here either: callers
+//! bill cycles from the micro-op stream itself, which is why the wide
+//! backend cannot perturb `EngineStats` (DESIGN.md §16).
+
+use super::format::{SimdFormat, WORD_MASK};
+use super::swar::{add_wrapped, sar_with_sign, swar_relu};
+#[cfg(not(feature = "simd-nightly"))]
+use super::swar::neg_wrapped;
+use crate::bits::fixed::{sign_extend, truncate};
+use crate::csd::flat::{FLAT_ADD, FLAT_NEG, FLAT_SHIFT_MASK};
+use crate::pipeline::stage2::convert_subword;
+
+/// Packed words processed per vector instruction (`u64x4` — one AVX2
+/// register; the portable path unrolls by the same factor so tails and
+/// billing are backend-independent).
+pub const TILE: usize = 4;
+
+/// One tile of packed datapath words.
+pub type Tile = [u64; TILE];
+
+/// Which multi-word implementation executes. Opaque: the only
+/// constructors are [`kernel`] (runtime detection) and
+/// [`Kernel::portable`], so an `Avx2` kernel can exist only after
+/// `is_x86_feature_detected!("avx2")` returned true — the safety
+/// invariant the `avx2` module's safe wrappers rely on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Kernel(Which);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Which {
+    Portable,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+}
+
+impl Kernel {
+    /// The portable (unrolled-scalar / `std::simd`) kernel — always
+    /// available; the in-process reference the explicit paths are
+    /// tested against.
+    pub fn portable() -> Kernel {
+        Kernel(Which::Portable)
+    }
+
+    /// Human-readable backend name (bench/report labels).
+    pub fn name(self) -> &'static str {
+        match self.0 {
+            Which::Portable => {
+                if cfg!(feature = "simd-nightly") {
+                    "portable-simd"
+                } else {
+                    "portable"
+                }
+            }
+            #[cfg(target_arch = "x86_64")]
+            Which::Avx2 => "avx2",
+        }
+    }
+}
+
+/// The best kernel for this host, detected once per process. On x86-64
+/// with AVX2 this is the intrinsics path; everywhere else the portable
+/// tile kernel.
+pub fn kernel() -> Kernel {
+    static KERNEL: std::sync::OnceLock<Kernel> = std::sync::OnceLock::new();
+    *KERNEL.get_or_init(detect)
+}
+
+/// Every kernel available on this host (tests sweep all of them).
+pub fn kernels() -> Vec<Kernel> {
+    let mut all = vec![Kernel::portable()];
+    if kernel() != Kernel::portable() {
+        all.push(kernel());
+    }
+    all
+}
+
+fn detect() -> Kernel {
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        return Kernel(Which::Avx2);
+    }
+    Kernel(Which::Portable)
+}
+
+/// Execute a flat micro-op slice on `TILE` packed multiplicand words at
+/// once: the multi-word form of
+/// [`crate::pipeline::stage1::Stage1::run_flat`], bit-exact per word
+/// against it for any op stream produced by
+/// [`crate::csd::flat::encode_plan`].
+///
+/// Counters are *not* kept here — [`Stage1::run_flat_tile`] bills the
+/// executed op bytes itself, so the datapath cycle count stays the one
+/// source of truth regardless of backend.
+///
+/// [`Stage1::run_flat_tile`]: crate::pipeline::stage1::Stage1::run_flat_tile
+#[inline]
+pub fn run_flat_tile(kern: Kernel, x: Tile, ops: &[u8], fmt: SimdFormat) -> Tile {
+    match kern.0 {
+        Which::Portable => portable::run_flat_tile(x, ops, fmt),
+        #[cfg(target_arch = "x86_64")]
+        Which::Avx2 => avx2::run_flat_tile(x, ops, fmt),
+    }
+}
+
+/// Word-level ReLU over a whole accumulator stream — the vectorized
+/// [`swar_relu`]: full tiles go through the wide kernel, the tail words
+/// through the scalar primitive. Bit-exact against mapping `swar_relu`
+/// over the slice.
+#[inline]
+pub fn relu_slice(kern: Kernel, words: &mut [u64], fmt: SimdFormat) {
+    let mut chunks = words.chunks_exact_mut(TILE);
+    for chunk in &mut chunks {
+        let t: Tile = [chunk[0], chunk[1], chunk[2], chunk[3]];
+        let r = match kern.0 {
+            Which::Portable => portable::relu_tile(t, fmt),
+            #[cfg(target_arch = "x86_64")]
+            Which::Avx2 => avx2::relu_tile(t, fmt),
+        };
+        chunk.copy_from_slice(&r);
+    }
+    for w in chunks.into_remainder() {
+        *w = swar_relu(*w, fmt);
+    }
+}
+
+/// One scalar flat micro-op step without sanitizer hooks: the exact
+/// per-word semantics of `Stage1::run_flat`'s loop body, with the
+/// multiplicand's wrapped negation `nx` precomputed (it is loop
+/// invariant — `x` never changes during a plan). The tile kernels run
+/// this per vector lane. (Under `simd-nightly` the portable kernel is
+/// the `core::simd` one instead, leaving this helper unreferenced.)
+#[cfg_attr(feature = "simd-nightly", allow(dead_code))]
+#[inline]
+fn flat_step(acc: u64, x: u64, nx: u64, op: u8, fmt: SimdFormat) -> u64 {
+    let k = (op & FLAT_SHIFT_MASK) as u32;
+    let h = fmt.msb_mask();
+    if op & FLAT_ADD != 0 {
+        if op & FLAT_NEG == 0 {
+            let w = add_wrapped(acc, x, fmt);
+            if k == 0 {
+                w
+            } else {
+                // Add overflow: operands agree in sign, sum does not.
+                let ovf = !(acc ^ x) & (acc ^ w) & h;
+                sar_with_sign(w, (w & h) ^ ovf, k, fmt)
+            }
+        } else {
+            let w = add_wrapped(acc, nx, fmt);
+            if k == 0 {
+                w
+            } else {
+                // Subtract overflow is detected on the *original*
+                // operand (`x`), not its negation — the lane-minimum
+                // corner (`-2^(b-1)` negates to itself) makes the two
+                // formulations differ; this matches `swar_sub_sar`.
+                let ovf = (acc ^ x) & (acc ^ w) & h;
+                sar_with_sign(w, (w & h) ^ ovf, k, fmt)
+            }
+        }
+    } else {
+        // Pure shift cycle (encoder guarantees k ≥ 1 here).
+        sar_with_sign(acc, acc & h, k, fmt)
+    }
+}
+
+/// Gather-vectorized [`repack_hop_into`]: one *direct* crossbar hop
+/// over a whole packed stream, specialized to full output words. Every
+/// output word except possibly the last has all `to.lanes()` sub-words
+/// valid, so the gather runs branch-free (no per-lane bounds check) and
+/// `TILE`-unrolled; only the final partial word takes the guarded
+/// scalar path, with lanes past `count` packed as zero — bit-identical
+/// to [`repack_hop_into`] (property-tested).
+///
+/// The hop is memory-gather-bound, so the win here is the branch-free
+/// full-word inner loop the compiler can autovectorize, not explicit
+/// intrinsics: sub-word extraction needs per-lane variable bit shifts,
+/// which the portable form expresses directly.
+///
+/// [`repack_hop_into`]: crate::pipeline::stage2::repack_hop_into
+pub fn repack_hop_tiles(
+    src: &[u64],
+    from: SimdFormat,
+    to: SimdFormat,
+    count: usize,
+    dst: &mut Vec<u64>,
+) {
+    debug_assert!(
+        crate::pipeline::stage2::is_direct(from, to),
+        "{from}->{to} is not a direct crossbar hop"
+    );
+    debug_assert!(src.len() * from.lanes() as usize >= count, "source stream too short");
+    dst.clear();
+    let out_lanes = to.lanes() as usize;
+    let in_lanes = from.lanes() as usize;
+    let in_mask = (1u64 << from.bits) - 1;
+    let out_words = count.div_ceil(out_lanes);
+    let full_words = count / out_lanes;
+    // Branch-free gather of one fully-valid output word.
+    let gather_full = |ow: usize| -> u64 {
+        let base = ow * out_lanes;
+        let mut w = 0u64;
+        for lane in 0..out_lanes {
+            let idx = base + lane;
+            let s = sign_extend(
+                (src[idx / in_lanes] >> ((idx % in_lanes) as u32 * from.bits)) & in_mask,
+                from.bits,
+            );
+            w |= truncate(convert_subword(s, from, to), to.bits) << (lane as u32 * to.bits);
+        }
+        w
+    };
+    let mut ow = 0usize;
+    while ow + TILE <= full_words {
+        let t: Tile = [
+            gather_full(ow),
+            gather_full(ow + 1),
+            gather_full(ow + 2),
+            gather_full(ow + 3),
+        ];
+        dst.extend_from_slice(&t);
+        ow += TILE;
+    }
+    while ow < full_words {
+        dst.push(gather_full(ow));
+        ow += 1;
+    }
+    if full_words < out_words {
+        // Final partial word: valid lanes gathered, the rest zero.
+        let mut w = 0u64;
+        for lane in 0..(count - full_words * out_lanes) {
+            let idx = full_words * out_lanes + lane;
+            let s = sign_extend(
+                (src[idx / in_lanes] >> ((idx % in_lanes) as u32 * from.bits)) & in_mask,
+                from.bits,
+            );
+            w |= truncate(convert_subword(s, from, to), to.bits) << (lane as u32 * to.bits);
+        }
+        dst.push(w);
+    }
+}
+
+/// The portable tile kernel: safe element-wise loops over `[u64; TILE]`
+/// that the compiler unrolls/autovectorizes on stable Rust; under the
+/// nightly `simd-nightly` feature the same identities run on
+/// `core::simd` `u64x4` vectors instead.
+mod portable {
+    use super::*;
+
+    #[cfg(not(feature = "simd-nightly"))]
+    pub(super) fn run_flat_tile(x: Tile, ops: &[u8], fmt: SimdFormat) -> Tile {
+        let mut nx = [0u64; TILE];
+        for (n, &xi) in nx.iter_mut().zip(x.iter()) {
+            *n = neg_wrapped(xi, fmt);
+        }
+        let mut acc = [0u64; TILE];
+        for &op in ops {
+            for i in 0..TILE {
+                acc[i] = flat_step(acc[i], x[i], nx[i], op, fmt);
+            }
+        }
+        acc
+    }
+
+    #[cfg(feature = "simd-nightly")]
+    pub(super) fn run_flat_tile(x: Tile, ops: &[u8], fmt: SimdFormat) -> Tile {
+        nightly::run_flat_tile(x, ops, fmt)
+    }
+
+    pub(super) fn relu_tile(t: Tile, fmt: SimdFormat) -> Tile {
+        let mut r = [0u64; TILE];
+        for (dst, &w) in r.iter_mut().zip(t.iter()) {
+            *dst = swar_relu(w, fmt);
+        }
+        r
+    }
+}
+
+/// The nightly `core::simd` implementation of the portable kernel
+/// (`--features simd-nightly`, requires a nightly toolchain for
+/// `#![feature(portable_simd)]` — see `lib.rs`). Never built by CI;
+/// kept bit-equation-identical to `flat_step` by construction.
+#[cfg(feature = "simd-nightly")]
+mod nightly {
+    use super::*;
+    use std::simd::Simd;
+
+    const _: () = assert!(TILE == 4, "u64x4 vectors assume TILE == 4");
+    type V = Simd<u64, 4>;
+
+    #[inline]
+    fn add_wrapped_v(a: V, c: V, h: V, nh: V, wm: V) -> V {
+        (((a & nh) + (c & nh)) ^ ((a ^ c) & h)) & wm
+    }
+
+    #[inline]
+    fn sar_v(w: V, signs: V, k: u32, keep: V) -> V {
+        let mut fill = signs;
+        let mut part = signs;
+        for _ in 1..k {
+            part = part >> V::splat(1);
+            fill |= part;
+        }
+        ((w >> V::splat(k as u64)) & keep) | fill
+    }
+
+    pub(super) fn run_flat_tile(x: Tile, ops: &[u8], fmt: SimdFormat) -> Tile {
+        let wm = V::splat(WORD_MASK);
+        let h = V::splat(fmt.msb_mask());
+        let nh = V::splat(WORD_MASK & !fmt.msb_mask());
+        let lsb = V::splat(fmt.lsb_mask());
+        let xv = V::from_array(x);
+        // neg_wrapped(x): complement within the datapath, +1 at lane LSBs.
+        let nxv = add_wrapped_v(xv ^ wm, lsb, h, nh, wm);
+        let mut acc = V::splat(0);
+        for &op in ops {
+            let k = (op & FLAT_SHIFT_MASK) as u32;
+            acc = if op & FLAT_ADD != 0 {
+                let sub = op & FLAT_NEG != 0;
+                let c = if sub { nxv } else { xv };
+                let w = add_wrapped_v(acc, c, h, nh, wm);
+                if k == 0 {
+                    w
+                } else {
+                    let diff = if sub { acc ^ xv } else { !(acc ^ xv) };
+                    let ovf = diff & (acc ^ w) & h;
+                    sar_v(w, (w & h) ^ ovf, k, V::splat(fmt.keep_mask(k)))
+                }
+            } else {
+                sar_v(acc, acc & h, k, V::splat(fmt.keep_mask(k)))
+            };
+        }
+        acc.to_array()
+    }
+}
+
+/// The explicit AVX2 path: the flat micro-op interpreter and word-level
+/// ReLU on 256-bit vectors (`u64x4`), selected at run time by
+/// [`kernel`].
+///
+/// **Unsafe allowlist entry** (see `lib.rs`): this module is the one
+/// place outside `testutil::CountingAlloc` where `unsafe` is permitted,
+/// and it contains exactly two kinds of unsafe — `#[target_feature
+/// (enable = "avx2")]` functions built from stable Intel intrinsics,
+/// and the safe wrappers' calls into them. The safety argument is
+/// confinement: [`Kernel`] is opaque and `Which::Avx2` is only ever
+/// constructed after `is_x86_feature_detected!("avx2")` succeeded, so
+/// the target-feature functions cannot be reached on hardware without
+/// AVX2. No raw pointers escape; loads/stores are the unaligned
+/// `loadu`/`storeu` on stack arrays.
+#[cfg(target_arch = "x86_64")]
+#[allow(unsafe_code)]
+mod avx2 {
+    use super::*;
+    use std::arch::x86_64::{
+        __m256i, _mm256_add_epi64, _mm256_and_si256, _mm256_andnot_si256,
+        _mm256_loadu_si256, _mm256_or_si256, _mm256_set1_epi64x, _mm256_srl_epi64,
+        _mm256_storeu_si256, _mm256_xor_si256, _mm_cvtsi32_si128,
+    };
+
+    const _: () = assert!(TILE == 4, "__m256i tiles assume TILE == 4");
+
+    /// Safe wrapper; see the module docs for the AVX2-availability
+    /// invariant carried by [`Kernel`].
+    pub(super) fn run_flat_tile(x: Tile, ops: &[u8], fmt: SimdFormat) -> Tile {
+        // SAFETY: only reachable through `Which::Avx2`, which `detect`
+        // constructs after `is_x86_feature_detected!("avx2")`.
+        unsafe { run_flat_tile_impl(x, ops, fmt) }
+    }
+
+    /// Safe wrapper over the AVX2 word-level ReLU.
+    pub(super) fn relu_tile(t: Tile, fmt: SimdFormat) -> Tile {
+        // SAFETY: as `run_flat_tile`.
+        unsafe { relu_tile_impl(t, fmt) }
+    }
+
+    /// `sar_with_sign` on a vector: OR together `signs >> j` for
+    /// `j ∈ 0..k` (the sign-replication fill), then mask-and-merge.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn sar_v(w: __m256i, signs: __m256i, k: u32, keep: __m256i) -> __m256i {
+        let one = _mm_cvtsi32_si128(1);
+        let mut fill = signs;
+        let mut part = signs;
+        let mut j = 1;
+        while j < k {
+            part = _mm256_srl_epi64(part, one);
+            fill = _mm256_or_si256(fill, part);
+            j += 1;
+        }
+        let shifted = _mm256_srl_epi64(w, _mm_cvtsi32_si128(k as i32));
+        _mm256_or_si256(_mm256_and_si256(shifted, keep), fill)
+    }
+
+    /// `add_wrapped` on a vector: kill carries at lane MSBs, add, then
+    /// restore the true MSB sum — the scalar identity verbatim.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn add_wrapped_v(
+        a: __m256i,
+        c: __m256i,
+        h: __m256i,
+        nh: __m256i,
+        wm: __m256i,
+    ) -> __m256i {
+        let sum = _mm256_add_epi64(_mm256_and_si256(a, nh), _mm256_and_si256(c, nh));
+        let msb = _mm256_and_si256(_mm256_xor_si256(a, c), h);
+        _mm256_and_si256(_mm256_xor_si256(sum, msb), wm)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn run_flat_tile_impl(x: Tile, ops: &[u8], fmt: SimdFormat) -> Tile {
+        let wm = _mm256_set1_epi64x(WORD_MASK as i64);
+        let h = _mm256_set1_epi64x(fmt.msb_mask() as i64);
+        let nh = _mm256_set1_epi64x((WORD_MASK & !fmt.msb_mask()) as i64);
+        let lsb = _mm256_set1_epi64x(fmt.lsb_mask() as i64);
+        let xv = _mm256_loadu_si256(x.as_ptr().cast());
+        // neg_wrapped(x), loop-invariant: x ^ WORD_MASK == !x & WORD_MASK.
+        let nxv = add_wrapped_v(_mm256_xor_si256(xv, wm), lsb, h, nh, wm);
+        let mut acc = _mm256_set1_epi64x(0);
+        for &op in ops {
+            let k = (op & FLAT_SHIFT_MASK) as u32;
+            acc = if op & FLAT_ADD != 0 {
+                let sub = op & FLAT_NEG != 0;
+                let c = if sub { nxv } else { xv };
+                let w = add_wrapped_v(acc, c, h, nh, wm);
+                if k == 0 {
+                    w
+                } else {
+                    // Overflow on the *original* operand, as `flat_step`:
+                    // add: !(acc^x) & (acc^w); sub: (acc^x) & (acc^w).
+                    let ax = _mm256_xor_si256(acc, xv);
+                    let aw = _mm256_xor_si256(acc, w);
+                    let diff = if sub {
+                        _mm256_and_si256(ax, aw)
+                    } else {
+                        _mm256_andnot_si256(ax, aw)
+                    };
+                    let ovf = _mm256_and_si256(diff, h);
+                    let signs = _mm256_xor_si256(_mm256_and_si256(w, h), ovf);
+                    let keep = _mm256_set1_epi64x(fmt.keep_mask(k) as i64);
+                    sar_v(w, signs, k, keep)
+                }
+            } else {
+                let keep = _mm256_set1_epi64x(fmt.keep_mask(k) as i64);
+                sar_v(acc, _mm256_and_si256(acc, h), k, keep)
+            };
+        }
+        let mut out = [0u64; TILE];
+        _mm256_storeu_si256(out.as_mut_ptr().cast(), acc);
+        out
+    }
+
+    /// `swar_relu` on a vector. AVX2 has no 64-bit multiply, so instead
+    /// of the scalar's mask-spread-by-multiply this replicates each
+    /// lane's sign bit downward by an OR-shift cascade (shift distances
+    /// sum to `bits - 1`, so spreads never cross into the lane below),
+    /// then clears the negative lanes.
+    #[target_feature(enable = "avx2")]
+    unsafe fn relu_tile_impl(t: Tile, fmt: SimdFormat) -> Tile {
+        let h = _mm256_set1_epi64x(fmt.msb_mask() as i64);
+        let a = _mm256_loadu_si256(t.as_ptr().cast());
+        let mut mask = _mm256_and_si256(a, h);
+        let mut covered = 1u32;
+        while covered < fmt.bits {
+            let s = covered.min(fmt.bits - covered);
+            mask = _mm256_or_si256(mask, _mm256_srl_epi64(mask, _mm_cvtsi32_si128(s as i32)));
+            covered += s;
+        }
+        // a & !mask: negative lanes (now full-lane masks) become zero.
+        let r = _mm256_andnot_si256(mask, a);
+        let mut out = [0u64; TILE];
+        _mm256_storeu_si256(out.as_mut_ptr().cast(), r);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csd::flat::encode_plan;
+    use crate::csd::schedule::schedule_with;
+    use crate::pipeline::stage1::Stage1;
+    use crate::pipeline::stage2::{is_direct, repack_hop_into, repack_stream};
+    use crate::workload::synth::XorShift64;
+
+    fn random_tile(rng: &mut XorShift64) -> Tile {
+        [rng.word(), rng.word(), rng.word(), rng.word()]
+    }
+
+    #[test]
+    fn run_flat_tile_matches_scalar_run_flat_on_every_kernel() {
+        // Every available kernel, every format, random CSD plans: the
+        // tile interpreter must agree word-for-word with Stage1's
+        // scalar loop (which is itself pinned against run_plan).
+        let mut rng = XorShift64::new(0x51D0_0001);
+        for kern in kernels() {
+            for fmt in SimdFormat::all() {
+                for ybits in [4u32, 8, fmt.bits] {
+                    for _ in 0..60 {
+                        let m = rng.q_raw(ybits);
+                        let plan = schedule_with(m, ybits, 3);
+                        let mut ops = Vec::new();
+                        encode_plan(&plan, &mut ops);
+                        let x = random_tile(&mut rng);
+                        let got = run_flat_tile(kern, x, &ops, fmt);
+                        let mut s1 = Stage1::new(fmt);
+                        for (i, &xi) in x.iter().enumerate() {
+                            assert_eq!(
+                                got[i],
+                                s1.run_flat(xi, &ops),
+                                "kernel {} fmt {fmt} m {m} word {i}",
+                                kern.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn relu_slice_matches_scalar_relu_including_tails() {
+        let mut rng = XorShift64::new(0x51D0_0002);
+        for kern in kernels() {
+            for fmt in SimdFormat::all() {
+                for len in [0usize, 1, 3, 4, 5, 8, 11] {
+                    let mut words: Vec<u64> = (0..len).map(|_| rng.word()).collect();
+                    let want: Vec<u64> =
+                        words.iter().map(|&w| swar_relu(w, fmt)).collect();
+                    relu_slice(kern, &mut words, fmt);
+                    assert_eq!(words, want, "kernel {} fmt {fmt} len {len}", kern.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn repack_hop_tiles_matches_canonical_on_every_direct_pair() {
+        // Full multi-tile streams, tile tails, partial final words and
+        // the count-zero-padding contract — all against both the
+        // canonical per-value repack and the scalar gather.
+        let mut rng = XorShift64::new(0x51D0_0003);
+        let mut wide = Vec::new();
+        let mut scalar = Vec::new();
+        for a in SimdFormat::all() {
+            for b in SimdFormat::all() {
+                if a == b || !is_direct(a, b) {
+                    continue;
+                }
+                for n_words in [1usize, 4, 5, 9] {
+                    let words: Vec<u64> = (0..n_words).map(|_| rng.word()).collect();
+                    let full = n_words * a.lanes() as usize;
+                    for count in [full, full - 1, full / 2 + 1, 1] {
+                        repack_hop_tiles(&words, a, b, count, &mut wide);
+                        assert_eq!(
+                            wide,
+                            repack_stream(&words, a, b, count),
+                            "{a}->{b} count {count}"
+                        );
+                        repack_hop_into(&words, a, b, count, &mut scalar);
+                        assert_eq!(wide, scalar, "{a}->{b} count {count} vs scalar");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn detected_kernel_is_stable_and_named() {
+        assert_eq!(kernel(), kernel(), "detection must be cached");
+        assert!(!kernel().name().is_empty());
+        assert!(kernels().contains(&Kernel::portable()));
+    }
+}

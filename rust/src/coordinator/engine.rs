@@ -58,6 +58,24 @@
 //! and is billed no datapath cycles, exactly like the first layer's
 //! batch pack (DESIGN.md §12).
 //!
+//! **Execution backends (DESIGN.md §16).** Under `--features simd` the
+//! same core runs the flat micro-op stream on [`TILE`] packed words per
+//! instruction through the host-vector kernels of
+//! [`crate::bits::swarx`] (AVX2 when the host has it, a portable
+//! unrolled kernel otherwise), with the scalar loop covering the
+//! sub-tile tail of every column. The backend choice changes **nothing
+//! observable**: outputs are bit-exact and `EngineStats` is identical
+//! to the scalar core (and therefore to the PR 7 cost certificate),
+//! because billing is derived from the micro-op stream — the same
+//! bytes execute on either backend, only more words per dispatch.
+//! `lanecheck` builds pin the scalar path at compile time (the
+//! sanitizer's hooks are word-at-a-time); `billaudit` audits the
+//! vector path unchanged. [`PackedEngine::forward_batch_into_scalar`]
+//! keeps the scalar core reachable in-process as the differential
+//! baseline.
+//!
+//! [`TILE`]: crate::bits::swarx::TILE
+//!
 //! The engine owns no weights and compiles no plans: it executes a
 //! shared immutable [`CompiledModel`] (DESIGN.md §8). Batches are padded
 //! with zero rows up to the model's batch quantum (the LCM of every
@@ -215,6 +233,39 @@ fn gather_conv_column<F: Fn(usize, usize) -> i64>(
     }
 }
 
+/// Which execution backend runs the flat core (DESIGN.md §16). The
+/// `Wide` variant exists only when the host-vector backend is compiled
+/// in **and** the lane sanitizer is not: `lanecheck`'s per-word hooks
+/// live in the scalar SWAR primitives, so sanitizer builds are pinned
+/// to the scalar path by construction — `--features lanecheck,simd`
+/// compiles, runs scalar, and records identically to plain `lanecheck`.
+#[derive(Debug, Clone, Copy)]
+enum Exec {
+    Scalar,
+    #[cfg(all(feature = "simd", not(feature = "lanecheck")))]
+    Wide(crate::bits::swarx::Kernel),
+}
+
+/// One boundary/widen crossbar hop on the selected backend. Both forms
+/// produce identical bits; only the gather's inner-loop shape differs.
+#[inline]
+fn hop_into(
+    exec: Exec,
+    src: &[u64],
+    from: SimdFormat,
+    to: SimdFormat,
+    count: usize,
+    dst: &mut Vec<u64>,
+) {
+    match exec {
+        Exec::Scalar => repack_hop_into(src, from, to, count, dst),
+        #[cfg(all(feature = "simd", not(feature = "lanecheck")))]
+        Exec::Wide(_) => {
+            crate::pipeline::stage2::repack_hop_into_wide(src, from, to, count, dst)
+        }
+    }
+}
+
 /// A packed-execution engine bound to one PE, sharing one compiled model.
 pub struct PackedEngine {
     model: Arc<CompiledModel>,
@@ -222,6 +273,10 @@ pub struct PackedEngine {
 
 /// The engine's pre-conv name, kept so existing integrations keep
 /// compiling; new code should say [`PackedEngine`].
+#[deprecated(
+    since = "0.1.0",
+    note = "renamed to `PackedEngine` when conv support landed; use `PackedEngine`"
+)]
 pub type PackedMlpEngine = PackedEngine;
 
 impl PackedEngine {
@@ -287,6 +342,42 @@ impl PackedEngine {
         variant: usize,
         scratch: &mut EngineScratch,
         out: &mut Vec<Vec<i64>>,
+    ) -> EngineStats {
+        // Backend resolution is compile-time + one cached feature probe:
+        // the host-vector backend when compiled in (and the lane
+        // sanitizer out — its hooks are scalar-word-at-a-time), the
+        // scalar core otherwise.
+        #[cfg(all(feature = "simd", not(feature = "lanecheck")))]
+        let exec = Exec::Wide(crate::bits::swarx::kernel());
+        #[cfg(not(all(feature = "simd", not(feature = "lanecheck"))))]
+        let exec = Exec::Scalar;
+        self.forward_batch_exec(batch, variant, scratch, out, exec)
+    }
+
+    /// As [`forward_batch_into`], forcing the scalar core even when the
+    /// `simd` backend is compiled in — the in-process bit-exact baseline
+    /// the property tests and benches difference the vector path
+    /// against (DESIGN.md §16).
+    ///
+    /// [`forward_batch_into`]: PackedEngine::forward_batch_into
+    #[cfg(feature = "simd")]
+    pub fn forward_batch_into_scalar(
+        &self,
+        batch: &[Vec<i64>],
+        variant: usize,
+        scratch: &mut EngineScratch,
+        out: &mut Vec<Vec<i64>>,
+    ) -> EngineStats {
+        self.forward_batch_exec(batch, variant, scratch, out, Exec::Scalar)
+    }
+
+    fn forward_batch_exec(
+        &self,
+        batch: &[Vec<i64>],
+        variant: usize,
+        scratch: &mut EngineScratch,
+        out: &mut Vec<Vec<i64>>,
+        exec: Exec,
     ) -> EngineStats {
         let model = &*self.model;
         let var = model.variant(variant);
@@ -419,7 +510,43 @@ impl PackedEngine {
                         // one accumulate add and one widen pass per
                         // produced accumulator word (always both, once
                         // the batch is padded to the batch quantum).
-                        for (wi, &word) in x_col.iter().enumerate() {
+                        // The wide backend runs whole tiles through
+                        // `run_flat_tile` first; the scalar loop covers
+                        // the sub-tile tail from `start` — same words,
+                        // same counter increments, either way.
+                        let start = match exec {
+                            Exec::Scalar => 0,
+                            #[cfg(all(feature = "simd", not(feature = "lanecheck")))]
+                            Exec::Wide(kern) => {
+                                use crate::bits::swarx::TILE;
+                                for (ti, c) in x_col.chunks_exact(TILE).enumerate() {
+                                    let p = s1.run_flat_tile(
+                                        kern,
+                                        [c[0], c[1], c[2], c[3]],
+                                        ops,
+                                    );
+                                    for (j, &pw) in p.iter().enumerate() {
+                                        let wi = ti * TILE + j;
+                                        let (lo, hi) = widen_double(pw, in_fmt);
+                                        acc_col[2 * wi] =
+                                            swar_add(acc_col[2 * wi], lo, acc_fmt);
+                                        stats.acc_adds += 1;
+                                        stats.note_s2(acc_fmt, 1);
+                                        if 2 * wi + 1 < acc_words {
+                                            acc_col[2 * wi + 1] = swar_add(
+                                                acc_col[2 * wi + 1],
+                                                hi,
+                                                acc_fmt,
+                                            );
+                                            stats.acc_adds += 1;
+                                            stats.note_s2(acc_fmt, 1);
+                                        }
+                                    }
+                                }
+                                x_col.len() - x_col.len() % TILE
+                            }
+                        };
+                        for (wi, &word) in x_col.iter().enumerate().skip(start) {
                             let p = s1.run_flat(word, ops);
                             let (lo, hi) = widen_double(p, in_fmt);
                             acc_col[2 * wi] = swar_add(acc_col[2 * wi], lo, acc_fmt);
@@ -435,7 +562,27 @@ impl PackedEngine {
                     } else if in_fmt == acc_fmt {
                         // Equal widths: the product words accumulate
                         // as-is — no conversion happens, none is billed.
-                        for (wi, &word) in x_col.iter().enumerate() {
+                        let start = match exec {
+                            Exec::Scalar => 0,
+                            #[cfg(all(feature = "simd", not(feature = "lanecheck")))]
+                            Exec::Wide(kern) => {
+                                use crate::bits::swarx::TILE;
+                                for (ti, c) in x_col.chunks_exact(TILE).enumerate() {
+                                    let p = s1.run_flat_tile(
+                                        kern,
+                                        [c[0], c[1], c[2], c[3]],
+                                        ops,
+                                    );
+                                    for (j, &pw) in p.iter().enumerate() {
+                                        let wi = ti * TILE + j;
+                                        acc_col[wi] = swar_add(acc_col[wi], pw, acc_fmt);
+                                        stats.acc_adds += 1;
+                                    }
+                                }
+                                x_col.len() - x_col.len() % TILE
+                            }
+                        };
+                        for (wi, &word) in x_col.iter().enumerate().skip(start) {
                             let p = s1.run_flat(word, ops);
                             acc_col[wi] = swar_add(acc_col[wi], p, acc_fmt);
                             stats.acc_adds += 1;
@@ -448,11 +595,27 @@ impl PackedEngine {
                         // batch padded to the quantum, `acc_words` ==
                         // `repack_cycles_exact(rows, in_fmt, acc_fmt)`.
                         prod.clear();
-                        for &word in x_col {
+                        let start = match exec {
+                            Exec::Scalar => 0,
+                            #[cfg(all(feature = "simd", not(feature = "lanecheck")))]
+                            Exec::Wide(kern) => {
+                                use crate::bits::swarx::TILE;
+                                for c in x_col.chunks_exact(TILE) {
+                                    let p = s1.run_flat_tile(
+                                        kern,
+                                        [c[0], c[1], c[2], c[3]],
+                                        ops,
+                                    );
+                                    prod.extend_from_slice(&p);
+                                }
+                                x_col.len() - x_col.len() % TILE
+                            }
+                        };
+                        for &word in &x_col[start..] {
                             prod.push(s1.run_flat(word, ops));
                         }
                         stats.note_s2(acc_fmt, acc_words as u64);
-                        repack_hop_into(prod, in_fmt, acc_fmt, rows, wide);
+                        hop_into(exec, prod, in_fmt, acc_fmt, rows, wide);
                         for (dst, &p) in acc_col.iter_mut().zip(wide.iter()) {
                             *dst = swar_add(*dst, p, acc_fmt);
                             stats.acc_adds += 1;
@@ -500,17 +663,29 @@ impl PackedEngine {
                 }
                 for n in 0..w.n {
                     let span = n * acc_words..(n + 1) * acc_words;
-                    for word in acc[span.clone()].iter_mut() {
-                        *word = swar_relu(*word, acc_fmt);
+                    match exec {
+                        Exec::Scalar => {
+                            for word in acc[span.clone()].iter_mut() {
+                                *word = swar_relu(*word, acc_fmt);
+                            }
+                        }
+                        #[cfg(all(feature = "simd", not(feature = "lanecheck")))]
+                        Exec::Wide(kern) => {
+                            crate::bits::swarx::relu_slice(
+                                kern,
+                                &mut acc[span.clone()],
+                                acc_fmt,
+                            );
+                        }
                     }
                     let acc_col = &acc[span];
                     let converted: &[u64] = if chain.is_empty() {
                         acc_col
                     } else {
-                        repack_hop_into(acc_col, chain[0].0, chain[0].1, rows, wide);
+                        hop_into(exec, acc_col, chain[0].0, chain[0].1, rows, wide);
                         for &(f, t) in &chain[1..] {
                             std::mem::swap(wide, stage);
-                            repack_hop_into(stage, f, t, rows, wide);
+                            hop_into(exec, stage, f, t, rows, wide);
                         }
                         wide.as_slice()
                     };

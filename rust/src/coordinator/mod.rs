@@ -45,7 +45,11 @@ pub mod server;
 
 pub use batcher::{Batch, Batcher, TrackedRequest};
 pub use cost::CostTable;
-pub use engine::{EngineScratch, EngineStats, PackedEngine, PackedMlpEngine};
+pub use engine::{EngineScratch, EngineStats, PackedEngine};
+// The deprecated pre-conv alias stays re-exported for downstream
+// compatibility; the `allow` keeps this crate's own build clean.
+#[allow(deprecated)]
+pub use engine::PackedMlpEngine;
 pub use governor::{CertifiedCosts, GovernorPolicy, LoadSignals, PinnedVariant, SloPolicy};
 pub use metrics::{Metrics, MetricsSnapshot, VariantMetrics};
 pub use model::{CompiledModel, Variant, VariantSet, VariantSpec};

@@ -818,6 +818,12 @@ fn worker_loop(
     // owns one EngineScratch plus gather/output buffers for its whole
     // lifetime, warmed by the first batch and reused across requests
     // (DESIGN.md §11). Only the Response assembly below allocates.
+    // Under `--features simd` the engine picks the host-vector backend
+    // inside `forward_batch_into` with no scratch-shape change: the
+    // batch quantum already yields whole packed words and sub-tile
+    // tails are handled in the engine's MAC loops, so the worker (and
+    // the billing it reports) sees only real words either way
+    // (DESIGN.md §16).
     let mut scratch = crate::coordinator::engine::EngineScratch::new();
     let mut logits: Vec<Vec<i64>> = Vec::new();
     let mut rows_buf: Vec<Vec<i64>> = Vec::new();

@@ -26,6 +26,14 @@
 //! [`FlatPlan`] header per *kernel weight* is shared across every
 //! output pixel of every image — the header count scales with the
 //! kernel tensor, never with the spatial extent it slides over.
+//!
+//! The byte stream is also backend-neutral: under `--features simd`
+//! the host-vector backend (`bits::swarx`, DESIGN.md §16) executes the
+//! *same* headers and bytes on `TILE` packed words per instruction —
+//! the engine dispatches whole word tiles over each [`FlatPlan`] and
+//! the scalar loop covers the sub-tile tail, so `cycles`/`adds` bill
+//! identically on either backend (one op byte = one cycle per word,
+//! whatever the dispatch width).
 
 use super::schedule::{MulOp, MulPlan};
 

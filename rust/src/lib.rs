@@ -24,10 +24,19 @@
 //! * [`analysis`] — static lane-safety verification of precision
 //!   schedules (DESIGN.md §14).
 
+// The nightly `std::simd` variant of the host-vector backend
+// (`--features simd-nightly`; `bits::swarx`) needs the portable_simd
+// gate. Stable builds (including `--features simd`) never see this.
+#![cfg_attr(feature = "simd-nightly", feature(portable_simd))]
 // Lane isolation is enforced by software masks; an `unsafe` block could
 // sidestep both them and the verifier, so the crate denies unsafe code.
-// The single documented exception is `testutil::CountingAlloc`
-// (implementing `GlobalAlloc` is inherently unsafe).
+// Documented allowlist (each site carries its own `allow` + safety
+// rationale):
+//  * `testutil::CountingAlloc` — implementing `GlobalAlloc` is
+//    inherently unsafe;
+//  * `bits::swarx::avx2` (`--features simd`) — stable AVX2 intrinsics
+//    behind `#[target_feature]`, reachable only after run-time
+//    `is_x86_feature_detected!` dispatch.
 #![deny(unsafe_code)]
 // New modules are fully documented; the pre-existing modules below
 // carry per-module `allow`s until their item docs are backfilled

@@ -116,6 +116,33 @@ impl Stage1 {
         self.acc
     }
 
+    /// Execute a flattened micro-op slice on [`TILE`] multiplicand
+    /// words at once through the host-vector backend (`--features
+    /// simd`, DESIGN.md §16) — bit-exact per word against
+    /// [`Stage1::run_flat`]. The counters are billed from the op
+    /// stream itself (`ops.len()` cycles and one add per `FLAT_ADD`
+    /// byte, × `TILE` words), which is the same arithmetic the scalar
+    /// loop performs — the datapath cycle count stays the one source
+    /// of truth for `EngineStats` on either backend.
+    ///
+    /// [`TILE`]: crate::bits::swarx::TILE
+    #[cfg(feature = "simd")]
+    #[inline]
+    pub fn run_flat_tile(
+        &mut self,
+        kern: crate::bits::swarx::Kernel,
+        x: crate::bits::swarx::Tile,
+        ops: &[u8],
+    ) -> crate::bits::swarx::Tile {
+        use crate::csd::flat::FLAT_ADD;
+        let out = crate::bits::swarx::run_flat_tile(kern, x, ops, self.fmt);
+        let tile = crate::bits::swarx::TILE as u64;
+        self.cycles += ops.len() as u64 * tile;
+        self.add_cycles +=
+            ops.iter().filter(|&&op| op & FLAT_ADD != 0).count() as u64 * tile;
+        out
+    }
+
     /// Read and reset the cycle counters.
     ///
     /// The counters deliberately *accumulate* across `run_plan`/`run_flat`

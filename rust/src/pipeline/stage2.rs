@@ -178,6 +178,23 @@ pub fn repack_hop_into(
     }
 }
 
+/// Host-vector form of [`repack_hop_into`] (`--features simd`,
+/// DESIGN.md §16): same signature, same output bits, but the gather is
+/// specialized to branch-free full output words and `TILE`-unrolled in
+/// [`crate::bits::swarx::repack_hop_tiles`]. No `lanecheck` hooks — the
+/// engine pins sanitizer builds to the scalar path at compile time.
+#[cfg(feature = "simd")]
+#[inline]
+pub fn repack_hop_into_wide(
+    src: &[u64],
+    from: SimdFormat,
+    to: SimdFormat,
+    count: usize,
+    dst: &mut Vec<u64>,
+) {
+    crate::bits::swarx::repack_hop_tiles(src, from, to, count, dst);
+}
+
 /// Fast path for the doubling widen `b → 2b` (the multiply→accumulate
 /// conversion on the NN hot path): one input word expands into exactly
 /// two output words, each sub-word value-aligned (`<< b`) in its slot.
@@ -414,6 +431,40 @@ mod tests {
                             repack_stream(&words, a, b, count),
                             "{a}->{b} count {count}"
                         );
+                    }
+                }
+            }
+        }
+    }
+
+    /// The wide gather is a drop-in for the scalar one on every direct
+    /// pair (DESIGN.md §16) — full words, tile tails and the zero-padded
+    /// partial final word included.
+    #[cfg(feature = "simd")]
+    #[test]
+    fn repack_hop_into_wide_matches_scalar_on_every_direct_pair() {
+        let mut state = 0xD00D_F00D_5678u64;
+        let mut scalar = Vec::new();
+        let mut wide = Vec::new();
+        for a in SimdFormat::all() {
+            for b in SimdFormat::all() {
+                if a == b || !is_direct(a, b) {
+                    continue;
+                }
+                for n_words in [1usize, 2, 5, 9] {
+                    let words: Vec<u64> = (0..n_words)
+                        .map(|_| {
+                            state ^= state << 13;
+                            state ^= state >> 7;
+                            state ^= state << 17;
+                            state & crate::bits::format::WORD_MASK
+                        })
+                        .collect();
+                    let full = n_words * a.lanes() as usize;
+                    for count in [full, full - 1, full / 2 + 1, 1] {
+                        repack_hop_into(&words, a, b, count, &mut scalar);
+                        repack_hop_into_wide(&words, a, b, count, &mut wide);
+                        assert_eq!(wide, scalar, "{a}->{b} count {count}");
                     }
                 }
             }

@@ -217,4 +217,44 @@ fn forward_batch_is_allocation_free_after_warmup() {
         );
         assert_eq!(out.len(), rows);
     }
+
+    // Host-vector backend (`--features simd`, DESIGN.md §16): the wide
+    // MAC tile loops, the vectorized boundary ReLU and the wide repack
+    // must all run out of the same warmed scratch — zero steady-state
+    // allocations through the wide entry point *and* the forced-scalar
+    // baseline, interleaved on one scratch (the bench's differencing
+    // pattern). The mixed 4-12 / 6-12 / 8-16 schedule covers all three
+    // MAC paths; 96 rows gives every layer at least two full tiles
+    // plus a tail word.
+    #[cfg(feature = "simd")]
+    {
+        let mut rng5 = XorShift64::new(0xA1114);
+        let layers = random_layers(&mut rng5, &[16, 12, 8, 4]);
+        let sched = vec![
+            LayerPrecision::new(4, 12),
+            LayerPrecision::new(6, 12),
+            LayerPrecision::new(8, 16),
+        ];
+        let model = CompiledModel::compile_scheduled(layers, sched).unwrap();
+        let engine = PackedEngine::new(model);
+        let batch: Vec<Vec<i64>> = (0..96)
+            .map(|_| (0..16).map(|_| rng5.q_raw(4)).collect())
+            .collect();
+        let mut scratch = EngineScratch::new();
+        let mut out = Vec::new();
+        engine.forward_batch_into(&batch, 0, &mut scratch, &mut out);
+        engine.forward_batch_into_scalar(&batch, 0, &mut scratch, &mut out);
+        for &rows in &[96usize, 24, 1, 96] {
+            let before = CountingAlloc::count();
+            engine.forward_batch_into(&batch[..rows], 0, &mut scratch, &mut out);
+            engine.forward_batch_into_scalar(&batch[..rows], 0, &mut scratch, &mut out);
+            let after = CountingAlloc::count();
+            assert_eq!(
+                after - before,
+                0,
+                "simd backend: batch of {rows} rows allocated after warmup"
+            );
+            assert_eq!(out.len(), rows);
+        }
+    }
 }

@@ -1,0 +1,288 @@
+//! Property tests for the host-vector execution backend
+//! (`--features simd`, DESIGN.md §16).
+//!
+//! The backend claims to be **observably identical** to the scalar
+//! core: for any interleaved conv + dense stack, any variant of the
+//! standard trio, and any batch size — including m = 1 and sizes whose
+//! packed word counts straddle the `TILE`-word tile boundary (tile-only,
+//! tail-only, and mixed columns) — the vector path must produce
+//! bit-exact logits and an `EngineStats` equal on every field to both
+//! the scalar core and the static cost certificate. Under
+//! `--features lanecheck,simd` the build must pin the scalar path and
+//! record identically to plain `lanecheck`; under `billaudit` the
+//! auditor must stay silent over the vector path.
+
+use softsimd::bits::swarx::TILE;
+use softsimd::coordinator::engine::{EngineScratch, PackedEngine};
+use softsimd::coordinator::model::{CompiledModel, VariantSpec};
+use softsimd::nn::conv::{ConvShape, LayerOp};
+use softsimd::nn::exec::stack_forward_row;
+use softsimd::testutil::{
+    random_batch, random_conv_for_shape, random_conv_shape, random_dense,
+};
+use softsimd::workload::synth::XorShift64;
+
+/// A valid conv geometry over a *fixed* input tensor `(cin, h, w)` —
+/// random kernel/stride/padding, falling back to the always-valid 1×1
+/// kernel (same generator as tests/cost_cert.rs; integration tests
+/// cannot import each other).
+fn conv_shape_from(rng: &mut XorShift64, cin: usize, h: usize, w: usize) -> ConvShape {
+    for _ in 0..64 {
+        let kh = 1 + (rng.next_u64() % 3) as usize;
+        let kw = 1 + (rng.next_u64() % 3) as usize;
+        let shape = ConvShape {
+            cin,
+            h,
+            w,
+            cout: 1 + (rng.next_u64() % 3) as usize,
+            kh,
+            kw,
+            stride: 1 + (rng.next_u64() % 2) as usize,
+            pad: (rng.next_u64() % kh.min(kw) as u64) as usize,
+        };
+        if shape.validate().is_ok() {
+            return shape;
+        }
+    }
+    ConvShape { cin, h, w, cout: 1, kh: 1, kw: 1, stride: 1, pad: 0 }
+}
+
+/// A random interleaved conv + dense stack with chaining widths (conv
+/// input geometry decided one layer ahead) and exact zero weights
+/// sprinkled in so the zero-skip runs on both backends.
+fn random_mixed_stack(rng: &mut XorShift64, n_layers: usize, w_bits: u32) -> Vec<LayerOp> {
+    let kinds: Vec<bool> = (0..n_layers).map(|_| rng.next_u64() % 2 == 0).collect();
+    let mut ops: Vec<LayerOp> = Vec::new();
+    let mut pending: Option<ConvShape> = None;
+    let mut width = 0usize;
+    for i in 0..n_layers {
+        if kinds[i] {
+            let shape = match pending.take() {
+                Some(s) => s,
+                None => match ops.last() {
+                    Some(LayerOp::Conv(c)) => {
+                        let p = c.shape;
+                        conv_shape_from(rng, p.cout, p.out_h(), p.out_w())
+                    }
+                    Some(LayerOp::Dense(_)) => {
+                        unreachable!("dense-before-conv always sets `pending`")
+                    }
+                    None => random_conv_shape(rng, 1 + (rng.next_u64() % 2) as usize),
+                },
+            };
+            width = shape.out_len();
+            ops.push(LayerOp::Conv(random_conv_for_shape(rng, shape, w_bits)));
+        } else {
+            let out = if i + 1 < n_layers && kinds[i + 1] {
+                let s = random_conv_shape(rng, 1 + (rng.next_u64() % 2) as usize);
+                pending = Some(s);
+                s.in_len()
+            } else {
+                1 + (rng.next_u64() % 5) as usize
+            };
+            let k = if i == 0 { 2 + (rng.next_u64() % 5) as usize } else { width };
+            let mut dense = random_dense(rng, k, out, w_bits);
+            for row in &mut dense.w_raw {
+                for w in row.iter_mut() {
+                    if rng.next_u64() % 5 == 0 {
+                        *w = 0;
+                    }
+                }
+            }
+            ops.push(LayerOp::Dense(dense));
+            width = out;
+        }
+    }
+    ops
+}
+
+/// Batch sizes that straddle the tile boundary for this variant: m = 1
+/// (pad-heavy single row), a sub-quantum size, one exact quantum
+/// (usually a sub-tile word count → tail-only columns), quantum + 1,
+/// and `2·TILE` quanta ± 1 so per-column word counts cover tile-only,
+/// mixed tile + tail, and the off-by-one straddles.
+fn straddling_sizes(rng: &mut XorShift64, q: usize) -> [usize; 6] {
+    [
+        1,
+        1 + (rng.next_u64() % 20) as usize,
+        q,
+        q + 1,
+        2 * TILE * q,
+        2 * TILE * q + 1,
+    ]
+}
+
+/// The tentpole contract: vector path ≡ scalar core ≡ certificate, on
+/// logits and on every `EngineStats` field, across random stacks ×
+/// the standard trio × tile-straddling batch sizes.
+#[test]
+fn wide_backend_is_bit_exact_and_certificate_exact() {
+    let mut rng = XorShift64::new(0x51D0_BEEF);
+    let mut scratch = EngineScratch::new();
+    let mut wide_out = Vec::new();
+    let mut scalar_out = Vec::new();
+    for case in 0..10 {
+        let n_layers = 1 + (rng.next_u64() % 4) as usize;
+        let ops = random_mixed_stack(&mut rng, n_layers, 8);
+        let specs = VariantSpec::standard_trio(n_layers);
+        let oracle_ops = ops.clone();
+        let oracle_scheds: Vec<_> = specs.iter().map(|s| s.schedule.clone()).collect();
+        let model = CompiledModel::compile_variants(ops, specs)
+            .unwrap_or_else(|e| panic!("case {case}: compile failed: {e}"));
+        let in_width = model.input_width();
+        let engine = PackedEngine::new(model);
+        for v in 0..engine.model().n_variants() {
+            let var = engine.model().variant(v);
+            let cert = engine.model().cost_certificate(v);
+            let q = cert.batch_quantum;
+            for m in straddling_sizes(&mut rng, q) {
+                let batch: Vec<Vec<i64>> = random_batch(&mut rng, m, in_width, 8)
+                    .iter()
+                    .map(|r| var.quantize_row(r))
+                    .collect();
+                let wide_stats =
+                    engine.forward_batch_into(&batch, v, &mut scratch, &mut wide_out);
+                let scalar_stats = engine.forward_batch_into_scalar(
+                    &batch,
+                    v,
+                    &mut scratch,
+                    &mut scalar_out,
+                );
+                assert_eq!(
+                    wide_out, scalar_out,
+                    "case {case} variant {v} m={m}: logits diverge from scalar core"
+                );
+                assert_eq!(
+                    wide_stats, scalar_stats,
+                    "case {case} variant {v} m={m}: stats diverge from scalar core"
+                );
+                // Zero-aJ billing delta: the certificate *is* the
+                // scalar core's billing, field- and bucket-exact.
+                assert_eq!(
+                    cert.eval_stats(m),
+                    wide_stats,
+                    "case {case} variant {v} m={m}: stats diverge from certificate"
+                );
+                // Ground truth on a head sample of rows (the full batch
+                // is already pinned by the scalar-core equality above).
+                for (b, row) in batch.iter().enumerate().take(3) {
+                    let want = stack_forward_row(row, &oracle_ops, &oracle_scheds[v]);
+                    assert_eq!(
+                        wide_out[b], want,
+                        "case {case} variant {v} m={m} row {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Tail coverage at the word level: a batch quantum's worth of rows is
+/// often a sub-`TILE` number of packed words per column, and growing
+/// the batch one quantum at a time sweeps word counts 1, 2, …, 2·TILE —
+/// every split between the tile loop and the scalar tail, on one model.
+#[test]
+fn every_tile_tail_split_matches_scalar() {
+    let mut rng = XorShift64::new(0x51D0_7A11);
+    let ops = random_mixed_stack(&mut rng, 2, 8);
+    let model = CompiledModel::compile_variants(ops, VariantSpec::standard_trio(2))
+        .expect("valid stack");
+    let in_width = model.input_width();
+    let engine = PackedEngine::new(model);
+    let mut scratch = EngineScratch::new();
+    let mut wide_out = Vec::new();
+    let mut scalar_out = Vec::new();
+    for v in 0..engine.model().n_variants() {
+        let var = engine.model().variant(v);
+        let q = engine.model().cost_certificate(v).batch_quantum;
+        for words in 1..=(2 * TILE) {
+            let m = words * q;
+            let batch: Vec<Vec<i64>> = random_batch(&mut rng, m, in_width, 8)
+                .iter()
+                .map(|r| var.quantize_row(r))
+                .collect();
+            let ws = engine.forward_batch_into(&batch, v, &mut scratch, &mut wide_out);
+            let ss =
+                engine.forward_batch_into_scalar(&batch, v, &mut scratch, &mut scalar_out);
+            assert_eq!(wide_out, scalar_out, "variant {v} {words} quanta");
+            assert_eq!(ws, ss, "variant {v} {words} quanta");
+        }
+    }
+}
+
+/// `--features lanecheck,simd` must build, pin the scalar path at
+/// compile time, and record *identically* through both entry points —
+/// same violation count, same outputs (satellite 1).
+#[cfg(feature = "lanecheck")]
+#[test]
+fn lanecheck_pins_scalar_path_and_records_identically() {
+    use softsimd::bits::lanecheck;
+    let mut rng = XorShift64::new(0x51D0_1A9E);
+    let ops = random_mixed_stack(&mut rng, 3, 8);
+    let model = CompiledModel::compile_variants(ops, VariantSpec::standard_trio(3))
+        .expect("valid stack");
+    let in_width = model.input_width();
+    let engine = PackedEngine::new(model);
+    let mut scratch = EngineScratch::new();
+    let mut out_a = Vec::new();
+    let mut out_b = Vec::new();
+    for v in 0..engine.model().n_variants() {
+        let var = engine.model().variant(v);
+        let batch: Vec<Vec<i64>> = random_batch(&mut rng, 9, in_width, 8)
+            .iter()
+            .map(|r| var.quantize_row(r))
+            .collect();
+        lanecheck::reset();
+        let stats_a = engine.forward_batch_into(&batch, v, &mut scratch, &mut out_a);
+        let count_a = lanecheck::count();
+        lanecheck::reset();
+        let stats_b =
+            engine.forward_batch_into_scalar(&batch, v, &mut scratch, &mut out_b);
+        let count_b = lanecheck::count();
+        assert_eq!(out_a, out_b, "variant {v}");
+        assert_eq!(stats_a, stats_b, "variant {v}");
+        assert_eq!(
+            count_a, count_b,
+            "variant {v}: the sanitizer must see the same scalar execution \
+             through both entry points"
+        );
+        lanecheck::reset();
+    }
+}
+
+/// `billaudit` runs unchanged over the vector path: the differential
+/// auditor must stay silent on every wide batch (satellite 1) — zero
+/// divergences means zero-aJ billing delta, since energy is priced
+/// from the very stats the auditor compares.
+#[cfg(feature = "billaudit")]
+#[test]
+fn billing_auditor_is_silent_over_the_wide_path() {
+    use softsimd::analysis::cost::audit;
+    let mut rng = XorShift64::new(0x51D0_B111);
+    audit::reset();
+    let mut scratch = EngineScratch::new();
+    let mut out = Vec::new();
+    for _ in 0..5 {
+        let n_layers = 1 + (rng.next_u64() % 3) as usize;
+        let ops = random_mixed_stack(&mut rng, n_layers, 8);
+        let model =
+            CompiledModel::compile_variants(ops, VariantSpec::standard_trio(n_layers))
+                .expect("valid stack");
+        let in_width = model.input_width();
+        let engine = PackedEngine::new(model);
+        for v in 0..engine.model().n_variants() {
+            let var = engine.model().variant(v);
+            let q = engine.model().cost_certificate(v).batch_quantum;
+            for m in [1, q * TILE, q * TILE + 1] {
+                let batch: Vec<Vec<i64>> = random_batch(&mut rng, m, in_width, 8)
+                    .iter()
+                    .map(|r| var.quantize_row(r))
+                    .collect();
+                // The engine audits every batch against the certificate
+                // on its own under `billaudit` — on the wide path too.
+                let _ = engine.forward_batch_into(&batch, v, &mut scratch, &mut out);
+            }
+        }
+    }
+    assert_eq!(audit::count(), 0, "divergences: {:?}", audit::take());
+}
