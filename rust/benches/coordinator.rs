@@ -94,7 +94,7 @@ fn serve_cell(
 ) -> Cell {
     let policy = policy_name(cfg.policy);
     let pes = cfg.n_pes;
-    let mut coord = Coordinator::start(Arc::clone(model), cfg, cost.clone());
+    let mut coord = Coordinator::start(Arc::clone(model), cfg, cost.clone()).expect("start");
     for req in reqs {
         coord.submit(req.clone()).expect("live workers");
     }
@@ -207,7 +207,8 @@ fn main() {
             Arc::clone(&model),
             ServeConfig::new(2, 12),
             cost.clone(),
-        );
+        )
+        .expect("start");
         for (id, row) in rows.iter().enumerate() {
             coord
                 .submit(Request { id: id as u64, rows: vec![row.clone()] })

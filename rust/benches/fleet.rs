@@ -1,0 +1,50 @@
+//! Fleet serving benchmark: drives the same 2-model × 3-tenant
+//! light → burst → light trace as `eval fleet` (DESIGN.md §17) and
+//! records one JSON cell per (phase, tenant) with throughput, windowed
+//! p99, billed energy per row and the admission shed rate.
+//!
+//! Run: `cargo bench --bench fleet` — writes `BENCH_fleet.json`.
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use benchkit::write_cells;
+use softsimd::eval::fleet::run_scenario;
+
+fn main() {
+    println!("== fleet serving bench: 2 models x 3 tenant classes ==\n");
+    let stats = run_scenario().expect("fleet scenario");
+    println!(
+        "{:<10} {:<12} {:>9} {:>6} {:>7} {:>10} {:>9} {:>8} {:>10}",
+        "phase", "tenant", "admitted", "shed", "rows", "rows/s", "p99 us", "pJ/row", "shed rate"
+    );
+    let mut cells = Vec::new();
+    for s in &stats {
+        println!(
+            "{:<10} {:<12} {:>9} {:>6} {:>7} {:>10.0} {:>9.1} {:>8.1} {:>10.2}",
+            s.phase,
+            s.tenant,
+            s.requests,
+            s.shed,
+            s.rows,
+            s.rows_per_s,
+            s.p99_us,
+            s.pj_per_row,
+            s.shed_rate
+        );
+        cells.push(format!(
+            "{{\"phase\":\"{}\",\"tenant\":\"{}\",\"admitted\":{},\"shed\":{},\"rows\":{},\
+             \"rows_per_s\":{:.1},\"p99_us\":{:.2},\"pj_per_row\":{:.3},\"shed_rate\":{:.4}}}",
+            s.phase,
+            s.tenant,
+            s.requests,
+            s.shed,
+            s.rows,
+            s.rows_per_s,
+            s.p99_us,
+            s.pj_per_row,
+            s.shed_rate
+        ));
+    }
+    write_cells("fleet", "BENCH_fleet.json", &cells);
+}

@@ -111,7 +111,8 @@ fn main() {
         .deadline(Duration::from_millis(2))
         .queue_depth(1);
     let mut coord =
-        Coordinator::start_with_policy(Arc::clone(&model), cfg, flat_cost(), Box::new(policy));
+        Coordinator::start_with_policy(Arc::clone(&model), cfg, flat_cost(), Box::new(policy))
+            .expect("start");
 
     let cells = vec![
         // Light open-loop traffic: the governor should hold hi-fi.

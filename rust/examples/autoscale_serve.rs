@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
         .deadline(Duration::from_millis(2))
         .queue_depth(1);
     let mut coord =
-        Coordinator::start_with_policy(Arc::clone(&model), cfg, cost, Box::new(policy));
+        Coordinator::start_with_policy(Arc::clone(&model), cfg, cost, Box::new(policy))?;
 
     let digits = Digits::standard();
     let mut next_id = 0u64;

@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
         );
         let in_bits = model.in_bits();
         let (xs, _labels) = images.sample(192, 0.25, 0xC99E2, in_bits);
-        let mut coord = Coordinator::start(model, ServeConfig::new(2, 12), cost.clone());
+        let mut coord = Coordinator::start(model, ServeConfig::new(2, 12), cost.clone())?;
         for (id, row) in xs.iter().enumerate() {
             coord.submit(Request { id: id as u64, rows: vec![row.clone()] })?;
         }

@@ -70,7 +70,7 @@ fn main() -> anyhow::Result<()> {
                 .join(", ")
         );
         let in_bits = model.in_bits();
-        let mut coord = Coordinator::start(model, ServeConfig::new(2, 12), cost.clone());
+        let mut coord = Coordinator::start(model, ServeConfig::new(2, 12), cost.clone())?;
         for id in 0..256u64 {
             coord.submit(Request {
                 id,

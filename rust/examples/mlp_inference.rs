@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     println!("[2/4] running the same batch on the packed PE array…");
     let cost = CostTable::characterize(1000.0);
     let model = CompiledModel::compile(layers.clone(), 8, 16)?;
-    let mut coord = Coordinator::start(model, ServeConfig::new(2, b), cost);
+    let mut coord = Coordinator::start(model, ServeConfig::new(2, b), cost)?;
     for (id, row) in xs.iter().enumerate() {
         coord.submit(Request { id: id as u64, rows: vec![row.clone()] })?;
     }

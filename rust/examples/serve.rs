@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
     let mut rng = XorShift64::new(0x5E2E);
 
     let cfg = ServeConfig::new(4, 12).deadline(Duration::from_millis(1));
-    let mut coord = Coordinator::start(model, cfg, cost);
+    let mut coord = Coordinator::start(model, cfg, cost)?;
     let t_start = Instant::now();
     let mut submitted = 0u64;
     while (submitted as usize) < n {

@@ -55,6 +55,12 @@ pub struct Batch {
     /// Precision variant this batch executes at. The worker bills this
     /// — the variant actually executed — never a later decision.
     pub variant: usize,
+    /// Tenant class whose lane formed this batch (fleet serving,
+    /// DESIGN.md §17). Lanes are per-tenant, so a batch is always
+    /// tenant-homogeneous; the worker bills the tenant's bucket and
+    /// tags every response with it. 0 — the only class — for the
+    /// single-tenant `Coordinator`.
+    pub tenant: usize,
 }
 
 /// Row-count batcher.
@@ -162,7 +168,7 @@ impl Batcher {
             self.retry_armed = false;
         }
         debug_assert_eq!(rows, entries.iter().map(|e| e.req.rows.len()).sum::<usize>());
-        Some(Batch { entries, rows, variant: 0 })
+        Some(Batch { entries, rows, variant: 0, tenant: 0 })
     }
 
     /// Put a formed batch back (dispatch failed); its rows go to the
@@ -206,7 +212,7 @@ impl Batcher {
         self.restored_pending = 0;
         let entries = std::mem::take(&mut self.pending);
         let rows = std::mem::take(&mut self.pending_rows);
-        Some(Batch { entries, rows, variant: 0 })
+        Some(Batch { entries, rows, variant: 0, tenant: 0 })
     }
 }
 
@@ -372,6 +378,7 @@ mod tests {
             entries: vec![req(11, 2), req(12, 2)],
             rows: 4,
             variant: 0,
+            tenant: 0,
         };
         c.restore(big);
         let first = c.push(req(13, 1)).expect("re-form");

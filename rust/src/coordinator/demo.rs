@@ -31,7 +31,7 @@ pub fn serve_demo(n: usize) -> anyhow::Result<()> {
     let digits = Digits::standard();
     let (xs, ys) = digits.sample(n, 0.3, 0x5E21E);
 
-    let mut coord = Coordinator::start(model, ServeConfig::new(4, 12), cost);
+    let mut coord = Coordinator::start(model, ServeConfig::new(4, 12), cost)?;
     let t0 = Instant::now();
     for (id, row) in xs.iter().enumerate() {
         coord.submit(Request { id: id as u64, rows: vec![row.clone()] })?;

@@ -271,14 +271,6 @@ pub struct PackedEngine {
     model: Arc<CompiledModel>,
 }
 
-/// The engine's pre-conv name, kept so existing integrations keep
-/// compiling; new code should say [`PackedEngine`].
-#[deprecated(
-    since = "0.1.0",
-    note = "renamed to `PackedEngine` when conv support landed; use `PackedEngine`"
-)]
-pub type PackedMlpEngine = PackedEngine;
-
 impl PackedEngine {
     /// Bind a PE to a shared compiled model. Cheap: no plan compilation
     /// and no weight copies happen here.

@@ -1,0 +1,1202 @@
+//! The fleet front end (DESIGN.md §17): multi-model, multi-tenant
+//! serving over the packed execution core.
+//!
+//! One [`Fleet`] hosts N compiled models — each with its own variant
+//! set, plan arena, and [`Metrics`] — behind a single admission layer.
+//! A request names its model and its tenant; admission validates it
+//! against that model, then applies the tenant's SLO-class budget:
+//! if the certified drain time ([`CertifiedCosts::est_drain_ns`]) of
+//! the rows the tenant *already* has queued exceeds the class's
+//! `drain_budget`, the request is refused with a typed
+//! [`ServeError::Shed`] — never a silent drop, never an unbounded
+//! queue. Admitted rows are routed to the least-loaded of the model's
+//! replicated PE pools (least-outstanding-rows promoted from
+//! per-worker to per-pool), where they land in the tenant's own
+//! batcher lane. Lanes keep tenants' batches disjoint, so a batch is
+//! always tenant-homogeneous: the PE worker that executes it bills the
+//! whole batch — energy, compute time, per-request latency — to that
+//! tenant's [`TenantMetrics`] bucket as well as the model's.
+//!
+//! Each (model, tenant) pair runs its **own** governor instance
+//! (default: the class's [`SloPolicy`] armed with the model's certified
+//! costs), windowing p99 over the tenant's own latency histogram — one
+//! tenant's burst pressures its own governor, not its neighbors'.
+//! Deadline ticks and drain flushes serve lanes in class-priority
+//! order, so an interactive class's stragglers flush before a bulk
+//! class's.
+//!
+//! The channel boundary is genuinely asynchronous: `submit` never
+//! waits for execution, completions arrive tagged with per-request ids
+//! in whatever order pools finish them, and [`Fleet::try_collect`] /
+//! [`Fleet::collect_timeout`] hand them back without blocking the
+//! submit path. [`Fleet::drain`] is the synchronous barrier the
+//! single-model [`Coordinator`] wrapper (server.rs) builds on.
+//!
+//! [`Coordinator`]: super::server::Coordinator
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
+};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::{Batch, Batcher, TrackedRequest};
+use super::cost::CostTable;
+use super::engine::{EngineScratch, PackedEngine};
+use super::governor::{CertifiedCosts, GovernorPolicy, LoadSignals, SloClass};
+use super::metrics::{Metrics, TenantMetrics, TenantSnapshot};
+use super::model::CompiledModel;
+use super::server::{Request, Response, ServeConfig, ServeError};
+
+/// Recover a mutex regardless of poisoning — for paths that must make
+/// progress after a panic elsewhere (teardown, observability, the
+/// deadline tick, writing off dead workers' counters). The guarded
+/// state is counters and queues that stay consistent across a holder's
+/// panic; the submit paths use [`lock_or`] instead and surface the
+/// poisoning as a typed error.
+pub(crate) fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Acquire a mutex or surface the poisoning as
+/// [`ServeError::LockPoisoned`] — the submit-path counterpart of
+/// [`relock`]: a caller handing in new work can be refused cleanly.
+pub(crate) fn lock_or<'a, T>(
+    m: &'a Mutex<T>,
+    what: &'static str,
+) -> Result<std::sync::MutexGuard<'a, T>, ServeError> {
+    m.lock()
+        .map_err(|_| ServeError::LockPoisoned { what, recovered: vec![] })
+}
+
+/// Decrement an atomic counter, flooring at zero. The fleet's row
+/// accounting can legitimately race a drain-time write-off (the worker
+/// decrements on completion; `drain` zeroes a dead worker's share), so
+/// plain `fetch_sub` could wrap; saturating keeps the counters sane and
+/// `recount_loads` repairs any residue at the next quiescent point.
+fn sat_sub(counter: &AtomicUsize, rows: usize) {
+    let _ = counter.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |x| {
+        Some(x.saturating_sub(rows))
+    });
+}
+
+pub(crate) enum WorkerMsg {
+    Work(Batch),
+    Stop,
+}
+
+/// Leader-side view of one PE worker.
+pub(crate) struct WorkerPort {
+    pub(crate) tx: SyncSender<WorkerMsg>,
+    /// Rows dispatched to this worker and not yet completed.
+    pub(crate) outstanding_rows: Arc<AtomicUsize>,
+    /// Batches dispatched to this worker and not yet completed.
+    pub(crate) outstanding_batches: Arc<AtomicUsize>,
+    pub(crate) alive: bool,
+}
+
+/// Load-aware batch router over one pool's worker ports.
+pub(crate) struct Router {
+    pub(crate) ports: Vec<WorkerPort>,
+    pub(crate) policy: super::server::DispatchPolicy,
+    pub(crate) next_rr: usize,
+}
+
+impl Router {
+    /// Candidate workers, best first, per the policy. Only live ports.
+    fn candidates(&mut self) -> Vec<usize> {
+        let live: Vec<usize> = (0..self.ports.len())
+            .filter(|&i| self.ports[i].alive)
+            .collect();
+        if live.is_empty() {
+            return live;
+        }
+        match self.policy {
+            super::server::DispatchPolicy::RoundRobin => {
+                let start = self.next_rr % live.len();
+                self.next_rr = self.next_rr.wrapping_add(1);
+                let mut order = Vec::with_capacity(live.len());
+                for off in 0..live.len() {
+                    order.push(live[(start + off) % live.len()]);
+                }
+                order
+            }
+            super::server::DispatchPolicy::LeastLoaded => {
+                let mut order = live;
+                order.sort_by_key(|&i| {
+                    self.ports[i].outstanding_rows.load(Ordering::Relaxed)
+                });
+                order
+            }
+        }
+    }
+
+    /// Route one batch. Tries every live worker without blocking; if all
+    /// bounded queues are full, blocks on the preferred worker
+    /// (backpressure). `Err(batch)` iff no live worker remains.
+    fn dispatch(&mut self, batch: Batch) -> Result<usize, Batch> {
+        let mut batch = batch;
+        loop {
+            let order = self.candidates();
+            if order.is_empty() {
+                return Err(batch);
+            }
+            // Non-blocking pass in preference order.
+            for &w in &order {
+                self.charge(w, &batch);
+                match self.ports[w].tx.try_send(WorkerMsg::Work(batch)) {
+                    Ok(()) => return Ok(w),
+                    Err(TrySendError::Full(msg)) => {
+                        batch = self.uncharge(w, msg);
+                    }
+                    Err(TrySendError::Disconnected(msg)) => {
+                        batch = self.uncharge(w, msg);
+                        self.ports[w].alive = false;
+                    }
+                }
+            }
+            // All live queues full: block on the preferred one.
+            let w = match self.candidates().first() {
+                Some(&w) => w,
+                None => return Err(batch),
+            };
+            self.charge(w, &batch);
+            match self.ports[w].tx.send(WorkerMsg::Work(batch)) {
+                Ok(()) => return Ok(w),
+                Err(std::sync::mpsc::SendError(msg)) => {
+                    batch = self.uncharge(w, msg);
+                    self.ports[w].alive = false;
+                    // Retry the remaining live workers.
+                }
+            }
+        }
+    }
+
+    fn charge(&self, w: usize, batch: &Batch) {
+        self.ports[w]
+            .outstanding_rows
+            .fetch_add(batch.rows, Ordering::Relaxed);
+        self.ports[w]
+            .outstanding_batches
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn uncharge(&self, w: usize, msg: WorkerMsg) -> Batch {
+        let batch = match msg {
+            WorkerMsg::Work(b) => b,
+            WorkerMsg::Stop => unreachable!("router only routes work"),
+        };
+        self.ports[w]
+            .outstanding_rows
+            .fetch_sub(batch.rows, Ordering::Relaxed);
+        self.ports[w]
+            .outstanding_batches
+            .fetch_sub(1, Ordering::Relaxed);
+        batch
+    }
+}
+
+/// One (model, tenant) governor's mutable half: the installed policy
+/// plus the tenant snapshot its last decision was taken at (windowed
+/// p99 = the tenant's histogram delta between two consecutive
+/// decisions — one tenant's tail never pressures another's governor).
+pub(crate) struct GovernorState {
+    pub(crate) policy: Box<dyn GovernorPolicy>,
+    last_snap: TenantSnapshot,
+}
+
+/// Per-(model, tenant) governor slot.
+struct TenantGov {
+    state: Mutex<GovernorState>,
+    /// Most recently chosen variant (observability + the admission
+    /// check's drain estimate; billing follows each batch's own tag).
+    active_variant: AtomicUsize,
+}
+
+/// One tenant's batcher lane within a pool. Lanes keep tenants'
+/// batches disjoint — a formed batch never mixes SLO classes.
+pub(crate) struct Lane {
+    pub(crate) batcher: Mutex<Batcher>,
+}
+
+/// One replicated PE pool of a model shard.
+pub(crate) struct PoolCore {
+    /// Per-tenant batcher lanes, indexed by tenant id.
+    pub(crate) lanes: Vec<Lane>,
+    pub(crate) router: Mutex<Router>,
+    /// Batches dispatched from this pool and not yet collected.
+    in_flight: AtomicUsize,
+    /// Each worker slot's outstanding-row counter (shared with the
+    /// router's ports) — readable without the router lock.
+    port_loads: Vec<Arc<AtomicUsize>>,
+    /// Rows admitted to this pool and not yet completed (lane-pending +
+    /// dispatched); the per-pool least-outstanding-rows dispatch key.
+    load_rows: Arc<AtomicUsize>,
+    /// This pool's first worker's fleet-wide flat slot index — the id
+    /// space [`ServeError::WorkerLost`] reports.
+    worker_base: usize,
+}
+
+/// One hosted model: its compiled plans, pools, per-tenant governors,
+/// and billing state.
+pub(crate) struct ModelShard {
+    model: Arc<CompiledModel>,
+    cost: Arc<CostTable>,
+    pub(crate) metrics: Arc<Metrics>,
+    certified: CertifiedCosts,
+    /// Per-variant batch quanta (index = variant id); also the variant
+    /// count — single-entry for a single-variant model.
+    quanta: Vec<usize>,
+    pub(crate) pools: Vec<PoolCore>,
+    /// Per-tenant governor slots, indexed by tenant id.
+    govs: Vec<TenantGov>,
+    /// Rows admitted for each tenant across all of this model's pools
+    /// and not yet completed — the admission check's queue estimate.
+    tenant_queued: Arc<Vec<AtomicUsize>>,
+    /// Model row width, for request validation at submit.
+    input_width: usize,
+    /// Half-range of the reference variant's input format
+    /// (`2^(in_bits-1)`), for validation.
+    in_half: i64,
+    queue_depth: usize,
+}
+
+/// One tenant class and its fleet-wide metrics bucket.
+struct TenantState {
+    class: SloClass,
+    metrics: Arc<TenantMetrics>,
+}
+
+/// State shared between the submit path, the deadline thread, and the
+/// PE workers.
+pub(crate) struct FleetShared {
+    pub(crate) models: Vec<ModelShard>,
+    tenants: Vec<TenantState>,
+    /// Tenant ids sorted by class priority (lower priority value =
+    /// served first at ticks and drain flushes).
+    priority_order: Vec<usize>,
+    stop_deadline: AtomicBool,
+}
+
+/// A completion message from one PE worker: which pool finished (for
+/// the in-flight ledger) and the responses it produced.
+struct Done {
+    model: usize,
+    pool: usize,
+    responses: Vec<Response>,
+}
+
+/// Deployment description of one hosted model.
+pub struct ModelConfig {
+    /// The compiled model (all variants, one plan arena).
+    pub model: Arc<CompiledModel>,
+    /// Cost table billing this model's cycles.
+    pub cost: CostTable,
+    /// Replicated PE pools serving this model.
+    pub n_pools: usize,
+    /// Per-pool knobs (PE count, batch target, queue depth, deadline,
+    /// dispatch policy) — identical across the model's pools.
+    pub pool: ServeConfig,
+}
+
+impl ModelConfig {
+    /// One pool of `pool.n_pes` PEs serving `model` billed by `cost`.
+    pub fn new(model: Arc<CompiledModel>, cost: CostTable, pool: ServeConfig) -> ModelConfig {
+        ModelConfig { model, cost, n_pools: 1, pool }
+    }
+
+    /// Replicate the model across `n` identical PE pools.
+    pub fn pools(mut self, n: usize) -> ModelConfig {
+        self.n_pools = n;
+        self
+    }
+}
+
+/// Deployment description of a whole fleet.
+#[derive(Default)]
+pub struct FleetConfig {
+    /// Hosted models; a request's `model` id indexes this list.
+    pub models: Vec<ModelConfig>,
+    /// Tenant SLO classes; a request's `tenant` id indexes this list.
+    pub tenants: Vec<SloClass>,
+}
+
+impl FleetConfig {
+    /// An empty fleet description.
+    pub fn new() -> FleetConfig {
+        FleetConfig::default()
+    }
+
+    /// Add a hosted model (its id = position in the add order).
+    pub fn model(mut self, model: ModelConfig) -> FleetConfig {
+        self.models.push(model);
+        self
+    }
+
+    /// Add a tenant class (its id = position in the add order).
+    pub fn tenant(mut self, class: SloClass) -> FleetConfig {
+        self.tenants.push(class);
+        self
+    }
+}
+
+/// Worker (re)spawn context for one (model, pool) slot — everything a
+/// PE worker thread needs beyond its own queue and counters.
+struct WorkerCtx {
+    model_idx: usize,
+    pool_idx: usize,
+    model: Arc<CompiledModel>,
+    cost: Arc<CostTable>,
+    metrics: Arc<Metrics>,
+    tenant_metrics: Vec<Arc<TenantMetrics>>,
+    tenant_queued: Arc<Vec<AtomicUsize>>,
+    pool_load: Arc<AtomicUsize>,
+    tx_done: Sender<Done>,
+    queue_depth: usize,
+}
+
+/// Spawn one PE worker thread, reusing the slot's outstanding-work
+/// counters (they outlive any one incarnation of the worker — the
+/// router and the pool dispatch read them by slot).
+fn spawn_worker(
+    ctx: &WorkerCtx,
+    outstanding_rows: Arc<AtomicUsize>,
+    outstanding_batches: Arc<AtomicUsize>,
+) -> (WorkerPort, JoinHandle<()>) {
+    let (tx, rx) = sync_channel::<WorkerMsg>(ctx.queue_depth.max(1));
+    let port = WorkerPort {
+        tx,
+        outstanding_rows: Arc::clone(&outstanding_rows),
+        outstanding_batches: Arc::clone(&outstanding_batches),
+        alive: true,
+    };
+    let engine = PackedEngine::new(Arc::clone(&ctx.model));
+    let w = WorkerState {
+        model_idx: ctx.model_idx,
+        pool_idx: ctx.pool_idx,
+        engine,
+        done: ctx.tx_done.clone(),
+        metrics: Arc::clone(&ctx.metrics),
+        tenant_metrics: ctx.tenant_metrics.clone(),
+        tenant_queued: Arc::clone(&ctx.tenant_queued),
+        pool_load: Arc::clone(&ctx.pool_load),
+        cost: Arc::clone(&ctx.cost),
+        outstanding_rows,
+        outstanding_batches,
+    };
+    let handle = std::thread::spawn(move || worker_loop(w, rx));
+    (port, handle)
+}
+
+impl FleetShared {
+    /// Count and route one formed batch while still holding the lane's
+    /// batcher lock. Holding the lock keeps the invariant that whenever
+    /// the lane is observable, every formed batch is either counted in
+    /// the pool's `in_flight` or restored as pending — so `drain` can
+    /// never slip between "batch left the batcher" and "batch became
+    /// in-flight". Lock order is always batcher → governor → router;
+    /// never any reverse.
+    fn dispatch_locked(
+        &self,
+        mi: usize,
+        pi: usize,
+        tenant: usize,
+        batcher: &mut Batcher,
+        mut batch: Batch,
+    ) -> Result<(), ServeError> {
+        let shard = &self.models[mi];
+        let pool = &shard.pools[pi];
+        batch.tenant = tenant;
+        // Per-tenant governor decision (DESIGN.md §13/§17): sample the
+        // tenant's admitted-not-completed rows plus the windowed p99 of
+        // the tenant's own latency histogram; stamp the batch and
+        // re-arm this lane's alignment quantum for the *next* batch.
+        // A single-variant model has no decision to make, and a
+        // poisoned governor degrades gracefully: the batch keeps its
+        // current variant tag and dispatch proceeds.
+        if shard.quanta.len() > 1 {
+            if let Ok(mut gov) = shard.govs[tenant].state.lock() {
+                let queued_rows = shard.tenant_queued[tenant].load(Ordering::Relaxed);
+                let snap = self.tenants[tenant].metrics.snapshot();
+                let window_p99_ns = snap.window_latency_quantile_ns(&gov.last_snap, 0.99);
+                let chosen = gov.policy.choose(&LoadSignals {
+                    queued_rows,
+                    window_p99_ns,
+                    n_variants: shard.quanta.len(),
+                });
+                gov.last_snap = snap;
+                let v = chosen.min(shard.quanta.len() - 1);
+                if v != shard.govs[tenant].active_variant.swap(v, Ordering::Relaxed) {
+                    shard.metrics.note_variant_switch();
+                }
+                batch.variant = v;
+                batcher.set_quantum(shard.quanta[v]);
+            }
+        }
+        pool.in_flight.fetch_add(1, Ordering::SeqCst);
+        let result = match pool.router.lock() {
+            Ok(mut router) => router.dispatch(batch),
+            Err(_) => {
+                // Poisoned router: restore the batch (it was never
+                // dispatched) and refuse the submit.
+                pool.in_flight.fetch_sub(1, Ordering::SeqCst);
+                batcher.restore(batch);
+                return Err(ServeError::LockPoisoned {
+                    what: "router",
+                    recovered: vec![],
+                });
+            }
+        };
+        match result {
+            Ok(_) => Ok(()),
+            Err(batch) => {
+                pool.in_flight.fetch_sub(1, Ordering::SeqCst);
+                batcher.restore(batch);
+                Err(ServeError::NoLiveWorkers { recovered: vec![] })
+            }
+        }
+    }
+
+    /// Deadline-thread path: poll every lane's tick (lanes in class
+    /// priority order within each pool); dispatch straggler flushes.
+    /// Recovers poisoned batchers — the deadline thread must keep
+    /// ticking (and must never panic itself) after a panic elsewhere.
+    fn tick_all(&self) {
+        for (mi, shard) in self.models.iter().enumerate() {
+            for (pi, pool) in shard.pools.iter().enumerate() {
+                for &t in &self.priority_order {
+                    let mut batcher = relock(&pool.lanes[t].batcher);
+                    if let Some(batch) = batcher.tick() {
+                        // Total dispatch failure restores the rows; the
+                        // next drain() surfaces the error.
+                        let _ = self.dispatch_locked(mi, pi, t, &mut batcher, batch);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Rebuild the admitted-row ledgers from ground truth. Only exact
+    /// at a quiescent point (nothing in flight): pending lane rows are
+    /// the whole tenant backlog and the port counters are settled —
+    /// which is exactly when `drain` calls it, repairing whatever a
+    /// dead worker's write-off left dangling.
+    fn recount_loads(&self) {
+        for shard in &self.models {
+            let mut queued = vec![0usize; self.tenants.len()];
+            for pool in &shard.pools {
+                let mut pool_rows = 0usize;
+                for (t, lane) in pool.lanes.iter().enumerate() {
+                    let pending = relock(&lane.batcher).pending_rows();
+                    queued[t] += pending;
+                    pool_rows += pending;
+                }
+                pool_rows += pool
+                    .port_loads
+                    .iter()
+                    .map(|l| l.load(Ordering::SeqCst))
+                    .sum::<usize>();
+                pool.load_rows.store(pool_rows, Ordering::SeqCst);
+            }
+            for (t, rows) in queued.iter().enumerate() {
+                shard.tenant_queued[t].store(*rows, Ordering::SeqCst);
+            }
+        }
+    }
+
+    fn total_in_flight(&self) -> usize {
+        self.models
+            .iter()
+            .flat_map(|s| s.pools.iter())
+            .map(|p| p.in_flight.load(Ordering::SeqCst))
+            .sum()
+    }
+}
+
+/// The running fleet.
+pub struct Fleet {
+    pub(crate) shared: Arc<FleetShared>,
+    rx_done: Receiver<Done>,
+    /// Respawn sender, kept for [`Fleet::revive_worker`] (also keeps
+    /// `rx_done` connected while every worker is dead).
+    tx_done: Sender<Done>,
+    /// Worker join handles, `[model][pool][slot]`.
+    workers: Vec<Vec<Vec<JoinHandle<()>>>>,
+    deadline_thread: Option<JoinHandle<()>>,
+}
+
+impl Fleet {
+    /// Validate the deployment and spawn every pool's PE workers plus
+    /// one deadline thread (ticking at half the shortest configured
+    /// deadline). Each (model, tenant) governor starts as the tenant
+    /// class's [`SloPolicy`] armed with that model's certified costs;
+    /// [`Fleet::install_policy`] can replace any of them.
+    pub fn start(cfg: FleetConfig) -> Result<Fleet, ServeError> {
+        if cfg.models.is_empty() {
+            return Err(ServeError::InvalidConfig { what: "fleet has no models" });
+        }
+        if cfg.tenants.is_empty() {
+            return Err(ServeError::InvalidConfig { what: "fleet has no tenant classes" });
+        }
+        for mc in &cfg.models {
+            mc.pool.validate()?;
+            if mc.n_pools == 0 {
+                return Err(ServeError::InvalidConfig {
+                    what: "n_pools == 0 (a model needs at least one PE pool)",
+                });
+            }
+        }
+        let (tx_done, rx_done) = channel::<Done>();
+        let tenants: Vec<TenantState> = cfg
+            .tenants
+            .into_iter()
+            .map(|class| TenantState {
+                metrics: Arc::new(TenantMetrics::named(class.name.clone())),
+                class,
+            })
+            .collect();
+        let tenant_metrics: Vec<Arc<TenantMetrics>> =
+            tenants.iter().map(|t| Arc::clone(&t.metrics)).collect();
+        let mut priority_order: Vec<usize> = (0..tenants.len()).collect();
+        priority_order.sort_by_key(|&i| tenants[i].class.priority);
+        let mut models = vec![];
+        let mut workers = vec![];
+        let mut worker_base = 0usize;
+        let mut min_deadline = Duration::MAX;
+        for (mi, mc) in cfg.models.into_iter().enumerate() {
+            min_deadline = min_deadline.min(mc.pool.deadline);
+            let names: Vec<String> =
+                mc.model.variants().iter().map(|v| v.name().to_string()).collect();
+            let metrics = Arc::new(Metrics::with_variant_names(&names));
+            let cost = Arc::new(mc.cost);
+            let certified = CertifiedCosts::from_model(&mc.model, &cost);
+            let quanta: Vec<usize> =
+                mc.model.variants().iter().map(|v| v.batch_quantum()).collect();
+            let tenant_queued: Arc<Vec<AtomicUsize>> =
+                Arc::new((0..tenants.len()).map(|_| AtomicUsize::new(0)).collect());
+            let mut pools = vec![];
+            let mut model_workers = vec![];
+            for pi in 0..mc.n_pools {
+                let pool_load = Arc::new(AtomicUsize::new(0));
+                let ctx = WorkerCtx {
+                    model_idx: mi,
+                    pool_idx: pi,
+                    model: Arc::clone(&mc.model),
+                    cost: Arc::clone(&cost),
+                    metrics: Arc::clone(&metrics),
+                    tenant_metrics: tenant_metrics.clone(),
+                    tenant_queued: Arc::clone(&tenant_queued),
+                    pool_load: Arc::clone(&pool_load),
+                    tx_done: tx_done.clone(),
+                    queue_depth: mc.pool.queue_depth,
+                };
+                let mut ports = vec![];
+                let mut port_loads = vec![];
+                let mut pool_workers = vec![];
+                for _slot in 0..mc.pool.n_pes {
+                    let outstanding_rows = Arc::new(AtomicUsize::new(0));
+                    let outstanding_batches = Arc::new(AtomicUsize::new(0));
+                    port_loads.push(Arc::clone(&outstanding_rows));
+                    let (port, handle) =
+                        spawn_worker(&ctx, outstanding_rows, outstanding_batches);
+                    ports.push(port);
+                    pool_workers.push(handle);
+                }
+                let lanes: Vec<Lane> = tenants
+                    .iter()
+                    .map(|t| {
+                        let target =
+                            t.class.target_rows.unwrap_or(mc.pool.target_rows);
+                        let mut batcher = Batcher::new(target, 2);
+                        batcher.set_quantum(quanta[0]);
+                        Lane { batcher: Mutex::new(batcher) }
+                    })
+                    .collect();
+                pools.push(PoolCore {
+                    lanes,
+                    router: Mutex::new(Router {
+                        ports,
+                        policy: mc.pool.policy,
+                        next_rr: 0,
+                    }),
+                    in_flight: AtomicUsize::new(0),
+                    port_loads,
+                    load_rows: pool_load,
+                    worker_base,
+                });
+                worker_base += mc.pool.n_pes;
+                model_workers.push(pool_workers);
+            }
+            let govs: Vec<TenantGov> = tenants
+                .iter()
+                .map(|t| TenantGov {
+                    state: Mutex::new(GovernorState {
+                        policy: Box::new(t.class.policy(certified.clone())),
+                        last_snap: TenantSnapshot::empty(),
+                    }),
+                    active_variant: AtomicUsize::new(0),
+                })
+                .collect();
+            models.push(ModelShard {
+                input_width: mc.model.input_width(),
+                in_half: 1i64 << (mc.model.in_bits() - 1),
+                model: mc.model,
+                cost,
+                metrics,
+                certified,
+                quanta,
+                pools,
+                govs,
+                tenant_queued,
+                queue_depth: mc.pool.queue_depth,
+            });
+            workers.push(model_workers);
+        }
+        let shared = Arc::new(FleetShared {
+            models,
+            tenants,
+            priority_order,
+            stop_deadline: AtomicBool::new(false),
+        });
+        // Deadline thread: tick at half the shortest deadline so every
+        // model's stragglers flush within (0.5, 1.0]× its own deadline.
+        let tick_period = (min_deadline / 2).max(Duration::from_micros(200));
+        let shared_bg = Arc::clone(&shared);
+        let deadline_thread = std::thread::spawn(move || {
+            while !shared_bg.stop_deadline.load(Ordering::Acquire) {
+                std::thread::park_timeout(tick_period);
+                shared_bg.tick_all();
+            }
+        });
+        Ok(Fleet {
+            shared,
+            rx_done,
+            tx_done,
+            workers,
+            deadline_thread: Some(deadline_thread),
+        })
+    }
+
+    /// Hosted model count.
+    pub fn n_models(&self) -> usize {
+        self.shared.models.len()
+    }
+
+    /// Tenant class count.
+    pub fn n_tenants(&self) -> usize {
+        self.shared.tenants.len()
+    }
+
+    /// Model `m`'s serving metrics (per-variant billing buckets).
+    pub fn model_metrics(&self, m: usize) -> Arc<Metrics> {
+        Arc::clone(&self.shared.models[m].metrics)
+    }
+
+    /// Tenant `t`'s fleet-wide metrics bucket.
+    pub fn tenant_metrics(&self, t: usize) -> Arc<TenantMetrics> {
+        Arc::clone(&self.shared.tenants[t].metrics)
+    }
+
+    /// Tenant `t`'s SLO class.
+    pub fn tenant_class(&self, t: usize) -> &SloClass {
+        &self.shared.tenants[t].class
+    }
+
+    /// Model `m`'s certified per-variant costs (the figures admission
+    /// prices its drain estimates with).
+    pub fn certified_costs(&self, m: usize) -> &CertifiedCosts {
+        &self.shared.models[m].certified
+    }
+
+    /// Replace the governor of one (model, tenant) pair.
+    pub fn install_policy(
+        &self,
+        model: usize,
+        tenant: usize,
+        policy: Box<dyn GovernorPolicy>,
+    ) -> Result<(), ServeError> {
+        let shard = self
+            .shared
+            .models
+            .get(model)
+            .ok_or(ServeError::UnknownModel { model })?;
+        let gov = shard
+            .govs
+            .get(tenant)
+            .ok_or(ServeError::UnknownTenant { tenant })?;
+        lock_or(&gov.state, "governor")?.policy = policy;
+        Ok(())
+    }
+
+    /// The variant the (model, tenant) governor chose at its most
+    /// recent dispatch (observability; per-batch billing follows each
+    /// batch's own tag).
+    pub fn active_variant(&self, model: usize, tenant: usize) -> usize {
+        self.shared.models[model].govs[tenant]
+            .active_variant
+            .load(Ordering::Relaxed)
+    }
+
+    /// Admit a request for (`model`, `tenant`): validate its shape and
+    /// Q-range against the model, apply the tenant's certified-drain
+    /// admission budget, then enqueue it in the tenant's lane of the
+    /// least-loaded pool (dispatching immediately if the lane's target
+    /// fills). Never blocks on execution.
+    pub fn submit(&self, model: usize, tenant: usize, req: Request) -> Result<(), ServeError> {
+        let shard = self
+            .shared
+            .models
+            .get(model)
+            .ok_or(ServeError::UnknownModel { model })?;
+        let tstate = self
+            .shared
+            .tenants
+            .get(tenant)
+            .ok_or(ServeError::UnknownTenant { tenant })?;
+        validate(shard, &req)?;
+        // Admission control (DESIGN.md §17): price the tenant's
+        // *already-admitted* backlog at the variant its governor is
+        // currently running; if the certified drain time breaches the
+        // class budget, refuse the new work with a typed Shed. The
+        // incoming rows are not counted — an idle tenant's first
+        // request always lands.
+        let queued = shard.tenant_queued[tenant].load(Ordering::SeqCst);
+        let v = self.active_variant(model, tenant).min(shard.quanta.len() - 1);
+        let est = shard.certified.est_drain_ns(queued, v);
+        let budget = tstate.class.drain_budget_ns();
+        if est > budget {
+            tstate.metrics.note_shed(req.rows.len() as u64);
+            return Err(ServeError::Shed {
+                tenant,
+                reason: format!(
+                    "certified drain of {queued} queued rows at variant {v} is \
+                     {est} ns, over class '{}' budget {budget} ns",
+                    tstate.class.name
+                ),
+            });
+        }
+        // Least-outstanding-rows across the model's pools.
+        let pi = shard
+            .pools
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, p)| p.load_rows.load(Ordering::SeqCst))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let pool = &shard.pools[pi];
+        // Lock the lane before touching the ledgers: a poisoned lane
+        // refuses the request with the counters untouched.
+        let mut batcher = lock_or(&pool.lanes[tenant].batcher, "batcher")?;
+        let rows = req.rows.len();
+        shard.tenant_queued[tenant].fetch_add(rows, Ordering::SeqCst);
+        pool.load_rows.fetch_add(rows, Ordering::SeqCst);
+        shard.metrics.note_submit();
+        tstate.metrics.note_submit();
+        match batcher.push(TrackedRequest::now(req)) {
+            Some(batch) => {
+                self.shared
+                    .dispatch_locked(model, pi, tenant, &mut batcher, batch)
+            }
+            None => Ok(()),
+        }
+    }
+
+    /// Drive one deadline tick synchronously — deterministic tests and
+    /// closed-loop simulations tick here instead of sleeping against
+    /// the background thread.
+    pub fn tick_now(&self) {
+        self.shared.tick_all();
+    }
+
+    /// Collect every already-completed response without blocking.
+    /// Responses arrive in completion order from whichever pool
+    /// finished them; sorted by request id for the caller.
+    pub fn try_collect(&mut self) -> Vec<Response> {
+        let mut out = vec![];
+        while let Ok(d) = self.rx_done.try_recv() {
+            self.shared.models[d.model].pools[d.pool]
+                .in_flight
+                .fetch_sub(1, Ordering::SeqCst);
+            out.extend(d.responses);
+        }
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    /// As [`Fleet::try_collect`], but waits up to `wait` for the first
+    /// completion before draining the rest non-blocking.
+    pub fn collect_timeout(&mut self, wait: Duration) -> Vec<Response> {
+        let mut out = vec![];
+        if let Ok(d) = self.rx_done.recv_timeout(wait) {
+            self.shared.models[d.model].pools[d.pool]
+                .in_flight
+                .fetch_sub(1, Ordering::SeqCst);
+            out.extend(d.responses);
+        }
+        out.extend(self.try_collect());
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    /// Rows batched in some lane but not yet dispatched (waiting on a
+    /// fill target or the deadline). Observability must survive a
+    /// poisoned lock.
+    pub fn pending_rows(&self) -> usize {
+        self.shared
+            .models
+            .iter()
+            .flat_map(|s| s.pools.iter())
+            .flat_map(|p| p.lanes.iter())
+            .map(|l| relock(&l.batcher).pending_rows())
+            .sum()
+    }
+
+    /// Fault injection / rolling restart: stop worker `idx` of pool
+    /// `pi` of model `mi` after it finishes its queued work. Routing
+    /// avoids it immediately; its in-queue work still completes and is
+    /// collected by `drain`.
+    pub fn kill_worker(&mut self, mi: usize, pi: usize, idx: usize) {
+        let Some(shard) = self.shared.models.get(mi) else { return };
+        let Some(pool) = shard.pools.get(pi) else { return };
+        let tx = {
+            let mut router = relock(&pool.router);
+            match router.ports.get_mut(idx) {
+                Some(port) => {
+                    port.alive = false;
+                    port.tx.clone()
+                }
+                None => return,
+            }
+        };
+        // Deliver Stop without holding the router lock and without
+        // blocking the caller: behind a full queue the send parks on a
+        // helper thread until the worker drains its backlog.
+        std::thread::spawn(move || {
+            let _ = tx.send(WorkerMsg::Stop);
+        });
+    }
+
+    /// Rolling-restart companion of [`Fleet::kill_worker`]: respawn a
+    /// dead PE in its slot — fresh thread, fresh bounded queue, same
+    /// outstanding-work counters — and re-arm routing to it. Returns
+    /// `false` (and does nothing) for an out-of-range slot or a worker
+    /// that is still alive; a killed worker is first joined, so any
+    /// work still in its old queue completes and is collected before
+    /// the replacement takes over.
+    pub fn revive_worker(&mut self, mi: usize, pi: usize, idx: usize) -> bool {
+        let Some(shard) = self.shared.models.get(mi) else { return false };
+        let Some(pool) = shard.pools.get(pi) else { return false };
+        if idx >= self.workers[mi][pi].len() {
+            return false;
+        }
+        {
+            let router = relock(&pool.router);
+            if router.ports[idx].alive {
+                return false;
+            }
+        }
+        let ctx = WorkerCtx {
+            model_idx: mi,
+            pool_idx: pi,
+            model: Arc::clone(&shard.model),
+            cost: Arc::clone(&shard.cost),
+            metrics: Arc::clone(&shard.metrics),
+            tenant_metrics: self
+                .shared
+                .tenants
+                .iter()
+                .map(|t| Arc::clone(&t.metrics))
+                .collect(),
+            tenant_queued: Arc::clone(&shard.tenant_queued),
+            pool_load: Arc::clone(&pool.load_rows),
+            tx_done: self.tx_done.clone(),
+            queue_depth: shard.queue_depth,
+        };
+        // The old incarnation exits once its queued work (and the
+        // pending Stop) drains; joining here is what makes "revive"
+        // safe — two workers never share a slot.
+        let (mut port, handle) = spawn_worker(&ctx, Arc::clone(&pool.port_loads[idx]), {
+            let router = relock(&pool.router);
+            Arc::clone(&router.ports[idx].outstanding_batches)
+        });
+        let old = std::mem::replace(&mut self.workers[mi][pi][idx], handle);
+        let _ = old.join();
+        // Install the new port only after the old worker is gone: its
+        // leftover counters were either drained by the worker itself or
+        // written off by `drain`.
+        let mut router = relock(&pool.router);
+        std::mem::swap(&mut router.ports[idx], &mut port);
+        // `port` now holds the dead incarnation's channel; dropping it
+        // closes that queue for good.
+        true
+    }
+
+    /// Flush every lane (class priority order) and wait for every
+    /// response. On failure the error still carries whatever responses
+    /// could be collected — completed work is never stranded behind an
+    /// error.
+    pub fn drain(&mut self) -> Result<Vec<Response>, ServeError> {
+        // Collect in-flight work even if a flush finds no live workers
+        // or a poisoned lane: earlier batches may already have
+        // completed, and the other lanes must still flush.
+        let mut flush_err: Option<ServeError> = None;
+        for (mi, shard) in self.shared.models.iter().enumerate() {
+            for (pi, pool) in shard.pools.iter().enumerate() {
+                for &t in &self.shared.priority_order {
+                    let res = match lock_or(&pool.lanes[t].batcher, "batcher") {
+                        Ok(mut batcher) => match batcher.flush() {
+                            Some(batch) => self
+                                .shared
+                                .dispatch_locked(mi, pi, t, &mut batcher, batch),
+                            None => Ok(()),
+                        },
+                        Err(e) => Err(e),
+                    };
+                    if let Err(e) = res {
+                        flush_err.get_or_insert(e);
+                    }
+                }
+            }
+        }
+        let mut out = vec![];
+        let mut lost_workers: Vec<usize> = vec![];
+        let mut lost_rows = 0usize;
+        while self.shared.total_in_flight() > 0 {
+            match self.rx_done.recv_timeout(Duration::from_millis(50)) {
+                Ok(d) => {
+                    self.shared.models[d.model].pools[d.pool]
+                        .in_flight
+                        .fetch_sub(1, Ordering::SeqCst);
+                    out.extend(d.responses);
+                }
+                // Disconnected is unreachable while the fleet holds its
+                // respawn sender (kept for `revive_worker`); both arms
+                // mean "no response right now" — write off work held by
+                // exited workers and keep collecting. The loop ends
+                // when every pool's `in_flight` reaches zero: every
+                // dispatched batch is either answered on `rx_done` or
+                // counted in some port's outstanding batches.
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                    self.write_off(&mut lost_workers, &mut lost_rows);
+                }
+            }
+        }
+        // Quiescent: repair the admission ledgers (a write-off zeroed
+        // port counters without crediting tenants' queued rows).
+        self.shared.recount_loads();
+        out.sort_by_key(|r| r.id);
+        if !lost_workers.is_empty() {
+            return Err(ServeError::WorkerLost {
+                workers: lost_workers,
+                lost_rows,
+                recovered: out,
+            });
+        }
+        match flush_err {
+            Some(ServeError::LockPoisoned { what, .. }) => {
+                Err(ServeError::LockPoisoned { what, recovered: out })
+            }
+            Some(_) => Err(ServeError::NoLiveWorkers { recovered: out }),
+            None => Ok(out),
+        }
+    }
+
+    /// Write off work held by workers that exited without answering.
+    /// Worker ids in `lost_workers` are fleet-wide flat slot indices
+    /// (pool `worker_base` + slot).
+    fn write_off(&self, lost_workers: &mut Vec<usize>, lost_rows: &mut usize) {
+        for (mi, shard) in self.shared.models.iter().enumerate() {
+            for (pi, pool) in shard.pools.iter().enumerate() {
+                let mut router = relock(&pool.router);
+                for (i, port) in router.ports.iter_mut().enumerate() {
+                    if !self.workers[mi][pi][i].is_finished() {
+                        continue;
+                    }
+                    port.alive = false;
+                    let batches = port.outstanding_batches.swap(0, Ordering::SeqCst);
+                    if batches == 0 {
+                        continue;
+                    }
+                    let rows = port.outstanding_rows.swap(0, Ordering::SeqCst);
+                    pool.in_flight.fetch_sub(batches, Ordering::SeqCst);
+                    shard
+                        .metrics
+                        .dropped_rows
+                        .fetch_add(rows as u64, Ordering::Relaxed);
+                    lost_workers.push(pool.worker_base + i);
+                    *lost_rows += rows;
+                }
+            }
+        }
+    }
+
+    /// Stop the deadline thread and every worker, then join them.
+    pub fn shutdown(mut self) {
+        self.shared.stop_deadline.store(true, Ordering::Release);
+        if let Some(t) = self.deadline_thread.take() {
+            t.thread().unpark();
+            let _ = t.join();
+        }
+        for shard in &self.shared.models {
+            for pool in &shard.pools {
+                let router = relock(&pool.router);
+                for port in &router.ports {
+                    // Blocking send so Stop lands even behind a full
+                    // queue; a dead worker just returns SendError.
+                    let _ = port.tx.send(WorkerMsg::Stop);
+                }
+            }
+        }
+        for model_workers in self.workers.drain(..) {
+            for pool_workers in model_workers {
+                for w in pool_workers {
+                    let _ = w.join();
+                }
+            }
+        }
+    }
+}
+
+/// Submit-time request validation against one model shard.
+fn validate(shard: &ModelShard, req: &Request) -> Result<(), ServeError> {
+    let invalid = |reason: String| ServeError::InvalidRequest { id: req.id, reason };
+    if req.rows.is_empty() {
+        return Err(invalid("request has no rows".to_string()));
+    }
+    for (i, row) in req.rows.iter().enumerate() {
+        if row.len() != shard.input_width {
+            return Err(invalid(format!(
+                "row {i} width {} != model input width {}",
+                row.len(),
+                shard.input_width
+            )));
+        }
+        if let Some(&v) = row.iter().find(|&&v| v < -shard.in_half || v >= shard.in_half) {
+            return Err(invalid(format!(
+                "row {i} value {v} outside Q range [{}, {})",
+                -shard.in_half, shard.in_half
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Everything one PE worker thread owns beyond its receive queue.
+struct WorkerState {
+    model_idx: usize,
+    pool_idx: usize,
+    engine: PackedEngine,
+    done: Sender<Done>,
+    metrics: Arc<Metrics>,
+    tenant_metrics: Vec<Arc<TenantMetrics>>,
+    tenant_queued: Arc<Vec<AtomicUsize>>,
+    pool_load: Arc<AtomicUsize>,
+    cost: Arc<CostTable>,
+    outstanding_rows: Arc<AtomicUsize>,
+    outstanding_batches: Arc<AtomicUsize>,
+}
+
+fn worker_loop(w: WorkerState, rx: Receiver<WorkerMsg>) {
+    // Steady-state serving allocates nothing in the engine: the worker
+    // owns one EngineScratch plus gather/output buffers for its whole
+    // lifetime, warmed by the first batch and reused across requests
+    // (DESIGN.md §11). Only the Response assembly below allocates.
+    // Under `--features simd` the engine picks the host-vector backend
+    // inside `forward_batch_into` with no scratch-shape change
+    // (DESIGN.md §16).
+    let mut scratch = EngineScratch::new();
+    let mut logits: Vec<Vec<i64>> = Vec::new();
+    let mut rows_buf: Vec<Vec<i64>> = Vec::new();
+    while let Ok(msg) = rx.recv() {
+        let batch = match msg {
+            WorkerMsg::Work(b) => b,
+            WorkerMsg::Stop => break,
+        };
+        let t0 = Instant::now();
+        // The variant this batch was tagged with at dispatch is the
+        // variant that executes — and the variant that gets billed.
+        let variant = batch.variant.min(w.engine.model().n_variants() - 1);
+        let in_shift = w.engine.model().variant(variant).in_shift();
+        // Batches are tenant-homogeneous (lanes are per-tenant): the
+        // whole batch bills one tenant bucket.
+        let tenant = batch.tenant.min(w.tenant_metrics.len() - 1);
+        // Gather rows into the reusable buffer (rows keep their
+        // capacity; `n_rows` tracks the live prefix), requantizing
+        // reference-precision request values into the executing
+        // variant's first-layer format (arithmetic right shift — the
+        // per-variant oracle applies the same transform), run packed,
+        // scatter back per request.
+        let mut n_rows = 0usize;
+        for entry in &batch.entries {
+            for row in &entry.req.rows {
+                if n_rows == rows_buf.len() {
+                    rows_buf.push(Vec::new());
+                }
+                rows_buf[n_rows].clear();
+                if in_shift == 0 {
+                    rows_buf[n_rows].extend_from_slice(row);
+                } else {
+                    rows_buf[n_rows].extend(row.iter().map(|&v| v >> in_shift));
+                }
+                n_rows += 1;
+            }
+        }
+        let stats = w.engine.forward_batch_into(
+            &rows_buf[..n_rows],
+            variant,
+            &mut scratch,
+            &mut logits,
+        );
+        let ns = t0.elapsed().as_nanos() as u64;
+        // Exact per-format billing: with a mixed-precision schedule the
+        // layers run at different widths, so the worker hands the cost
+        // table the by-format cycle breakdown, not one format — and the
+        // whole batch lands in the executed variant's metrics bucket
+        // AND the executing tenant's.
+        let pj = w.cost.batch_energy_pj(&stats);
+        // The static cost certificate's prediction for this batch,
+        // priced through the same table (DESIGN.md §15).
+        let predicted_pj = w
+            .engine
+            .model()
+            .cost_certificate(variant)
+            .energy_pj(n_rows, &w.cost);
+        w.metrics
+            .add_batch_predicted(n_rows as u64, variant, stats, pj, predicted_pj, ns);
+        w.tenant_metrics[tenant].add_rows(n_rows as u64, pj, ns);
+        let mut responses = vec![];
+        let mut offset = 0;
+        for entry in &batch.entries {
+            let n = entry.req.rows.len();
+            responses.push(Response {
+                id: entry.req.id,
+                model: w.model_idx,
+                tenant,
+                logits: logits[offset..offset + n].to_vec(),
+                variant,
+            });
+            offset += n;
+            let lat = entry.submitted_at.elapsed().as_nanos() as u64;
+            w.metrics.observe_latency_ns(lat);
+            w.tenant_metrics[tenant].observe_latency_ns(lat);
+        }
+        w.outstanding_rows.fetch_sub(batch.rows, Ordering::SeqCst);
+        w.outstanding_batches.fetch_sub(1, Ordering::SeqCst);
+        // The admission ledgers floor at zero: a drain-time write-off
+        // may already have credited these rows.
+        sat_sub(&w.tenant_queued[tenant], batch.rows);
+        sat_sub(&w.pool_load, batch.rows);
+        if w.done
+            .send(Done {
+                model: w.model_idx,
+                pool: w.pool_idx,
+                responses,
+            })
+            .is_err()
+        {
+            break; // leader gone
+        }
+    }
+}

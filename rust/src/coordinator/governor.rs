@@ -103,6 +103,108 @@ impl CertifiedCosts {
     }
 }
 
+/// One tenant SLO class for fleet serving (DESIGN.md §17): the
+/// watermarks and objective its per-(model, tenant) [`SloPolicy`]
+/// governor instance runs with, its dispatch priority among the fleet's
+/// tenant lanes, and the certified-cost admission budget — a new
+/// request is shed ([`ServeError::Shed`]) when
+/// [`CertifiedCosts::est_drain_ns`] of the tenant's *already-queued*
+/// rows exceeds `drain_budget`. The first request of an idle tenant is
+/// therefore always admitted: the budget bounds backlog, not arrival.
+///
+/// [`ServeError::Shed`]: super::server::ServeError::Shed
+#[derive(Debug, Clone)]
+pub struct SloClass {
+    /// Class name (metrics bucket label, report rows).
+    pub name: String,
+    /// Lane service order at each deadline tick: lower = served first.
+    pub priority: u8,
+    /// p99 objective handed to the class's governor instances.
+    pub target_p99: Duration,
+    /// Shed precision above this many queued rows.
+    pub high_rows: usize,
+    /// Recover fidelity at or below this many queued rows.
+    pub low_rows: usize,
+    /// Calm decisions before one fidelity step-up (see [`SloPolicy`]).
+    pub patience: u32,
+    /// Admission budget: shed new work while the certified drain time
+    /// of the tenant's queued rows exceeds this.
+    pub drain_budget: Duration,
+    /// Per-tenant batcher fill target; `None` inherits the pool's.
+    pub target_rows: Option<usize>,
+}
+
+impl SloClass {
+    /// A class with the given governor watermarks, priority 1, patience
+    /// 2, a drain budget of 4× the objective, and the pool's default
+    /// batch target.
+    pub fn new(
+        name: impl Into<String>,
+        target_p99: Duration,
+        high_rows: usize,
+        low_rows: usize,
+    ) -> SloClass {
+        SloClass {
+            name: name.into(),
+            priority: 1,
+            target_p99,
+            high_rows: high_rows.max(1),
+            low_rows: low_rows.min(high_rows).max(1),
+            patience: 2,
+            drain_budget: target_p99.saturating_mul(4),
+            target_rows: None,
+        }
+    }
+
+    /// A class whose admission never sheds and whose governor never
+    /// reacts — the single-tenant [`Coordinator`] wraps its one tenant
+    /// in this (its explicitly-installed policy replaces the governor).
+    ///
+    /// [`Coordinator`]: super::server::Coordinator
+    pub fn unbounded(name: impl Into<String>) -> SloClass {
+        SloClass::new(name, Duration::from_secs(3600), usize::MAX / 2, 1)
+            .drain_budget(Duration::MAX)
+    }
+
+    /// Override the lane service priority (lower = served first).
+    pub fn priority(mut self, priority: u8) -> SloClass {
+        self.priority = priority;
+        self
+    }
+
+    /// Override the governor patience (clamped to ≥ 1 by the policy).
+    pub fn patience(mut self, n: u32) -> SloClass {
+        self.patience = n;
+        self
+    }
+
+    /// Override the certified-drain admission budget.
+    pub fn drain_budget(mut self, budget: Duration) -> SloClass {
+        self.drain_budget = budget;
+        self
+    }
+
+    /// Override the tenant's batcher fill target.
+    pub fn target_rows(mut self, rows: usize) -> SloClass {
+        self.target_rows = Some(rows.max(1));
+        self
+    }
+
+    /// The admission budget in nanoseconds, saturating instead of
+    /// truncating (`Duration::MAX` must mean "never shed", not wrap).
+    pub fn drain_budget_ns(&self) -> u64 {
+        u64::try_from(self.drain_budget.as_nanos()).unwrap_or(u64::MAX)
+    }
+
+    /// Build this class's governor instance for one model: the standard
+    /// hysteresis armed with that model's certified per-variant costs.
+    pub fn policy(&self, certified: CertifiedCosts) -> SloPolicy {
+        SloPolicy::new(self.target_p99, self.high_rows, self.low_rows)
+            .patience(self.patience.max(1))
+            .with_certified_costs(certified)
+    }
+}
+
 /// A precision-selection policy. Implementations are consulted once
 /// per dispatched batch and may keep internal state (hysteresis
 /// counters, EWMAs, …). Returned ids out of range are clamped by the
@@ -360,6 +462,22 @@ mod tests {
         );
         assert!(certified.est_drain_ns(100, 0) > certified.est_drain_ns(100, 2));
         assert_eq!(certified.est_drain_ns(0, 0), 0);
+    }
+
+    #[test]
+    fn slo_class_builders_clamp_and_saturate() {
+        let c = SloClass::new("bulk", Duration::from_millis(2), 10, 50);
+        assert_eq!(c.low_rows, 10, "low watermark clamps to high");
+        assert_eq!(c.drain_budget_ns(), 8_000_000, "default budget = 4x objective");
+        let u = SloClass::unbounded("default");
+        assert_eq!(u.drain_budget_ns(), u64::MAX, "Duration::MAX saturates, never wraps");
+        let p = c.clone().priority(0).patience(5).target_rows(0);
+        assert_eq!(p.priority, 0);
+        assert_eq!(p.target_rows, Some(1), "explicit target clamps to >= 1");
+        // The derived policy is the standard hysteresis armed with the
+        // model's certified costs.
+        let mut pol = p.policy(CertifiedCosts::new(1000.0, vec![1.0], vec![1.0]));
+        assert_eq!(pol.choose(&sig(0, None)), 0);
     }
 
     #[test]

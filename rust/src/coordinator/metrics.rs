@@ -81,6 +81,190 @@ impl VariantMetrics {
     }
 }
 
+/// Per-tenant serving bucket for fleet deployments (DESIGN.md §17):
+/// the [`VariantMetrics`] idea applied at tenant granularity. Updated
+/// lock-free by the admission layer (submits, sheds) and by PE workers
+/// (completed rows, energy, latency) with the tenant each batch's lane
+/// belongs to; a batch is always tenant-homogeneous, so its whole
+/// energy bill lands in one bucket. Carries its own latency histogram
+/// so a tenant's governor windows *its own* p99 — one tenant's burst
+/// must not pollute another tenant's pressure signal.
+#[derive(Debug, Default)]
+pub struct TenantMetrics {
+    /// Tenant class name (report rows, bench cells).
+    pub name: String,
+    /// Requests accepted by admission (sheds not included).
+    pub requests: AtomicU64,
+    /// Requests refused by admission control (typed `Shed` errors).
+    pub shed_requests: AtomicU64,
+    /// Rows inside shed requests (never enqueued, never executed).
+    pub shed_rows: AtomicU64,
+    /// Rows completed by PE workers for this tenant.
+    pub rows: AtomicU64,
+    /// Simulated energy billed to this tenant, attojoules (same
+    /// rounding as [`Metrics::add_batch_predicted`]).
+    pub energy_aj: AtomicU64,
+    /// PE compute time billed to this tenant, nanoseconds.
+    pub compute_ns: AtomicU64,
+    lat_hist: [AtomicU64; LAT_BUCKETS],
+    lat_count: AtomicU64,
+}
+
+impl TenantMetrics {
+    /// An empty bucket labeled with the tenant class name.
+    pub fn named(name: impl Into<String>) -> TenantMetrics {
+        TenantMetrics {
+            name: name.into(),
+            requests: AtomicU64::new(0),
+            shed_requests: AtomicU64::new(0),
+            shed_rows: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            energy_aj: AtomicU64::new(0),
+            compute_ns: AtomicU64::new(0),
+            lat_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            lat_count: AtomicU64::new(0),
+        }
+    }
+
+    /// Called by admission on every accepted request.
+    pub fn note_submit(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Called by admission on every shed request (`rows` = the rows the
+    /// refused request carried).
+    pub fn note_shed(&self, rows: u64) {
+        self.shed_requests.fetch_add(1, Ordering::Relaxed);
+        self.shed_rows.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    /// Called by a PE worker after completing a tenant-homogeneous
+    /// batch: the batch's rows, its billed energy and its compute time.
+    pub fn add_rows(&self, rows: u64, pj: f64, ns: u64) {
+        self.rows.fetch_add(rows, Ordering::Relaxed);
+        self.energy_aj
+            .fetch_add((pj.max(0.0) * 1e6).round() as u64, Ordering::Relaxed);
+        self.compute_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record one request's submit→complete latency for this tenant.
+    pub fn observe_latency_ns(&self, ns: u64) {
+        let bucket = (64 - ns.leading_zeros() as usize).min(LAT_BUCKETS - 1);
+        self.lat_hist[bucket].fetch_add(1, Ordering::Relaxed);
+        self.lat_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Energy billed per completed row, pJ (0.0 before any rows).
+    pub fn pj_per_row(&self) -> f64 {
+        let rows = self.rows.load(Ordering::Relaxed);
+        if rows == 0 {
+            return 0.0;
+        }
+        self.energy_aj.load(Ordering::Relaxed) as f64 / 1e6 / rows as f64
+    }
+
+    /// Shed requests as a fraction of all arrivals (0.0 before any).
+    pub fn shed_rate(&self) -> f64 {
+        let shed = self.shed_requests.load(Ordering::Relaxed);
+        let total = shed + self.requests.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        shed as f64 / total as f64
+    }
+
+    /// Cumulative latency quantile for this tenant (upper bucket bound).
+    pub fn latency_quantile_ns(&self, q: f64) -> Option<u64> {
+        let mut hist = [0u64; LAT_BUCKETS];
+        for (dst, src) in hist.iter_mut().zip(&self.lat_hist) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        quantile_of(&hist, self.lat_count.load(Ordering::Relaxed), q)
+    }
+
+    /// Point-in-time copy — windowed readers (the per-tenant governor,
+    /// the fleet bench's phase cells) difference two of these.
+    pub fn snapshot(&self) -> TenantSnapshot {
+        let mut snap = TenantSnapshot::empty();
+        snap.requests = self.requests.load(Ordering::Relaxed);
+        snap.shed_requests = self.shed_requests.load(Ordering::Relaxed);
+        snap.shed_rows = self.shed_rows.load(Ordering::Relaxed);
+        snap.rows = self.rows.load(Ordering::Relaxed);
+        snap.energy_aj = self.energy_aj.load(Ordering::Relaxed);
+        snap.compute_ns = self.compute_ns.load(Ordering::Relaxed);
+        snap.lat_count = self.lat_count.load(Ordering::Relaxed);
+        for (dst, src) in snap.lat_hist.iter_mut().zip(&self.lat_hist) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        snap
+    }
+}
+
+/// Plain-value copy of one tenant bucket (see [`TenantMetrics`]).
+#[derive(Debug, Clone)]
+pub struct TenantSnapshot {
+    pub requests: u64,
+    pub shed_requests: u64,
+    pub shed_rows: u64,
+    pub rows: u64,
+    pub energy_aj: u64,
+    pub compute_ns: u64,
+    pub lat_count: u64,
+    pub lat_hist: [u64; LAT_BUCKETS],
+}
+
+impl TenantSnapshot {
+    /// The all-zero baseline.
+    pub fn empty() -> TenantSnapshot {
+        TenantSnapshot {
+            requests: 0,
+            shed_requests: 0,
+            shed_rows: 0,
+            rows: 0,
+            energy_aj: 0,
+            compute_ns: 0,
+            lat_count: 0,
+            lat_hist: [0; LAT_BUCKETS],
+        }
+    }
+
+    /// Latency quantile over the window between `earlier` and this
+    /// snapshot (`None` when nothing completed in the window).
+    pub fn window_latency_quantile_ns(
+        &self,
+        earlier: &TenantSnapshot,
+        q: f64,
+    ) -> Option<u64> {
+        let mut hist = [0u64; LAT_BUCKETS];
+        let mut count = 0u64;
+        for (i, h) in hist.iter_mut().enumerate() {
+            *h = self.lat_hist[i].saturating_sub(earlier.lat_hist[i]);
+            count += *h;
+        }
+        quantile_of(&hist, count, q)
+    }
+
+    /// Rows completed in the window between `earlier` and this snapshot.
+    pub fn window_rows(&self, earlier: &TenantSnapshot) -> u64 {
+        self.rows.saturating_sub(earlier.rows)
+    }
+
+    /// Requests accepted in the window.
+    pub fn window_requests(&self, earlier: &TenantSnapshot) -> u64 {
+        self.requests.saturating_sub(earlier.requests)
+    }
+
+    /// Requests shed in the window.
+    pub fn window_shed(&self, earlier: &TenantSnapshot) -> u64 {
+        self.shed_requests.saturating_sub(earlier.shed_requests)
+    }
+
+    /// Energy billed in the window, pJ.
+    pub fn window_pj(&self, earlier: &TenantSnapshot) -> f64 {
+        self.energy_aj.saturating_sub(earlier.energy_aj) as f64 / 1e6
+    }
+}
+
 /// Plain-value copy of one variant bucket (inside [`MetricsSnapshot`]).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct VariantCounters {

@@ -31,13 +31,22 @@
 //! paper's run-time repacking exercised as load-adaptive serving.
 //! Billing always follows the variant a batch *actually executed*.
 //!
+//! Since DESIGN.md §17 the serving machinery generalizes to a
+//! [`Fleet`] front end: N hosted models behind one admission layer,
+//! per-tenant SLO classes ([`SloClass`]) with their own governor
+//! instances and certified-cost load shedding, and each model's
+//! traffic sharded across replicated PE pools. The single-model
+//! [`Coordinator`] is its one-model, one-tenant deployment.
+//!
 //! Offline-image note: the std thread + channel fabric stands in for
-//! tokio (DESIGN.md §8); the public API is synchronous `submit`/`drain`.
+//! tokio (DESIGN.md §8); the public API is synchronous `submit`/`drain`
+//! on the coordinator, with the fleet adding non-blocking collection.
 
 pub mod batcher;
 pub mod cost;
 pub mod demo;
 pub mod engine;
+pub mod fleet;
 pub mod governor;
 pub mod metrics;
 pub mod model;
@@ -46,12 +55,11 @@ pub mod server;
 pub use batcher::{Batch, Batcher, TrackedRequest};
 pub use cost::CostTable;
 pub use engine::{EngineScratch, EngineStats, PackedEngine};
-// The deprecated pre-conv alias stays re-exported for downstream
-// compatibility; the `allow` keeps this crate's own build clean.
-#[allow(deprecated)]
-pub use engine::PackedMlpEngine;
-pub use governor::{CertifiedCosts, GovernorPolicy, LoadSignals, PinnedVariant, SloPolicy};
-pub use metrics::{Metrics, MetricsSnapshot, VariantMetrics};
+pub use fleet::{Fleet, FleetConfig, ModelConfig};
+pub use governor::{
+    CertifiedCosts, GovernorPolicy, LoadSignals, PinnedVariant, SloClass, SloPolicy,
+};
+pub use metrics::{Metrics, MetricsSnapshot, TenantMetrics, TenantSnapshot, VariantMetrics};
 pub use model::{CompiledModel, Variant, VariantSet, VariantSpec};
 pub use server::{
     Coordinator, DispatchPolicy, Request, Response, ServeConfig, ServeError,

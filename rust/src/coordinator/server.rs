@@ -1,42 +1,34 @@
-//! The coordinator: request intake → dynamic batcher → PE worker pool.
+//! The single-model coordinator: request intake → dynamic batcher →
+//! PE worker pool.
 //!
-//! Serving shape (DESIGN.md §8): the submitting thread and a deadline
-//! thread share the batcher and the router; each PE worker owns one
-//! [`PackedEngine`] bound to the single shared [`CompiledModel`].
-//! Dispatch routes formed batches over *bounded* per-worker queues —
-//! least-outstanding-rows by default, round-robin for comparison — so a
-//! slow PE exerts backpressure instead of growing an unbounded mailbox.
-//! The deadline thread drives [`Batcher::tick`] so straggler requests
-//! flush without an explicit [`Coordinator::drain`]. Worker death is
-//! surfaced as [`ServeError`], never a panic in the coordinator, and a
-//! dead PE can be respawned in place with
-//! [`Coordinator::revive_worker`] (rolling restarts must not
-//! permanently shrink capacity).
+//! Since DESIGN.md §17 the serving machinery itself — batcher lanes,
+//! load-aware routing over bounded per-worker queues, the deadline
+//! thread, worker fault handling — lives in the fleet front end
+//! ([`Fleet`], fleet.rs). The [`Coordinator`] here is the one-model,
+//! one-tenant deployment of it, preserved as the simple synchronous
+//! API (`submit`/`drain`) the rest of the crate serves through: one
+//! pool of `n_pes` PE workers, one unbounded default tenant (admission
+//! never sheds), and the same typed [`ServeError`] surface the seed's
+//! coordinator grew PR over PR.
 //!
 //! When the served model carries several precision variants
 //! (DESIGN.md §13), every dispatch consults the installed
 //! [`GovernorPolicy`] with the live load signals (queued rows + the
-//! windowed p99 from the metrics histogram); the chosen variant is
-//! stamped on the batch, the batcher's alignment quantum follows it,
-//! and the PE worker requantizes the batch's rows
-//! ([`Variant::in_shift`]) and bills cycles/energy to the variant it
-//! **actually executed** — never to a later decision.
+//! windowed p99); the chosen variant is stamped on the batch, the
+//! batcher's alignment quantum follows it, and the PE worker
+//! requantizes the batch's rows ([`Variant::in_shift`]) and bills
+//! cycles/energy to the variant it **actually executed** — never to a
+//! later decision.
 //!
 //! [`Variant::in_shift`]: super::model::Variant::in_shift
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{
-    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
-};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
-use super::batcher::{Batch, Batcher, TrackedRequest};
 use super::cost::CostTable;
-use super::engine::PackedEngine;
-use super::governor::{GovernorPolicy, LoadSignals, PinnedVariant};
-use super::metrics::{Metrics, MetricsSnapshot};
+use super::fleet::{Fleet, FleetConfig, ModelConfig};
+use super::governor::{GovernorPolicy, PinnedVariant, SloClass};
+use super::metrics::Metrics;
 use super::model::CompiledModel;
 
 /// An inference request: rows of quantized activations at the model's
@@ -50,10 +42,16 @@ pub struct Request {
 
 /// Its response: per-row logits at the executing variant's final
 /// accumulator format, tagged with the variant that produced them so
-/// callers can check against the right per-variant oracle.
+/// callers can check against the right per-variant oracle, plus the
+/// (model, tenant) routing tags the fleet served it under (both 0 for
+/// the single-model [`Coordinator`]).
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
+    /// The hosted model that served this request.
+    pub model: usize,
+    /// The tenant class this request was admitted under.
+    pub tenant: usize,
     pub logits: Vec<Vec<i64>>,
     /// The precision variant that executed this request's batch.
     pub variant: usize,
@@ -68,10 +66,15 @@ pub enum DispatchPolicy {
     LeastLoaded,
 }
 
-/// Coordinator deployment knobs.
+/// Coordinator deployment knobs (also: per-pool knobs of a fleet
+/// [`ModelConfig`]). Zero values are *kept* by the builders and
+/// rejected with [`ServeError::InvalidConfig`] at
+/// [`Coordinator::start`] / [`Fleet::start`] — a nonsense deployment
+/// is a typed error for its caller, not a silent clamp or a downstream
+/// hang.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// Number of PE worker threads.
+    /// Number of PE worker threads (per pool).
     pub n_pes: usize,
     /// Rows the batcher tries to fill before forming a batch.
     pub target_rows: usize,
@@ -86,8 +89,8 @@ pub struct ServeConfig {
 impl ServeConfig {
     pub fn new(n_pes: usize, target_rows: usize) -> ServeConfig {
         ServeConfig {
-            n_pes: n_pes.max(1),
-            target_rows: target_rows.max(1),
+            n_pes,
+            target_rows,
             queue_depth: 2,
             deadline: Duration::from_millis(2),
             policy: DispatchPolicy::LeastLoaded,
@@ -105,8 +108,31 @@ impl ServeConfig {
     }
 
     pub fn queue_depth(mut self, depth: usize) -> ServeConfig {
-        self.queue_depth = depth.max(1);
+        self.queue_depth = depth;
         self
+    }
+
+    /// Reject deployments that cannot serve: zero workers would hang
+    /// every dispatch, a zero batch target would never form a batch,
+    /// and a zero queue depth is an unbuffered rendezvous no worker
+    /// loop services.
+    pub fn validate(&self) -> Result<(), ServeError> {
+        if self.n_pes == 0 {
+            return Err(ServeError::InvalidConfig {
+                what: "n_pes == 0 (need at least one PE worker)",
+            });
+        }
+        if self.target_rows == 0 {
+            return Err(ServeError::InvalidConfig {
+                what: "target_rows == 0 (batches would never form)",
+            });
+        }
+        if self.queue_depth == 0 {
+            return Err(ServeError::InvalidConfig {
+                what: "queue_depth == 0 (worker queues need capacity)",
+            });
+        }
+        Ok(())
     }
 }
 
@@ -114,10 +140,23 @@ impl ServeConfig {
 /// `expect("worker alive")` panics).
 #[derive(Debug)]
 pub enum ServeError {
+    /// The deployment description is unservable (zero workers, zero
+    /// batch target, zero queue depth, no models, no tenants); nothing
+    /// was spawned.
+    InvalidConfig { what: &'static str },
+    /// The request named a model id the fleet does not host.
+    UnknownModel { model: usize },
+    /// The request named a tenant id the fleet has no class for.
+    UnknownTenant { tenant: usize },
     /// The request doesn't fit the model (wrong row width, no rows, or
     /// out-of-range raw values); nothing was enqueued. Rejecting at
     /// submit keeps a malformed request from panicking a PE worker.
     InvalidRequest { id: u64, reason: String },
+    /// Admission control refused the request: the certified drain time
+    /// of the tenant's already-queued rows exceeds its SLO class's
+    /// budget (DESIGN.md §17). The request was never enqueued — load
+    /// shedding is a typed refusal, not a silent drop.
+    Shed { tenant: usize, reason: String },
     /// Every PE worker is dead; the offending rows were restored to the
     /// batcher, not dropped. `recovered` carries any responses that
     /// were still collected (empty on the submit path).
@@ -144,8 +183,20 @@ pub enum ServeError {
 impl std::fmt::Display for ServeError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
+            ServeError::InvalidConfig { what } => {
+                write!(f, "invalid serve config: {what}")
+            }
+            ServeError::UnknownModel { model } => {
+                write!(f, "unknown model id {model}")
+            }
+            ServeError::UnknownTenant { tenant } => {
+                write!(f, "unknown tenant id {tenant}")
+            }
             ServeError::InvalidRequest { id, reason } => {
                 write!(f, "invalid request {id}: {reason}")
+            }
+            ServeError::Shed { tenant, reason } => {
+                write!(f, "request shed for tenant {tenant}: {reason}")
             }
             ServeError::NoLiveWorkers { recovered } => write!(
                 f,
@@ -170,344 +221,10 @@ impl std::fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
-/// Recover a mutex regardless of poisoning — for paths that must make
-/// progress after a panic elsewhere (teardown, observability, the
-/// deadline tick, writing off dead workers' counters). The guarded
-/// state is counters and queues that stay consistent across a holder's
-/// panic; the submit paths use [`lock_or`] instead and surface the
-/// poisoning as a typed error.
-fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
-}
-
-/// Acquire a mutex or surface the poisoning as
-/// [`ServeError::LockPoisoned`] — the submit-path counterpart of
-/// [`relock`]: a caller handing in new work can be refused cleanly.
-fn lock_or<'a, T>(
-    m: &'a Mutex<T>,
-    what: &'static str,
-) -> Result<std::sync::MutexGuard<'a, T>, ServeError> {
-    m.lock()
-        .map_err(|_| ServeError::LockPoisoned { what, recovered: vec![] })
-}
-
-enum WorkerMsg {
-    Work(Batch),
-    Stop,
-}
-
-/// Leader-side view of one PE worker.
-struct WorkerPort {
-    tx: SyncSender<WorkerMsg>,
-    /// Rows dispatched to this worker and not yet completed.
-    outstanding_rows: Arc<AtomicUsize>,
-    /// Batches dispatched to this worker and not yet completed.
-    outstanding_batches: Arc<AtomicUsize>,
-    alive: bool,
-}
-
-/// Load-aware batch router over the worker ports.
-struct Router {
-    ports: Vec<WorkerPort>,
-    policy: DispatchPolicy,
-    next_rr: usize,
-}
-
-impl Router {
-    /// Candidate workers, best first, per the policy. Only live ports.
-    fn candidates(&mut self) -> Vec<usize> {
-        let live: Vec<usize> = (0..self.ports.len())
-            .filter(|&i| self.ports[i].alive)
-            .collect();
-        if live.is_empty() {
-            return live;
-        }
-        match self.policy {
-            DispatchPolicy::RoundRobin => {
-                let start = self.next_rr % live.len();
-                self.next_rr = self.next_rr.wrapping_add(1);
-                let mut order = Vec::with_capacity(live.len());
-                for off in 0..live.len() {
-                    order.push(live[(start + off) % live.len()]);
-                }
-                order
-            }
-            DispatchPolicy::LeastLoaded => {
-                let mut order = live;
-                order.sort_by_key(|&i| {
-                    self.ports[i].outstanding_rows.load(Ordering::Relaxed)
-                });
-                order
-            }
-        }
-    }
-
-    /// Route one batch. Tries every live worker without blocking; if all
-    /// bounded queues are full, blocks on the preferred worker
-    /// (backpressure). `Err(batch)` iff no live worker remains.
-    fn dispatch(&mut self, batch: Batch) -> Result<usize, Batch> {
-        let mut batch = batch;
-        loop {
-            let order = self.candidates();
-            if order.is_empty() {
-                return Err(batch);
-            }
-            // Non-blocking pass in preference order.
-            for &w in &order {
-                self.charge(w, &batch);
-                match self.ports[w].tx.try_send(WorkerMsg::Work(batch)) {
-                    Ok(()) => return Ok(w),
-                    Err(TrySendError::Full(msg)) => {
-                        batch = self.uncharge(w, msg);
-                    }
-                    Err(TrySendError::Disconnected(msg)) => {
-                        batch = self.uncharge(w, msg);
-                        self.ports[w].alive = false;
-                    }
-                }
-            }
-            // All live queues full: block on the preferred one.
-            let w = match self.candidates().first() {
-                Some(&w) => w,
-                None => return Err(batch),
-            };
-            self.charge(w, &batch);
-            match self.ports[w].tx.send(WorkerMsg::Work(batch)) {
-                Ok(()) => return Ok(w),
-                Err(std::sync::mpsc::SendError(msg)) => {
-                    batch = self.uncharge(w, msg);
-                    self.ports[w].alive = false;
-                    // Retry the remaining live workers.
-                }
-            }
-        }
-    }
-
-    fn charge(&self, w: usize, batch: &Batch) {
-        self.ports[w]
-            .outstanding_rows
-            .fetch_add(batch.rows, Ordering::Relaxed);
-        self.ports[w]
-            .outstanding_batches
-            .fetch_add(1, Ordering::Relaxed);
-    }
-
-    fn uncharge(&self, w: usize, msg: WorkerMsg) -> Batch {
-        let batch = match msg {
-            WorkerMsg::Work(b) => b,
-            WorkerMsg::Stop => unreachable!("router only routes work"),
-        };
-        self.ports[w]
-            .outstanding_rows
-            .fetch_sub(batch.rows, Ordering::Relaxed);
-        self.ports[w]
-            .outstanding_batches
-            .fetch_sub(1, Ordering::Relaxed);
-        batch
-    }
-}
-
-/// The governor's mutable half: the installed policy plus the metrics
-/// snapshot its last decision was taken at (windowed p99 = the
-/// histogram delta between two consecutive decisions).
-struct GovernorState {
-    policy: Box<dyn GovernorPolicy>,
-    last_snap: MetricsSnapshot,
-}
-
-/// State shared between the submit path, the deadline thread, and the
-/// PE workers.
-struct Shared {
-    batcher: Mutex<Batcher>,
-    router: Mutex<Router>,
-    /// Batches dispatched and not yet collected by the leader.
-    in_flight: AtomicUsize,
-    stop_deadline: AtomicBool,
-    metrics: Arc<Metrics>,
-    /// The precision governor, consulted once per dispatched batch.
-    governor: Mutex<GovernorState>,
-    /// Each worker slot's outstanding-row counter (shared with the
-    /// router's ports) — readable without the router lock, so the
-    /// governor's queue-depth signal never nests router inside batcher
-    /// beyond the dispatch itself.
-    port_loads: Vec<Arc<AtomicUsize>>,
-    /// Per-variant batch quanta (index = variant id); also the variant
-    /// count — single-entry for a single-variant model.
-    quanta: Vec<usize>,
-    /// Most recently chosen variant (observability; billing follows
-    /// each batch's own tag, not this).
-    active_variant: AtomicUsize,
-}
-
-impl Shared {
-    /// Count and route one formed batch while still holding the batcher
-    /// lock. Holding the lock keeps the invariant that whenever the
-    /// batcher is observable, every formed batch is either counted in
-    /// `in_flight` or restored as pending — so `drain` can never slip
-    /// between "batch left the batcher" and "batch became in-flight".
-    /// Lock order is always batcher → governor → router; never any
-    /// reverse.
-    fn dispatch_locked(
-        &self,
-        batcher: &mut Batcher,
-        mut batch: Batch,
-    ) -> Result<(), ServeError> {
-        // Governor decision (DESIGN.md §13): sample the live load —
-        // this batch's rows, everything still pending, and every row
-        // dispatched-but-not-done — plus the windowed p99 since the
-        // previous decision; stamp the batch and re-arm the batcher's
-        // alignment quantum for the *next* batch. A restored batch
-        // passes through here again on retry and may legitimately be
-        // re-tagged: it has not executed yet. A single-variant model
-        // has no decision to make: skip the snapshot/quantile work
-        // entirely rather than tax every dispatch of the common case
-        // with a heap allocation under the batcher lock.
-        // A poisoned governor degrades gracefully: the batch keeps its
-        // current variant tag and dispatch proceeds — precision
-        // adaptation pauses, serving does not.
-        if self.quanta.len() > 1 {
-            if let Ok(mut gov) = self.governor.lock() {
-                self.govern(&mut gov, batcher, &mut batch);
-            }
-        }
-        self.in_flight.fetch_add(1, Ordering::SeqCst);
-        let result = match self.router.lock() {
-            Ok(mut router) => router.dispatch(batch),
-            Err(_) => {
-                // Poisoned router: restore the batch (it was never
-                // dispatched) and refuse the submit.
-                self.in_flight.fetch_sub(1, Ordering::SeqCst);
-                batcher.restore(batch);
-                return Err(ServeError::LockPoisoned {
-                    what: "router",
-                    recovered: vec![],
-                });
-            }
-        };
-        match result {
-            Ok(_) => Ok(()),
-            Err(batch) => {
-                self.in_flight.fetch_sub(1, Ordering::SeqCst);
-                batcher.restore(batch);
-                Err(ServeError::NoLiveWorkers { recovered: vec![] })
-            }
-        }
-    }
-
-    /// The governor decision of [`dispatch_locked`], split out so a
-    /// poisoned governor lock can skip it wholesale.
-    fn govern(&self, gov: &mut GovernorState, batcher: &mut Batcher, batch: &mut Batch) {
-        let queued_rows = batch.rows
-            + batcher.pending_rows()
-            + self
-                .port_loads
-                .iter()
-                .map(|l| l.load(Ordering::Relaxed))
-                .sum::<usize>();
-        let snap = self.metrics.snapshot();
-        let window_p99_ns = snap.window_latency_quantile_ns(&gov.last_snap, 0.99);
-        let chosen = gov.policy.choose(&LoadSignals {
-            queued_rows,
-            window_p99_ns,
-            n_variants: self.quanta.len(),
-        });
-        gov.last_snap = snap;
-        let v = chosen.min(self.quanta.len() - 1);
-        if v != self.active_variant.swap(v, Ordering::Relaxed) {
-            self.metrics.note_variant_switch();
-        }
-        batch.variant = v;
-        batcher.set_quantum(self.quanta[v]);
-    }
-
-    /// Submit path: offer a request; dispatch if the target fills.
-    fn push_and_dispatch(&self, tr: TrackedRequest) -> Result<(), ServeError> {
-        let mut batcher = lock_or(&self.batcher, "batcher")?;
-        match batcher.push(tr) {
-            Some(batch) => self.dispatch_locked(&mut batcher, batch),
-            None => Ok(()),
-        }
-    }
-
-    /// Deadline-thread path: poll tick; dispatch a straggler flush.
-    /// Recovers a poisoned batcher — the deadline thread must keep
-    /// ticking (and must never panic itself) after a panic elsewhere.
-    fn tick_and_dispatch(&self) {
-        let mut batcher = relock(&self.batcher);
-        if let Some(batch) = batcher.tick() {
-            // Total dispatch failure restores the rows; the next
-            // drain() surfaces the error.
-            let _ = self.dispatch_locked(&mut batcher, batch);
-        }
-    }
-
-    /// Drain path: force out whatever is pending.
-    fn flush_and_dispatch(&self) -> Result<(), ServeError> {
-        let mut batcher = lock_or(&self.batcher, "batcher")?;
-        match batcher.flush() {
-            Some(batch) => self.dispatch_locked(&mut batcher, batch),
-            None => Ok(()),
-        }
-    }
-}
-
-/// The running coordinator.
+/// The running coordinator: a one-model, one-tenant [`Fleet`].
 pub struct Coordinator {
-    shared: Arc<Shared>,
-    rx_done: Receiver<(usize, Vec<Response>)>,
-    workers: Vec<JoinHandle<()>>,
-    deadline_thread: Option<JoinHandle<()>>,
+    pub(crate) fleet: Fleet,
     pub metrics: Arc<Metrics>,
-    /// Model row width, for request validation at submit.
-    input_width: usize,
-    /// Half-range of the reference variant's input format
-    /// (`2^(in_bits-1)`), for validation.
-    in_half: i64,
-    /// Worker (re)spawn context, kept for [`Coordinator::revive_worker`].
-    model: Arc<CompiledModel>,
-    cost: Arc<CostTable>,
-    tx_done: Sender<(usize, Vec<Response>)>,
-    queue_depth: usize,
-}
-
-/// Spawn one PE worker thread bound to slot `worker_id`, reusing the
-/// slot's outstanding-work counters (they outlive any one incarnation
-/// of the worker — the router and the governor read them by slot).
-#[allow(clippy::too_many_arguments)]
-fn spawn_worker(
-    worker_id: usize,
-    model: &Arc<CompiledModel>,
-    cost: &Arc<CostTable>,
-    tx_done: &Sender<(usize, Vec<Response>)>,
-    metrics: &Arc<Metrics>,
-    queue_depth: usize,
-    outstanding_rows: Arc<AtomicUsize>,
-    outstanding_batches: Arc<AtomicUsize>,
-) -> (WorkerPort, JoinHandle<()>) {
-    let (tx, rx) = sync_channel::<WorkerMsg>(queue_depth.max(1));
-    let port = WorkerPort {
-        tx,
-        outstanding_rows: Arc::clone(&outstanding_rows),
-        outstanding_batches: Arc::clone(&outstanding_batches),
-        alive: true,
-    };
-    let done = tx_done.clone();
-    let m = Arc::clone(metrics);
-    let c = Arc::clone(cost);
-    let engine = PackedEngine::new(Arc::clone(model));
-    let handle = std::thread::spawn(move || {
-        worker_loop(
-            worker_id,
-            engine,
-            rx,
-            done,
-            m,
-            c,
-            outstanding_rows,
-            outstanding_batches,
-        );
-    });
-    (port, handle)
 }
 
 impl Coordinator {
@@ -516,8 +233,13 @@ impl Coordinator {
     /// multi-variant model serves variant 0 until a policy is installed
     /// via [`Coordinator::start_with_policy`]). Plans are compiled by
     /// [`CompiledModel::compile`], exactly once, before this call;
-    /// workers only clone the `Arc`.
-    pub fn start(model: Arc<CompiledModel>, cfg: ServeConfig, cost: CostTable) -> Coordinator {
+    /// workers only clone the `Arc`. Fails with
+    /// [`ServeError::InvalidConfig`] on an unservable `cfg`.
+    pub fn start(
+        model: Arc<CompiledModel>,
+        cfg: ServeConfig,
+        cost: CostTable,
+    ) -> Result<Coordinator, ServeError> {
         Coordinator::start_with_policy(model, cfg, cost, Box::new(PinnedVariant(0)))
     }
 
@@ -528,144 +250,42 @@ impl Coordinator {
         cfg: ServeConfig,
         cost: CostTable,
         policy: Box<dyn GovernorPolicy>,
-    ) -> Coordinator {
-        let names: Vec<String> =
-            model.variants().iter().map(|v| v.name().to_string()).collect();
-        let metrics = Arc::new(Metrics::with_variant_names(&names));
-        let (tx_done, rx_done) = channel::<(usize, Vec<Response>)>();
-        let cost = Arc::new(cost);
-        let queue_depth = cfg.queue_depth.max(1);
-        let mut ports = vec![];
-        let mut workers = vec![];
-        let mut port_loads = vec![];
-        for worker_id in 0..cfg.n_pes.max(1) {
-            let outstanding_rows = Arc::new(AtomicUsize::new(0));
-            let outstanding_batches = Arc::new(AtomicUsize::new(0));
-            port_loads.push(Arc::clone(&outstanding_rows));
-            let (port, handle) = spawn_worker(
-                worker_id,
-                &model,
-                &cost,
-                &tx_done,
-                &metrics,
-                queue_depth,
-                outstanding_rows,
-                outstanding_batches,
-            );
-            ports.push(port);
-            workers.push(handle);
-        }
-        let quanta: Vec<usize> =
-            model.variants().iter().map(|v| v.batch_quantum()).collect();
-        let mut batcher = Batcher::new(cfg.target_rows, 2);
-        batcher.set_quantum(quanta[0]);
-        let shared = Arc::new(Shared {
-            batcher: Mutex::new(batcher),
-            router: Mutex::new(Router {
-                ports,
-                policy: cfg.policy,
-                next_rr: 0,
-            }),
-            in_flight: AtomicUsize::new(0),
-            stop_deadline: AtomicBool::new(false),
-            metrics: Arc::clone(&metrics),
-            governor: Mutex::new(GovernorState {
-                policy,
-                last_snap: MetricsSnapshot::empty(quanta.len()),
-            }),
-            port_loads,
-            quanta,
-            active_variant: AtomicUsize::new(0),
-        });
-        // Deadline thread: tick at half the deadline so a straggler
-        // flushes within (0.5, 1.0]× the configured deadline.
-        let tick_period = (cfg.deadline / 2).max(Duration::from_micros(200));
-        let shared_bg = Arc::clone(&shared);
-        let deadline_thread = std::thread::spawn(move || {
-            while !shared_bg.stop_deadline.load(Ordering::Acquire) {
-                std::thread::park_timeout(tick_period);
-                shared_bg.tick_and_dispatch();
-            }
-        });
-        Coordinator {
-            shared,
-            rx_done,
-            workers,
-            deadline_thread: Some(deadline_thread),
-            metrics,
-            input_width: model.input_width(),
-            in_half: 1i64 << (model.in_bits() - 1),
-            model,
-            cost,
-            tx_done,
-            queue_depth,
-        }
+    ) -> Result<Coordinator, ServeError> {
+        cfg.validate()?;
+        let fleet = Fleet::start(
+            FleetConfig::new()
+                .model(ModelConfig::new(model, cost, cfg))
+                .tenant(SloClass::unbounded("default")),
+        )?;
+        fleet.install_policy(0, 0, policy)?;
+        let metrics = fleet.model_metrics(0);
+        Ok(Coordinator { fleet, metrics })
     }
 
     /// The variant the governor chose at the most recent dispatch
     /// (observability; per-batch billing follows each batch's own tag).
     pub fn active_variant(&self) -> usize {
-        self.shared.active_variant.load(Ordering::Relaxed)
+        self.fleet.active_variant(0, 0)
     }
 
     /// Submit a request (may trigger a batch dispatch). Shape and range
-    /// are validated here so a malformed request is an error for its
-    /// sender, never a panic inside a PE worker.
+    /// are validated at admission so a malformed request is an error
+    /// for its sender, never a panic inside a PE worker.
     pub fn submit(&mut self, req: Request) -> Result<(), ServeError> {
-        self.validate(&req)?;
-        self.metrics.note_submit();
-        self.shared.push_and_dispatch(TrackedRequest::now(req))
-    }
-
-    fn validate(&self, req: &Request) -> Result<(), ServeError> {
-        let invalid = |reason: String| ServeError::InvalidRequest { id: req.id, reason };
-        if req.rows.is_empty() {
-            return Err(invalid("request has no rows".to_string()));
-        }
-        for (i, row) in req.rows.iter().enumerate() {
-            if row.len() != self.input_width {
-                return Err(invalid(format!(
-                    "row {i} width {} != model input width {}",
-                    row.len(),
-                    self.input_width
-                )));
-            }
-            if let Some(&v) = row.iter().find(|&&v| v < -self.in_half || v >= self.in_half) {
-                return Err(invalid(format!(
-                    "row {i} value {v} outside Q range [{}, {})",
-                    -self.in_half, self.in_half
-                )));
-            }
-        }
-        Ok(())
+        self.fleet.submit(0, 0, req)
     }
 
     /// Rows batched but not yet dispatched (waiting on the deadline).
     /// Observability must survive a poisoned lock.
     pub fn pending_rows(&self) -> usize {
-        relock(&self.shared.batcher).pending_rows()
+        self.fleet.pending_rows()
     }
 
     /// Fault injection / rolling restart: stop worker `idx` after it
     /// finishes its queued work. Routing avoids it immediately; its
     /// in-queue work still completes and is collected by `drain`.
     pub fn kill_worker(&mut self, idx: usize) {
-        let tx = {
-            let mut router = relock(&self.shared.router);
-            match router.ports.get_mut(idx) {
-                Some(port) => {
-                    port.alive = false;
-                    port.tx.clone()
-                }
-                None => return,
-            }
-        };
-        // Deliver Stop without holding the router lock and without
-        // blocking the caller: behind a full queue the send parks on a
-        // helper thread until the worker drains its backlog.
-        std::thread::spawn(move || {
-            let _ = tx.send(WorkerMsg::Stop);
-        });
+        self.fleet.kill_worker(0, 0, idx);
     }
 
     /// Rolling-restart companion of [`kill_worker`]: respawn a dead
@@ -679,216 +299,19 @@ impl Coordinator {
     ///
     /// [`kill_worker`]: Coordinator::kill_worker
     pub fn revive_worker(&mut self, idx: usize) -> bool {
-        if idx >= self.workers.len() {
-            return false;
-        }
-        {
-            let router = relock(&self.shared.router);
-            if router.ports[idx].alive {
-                return false;
-            }
-        }
-        // The old incarnation exits once its queued work (and the
-        // pending Stop) drains; joining here is what makes "revive"
-        // safe — two workers never share a slot.
-        let (mut port, handle) = spawn_worker(
-            idx,
-            &self.model,
-            &self.cost,
-            &self.tx_done,
-            &self.metrics,
-            self.queue_depth,
-            Arc::clone(&self.shared.port_loads[idx]),
-            {
-                let router = relock(&self.shared.router);
-                Arc::clone(&router.ports[idx].outstanding_batches)
-            },
-        );
-        let old = std::mem::replace(&mut self.workers[idx], handle);
-        let _ = old.join();
-        // Install the new port only after the old worker is gone: its
-        // leftover counters were either drained by the worker itself or
-        // written off by `drain`.
-        let mut router = relock(&self.shared.router);
-        std::mem::swap(&mut router.ports[idx], &mut port);
-        // `port` now holds the dead incarnation's channel; dropping it
-        // closes that queue for good.
-        true
+        self.fleet.revive_worker(0, 0, idx)
     }
 
     /// Flush stragglers and wait for every response. On failure the
     /// error still carries whatever responses could be collected —
     /// completed work is never stranded behind an error.
     pub fn drain(&mut self) -> Result<Vec<Response>, ServeError> {
-        // Collect in-flight work even if the flush finds no live
-        // workers: earlier batches may already have completed.
-        let flush_err = self.shared.flush_and_dispatch().err();
-        let mut out = vec![];
-        let mut lost_workers: Vec<usize> = vec![];
-        let mut lost_rows = 0usize;
-        // Write off work held by workers that exited without answering.
-        let write_off = |lost_workers: &mut Vec<usize>, lost_rows: &mut usize| {
-            let mut router = relock(&self.shared.router);
-            for (i, port) in router.ports.iter_mut().enumerate() {
-                if !self.workers[i].is_finished() {
-                    continue;
-                }
-                port.alive = false;
-                let batches = port.outstanding_batches.swap(0, Ordering::SeqCst);
-                if batches == 0 {
-                    continue;
-                }
-                let rows = port.outstanding_rows.swap(0, Ordering::SeqCst);
-                self.shared.in_flight.fetch_sub(batches, Ordering::SeqCst);
-                self.metrics
-                    .dropped_rows
-                    .fetch_add(rows as u64, Ordering::Relaxed);
-                lost_workers.push(i);
-                *lost_rows += rows;
-            }
-        };
-        while self.shared.in_flight.load(Ordering::SeqCst) > 0 {
-            match self.rx_done.recv_timeout(Duration::from_millis(50)) {
-                Ok((_, mut rs)) => {
-                    self.shared.in_flight.fetch_sub(1, Ordering::SeqCst);
-                    out.append(&mut rs);
-                }
-                // Disconnected is unreachable while the coordinator
-                // holds its respawn sender (kept for `revive_worker`);
-                // both arms mean "no response right now" — write off
-                // work held by exited workers and keep collecting. The
-                // loop ends when `in_flight` reaches zero: every
-                // dispatched batch is either answered on `rx_done` or
-                // counted in some port's outstanding batches.
-                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
-                    write_off(&mut lost_workers, &mut lost_rows);
-                }
-            }
-        }
-        out.sort_by_key(|r| r.id);
-        if !lost_workers.is_empty() {
-            return Err(ServeError::WorkerLost {
-                workers: lost_workers,
-                lost_rows,
-                recovered: out,
-            });
-        }
-        match flush_err {
-            Some(ServeError::LockPoisoned { what, .. }) => {
-                Err(ServeError::LockPoisoned { what, recovered: out })
-            }
-            Some(_) => Err(ServeError::NoLiveWorkers { recovered: out }),
-            None => Ok(out),
-        }
+        self.fleet.drain()
     }
 
     /// Stop the deadline thread and workers, then join them.
-    pub fn shutdown(mut self) {
-        self.shared.stop_deadline.store(true, Ordering::Release);
-        if let Some(t) = self.deadline_thread.take() {
-            t.thread().unpark();
-            let _ = t.join();
-        }
-        {
-            let router = relock(&self.shared.router);
-            for port in &router.ports {
-                // Blocking send so Stop lands even behind a full queue;
-                // a dead worker just returns SendError.
-                let _ = port.tx.send(WorkerMsg::Stop);
-            }
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    worker_id: usize,
-    engine: PackedEngine,
-    rx: Receiver<WorkerMsg>,
-    done: Sender<(usize, Vec<Response>)>,
-    metrics: Arc<Metrics>,
-    cost: Arc<CostTable>,
-    outstanding_rows: Arc<AtomicUsize>,
-    outstanding_batches: Arc<AtomicUsize>,
-) {
-    // Steady-state serving allocates nothing in the engine: the worker
-    // owns one EngineScratch plus gather/output buffers for its whole
-    // lifetime, warmed by the first batch and reused across requests
-    // (DESIGN.md §11). Only the Response assembly below allocates.
-    // Under `--features simd` the engine picks the host-vector backend
-    // inside `forward_batch_into` with no scratch-shape change: the
-    // batch quantum already yields whole packed words and sub-tile
-    // tails are handled in the engine's MAC loops, so the worker (and
-    // the billing it reports) sees only real words either way
-    // (DESIGN.md §16).
-    let mut scratch = crate::coordinator::engine::EngineScratch::new();
-    let mut logits: Vec<Vec<i64>> = Vec::new();
-    let mut rows_buf: Vec<Vec<i64>> = Vec::new();
-    while let Ok(msg) = rx.recv() {
-        let batch = match msg {
-            WorkerMsg::Work(b) => b,
-            WorkerMsg::Stop => break,
-        };
-        let t0 = Instant::now();
-        // The variant this batch was tagged with at dispatch is the
-        // variant that executes — and the variant that gets billed.
-        let variant = batch.variant.min(engine.model().n_variants() - 1);
-        let in_shift = engine.model().variant(variant).in_shift();
-        // Gather rows into the reusable buffer (rows keep their
-        // capacity; `n_rows` tracks the live prefix), requantizing
-        // reference-precision request values into the executing
-        // variant's first-layer format (arithmetic right shift — the
-        // per-variant oracle applies the same transform), run packed,
-        // scatter back per request.
-        let mut n_rows = 0usize;
-        for entry in &batch.entries {
-            for row in &entry.req.rows {
-                if n_rows == rows_buf.len() {
-                    rows_buf.push(Vec::new());
-                }
-                rows_buf[n_rows].clear();
-                if in_shift == 0 {
-                    rows_buf[n_rows].extend_from_slice(row);
-                } else {
-                    rows_buf[n_rows].extend(row.iter().map(|&v| v >> in_shift));
-                }
-                n_rows += 1;
-            }
-        }
-        let stats =
-            engine.forward_batch_into(&rows_buf[..n_rows], variant, &mut scratch, &mut logits);
-        let ns = t0.elapsed().as_nanos() as u64;
-        // Exact per-format billing: with a mixed-precision schedule the
-        // layers run at different widths, so the worker hands the cost
-        // table the by-format cycle breakdown, not one format — and the
-        // whole batch lands in the executed variant's metrics bucket.
-        let pj = cost.batch_energy_pj(&stats);
-        // The static cost certificate's prediction for this batch,
-        // priced through the same table (DESIGN.md §15): a correct
-        // certificate makes the predicted and measured figures agree to
-        // the attojoule, and `report()` surfaces the delta.
-        let predicted_pj = engine.model().cost_certificate(variant).energy_pj(n_rows, &cost);
-        metrics.add_batch_predicted(n_rows as u64, variant, stats, pj, predicted_pj, ns);
-        let mut responses = vec![];
-        let mut offset = 0;
-        for entry in &batch.entries {
-            let n = entry.req.rows.len();
-            responses.push(Response {
-                id: entry.req.id,
-                logits: logits[offset..offset + n].to_vec(),
-                variant,
-            });
-            offset += n;
-            metrics.observe_latency_ns(entry.submitted_at.elapsed().as_nanos() as u64);
-        }
-        outstanding_rows.fetch_sub(batch.rows, Ordering::SeqCst);
-        outstanding_batches.fetch_sub(1, Ordering::SeqCst);
-        if done.send((worker_id, responses)).is_err() {
-            break; // leader gone
-        }
+    pub fn shutdown(self) {
+        self.fleet.shutdown()
     }
 }
 
@@ -899,6 +322,7 @@ mod tests {
     use crate::nn::weights::QuantLayer;
     use crate::testutil::{flat_cost as tiny_cost, random_dense_stack_uniform};
     use crate::workload::synth::XorShift64;
+    use std::sync::atomic::Ordering;
 
     fn layers(rng: &mut XorShift64) -> Vec<QuantLayer> {
         random_dense_stack_uniform(rng, &[8, 5, 3], 8)
@@ -909,7 +333,8 @@ mod tests {
         let mut rng = XorShift64::new(0xC00D);
         let ls = layers(&mut rng);
         let model = CompiledModel::compile(ls.clone(), 8, 16).unwrap();
-        let mut coord = Coordinator::start(model, ServeConfig::new(2, 6), tiny_cost());
+        let mut coord =
+            Coordinator::start(model, ServeConfig::new(2, 6), tiny_cost()).unwrap();
         let reqs: Vec<Request> = (0..9u64)
             .map(|id| Request {
                 id,
@@ -929,6 +354,7 @@ mod tests {
         assert_eq!(responses.len(), 9);
         for resp in &responses {
             assert_eq!(resp.logits, expected[resp.id as usize], "request {}", resp.id);
+            assert_eq!((resp.model, resp.tenant), (0, 0));
         }
         assert!(coord.metrics.subword_mults.load(Ordering::Relaxed) > 0);
         coord.shutdown();
@@ -944,7 +370,8 @@ mod tests {
         // boundary; requests arrive quantized at 4 bits.
         let sched = vec![LayerPrecision::new(4, 8), LayerPrecision::new(8, 16)];
         let model = CompiledModel::compile_scheduled(ls.clone(), sched.clone()).unwrap();
-        let mut coord = Coordinator::start(model, ServeConfig::new(2, 6), tiny_cost());
+        let mut coord =
+            Coordinator::start(model, ServeConfig::new(2, 6), tiny_cost()).unwrap();
         let reqs: Vec<Request> = (0..7u64)
             .map(|id| Request {
                 id,
@@ -977,7 +404,7 @@ mod tests {
         // A generous deadline so the batcher, not the deadline thread,
         // forms the batches in this test.
         let cfg = ServeConfig::new(1, 12).deadline(Duration::from_secs(5));
-        let mut coord = Coordinator::start(model, cfg, tiny_cost());
+        let mut coord = Coordinator::start(model, cfg, tiny_cost()).unwrap();
         for id in 0..12u64 {
             coord
                 .submit(Request {
@@ -994,16 +421,41 @@ mod tests {
     }
 
     #[test]
+    fn zero_knobs_are_typed_config_errors() {
+        let mut rng = XorShift64::new(0x2E20);
+        let ls = layers(&mut rng);
+        let model = CompiledModel::compile(ls, 8, 16).unwrap();
+        for (cfg, needle) in [
+            (ServeConfig::new(0, 6), "n_pes"),
+            (ServeConfig::new(2, 0), "target_rows"),
+            (ServeConfig::new(2, 6).queue_depth(0), "queue_depth"),
+        ] {
+            match Coordinator::start(Arc::clone(&model), cfg, tiny_cost()) {
+                Err(ServeError::InvalidConfig { what }) => {
+                    assert!(what.contains(needle), "{what} should name {needle}");
+                }
+                Ok(_) => panic!("zero {needle} must not start"),
+                Err(other) => panic!("expected InvalidConfig, got {other}"),
+            }
+        }
+        // The non-zero baseline still starts.
+        let coord =
+            Coordinator::start(model, ServeConfig::new(2, 6), tiny_cost()).unwrap();
+        coord.shutdown();
+    }
+
+    #[test]
     fn poisoned_batcher_degrades_to_typed_errors_not_panics() {
         let mut rng = XorShift64::new(0xDEAD10);
         let ls = layers(&mut rng);
         let model = CompiledModel::compile(ls, 8, 16).unwrap();
         let cfg = ServeConfig::new(1, 4).deadline(Duration::from_secs(5));
-        let mut coord = Coordinator::start(model, cfg, tiny_cost());
-        // Poison the batcher lock: a thread panics while holding it.
-        let shared = Arc::clone(&coord.shared);
+        let mut coord = Coordinator::start(model, cfg, tiny_cost()).unwrap();
+        // Poison the batcher lock of the wrapper's single lane: a
+        // thread panics while holding it.
+        let shared = Arc::clone(&coord.fleet.shared);
         let _ = std::thread::spawn(move || {
-            let _guard = shared.batcher.lock().unwrap();
+            let _guard = shared.models[0].pools[0].lanes[0].batcher.lock().unwrap();
             panic!("deliberate poison (test)");
         })
         .join();
@@ -1034,7 +486,8 @@ mod tests {
         let model = CompiledModel::compile(ls, 8, 16).unwrap();
         for policy in [DispatchPolicy::RoundRobin, DispatchPolicy::LeastLoaded] {
             let cfg = ServeConfig::new(3, 1).policy(policy);
-            let mut coord = Coordinator::start(Arc::clone(&model), cfg, tiny_cost());
+            let mut coord =
+                Coordinator::start(Arc::clone(&model), cfg, tiny_cost()).unwrap();
             for id in 0..30u64 {
                 coord
                     .submit(Request {

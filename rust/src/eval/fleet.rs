@@ -1,0 +1,395 @@
+//! `eval fleet` — the fleet front end's acceptance scenario
+//! (DESIGN.md §17): two hosted models (the synthetic-digits MLP and
+//! the synthetic CNN) served behind one admission layer to three
+//! tenant SLO classes through a light → burst → light arrival trace.
+//!
+//! What it demonstrates, end to end:
+//!
+//! * **Routing + replicated pools** — both models run two PE pools
+//!   each; every request is routed by model id and sharded to the
+//!   least-loaded pool.
+//! * **Certified-cost admission** — the `bulk` class carries a
+//!   deliberately tiny drain budget, so during the burst its
+//!   back-to-back oversized requests are shed with a typed
+//!   [`ServeError::Shed`] the moment its queue is non-empty, while the
+//!   `interactive` class (generous budget, tiny batch target, priority
+//!   0) keeps flowing.
+//! * **Bit-exactness under multi-tenancy** — every response is checked
+//!   against the scalar oracle of the variant it reports having
+//!   executed, and every admitted request is answered exactly once.
+//!
+//! The scenario body lives in [`run_scenario`] so `benches/fleet.rs`
+//! can drive the identical trace and emit `BENCH_fleet.json` from the
+//! same [`PhaseStat`] rows this eval prints.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::anyhow;
+use crate::coordinator::cost::CostTable;
+use crate::coordinator::fleet::{Fleet, FleetConfig, ModelConfig};
+use crate::coordinator::governor::SloClass;
+use crate::coordinator::model::{CompiledModel, VariantSpec};
+use crate::coordinator::server::{Request, Response, ServeConfig, ServeError};
+use crate::energy::report::table;
+use crate::nn::conv::LayerOp;
+use crate::nn::exec::stack_forward_row;
+use crate::workload::synth::{
+    light_burst_light, synth_cnn_stack, synth_mlp_stack, BurstPhase, Digits, ImageSet,
+};
+
+use super::autoscale::mlp_specs;
+
+/// Tenant ids, in priority order (must match [`scenario_fleet`]).
+const INTERACTIVE: usize = 0;
+const STANDARD: usize = 1;
+const BULK: usize = 2;
+
+/// Per-(phase, tenant) outcome of one scenario run: the numbers the
+/// eval tabulates and `BENCH_fleet.json` records.
+#[derive(Debug, Clone)]
+pub struct PhaseStat {
+    pub phase: &'static str,
+    pub tenant: String,
+    /// Requests admitted during the phase.
+    pub requests: u64,
+    /// Requests shed (typed, certified-cost admission) during the phase.
+    pub shed: u64,
+    /// Rows completed during the phase.
+    pub rows: u64,
+    /// Completed-row throughput over the phase wall clock.
+    pub rows_per_s: f64,
+    /// Windowed p99 latency over the phase, in microseconds.
+    pub p99_us: f64,
+    /// Billed energy per completed row over the phase.
+    pub pj_per_row: f64,
+    /// shed / (admitted + shed) over the phase.
+    pub shed_rate: f64,
+}
+
+/// One hosted model plus what the oracle needs to re-derive its
+/// outputs per variant.
+struct ScenarioModel {
+    name: &'static str,
+    stack: Vec<LayerOp>,
+    model: Arc<CompiledModel>,
+}
+
+/// Everything needed to re-check one admitted request when its
+/// response comes back (possibly out of order, from any pool).
+struct PendingReq {
+    model: usize,
+    rows: Vec<Vec<i64>>,
+}
+
+/// Build the scenario fleet: MLP (3 variants) and CNN (3 variants),
+/// two pools of two PEs each, three tenant classes.
+fn scenario_fleet() -> anyhow::Result<(Fleet, Vec<ScenarioModel>)> {
+    let mlp = synth_mlp_stack(8);
+    let mlp_model = CompiledModel::compile_variants(mlp.clone(), mlp_specs())?;
+    let cnn = synth_cnn_stack(0xF1EE7, 8);
+    let cnn_model = CompiledModel::compile_variants(cnn.clone(), VariantSpec::standard_trio(3))?;
+
+    // A long flush deadline keeps the background tick out of the
+    // trace: every dispatch below happens at an explicit `tick_now`,
+    // quiesce or drain point, so the admission decisions (and the
+    // sheds the burst asserts on) are deterministic.
+    let pool = ServeConfig::new(2, 12).deadline(Duration::from_millis(400));
+    let cfg = FleetConfig::new()
+        .model(
+            ModelConfig::new(
+                Arc::clone(&mlp_model),
+                CostTable::characterize(1000.0),
+                pool.clone(),
+            )
+            .pools(2),
+        )
+        .model(
+            ModelConfig::new(Arc::clone(&cnn_model), CostTable::characterize(1000.0), pool)
+                .pools(2),
+        )
+        // Interactive: tight p99 objective, generous admission budget
+        // (4× objective = 80 ms — never breached here), 2-row batch
+        // target so its submits dispatch immediately even mid-burst.
+        .tenant(
+            SloClass::new("interactive", Duration::from_millis(20), 64, 8)
+                .priority(0)
+                .target_rows(2),
+        )
+        // Standard: pool defaults, middle priority.
+        .tenant(SloClass::new("standard", Duration::from_millis(50), 96, 16).priority(1))
+        // Bulk: big batches, lowest priority, and a 1 ns drain budget —
+        // any non-empty queue sheds the next request. The light phases
+        // quiesce between rounds, so bulk still gets served there; the
+        // burst does not, so its flood is shed by admission.
+        .tenant(
+            SloClass::new("bulk", Duration::from_millis(10), 256, 32)
+                .priority(2)
+                .drain_budget(Duration::from_nanos(1))
+                .target_rows(48),
+        );
+    let fleet = Fleet::start(cfg).map_err(|e| anyhow::anyhow!("fleet start: {e}"))?;
+    Ok((
+        fleet,
+        vec![
+            ScenarioModel { name: "mlp", stack: mlp, model: mlp_model },
+            ScenarioModel { name: "cnn", stack: cnn, model: cnn_model },
+        ],
+    ))
+}
+
+/// Submit one request, recording it for the oracle when admitted and
+/// insisting any rejection is a *typed shed* — every other error fails
+/// the scenario.
+fn submit_checked(
+    fleet: &Fleet,
+    pending: &mut HashMap<u64, PendingReq>,
+    next_id: &mut u64,
+    model: usize,
+    tenant: usize,
+    rows: Vec<Vec<i64>>,
+) -> anyhow::Result<bool> {
+    let id = *next_id;
+    *next_id += 1;
+    match fleet.submit(model, tenant, Request { id, rows: rows.clone() }) {
+        Ok(()) => {
+            pending.insert(id, PendingReq { model, rows });
+            Ok(true)
+        }
+        Err(ServeError::Shed { tenant: t, reason }) => {
+            anyhow::ensure!(
+                t == tenant && !reason.is_empty(),
+                "shed mis-attributed: tenant {t} vs {tenant} ({reason})"
+            );
+            Ok(false)
+        }
+        Err(e) => anyhow::bail!("unexpected serve error on submit {id}: {e}"),
+    }
+}
+
+/// Check a batch of responses against the per-variant scalar oracle
+/// and the exactly-once ledger.
+fn check_responses(
+    models: &[ScenarioModel],
+    pending: &mut HashMap<u64, PendingReq>,
+    responses: &[Response],
+) -> anyhow::Result<()> {
+    for resp in responses {
+        let req = pending
+            .remove(&resp.id)
+            .ok_or_else(|| anyhow::anyhow!("response {} unknown or duplicated", resp.id))?;
+        anyhow::ensure!(
+            resp.model == req.model,
+            "response {} routed to model {} but submitted to {}",
+            resp.id,
+            resp.model,
+            req.model
+        );
+        let sm = &models[req.model];
+        let var = sm.model.variant(resp.variant);
+        anyhow::ensure!(
+            resp.logits.len() == req.rows.len(),
+            "response {} has {} logit rows for {} request rows",
+            resp.id,
+            resp.logits.len(),
+            req.rows.len()
+        );
+        for (b, row) in req.rows.iter().enumerate() {
+            let want = stack_forward_row(&var.quantize_row(row), &sm.stack, var.schedule());
+            anyhow::ensure!(
+                resp.logits[b] == want,
+                "{}/{}: response {} row {b} diverges from the scalar oracle",
+                sm.name,
+                var.name(),
+                resp.id
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Drive one trace phase through the fleet, returning the per-tenant
+/// window over it.
+#[allow(clippy::too_many_arguments)]
+fn run_phase(
+    fleet: &mut Fleet,
+    models: &[ScenarioModel],
+    phase: &BurstPhase,
+    xs_mlp: &[Vec<i64>],
+    xs_cnn: &[Vec<i64>],
+    pending: &mut HashMap<u64, PendingReq>,
+    next_id: &mut u64,
+    cursor: &mut usize,
+) -> anyhow::Result<Vec<PhaseStat>> {
+    let n_tenants = fleet.n_tenants();
+    let before: Vec<_> = (0..n_tenants).map(|t| fleet.tenant_metrics(t).snapshot()).collect();
+    let t0 = Instant::now();
+
+    let mut take = |pool: &[Vec<i64>], n: usize| -> Vec<Vec<i64>> {
+        (0..n)
+            .map(|_| {
+                let row = pool[*cursor % pool.len()].clone();
+                *cursor += 1;
+                row
+            })
+            .collect()
+    };
+
+    let mut burst_sheds = 0u64;
+    for _ in 0..phase.rounds {
+        for model in 0..models.len() {
+            let xs = if model == 0 { xs_mlp } else { xs_cnn };
+            // Foreground tenants: one small request each, per model.
+            for tenant in [INTERACTIVE, STANDARD] {
+                let rows = take(xs, phase.fg_rows);
+                anyhow::ensure!(
+                    submit_checked(fleet, pending, next_id, model, tenant, rows)?,
+                    "foreground tenant {tenant} shed — its budget should never trip"
+                );
+            }
+            // Bulk: `bulk_reqs` oversized requests back-to-back. In
+            // quiescing phases the queue is empty at each round start,
+            // so the single request is admitted; in the burst the
+            // follow-ups land on a non-empty queue and must shed.
+            for _ in 0..phase.bulk_reqs {
+                let rows = take(xs, phase.bulk_rows);
+                if !submit_checked(fleet, pending, next_id, model, BULK, rows)? {
+                    burst_sheds += 1;
+                }
+            }
+        }
+        let got = if phase.quiesce {
+            fleet.drain().map_err(|e| anyhow::anyhow!("drain: {e}"))?
+        } else {
+            fleet.tick_now();
+            fleet.try_collect()
+        };
+        check_responses(models, pending, &got)?;
+    }
+    // Phase boundary: flush and answer everything still in flight.
+    let got = fleet.drain().map_err(|e| anyhow::anyhow!("drain: {e}"))?;
+    check_responses(models, pending, &got)?;
+    anyhow::ensure!(
+        pending.is_empty(),
+        "{} admitted requests left unanswered after `{}`",
+        pending.len(),
+        phase.name
+    );
+    if !phase.quiesce {
+        anyhow::ensure!(
+            burst_sheds > 0,
+            "burst phase produced no bulk sheds — admission control is not engaging"
+        );
+    }
+
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    Ok((0..n_tenants)
+        .map(|t| {
+            let now = fleet.tenant_metrics(t).snapshot();
+            let rows = now.window_rows(&before[t]);
+            let requests = now.window_requests(&before[t]);
+            let shed = now.window_shed(&before[t]);
+            let pj = now.window_pj(&before[t]);
+            PhaseStat {
+                phase: phase.name,
+                tenant: fleet.tenant_class(t).name.clone(),
+                requests,
+                shed,
+                rows,
+                rows_per_s: rows as f64 / wall_s,
+                p99_us: now
+                    .window_latency_quantile_ns(&before[t], 0.99)
+                    .map(|ns| ns as f64 / 1e3)
+                    .unwrap_or(0.0),
+                pj_per_row: if rows > 0 { pj / rows as f64 } else { 0.0 },
+                shed_rate: if requests + shed > 0 {
+                    shed as f64 / (requests + shed) as f64
+                } else {
+                    0.0
+                },
+            }
+        })
+        .collect())
+}
+
+/// Run the full light → burst → light scenario, returning one
+/// [`PhaseStat`] per (phase, tenant). Fails on any oracle divergence,
+/// any silent drop or duplicate, any untyped rejection, any
+/// foreground shed, or a burst without bulk sheds.
+pub fn run_scenario() -> anyhow::Result<Vec<PhaseStat>> {
+    let (mut fleet, models) = scenario_fleet()?;
+    let digits = Digits::standard();
+    let (xs_mlp, _) = digits.sample(64, 0.10, 0xFEE7_0001);
+    let images = ImageSet::standard();
+    let (xs_cnn, _) = images.sample(64, 0.10, 0xFEE7_0002, 8);
+
+    let mut pending: HashMap<u64, PendingReq> = HashMap::new();
+    let mut next_id = 0u64;
+    let mut cursor = 0usize;
+    let mut stats = Vec::new();
+    for phase in light_burst_light() {
+        stats.extend(run_phase(
+            &mut fleet,
+            &models,
+            &phase,
+            &xs_mlp,
+            &xs_cnn,
+            &mut pending,
+            &mut next_id,
+            &mut cursor,
+        )?);
+    }
+
+    // Global conservation: every id admitted was answered exactly once.
+    anyhow::ensure!(pending.is_empty(), "admitted requests left unanswered");
+    anyhow::ensure!(fleet.pending_rows() == 0, "fleet not quiescent after the trace");
+    let shed_total: u64 = (0..fleet.n_tenants())
+        .map(|t| fleet.tenant_metrics(t).snapshot().shed_requests)
+        .sum();
+    anyhow::ensure!(shed_total > 0, "scenario never exercised admission shedding");
+    fleet.shutdown();
+    Ok(stats)
+}
+
+/// Print the per-tenant, per-phase serving report.
+pub fn run() -> anyhow::Result<()> {
+    println!("== eval fleet: 2 models x 3 tenant classes, light -> burst -> light ==");
+    println!("   (every response checked bit-exact against its executed variant's oracle)");
+    let stats = run_scenario()?;
+    let headers = [
+        "phase", "tenant", "admitted", "shed", "rows", "rows/s", "p99 us", "pJ/row",
+        "shed rate",
+    ];
+    let rows: Vec<Vec<String>> = stats
+        .iter()
+        .map(|s| {
+            vec![
+                s.phase.to_string(),
+                s.tenant.clone(),
+                s.requests.to_string(),
+                s.shed.to_string(),
+                s.rows.to_string(),
+                format!("{:.0}", s.rows_per_s),
+                format!("{:.1}", s.p99_us),
+                format!("{:.1}", s.pj_per_row),
+                format!("{:.2}", s.shed_rate),
+            ]
+        })
+        .collect();
+    println!("{}", table(&headers, &rows));
+    let burst_bulk = stats
+        .iter()
+        .find(|s| s.phase == "burst" && s.tenant == "bulk")
+        .expect("burst/bulk row");
+    let burst_inter = stats
+        .iter()
+        .find(|s| s.phase == "burst" && s.tenant == "interactive")
+        .expect("burst/interactive row");
+    println!(
+        "   burst: bulk shed rate {:.2} ({} typed sheds), interactive shed rate {:.2} \
+         with p99 {:.1} us — admission isolates the classes",
+        burst_bulk.shed_rate, burst_bulk.shed, burst_inter.shed_rate, burst_inter.p99_us
+    );
+    Ok(())
+}

@@ -14,7 +14,9 @@
 //! static lane-safety margins the abstract interpreter proves for the
 //! same variant trio (DESIGN.md §14); `certify` prints the static cost
 //! certificates and differentially checks them against the running
-//! engine (DESIGN.md §15).
+//! engine (DESIGN.md §15); `fleet` drives a multi-model, multi-tenant
+//! bursty-arrival scenario through the fleet front end and reports
+//! per-tenant p99 / pJ-per-row / shed rate (DESIGN.md §17).
 
 use crate::anyhow;
 
@@ -24,6 +26,7 @@ pub mod certify;
 pub mod conv;
 pub mod fig10;
 pub mod fig6;
+pub mod fleet;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
@@ -45,6 +48,7 @@ pub fn run(target: &str) -> anyhow::Result<()> {
         "autoscale" => autoscale::run(),
         "verify" => verify::run(),
         "certify" => certify::run(),
+        "fleet" => fleet::run(),
         "all" => {
             fig6::run()?;
             fig7::run()?;
@@ -57,11 +61,12 @@ pub fn run(target: &str) -> anyhow::Result<()> {
             conv::run()?;
             autoscale::run()?;
             verify::run()?;
-            certify::run()
+            certify::run()?;
+            fleet::run()
         }
         other => anyhow::bail!(
             "unknown eval target `{other}` (fig6..fig10, summary, ablation, \
-             precision, conv, autoscale, verify, certify, all)"
+             precision, conv, autoscale, verify, certify, fleet, all)"
         ),
     }
 }

@@ -249,6 +249,63 @@ pub fn synth_mlp_stack(w_bits: u32) -> Vec<crate::nn::conv::LayerOp> {
     ]
 }
 
+/// One phase of the fleet scenario's arrival trace (DESIGN.md §17):
+/// how many submit rounds, how much work each tenant class offers per
+/// round, and whether the phase quiesces (drains to empty) between
+/// rounds or keeps its backlog — the knob that separates "light" from
+/// "burst".
+#[derive(Debug, Clone, Copy)]
+pub struct BurstPhase {
+    pub name: &'static str,
+    /// Submit rounds in this phase.
+    pub rounds: usize,
+    /// Rows per interactive/standard request.
+    pub fg_rows: usize,
+    /// Bulk requests offered back-to-back per round per model — the
+    /// excess above the bulk class's admission budget is shed.
+    pub bulk_reqs: usize,
+    /// Rows per bulk request.
+    pub bulk_rows: usize,
+    /// `true`: drain to empty after each round (light traffic).
+    /// `false`: only tick and collect, keeping the backlog (burst).
+    pub quiesce: bool,
+}
+
+/// The standard fleet acceptance trace: light → burst → light. The
+/// light phases quiesce every round, so every class's queue is empty
+/// at each admission decision; the burst offers several oversized bulk
+/// requests back-to-back without quiescing, so the bulk class's
+/// certified-drain budget deterministically sheds the excess while the
+/// interactive class keeps its small paced batches flowing.
+pub fn light_burst_light() -> Vec<BurstPhase> {
+    vec![
+        BurstPhase {
+            name: "light-1",
+            rounds: 12,
+            fg_rows: 2,
+            bulk_reqs: 1,
+            bulk_rows: 4,
+            quiesce: true,
+        },
+        BurstPhase {
+            name: "burst",
+            rounds: 12,
+            fg_rows: 2,
+            bulk_reqs: 3,
+            bulk_rows: 16,
+            quiesce: false,
+        },
+        BurstPhase {
+            name: "light-2",
+            rounds: 12,
+            fg_rows: 2,
+            bulk_reqs: 1,
+            bulk_rows: 4,
+            quiesce: true,
+        },
+    ]
+}
+
 /// A layer of a quantization scenario (Fig. 10 workloads): how many
 /// multiplications at which operand widths.
 #[derive(Debug, Clone, Copy)]

@@ -165,7 +165,7 @@ fn conv_serving_round_trip_through_the_coordinator() {
     let stack = synth_cnn_stack(0xC2123, 8);
     let sched = uniform_schedule(8, 16, stack.len());
     let model = CompiledModel::compile_stack(stack.clone(), sched.clone()).unwrap();
-    let mut coord = Coordinator::start(model, ServeConfig::new(2, 6), flat_cost());
+    let mut coord = Coordinator::start(model, ServeConfig::new(2, 6), flat_cost()).unwrap();
     let (xs, _ys) = ImageSet::standard().sample(9, 0.3, 0xC2124, 8);
     for (id, row) in xs.iter().enumerate() {
         coord

@@ -60,7 +60,7 @@ fn coordinator_bit_exact_across_pe_counts_batch_targets_and_policies() {
             for target in [1usize, 6, 13, 64] {
                 let cfg = ServeConfig::new(n_pes, target).policy(policy);
                 let mut coord =
-                    Coordinator::start(Arc::clone(&model), cfg, cost());
+                    Coordinator::start(Arc::clone(&model), cfg, cost()).unwrap();
                 for r in &reqs {
                     coord.submit(r.clone()).unwrap();
                 }
@@ -90,7 +90,7 @@ fn deadline_thread_flushes_stragglers_without_drain() {
     let model = CompiledModel::compile(layers, 8, 16).unwrap();
     // Target far above what we submit: only the deadline can flush.
     let cfg = ServeConfig::new(1, 1000).deadline(Duration::from_millis(5));
-    let mut coord = Coordinator::start(model, cfg, cost());
+    let mut coord = Coordinator::start(model, cfg, cost()).unwrap();
     coord
         .submit(Request {
             id: 1,
@@ -117,7 +117,7 @@ fn killed_worker_drains_gracefully_and_serving_continues() {
     let mut rng = XorShift64::new(0x5117);
     let layers = random_model(&mut rng, &[8, 5, 3]);
     let model = CompiledModel::compile(layers.clone(), 8, 16).unwrap();
-    let mut coord = Coordinator::start(model, ServeConfig::new(2, 4), cost());
+    let mut coord = Coordinator::start(model, ServeConfig::new(2, 4), cost()).unwrap();
     // Kill one of the two PEs up front, then serve a full load.
     coord.kill_worker(0);
     let reqs: Vec<Request> = (0..24u64)
@@ -143,7 +143,7 @@ fn all_workers_dead_surfaces_error_not_panic() {
     let mut rng = XorShift64::new(0xA11D);
     let layers = random_model(&mut rng, &[4, 2]);
     let model = CompiledModel::compile(layers, 8, 16).unwrap();
-    let mut coord = Coordinator::start(model, ServeConfig::new(1, 4), cost());
+    let mut coord = Coordinator::start(model, ServeConfig::new(1, 4), cost()).unwrap();
     coord.kill_worker(0);
     // Submitting below target succeeds (batched); the flush at drain
     // finds no live worker and reports it instead of panicking.
@@ -171,7 +171,7 @@ fn kill_revive_serve_round_trip_restores_capacity() {
     let mut rng = XorShift64::new(0x4E117E);
     let layers = random_model(&mut rng, &[8, 5, 3]);
     let model = CompiledModel::compile(layers.clone(), 8, 16).unwrap();
-    let mut coord = Coordinator::start(model, ServeConfig::new(2, 4), cost());
+    let mut coord = Coordinator::start(model, ServeConfig::new(2, 4), cost()).unwrap();
     assert!(!coord.revive_worker(0), "a live worker must not be revived");
     assert!(!coord.revive_worker(99), "an out-of-range slot is a no-op");
     coord.kill_worker(0);
@@ -217,7 +217,7 @@ fn revive_recovers_a_fully_dead_pool() {
     let mut rng = XorShift64::new(0x4E117F);
     let layers = random_model(&mut rng, &[4, 2]);
     let model = CompiledModel::compile(layers.clone(), 8, 16).unwrap();
-    let mut coord = Coordinator::start(model, ServeConfig::new(1, 4), cost());
+    let mut coord = Coordinator::start(model, ServeConfig::new(1, 4), cost()).unwrap();
     coord.kill_worker(0);
     let row: Vec<i64> = (0..4).map(|_| rng.q_raw(8)).collect();
     coord.submit(Request { id: 7, rows: vec![row.clone()] }).unwrap();
@@ -236,7 +236,7 @@ fn malformed_requests_are_rejected_not_worker_killing() {
     let mut rng = XorShift64::new(0xBAD1);
     let layers = random_model(&mut rng, &[6, 3]);
     let model = CompiledModel::compile(layers.clone(), 8, 16).unwrap();
-    let mut coord = Coordinator::start(model, ServeConfig::new(1, 4), cost());
+    let mut coord = Coordinator::start(model, ServeConfig::new(1, 4), cost()).unwrap();
     // Wrong row width, empty request, and out-of-range raw values must
     // all bounce at submit instead of panicking the PE worker.
     let bad = [
@@ -263,7 +263,7 @@ fn drain_returns_completed_work_even_with_no_live_workers() {
     let layers = random_model(&mut rng, &[4, 2]);
     let model = CompiledModel::compile(layers, 8, 16).unwrap();
     // target 1: the first request dispatches and completes immediately.
-    let mut coord = Coordinator::start(model, ServeConfig::new(1, 1), cost());
+    let mut coord = Coordinator::start(model, ServeConfig::new(1, 1), cost()).unwrap();
     coord
         .submit(Request {
             id: 1,
@@ -348,7 +348,7 @@ fn metrics_account_every_row_mult_and_latency() {
     let mut rng = XorShift64::new(0xC003);
     let layers = random_model(&mut rng, &[6, 4]);
     let model = CompiledModel::compile(layers, 8, 16).unwrap();
-    let mut coord = Coordinator::start(model, ServeConfig::new(2, 5), cost());
+    let mut coord = Coordinator::start(model, ServeConfig::new(2, 5), cost()).unwrap();
     let n_rows = 17u64;
     for id in 0..n_rows {
         coord
@@ -377,7 +377,7 @@ fn empty_drain_is_safe() {
     let mut rng = XorShift64::new(0xC004);
     let layers = random_model(&mut rng, &[4, 2]);
     let model = CompiledModel::compile(layers, 8, 16).unwrap();
-    let mut coord = Coordinator::start(model, ServeConfig::new(1, 4), cost());
+    let mut coord = Coordinator::start(model, ServeConfig::new(1, 4), cost()).unwrap();
     assert!(coord.drain().unwrap().is_empty());
     coord.shutdown();
 }
@@ -415,7 +415,7 @@ fn coordinator_matches_aot_golden_when_artifacts_exist() {
         }
     }
     let model = CompiledModel::compile(layers, 8, 16).unwrap();
-    let mut coord = Coordinator::start(model, ServeConfig::new(2, 8), cost());
+    let mut coord = Coordinator::start(model, ServeConfig::new(2, 8), cost()).unwrap();
     for (row, vals) in &inputs {
         coord
             .submit(Request { id: *row as u64, rows: vec![vals.clone()] })

@@ -1,0 +1,409 @@
+//! End-to-end tests of the fleet front end (DESIGN.md §17): multi-model
+//! routing, per-tenant SLO classes, certified-cost admission control,
+//! and replicated PE pools behind one submit/collect surface.
+//!
+//! The acceptance properties:
+//!
+//! 1. **Exactly-once, bit-exact.** Every admitted request is answered
+//!    exactly once, tagged with the (model, tenant) it was served under,
+//!    and its logits equal the scalar oracle of the variant the response
+//!    reports having executed.
+//! 2. **Conservation.** At every post-drain quiescent point, admitted =
+//!    completed + nothing (no silent drops), per tenant; shed requests
+//!    are typed `ServeError::Shed` and counted in the tenant's metrics
+//!    bucket — never silently swallowed.
+//! 3. **Isolation.** A tenant flooding past its admission budget is
+//!    shed without perturbing a calm tenant's admission or fidelity.
+//!
+//! Determinism notes: deadlines are set far out (60 s), so batches only
+//! move at submit-path dispatches, explicit ticks, and drains — the
+//! admission decisions the tests assert on see exactly the queues the
+//! test built.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use softsimd::coordinator::fleet::{Fleet, FleetConfig, ModelConfig};
+use softsimd::coordinator::governor::SloClass;
+use softsimd::coordinator::model::{CompiledModel, VariantSpec};
+use softsimd::coordinator::server::{Request, Response, ServeConfig, ServeError};
+use softsimd::nn::conv::LayerOp;
+use softsimd::nn::exec::mlp_forward_row_mixed;
+use softsimd::nn::weights::QuantLayer;
+use softsimd::testutil::{flat_cost, random_dense_stack_uniform};
+use softsimd::workload::synth::XorShift64;
+
+/// A small 2-layer dense model (input width 8) carrying the standard
+/// precision trio — big enough to have distinct variants, small enough
+/// that the property test's hundreds of batches stay fast.
+fn small_model(rng: &mut XorShift64, widths: &[usize]) -> (Vec<QuantLayer>, Arc<CompiledModel>) {
+    let layers = random_dense_stack_uniform(rng, widths, 8);
+    let ops: Vec<LayerOp> = layers.iter().cloned().map(LayerOp::Dense).collect();
+    let n = layers.len();
+    let model = CompiledModel::compile_variants(ops, VariantSpec::standard_trio(n)).unwrap();
+    (layers, model)
+}
+
+fn random_rows(rng: &mut XorShift64, n: usize, width: usize) -> Vec<Vec<i64>> {
+    (0..n).map(|_| (0..width).map(|_| rng.q_raw(8)).collect()).collect()
+}
+
+/// The per-variant scalar oracle, as the serving loop applies it:
+/// requantize the reference-precision row by the executing variant's
+/// input shift, then run that variant's schedule.
+fn oracle(model: &CompiledModel, layers: &[QuantLayer], v: usize, row: &[i64]) -> Vec<i64> {
+    let var = model.variant(v);
+    mlp_forward_row_mixed(&var.quantize_row(row), layers, var.schedule())
+}
+
+/// What the tests remember about each admitted request.
+struct Sent {
+    model: usize,
+    tenant: usize,
+    rows: Vec<Vec<i64>>,
+}
+
+/// Check a batch of responses against the ledger: exactly-once ids,
+/// (model, tenant) tag echo, and per-variant bit-exactness.
+fn absorb(
+    responses: &[Response],
+    pending: &mut HashMap<u64, Sent>,
+    stacks: &[(Vec<QuantLayer>, Arc<CompiledModel>)],
+    done_per_tenant: &mut [u64],
+) {
+    for resp in responses {
+        let sent = pending
+            .remove(&resp.id)
+            .unwrap_or_else(|| panic!("response {} unknown or duplicated", resp.id));
+        assert_eq!(resp.model, sent.model, "response {} model tag", resp.id);
+        assert_eq!(resp.tenant, sent.tenant, "response {} tenant tag", resp.id);
+        assert_eq!(resp.logits.len(), sent.rows.len(), "response {} row count", resp.id);
+        let (layers, model) = &stacks[sent.model];
+        for (b, row) in sent.rows.iter().enumerate() {
+            let want = oracle(model, layers, resp.variant, row);
+            assert_eq!(
+                resp.logits[b], want,
+                "response {} row {b} diverges from variant {}'s oracle",
+                resp.id, resp.variant
+            );
+        }
+        done_per_tenant[sent.tenant] += 1;
+    }
+}
+
+#[test]
+fn two_models_three_tenants_round_trip_bit_exact_with_tag_echo() {
+    let mut rng = XorShift64::new(0xF1EE7_0001);
+    let stacks = vec![small_model(&mut rng, &[8, 6, 4]), small_model(&mut rng, &[8, 12, 4])];
+    let cfg = FleetConfig::new()
+        .model(
+            ModelConfig::new(
+                Arc::clone(&stacks[0].1),
+                flat_cost(),
+                ServeConfig::new(2, 4).deadline(Duration::from_secs(60)),
+            )
+            .pools(2),
+        )
+        .model(ModelConfig::new(
+            Arc::clone(&stacks[1].1),
+            flat_cost(),
+            ServeConfig::new(1, 4).deadline(Duration::from_secs(60)),
+        ))
+        .tenant(SloClass::new("gold", Duration::from_secs(1), 64, 8).priority(0).target_rows(1))
+        .tenant(SloClass::new("silver", Duration::from_secs(1), 64, 8).priority(1))
+        .tenant(SloClass::new("bronze", Duration::from_secs(1), 64, 8).priority(2));
+    let mut fleet = Fleet::start(cfg).unwrap();
+    assert_eq!(fleet.n_models(), 2);
+    assert_eq!(fleet.n_tenants(), 3);
+
+    // 24 requests interleaved over every (model, tenant) pair, with
+    // varying row counts so entries split across batches.
+    let mut pending: HashMap<u64, Sent> = HashMap::new();
+    let mut sent_reqs = [0u64; 3];
+    let mut sent_rows = [0u64; 3];
+    for id in 0..24u64 {
+        let model = (id % 2) as usize;
+        let tenant = (id % 3) as usize;
+        let rows = random_rows(&mut rng, 1 + (id % 3) as usize, 8);
+        sent_reqs[tenant] += 1;
+        sent_rows[tenant] += rows.len() as u64;
+        fleet
+            .submit(model, tenant, Request { id, rows: rows.clone() })
+            .unwrap_or_else(|e| panic!("submit {id}: {e}"));
+        pending.insert(id, Sent { model, tenant, rows });
+    }
+    let responses = fleet.drain().unwrap();
+    assert_eq!(responses.len(), 24, "every admitted request answered");
+    let mut done = [0u64; 3];
+    absorb(&responses, &mut pending, &stacks, &mut done);
+    assert!(pending.is_empty(), "all ids accounted for");
+    assert_eq!(fleet.pending_rows(), 0);
+
+    // Per-tenant accounting: the classes' fleet-wide buckets saw
+    // exactly the admitted traffic, and nothing was shed.
+    for t in 0..3 {
+        let snap = fleet.tenant_metrics(t).snapshot();
+        assert_eq!(done[t], sent_reqs[t], "tenant {t} responses");
+        assert_eq!(snap.requests, sent_reqs[t], "tenant {t} admitted");
+        assert_eq!(snap.rows, sent_rows[t], "tenant {t} completed rows");
+        assert_eq!(snap.shed_requests, 0, "tenant {t} sheds");
+        assert!(snap.energy_aj > 0, "tenant {t} billed energy");
+    }
+    fleet.shutdown();
+}
+
+#[test]
+fn random_interleavings_deliver_exactly_once_and_conserve_rows() {
+    // Property test: under random submit / tick / collect / drain
+    // interleavings — with one tenant whose tiny admission budget sheds
+    // whenever its queue is non-empty — every admitted request is
+    // answered exactly once, every rejection is a typed shed, and at
+    // every post-drain quiescent point the per-tenant ledgers balance.
+    for seed in [0xF1EE7_1001u64, 0xF1EE7_1002, 0xF1EE7_1003] {
+        let mut rng = XorShift64::new(seed);
+        let stacks = vec![small_model(&mut rng, &[8, 6, 4])];
+        let cfg = FleetConfig::new()
+            .model(
+                ModelConfig::new(
+                    Arc::clone(&stacks[0].1),
+                    flat_cost(),
+                    ServeConfig::new(2, 3).deadline(Duration::from_secs(60)).queue_depth(2),
+                )
+                .pools(2),
+            )
+            .tenant(SloClass::new("calm", Duration::from_secs(1), 64, 8).priority(0))
+            .tenant(SloClass::new("mid", Duration::from_secs(1), 64, 8).priority(1))
+            .tenant(
+                SloClass::new("greedy", Duration::from_millis(1), 64, 8)
+                    .priority(2)
+                    .drain_budget(Duration::from_nanos(1))
+                    .target_rows(16),
+            );
+        let mut fleet = Fleet::start(cfg).unwrap();
+
+        let mut pending: HashMap<u64, Sent> = HashMap::new();
+        let mut admitted_reqs = [0u64; 3];
+        let mut admitted_rows = [0u64; 3];
+        let mut shed_reqs = [0u64; 3];
+        let mut done = [0u64; 3];
+        let mut next_id = 0u64;
+        for op in 0..200 {
+            match rng.next_u64() % 10 {
+                0..=6 => {
+                    let tenant = (rng.next_u64() % 3) as usize;
+                    let rows = random_rows(&mut rng, 1 + (rng.next_u64() % 3) as usize, 8);
+                    let id = next_id;
+                    next_id += 1;
+                    match fleet.submit(0, tenant, Request { id, rows: rows.clone() }) {
+                        Ok(()) => {
+                            admitted_reqs[tenant] += 1;
+                            admitted_rows[tenant] += rows.len() as u64;
+                            pending.insert(id, Sent { model: 0, tenant, rows });
+                        }
+                        Err(ServeError::Shed { tenant: t, reason }) => {
+                            assert_eq!(t, tenant, "shed attribution (op {op})");
+                            assert!(
+                                reason.contains("budget"),
+                                "shed reason names the budget: {reason}"
+                            );
+                            shed_reqs[tenant] += 1;
+                        }
+                        Err(e) => panic!("op {op}: untyped rejection {e}"),
+                    }
+                }
+                7 => fleet.tick_now(),
+                8 => {
+                    let got = fleet.try_collect();
+                    absorb(&got, &mut pending, &stacks, &mut done);
+                }
+                _ => {
+                    let got = fleet.drain().unwrap();
+                    absorb(&got, &mut pending, &stacks, &mut done);
+                    // Quiescent point: everything admitted so far is
+                    // answered, nothing is queued, ledgers balance.
+                    assert!(pending.is_empty(), "seed {seed:#x} op {op}: unanswered ids");
+                    assert_eq!(fleet.pending_rows(), 0);
+                    for t in 0..3 {
+                        let snap = fleet.tenant_metrics(t).snapshot();
+                        assert_eq!(snap.requests, admitted_reqs[t], "tenant {t} admitted");
+                        assert_eq!(snap.rows, admitted_rows[t], "tenant {t} rows");
+                        assert_eq!(snap.shed_requests, shed_reqs[t], "tenant {t} sheds");
+                        assert_eq!(done[t], admitted_reqs[t], "tenant {t} delivered");
+                    }
+                }
+            }
+        }
+        let got = fleet.drain().unwrap();
+        absorb(&got, &mut pending, &stacks, &mut done);
+        assert!(pending.is_empty(), "seed {seed:#x}: unanswered ids at the end");
+        assert_eq!(fleet.pending_rows(), 0);
+        for t in 0..3 {
+            let snap = fleet.tenant_metrics(t).snapshot();
+            assert_eq!(snap.requests, admitted_reqs[t]);
+            assert_eq!(snap.rows, admitted_rows[t]);
+            assert_eq!(snap.shed_requests, shed_reqs[t]);
+            assert_eq!(done[t], admitted_reqs[t]);
+        }
+        // The greedy tenant's budget must actually have engaged.
+        assert!(shed_reqs[2] > 0, "seed {seed:#x}: greedy tenant never shed");
+        fleet.shutdown();
+    }
+}
+
+#[test]
+fn flooding_tenant_is_shed_without_perturbing_the_calm_tenant() {
+    let mut rng = XorShift64::new(0xF1EE7_2001);
+    let stacks = vec![small_model(&mut rng, &[8, 6, 4])];
+    let cfg = FleetConfig::new()
+        .model(ModelConfig::new(
+            Arc::clone(&stacks[0].1),
+            flat_cost(),
+            ServeConfig::new(1, 4).deadline(Duration::from_secs(60)),
+        ))
+        // Interactive: far-out p99 objective (governor never sheds
+        // fidelity), generous budget, 1-row target so its submits
+        // dispatch immediately.
+        .tenant(
+            SloClass::new("interactive", Duration::from_secs(300), 64, 8)
+                .priority(0)
+                .target_rows(1),
+        )
+        // Bulk: a 1 ns budget and a 32-row fill target. Within a round
+        // its first request parks 8 rows in the lane (no dispatch —
+        // target unmet, deadline far out), so its second request
+        // deterministically lands on a non-empty queue and sheds.
+        .tenant(
+            SloClass::new("bulk", Duration::from_millis(1), 64, 8)
+                .priority(2)
+                .drain_budget(Duration::from_nanos(1))
+                .target_rows(32),
+        );
+    let mut fleet = Fleet::start(cfg).unwrap();
+
+    let mut pending: HashMap<u64, Sent> = HashMap::new();
+    let mut done = [0u64; 2];
+    let mut next_id = 0u64;
+    let rounds = 10u64;
+    for round in 0..rounds {
+        // Bulk floods first: one admitted, one deterministically shed.
+        let rows = random_rows(&mut rng, 8, 8);
+        fleet
+            .submit(0, 1, Request { id: next_id, rows: rows.clone() })
+            .unwrap_or_else(|e| panic!("round {round}: first bulk submit: {e}"));
+        pending.insert(next_id, Sent { model: 0, tenant: 1, rows });
+        next_id += 1;
+        let extra = random_rows(&mut rng, 8, 8);
+        match fleet.submit(0, 1, Request { id: next_id, rows: extra }) {
+            Err(ServeError::Shed { tenant: 1, .. }) => {}
+            other => panic!("round {round}: expected a typed bulk shed, got {other:?}"),
+        }
+        next_id += 1;
+        // The calm tenant submits into the same pool, mid-flood — and
+        // must be admitted (its own queue is empty; bulk's backlog is
+        // not its problem).
+        let rows = random_rows(&mut rng, 1, 8);
+        fleet
+            .submit(0, 0, Request { id: next_id, rows: rows.clone() })
+            .unwrap_or_else(|e| panic!("round {round}: interactive submit: {e}"));
+        pending.insert(next_id, Sent { model: 0, tenant: 0, rows });
+        next_id += 1;
+        let got = fleet.drain().unwrap();
+        absorb(&got, &mut pending, &stacks, &mut done);
+    }
+    assert!(pending.is_empty());
+    let inter = fleet.tenant_metrics(0).snapshot();
+    let bulk = fleet.tenant_metrics(1).snapshot();
+    assert_eq!(inter.requests, rounds, "interactive fully admitted");
+    assert_eq!(inter.shed_requests, 0, "interactive never shed");
+    assert_eq!(done[0], rounds);
+    assert_eq!(bulk.requests, rounds, "one bulk request admitted per round");
+    assert_eq!(bulk.shed_requests, rounds, "one bulk request shed per round");
+    assert_eq!(bulk.shed_rows, rounds * 8, "shed rows counted");
+    assert_eq!(done[1], rounds);
+    // Isolation of fidelity: interactive's governor saw only its own
+    // calm window, so it stayed at the reference variant throughout.
+    assert_eq!(fleet.active_variant(0, 0), 0, "interactive stays hi-fi");
+    fleet.shutdown();
+}
+
+#[test]
+fn config_and_routing_errors_are_typed() {
+    let mut rng = XorShift64::new(0xF1EE7_3001);
+    let (_, model) = small_model(&mut rng, &[8, 6, 4]);
+    let pool = ServeConfig::new(1, 2).deadline(Duration::from_secs(60));
+
+    // Structural config errors.
+    match Fleet::start(FleetConfig::new().tenant(SloClass::unbounded("t"))) {
+        Err(ServeError::InvalidConfig { what }) => assert!(what.contains("model"), "{what}"),
+        other => panic!("expected InvalidConfig for a model-less fleet, got {other:?}"),
+    }
+    match Fleet::start(
+        FleetConfig::new().model(ModelConfig::new(Arc::clone(&model), flat_cost(), pool.clone())),
+    ) {
+        Err(ServeError::InvalidConfig { what }) => assert!(what.contains("tenant"), "{what}"),
+        other => panic!("expected InvalidConfig for a tenant-less fleet, got {other:?}"),
+    }
+    match Fleet::start(
+        FleetConfig::new()
+            .model(ModelConfig::new(Arc::clone(&model), flat_cost(), pool.clone()).pools(0))
+            .tenant(SloClass::unbounded("t")),
+    ) {
+        Err(ServeError::InvalidConfig { what }) => assert!(what.contains("n_pools"), "{what}"),
+        other => panic!("expected InvalidConfig for zero pools, got {other:?}"),
+    }
+    match Fleet::start(
+        FleetConfig::new()
+            .model(ModelConfig::new(Arc::clone(&model), flat_cost(), ServeConfig::new(0, 2)))
+            .tenant(SloClass::unbounded("t")),
+    ) {
+        Err(ServeError::InvalidConfig { what }) => assert!(what.contains("n_pes"), "{what}"),
+        other => panic!("expected InvalidConfig for zero PEs, got {other:?}"),
+    }
+
+    // Routing errors on a live fleet.
+    let mut fleet = Fleet::start(
+        FleetConfig::new()
+            .model(ModelConfig::new(Arc::clone(&model), flat_cost(), pool))
+            .tenant(SloClass::unbounded("only"))
+            .tenant(
+                SloClass::new("tight", Duration::from_millis(1), 64, 8)
+                    .drain_budget(Duration::from_nanos(1))
+                    .target_rows(32),
+            ),
+    )
+    .unwrap();
+    let req = || Request { id: 0, rows: vec![vec![1; 8]] };
+    match fleet.submit(7, 0, req()) {
+        Err(ServeError::UnknownModel { model: 7 }) => {}
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    match fleet.submit(0, 9, req()) {
+        Err(ServeError::UnknownTenant { tenant: 9 }) => {}
+        other => panic!("expected UnknownTenant, got {other:?}"),
+    }
+    assert!(matches!(
+        fleet.install_policy(3, 0, Box::new(softsimd::coordinator::governor::PinnedVariant(0))),
+        Err(ServeError::UnknownModel { model: 3 })
+    ));
+    assert!(matches!(
+        fleet.install_policy(0, 6, Box::new(softsimd::coordinator::governor::PinnedVariant(0))),
+        Err(ServeError::UnknownTenant { tenant: 6 })
+    ));
+
+    // The shed error carries the tenant and a reason naming the queue
+    // and the class budget.
+    fleet.submit(0, 1, Request { id: 1, rows: random_rows(&mut rng, 4, 8) }).unwrap();
+    match fleet.submit(0, 1, Request { id: 2, rows: random_rows(&mut rng, 1, 8) }) {
+        Err(ServeError::Shed { tenant: 1, reason }) => {
+            assert!(reason.contains("queued"), "reason names the backlog: {reason}");
+            assert!(reason.contains("budget"), "reason names the budget: {reason}");
+            assert!(reason.contains("tight"), "reason names the class: {reason}");
+        }
+        other => panic!("expected a typed shed, got {other:?}"),
+    }
+    let responses = fleet.drain().unwrap();
+    assert_eq!(responses.len(), 1, "the admitted request still completes");
+    assert_eq!(responses[0].id, 1);
+    fleet.shutdown();
+}

@@ -66,7 +66,8 @@ fn step_load_sheds_precision_under_overload_and_recovers_when_calm() {
         .deadline(Duration::from_secs(60))
         .queue_depth(1);
     let mut coord =
-        Coordinator::start_with_policy(Arc::clone(&model), cfg, flat_cost(), Box::new(policy));
+        Coordinator::start_with_policy(Arc::clone(&model), cfg, flat_cost(), Box::new(policy))
+            .unwrap();
     assert_eq!(coord.active_variant(), 0);
 
     // --- Step up: a burst of full batches, submitted far faster than
@@ -157,7 +158,8 @@ fn per_variant_billing_is_pinned_to_the_single_variant_formulas() {
             cfg,
             flat_cost(),
             Box::new(PinnedVariant(v)),
-        );
+        )
+        .unwrap();
         coord.submit(Request { id: 0, rows: rows.clone() }).unwrap();
         let responses = coord.drain().unwrap();
         let metrics = Arc::clone(&coord.metrics);

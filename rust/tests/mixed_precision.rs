@@ -129,7 +129,7 @@ fn acceptance_schedules_serve_bit_exactly_end_to_end() {
     for (name, sched) in schedules {
         let model =
             CompiledModel::compile_scheduled(layers.clone(), sched.clone()).unwrap();
-        let mut coord = Coordinator::start(model, ServeConfig::new(2, 8), cost.clone());
+        let mut coord = Coordinator::start(model, ServeConfig::new(2, 8), cost.clone()).unwrap();
         let reqs: Vec<Request> = (0..15u64)
             .map(|id| Request {
                 id,

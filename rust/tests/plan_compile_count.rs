@@ -40,7 +40,7 @@ fn plans_compile_exactly_once_regardless_of_pe_count() {
     for n_pes in [1usize, 2, 8] {
         let before = PLAN_COMPILATIONS.load(Ordering::SeqCst);
         let model = CompiledModel::compile(layers.clone(), 8, 16).unwrap();
-        let mut coord = Coordinator::start(model, ServeConfig::new(n_pes, 6), cost());
+        let mut coord = Coordinator::start(model, ServeConfig::new(n_pes, 6), cost()).unwrap();
         for id in 0..8u64 {
             coord
                 .submit(Request {
@@ -79,7 +79,7 @@ fn plans_compile_exactly_once_regardless_of_pe_count() {
     );
     assert_eq!(set.n_variants(), 3);
     // And serving the set still compiles nothing further.
-    let mut coord = Coordinator::start(set, ServeConfig::new(2, 6), cost());
+    let mut coord = Coordinator::start(set, ServeConfig::new(2, 6), cost()).unwrap();
     for id in 0..6u64 {
         coord
             .submit(Request {
