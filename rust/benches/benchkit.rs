@@ -46,14 +46,68 @@ pub fn throughput(r: &BenchResult, units_per_iter: f64, unit: &str) {
     );
 }
 
+/// Short git commit hash of the working tree, or "unknown" outside a
+/// repo / without git on PATH — bench artifacts must say what they
+/// measured.
+#[allow(dead_code)]
+fn git_sha() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// UTC `YYYY-MM-DD` from Unix seconds (civil-from-days; no chrono
+/// offline).
+#[allow(dead_code)]
+fn utc_date(secs: u64) -> String {
+    let z = (secs / 86_400) as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1_460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
 /// Write the machine-readable bench artifact — the shared
-/// `{"bench": ..., "cells": [...]}` envelope every JSON-emitting bench
-/// uses (hand-rolled; serde is unavailable offline). `cells` are the
-/// per-bench pre-serialized cell objects.
+/// `{"bench": ..., "meta": {...}, "cells": [...]}` envelope every
+/// JSON-emitting bench uses (hand-rolled; serde is unavailable
+/// offline). `cells` are the per-bench pre-serialized cell objects.
+/// The `meta` block stamps provenance — git sha, UTC date, compiled
+/// feature flags and the Stage-1 backend — so a checked-in artifact is
+/// attributable to the build that produced it.
 #[allow(dead_code)] // not every #[path]-including bench emits JSON
 pub fn write_cells(bench: &str, path: &str, cells: &[String]) {
+    let unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let features: Vec<&str> = [("simd", cfg!(feature = "simd"))]
+        .iter()
+        .filter_map(|&(name, on)| on.then_some(name))
+        .collect();
+    let backend = if cfg!(feature = "simd") { "wide" } else { "scalar" };
+    let meta = format!(
+        "{{\"git_sha\":\"{}\",\"date\":\"{}\",\"unix_time\":{unix},\
+         \"features\":[{}],\"backend\":\"{backend}\"}}",
+        git_sha(),
+        utc_date(unix),
+        features
+            .iter()
+            .map(|f| format!("\"{f}\""))
+            .collect::<Vec<_>>()
+            .join(",")
+    );
     let json = format!(
-        "{{\"bench\":\"{bench}\",\"cells\":[\n  {}\n]}}\n",
+        "{{\"bench\":\"{bench}\",\"meta\":{meta},\"cells\":[\n  {}\n]}}\n",
         cells.join(",\n  ")
     );
     std::fs::write(path, &json).expect("write bench artifact");

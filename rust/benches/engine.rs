@@ -258,7 +258,15 @@ fn main() {
             let stats = engine.forward_batch_into(&batch, 0, &mut scratch, &mut out);
             let (base_out, base_tally) = baseline::forward_batch(&model, &batch);
             assert_eq!(out, base_out, "{name} batch {batch_rows}: engines diverge");
-            assert_eq!(stats.s1_cycles, base_tally.s1_cycles, "{name}: s1 billing");
+            // The baseline bills dense Stage-1 work; the flat core
+            // zero-skips all-zero packed words (pad words below the
+            // quantum, post-ReLU zeros), so the conservation law of
+            // DESIGN.md §18 is the billing cross-check.
+            assert_eq!(
+                stats.s1_cycles + stats.skipped_cycles,
+                base_tally.s1_cycles,
+                "{name}: s1 billing conservation"
+            );
             assert_eq!(stats.subword_mults, base_tally.subword_mults);
             assert_eq!(stats.s2_passes, base_tally.s2_passes, "{name}: s2 billing");
 
@@ -358,10 +366,113 @@ fn main() {
         }
     }
 
-    let cell_json: Vec<String> = cells.iter().map(Cell::json).collect();
+    let mut cell_json: Vec<String> = cells.iter().map(Cell::json).collect();
+    cell_json.extend(sparse_cells(&layers, &schedules, backend, &mut rng));
     write_cells("engine", "BENCH_engine.json", &cell_json);
 
     conv_cells();
+}
+
+/// Sparse-activation cells (DESIGN.md §18): the same schedules on
+/// post-ReLU-style batches where a tail of whole rows is zero, so at
+/// least that fraction of packed activation words is all-zero at every
+/// layer. Each cell A/Bs the zero-skipping engine against the same
+/// engine with skipping forced off (`with_zero_skip(false)`) on the
+/// identical batch — `skip_speedup` is the measured rows/s ratio, and
+/// `sparsity` is the engine's own cycle-weighted skip fraction.
+fn sparse_cells(
+    layers: &[QuantLayer],
+    schedules: &[(&'static str, Vec<LayerPrecision>)],
+    backend: &'static str,
+    rng: &mut XorShift64,
+) -> Vec<String> {
+    println!("\n== engine: sparse-activation cells (zero-skip on vs off) ==");
+    println!(
+        "{:<16} {:>6} {:>10} {:>10} {:>12} {:>12} {:>8}",
+        "schedule", "batch", "zero rows", "sparsity", "rows/s", "dense rows/s", "skip x"
+    );
+    let batch_rows = 192usize;
+    let mut out_json = vec![];
+    for (name, sched) in schedules {
+        let model =
+            CompiledModel::compile_scheduled(layers.to_vec(), sched.clone()).expect("valid");
+        let engine = PackedEngine::new(Arc::clone(&model));
+        let dense_engine = PackedEngine::new(Arc::clone(&model)).with_zero_skip(false);
+        for &zero_frac in &[0.5f64, 0.75] {
+            // A contiguous all-zero tail of whole rows: every packed
+            // word it covers is zero in every column of every layer
+            // (zero rows stay zero through ReLU), and the live head
+            // keeps the lane packing aligned.
+            let live = (batch_rows as f64 * (1.0 - zero_frac)).round() as usize;
+            let batch: Vec<Vec<i64>> = (0..batch_rows)
+                .map(|b| {
+                    (0..64)
+                        .map(|_| if b < live { rng.q_raw(sched[0].in_bits) } else { 0 })
+                        .collect()
+                })
+                .collect();
+            let mut scratch = EngineScratch::new();
+            let mut out = Vec::new();
+            let stats = engine.forward_batch_into(&batch, 0, &mut scratch, &mut out);
+            let mut dense_out = Vec::new();
+            let dense_stats =
+                dense_engine.forward_batch_into(&batch, 0, &mut scratch, &mut dense_out);
+            // Skipping is an execution strategy, not a numeric change:
+            // bit-exact outputs, conservation-exact billing.
+            assert_eq!(out, dense_out, "{name} {zero_frac}: skip changes outputs");
+            assert_eq!(
+                stats.s1_cycles + stats.skipped_cycles,
+                dense_stats.s1_cycles,
+                "{name} {zero_frac}: conservation"
+            );
+            let sparsity = stats.skip_fraction().unwrap_or(0.0);
+            assert!(
+                sparsity >= zero_frac,
+                "{name}: {zero_frac} zero rows must skip at least that \
+                 fraction of Stage-1 cycles, got {sparsity}"
+            );
+
+            let label = format!("sparse {name} (zero {zero_frac})");
+            let r = bench(&label, 40, || {
+                std::hint::black_box(engine.forward_batch_into(
+                    &batch,
+                    0,
+                    &mut scratch,
+                    &mut out,
+                ));
+            });
+            let rows_per_s = batch_rows as f64 / (r.ns_per_iter * 1e-9);
+            let dense_label = format!("no-skip {name} (zero {zero_frac})");
+            let rd = bench(&dense_label, 40, || {
+                std::hint::black_box(dense_engine.forward_batch_into(
+                    &batch,
+                    0,
+                    &mut scratch,
+                    &mut out,
+                ));
+            });
+            let dense_rows_per_s = batch_rows as f64 / (rd.ns_per_iter * 1e-9);
+            let skip_speedup = rows_per_s / dense_rows_per_s;
+            println!(
+                "{:<16} {:>6} {:>10.2} {:>9.1}% {:>12.0} {:>12.0} {:>7.2}x",
+                name,
+                batch_rows,
+                zero_frac,
+                sparsity * 100.0,
+                rows_per_s,
+                dense_rows_per_s,
+                skip_speedup
+            );
+            out_json.push(format!(
+                "{{\"schedule\":\"sparse-{name}\",\"batch\":{batch_rows},\
+                 \"backend\":\"{backend}\",\"zero_row_fraction\":{zero_frac},\
+                 \"sparsity\":{sparsity:.4},\"rows_per_s\":{rows_per_s:.1},\
+                 \"no_skip_rows_per_s\":{dense_rows_per_s:.1},\
+                 \"skip_speedup\":{skip_speedup:.2}}}"
+            ));
+        }
+    }
+    out_json
 }
 
 /// One conv serving cell, JSON-serializable (`BENCH_conv.json`):

@@ -12,14 +12,23 @@
 //! from which every [`EngineStats`] field of any batch is a closed
 //! form in the batch row count `m`.
 //!
-//! The certificate is exact, not a bound: [`CostCertificate::eval_stats`]
-//! reproduces the engine's counters *field by field and bucket by
-//! bucket* for every `m` (the property tests and, under
-//! `--features billaudit`, the differential [`audit`] oracle enforce
-//! it), and [`CostCertificate::energy_pj`] prices the predicted stats
-//! through the same [`CostTable`] arithmetic the serving loop uses —
-//! so predicted and measured energy agree to the attojoule, not merely
-//! approximately.
+//! Since activation zero-skipping (DESIGN.md §18) the certificate is a
+//! certified **upper bound** with an exact conservation law, not a
+//! point prediction: [`CostCertificate::eval_stats`] is the *dense*
+//! bill — what the engine bills with skipping disabled, and what it
+//! would have billed on a batch with no all-zero operand words. The
+//! engine's measured `s1_*` counters can only shrink below it, and
+//! shrink by **exactly** the `skipped_*` counters it reports
+//! (`dense == executed + skipped`, field by field and bucket by
+//! bucket); every other counter stays dense-exact.
+//! [`CostCertificate::eval_stats_with_skips`] folds a measured batch's
+//! skip counters back in to give the exact sparsity-conditioned
+//! prediction, and the [`audit`] oracle enforces the conservation law
+//! on every executed batch under `--features billaudit`.
+//! [`CostCertificate::energy_pj`] prices the dense stats through the
+//! same [`CostTable`] arithmetic the serving loop uses — so predicted
+//! and measured energy agree to the attojoule on dense batches, and
+//! predicted-given-sparsity energy agrees on every batch.
 //!
 //! **The affine-in-`m` model.** Batches are padded to the variant's
 //! batch quantum, so every counter is a function of
@@ -85,9 +94,10 @@ pub struct CostCertificate {
 
 impl CostCertificate {
     /// Certify one variant from the compiled artifact: the flat plan
-    /// headers (cycle/add weights per nonzero weight) and the variant's
-    /// schedule/boundary metadata. Reads no engine code and executes
-    /// nothing.
+    /// headers (cycle/add weights per nonzero weight, read from the
+    /// variant's own plan bank — truncated banks certify strictly
+    /// cheaper) and the variant's schedule/boundary metadata. Reads no
+    /// engine code and executes nothing.
     pub fn certify(layers: &[LayerOp], arena: &PlanArena, var: &Variant) -> CostCertificate {
         debug_assert_eq!(arena.n_layers(), layers.len());
         let per_layer = layers
@@ -101,7 +111,7 @@ impl CostCertificate {
                 let mut plan_cycles = 0u64;
                 let mut plan_adds = 0u64;
                 for n in 0..w.n {
-                    for hdr in arena.column(li, n) {
+                    for hdr in arena.column_bank(var.plan_bank(), li, n) {
                         if hdr.is_zero() {
                             continue;
                         }
@@ -135,11 +145,15 @@ impl CostCertificate {
         }
     }
 
-    /// The engine's exact [`EngineStats`] for a batch of `m` rows —
-    /// the closed-form evaluation of the certificate. Mirrors the
-    /// billing formulas the engine derives from its own datapath
-    /// counters; the `billaudit` oracle and the property tests pin the
-    /// two sources equal on every field.
+    /// The engine's **dense** [`EngineStats`] for a batch of `m` rows —
+    /// the closed-form evaluation of the certificate, equal to the
+    /// measured stats when zero-skipping is off (or no operand word is
+    /// all zero). With skipping on, the measured `s1_*` fields fall
+    /// below these by exactly the measured `skipped_*` counters
+    /// (conservation; see [`eval_stats_with_skips`]) and everything
+    /// else still matches exactly.
+    ///
+    /// [`eval_stats_with_skips`]: CostCertificate::eval_stats_with_skips
     pub fn eval_stats(&self, m: usize) -> EngineStats {
         assert!(m > 0, "empty batch");
         let mp = m.div_ceil(self.batch_quantum) * self.batch_quantum;
@@ -187,11 +201,61 @@ impl CostCertificate {
         stats
     }
 
+    /// The exact **sparsity-conditioned** prediction: the dense
+    /// [`eval_stats`] with a measured batch's zero-skip savings folded
+    /// back in. Given the engine's own `skipped_*` counters (the only
+    /// data-dependent inputs), the result must equal the measured stats
+    /// field-for-field — the equality the billing auditor's
+    /// conservation checks are equivalent to, and what the serving loop
+    /// prices for predicted-vs-measured energy parity under sparsity.
+    ///
+    /// Uses `saturating_sub` so a corrupted skip counter can never
+    /// panic the serving path — the auditor records the divergence
+    /// instead.
+    ///
+    /// [`eval_stats`]: CostCertificate::eval_stats
+    pub fn eval_stats_with_skips(&self, m: usize, measured: &EngineStats) -> EngineStats {
+        let mut stats = self.eval_stats(m);
+        stats.s1_cycles = stats.s1_cycles.saturating_sub(measured.skipped_cycles);
+        stats.s1_adds = stats.s1_adds.saturating_sub(measured.skipped_adds);
+        for fi in 0..FORMATS.len() {
+            stats.s1_cycles_by_fmt[fi] =
+                stats.s1_cycles_by_fmt[fi].saturating_sub(measured.skipped_cycles_by_fmt[fi]);
+            stats.s1_adds_by_fmt[fi] =
+                stats.s1_adds_by_fmt[fi].saturating_sub(measured.skipped_adds_by_fmt[fi]);
+        }
+        stats.skipped_plans = measured.skipped_plans;
+        stats.skipped_cycles = measured.skipped_cycles;
+        stats.skipped_adds = measured.skipped_adds;
+        stats.skipped_cycles_by_fmt = measured.skipped_cycles_by_fmt;
+        stats.skipped_adds_by_fmt = measured.skipped_adds_by_fmt;
+        stats
+    }
+
+    /// Total (nonzero plan × packed word) executions a dense run of `m`
+    /// rows performs — the hard cap on [`EngineStats::skipped_plans`]
+    /// the auditor enforces.
+    pub fn plan_words(&self, m: usize) -> u64 {
+        let mp = m.div_ceil(self.batch_quantum) * self.batch_quantum;
+        self.layers
+            .iter()
+            .map(|lc| {
+                let rows = mp * lc.patch_rows;
+                let cur_words = rows / SimdFormat::new(lc.in_bits).lanes() as usize;
+                lc.nonzero_plans * cur_words as u64
+            })
+            .sum()
+    }
+
     /// Certified batch energy: the predicted stats priced through the
     /// **same** [`CostTable`] arithmetic the serving loop applies to
     /// measured stats — identical floating-point operation sequence,
     /// so equal stats give bit-identical pJ and attojoule-identical
-    /// metrics accumulation.
+    /// metrics accumulation. This is the **dense** (upper-bound)
+    /// figure; for sparsity-conditioned parity price
+    /// [`eval_stats_with_skips`] through the table instead.
+    ///
+    /// [`eval_stats_with_skips`]: CostCertificate::eval_stats_with_skips
     pub fn energy_pj(&self, m: usize, cost: &CostTable) -> f64 {
         cost.batch_energy_pj(&self.eval_stats(m))
     }
@@ -286,6 +350,16 @@ pub mod audit {
     /// Differentially check one executed batch's stats against the
     /// certificate at that batch's row count, recording every
     /// divergent field. Never panics.
+    ///
+    /// **The upper-bound contract (DESIGN.md §18).** Zero-skipping
+    /// makes the Stage-1 fields data-dependent, so they are checked via
+    /// the conservation law `executed + skipped == dense certificate`
+    /// (a `u64` equality, so `measured ≤ predicted` is implied — no
+    /// separate inequality check can be laundered past it); every
+    /// value-independent field keeps the strict equality. Skip-counter
+    /// self-consistency is audited too: the by-format skip buckets must
+    /// sum to the aggregates, and `skipped_plans` can never exceed the
+    /// dense (plan × word) count.
     pub fn check_batch(cert: &CostCertificate, stats: &EngineStats, m: usize) {
         let want = cert.eval_stats(m);
         let mut check = |field: String, expected: u64, got: u64| {
@@ -293,8 +367,14 @@ pub mod audit {
                 note(Divergence { variant: cert.variant.clone(), field, m, expected, got });
             }
         };
-        check("s1_cycles".into(), want.s1_cycles, stats.s1_cycles);
-        check("s1_adds".into(), want.s1_adds, stats.s1_adds);
+        // Stage-1: conservation against the dense certificate.
+        check(
+            "s1_cycles".into(),
+            want.s1_cycles,
+            stats.s1_cycles + stats.skipped_cycles,
+        );
+        check("s1_adds".into(), want.s1_adds, stats.s1_adds + stats.skipped_adds);
+        // Value-independent counters: strict equality, as before.
         check("s2_passes".into(), want.s2_passes, stats.s2_passes);
         check("acc_adds".into(), want.acc_adds, stats.acc_adds);
         check("subword_mults".into(), want.subword_mults, stats.subword_mults);
@@ -303,18 +383,41 @@ pub mod audit {
             check(
                 format!("s1_cycles_by_fmt[{bits}b]"),
                 want.s1_cycles_by_fmt[i],
-                stats.s1_cycles_by_fmt[i],
+                stats.s1_cycles_by_fmt[i] + stats.skipped_cycles_by_fmt[i],
             );
             check(
                 format!("s1_adds_by_fmt[{bits}b]"),
                 want.s1_adds_by_fmt[i],
-                stats.s1_adds_by_fmt[i],
+                stats.s1_adds_by_fmt[i] + stats.skipped_adds_by_fmt[i],
             );
             check(
                 format!("s2_passes_by_fmt[{bits}b]"),
                 want.s2_passes_by_fmt[i],
                 stats.s2_passes_by_fmt[i],
             );
+        }
+        // Skip-counter self-consistency: buckets sum to the aggregates…
+        check(
+            "skipped_cycles_sum".into(),
+            stats.skipped_cycles,
+            stats.skipped_cycles_by_fmt.iter().sum(),
+        );
+        check(
+            "skipped_adds_sum".into(),
+            stats.skipped_adds,
+            stats.skipped_adds_by_fmt.iter().sum(),
+        );
+        // …and no more plan executions can be skipped than a dense run
+        // performs.
+        let cap = cert.plan_words(m);
+        if stats.skipped_plans > cap {
+            note(Divergence {
+                variant: cert.variant.clone(),
+                field: "skipped_plans".into(),
+                m,
+                expected: cap,
+                got: stats.skipped_plans,
+            });
         }
     }
 }
@@ -385,6 +488,47 @@ mod tests {
         }
         let two = cert.eval_stats(q + 1);
         assert_eq!(two.s1_cycles, 2 * full.s1_cycles, "second block doubles S1");
+    }
+
+    #[test]
+    fn skip_conditioned_eval_reconstructs_measured_stats_exactly() {
+        use crate::coordinator::engine::PackedEngine;
+        let mut rng = XorShift64::new(0xCE50);
+        let layers = random_dense_stack_uniform(&mut rng, &[4, 3], 8);
+        let ops: Vec<LayerOp> = layers.into_iter().map(LayerOp::Dense).collect();
+        let model = CompiledModel::compile_variants(
+            ops,
+            vec![VariantSpec::new("u8", vec![LayerPrecision::new(8, 16)])],
+        )
+        .unwrap();
+        let cert = model.cost_certificate(0).clone();
+        let engine = PackedEngine::new(model.clone());
+        // Rows 6..12 are all zero: one of the two packed words per
+        // input column skips.
+        let batch: Vec<Vec<i64>> = (0..12)
+            .map(|i| {
+                (0..4)
+                    .map(|_| if i < 6 { rng.q_raw(8) } else { 0 })
+                    .collect()
+            })
+            .collect();
+        let (_, stats) = engine.forward_batch(&batch);
+        assert!(stats.skipped_plans > 0, "half the batch words are zero");
+        assert!(stats.skipped_plans <= cert.plan_words(12));
+        // Conservation: the dense certificate is exactly executed +
+        // skipped on the Stage-1 fields…
+        let dense = cert.eval_stats(12);
+        assert_eq!(dense.s1_cycles, stats.s1_cycles + stats.skipped_cycles);
+        assert_eq!(dense.s1_adds, stats.s1_adds + stats.skipped_adds);
+        assert!(stats.s1_cycles < dense.s1_cycles, "upper bound is strict here");
+        // …and therefore the sparsity-conditioned prediction is the
+        // measured stats, field for field.
+        assert_eq!(cert.eval_stats_with_skips(12, &stats), stats);
+        // A dense (no-skip) engine matches eval_stats directly.
+        let dense_engine = PackedEngine::new(model).with_zero_skip(false);
+        let (_, dense_stats) = dense_engine.forward_batch(&batch);
+        assert_eq!(dense_stats, dense);
+        assert_eq!(cert.eval_stats_with_skips(12, &dense_stats), dense_stats);
     }
 
     #[test]

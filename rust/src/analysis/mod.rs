@@ -433,10 +433,26 @@ fn checked_product(plan: &MulPlan, x: i64, x_bits: u32) -> Result<i64, ()> {
 
 /// Verify a stack against a schedule using an already-built
 /// [`PlanArena`] (the form [`crate::coordinator::model::CompiledModel`]
-/// holds) — see [`verify_stack`] for the standalone entry point.
+/// holds), reading plan bank 0 (the exact plans) — see [`verify_stack`]
+/// for the standalone entry point and [`verify_with_arena_bank`] for
+/// the truncated banks.
 pub fn verify_with_arena(
     layers: &[LayerOp],
     arena: &PlanArena,
+    schedule: &[LayerPrecision],
+) -> Result<LaneSafetyReport, AnalysisError> {
+    verify_with_arena_bank(layers, arena, 0, schedule)
+}
+
+/// As [`verify_with_arena`], analyzing plan bank `bank` — truncated
+/// (approximate) plan banks need their own verification pass because a
+/// truncated plan's kept value can *exceed* the magnitude of the weight
+/// it came from (dropping `−2^0` from `+2^7 − 2^0` leaves `+2^7`), so
+/// exact-bank safety does not imply truncated-bank safety.
+pub fn verify_with_arena_bank(
+    layers: &[LayerOp],
+    arena: &PlanArena,
+    bank: usize,
     schedule: &[LayerPrecision],
 ) -> Result<LaneSafetyReport, AnalysisError> {
     assert_eq!(layers.len(), schedule.len(), "one precision per layer");
@@ -482,7 +498,7 @@ pub fn verify_with_arena(
         for n in 0..w.n {
             let mut lo = 0i128;
             let mut hi = 0i128;
-            for (k, hd) in arena.column(li, n).iter().enumerate() {
+            for (k, hd) in arena.column_bank(bank, li, n).iter().enumerate() {
                 if hd.is_zero() {
                     continue;
                 }
@@ -514,6 +530,7 @@ pub fn verify_with_arena(
                         layers,
                         schedule,
                         arena,
+                        bank,
                         li,
                         n,
                         hi >= (1i128 << (p.acc_bits - 1)),
@@ -613,11 +630,15 @@ fn synth_acc_counterexample(
     layers: &[LayerOp],
     schedule: &[LayerPrecision],
     arena: &PlanArena,
+    bank: usize,
     li: usize,
     column: usize,
     maximize: bool,
 ) -> Option<Vec<i64>> {
-    if li != 0 {
+    // The shadow executor replays the exact plans, so only bank-0
+    // verdicts get a concrete confirmed witness; a truncated bank's
+    // abstract verdict stands on its own.
+    if li != 0 || bank != 0 {
         return None;
     }
     let p = schedule[0];

@@ -52,6 +52,19 @@
 //! ([`Stage1::take_counters`] — one source of truth, no re-billing via
 //! `plan.cycles()`) and counts exactly what the pre-refactor engine
 //! counted for the same work; the property tests pin the formulas.
+//!
+//! **Activation zero-skipping (DESIGN.md §18).** Stage-1 is
+//! data-dependent: a packed operand word that is all zero multiplies to
+//! zero under any plan, so the engine elides that plan execution
+//! entirely — bit-exact, because the elided accumulate is the identity.
+//! The forgone work is tallied in `EngineStats::skipped_*`, making the
+//! static cost certificate a certified **upper bound** on the Stage-1
+//! bill with an exact conservation law (`certificate == executed +
+//! skipped`, per format bucket) that `billaudit` checks every batch;
+//! accumulate and Stage-2 billing stay value-independent. Post-ReLU
+//! feature maps are where whole words go zero in practice — the
+//! paper's zero-skipping claim exercised on the batch-packed axis.
+//! [`PackedEngine::with_zero_skip`] turns it off for A/B baselines.
 //! Boundary conversions are billed identically whether the stream stays
 //! packed or is staged scalar — the crossbar does the same work either
 //! way; the im2col gather/scatter itself is near-memory data staging
@@ -117,12 +130,26 @@ pub struct EngineStats {
     pub subword_mults: u64,
     /// Zero rows appended to fill the last packed word of the batch.
     pub pad_rows: u64,
+    /// Plan × word executions elided because the operand word was all
+    /// zero (activation zero-skipping, DESIGN.md §18). One unit = one
+    /// (plan, packed word) pair whose Stage-1 execution never ran.
+    pub skipped_plans: u64,
+    /// Stage-1 cycles the skipped executions *would* have cost — what
+    /// closes the conservation law `cert.s1_cycles == s1_cycles +
+    /// skipped_cycles` the billing auditor checks.
+    pub skipped_cycles: u64,
+    /// Add/sub cycles among `skipped_cycles`.
+    pub skipped_adds: u64,
     /// Stage-1 multiply cycles split by the format they ran at.
     pub s1_cycles_by_fmt: [u64; FORMATS.len()],
     /// Stage-1 add/sub cycles split by the format they ran at.
     pub s1_adds_by_fmt: [u64; FORMATS.len()],
     /// Stage-2 crossbar passes split by the format they *produced*.
     pub s2_passes_by_fmt: [u64; FORMATS.len()],
+    /// Skipped Stage-1 cycles split by the format they would have run at.
+    pub skipped_cycles_by_fmt: [u64; FORMATS.len()],
+    /// Skipped add/sub cycles split by format.
+    pub skipped_adds_by_fmt: [u64; FORMATS.len()],
 }
 
 impl EngineStats {
@@ -138,6 +165,30 @@ impl EngineStats {
     fn note_s2(&mut self, produced: SimdFormat, passes: u64) {
         self.s2_passes += passes;
         self.s2_passes_by_fmt[format_index(produced.bits)] += passes;
+    }
+
+    /// Record `words` zero-skipped executions of a plan costing
+    /// `plan_cycles`/`plan_adds` per word at format `fmt`.
+    #[inline]
+    fn note_skip(&mut self, fmt: SimdFormat, plan_cycles: u64, plan_adds: u64, words: u64) {
+        let fi = format_index(fmt.bits);
+        self.skipped_plans += words;
+        self.skipped_cycles += plan_cycles * words;
+        self.skipped_cycles_by_fmt[fi] += plan_cycles * words;
+        self.skipped_adds += plan_adds * words;
+        self.skipped_adds_by_fmt[fi] += plan_adds * words;
+    }
+
+    /// Observed zero-skip savings share: the fraction of the dense
+    /// Stage-1 cycle bill that was elided (`skipped / (executed +
+    /// skipped)`, cycle-weighted — the honest derivable sparsity
+    /// metric). `None` when the run billed no Stage-1 work at all.
+    pub fn skip_fraction(&self) -> Option<f64> {
+        let total = self.skipped_cycles + self.s1_cycles;
+        if total == 0 {
+            return None;
+        }
+        Some(self.skipped_cycles as f64 / total as f64)
     }
 }
 
@@ -269,13 +320,36 @@ fn hop_into(
 /// A packed-execution engine bound to one PE, sharing one compiled model.
 pub struct PackedEngine {
     model: Arc<CompiledModel>,
+    /// Activation zero-skipping (DESIGN.md §18): when on (the default),
+    /// a plan's Stage-1 execution is elided for every packed operand
+    /// word that is all zero — bit-exact (0 · w = 0; the elided
+    /// accumulate is the identity), with the saved work tallied in
+    /// [`EngineStats::skipped_cycles`]. Off restores the dense engine
+    /// (the A/B baseline the benches difference against).
+    zero_skip: bool,
 }
 
 impl PackedEngine {
     /// Bind a PE to a shared compiled model. Cheap: no plan compilation
-    /// and no weight copies happen here.
+    /// and no weight copies happen here. Activation zero-skipping is on
+    /// by default ([`with_zero_skip`]).
+    ///
+    /// [`with_zero_skip`]: PackedEngine::with_zero_skip
     pub fn new(model: Arc<CompiledModel>) -> Self {
-        PackedEngine { model }
+        PackedEngine { model, zero_skip: true }
+    }
+
+    /// Builder: enable/disable activation zero-skipping. Disabling it
+    /// restores the dense engine — every plan executes over every word,
+    /// `skipped_*` counters stay zero, and measured stats equal the
+    /// cost certificate exactly (the no-skip A/B baseline).
+    pub fn with_zero_skip(mut self, on: bool) -> Self {
+        self.zero_skip = on;
+        self
+    }
+
+    pub fn zero_skip(&self) -> bool {
+        self.zero_skip
     }
 
     pub fn model(&self) -> &CompiledModel {
@@ -374,6 +448,10 @@ impl PackedEngine {
         let model = &*self.model;
         let var = model.variant(variant);
         let arena = model.flat();
+        // Approximate variants execute their truncated plan bank; exact
+        // variants (and every pre-§18 model) run bank 0.
+        let bank = var.plan_bank();
+        let zero_skip = self.zero_skip;
         let m = batch.len();
         assert!(m > 0, "empty batch");
         // Pad the batch dimension to the model's batch quantum: packed
@@ -491,12 +569,25 @@ impl PackedEngine {
             for n in 0..w.n {
                 let acc_col = &mut acc[n * acc_words..(n + 1) * acc_words];
                 // The k plan headers feeding column n are adjacent.
-                for (k, hdr) in arena.column(li, n).iter().enumerate() {
+                for (k, hdr) in arena.column_bank(bank, li, n).iter().enumerate() {
                     if hdr.is_zero() {
                         continue; // zero weight: zero-skipped entirely
                     }
                     let ops = arena.ops(*hdr);
                     let x_col = &h[k * cur_words..(k + 1) * cur_words];
+                    // Activation zero-skipping (DESIGN.md §18): a packed
+                    // word of all-zero activations multiplies to zero
+                    // under any plan, so its Stage-1 execution is elided
+                    // and the word tallied here. The accumulate/widen
+                    // billing below stays value-independent (a skipped
+                    // word's accumulate is the identity add — the
+                    // datapath still spends that cycle; eliding the host
+                    // `swar_add` is a pure software optimization), so
+                    // only the `s1_*` counters shrink versus the dense
+                    // certificate — by exactly `hdr.cycles/adds` per
+                    // skipped word, the conservation law `billaudit`
+                    // checks.
+                    let mut skipped_words = 0u64;
                     if doubling {
                         // Fused multiply → widen → accumulate per word:
                         // one accumulate add and one widen pass per
@@ -512,24 +603,46 @@ impl PackedEngine {
                             Exec::Wide(kern) => {
                                 use crate::bits::swarx::TILE;
                                 for (ti, c) in x_col.chunks_exact(TILE).enumerate() {
-                                    let p = s1.run_flat_tile(
-                                        kern,
-                                        [c[0], c[1], c[2], c[3]],
-                                        ops,
-                                    );
+                                    let tile = [c[0], c[1], c[2], c[3]];
+                                    // A tile skips when all TILE words
+                                    // are zero; a mixed tile falls back
+                                    // per-word so its zero words still
+                                    // bill no Stage-1 cycles — the
+                                    // counters match the scalar core
+                                    // word for word either way.
+                                    let p = if zero_skip && tile == [0; TILE] {
+                                        skipped_words += TILE as u64;
+                                        [0u64; TILE]
+                                    } else if zero_skip && tile.contains(&0) {
+                                        let mut p = [0u64; TILE];
+                                        for (j, &word) in tile.iter().enumerate() {
+                                            if word == 0 {
+                                                skipped_words += 1;
+                                            } else {
+                                                p[j] = s1.run_flat(word, ops);
+                                            }
+                                        }
+                                        p
+                                    } else {
+                                        s1.run_flat_tile(kern, tile, ops)
+                                    };
                                     for (j, &pw) in p.iter().enumerate() {
                                         let wi = ti * TILE + j;
-                                        let (lo, hi) = widen_double(pw, in_fmt);
-                                        acc_col[2 * wi] =
-                                            swar_add(acc_col[2 * wi], lo, acc_fmt);
+                                        if !(zero_skip && tile[j] == 0) {
+                                            let (lo, hi) = widen_double(pw, in_fmt);
+                                            acc_col[2 * wi] =
+                                                swar_add(acc_col[2 * wi], lo, acc_fmt);
+                                            if 2 * wi + 1 < acc_words {
+                                                acc_col[2 * wi + 1] = swar_add(
+                                                    acc_col[2 * wi + 1],
+                                                    hi,
+                                                    acc_fmt,
+                                                );
+                                            }
+                                        }
                                         stats.acc_adds += 1;
                                         stats.note_s2(acc_fmt, 1);
                                         if 2 * wi + 1 < acc_words {
-                                            acc_col[2 * wi + 1] = swar_add(
-                                                acc_col[2 * wi + 1],
-                                                hi,
-                                                acc_fmt,
-                                            );
                                             stats.acc_adds += 1;
                                             stats.note_s2(acc_fmt, 1);
                                         }
@@ -539,14 +652,20 @@ impl PackedEngine {
                             }
                         };
                         for (wi, &word) in x_col.iter().enumerate().skip(start) {
-                            let p = s1.run_flat(word, ops);
-                            let (lo, hi) = widen_double(p, in_fmt);
-                            acc_col[2 * wi] = swar_add(acc_col[2 * wi], lo, acc_fmt);
+                            if zero_skip && word == 0 {
+                                skipped_words += 1;
+                            } else {
+                                let p = s1.run_flat(word, ops);
+                                let (lo, hi) = widen_double(p, in_fmt);
+                                acc_col[2 * wi] = swar_add(acc_col[2 * wi], lo, acc_fmt);
+                                if 2 * wi + 1 < acc_words {
+                                    acc_col[2 * wi + 1] =
+                                        swar_add(acc_col[2 * wi + 1], hi, acc_fmt);
+                                }
+                            }
                             stats.acc_adds += 1;
                             stats.note_s2(acc_fmt, 1);
                             if 2 * wi + 1 < acc_words {
-                                acc_col[2 * wi + 1] =
-                                    swar_add(acc_col[2 * wi + 1], hi, acc_fmt);
                                 stats.acc_adds += 1;
                                 stats.note_s2(acc_fmt, 1);
                             }
@@ -560,14 +679,29 @@ impl PackedEngine {
                             Exec::Wide(kern) => {
                                 use crate::bits::swarx::TILE;
                                 for (ti, c) in x_col.chunks_exact(TILE).enumerate() {
-                                    let p = s1.run_flat_tile(
-                                        kern,
-                                        [c[0], c[1], c[2], c[3]],
-                                        ops,
-                                    );
+                                    let tile = [c[0], c[1], c[2], c[3]];
+                                    let p = if zero_skip && tile == [0; TILE] {
+                                        skipped_words += TILE as u64;
+                                        [0u64; TILE]
+                                    } else if zero_skip && tile.contains(&0) {
+                                        let mut p = [0u64; TILE];
+                                        for (j, &word) in tile.iter().enumerate() {
+                                            if word == 0 {
+                                                skipped_words += 1;
+                                            } else {
+                                                p[j] = s1.run_flat(word, ops);
+                                            }
+                                        }
+                                        p
+                                    } else {
+                                        s1.run_flat_tile(kern, tile, ops)
+                                    };
                                     for (j, &pw) in p.iter().enumerate() {
                                         let wi = ti * TILE + j;
-                                        acc_col[wi] = swar_add(acc_col[wi], pw, acc_fmt);
+                                        if !(zero_skip && tile[j] == 0) {
+                                            acc_col[wi] =
+                                                swar_add(acc_col[wi], pw, acc_fmt);
+                                        }
                                         stats.acc_adds += 1;
                                     }
                                 }
@@ -575,8 +709,12 @@ impl PackedEngine {
                             }
                         };
                         for (wi, &word) in x_col.iter().enumerate().skip(start) {
-                            let p = s1.run_flat(word, ops);
-                            acc_col[wi] = swar_add(acc_col[wi], p, acc_fmt);
+                            if zero_skip && word == 0 {
+                                skipped_words += 1;
+                            } else {
+                                let p = s1.run_flat(word, ops);
+                                acc_col[wi] = swar_add(acc_col[wi], p, acc_fmt);
+                            }
                             stats.acc_adds += 1;
                         }
                     } else {
@@ -593,18 +731,38 @@ impl PackedEngine {
                             Exec::Wide(kern) => {
                                 use crate::bits::swarx::TILE;
                                 for c in x_col.chunks_exact(TILE) {
-                                    let p = s1.run_flat_tile(
-                                        kern,
-                                        [c[0], c[1], c[2], c[3]],
-                                        ops,
-                                    );
+                                    let tile = [c[0], c[1], c[2], c[3]];
+                                    let p = if zero_skip && tile == [0; TILE] {
+                                        skipped_words += TILE as u64;
+                                        [0u64; TILE]
+                                    } else if zero_skip && tile.contains(&0) {
+                                        let mut p = [0u64; TILE];
+                                        for (j, &word) in tile.iter().enumerate() {
+                                            if word == 0 {
+                                                skipped_words += 1;
+                                            } else {
+                                                p[j] = s1.run_flat(word, ops);
+                                            }
+                                        }
+                                        p
+                                    } else {
+                                        s1.run_flat_tile(kern, tile, ops)
+                                    };
                                     prod.extend_from_slice(&p);
                                 }
                                 x_col.len() - x_col.len() % TILE
                             }
                         };
                         for &word in &x_col[start..] {
-                            prod.push(s1.run_flat(word, ops));
+                            if zero_skip && word == 0 {
+                                // The skipped word's product is zero;
+                                // the hop and accumulate below still
+                                // stream it (and are billed) unchanged.
+                                skipped_words += 1;
+                                prod.push(0);
+                            } else {
+                                prod.push(s1.run_flat(word, ops));
+                            }
                         }
                         stats.note_s2(acc_fmt, acc_words as u64);
                         hop_into(exec, prod, in_fmt, acc_fmt, rows, wide);
@@ -615,11 +773,26 @@ impl PackedEngine {
                     }
                     // Stage-1 billing is the datapath's own cycle count
                     // (one source of truth — never `plan.cycles()`
-                    // on the side).
+                    // on the side); zero-skipped words billed nothing
+                    // there and are tallied as foregone work instead.
                     let (cycles, adds) = s1.take_counters();
-                    debug_assert_eq!(cycles, hdr.cycles as u64 * cur_words as u64);
-                    debug_assert_eq!(adds, hdr.adds as u64 * cur_words as u64);
+                    debug_assert_eq!(
+                        cycles,
+                        hdr.cycles as u64 * (cur_words as u64 - skipped_words)
+                    );
+                    debug_assert_eq!(
+                        adds,
+                        hdr.adds as u64 * (cur_words as u64 - skipped_words)
+                    );
                     stats.note_s1(in_fmt, cycles, adds);
+                    if skipped_words > 0 {
+                        stats.note_skip(
+                            in_fmt,
+                            hdr.cycles as u64,
+                            hdr.adds as u64,
+                            skipped_words,
+                        );
+                    }
                     // Only the m real rows (for conv: the real images'
                     // patch rows) are useful multiplies; the zero-pad
                     // lanes of the batch tail are not.
@@ -1034,6 +1207,136 @@ mod tests {
     }
 
     #[test]
+    fn zero_activation_words_skip_stage1_and_stay_bit_exact() {
+        // 1×1 layer, weight 77: a 12-row batch packs into 2 input words;
+        // rows 6..12 are all zero, so the second word is zero and its
+        // plan execution must be elided — same logits, half the Stage-1
+        // bill, the other half tallied as skipped.
+        let layers = vec![QuantLayer::new(vec![vec![77]], 8)];
+        let plan_cycles = crate::csd::schedule::schedule(77, 8).cycles() as u64;
+        let plan_adds = crate::csd::schedule::schedule(77, 8).adds() as u64;
+        let batch: Vec<Vec<i64>> = (0..12)
+            .map(|i| vec![if i < 6 { i as i64 * 9 - 20 } else { 0 }])
+            .collect();
+        let skip = engine_uniform(layers.clone(), 8, 16);
+        let dense = PackedEngine::new(skip.model.clone()).with_zero_skip(false);
+        assert!(skip.zero_skip() && !dense.zero_skip());
+        let (got, stats) = skip.forward_batch(&batch);
+        let (want, dense_stats) = dense.forward_batch(&batch);
+        assert_eq!(got, want, "zero-skipping must be bit-exact");
+        assert_eq!(stats.s1_cycles, plan_cycles);
+        assert_eq!(stats.skipped_cycles, plan_cycles);
+        assert_eq!(stats.skipped_adds, plan_adds);
+        assert_eq!(stats.skipped_plans, 1);
+        assert_eq!(stats.skip_fraction(), Some(0.5));
+        // The dense baseline bills both words and skips nothing.
+        assert_eq!(dense_stats.s1_cycles, 2 * plan_cycles);
+        assert_eq!(dense_stats.skipped_cycles, 0);
+        assert_eq!(dense_stats.skipped_plans, 0);
+        // Conservation: executed + skipped == the dense bill, per bucket.
+        assert_eq!(stats.s1_cycles + stats.skipped_cycles, dense_stats.s1_cycles);
+        assert_eq!(stats.s1_adds + stats.skipped_adds, dense_stats.s1_adds);
+        for fi in 0..FORMATS.len() {
+            assert_eq!(
+                stats.s1_cycles_by_fmt[fi] + stats.skipped_cycles_by_fmt[fi],
+                dense_stats.s1_cycles_by_fmt[fi]
+            );
+        }
+        // Value-independent counters are untouched by skipping.
+        assert_eq!(stats.acc_adds, dense_stats.acc_adds);
+        assert_eq!(stats.s2_passes, dense_stats.s2_passes);
+        assert_eq!(stats.subword_mults, dense_stats.subword_mults);
+    }
+
+    #[test]
+    fn pad_only_words_skip_downstream_layers() {
+        // Mixed schedule [(4,8),(8,16)] has batch quantum 12: a 3-row
+        // batch pads with 9 zero rows, so layer 1's second input word
+        // (rows 6..12, all pad) is zero post-ReLU and must be skipped
+        // even on a dense-values batch.
+        let mut rng = XorShift64::new(0x5C1B);
+        let layers = random_dense_stack_uniform(&mut rng, &[4, 3, 2], 4);
+        let sched = vec![LayerPrecision::new(4, 8), LayerPrecision::new(8, 16)];
+        let engine = engine_for(layers.clone(), sched.clone());
+        let batch: Vec<Vec<i64>> = (0..3)
+            .map(|_| (0..4).map(|_| rng.q_raw(4)).collect())
+            .collect();
+        let (got, stats) = engine.forward_batch(&batch);
+        assert!(stats.skipped_plans > 0, "pad-only words must skip");
+        for (b, row) in batch.iter().enumerate() {
+            let want = mlp_forward_row_mixed(row, &layers, &sched);
+            assert_eq!(got[b], want, "row {b}");
+        }
+    }
+
+    #[test]
+    fn truncated_variant_is_bit_exact_when_truncation_drops_nothing() {
+        // Power-of-two weights encode to single-digit CSD, so
+        // keep-digits(1) removes nothing: the approximate variant must
+        // be bit-identical to the exact one on the same bank layout —
+        // the "truncation removes nothing ⇒ bit-exact" property.
+        use crate::coordinator::model::VariantSpec;
+        use crate::csd::schedule::Truncation;
+        let mut rng = XorShift64::new(0xAB1E);
+        let pow2 = |rng: &mut XorShift64| -> i64 {
+            let mag = 1i64 << (rng.next_u64() % 7);
+            if rng.next_u64() % 2 == 0 { mag } else { -mag }
+        };
+        let layers: Vec<QuantLayer> = [(5usize, 4usize), (4, 3)]
+            .iter()
+            .map(|&(k, n)| {
+                QuantLayer::new(
+                    (0..k).map(|_| (0..n).map(|_| pow2(&mut rng)).collect()).collect(),
+                    8,
+                )
+            })
+            .collect();
+        let ops: Vec<LayerOp> = layers.iter().cloned().map(LayerOp::Dense).collect();
+        let sched = uniform_schedule(8, 16, 2);
+        let specs = vec![
+            VariantSpec::new("exact", sched.clone()),
+            VariantSpec::new("d1", sched).with_truncation(Truncation::keep_digits(1)),
+        ];
+        let model = CompiledModel::compile_variants(ops, specs).unwrap();
+        let engine = PackedEngine::new(model);
+        let batch: Vec<Vec<i64>> = (0..7)
+            .map(|_| (0..5).map(|_| rng.q_raw(8)).collect())
+            .collect();
+        let (exact, exact_stats) = engine.forward_batch_variant(&batch, 0);
+        let (approx, approx_stats) = engine.forward_batch_variant(&batch, 1);
+        assert_eq!(exact, approx, "single-digit weights truncate to themselves");
+        assert_eq!(exact_stats, approx_stats, "identical plans, identical bill");
+    }
+
+    #[test]
+    fn truncated_variant_bills_strictly_less_on_multi_digit_weights() {
+        use crate::coordinator::model::VariantSpec;
+        use crate::csd::schedule::Truncation;
+        // Weights with dense CSD digit strings, so drop-least(2) removes
+        // digits from some plan: the approximate variant's dense-
+        // equivalent Stage-1 bill must shrink strictly.
+        let layers = vec![QuantLayer::new(vec![vec![115, -77], vec![43, 127]], 8)];
+        let ops: Vec<LayerOp> = layers.iter().cloned().map(LayerOp::Dense).collect();
+        let sched = uniform_schedule(8, 16, 1);
+        let specs = vec![
+            VariantSpec::new("exact", sched.clone()),
+            VariantSpec::new("t2", sched).with_truncation(Truncation::drop_least(2)),
+        ];
+        let model = CompiledModel::compile_variants(ops, specs).unwrap();
+        let engine = PackedEngine::new(model);
+        let batch: Vec<Vec<i64>> = (0..6)
+            .map(|i| vec![i as i64 * 11 - 30, 19 - i as i64 * 7])
+            .collect();
+        let (_, exact) = engine.forward_batch_variant(&batch, 0);
+        let (_, approx) = engine.forward_batch_variant(&batch, 1);
+        assert!(
+            approx.s1_cycles + approx.skipped_cycles
+                < exact.s1_cycles + exact.skipped_cycles,
+            "truncated bank must cost fewer Stage-1 cycles"
+        );
+    }
+
+    #[test]
     fn stats_scale_with_batch_words() {
         let mut rng = XorShift64::new(0x57A7);
         let layers = random_layers(&mut rng);
@@ -1043,8 +1346,13 @@ mod tests {
         };
         let (_, s6) = engine.forward_batch(&mk_batch(6, &mut rng));
         let (_, s12) = engine.forward_batch(&mk_batch(12, &mut rng));
-        // 6 rows = 1 packed word per column; 12 rows = 2 words.
-        assert_eq!(s12.s1_cycles, 2 * s6.s1_cycles);
+        // 6 rows = 1 packed word per column; 12 rows = 2 words. Dense
+        // Stage-1 work (executed + zero-skipped — hidden-layer words can
+        // go all-zero post-ReLU on random data) scales with the words.
+        assert_eq!(
+            s12.s1_cycles + s12.skipped_cycles,
+            2 * (s6.s1_cycles + s6.skipped_cycles)
+        );
         assert_eq!(s12.s2_passes, 2 * s6.s2_passes);
         assert_eq!(s12.acc_adds, 2 * s6.acc_adds);
     }

@@ -1157,15 +1157,21 @@ fn worker_loop(w: WorkerState, rx: Receiver<WorkerMsg>) {
         // AND the executing tenant's.
         let pj = w.cost.batch_energy_pj(&stats);
         // The static cost certificate's prediction for this batch,
-        // priced through the same table (DESIGN.md §15).
-        let predicted_pj = w
-            .engine
-            .model()
-            .cost_certificate(variant)
-            .energy_pj(n_rows, &w.cost);
+        // priced through the same table (DESIGN.md §15). Zero-skipping
+        // makes the dense certificate an upper bound, so the exact
+        // prediction conditions on the batch's own skip counters
+        // (DESIGN.md §18) — predicted equals measured to the attojoule
+        // again, at any sparsity.
+        let predicted_pj = w.cost.batch_energy_pj(
+            &w.engine
+                .model()
+                .cost_certificate(variant)
+                .eval_stats_with_skips(n_rows, &stats),
+        );
         w.metrics
             .add_batch_predicted(n_rows as u64, variant, stats, pj, predicted_pj, ns);
         w.tenant_metrics[tenant].add_rows(n_rows as u64, pj, ns);
+        w.tenant_metrics[tenant].add_s1_split(stats.s1_cycles, stats.skipped_cycles);
         let mut responses = vec![];
         let mut offset = 0;
         for entry in &batch.entries {

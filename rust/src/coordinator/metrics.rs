@@ -33,6 +33,11 @@ pub struct VariantMetrics {
     pub pad_rows: AtomicU64,
     pub subword_mults: AtomicU64,
     pub s1_cycles: AtomicU64,
+    /// Stage-1 cycles saved by activation zero-skipping (DESIGN.md §18)
+    /// on this variant's batches — the forgone work the engine tallied.
+    pub skipped_cycles: AtomicU64,
+    /// (plan × word) executions zero-skipped on this variant's batches.
+    pub skipped_plans: AtomicU64,
     pub s2_passes: AtomicU64,
     /// Simulated energy in attojoules (same rounding as the aggregate).
     pub energy_aj: AtomicU64,
@@ -67,6 +72,19 @@ impl VariantMetrics {
             return 0.0;
         }
         self.predicted_energy_aj.load(Ordering::Relaxed) as f64 / 1e6 / rows as f64
+    }
+
+    /// Observed activation-sparsity savings share on this variant:
+    /// skipped Stage-1 cycles over the dense bill
+    /// (`skipped / (executed + skipped)`, cycle-weighted). 0.0 before
+    /// any Stage-1 work.
+    pub fn skip_rate(&self) -> f64 {
+        let skipped = self.skipped_cycles.load(Ordering::Relaxed);
+        let total = skipped + self.s1_cycles.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        skipped as f64 / total as f64
     }
 
     /// Served rows per second of PE *compute* time on this variant —
@@ -106,6 +124,11 @@ pub struct TenantMetrics {
     pub energy_aj: AtomicU64,
     /// PE compute time billed to this tenant, nanoseconds.
     pub compute_ns: AtomicU64,
+    /// Stage-1 cycles executed for this tenant's batches.
+    pub s1_cycles: AtomicU64,
+    /// Stage-1 cycles zero-skipping saved on this tenant's batches
+    /// (DESIGN.md §18) — the tenant's observed activation sparsity.
+    pub skipped_cycles: AtomicU64,
     lat_hist: [AtomicU64; LAT_BUCKETS],
     lat_count: AtomicU64,
 }
@@ -121,6 +144,8 @@ impl TenantMetrics {
             rows: AtomicU64::new(0),
             energy_aj: AtomicU64::new(0),
             compute_ns: AtomicU64::new(0),
+            s1_cycles: AtomicU64::new(0),
+            skipped_cycles: AtomicU64::new(0),
             lat_hist: std::array::from_fn(|_| AtomicU64::new(0)),
             lat_count: AtomicU64::new(0),
         }
@@ -145,6 +170,27 @@ impl TenantMetrics {
         self.energy_aj
             .fetch_add((pj.max(0.0) * 1e6).round() as u64, Ordering::Relaxed);
         self.compute_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Called by a PE worker alongside [`TenantMetrics::add_rows`] with
+    /// the batch's Stage-1 cycle split: `executed` cycles actually
+    /// spent, `skipped` cycles elided by zero-skipping. Separate from
+    /// `add_rows` so pre-skip call sites keep compiling unchanged.
+    pub fn add_s1_split(&self, executed: u64, skipped: u64) {
+        self.s1_cycles.fetch_add(executed, Ordering::Relaxed);
+        self.skipped_cycles.fetch_add(skipped, Ordering::Relaxed);
+    }
+
+    /// Fraction of this tenant's dense Stage-1 work that zero-skipping
+    /// elided (0.0 before any Stage-1 work) — its observed activation
+    /// sparsity, cycle-weighted.
+    pub fn skip_rate(&self) -> f64 {
+        let skipped = self.skipped_cycles.load(Ordering::Relaxed);
+        let total = skipped + self.s1_cycles.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        skipped as f64 / total as f64
     }
 
     /// Record one request's submit→complete latency for this tenant.
@@ -192,6 +238,8 @@ impl TenantMetrics {
         snap.rows = self.rows.load(Ordering::Relaxed);
         snap.energy_aj = self.energy_aj.load(Ordering::Relaxed);
         snap.compute_ns = self.compute_ns.load(Ordering::Relaxed);
+        snap.s1_cycles = self.s1_cycles.load(Ordering::Relaxed);
+        snap.skipped_cycles = self.skipped_cycles.load(Ordering::Relaxed);
         snap.lat_count = self.lat_count.load(Ordering::Relaxed);
         for (dst, src) in snap.lat_hist.iter_mut().zip(&self.lat_hist) {
             *dst = src.load(Ordering::Relaxed);
@@ -209,6 +257,8 @@ pub struct TenantSnapshot {
     pub rows: u64,
     pub energy_aj: u64,
     pub compute_ns: u64,
+    pub s1_cycles: u64,
+    pub skipped_cycles: u64,
     pub lat_count: u64,
     pub lat_hist: [u64; LAT_BUCKETS],
 }
@@ -223,6 +273,8 @@ impl TenantSnapshot {
             rows: 0,
             energy_aj: 0,
             compute_ns: 0,
+            s1_cycles: 0,
+            skipped_cycles: 0,
             lat_count: 0,
             lat_hist: [0; LAT_BUCKETS],
         }
@@ -274,6 +326,8 @@ pub struct VariantCounters {
     pub subword_mults: u64,
     pub s1_cycles: u64,
     pub s2_passes: u64,
+    pub skipped_cycles: u64,
+    pub skipped_plans: u64,
     pub energy_aj: u64,
     pub predicted_energy_aj: u64,
     pub compute_ns: u64,
@@ -295,6 +349,8 @@ pub struct MetricsSnapshot {
     pub subword_mults: u64,
     pub s1_cycles: u64,
     pub s2_passes: u64,
+    pub skipped_cycles: u64,
+    pub skipped_plans: u64,
     pub energy_aj: u64,
     pub predicted_energy_aj: u64,
     pub compute_ns: u64,
@@ -317,6 +373,8 @@ impl MetricsSnapshot {
             subword_mults: 0,
             s1_cycles: 0,
             s2_passes: 0,
+            skipped_cycles: 0,
+            skipped_plans: 0,
             energy_aj: 0,
             predicted_energy_aj: 0,
             compute_ns: 0,
@@ -388,6 +446,12 @@ pub struct Metrics {
     pub subword_mults: AtomicU64,
     pub s1_cycles: AtomicU64,
     pub s2_passes: AtomicU64,
+    /// Stage-1 cycles zero-skipping elided across all batches
+    /// (DESIGN.md §18) — together with `s1_cycles` this derives the
+    /// fleet's observed activation sparsity.
+    pub skipped_cycles: AtomicU64,
+    /// Whole packed-column plans elided by zero-skipping.
+    pub skipped_plans: AtomicU64,
     /// Stage-1 cycles split by the format they ran at (parallel to
     /// `FORMATS`) — the serving-side view of a mixed-precision schedule.
     pub s1_cycles_by_fmt: [AtomicU64; FORMATS.len()],
@@ -453,6 +517,8 @@ impl Metrics {
             subword_mults: AtomicU64::new(0),
             s1_cycles: AtomicU64::new(0),
             s2_passes: AtomicU64::new(0),
+            skipped_cycles: AtomicU64::new(0),
+            skipped_plans: AtomicU64::new(0),
             s1_cycles_by_fmt: std::array::from_fn(|_| AtomicU64::new(0)),
             s2_passes_by_fmt: std::array::from_fn(|_| AtomicU64::new(0)),
             energy_aj: AtomicU64::new(0),
@@ -524,6 +590,10 @@ impl Metrics {
             .fetch_add(stats.subword_mults, Ordering::Relaxed);
         self.s1_cycles.fetch_add(stats.s1_cycles, Ordering::Relaxed);
         self.s2_passes.fetch_add(stats.s2_passes, Ordering::Relaxed);
+        self.skipped_cycles
+            .fetch_add(stats.skipped_cycles, Ordering::Relaxed);
+        self.skipped_plans
+            .fetch_add(stats.skipped_plans, Ordering::Relaxed);
         for (dst, &src) in self.s1_cycles_by_fmt.iter().zip(&stats.s1_cycles_by_fmt) {
             dst.fetch_add(src, Ordering::Relaxed);
         }
@@ -557,6 +627,10 @@ impl Metrics {
             .fetch_add(stats.subword_mults, Ordering::Relaxed);
         vb.s1_cycles.fetch_add(stats.s1_cycles, Ordering::Relaxed);
         vb.s2_passes.fetch_add(stats.s2_passes, Ordering::Relaxed);
+        vb.skipped_cycles
+            .fetch_add(stats.skipped_cycles, Ordering::Relaxed);
+        vb.skipped_plans
+            .fetch_add(stats.skipped_plans, Ordering::Relaxed);
         vb.energy_aj.fetch_add(aj, Ordering::Relaxed);
         vb.predicted_energy_aj
             .fetch_add(predicted_aj, Ordering::Relaxed);
@@ -589,6 +663,8 @@ impl Metrics {
         snap.subword_mults = self.subword_mults.load(Ordering::Relaxed);
         snap.s1_cycles = self.s1_cycles.load(Ordering::Relaxed);
         snap.s2_passes = self.s2_passes.load(Ordering::Relaxed);
+        snap.skipped_cycles = self.skipped_cycles.load(Ordering::Relaxed);
+        snap.skipped_plans = self.skipped_plans.load(Ordering::Relaxed);
         snap.energy_aj = self.energy_aj.load(Ordering::Relaxed);
         snap.predicted_energy_aj = self.predicted_energy_aj.load(Ordering::Relaxed);
         snap.compute_ns = self.compute_ns.load(Ordering::Relaxed);
@@ -605,6 +681,8 @@ impl Metrics {
             dst.subword_mults = src.subword_mults.load(Ordering::Relaxed);
             dst.s1_cycles = src.s1_cycles.load(Ordering::Relaxed);
             dst.s2_passes = src.s2_passes.load(Ordering::Relaxed);
+            dst.skipped_cycles = src.skipped_cycles.load(Ordering::Relaxed);
+            dst.skipped_plans = src.skipped_plans.load(Ordering::Relaxed);
             dst.energy_aj = src.energy_aj.load(Ordering::Relaxed);
             dst.predicted_energy_aj = src.predicted_energy_aj.load(Ordering::Relaxed);
             dst.compute_ns = src.compute_ns.load(Ordering::Relaxed);
@@ -625,6 +703,8 @@ impl Metrics {
         self.subword_mults.store(0, Ordering::Relaxed);
         self.s1_cycles.store(0, Ordering::Relaxed);
         self.s2_passes.store(0, Ordering::Relaxed);
+        self.skipped_cycles.store(0, Ordering::Relaxed);
+        self.skipped_plans.store(0, Ordering::Relaxed);
         for c in &self.s1_cycles_by_fmt {
             c.store(0, Ordering::Relaxed);
         }
@@ -649,6 +729,8 @@ impl Metrics {
             vb.subword_mults.store(0, Ordering::Relaxed);
             vb.s1_cycles.store(0, Ordering::Relaxed);
             vb.s2_passes.store(0, Ordering::Relaxed);
+            vb.skipped_cycles.store(0, Ordering::Relaxed);
+            vb.skipped_plans.store(0, Ordering::Relaxed);
             vb.energy_aj.store(0, Ordering::Relaxed);
             vb.predicted_energy_aj.store(0, Ordering::Relaxed);
             vb.compute_ns.store(0, Ordering::Relaxed);
@@ -698,6 +780,18 @@ impl Metrics {
         rows as f64 / ((last - first) as f64 / 1e9)
     }
 
+    /// Fleet-wide observed activation sparsity, cycle-weighted: the
+    /// fraction of dense Stage-1 work that zero-skipping elided (0.0
+    /// before any Stage-1 work).
+    pub fn skip_rate(&self) -> f64 {
+        let skipped = self.skipped_cycles.load(Ordering::Relaxed);
+        let total = skipped + self.s1_cycles.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        skipped as f64 / total as f64
+    }
+
     pub fn report(&self) -> String {
         let rows = self.rows.load(Ordering::Relaxed);
         let mults = self.subword_mults.load(Ordering::Relaxed);
@@ -739,6 +833,17 @@ impl Metrics {
             p99,
             self.variant_switches.load(Ordering::Relaxed),
         );
+        // Zero-skipping savings (DESIGN.md §18), only when any Stage-1
+        // work was elided — dense workloads keep the legacy report shape.
+        let skipped = self.skipped_cycles.load(Ordering::Relaxed);
+        if skipped > 0 {
+            out.push_str(&format!(
+                " skipped_cycles={} skipped_plans={} sparsity={:.1}%",
+                skipped,
+                self.skipped_plans.load(Ordering::Relaxed),
+                self.skip_rate() * 100.0,
+            ));
+        }
         // Certificate prediction line, only when workers recorded one:
         // the measured-vs-predicted delta in aJ must read 0 whenever the
         // static cost certificate (DESIGN.md §15) is wired in.
@@ -775,6 +880,12 @@ impl Metrics {
                         vb.predicted_pj_per_row()
                     ));
                 }
+                if vb.skipped_cycles.load(Ordering::Relaxed) > 0 {
+                    out.push_str(&format!(
+                        " sparsity={:.1}%",
+                        vb.skip_rate() * 100.0
+                    ));
+                }
             }
         }
         out
@@ -800,6 +911,7 @@ mod tests {
             s1_cycles_by_fmt: by_fmt,
             s1_adds_by_fmt: [0; FORMATS.len()],
             s2_passes_by_fmt: [0; FORMATS.len()],
+            ..Default::default()
         };
         m.add_batch(6, 0, stats, 1.5, 100);
         m.add_batch(6, 0, stats, 1.5, 100);
@@ -810,6 +922,57 @@ mod tests {
         assert_eq!(m.s1_cycles_by_fmt[i8].load(Ordering::Relaxed), 20);
         assert!(m.report().contains("rows=12"));
         assert!(m.report().contains("8b:20"), "{}", m.report());
+        // No Stage-1 work was skipped, so the report keeps its dense
+        // shape — the sparsity fields are gated on nonzero skips.
+        assert!(!m.report().contains("sparsity="), "{}", m.report());
+    }
+
+    #[test]
+    fn skip_counters_accumulate_and_surface_in_the_report() {
+        let m = Metrics::with_variant_names(&[
+            "hifi".to_string(),
+            "turbo".to_string(),
+        ]);
+        let stats = crate::coordinator::engine::EngineStats {
+            s1_cycles: 30,
+            skipped_cycles: 10,
+            skipped_plans: 2,
+            subword_mults: 60,
+            ..Default::default()
+        };
+        m.add_batch(6, 1, stats, 1.0, 100);
+        m.add_batch(6, 1, stats, 1.0, 100);
+        assert_eq!(m.skipped_cycles.load(Ordering::Relaxed), 20);
+        assert_eq!(m.skipped_plans.load(Ordering::Relaxed), 4);
+        // 20 skipped of 80 dense cycles, cycle-weighted.
+        assert!((m.skip_rate() - 0.25).abs() < 1e-12);
+        assert!((m.per_variant[1].skip_rate() - 0.25).abs() < 1e-12);
+        assert_eq!(m.per_variant[0].skipped_cycles.load(Ordering::Relaxed), 0);
+        let report = m.report();
+        assert!(
+            report.contains("skipped_cycles=20 skipped_plans=4 sparsity=25.0%"),
+            "{report}"
+        );
+        assert!(report.contains("variant[1 turbo]"), "{report}");
+        // Snapshot carries the skip counters; reset zeroes them.
+        let snap = m.snapshot();
+        assert_eq!(snap.skipped_cycles, 20);
+        assert_eq!(snap.per_variant[1].skipped_plans, 4);
+        m.reset();
+        assert_eq!(m.skipped_cycles.load(Ordering::Relaxed), 0);
+        assert_eq!(m.per_variant[1].skipped_cycles.load(Ordering::Relaxed), 0);
+        assert_eq!(m.skip_rate(), 0.0);
+    }
+
+    #[test]
+    fn tenant_s1_split_derives_the_tenant_skip_rate() {
+        let t = TenantMetrics::named("batch");
+        assert_eq!(t.skip_rate(), 0.0);
+        t.add_s1_split(75, 25);
+        assert!((t.skip_rate() - 0.25).abs() < 1e-12);
+        let snap = t.snapshot();
+        assert_eq!(snap.s1_cycles, 75);
+        assert_eq!(snap.skipped_cycles, 25);
     }
 
     #[test]

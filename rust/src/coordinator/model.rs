@@ -33,7 +33,7 @@ use crate::analysis::{AnalysisError, LaneSafetyReport};
 use crate::anyhow;
 use crate::bits::format::SimdFormat;
 use crate::csd::flat::PlanArena;
-use crate::csd::schedule::MulPlan;
+use crate::csd::schedule::{schedule_truncated, MulPlan, Truncation};
 use crate::nn::conv::LayerOp;
 use crate::nn::weights::{uniform_schedule, LayerPrecision, QuantLayer};
 use crate::pipeline::stage2::conversion_chain;
@@ -45,20 +45,34 @@ use crate::pipeline::stage2::conversion_chain;
 pub static PLAN_COMPILATIONS: AtomicU64 = AtomicU64::new(0);
 
 /// A declared precision variant: a display name plus one
-/// [`LayerPrecision`] per layer. `specs[0]` of a variant set is the
-/// **reference** variant — requests arrive quantized at its first-layer
-/// activation width, and every other variant's first layer must be at
-/// most that wide (narrower variants consume the same request stream
-/// through an arithmetic right shift; [`Variant::in_shift`]).
+/// [`LayerPrecision`] per layer, and optionally a CSD [`Truncation`]
+/// policy selecting an **approximate plan bank** (DESIGN.md §18).
+/// `specs[0]` of a variant set is the **reference** variant — requests
+/// arrive quantized at its first-layer activation width, and every
+/// other variant's first layer must be at most that wide (narrower
+/// variants consume the same request stream through an arithmetic
+/// right shift; [`Variant::in_shift`]); the reference must also execute
+/// the exact plans (`Truncation::NONE`).
 #[derive(Debug, Clone)]
 pub struct VariantSpec {
     pub name: String,
     pub schedule: Vec<LayerPrecision>,
+    /// CSD digit truncation this variant executes under —
+    /// `Truncation::NONE` (the default) runs the exact plans.
+    pub truncation: Truncation,
 }
 
 impl VariantSpec {
     pub fn new(name: impl Into<String>, schedule: Vec<LayerPrecision>) -> VariantSpec {
-        VariantSpec { name: name.into(), schedule }
+        VariantSpec { name: name.into(), schedule, truncation: Truncation::NONE }
+    }
+
+    /// Builder: execute this variant on the truncated plan bank of
+    /// policy `trunc` (compiled once per distinct policy and shared by
+    /// every variant that names it).
+    pub fn with_truncation(mut self, trunc: Truncation) -> VariantSpec {
+        self.truncation = trunc;
+        self
     }
 
     /// The standard serving trio over an `n_layers` stack, ordered
@@ -91,6 +105,30 @@ impl VariantSpec {
             VariantSpec::new("turbo-4-4-8", (0..n_layers).map(turbo).collect()),
         ]
     }
+
+    /// The standard trio extended past narrow-width into approximate
+    /// serving (DESIGN.md §18): the turbo schedule re-compiled against
+    /// truncated-CSD plan banks, still ordered hi-fidelity first to
+    /// cheapest — the shed ladder the governor descends under certified
+    /// drain-budget pressure. `approx-t2` drops CSD digits of raw
+    /// weight < 4 (per-weight error ≤ 2 raw ULPs, [`naf_max_below`]);
+    /// `approx-d1` keeps only each weight's most-significant digit
+    /// (every multiply ≤ 1 add cycle).
+    ///
+    /// [`naf_max_below`]: crate::csd::schedule::naf_max_below
+    pub fn standard_ladder(n_layers: usize) -> Vec<VariantSpec> {
+        let mut specs = VariantSpec::standard_trio(n_layers);
+        let turbo_sched = specs[2].schedule.clone();
+        specs.push(
+            VariantSpec::new("approx-t2", turbo_sched.clone())
+                .with_truncation(Truncation::drop_least(2)),
+        );
+        specs.push(
+            VariantSpec::new("approx-d1", turbo_sched)
+                .with_truncation(Truncation::keep_digits(1)),
+        );
+        specs
+    }
 }
 
 /// One compiled precision variant: the validated schedule plus
@@ -114,6 +152,13 @@ pub struct Variant {
     /// value into this variant's first-layer activation format (0 for
     /// the reference variant itself).
     in_shift: u32,
+    /// The CSD truncation policy this variant executes under
+    /// (`Truncation::NONE` for exact variants).
+    truncation: Truncation,
+    /// Which [`PlanArena`] bank holds this variant's plans: bank 0 is
+    /// always the exact plans; truncated policies get one shared bank
+    /// each (deduplicated across variants).
+    plan_bank: usize,
 }
 
 impl Variant {
@@ -177,6 +222,24 @@ impl Variant {
     /// exact transform the PE workers apply).
     pub fn quantize_row(&self, row: &[i64]) -> Vec<i64> {
         row.iter().map(|&v| v >> self.in_shift).collect()
+    }
+
+    /// The CSD truncation policy this variant executes under
+    /// ([`Truncation::NONE`] for exact variants).
+    #[inline]
+    pub fn truncation(&self) -> Truncation {
+        self.truncation
+    }
+
+    /// The [`PlanArena`] bank this variant's plans live in (0 = exact).
+    #[inline]
+    pub fn plan_bank(&self) -> usize {
+        self.plan_bank
+    }
+
+    /// Whether this variant executes approximate (truncated) plans.
+    pub fn is_approximate(&self) -> bool {
+        !self.truncation.is_none()
     }
 }
 
@@ -322,9 +385,19 @@ impl CompiledModel {
         }
         // Per-variant schedule validation and precomputation.
         let ref_in_bits = specs[0].schedule.first().map(|p| p.in_bits).unwrap_or(0);
+        anyhow::ensure!(
+            specs[0].truncation.is_none(),
+            "reference variant ({}) must execute the exact plans, not truncation {}",
+            specs[0].name,
+            specs[0].truncation
+        );
+        // Deduplicate truncation policies into plan banks: bank 0 is
+        // always the exact plans; each distinct truncated policy gets
+        // one bank shared by every variant that names it.
+        let mut bank_truncs: Vec<Truncation> = vec![Truncation::NONE];
         let mut variants = Vec::with_capacity(specs.len());
         for (vi, spec) in specs.into_iter().enumerate() {
-            let VariantSpec { name, schedule } = spec;
+            let VariantSpec { name, schedule, truncation } = spec;
             anyhow::ensure!(
                 layers.len() == schedule.len(),
                 "variant {vi} ({name}): {} layers but {} precision entries",
@@ -350,15 +423,26 @@ impl CompiledModel {
                 .windows(2)
                 .map(|w| conversion_chain(w[0].acc_fmt(), w[1].in_fmt()))
                 .collect();
+            let plan_bank = match bank_truncs.iter().position(|&t| t == truncation) {
+                Some(b) => b,
+                None => {
+                    bank_truncs.push(truncation);
+                    bank_truncs.len() - 1
+                }
+            };
             variants.push(Variant {
                 name,
                 in_shift: ref_in_bits - schedule[0].in_bits,
                 schedule,
                 chains,
                 batch_quantum,
+                truncation,
+                plan_bank,
             });
         }
         // One plan compilation per variant *set* — the dedup invariant.
+        // Truncated banks are derived from the same per-weight digit
+        // streams in the same pass, so they ride the single compilation.
         PLAN_COMPILATIONS.fetch_add(1, Ordering::SeqCst);
         let plans: Vec<Vec<Vec<MulPlan>>> =
             layers.iter().map(|layer| layer.weights().plans()).collect();
@@ -375,7 +459,31 @@ impl CompiledModel {
                 }
             }
         }
-        let arena = PlanArena::build(&plans);
+        // Approximate banks: recompile each layer's weights under the
+        // bank's truncation policy (strictly-fewer-cycle plans; same
+        // header layout, so the engine switches banks with one offset).
+        let trunc_banks: Vec<Vec<Vec<Vec<MulPlan>>>> = bank_truncs[1..]
+            .iter()
+            .map(|&trunc| {
+                layers
+                    .iter()
+                    .map(|layer| {
+                        let w = layer.weights();
+                        w.w_raw
+                            .iter()
+                            .map(|row| {
+                                row.iter()
+                                    .map(|&m| schedule_truncated(m, w.bits, trunc))
+                                    .collect()
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut banks: Vec<&[Vec<Vec<MulPlan>>]> = vec![&plans];
+        banks.extend(trunc_banks.iter().map(|b| b.as_slice()));
+        let arena = PlanArena::build_banks(&banks);
         Ok(Arc::new(CompiledModel {
             layers,
             plans,
@@ -524,7 +632,12 @@ impl CompiledModel {
             self.variants
                 .iter()
                 .map(|var| {
-                    crate::analysis::verify_with_arena(&self.layers, &self.arena, var.schedule())
+                    crate::analysis::verify_with_arena_bank(
+                        &self.layers,
+                        &self.arena,
+                        var.plan_bank(),
+                        var.schedule(),
+                    )
                 })
                 .collect()
         });
@@ -766,6 +879,87 @@ mod tests {
         // but reports the verdict on demand.
         let m = CompiledModel::compile_variants(wide, specs).unwrap();
         assert!(m.lane_safety(0).is_err());
+    }
+
+    #[test]
+    fn standard_ladder_compiles_approx_variants_into_dedup_banks() {
+        let ops: Vec<LayerOp> = layers().into_iter().map(LayerOp::Dense).collect();
+        let m = CompiledModel::compile_variants(ops, VariantSpec::standard_ladder(2)).unwrap();
+        assert_eq!(m.n_variants(), 5);
+        // The trio runs exact plans out of bank 0; the two approximate
+        // policies each get their own bank.
+        for v in 0..3 {
+            assert_eq!(m.variant(v).plan_bank(), 0);
+            assert!(!m.variant(v).is_approximate());
+        }
+        assert_eq!(m.variant(3).name(), "approx-t2");
+        assert_eq!(m.variant(3).plan_bank(), 1);
+        assert_eq!(m.variant(3).truncation(), Truncation::drop_least(2));
+        assert!(m.variant(3).is_approximate());
+        assert_eq!(m.variant(4).name(), "approx-d1");
+        assert_eq!(m.variant(4).plan_bank(), 2);
+        assert_eq!(m.flat().n_banks(), 3);
+        // Approx variants ride the turbo schedule, so scheduling
+        // metadata matches the turbo variant exactly.
+        assert_eq!(m.variant(3).schedule(), m.variant(2).schedule());
+        assert_eq!(m.variant(3).batch_quantum(), m.variant(2).batch_quantum());
+        assert_eq!(m.variant(3).in_shift(), m.variant(2).in_shift());
+        // Truncated banks share the header layout but never cost more
+        // cycles than the exact plan of the same weight.
+        let arena = m.flat();
+        for (li, layer) in m.layers().iter().enumerate() {
+            let w = layer.weights();
+            for k in 0..w.k {
+                for n in 0..w.n {
+                    let exact = arena.header_bank(0, li, k, n);
+                    for bank in 1..arena.n_banks() {
+                        let t = arena.header_bank(bank, li, k, n);
+                        assert!(t.cycles <= exact.cycles, "({li},{k},{n}) bank {bank}");
+                        assert!(t.adds <= exact.adds);
+                        if w.w_raw[k][n] == 0 {
+                            assert!(t.is_zero(), "zero weight must stay zero in every bank");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn two_variants_naming_the_same_truncation_share_a_bank() {
+        let ops: Vec<LayerOp> = layers().into_iter().map(LayerOp::Dense).collect();
+        let sched = uniform_schedule(8, 16, 2);
+        let specs = vec![
+            VariantSpec::new("exact", sched.clone()),
+            VariantSpec::new("a", sched.clone()).with_truncation(Truncation::drop_least(1)),
+            VariantSpec::new("b", sched).with_truncation(Truncation::drop_least(1)),
+        ];
+        let m = CompiledModel::compile_variants(ops, specs).unwrap();
+        assert_eq!(m.variant(1).plan_bank(), m.variant(2).plan_bank());
+        assert_eq!(m.flat().n_banks(), 2);
+    }
+
+    #[test]
+    fn truncated_reference_variant_is_a_compile_error() {
+        let ops: Vec<LayerOp> = layers().into_iter().map(LayerOp::Dense).collect();
+        let specs = vec![VariantSpec::new("ref", uniform_schedule(8, 16, 2))
+            .with_truncation(Truncation::drop_least(1))];
+        let err = CompiledModel::compile_variants(ops, specs).expect_err("approx reference");
+        assert!(err.to_string().contains("exact plans"), "{err}");
+    }
+
+    #[test]
+    fn standard_ladder_is_lane_safe_on_the_synth_stack() {
+        // Truncation can *increase* a kept value's magnitude relative to
+        // the weight (dropping a negative correction digit), so approx
+        // banks get their own lane-safety verdicts — pin that the stock
+        // ladder still verifies on a plain stack.
+        let ops: Vec<LayerOp> = layers().into_iter().map(LayerOp::Dense).collect();
+        let m = CompiledModel::compile_variants_verified(ops, VariantSpec::standard_ladder(2))
+            .expect("ladder is lane-safe on this stack");
+        for v in 0..m.n_variants() {
+            assert!(m.lane_safety(v).is_ok(), "{}", m.variant(v).name());
+        }
     }
 
     #[test]

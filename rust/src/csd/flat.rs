@@ -105,45 +105,86 @@ impl FlatPlan {
 /// buffer: `ops` holds every layer's micro-ops back to back; `headers`
 /// holds one [`FlatPlan`] per weight, laid out n-major per layer so the
 /// `k` plans feeding an output column are adjacent.
+///
+/// Since the truncated-CSD variants (DESIGN.md §18) an arena can carry
+/// several plan **banks** over the same layer shapes: bank 0 holds the
+/// exact plans, further banks hold approximate (truncated) plans of the
+/// same weights — one header block of identical layout per bank, all
+/// sharing the one `ops` byte buffer. The bank-less accessors read
+/// bank 0, so every pre-§18 caller keeps its exact-plan semantics.
 #[derive(Debug)]
 pub struct PlanArena {
     ops: Vec<u8>,
     headers: Vec<FlatPlan>,
-    /// First header of each layer: `headers[layer_base[li] + n*k + k_i]`.
+    /// First header of each layer *within a bank*:
+    /// `headers[bank·bank_stride + layer_base[li] + n*k + k_i]`.
     layer_base: Vec<usize>,
     /// Input width `k` of each layer (the column stride).
     layer_k: Vec<usize>,
+    /// Headers per bank (all banks share layer shapes, so all have the
+    /// same stride).
+    bank_stride: usize,
+    /// Number of plan banks (≥ 1; bank 0 is exact).
+    n_banks: usize,
 }
 
 impl PlanArena {
     /// Flatten `plans[layer][k][n]` (the [`CompiledModel`] layout) into
-    /// one arena. Op bytes are emitted in the same n-major header order
-    /// so a layer's execution streams the buffer strictly forward.
+    /// a single-bank arena. Op bytes are emitted in the same n-major
+    /// header order so a layer's execution streams the buffer strictly
+    /// forward.
     ///
     /// [`CompiledModel`]: crate::coordinator::model::CompiledModel
     pub fn build(plans: &[Vec<Vec<MulPlan>>]) -> PlanArena {
+        PlanArena::build_banks(&[plans])
+    }
+
+    /// Flatten several plan banks over the **same layer shapes** into
+    /// one arena: `banks[b][layer][k][n]`. Bank 0 must be the exact
+    /// plans; further banks are approximate variants of the same
+    /// weights (every bank must agree on every layer's `(k, n)` dims).
+    pub fn build_banks(banks: &[&[Vec<Vec<MulPlan>>]]) -> PlanArena {
+        assert!(!banks.is_empty(), "arena needs at least one plan bank");
         let mut arena = PlanArena {
             ops: Vec::new(),
             headers: Vec::new(),
-            layer_base: Vec::with_capacity(plans.len()),
-            layer_k: Vec::with_capacity(plans.len()),
+            layer_base: Vec::with_capacity(banks[0].len()),
+            layer_k: Vec::with_capacity(banks[0].len()),
+            bank_stride: 0,
+            n_banks: banks.len(),
         };
-        for layer_plans in plans {
-            let k = layer_plans.len();
-            let n = if k > 0 { layer_plans[0].len() } else { 0 };
-            arena.layer_base.push(arena.headers.len());
-            arena.layer_k.push(k);
-            for ni in 0..n {
-                for row in layer_plans.iter() {
-                    let plan = &row[ni];
-                    let offset = arena.ops.len() as u32;
-                    encode_plan(plan, &mut arena.ops);
-                    arena.headers.push(FlatPlan {
-                        offset,
-                        cycles: plan.cycles() as u16,
-                        adds: plan.adds() as u16,
-                    });
+        for (bi, &bank) in banks.iter().enumerate() {
+            assert_eq!(bank.len(), banks[0].len(), "bank {bi}: layer count");
+            for (li, layer_plans) in bank.iter().enumerate() {
+                let k = layer_plans.len();
+                let n = if k > 0 { layer_plans[0].len() } else { 0 };
+                if bi == 0 {
+                    arena.layer_base.push(arena.headers.len());
+                    arena.layer_k.push(k);
+                } else {
+                    assert_eq!(k, arena.layer_k[li], "bank {bi} layer {li}: k");
                 }
+                for ni in 0..n {
+                    for row in layer_plans.iter() {
+                        let plan = &row[ni];
+                        let offset = arena.ops.len() as u32;
+                        encode_plan(plan, &mut arena.ops);
+                        arena.headers.push(FlatPlan {
+                            offset,
+                            cycles: plan.cycles() as u16,
+                            adds: plan.adds() as u16,
+                        });
+                    }
+                }
+            }
+            if bi == 0 {
+                arena.bank_stride = arena.headers.len();
+            } else {
+                assert_eq!(
+                    arena.headers.len(),
+                    (bi + 1) * arena.bank_stride,
+                    "bank {bi}: header count must match bank 0's layout"
+                );
             }
         }
         arena.ops.shrink_to_fit();
@@ -151,19 +192,41 @@ impl PlanArena {
         arena
     }
 
-    /// Header of layer `li`'s plan for weight `(k, n)`.
+    /// Header of layer `li`'s plan for weight `(k, n)` in bank 0 (the
+    /// exact plans).
     #[inline]
     pub fn header(&self, li: usize, k: usize, n: usize) -> FlatPlan {
-        self.headers[self.layer_base[li] + n * self.layer_k[li] + k]
+        self.header_bank(0, li, k, n)
+    }
+
+    /// Header of layer `li`'s plan for weight `(k, n)` in plan bank
+    /// `bank`.
+    #[inline]
+    pub fn header_bank(&self, bank: usize, li: usize, k: usize, n: usize) -> FlatPlan {
+        self.headers
+            [bank * self.bank_stride + self.layer_base[li] + n * self.layer_k[li] + k]
     }
 
     /// The `k` adjacent headers feeding output column `n` of layer `li`
-    /// — index `i` of the slice is input index `k = i`.
+    /// in bank 0 — index `i` of the slice is input index `k = i`.
     #[inline]
     pub fn column(&self, li: usize, n: usize) -> &[FlatPlan] {
+        self.column_bank(0, li, n)
+    }
+
+    /// The `k` adjacent headers feeding output column `n` of layer `li`
+    /// in plan bank `bank`.
+    #[inline]
+    pub fn column_bank(&self, bank: usize, li: usize, n: usize) -> &[FlatPlan] {
         let k = self.layer_k[li];
-        let base = self.layer_base[li] + n * k;
+        let base = bank * self.bank_stride + self.layer_base[li] + n * k;
         &self.headers[base..base + k]
+    }
+
+    /// Number of plan banks (1 for an exact-only arena).
+    #[inline]
+    pub fn n_banks(&self) -> usize {
+        self.n_banks
     }
 
     /// The micro-op bytes of one plan.
@@ -180,6 +243,7 @@ impl PlanArena {
 
     /// `(k, n)` dimensions of layer `li`'s header block — the input
     /// width (column stride) and output column count it was built with.
+    /// Identical across banks by construction.
     #[inline]
     pub fn layer_dims(&self, li: usize) -> (usize, usize) {
         let base = self.layer_base[li];
@@ -187,7 +251,7 @@ impl PlanArena {
             .layer_base
             .get(li + 1)
             .copied()
-            .unwrap_or(self.headers.len());
+            .unwrap_or(self.bank_stride);
         let k = self.layer_k[li];
         (k, if k == 0 { 0 } else { (end - base) / k })
     }
@@ -201,12 +265,12 @@ impl PlanArena {
         self.ops(h).iter().map(|&b| decode_op(b))
     }
 
-    /// Total micro-op bytes in the arena (diagnostics).
+    /// Total micro-op bytes in the arena, all banks (diagnostics).
     pub fn total_ops(&self) -> usize {
         self.ops.len()
     }
 
-    /// Total plan headers in the arena (diagnostics).
+    /// Total plan headers in the arena, all banks (diagnostics).
     pub fn total_plans(&self) -> usize {
         self.headers.len()
     }
@@ -215,7 +279,7 @@ impl PlanArena {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::csd::schedule::schedule;
+    use crate::csd::schedule::{schedule, schedule_truncated, Truncation};
 
     #[test]
     fn op_encoding_round_trips() {
@@ -299,5 +363,58 @@ mod tests {
                 assert_eq!(decoded, plan.ops);
             }
         }
+    }
+
+    #[test]
+    fn single_bank_build_is_bank_zero_of_build_banks() {
+        let plans: Vec<Vec<MulPlan>> = (0..3)
+            .map(|k| (0..2).map(|n| schedule(k * 31 + n * 7 - 40, 8)).collect())
+            .collect();
+        let single = PlanArena::build(&[plans.clone()]);
+        assert_eq!(single.n_banks(), 1);
+        for k in 0..3 {
+            for n in 0..2 {
+                assert_eq!(single.header(0, k, n), single.header_bank(0, 0, k, n));
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_bank_shares_layout_and_shrinks_cycles() {
+        let weights = [[115i64, -77], [0, 127], [64, -3]];
+        let trunc = Truncation::drop_least(3);
+        let exact: Vec<Vec<MulPlan>> = weights
+            .iter()
+            .map(|row| row.iter().map(|&m| schedule(m, 8)).collect())
+            .collect();
+        let approx: Vec<Vec<MulPlan>> = weights
+            .iter()
+            .map(|row| row.iter().map(|&m| schedule_truncated(m, 8, trunc)).collect())
+            .collect();
+        let bank0 = [exact.clone()];
+        let bank1 = [approx.clone()];
+        let arena = PlanArena::build_banks(&[&bank0, &bank1]);
+        assert_eq!(arena.n_banks(), 2);
+        assert_eq!(arena.total_plans(), 2 * 6);
+        assert_eq!(arena.layer_dims(0), (3, 2));
+        for k in 0..3 {
+            for n in 0..2 {
+                // Bank 0 is the exact plan, bank 1 the truncated one —
+                // each header decodes back to exactly its source plan.
+                let h0 = arena.header_bank(0, 0, k, n);
+                let h1 = arena.header_bank(1, 0, k, n);
+                assert_eq!(h0, arena.header(0, k, n), "bank 0 is the default");
+                let d0: Vec<MulOp> = arena.walk(h0).collect();
+                let d1: Vec<MulOp> = arena.walk(h1).collect();
+                assert_eq!(d0, exact[k][n].ops, "({k},{n})");
+                assert_eq!(d1, approx[k][n].ops, "({k},{n})");
+                assert!(h1.cycles <= h0.cycles, "({k},{n})");
+                // Column accessors agree with the per-header view.
+                assert_eq!(arena.column_bank(1, 0, n)[k], h1);
+            }
+        }
+        // The zero weight stays a zero-cycle header in every bank.
+        assert!(arena.header_bank(0, 0, 1, 0).is_zero());
+        assert!(arena.header_bank(1, 0, 1, 0).is_zero());
     }
 }

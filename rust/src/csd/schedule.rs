@@ -68,21 +68,12 @@ impl MulPlan {
     }
 }
 
-/// Build the cycle schedule for multiplier `m_raw` at width `y_bits`,
-/// with per-cycle shifter reach `max_shift` (the paper's design point is
-/// 3; the ablation harness sweeps it).
-pub fn schedule_with(m_raw: i64, y_bits: u32, max_shift: u32) -> MulPlan {
-    assert!(max_shift >= 1);
-    let digits = csd_encode(m_raw, y_bits); // MSB-first: digits[j] has weight 2^-j
-    // Nonzero positions, processed in descending order (LSB side first).
-    let nz: Vec<(u32, i8)> = (0..y_bits)
-        .rev()
-        .filter_map(|j| match digits[j as usize] {
-            Digit::Z => None,
-            Digit::P => Some((j, 1i8)),
-            Digit::N => Some((j, -1i8)),
-        })
-        .collect();
+/// Lower a list of CSD nonzero digit positions into the fused
+/// add-then-shift cycle sequence. `nz` must be ordered descending in
+/// `j` (least-significant digit first — the order the sequential
+/// multiplier retires them); any *suffix* of a valid CSD digit list is
+/// itself a valid input, which is what truncated plans exploit.
+fn ops_from_nz(nz: &[(u32, i8)], max_shift: u32) -> Vec<MulOp> {
     let mut ops = Vec::with_capacity(nz.len() + 2);
     for (idx, &(j, sign)) in nz.iter().enumerate() {
         if j == 0 {
@@ -103,12 +94,142 @@ pub fn schedule_with(m_raw: i64, y_bits: u32, max_shift: u32) -> MulPlan {
             rem -= s;
         }
     }
+    ops
+}
+
+/// The CSD nonzero digit positions of `m_raw`, descending in `j`
+/// (least-significant first — schedule retirement order). Entry `(j,
+/// sign)` has fractional weight `sign · 2^-j`, raw weight
+/// `sign · 2^(y_bits-1-j)`.
+fn nonzero_digits(m_raw: i64, y_bits: u32) -> Vec<(u32, i8)> {
+    let digits = csd_encode(m_raw, y_bits); // MSB-first: digits[j] has weight 2^-j
+    (0..y_bits)
+        .rev()
+        .filter_map(|j| match digits[j as usize] {
+            Digit::Z => None,
+            Digit::P => Some((j, 1i8)),
+            Digit::N => Some((j, -1i8)),
+        })
+        .collect()
+}
+
+/// Build the cycle schedule for multiplier `m_raw` at width `y_bits`,
+/// with per-cycle shifter reach `max_shift` (the paper's design point is
+/// 3; the ablation harness sweeps it).
+pub fn schedule_with(m_raw: i64, y_bits: u32, max_shift: u32) -> MulPlan {
+    assert!(max_shift >= 1);
+    let nz = nonzero_digits(m_raw, y_bits);
+    let ops = ops_from_nz(&nz, max_shift);
     MulPlan { m_raw, y_bits, ops }
 }
 
 /// Build the cycle schedule at the paper's design point (`max_shift = 3`).
 pub fn schedule(m_raw: i64, y_bits: u32) -> MulPlan {
     schedule_with(m_raw, y_bits, MAX_SHIFT)
+}
+
+/// A truncation policy for approximate CSD plans: which least-significant
+/// nonzero digits of a multiplier's CSD string are *dropped* before the
+/// cycle schedule is built. CSD digit lists are significance-sorted, so
+/// dropping a least-significant prefix leaves a valid (non-adjacent)
+/// signed-digit string — the truncated plan is the **exact** plan of the
+/// kept value, strictly fewer cycles whenever anything drops, with a
+/// per-multiplier error `|m − m_kept|` bounded analytically by
+/// [`naf_max_below`].
+///
+/// Both knobs compose (drop-below first, then the digit-count cap):
+/// `Truncation::NONE` keeps every digit and compiles bit-identical plans
+/// to [`schedule_with`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Truncation {
+    /// Drop nonzero digits whose **raw** weight is below `2^drop_below`
+    /// (raw position `y_bits − 1 − j < drop_below`). 0 = keep all.
+    pub drop_below: u32,
+    /// Keep at most this many most-significant nonzero digits
+    /// (`None` = no cap).
+    pub max_digits: Option<u32>,
+}
+
+impl Truncation {
+    /// Keep everything — the exact-plan policy.
+    pub const NONE: Truncation = Truncation { drop_below: 0, max_digits: None };
+
+    /// Does this policy drop nothing (exact plans)?
+    pub fn is_none(&self) -> bool {
+        *self == Truncation::NONE
+    }
+
+    /// Drop digits of raw weight below `2^t`.
+    pub fn drop_least(t: u32) -> Truncation {
+        Truncation { drop_below: t, max_digits: None }
+    }
+
+    /// Keep only the `d` most-significant nonzero digits.
+    pub fn keep_digits(d: u32) -> Truncation {
+        Truncation { drop_below: 0, max_digits: Some(d) }
+    }
+}
+
+impl std::fmt::Display for Truncation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match (self.drop_below, self.max_digits) {
+            (0, None) => write!(f, "exact"),
+            (t, None) => write!(f, "t{t}"),
+            (0, Some(d)) => write!(f, "d{d}"),
+            (t, Some(d)) => write!(f, "t{t}d{d}"),
+        }
+    }
+}
+
+/// Build the **truncated** cycle schedule: CSD-encode `m_raw`, drop the
+/// least-significant nonzero digits per `trunc`, and schedule the kept
+/// suffix. The returned plan's `m_raw` is the **kept** raw value (the
+/// plan computes `x · m_kept` exactly, never an inexact `x · m_raw`) —
+/// the caller owns the original weight; `|m_raw − plan.m_raw|` is the
+/// introduced error, bounded by [`naf_max_below`] of the first kept raw
+/// position. The kept digits are never re-encoded: a truncated CSD
+/// value can exceed the `Q1.(y_bits-1)` range (e.g. dropping `−2^0`
+/// from `+2^7 − 2^0` leaves `+128`), which re-encoding would reject.
+pub fn schedule_truncated_with(
+    m_raw: i64,
+    y_bits: u32,
+    trunc: Truncation,
+    max_shift: u32,
+) -> MulPlan {
+    assert!(max_shift >= 1);
+    let nz = nonzero_digits(m_raw, y_bits);
+    // Both knobs drop from the least-significant end, which is the
+    // *front* of `nz` (largest j = lowest raw position y_bits-1-j).
+    let mut start = nz
+        .iter()
+        .position(|&(j, _)| y_bits - 1 - j >= trunc.drop_below)
+        .unwrap_or(nz.len());
+    if let Some(d) = trunc.max_digits {
+        let keep = (nz.len() - start).min(d as usize);
+        start = nz.len() - keep;
+    }
+    let kept = &nz[start..];
+    let m_kept: i64 = kept
+        .iter()
+        .map(|&(j, sign)| (sign as i64) << (y_bits - 1 - j))
+        .sum();
+    MulPlan { m_raw: m_kept, y_bits, ops: ops_from_nz(kept, max_shift) }
+}
+
+/// [`schedule_truncated_with`] at the paper's `max_shift = 3`.
+pub fn schedule_truncated(m_raw: i64, y_bits: u32, trunc: Truncation) -> MulPlan {
+    schedule_truncated_with(m_raw, y_bits, trunc, MAX_SHIFT)
+}
+
+/// Maximum absolute value of a non-adjacent signed-digit string confined
+/// to raw positions `0..t` — the analytic bound on the raw-weight error
+/// a [`Truncation`] with `drop_below = t` can introduce (the dropped
+/// digits are a suffix of a CSD string, so they are themselves
+/// non-adjacent). `B(0)=0, B(1)=1, B(2)=2, B(3)=5, B(4)=10, …` — the
+/// greedy `2^(t-1) + 2^(t-3) + …` pattern, closed form
+/// `(2^(t+1) − 2 + (t mod 2)) / 3`.
+pub fn naf_max_below(t: u32) -> i64 {
+    ((1i64 << (t + 1)) - 2 + (t as i64 & 1)) / 3
 }
 
 #[cfg(test)]
@@ -233,5 +354,130 @@ mod tests {
             let x: i128 = 999i128 << 32;
             assert_eq!(exact_eval(&plan, x), (x * m as i128) >> 7);
         }
+    }
+
+    #[test]
+    fn naf_max_below_matches_greedy_pattern() {
+        // B(t) = 2^(t-1) + 2^(t-3) + … — the densest non-adjacent
+        // string below position t.
+        let mut want = vec![0i64];
+        for t in 1..=16u32 {
+            let mut v = 0i64;
+            let mut p = t as i64 - 1;
+            while p >= 0 {
+                v += 1 << p;
+                p -= 2;
+            }
+            want.push(v);
+            assert_eq!(naf_max_below(t), v, "t={t}");
+        }
+        assert_eq!(&want[..5], &[0, 1, 2, 5, 10]);
+    }
+
+    #[test]
+    fn none_truncation_is_bit_identical_to_exact_schedule() {
+        for y in [4u32, 6, 8] {
+            let half = 1i64 << (y - 1);
+            for m in -half..half {
+                assert_eq!(
+                    schedule_truncated(m, y, Truncation::NONE),
+                    schedule(m, y),
+                    "m={m} y={y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_plans_compute_the_kept_value_exactly() {
+        // The truncated plan is an *exact* plan for its kept multiplier:
+        // unbounded-precision replay must land on (x · m_kept) >> (y−1).
+        for y in [4u32, 6, 8] {
+            let half = 1i64 << (y - 1);
+            for t in 0..y {
+                for m in -half..half {
+                    let plan = schedule_truncated(m, y, Truncation::drop_least(t));
+                    let x: i128 = 777i128 << 32;
+                    assert_eq!(
+                        exact_eval(&plan, x),
+                        (x * plan.m_raw as i128) >> (y - 1),
+                        "m={m} y={y} t={t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn drop_least_error_is_bounded_by_naf_max_below() {
+        for y in [4u32, 6, 8] {
+            let half = 1i64 << (y - 1);
+            for t in 0..=y {
+                let bound = naf_max_below(t);
+                for m in -half..half {
+                    let plan = schedule_truncated(m, y, Truncation::drop_least(t));
+                    assert!(
+                        (m - plan.m_raw).abs() <= bound,
+                        "m={m} y={y} t={t}: kept {} err {} > bound {bound}",
+                        plan.m_raw,
+                        (m - plan.m_raw).abs()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_strictly_reduces_cycles_when_digits_drop() {
+        for y in [4u32, 6, 8] {
+            let half = 1i64 << (y - 1);
+            for m in -half..half {
+                let exact = schedule(m, y);
+                for t in 1..y {
+                    let plan = schedule_truncated(m, y, Truncation::drop_least(t));
+                    if plan.m_raw == m {
+                        assert_eq!(plan.ops, exact.ops, "m={m} t={t}: nothing dropped");
+                    } else {
+                        assert!(
+                            plan.cycles() < exact.cycles(),
+                            "m={m} y={y} t={t}: {} !< {}",
+                            plan.cycles(),
+                            exact.cycles()
+                        );
+                    }
+                    assert!(plan.adds() <= exact.adds());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn keep_digits_caps_add_count_and_keeps_most_significant() {
+        for m in -128i64..128 {
+            let exact = schedule(m, 8);
+            for d in 0..=4u32 {
+                let plan = schedule_truncated(m, 8, Truncation::keep_digits(d));
+                assert!(plan.adds() <= d as usize, "m={m} d={d}");
+                // One kept digit = the most-significant one: the kept
+                // value's magnitude is at least half the original's.
+                if d == 1 && m != 0 {
+                    assert!(plan.m_raw != 0, "m={m}");
+                    assert!(2 * plan.m_raw.abs() >= m.abs(), "m={m} kept {}", plan.m_raw);
+                }
+                if d as usize >= exact.adds() {
+                    assert_eq!(plan.ops, exact.ops, "m={m} d={d}: cap above digit count");
+                    assert_eq!(plan.m_raw, m);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_display_names_are_stable() {
+        assert_eq!(Truncation::NONE.to_string(), "exact");
+        assert_eq!(Truncation::drop_least(2).to_string(), "t2");
+        assert_eq!(Truncation::keep_digits(1).to_string(), "d1");
+        let both = Truncation { drop_below: 3, max_digits: Some(2) };
+        assert_eq!(both.to_string(), "t3d2");
     }
 }

@@ -1,0 +1,337 @@
+//! `eval approx` — the truncated-CSD approximation Pareto (DESIGN.md
+//! §18).
+//!
+//! Sweeps a ladder of [`Truncation`] levels (exact, `t1..t3`, `d2`,
+//! `d1`) over both synthetic workloads. Each level compiles into the
+//! same shared plan arena as an approximate variant riding the exact
+//! reference's schedule, so every row of the table is a real operating
+//! point the serving governor can shed to: top-1 accuracy, agreement
+//! with the exact variant, Stage-1 work and billed energy per row.
+//!
+//! Two oracles gate the sweep (nonzero exit on violation):
+//!
+//! 1. **Error-bound oracle** — for *every* weight in *every* layer the
+//!    realized per-multiplier error `|m − m_kept|` must stay within
+//!    the analytic bound: [`naf_max_below`]`(t)` for a `drop_least(t)`
+//!    policy, and `naf_max_below(p)` for digit-capped policies, where
+//!    `p` is the first kept raw position (the dropped digits are a CSD
+//!    suffix confined below `p`).
+//! 2. **Certificate oracle** — each approximate variant's *cheaper*
+//!    static cost certificate must reconstruct the measured stats
+//!    under the skip-conditioned upper-bound contract, exactly like
+//!    the exact variants in `eval certify`.
+//!
+//! The table is also written to `EVAL_approx.json` (cwd-relative, like
+//! `BENCH_*.json`) for CI upload.
+
+use std::sync::Arc;
+
+use crate::anyhow;
+use crate::coordinator::cost::CostTable;
+use crate::coordinator::engine::PackedEngine;
+use crate::coordinator::model::{CompiledModel, VariantSpec};
+use crate::csd::schedule::{naf_max_below, schedule_truncated, Truncation};
+use crate::energy::report::table;
+use crate::nn::conv::LayerOp;
+use crate::nn::exec::argmax_class;
+use crate::nn::weights::LayerPrecision;
+use crate::workload::synth::{synth_cnn_stack, synth_mlp_stack, Digits, ImageSet};
+
+/// Samples per workload (a multiple of every variant's batch quantum).
+pub const SAMPLES: usize = 96;
+
+/// The swept truncation ladder, exact first (the reference variant).
+pub fn truncation_ladder() -> Vec<Truncation> {
+    vec![
+        Truncation::NONE,
+        Truncation::drop_least(1),
+        Truncation::drop_least(2),
+        Truncation::drop_least(3),
+        Truncation::keep_digits(2),
+        Truncation::keep_digits(1),
+    ]
+}
+
+/// One (workload, truncation level) cell of the approximation Pareto.
+#[derive(Debug, Clone)]
+pub struct ApproxRow {
+    pub workload: &'static str,
+    /// Truncation policy name (`exact`, `t1`, …, `d1`).
+    pub level: String,
+    /// Top-1 accuracy against the workload's labels.
+    pub accuracy: f64,
+    /// Top-1 agreement with the exact reference variant.
+    pub fidelity: f64,
+    pub s1_cycles_per_row: f64,
+    pub pj_per_row: f64,
+    /// Largest realized per-multiplier error `|m − m_kept|` across
+    /// every weight of the stack.
+    pub max_weight_err: i64,
+    /// Largest analytic bound the error oracle held each weight to.
+    pub err_bound: i64,
+}
+
+/// Analytic per-weight error bound for `trunc` applied to a weight
+/// whose kept value is `m_kept` at `y_bits` (see module docs).
+fn weight_err_bound(trunc: Truncation, m_kept: i64, y_bits: u32) -> i64 {
+    if trunc.max_digits.is_none() {
+        return naf_max_below(trunc.drop_below);
+    }
+    // Digit-capped: the dropped suffix sits strictly below the first
+    // kept raw position — the trailing-zero count of the kept value
+    // (CSD digits are non-adjacent, so the lowest one is the low bit).
+    let p = if m_kept == 0 {
+        y_bits
+    } else {
+        m_kept.unsigned_abs().trailing_zeros()
+    };
+    naf_max_below(p)
+}
+
+/// Check the error-bound oracle over every weight of `stack` at
+/// `trunc`; returns (max realized error, max bound applied).
+fn check_error_bounds(
+    workload: &str,
+    level: &str,
+    stack: &[LayerOp],
+    trunc: Truncation,
+) -> anyhow::Result<(i64, i64)> {
+    let mut max_err = 0i64;
+    let mut max_bound = 0i64;
+    for (li, layer) in stack.iter().enumerate() {
+        let w = layer.weights();
+        for row in &w.w_raw {
+            for &m in row {
+                let plan = schedule_truncated(m, w.bits, trunc);
+                let err = (m - plan.m_raw).abs();
+                let bound = weight_err_bound(trunc, plan.m_raw, w.bits);
+                anyhow::ensure!(
+                    err <= bound,
+                    "{workload}/{level}: layer {li} weight {m} truncates to \
+                     {} — error {err} exceeds the analytic bound {bound}",
+                    plan.m_raw
+                );
+                max_err = max_err.max(err);
+                max_bound = max_bound.max(bound);
+            }
+        }
+    }
+    Ok((max_err, max_bound))
+}
+
+/// Build the approximate variant set: the exact reference plus one
+/// truncated variant per ladder rung, all on the same schedule.
+fn approx_specs(schedule: Vec<LayerPrecision>) -> Vec<VariantSpec> {
+    truncation_ladder()
+        .into_iter()
+        .map(|trunc| {
+            let name = if trunc.is_none() {
+                "exact".to_string()
+            } else {
+                trunc.to_string()
+            };
+            VariantSpec::new(name, schedule.clone()).with_truncation(trunc)
+        })
+        .collect()
+}
+
+fn run_workload(
+    workload: &'static str,
+    stack: Vec<LayerOp>,
+    schedule: Vec<LayerPrecision>,
+    xs: &[Vec<i64>],
+    ys: &[usize],
+    classes: usize,
+    cost: &CostTable,
+    out: &mut Vec<ApproxRow>,
+) -> anyhow::Result<()> {
+    let model = CompiledModel::compile_variants(stack.clone(), approx_specs(schedule))?;
+    let engine = PackedEngine::new(Arc::clone(&model));
+    let n = xs.len();
+    let mut ref_preds: Vec<usize> = vec![];
+    for v in 0..model.n_variants() {
+        let var = model.variant(v);
+        let (max_err, bound) =
+            check_error_bounds(workload, var.name(), &stack, var.truncation())?;
+        let batch: Vec<Vec<i64>> = xs.iter().map(|r| var.quantize_row(r)).collect();
+        let (got, stats) = engine.forward_batch_variant(&batch, v);
+        // Certificate oracle: the variant's own (cheaper, per-bank)
+        // certificate must reconstruct the measured stats under the
+        // skip-conditioned upper-bound contract.
+        let cert = model.cost_certificate(v);
+        anyhow::ensure!(
+            cert.eval_stats_with_skips(n, &stats) == stats,
+            "{workload}/{}: certificate diverges from the engine",
+            var.name()
+        );
+        let preds: Vec<usize> = got.iter().map(|l| argmax_class(l, classes)).collect();
+        if v == 0 {
+            ref_preds = preds.clone();
+        }
+        let accuracy =
+            preds.iter().zip(ys).filter(|(p, y)| p == y).count() as f64 / n as f64;
+        let fidelity =
+            preds.iter().zip(&ref_preds).filter(|(p, r)| p == r).count() as f64 / n as f64;
+        out.push(ApproxRow {
+            workload,
+            level: var.name().to_string(),
+            accuracy,
+            fidelity,
+            s1_cycles_per_row: stats.s1_cycles as f64 / n as f64,
+            pj_per_row: cost.batch_energy_pj(&stats) / n as f64,
+            max_weight_err: max_err,
+            err_bound: bound,
+        });
+    }
+    Ok(())
+}
+
+/// Every (workload, truncation level) Pareto point, oracle-gated.
+pub fn rows(cost: &CostTable) -> anyhow::Result<Vec<ApproxRow>> {
+    let mut out = vec![];
+
+    let mlp = synth_mlp_stack(8);
+    let digits = Digits::standard();
+    let (xs, ys) = digits.sample(SAMPLES, 0.3, 0xA07A5);
+    run_workload(
+        "mlp-digits",
+        mlp,
+        vec![LayerPrecision::new(8, 16), LayerPrecision::new(8, 16)],
+        &xs,
+        &ys,
+        10,
+        cost,
+        &mut out,
+    )?;
+
+    let cnn = synth_cnn_stack(0xA07A6, 8);
+    let sched = VariantSpec::standard_trio(3).swap_remove(0).schedule;
+    let images = ImageSet::standard();
+    let (xs, ys) = images.sample(SAMPLES, 0.3, 0xA07A7, 8);
+    run_workload("cnn-synth", cnn, sched, &xs, &ys, 10, cost, &mut out)?;
+
+    Ok(out)
+}
+
+pub fn run() -> anyhow::Result<()> {
+    println!(
+        "== eval approx: truncated-CSD approximation Pareto \
+         ({SAMPLES} samples per workload, @1GHz) =="
+    );
+    let cost = CostTable::characterize(1000.0);
+    let rs = rows(&cost)?;
+    let trows: Vec<Vec<String>> = rs
+        .iter()
+        .map(|r| {
+            vec![
+                r.workload.to_string(),
+                r.level.clone(),
+                format!("{:.1}%", r.accuracy * 100.0),
+                format!("{:.1}%", r.fidelity * 100.0),
+                format!("{:.1}", r.s1_cycles_per_row),
+                format!("{:.2}", r.pj_per_row),
+                format!("{}", r.max_weight_err),
+                format!("{}", r.err_bound),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        table(
+            &[
+                "workload",
+                "trunc",
+                "top-1 acc",
+                "vs exact",
+                "S1 cyc/row",
+                "pJ/row",
+                "max |Δm|",
+                "bound",
+            ],
+            &trows
+        )
+    );
+    println!(
+        "(every weight's error held to its analytic bound; every variant's \
+         certificate reconstructs the measured stats under the upper-bound \
+         contract)\n"
+    );
+    let json_rows: Vec<String> = rs
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"workload\": \"{}\", \"trunc\": \"{}\", \
+                 \"accuracy\": {}, \"fidelity\": {}, \
+                 \"s1_cycles_per_row\": {}, \"pj_per_row\": {}, \
+                 \"max_weight_err\": {}, \"err_bound\": {}}}",
+                r.workload,
+                r.level,
+                r.accuracy,
+                r.fidelity,
+                r.s1_cycles_per_row,
+                r.pj_per_row,
+                r.max_weight_err,
+                r.err_bound
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"samples\": {SAMPLES},\n  \"clock_mhz\": {},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        cost.mhz,
+        json_rows.join(",\n")
+    );
+    std::fs::write("EVAL_approx.json", &json)?;
+    println!("approximation Pareto written to EVAL_approx.json");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_pareto_trades_accuracy_for_strictly_less_work() {
+        let cost = CostTable::characterize(1000.0);
+        let rs = rows(&cost).unwrap();
+        let ladder = truncation_ladder();
+        for wl in ["mlp-digits", "cnn-synth"] {
+            let set: Vec<&ApproxRow> =
+                rs.iter().filter(|r| r.workload == wl).collect();
+            assert_eq!(set.len(), ladder.len());
+            // The exact rung is its own reference: zero error, full
+            // fidelity.
+            assert_eq!(set[0].level, "exact");
+            assert_eq!(set[0].max_weight_err, 0);
+            assert_eq!(set[0].fidelity, 1.0);
+            for r in &set[1..] {
+                // Every approximate rung does no more Stage-1 work
+                // than exact, and strictly less by the strongest cap.
+                assert!(
+                    r.s1_cycles_per_row <= set[0].s1_cycles_per_row,
+                    "{wl}/{}: approximate rung must not exceed exact work",
+                    r.level
+                );
+                assert!(r.max_weight_err <= r.err_bound, "{wl}/{}", r.level);
+            }
+            let d1 = set.last().unwrap();
+            assert!(
+                d1.s1_cycles_per_row < set[0].s1_cycles_per_row,
+                "{wl}: d1 must bill strictly fewer Stage-1 cycles"
+            );
+        }
+    }
+
+    #[test]
+    fn digit_cap_bound_uses_the_first_kept_position() {
+        // 0b0101_0011 = 83 → CSD +2^6 +2^4 +2^2 −2^0 (all non-adjacent);
+        // keep_digits(2) keeps +2^6 +2^4 (m_kept = 80), drops +2^2 −2^0
+        // (error 3), and the first kept position is 4 → bound B(4) = 10.
+        let plan = schedule_truncated(83, 8, Truncation::keep_digits(2));
+        assert_eq!(plan.m_raw, 80);
+        assert_eq!(weight_err_bound(Truncation::keep_digits(2), 80, 8), 10);
+        // A fully-dropped weight falls back to the whole-word bound.
+        let plan = schedule_truncated(1, 8, Truncation::drop_least(3));
+        assert_eq!(plan.m_raw, 0);
+        assert!(weight_err_bound(Truncation::keep_digits(1), 0, 8) >= 127);
+    }
+}

@@ -47,6 +47,10 @@ pub struct ParetoRow {
     /// Measured-minus-predicted batch energy in attojoules, after the
     /// metrics pipeline's rounding. Always 0 for a correct certificate.
     pub delta_aj: i64,
+    /// Observed activation sparsity: the cycle-weighted fraction of
+    /// dense Stage-1 work that zero-skipping elided on this batch
+    /// (DESIGN.md §18).
+    pub sparsity: f64,
     /// Datapath-cycle latency estimate per row at the cost table's
     /// clock (Stage-1 + Stage-2 cycles, serial execution).
     pub est_us_per_row: f64,
@@ -110,17 +114,20 @@ fn run_workload(
             preds.iter().zip(&ref_preds).filter(|(p, r)| p == r).count() as f64 / n as f64;
         let cycles = (stats.s1_cycles + stats.s2_passes) as f64;
         // Predicted-vs-measured energy: the static cost certificate
-        // (DESIGN.md §15), evaluated at this batch's row count and
-        // priced through the same table, must reproduce the measured
-        // bill exactly — field-exact stats, attojoule-exact energy.
+        // (DESIGN.md §15), evaluated at this batch's row count,
+        // conditioned on the batch's own skip counters (DESIGN.md §18)
+        // and priced through the same table, must reproduce the
+        // measured bill exactly — field-exact stats, attojoule-exact
+        // energy.
         let cert = model.cost_certificate(v);
+        let conditioned = cert.eval_stats_with_skips(n, &stats);
         anyhow::ensure!(
-            cert.eval_stats(n) == stats,
+            conditioned == stats,
             "{workload}/{}: certificate stats diverge from the engine",
             var.name()
         );
         let pj = cost.batch_energy_pj(&stats);
-        let predicted_pj = cert.energy_pj(n, cost);
+        let predicted_pj = cost.batch_energy_pj(&conditioned);
         let aj = |p: f64| (p.max(0.0) * 1e6).round() as i64;
         let delta_aj = aj(pj) - aj(predicted_pj);
         anyhow::ensure!(
@@ -139,6 +146,7 @@ fn run_workload(
             pj_per_row: pj / n as f64,
             predicted_pj_per_row: predicted_pj / n as f64,
             delta_aj,
+            sparsity: stats.skip_fraction().unwrap_or(0.0),
             est_us_per_row: cycles / n as f64 / cost.mhz,
         });
     }
@@ -184,6 +192,7 @@ pub fn run() -> anyhow::Result<()> {
                 format!("{:.2}", r.pj_per_row),
                 format!("{:.2}", r.predicted_pj_per_row),
                 format!("{}", r.delta_aj),
+                format!("{:.1}%", r.sparsity * 100.0),
                 format!("{:.3}", r.est_us_per_row),
             ]
         })
@@ -201,6 +210,7 @@ pub fn run() -> anyhow::Result<()> {
                 "pJ/row",
                 "pred pJ/row",
                 "Δ aJ",
+                "sparsity",
                 "est us/row",
             ],
             &trows
@@ -232,6 +242,9 @@ mod tests {
         for r in &rs {
             assert_eq!(r.delta_aj, 0, "{}/{}", r.workload, r.variant);
             assert!(r.predicted_pj_per_row > 0.0);
+            // Sparsity is a proper fraction; the sample count is a
+            // multiple of every quantum, so no pad-word inflation.
+            assert!((0.0..1.0).contains(&r.sparsity), "{}", r.sparsity);
         }
         let mlp: Vec<&ParetoRow> =
             rs.iter().filter(|r| r.workload == "mlp-digits").collect();

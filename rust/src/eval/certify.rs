@@ -6,16 +6,27 @@
 //! artifact alone, prints the per-variant certified figures, and then
 //! **differentially checks** the certificate against the running
 //! engine at several batch sizes straddling the padding quantum:
-//! every `EngineStats` field (aggregates and per-format buckets) must
-//! match exactly, and the certified energy must agree with the
-//! measured bill to the attojoule — any mismatch errors, so the CI
-//! smoke run is a real gate. The certificates are also written to
-//! `CERT_costs.json` (cwd-relative, like `BENCH_*.json` and
-//! `VERIFY_margins.json`) for CI upload.
+//! the dense certificate must be an exact **upper bound** under the
+//! conservation law of DESIGN.md §18 (`dense == executed + skipped`,
+//! checked field by field through
+//! [`CostCertificate::eval_stats_with_skips`]), and the
+//! skip-conditioned certified energy must agree with the measured bill
+//! to the attojoule — any mismatch errors, so the CI smoke run is a
+//! real gate. The certificates are also written to `CERT_costs.json`
+//! (cwd-relative, like `BENCH_*.json` and `VERIFY_margins.json`) for
+//! CI upload.
 //!
-//! Billing is value-independent (zero-skip is a property of the
-//! weights), so random reference-precision rows exercise the exact
-//! same counters a production batch of the same size would.
+//! Stage-2/accumulate billing stays value-independent, but activation
+//! zero-skipping makes the Stage-1 figures data-dependent: batch sizes
+//! below the padding quantum produce all-zero pad words the engine
+//! skips, so even random reference-precision rows exercise the
+//! skip-conditioned contract for real. The synth CNN certifies the
+//! full standard ladder, truncated-CSD approximate variants included
+//! (their *cheaper* plans certify from bank plans alone, exactly like
+//! the exact ones).
+//!
+//! [`CostCertificate::eval_stats_with_skips`]:
+//! crate::analysis::cost::CostCertificate::eval_stats_with_skips
 
 use std::sync::Arc;
 
@@ -61,15 +72,28 @@ fn certify_model(
         let mut deltas = vec![];
         for &m in &ms {
             let (_, stats) = engine.forward_batch_variant(&rows[..m], v);
+            // Upper-bound contract: the dense certificate minus the
+            // batch's own skip counters must reconstruct the measured
+            // stats exactly (the conservation law implies measured
+            // Stage-1 work never exceeds the dense prediction).
+            let conditioned = cert.eval_stats_with_skips(m, &stats);
             anyhow::ensure!(
-                cert.eval_stats(m) == stats,
+                conditioned == stats,
                 "{name}/{}: certificate diverges from the engine at m={m}:\n  \
-                 cert {:?}\n  engine {:?}",
+                 cert (skip-conditioned) {:?}\n  engine {:?}",
                 var.name(),
-                cert.eval_stats(m),
+                conditioned,
                 stats
             );
-            let delta = aj(cost.batch_energy_pj(&stats)) - aj(cert.energy_pj(m, cost));
+            let dense = cert.eval_stats(m);
+            anyhow::ensure!(
+                stats.s1_cycles <= dense.s1_cycles && stats.s1_adds <= dense.s1_adds,
+                "{name}/{}: measured Stage-1 work exceeds the certified \
+                 upper bound at m={m}",
+                var.name()
+            );
+            let delta = aj(cost.batch_energy_pj(&stats))
+                - aj(cost.batch_energy_pj(&conditioned));
             anyhow::ensure!(
                 delta == 0,
                 "{name}/{}: certified energy off by {delta} aJ at m={m}",
@@ -151,7 +175,7 @@ pub fn run() -> anyhow::Result<()> {
     certify_model("synth-mlp", &model, &cost, &mut json_variants)?;
 
     let cnn: Vec<LayerOp> = synth_cnn_stack(0xA07A6, 8);
-    let model = CompiledModel::compile_variants(cnn, VariantSpec::standard_trio(3))?;
+    let model = CompiledModel::compile_variants(cnn, VariantSpec::standard_ladder(3))?;
     certify_model("synth-cnn", &model, &cost, &mut json_variants)?;
 
     let json = format!(
@@ -179,11 +203,15 @@ mod tests {
         certify_model("synth-mlp", &model, &cost, &mut sink).unwrap();
         let model = CompiledModel::compile_variants(
             synth_cnn_stack(0xA07A6, 8),
-            VariantSpec::standard_trio(3),
+            VariantSpec::standard_ladder(3),
         )
         .unwrap();
         certify_model("synth-cnn", &model, &cost, &mut sink).unwrap();
-        assert_eq!(sink.len(), 6, "three variants per workload");
+        assert_eq!(
+            sink.len(),
+            8,
+            "three MLP variants plus the CNN's five-rung ladder"
+        );
         assert!(sink.iter().all(|j| j.contains("\"max_delta_aj\": 0")));
     }
 }

@@ -16,11 +16,14 @@
 //! certificates and differentially checks them against the running
 //! engine (DESIGN.md §15); `fleet` drives a multi-model, multi-tenant
 //! bursty-arrival scenario through the fleet front end and reports
-//! per-tenant p99 / pJ-per-row / shed rate (DESIGN.md §17).
+//! per-tenant p99 / pJ-per-row / shed rate (DESIGN.md §17); `approx`
+//! sweeps the truncated-CSD approximation ladder and gates every rung
+//! on its analytic error bound (DESIGN.md §18).
 
 use crate::anyhow;
 
 pub mod ablation;
+pub mod approx;
 pub mod autoscale;
 pub mod certify;
 pub mod conv;
@@ -48,6 +51,7 @@ pub fn run(target: &str) -> anyhow::Result<()> {
         "autoscale" => autoscale::run(),
         "verify" => verify::run(),
         "certify" => certify::run(),
+        "approx" => approx::run(),
         "fleet" => fleet::run(),
         "all" => {
             fig6::run()?;
@@ -62,11 +66,12 @@ pub fn run(target: &str) -> anyhow::Result<()> {
             autoscale::run()?;
             verify::run()?;
             certify::run()?;
+            approx::run()?;
             fleet::run()
         }
         other => anyhow::bail!(
             "unknown eval target `{other}` (fig6..fig10, summary, ablation, \
-             precision, conv, autoscale, verify, certify, fleet, all)"
+             precision, conv, autoscale, verify, certify, approx, fleet, all)"
         ),
     }
 }

@@ -15,7 +15,8 @@ USAGE:
 COMMANDS:
     eval <target>        Regenerate a paper figure: fig6 | fig7 | fig8 |
                          fig9 | fig10 | summary | ablation | precision |
-                         conv | autoscale | verify | certify | fleet | all
+                         conv | autoscale | verify | certify | approx |
+                         fleet | all
     csd [bits]           CSD digit-density statistics (default 8)
     disasm <m> [bits]    Disassemble the multiply program for multiplier m
     serve [requests]     Run the near-memory coordinator demo loop

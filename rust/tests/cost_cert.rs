@@ -1,14 +1,19 @@
-//! Property tests for the static cost certifier (DESIGN.md §15).
+//! Property tests for the static cost certifier (DESIGN.md §15, §18).
 //!
-//! The certificate claims to be an *exact* closed form of the engine's
+//! The certificate claims to be an *exact upper bound* of the engine's
 //! billing: for any model (interleaved conv + dense), any variant of
-//! the standard trio, and any batch size, `CostCertificate::eval_stats`
-//! must equal the runtime `EngineStats` on **every** field — aggregates
-//! and per-format buckets — and the certified energy must be
+//! the standard trio, and any batch size, the dense
+//! `CostCertificate::eval_stats` minus the batch's own zero-skip
+//! counters (`eval_stats_with_skips`) must equal the runtime
+//! `EngineStats` on **every** field — aggregates and per-format
+//! buckets, the conservation law `dense == executed + skipped` holding
+//! as a `u64` equality — and the certified energy must be
 //! bit-identical to the measured bill under a cost table with distinct
 //! per-format rates. Under `--features billaudit` the differential
 //! auditor is additionally checked in both directions: silent on real
-//! batches, tripped by a single perturbed counter (the mutation test).
+//! batches, tripped by a single perturbed counter (the mutation test),
+//! including the laundering move that shifts cycles between the
+//! executed and skipped columns.
 
 use softsimd::bits::format::FORMATS;
 use softsimd::coordinator::cost::CostTable;
@@ -136,18 +141,29 @@ fn certificate_equals_engine_stats_on_random_conv_dense_stacks() {
                     .map(|r| var.quantize_row(r))
                     .collect();
                 let stats = engine.forward_batch_into(&batch, v, &mut scratch, &mut out);
-                // Field-exact, bucket-exact equality.
+                // Field-exact, bucket-exact reconstruction under the
+                // skip-conditioned upper-bound contract.
+                let conditioned = cert.eval_stats_with_skips(m, &stats);
                 assert_eq!(
-                    cert.eval_stats(m),
+                    conditioned,
                     stats,
                     "case {case} variant {v} ({}) m={m}",
                     var.name()
                 );
+                // Conservation: executed + skipped is the dense bill,
+                // which also bounds the measured work from above.
+                let dense = cert.eval_stats(m);
+                assert_eq!(
+                    stats.s1_cycles + stats.skipped_cycles,
+                    dense.s1_cycles,
+                    "case {case} variant {v} m={m}: conservation"
+                );
+                assert_eq!(stats.s1_adds + stats.skipped_adds, dense.s1_adds);
                 // Energy: same stats priced through the same table is
                 // the same float — bit-identical, hence aJ-identical
                 // after the metrics rounding.
                 let measured = cost.batch_energy_pj(&stats);
-                let predicted = cert.energy_pj(m, &cost);
+                let predicted = cost.batch_energy_pj(&conditioned);
                 assert_eq!(
                     measured.to_bits(),
                     predicted.to_bits(),
@@ -163,24 +179,38 @@ fn certificate_equals_engine_stats_on_random_conv_dense_stacks() {
 }
 
 #[test]
-fn certificate_is_value_independent() {
-    // Billing depends on (model, variant, m) only — zero-skip is a
-    // weight property, not an activation property — so one certificate
-    // serves every batch of the same size.
+fn dense_billing_is_value_independent_and_skipping_conserves_it() {
+    // With zero-skipping forced off, billing depends on (model,
+    // variant, m) only and the dense certificate is field-exact. With
+    // it on (the default), an all-zero batch elides every Stage-1 plan
+    // while the value-independent fields stay untouched, and the
+    // conservation law reconstructs the dense bill exactly.
     let mut rng = XorShift64::new(0xC057_CE22);
     let ops = random_mixed_stack(&mut rng, 3, 8);
     let model = CompiledModel::compile_variants(ops, VariantSpec::standard_trio(3))
         .expect("valid stack");
     let in_width = model.input_width();
+    let dense_engine = PackedEngine::new(model.clone()).with_zero_skip(false);
     let engine = PackedEngine::new(model);
     let cert = engine.model().cost_certificate(0);
     let m = 5;
     let zeros = vec![vec![0i64; in_width]; m];
-    let (_, stats_zero) = engine.forward_batch_variant(&zeros, 0);
     let batch = random_batch(&mut rng, m, in_width, 8);
-    let (_, stats_rand) = engine.forward_batch_variant(&batch, 0);
-    assert_eq!(stats_zero, stats_rand);
-    assert_eq!(cert.eval_stats(m), stats_rand);
+    let (_, d_zero) = dense_engine.forward_batch_variant(&zeros, 0);
+    let (_, d_rand) = dense_engine.forward_batch_variant(&batch, 0);
+    assert_eq!(d_zero, d_rand, "dense path must be value-independent");
+    assert_eq!(cert.eval_stats(m), d_rand);
+    assert_eq!(d_rand.skipped_cycles, 0);
+    let (_, s_zero) = engine.forward_batch_variant(&zeros, 0);
+    assert_eq!(s_zero.s1_cycles, 0, "all-zero batch executes no Stage-1 work");
+    assert_eq!(s_zero.skipped_cycles, d_rand.s1_cycles);
+    assert_eq!(s_zero.skipped_adds, d_rand.s1_adds);
+    // Value-independent fields are billed identically either way.
+    assert_eq!(s_zero.s2_passes, d_rand.s2_passes);
+    assert_eq!(s_zero.acc_adds, d_rand.acc_adds);
+    assert_eq!(s_zero.subword_mults, d_rand.subword_mults);
+    assert_eq!(s_zero.pad_rows, d_rand.pad_rows);
+    assert_eq!(cert.eval_stats_with_skips(m, &s_zero), s_zero);
 }
 
 #[cfg(feature = "billaudit")]
@@ -256,5 +286,33 @@ mod billaudit {
             assert_eq!(log[0].got, log[0].expected + 1, "{field}");
             assert_eq!(log[0].variant, engine.model().variant(1).name());
         }
+
+        // Laundering: moving a cycle from the executed column to the
+        // skipped column keeps the conservation sum intact, so only
+        // the skip-consistency check (aggregate skipped vs its by-fmt
+        // sum) can catch it — and it must.
+        let mut laundered = good;
+        laundered.s1_cycles -= 1;
+        laundered.skipped_cycles += 1;
+        audit::reset();
+        audit::check_batch(cert, &laundered, m);
+        assert_eq!(audit::count(), 1, "laundering must trip exactly once");
+        let log = audit::take();
+        assert_eq!(log[0].field, "skipped_cycles_sum");
+        assert_eq!(log[0].expected, 1);
+        assert_eq!(log[0].got, 0);
+
+        // Over-claiming skips: more skipped plans than the model has
+        // packed operand words is structurally impossible and trips
+        // the plan-count cap.
+        let mut inflated = good;
+        inflated.skipped_plans = cert.plan_words(m) + 1;
+        audit::reset();
+        audit::check_batch(cert, &inflated, m);
+        assert_eq!(audit::count(), 1, "skip over-claim must trip exactly once");
+        let log = audit::take();
+        assert_eq!(log[0].field, "skipped_plans");
+        assert_eq!(log[0].expected, cert.plan_words(m));
+        assert_eq!(log[0].got, cert.plan_words(m) + 1);
     }
 }

@@ -11,12 +11,14 @@
 //!    random precision schedules.
 //!
 //! 2. **Billing independence.** `EngineStats` must equal the static
-//!    cost certificate's closed-form evaluation (DESIGN.md §15) — the
-//!    execution strategy (flat ops, scratch reuse, word-level
-//!    boundaries) must be invisible to the counters, down to the
-//!    per-format buckets. The certificate itself is pinned against the
-//!    pre-refactor hand formulas in one legacy regression case, so it
-//!    can never drift silently.
+//!    cost certificate's closed-form evaluation conditioned on the
+//!    batch's own zero-skip counters (`eval_stats_with_skips`,
+//!    DESIGN.md §15, §18) — the execution strategy (flat ops, scratch
+//!    reuse, word-level boundaries) must be invisible to the counters,
+//!    down to the per-format buckets, and every elided Stage-1 plan
+//!    must be accounted for in the skipped columns. The certificate
+//!    itself is pinned against the pre-refactor hand formulas in one
+//!    legacy regression case, so it can never drift silently.
 
 use softsimd::bits::format::{format_index, SimdFormat};
 use softsimd::bits::pack::{pack, unpack};
@@ -219,8 +221,21 @@ fn prop_flat_engine_is_bit_exact_and_bills_the_prerefactor_formulas() {
                 "case {case}: sched {sched:?} dims {dims:?} w_bits {w_bits:?} row {b}"
             );
         }
-        let want = engine.model().cost_certificate(0).eval_stats(batch_size);
+        let cert = engine.model().cost_certificate(0);
+        let want = cert.eval_stats_with_skips(batch_size, &stats);
         assert_stats_eq(&stats, &want, &format!("case {case} (sched {sched:?})"));
+        // Conservation: the skipped columns reconstruct the dense bill.
+        let dense = cert.eval_stats(batch_size);
+        assert_eq!(
+            stats.s1_cycles + stats.skipped_cycles,
+            dense.s1_cycles,
+            "case {case}: s1 conservation"
+        );
+        assert_eq!(
+            stats.s1_adds + stats.skipped_adds,
+            dense.s1_adds,
+            "case {case}: s1 adds conservation"
+        );
     }
 }
 
@@ -277,11 +292,17 @@ fn prop_variant_switching_bills_each_batch_by_its_own_variants_formulas() {
                 let want = mlp_forward_row_mixed(row, &layers, sched);
                 assert_eq!(out[b], want, "case {case} step {step} variant {v} row {b}");
             }
-            let want = engine.model().cost_certificate(v).eval_stats(batch_size);
+            let cert = engine.model().cost_certificate(v);
+            let want = cert.eval_stats_with_skips(batch_size, &stats);
             assert_stats_eq(
                 &stats,
                 &want,
                 &format!("case {case} step {step} variant {v}"),
+            );
+            assert_eq!(
+                stats.s1_cycles + stats.skipped_cycles,
+                cert.eval_stats(batch_size).s1_cycles,
+                "case {case} step {step} variant {v}: s1 conservation"
             );
         }
     }

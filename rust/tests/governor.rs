@@ -137,6 +137,73 @@ fn step_load_sheds_precision_under_overload_and_recovers_when_calm() {
 }
 
 #[test]
+fn overload_sheds_down_the_five_rung_ladder_into_approximate_serving() {
+    // DESIGN.md §18: `standard_ladder` appends two truncated-CSD rungs
+    // (approx-t2, approx-d1) below the exact trio, and the governor's
+    // shed walk must reach them under sustained overload — approximate
+    // serving is an *operating point*, not a separate code path.
+    let mut rng = XorShift64::new(0x90E40004);
+    let layers = random_dense_stack_uniform(&mut rng, &[64, 48, 24, 10], 8);
+    let ops: Vec<LayerOp> = layers.iter().cloned().map(LayerOp::Dense).collect();
+    let model = CompiledModel::compile_variants(ops, VariantSpec::standard_ladder(3)).unwrap();
+    assert_eq!(model.n_variants(), 5);
+    assert!(
+        model.variant(3).is_approximate() && model.variant(4).is_approximate(),
+        "the bottom two rungs are the truncated banks"
+    );
+    let engine = PackedEngine::new(Arc::clone(&model));
+    let policy = SloPolicy::new(Duration::from_secs(300), 24, 4).patience(2);
+    let cfg = ServeConfig::new(1, 12)
+        .deadline(Duration::from_secs(60))
+        .queue_depth(1);
+    let mut coord =
+        Coordinator::start_with_policy(Arc::clone(&model), cfg, flat_cost(), Box::new(policy))
+            .unwrap();
+    // Same step-load shape as the trio test, two bursts longer: one
+    // shed step per overloaded dispatch walks 0→1→2→3→4 and pins there.
+    let burst: Vec<Request> = (0..10u64)
+        .map(|id| Request {
+            id,
+            rows: (0..24).map(|_| (0..64).map(|_| rng.q_raw(8)).collect()).collect(),
+        })
+        .collect();
+    for r in &burst {
+        coord.submit(r.clone()).unwrap();
+    }
+    let responses = coord.drain().unwrap();
+    assert_eq!(responses.len(), burst.len());
+    assert_eq!(
+        coord.active_variant(),
+        4,
+        "sustained overload must bottom out at the cheapest approximate rung"
+    );
+    assert_eq!(responses.iter().find(|r| r.id == 0).unwrap().variant, 0);
+    assert_eq!(
+        responses.iter().find(|r| r.id == 9).unwrap().variant,
+        4,
+        "the tail of the burst executed at approx-d1"
+    );
+    // Every response — approximate rungs included — is bit-exact
+    // against a direct engine run at the variant that executed it:
+    // shedding into a truncated bank changes *which* plans run, never
+    // how the chosen plans compute.
+    for resp in &responses {
+        let rows: Vec<Vec<i64>> = burst[resp.id as usize]
+            .rows
+            .iter()
+            .map(|r| model.variant(resp.variant).quantize_row(r))
+            .collect();
+        let (want, _) = engine.forward_batch_variant(&rows, resp.variant);
+        assert_eq!(resp.logits, want, "req {} (variant {})", resp.id, resp.variant);
+    }
+    // Both approximate buckets demonstrably served rows.
+    let m = &coord.metrics;
+    assert!(m.per_variant[3].rows.load(Ordering::Relaxed) > 0, "approx-t2 bucket");
+    assert!(m.per_variant[4].rows.load(Ordering::Relaxed) > 0, "approx-d1 bucket");
+    coord.shutdown();
+}
+
+#[test]
 fn per_variant_billing_is_pinned_to_the_single_variant_formulas() {
     // The acceptance billing criterion: serve one deterministic batch
     // per pinned variant and require the executed variant's metrics

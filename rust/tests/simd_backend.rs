@@ -6,8 +6,11 @@
 //! standard trio, and any batch size — including m = 1 and sizes whose
 //! packed word counts straddle the `TILE`-word tile boundary (tile-only,
 //! tail-only, and mixed columns) — the vector path must produce
-//! bit-exact logits and an `EngineStats` equal on every field to both
-//! the scalar core and the static cost certificate. Under
+//! bit-exact logits and an `EngineStats` equal on every field to the
+//! scalar core — including the zero-skip counters, since the wide tile
+//! falls back to per-word skip decisions on mixed tiles — and to the
+//! skip-conditioned static cost certificate
+//! (`eval_stats_with_skips`, DESIGN.md §18). Under
 //! `--features lanecheck,simd` the build must pin the scalar path and
 //! record identically to plain `lanecheck`; under `billaudit` the
 //! auditor must stay silent over the vector path.
@@ -156,12 +159,20 @@ fn wide_backend_is_bit_exact_and_certificate_exact() {
                     wide_stats, scalar_stats,
                     "case {case} variant {v} m={m}: stats diverge from scalar core"
                 );
-                // Zero-aJ billing delta: the certificate *is* the
-                // scalar core's billing, field- and bucket-exact.
+                // Zero-aJ billing delta: the skip-conditioned
+                // certificate *is* the scalar core's billing, field-
+                // and bucket-exact, and the dense certificate bounds
+                // it from above (conservation, DESIGN.md §18).
                 assert_eq!(
-                    cert.eval_stats(m),
+                    cert.eval_stats_with_skips(m, &wide_stats),
                     wide_stats,
                     "case {case} variant {v} m={m}: stats diverge from certificate"
+                );
+                let dense = cert.eval_stats(m);
+                assert_eq!(
+                    wide_stats.s1_cycles + wide_stats.skipped_cycles,
+                    dense.s1_cycles,
+                    "case {case} variant {v} m={m}: s1 conservation"
                 );
                 // Ground truth on a head sample of rows (the full batch
                 // is already pinned by the scalar-core equality above).
